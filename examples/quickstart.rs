@@ -1,0 +1,76 @@
+//! Quickstart: train XOR with MGD in all three deployment modes.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Demonstrates the public API end to end:
+//! 1. on-chip fused MGD (the paper's §6 autonomous-circuits end state) —
+//!    whole τθ windows execute inside one PJRT call;
+//! 2. chip-in-the-loop MGD (Algorithm 1) over the black-box device trait;
+//! 3. the backprop-SGD comparator on the same AOT runtime.
+
+use anyhow::Result;
+use mgd::coordinator::{MgdConfig, MgdTrainer, OnChipTrainer, ScheduleKind, TrainOptions};
+use mgd::datasets::parity;
+use mgd::device::{HardwareDevice, PjrtDevice};
+use mgd::optim::{init_params_uniform, BackpropTrainer};
+use mgd::perturb::PerturbKind;
+use mgd::rng::Rng;
+use mgd::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let rt = Runtime::new(mgd::find_artifact_dir()?)?;
+    let data = parity(2); // the XOR truth table
+    let seed = 1;
+
+    // Random initialization, shared across the three runs.
+    let mut rng = Rng::new(seed);
+    let mut theta = vec![0f32; 9];
+    init_params_uniform(&mut rng, &mut theta, 1.0);
+
+    // The MGD hyper-parameters of §2.2: three time constants + the
+    // perturbation family + (η, Δθ).
+    let cfg = MgdConfig {
+        tau_x: 1,     // new sample every step
+        tau_theta: 1, // update every step (SPSA-style)
+        tau_p: 1,     // new perturbation every step
+        eta: 0.5,
+        amplitude: 0.05,
+        kind: PerturbKind::RademacherCode,
+        seed,
+        ..Default::default()
+    };
+    let opts = TrainOptions {
+        max_steps: 40_000,
+        eval_every: 2_000,
+        target_cost: Some(0.04), // the paper's "solved" criterion
+        ..Default::default()
+    };
+
+    // --- 1. on-chip fused MGD ---------------------------------------------
+    let mut onchip = OnChipTrainer::new(&rt, "xor221", &data, theta.clone(), cfg)?;
+    let res = onchip.train(&opts, &data)?;
+    println!(
+        "[onchip]   solved at step {:?} ({} device inferences)",
+        res.solved_at, res.cost_evals
+    );
+
+    // --- 2. chip-in-the-loop MGD (model-free, device is a black box) -------
+    let mut dev = PjrtDevice::new(&rt, "xor221")?;
+    dev.set_params(&theta)?;
+    let mut looped = MgdTrainer::new(&mut dev, &data, cfg, ScheduleKind::Cyclic);
+    let res = looped.train(&opts, None)?;
+    println!(
+        "[loop]     solved at step {:?} ({} device inferences)",
+        res.solved_at, res.cost_evals
+    );
+
+    // --- 3. backprop-SGD comparator ----------------------------------------
+    let mut bp = BackpropTrainer::new(&rt, "xor221", &data, theta, 0.5, seed)?;
+    let res = bp.train(&opts, None)?;
+    println!("[backprop] solved at step {:?}", res.solved_at);
+
+    println!("\nquickstart OK — all three training paths ran against the AOT artifacts");
+    Ok(())
+}

@@ -1,0 +1,134 @@
+//! End-to-end driver: train the Fashion-MNIST-class CNN with fused
+//! on-chip MGD and log the loss/accuracy curve (EXPERIMENTS.md §E2E).
+//!
+//! ```text
+//! cargo run --release --example train_synth_fmnist [-- steps]
+//! ```
+//!
+//! This is the full three-layer stack on a real (synthetic-image)
+//! workload:
+//!
+//! - L1: the Pallas homodyne kernel runs inside every timestep,
+//! - L2: the conv net + MSE cost lowered once to HLO by `aot.py`,
+//! - L3: this Rust driver owning the dataset, schedule, seeds, windows,
+//!   eval cadence and CSV telemetry — Python nowhere at runtime.
+//!
+//! The backprop comparator (same net, same data, `gradtrain` artifact)
+//! runs afterwards so the output reproduces Table 2's "MGD approaches
+//! but trails backprop" shape on one screen.
+
+use std::time::Instant;
+
+use anyhow::Result;
+use mgd::coordinator::{MgdConfig, OnChipTrainer, TrainOptions};
+use mgd::datasets::synthetic_fmnist;
+use mgd::metrics::CsvWriter;
+use mgd::optim::{init_params, BackpropTrainer};
+use mgd::perturb::PerturbKind;
+use mgd::rng::Rng;
+use mgd::runtime::Runtime;
+
+fn main() -> Result<()> {
+    let steps: u64 = std::env::args()
+        .nth(1)
+        .map(|s| s.parse().expect("steps must be an integer"))
+        .unwrap_or(2_000);
+    let seed = 42u64;
+    let rt = Runtime::new(mgd::find_artifact_dir()?)?;
+    let meta = rt.manifest.model("fmnist_cnn")?.clone();
+
+    // Synthetic Fashion-MNIST stand-in (28x28x1, 10 classes; DESIGN.md §3).
+    let (train, eval) = synthetic_fmnist(8192, seed).split_test(1024);
+    println!(
+        "dataset: {} train / {} eval samples, {} params, scan window T={} B={}",
+        train.n, eval.n, meta.param_count, meta.scan_steps, meta.scan_batch
+    );
+
+    let mut rng = Rng::new(seed);
+    let mut theta = vec![0f32; meta.param_count];
+    init_params(&mut rng, &meta.tensors, &mut theta);
+
+    // --- MGD (fused on-chip windows) ----------------------------------------
+    let cfg = MgdConfig {
+        tau_x: 1,
+        tau_theta: 1,
+        tau_p: 1,
+        eta: 0.05,
+        amplitude: 0.01,
+        kind: PerturbKind::RademacherCode,
+        seed,
+        ..Default::default()
+    };
+    let mut tr = OnChipTrainer::new(&rt, "fmnist_cnn", &train, theta.clone(), cfg)?;
+    let mut csv = CsvWriter::create(
+        "results/e2e_fmnist.csv",
+        &["series", "step", "train_cost", "eval_cost", "eval_accuracy"],
+    )?;
+
+    println!("\n[MGD] eta={} dtheta={} batch={}", cfg.eta, cfg.amplitude, meta.scan_batch);
+    let t0 = Instant::now();
+    let mut window_cost = 0.0f32;
+    while tr.steps() < steps {
+        let costs = tr.window()?;
+        window_cost = costs.iter().sum::<f32>() / costs.len() as f32;
+        let (ecost, correct) = tr.evaluate(&eval)?;
+        let acc = correct / eval.n as f32;
+        println!(
+            "  step {:>6}: train cost {:.4}  eval cost {:.4}  accuracy {:>5.1}%",
+            tr.steps(),
+            window_cost,
+            ecost,
+            acc * 100.0
+        );
+        csv.row(&[
+            "mgd".into(),
+            tr.steps().to_string(),
+            format!("{window_cost:.6}"),
+            format!("{ecost:.6}"),
+            format!("{acc:.4}"),
+        ])?;
+    }
+    let mgd_secs = t0.elapsed().as_secs_f64();
+    let (_, correct) = tr.evaluate(&eval)?;
+    let mgd_acc = correct / eval.n as f32;
+    println!(
+        "[MGD] {:.1}s for {} steps ({:.0} steps/s incl. eval), final accuracy {:.1}%",
+        mgd_secs,
+        tr.steps(),
+        tr.steps() as f64 / mgd_secs,
+        mgd_acc * 100.0
+    );
+
+    // --- Backprop comparator -------------------------------------------------
+    println!("\n[backprop] same net, same data, gradtrain artifact");
+    let mut bp = BackpropTrainer::new(&rt, "fmnist_cnn", &train, theta, 0.1, seed)?;
+    let bp_steps = (steps / 4).max(100);
+    let opts = TrainOptions {
+        max_steps: bp_steps,
+        eval_every: (bp_steps / 8).max(1),
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let res = bp.train(&opts, Some(&eval))?;
+    let bp_secs = t0.elapsed().as_secs_f64();
+    for (step, cost, acc) in &res.eval_trace {
+        println!("  step {:>6}: eval cost {:.4}  accuracy {:>5.1}%", step, cost, acc * 100.0);
+        csv.row(&[
+            "backprop".into(),
+            step.to_string(),
+            String::new(),
+            format!("{cost:.6}"),
+            format!("{acc:.4}"),
+        ])?;
+    }
+    csv.flush()?;
+    let bp_acc = res.final_accuracy().unwrap_or(0.0);
+    println!("[backprop] {:.1}s for {} steps, final accuracy {:.1}%", bp_secs, bp_steps, bp_acc * 100.0);
+
+    println!("\n=== E2E summary ===");
+    println!("MGD      : {:>5.1}% after {} model-free steps", mgd_acc * 100.0, steps);
+    println!("backprop : {:>5.1}% after {} gradient steps", bp_acc * 100.0, bp_steps);
+    println!("loss curves -> results/e2e_fmnist.csv");
+    println!("MGD final train cost {window_cost:.4}");
+    Ok(())
+}

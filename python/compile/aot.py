@@ -1,0 +1,280 @@
+"""AOT pipeline: lower every artifact to HLO text + write the manifest.
+
+This is the only place Python touches the build.  ``make artifacts`` runs
+``python -m compile.aot --out-dir ../artifacts`` once; afterwards the Rust
+binary is self-contained: it loads ``artifacts/manifest.json``, compiles
+each ``*.hlo.txt`` on the PJRT CPU client, and never imports Python again.
+
+Interchange format is **HLO text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the published
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``).
+The text parser reassigns ids, so text round-trips cleanly (see
+/opt/xla-example/gen_hlo.py and its README).
+
+Artifact kinds per model (see ``model.py`` for the function bodies):
+
+- ``cost``      device-side perturbed cost (chip-in-the-loop hot path)
+- ``eval``      cost + correct-count over an eval batch
+- ``grad``      value+grad over the eval batch (Fig. 5 angle / full-batch BP)
+- ``gradtrain`` value+grad over the training batch (backprop-SGD baseline)
+- ``mgd_scan``  fused on-chip MGD window: T complete timesteps per call
+
+The manifest records every input/output name, dtype and shape, plus the
+model's parameter layout (tensor names/shapes/init schemes) so the Rust
+side can initialize and address the flat parameter bus byte-compatibly.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import os
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+# ---------------------------------------------------------------------------
+# Artifact table
+# ---------------------------------------------------------------------------
+#
+# Dataset sizes are static dims of the mgd_scan artifacts (the dataset is a
+# resident device buffer on the Rust side).  Train-set sizes follow the
+# paper where feasible (NIST7x7: 44,136 examples) and are scaled for the
+# CPU testbed otherwise (synthetic Fashion/CIFAR: 8,192/4,096 — documented
+# in DESIGN.md §3).
+
+
+@dataclasses.dataclass(frozen=True)
+class ScanDims:
+    """Static dimensions of a fused mgd_scan artifact."""
+
+    n_steps: int      # T: timesteps per PJRT call
+    batch: int        # B: samples shown per timestep
+    dataset_n: int    # N: resident dataset rows
+
+
+# model id -> (cost batch, eval batch, gradtrain batch, scan dims)
+ARTIFACT_DIMS: dict[str, tuple[int, int, int, ScanDims]] = {
+    "xor221": (1, 4, 1, ScanDims(n_steps=1000, batch=1, dataset_n=4)),
+    "parity441": (1, 16, 1, ScanDims(n_steps=1000, batch=1, dataset_n=16)),
+    "nist744": (1, 512, 1, ScanDims(n_steps=1000, batch=1, dataset_n=44136)),
+    "fmnist_cnn": (100, 256, 100, ScanDims(n_steps=50, batch=100, dataset_n=8192)),
+    "cifar_cnn": (100, 256, 100, ScanDims(n_steps=50, batch=100, dataset_n=4096)),
+}
+
+F32 = jnp.float32
+
+
+def _sds(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax ``Lowered`` to XLA HLO text via stablehlo.
+
+    ``return_tuple=True`` so every artifact's outputs arrive as one tuple
+    literal on the Rust side (unpacked with ``decompose_tuple``).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ---------------------------------------------------------------------------
+# Per-artifact input specs
+# ---------------------------------------------------------------------------
+
+
+def artifact_specs(spec: M.MlpSpec | M.CnnSpec) -> dict[str, tuple[Callable, list[tuple[str, tuple, str]]]]:
+    """Return ``kind -> (fn, [(input_name, shape, dtype_str), ...])``."""
+    p = spec.param_count
+    in_shape = spec.input_shape
+    k = spec.n_outputs
+    b_cost, b_eval, b_train, scan = ARTIFACT_DIMS[spec.name]
+
+    def xin(b):
+        return (b, *in_shape)
+
+    specs: dict[str, tuple[Callable, list[tuple[str, tuple, str]]]] = {
+        "cost": (
+            M.make_cost_fn(spec),
+            [
+                ("theta", (p,), "f32"),
+                ("theta_tilde", (p,), "f32"),
+                ("x", xin(b_cost), "f32"),
+                ("y_hat", (b_cost, k), "f32"),
+            ],
+        ),
+        "eval": (
+            M.make_eval_fn(spec),
+            [
+                ("theta", (p,), "f32"),
+                ("x", xin(b_eval), "f32"),
+                ("y_hat", (b_eval, k), "f32"),
+            ],
+        ),
+        "grad": (
+            M.make_grad_fn(spec),
+            [
+                ("theta", (p,), "f32"),
+                ("x", xin(b_eval), "f32"),
+                ("y_hat", (b_eval, k), "f32"),
+            ],
+        ),
+        "gradtrain": (
+            M.make_grad_fn(spec),
+            [
+                ("theta", (p,), "f32"),
+                ("x", xin(b_train), "f32"),
+                ("y_hat", (b_train, k), "f32"),
+            ],
+        ),
+        "mgd_scan": (
+            M.make_mgd_scan_fn(spec, n_steps=scan.n_steps),
+            [
+                ("theta", (p,), "f32"),
+                ("g", (p,), "f32"),
+                ("seed", (), "u32"),
+                ("eta", (), "f32"),
+                ("dtheta", (), "f32"),
+                ("sigma_c", (), "f32"),
+                ("sigma_th", (), "f32"),
+                ("tau_theta", (), "i32"),
+                ("t0", (), "i32"),
+                ("x_all", (scan.dataset_n, *in_shape), "f32"),
+                ("y_all", (scan.dataset_n, k), "f32"),
+                ("idx", (scan.n_steps, scan.batch), "i32"),
+            ],
+        ),
+    }
+    return specs
+
+
+_DTYPES = {"f32": jnp.float32, "i32": jnp.int32, "u32": jnp.uint32}
+
+
+def lower_artifact(fn: Callable, inputs: list[tuple[str, tuple, str]]) -> tuple[str, list[dict]]:
+    """Jit + lower ``fn`` at the given input shapes; return HLO text + output metadata."""
+    args = [_sds(shape, _DTYPES[dt]) for (_, shape, dt) in inputs]
+    lowered = jax.jit(fn).lower(*args)
+    # Output metadata from the jax lowering itself (authoritative).
+    out_info = lowered.out_info
+    leaves = jax.tree_util.tree_leaves(out_info)
+    outputs = [
+        {"shape": list(leaf.shape), "dtype": jnp.dtype(leaf.dtype).name} for leaf in leaves
+    ]
+    return to_hlo_text(lowered), outputs
+
+
+# ---------------------------------------------------------------------------
+# Manifest
+# ---------------------------------------------------------------------------
+
+
+def model_manifest_entry(spec: M.MlpSpec | M.CnnSpec) -> dict:
+    """Everything Rust needs to own the parameter bus for this model."""
+    b_cost, b_eval, b_train, scan = ARTIFACT_DIMS[spec.name]
+    entry = {
+        "param_count": spec.param_count,
+        "input_shape": list(spec.input_shape),
+        "n_outputs": spec.n_outputs,
+        "kind": "mlp" if isinstance(spec, M.MlpSpec) else "cnn",
+        "batch_cost": b_cost,
+        "batch_eval": b_eval,
+        "batch_train": b_train,
+        "scan_steps": scan.n_steps,
+        "scan_batch": scan.batch,
+        "scan_dataset_n": scan.dataset_n,
+        "tensors": [
+            {"name": t.name, "shape": list(t.shape), "init": t.init}
+            for t in spec.tensors()
+        ],
+    }
+    if isinstance(spec, M.MlpSpec):
+        entry["layers"] = list(spec.layers)
+        entry["activation"] = spec.activation
+    return entry
+
+
+def build(out_dir: str, models: list[str], kinds: list[str] | None) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_path = os.path.join(out_dir, "manifest.json")
+    manifest = {"format": 1, "models": {}, "artifacts": []}
+    # Merge with an existing manifest so partial builds keep older entries.
+    if os.path.exists(manifest_path):
+        try:
+            with open(manifest_path) as f:
+                old = json.load(f)
+            manifest["models"].update(old.get("models", {}))
+            manifest["artifacts"] = [
+                a
+                for a in old.get("artifacts", [])
+                if os.path.exists(os.path.join(out_dir, a["file"]))
+            ]
+        except (json.JSONDecodeError, KeyError):
+            pass
+
+    existing = {a["name"]: a for a in manifest["artifacts"]}
+    for name in models:
+        spec = M.MODELS[name]
+        manifest["models"][name] = model_manifest_entry(spec)
+        for kind, (fn, inputs) in artifact_specs(spec).items():
+            if kinds and kind not in kinds:
+                continue
+            art_name = f"{name}_{kind}"
+            print(f"[aot] lowering {art_name} ...", flush=True)
+            hlo, outputs = lower_artifact(fn, inputs)
+            fname = f"{art_name}.hlo.txt"
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(hlo)
+            existing[art_name] = {
+                "name": art_name,
+                "model": name,
+                "kind": kind,
+                "file": fname,
+                "sha256": hashlib.sha256(hlo.encode()).hexdigest(),
+                "inputs": [
+                    {"name": n, "shape": list(s), "dtype": d} for (n, s, d) in inputs
+                ],
+                "outputs": outputs,
+            }
+            print(f"[aot]   wrote {fname} ({len(hlo)} chars)", flush=True)
+
+    manifest["artifacts"] = sorted(existing.values(), key=lambda a: a["name"])
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] manifest: {manifest_path} ({len(manifest['artifacts'])} artifacts)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", help="artifact output directory")
+    ap.add_argument(
+        "--models",
+        default=",".join(M.MODELS),
+        help=f"comma-separated subset of: {','.join(M.MODELS)}",
+    )
+    ap.add_argument(
+        "--kinds",
+        default="",
+        help="comma-separated subset of artifact kinds (default: all)",
+    )
+    args = ap.parse_args()
+    models = [m.strip() for m in args.models.split(",") if m.strip()]
+    for m in models:
+        if m not in M.MODELS:
+            raise SystemExit(f"unknown model {m!r}; known: {list(M.MODELS)}")
+    kinds = [k.strip() for k in args.kinds.split(",") if k.strip()] or None
+    build(args.out_dir, models, kinds)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""L1 Pallas kernels for the MGD hot path.
+
+- ``dense``:    perturbed dense-layer forward (MXU-tiled matmul).
+- ``homodyne``: per-parameter homodyne gradient accumulation (VPU FMA).
+- ``ref``:      pure-jnp oracles used by pytest as ground truth.
+"""
+
+from . import dense, homodyne, ref  # noqa: F401

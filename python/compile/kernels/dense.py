@@ -1,0 +1,118 @@
+"""L1 Pallas kernel: perturbed dense layer forward pass.
+
+Computes ``act(x @ (w + w_tilde) + (b + b_tilde))`` as a tiled Pallas
+kernel.  This is the inference hot-spot of every MLP in the paper (XOR
+2-2-1, parity n-n-1, NIST7x7 49-4-4): during MGD training the device
+evaluates this layer twice per timestep (baseline cost C0 and perturbed
+cost C), so it dominates the device-side FLOPs.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid tiles the output
+``[B, M]`` plane; each program instance holds an ``[bb, N]`` slab of
+activations and an ``[N, bm]`` slab of fused weights ``w + w_tilde`` in
+VMEM and drives a single MXU matmul.  The perturbation add is a VPU
+elementwise op fused into the same VMEM residency — the paper's "perturb
+a separate element in series with the parameter" (§4.1) becomes a fused
+add on the weight tile rather than a separate memory.
+
+CPU/AOT note: the kernel is lowered with ``interpret=True`` so that the
+resulting HLO contains only portable ops that the PJRT CPU client can
+execute (real TPU lowering emits a Mosaic custom-call).  The block
+structure is preserved either way, so the artifact is layout-portable.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Target tile edges.  The MXU systolic array is 128x128; we clamp to the
+# actual dimension and then shrink to the largest divisor so that the
+# grid covers the array exactly (no masked tail iterations — interpret
+# mode has no implicit out-of-bounds masking for stores).
+_TARGET_BLOCK_B = 128
+_TARGET_BLOCK_M = 128
+
+
+def _largest_divisor_at_most(n: int, cap: int) -> int:
+    """Largest divisor of ``n`` that is <= ``cap`` (always >= 1)."""
+    d = min(n, cap)
+    while n % d != 0:
+        d -= 1
+    return d
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, wt_ref, bt_ref, o_ref, *, activation: str):
+    """Pallas kernel body for one ``[bb, bm]`` output tile.
+
+    ``x_ref``: [bb, N] activation slab, ``w_ref``/``wt_ref``: [N, bm]
+    weight + perturbation slabs, ``b_ref``/``bt_ref``: [bm] bias slabs.
+    """
+    w_eff = w_ref[...] + wt_ref[...]           # VPU add, fused in VMEM
+    b_eff = b_ref[...] + bt_ref[...]
+    z = jnp.dot(x_ref[...], w_eff, preferred_element_type=jnp.float32)
+    z = z + b_eff[None, :]
+    o_ref[...] = ref.activate(z, activation)
+
+
+def dense_forward(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray,
+    w_tilde: jnp.ndarray,
+    b_tilde: jnp.ndarray,
+    activation: str = "sigmoid",
+    *,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Perturbed dense layer via ``pl.pallas_call``.
+
+    Semantics identical to :func:`compile.kernels.ref.dense_forward_ref`;
+    see that docstring for argument shapes.  ``interpret=True`` (the
+    default) keeps the lowered HLO runnable on the CPU PJRT client.
+    """
+    batch, n_in = x.shape
+    n_in_w, n_out = w.shape
+    if n_in != n_in_w:
+        raise ValueError(f"x/w contraction mismatch: {x.shape} vs {w.shape}")
+    if b.shape != (n_out,) or b_tilde.shape != (n_out,):
+        raise ValueError(f"bias shape mismatch: {b.shape} vs ({n_out},)")
+    if w_tilde.shape != w.shape:
+        raise ValueError(f"w_tilde shape mismatch: {w_tilde.shape} vs {w.shape}")
+
+    bb = _largest_divisor_at_most(batch, _TARGET_BLOCK_B)
+    bm = _largest_divisor_at_most(n_out, _TARGET_BLOCK_M)
+    grid = (batch // bb, n_out // bm)
+
+    kernel = functools.partial(_dense_kernel, activation=activation)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, n_in), lambda i, j: (i, 0)),     # x slab
+            pl.BlockSpec((n_in, bm), lambda i, j: (0, j)),     # w slab
+            pl.BlockSpec((bm,), lambda i, j: (j,)),            # b slab
+            pl.BlockSpec((n_in, bm), lambda i, j: (0, j)),     # w_tilde slab
+            pl.BlockSpec((bm,), lambda i, j: (j,)),            # b_tilde slab
+        ],
+        out_specs=pl.BlockSpec((bb, bm), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((batch, n_out), jnp.float32),
+        interpret=interpret,
+    )(x, w, b, w_tilde, b_tilde)
+
+
+def vmem_footprint_bytes(batch: int, n_in: int, n_out: int) -> int:
+    """Estimated per-instance VMEM footprint of the kernel in bytes.
+
+    Used by DESIGN.md §Perf to check the tiling against the ~16 MiB VMEM
+    budget of a TPU core: x slab + 2 weight slabs + 2 bias slabs + output
+    tile, all f32.
+    """
+    bb = _largest_divisor_at_most(batch, _TARGET_BLOCK_B)
+    bm = _largest_divisor_at_most(n_out, _TARGET_BLOCK_M)
+    floats = bb * n_in + 2 * n_in * bm + 2 * bm + bb * bm
+    return 4 * floats

@@ -1,0 +1,97 @@
+"""L1 Pallas kernel: homodyne gradient accumulation.
+
+Computes ``G <- G + C_tilde * theta_tilde / dtheta^2`` — paper Eq. (3) /
+Algorithm 1 lines 13-14.  This is the per-parameter "local circuit" of
+Fig. 1(b): every parameter multiplies the globally-broadcast scalar cost
+modulation with its own local perturbation and integrates.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): a pure VPU elementwise FMA
+streamed over the parameter vector in 1-D tiles.  The broadcast scalar
+``C_tilde`` is the literal hardware broadcast of the paper — here it is a
+``(1,)`` operand replicated to every grid instance, i.e. each tile
+"receives the broadcast" rather than re-deriving it.  On the fused
+on-chip artifact (``mgd_scan``) this kernel runs once per timestep inside
+the ``lax.scan`` body, so it is on the true hot path of training.
+
+Lowered with ``interpret=True`` for CPU-PJRT portability.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 1-D tile edge.  8 * 128 lanes is the natural f32 VPU tile; parameters
+# are a flat vector so we stream it in 1024-float chunks (shrunk to the
+# largest divisor for exact grid coverage).
+_TARGET_BLOCK_P = 1024
+
+
+def _largest_divisor_at_most(n: int, cap: int) -> int:
+    d = min(n, cap)
+    while n % d != 0:
+        d -= 1
+    return d
+
+
+def _homodyne_kernel(g_ref, ct_ref, tt_ref, inv2_ref, o_ref):
+    """One 1-D parameter tile: ``o = g + ct * tt * inv_dtheta_sq``."""
+    ct = ct_ref[0]          # broadcast scalar (cost modulation)
+    inv2 = inv2_ref[0]      # precomputed 1/dtheta^2
+    o_ref[...] = g_ref[...] + ct * tt_ref[...] * inv2
+
+
+def homodyne_accumulate(
+    g: jnp.ndarray,
+    c_tilde: jnp.ndarray,
+    theta_tilde: jnp.ndarray,
+    delta_theta,
+    *,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Accumulate the instantaneous error signal into ``G`` via Pallas.
+
+    Semantics identical to
+    :func:`compile.kernels.ref.homodyne_accumulate_ref`.
+
+    Args:
+        g: ``[P]`` running gradient approximation.
+        c_tilde: scalar (or 0-d array) cost modulation ``C - C0``.
+        theta_tilde: ``[P]`` perturbation vector this step.
+        delta_theta: scalar perturbation amplitude.
+        interpret: keep True for CPU-PJRT-portable lowering.
+
+    Returns:
+        ``[P]`` updated gradient approximation.
+    """
+    (p,) = g.shape
+    if theta_tilde.shape != (p,):
+        raise ValueError(f"theta_tilde shape {theta_tilde.shape} != ({p},)")
+
+    bp = _largest_divisor_at_most(p, _TARGET_BLOCK_P)
+    grid = (p // bp,)
+
+    ct = jnp.reshape(jnp.asarray(c_tilde, jnp.float32), (1,))
+    dth = jnp.asarray(delta_theta, jnp.float32)
+    inv2 = jnp.reshape(1.0 / (dth * dth), (1,))
+
+    return pl.pallas_call(
+        _homodyne_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bp,), lambda i: (i,)),   # g tile
+            pl.BlockSpec((1,), lambda i: (0,)),    # broadcast c_tilde
+            pl.BlockSpec((bp,), lambda i: (i,)),   # theta_tilde tile
+            pl.BlockSpec((1,), lambda i: (0,)),    # broadcast 1/dtheta^2
+        ],
+        out_specs=pl.BlockSpec((bp,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((p,), jnp.float32),
+        interpret=interpret,
+    )(g, ct, theta_tilde, inv2)
+
+
+def vmem_footprint_bytes(p: int) -> int:
+    """Per-instance VMEM footprint estimate (bytes): g + tt + out tiles."""
+    bp = _largest_divisor_at_most(p, _TARGET_BLOCK_P)
+    return 4 * (3 * bp + 2)

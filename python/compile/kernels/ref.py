@@ -1,0 +1,94 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+These are the ground-truth implementations that the Pallas kernels in
+``dense.py`` and ``homodyne.py`` are checked against by
+``python/tests/test_kernels.py`` (hypothesis sweeps over shapes/dtypes,
+``assert_allclose``).  They are also reused by ``model.py`` when building
+the plain-jnp variants of the models (CNN layers, reference forward).
+
+Everything here is written with ordinary ``jax.numpy`` ops only — no
+Pallas, no custom calls — so they lower to vanilla HLO on any backend.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def activate(z: jnp.ndarray, activation: str) -> jnp.ndarray:
+    """Apply a named activation function.
+
+    Supported names mirror what the paper's networks use:
+    ``sigmoid`` (XOR / parity / NIST7x7 MLPs), ``relu`` (CNN conv stacks)
+    and ``linear`` (final fully-connected layers, no softmax - section 3.6).
+    """
+    if activation == "sigmoid":
+        return 1.0 / (1.0 + jnp.exp(-z))
+    if activation == "relu":
+        return jnp.maximum(z, 0.0)
+    if activation == "linear":
+        return z
+    raise ValueError(f"unknown activation: {activation!r}")
+
+
+def dense_forward_ref(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray,
+    w_tilde: jnp.ndarray,
+    b_tilde: jnp.ndarray,
+    activation: str = "sigmoid",
+) -> jnp.ndarray:
+    """Perturbed dense layer: ``act(x @ (w + w_tilde) + (b + b_tilde))``.
+
+    This is the MGD inference primitive: the perturbation ``theta_tilde``
+    rides on top of the base value ``theta`` exactly as in Fig. 1(a,
+    inset) of the paper.
+
+    Args:
+        x: ``[B, N]`` input activations.
+        w: ``[N, M]`` base weights.
+        b: ``[M]`` base biases.
+        w_tilde: ``[N, M]`` weight perturbations (zero when unperturbed).
+        b_tilde: ``[M]`` bias perturbations.
+        activation: activation name, see :func:`activate`.
+
+    Returns:
+        ``[B, M]`` layer output.
+    """
+    z = x @ (w + w_tilde) + (b + b_tilde)
+    return activate(z, activation)
+
+
+def homodyne_accumulate_ref(
+    g: jnp.ndarray,
+    c_tilde: jnp.ndarray,
+    theta_tilde: jnp.ndarray,
+    delta_theta,
+) -> jnp.ndarray:
+    """Homodyne gradient accumulation: ``G <- G + C_tilde * theta_tilde / dtheta^2``.
+
+    The per-parameter "local circuit" of Fig. 1(b): each parameter
+    multiplies the globally-broadcast cost modulation ``C_tilde`` (a
+    scalar) with its own local perturbation ``theta_tilde_i`` and
+    integrates.  Paper Eq. (3) / Algorithm 1 lines 13-14.
+
+    Args:
+        g: ``[P]`` running gradient approximation.
+        c_tilde: scalar cost modulation ``C - C0``.
+        theta_tilde: ``[P]`` per-parameter perturbations this step.
+        delta_theta: perturbation amplitude (normalization).
+
+    Returns:
+        ``[P]`` updated gradient approximation.
+    """
+    return g + c_tilde * theta_tilde / (delta_theta * delta_theta)
+
+
+def mse_cost_ref(y: jnp.ndarray, y_hat: jnp.ndarray) -> jnp.ndarray:
+    """Mean-squared-error cost, averaged over batch and outputs.
+
+    Both MGD and the backprop baseline use plain MSE (section 3.6: "Both
+    strategies used a mean squared error (MSE) cost function").
+    """
+    return jnp.mean((y - y_hat) ** 2)

@@ -1,0 +1,440 @@
+"""L2: the paper's networks as JAX compute graphs over a flat parameter vector.
+
+Every network in the paper's evaluation (§3) is defined here:
+
+=============  =======================================  ========  =========
+model id       architecture                              params    paper use
+=============  =======================================  ========  =========
+``xor221``     2-2-1 sigmoid MLP                               9  Figs 4,6,7,9; Table 2
+``parity441``  4-4-1 sigmoid MLP                              25  Fig 5
+``nist744``    49-4-4 sigmoid MLP                            220  Figs 5,8,10; Table 2
+``fmnist_cnn`` conv16-pool-conv32-pool-GAP-FC10             5130  Table 2 (Fashion-MNIST rows)
+``cifar_cnn``  conv16/32/64-pool x3-pool-FC(256,10)        26154  Table 2 (CIFAR-10 row)
+=============  =======================================  ========  =========
+
+``cifar_cnn`` matches the paper's §3.6 description exactly (3x3 convs with
+16/32/64 output channels, each followed by 2x2 maxpool, final 256 features
+into a 10-way linear layer, no softmax) and reproduces the stated 26,154
+parameter count.  The paper's Fashion-MNIST architecture description ("two
+conv+maxpool layers, (32x10) fully-connected") is not consistent with its
+stated 14,378 parameter count for any integer channel width; we implement
+the description (16/32 channels, global-average-pool to 32 features) and
+document the 5,130-parameter discrepancy in EXPERIMENTS.md.
+
+All models take their parameters as a single flat ``f32[P]`` vector — the
+"hardware parameter bus".  The flattening order is fixed and exported in
+``artifacts/manifest.json`` so the Rust coordinator can initialize, perturb
+and update parameters without any Python at runtime.
+
+The MLP forward pass calls the L1 Pallas kernel
+(:func:`compile.kernels.dense.dense_forward`); the backprop baseline
+(`grad` artifacts) uses the mathematically-identical pure-jnp reference
+path because interpret-mode Pallas does not support reverse-mode AD — the
+two paths are cross-checked by ``python/tests/test_models.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import dense, homodyne, ref
+
+# ---------------------------------------------------------------------------
+# Model specs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorSpec:
+    """One tensor inside the flat parameter vector."""
+
+    name: str
+    shape: tuple[int, ...]
+    init: str  # "uniform_pm1" | "xavier_uniform" | "zeros"
+
+    @property
+    def size(self) -> int:
+        n = 1
+        for d in self.shape:
+            n *= d
+        return n
+
+
+@dataclasses.dataclass(frozen=True)
+class MlpSpec:
+    """Fully-connected sigmoid network (paper's XOR / parity / NIST7x7 nets)."""
+
+    name: str
+    layers: tuple[int, ...]  # e.g. (49, 4, 4)
+    activation: str = "sigmoid"
+
+    @property
+    def input_shape(self) -> tuple[int, ...]:
+        return (self.layers[0],)
+
+    @property
+    def n_outputs(self) -> int:
+        return self.layers[-1]
+
+    def tensors(self) -> list[TensorSpec]:
+        specs = []
+        for li, (n_in, n_out) in enumerate(zip(self.layers[:-1], self.layers[1:])):
+            specs.append(TensorSpec(f"w{li}", (n_in, n_out), "uniform_pm1"))
+            specs.append(TensorSpec(f"b{li}", (n_out,), "uniform_pm1"))
+        return specs
+
+    @property
+    def param_count(self) -> int:
+        return sum(t.size for t in self.tensors())
+
+
+@dataclasses.dataclass(frozen=True)
+class CnnSpec:
+    """Conv stack + linear head (paper's Fashion-MNIST / CIFAR-10 nets).
+
+    Every conv is 3x3, stride 1, SAME padding, relu, followed by a 2x2
+    maxpool (stride 2).  ``extra_pool`` adds one final 2x2 maxpool before
+    the flatten (the CIFAR net needs it to reach the paper's 256 features).
+    ``global_avg_pool`` collapses the spatial dims instead of flattening
+    (the Fashion net's "(32x10) fully-connected layer").
+    """
+
+    name: str
+    input_hw: tuple[int, int]
+    input_channels: int
+    conv_channels: tuple[int, ...]
+    n_classes: int
+    extra_pool: bool = False
+    global_avg_pool: bool = False
+
+    @property
+    def input_shape(self) -> tuple[int, ...]:
+        return (self.input_hw[0], self.input_hw[1], self.input_channels)
+
+    @property
+    def n_outputs(self) -> int:
+        return self.n_classes
+
+    def _fc_in(self) -> int:
+        h, w = self.input_hw
+        for _ in self.conv_channels:
+            h, w = h // 2, w // 2
+        if self.extra_pool:
+            h, w = h // 2, w // 2
+        c = self.conv_channels[-1]
+        return c if self.global_avg_pool else h * w * c
+
+    def tensors(self) -> list[TensorSpec]:
+        specs = []
+        cin = self.input_channels
+        for li, cout in enumerate(self.conv_channels):
+            specs.append(TensorSpec(f"conv{li}_k", (3, 3, cin, cout), "xavier_uniform"))
+            specs.append(TensorSpec(f"conv{li}_b", (cout,), "zeros"))
+            cin = cout
+        specs.append(TensorSpec("fc_w", (self._fc_in(), self.n_classes), "xavier_uniform"))
+        specs.append(TensorSpec("fc_b", (self.n_classes,), "zeros"))
+        return specs
+
+    @property
+    def param_count(self) -> int:
+        return sum(t.size for t in self.tensors())
+
+
+MODELS: dict[str, MlpSpec | CnnSpec] = {
+    "xor221": MlpSpec("xor221", (2, 2, 1)),
+    "parity441": MlpSpec("parity441", (4, 4, 1)),
+    "nist744": MlpSpec("nist744", (49, 4, 4)),
+    "fmnist_cnn": CnnSpec(
+        "fmnist_cnn",
+        input_hw=(28, 28),
+        input_channels=1,
+        conv_channels=(16, 32),
+        n_classes=10,
+        global_avg_pool=True,
+    ),
+    "cifar_cnn": CnnSpec(
+        "cifar_cnn",
+        input_hw=(32, 32),
+        input_channels=3,
+        conv_channels=(16, 32, 64),
+        n_classes=10,
+        extra_pool=True,
+    ),
+}
+
+
+# ---------------------------------------------------------------------------
+# Parameter (un)flattening
+# ---------------------------------------------------------------------------
+
+
+def unflatten(spec: MlpSpec | CnnSpec, theta: jnp.ndarray) -> list[jnp.ndarray]:
+    """Split the flat ``f32[P]`` parameter bus into the spec's tensors."""
+    tensors = []
+    offset = 0
+    for ts in spec.tensors():
+        tensors.append(theta[offset : offset + ts.size].reshape(ts.shape))
+        offset += ts.size
+    if offset != theta.shape[0]:
+        raise ValueError(f"{spec.name}: theta has {theta.shape[0]} params, spec needs {offset}")
+    return tensors
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+def mlp_forward(
+    spec: MlpSpec,
+    theta: jnp.ndarray,
+    x: jnp.ndarray,
+    theta_tilde: jnp.ndarray | None = None,
+    *,
+    use_pallas: bool = True,
+) -> jnp.ndarray:
+    """MLP inference with an optional parameter perturbation riding on top.
+
+    ``theta_tilde`` is the MGD perturbation vector (same layout as
+    ``theta``); passing ``None`` runs the unperturbed baseline (C0
+    measurement).  ``use_pallas=True`` routes the dense layers through the
+    L1 Pallas kernel; ``False`` uses the jnp oracle (needed for ``grad``).
+    """
+    tensors = unflatten(spec, theta)
+    tilde = (
+        unflatten(spec, theta_tilde)
+        if theta_tilde is not None
+        else [jnp.zeros(ts.shape, jnp.float32) for ts in spec.tensors()]
+    )
+    h = x
+    n_layers = len(spec.layers) - 1
+    for li in range(n_layers):
+        w, b = tensors[2 * li], tensors[2 * li + 1]
+        wt, bt = tilde[2 * li], tilde[2 * li + 1]
+        if use_pallas:
+            h = dense.dense_forward(h, w, b, wt, bt, spec.activation)
+        else:
+            h = ref.dense_forward_ref(h, w, b, wt, bt, spec.activation)
+    return h
+
+
+def _maxpool2(h: jnp.ndarray) -> jnp.ndarray:
+    """2x2 maxpool, stride 2, NHWC."""
+    return lax.reduce_window(
+        h, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def cnn_forward(
+    spec: CnnSpec,
+    theta: jnp.ndarray,
+    x: jnp.ndarray,
+    theta_tilde: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """CNN inference (NHWC), perturbation fused into the parameters.
+
+    Convs stay in plain ``lax.conv_general_dilated`` (XLA already emits
+    near-optimal CPU code for them); the MGD perturbation is a single
+    vector add on the parameter bus before unflattening, which is exactly
+    how the hardware applies it (§4.1: a perturbation element in series
+    with the parameter).
+    """
+    eff = theta if theta_tilde is None else theta + theta_tilde
+    tensors = unflatten(spec, eff)
+    h = x
+    for li in range(len(spec.conv_channels)):
+        k, b = tensors[2 * li], tensors[2 * li + 1]
+        h = lax.conv_general_dilated(
+            h, k, window_strides=(1, 1), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+        h = jnp.maximum(h + b, 0.0)
+        h = _maxpool2(h)
+    if spec.extra_pool:
+        h = _maxpool2(h)
+    if spec.global_avg_pool:
+        h = jnp.mean(h, axis=(1, 2))
+    else:
+        h = h.reshape(h.shape[0], -1)
+    fc_w, fc_b = tensors[-2], tensors[-1]
+    return h @ fc_w + fc_b
+
+
+def forward(
+    spec: MlpSpec | CnnSpec,
+    theta: jnp.ndarray,
+    x: jnp.ndarray,
+    theta_tilde: jnp.ndarray | None = None,
+    *,
+    use_pallas: bool = True,
+) -> jnp.ndarray:
+    """Dispatch to the right forward pass for ``spec``."""
+    if isinstance(spec, MlpSpec):
+        return mlp_forward(spec, theta, x, theta_tilde, use_pallas=use_pallas)
+    return cnn_forward(spec, theta, x, theta_tilde)
+
+
+# ---------------------------------------------------------------------------
+# Cost / eval / grad heads (the AOT artifact bodies)
+# ---------------------------------------------------------------------------
+
+
+def make_cost_fn(spec: MlpSpec | CnnSpec, *, use_pallas: bool = True) -> Callable:
+    """``(theta[P], theta_tilde[P], x[B,...], y_hat[B,K]) -> (C,)``.
+
+    The device-side cost evaluation the MGD coordinator calls on the hot
+    path: one perturbed inference plus the MSE cost head.  Passing an
+    all-zeros ``theta_tilde`` measures the baseline cost C0.
+    """
+
+    def cost_fn(theta, theta_tilde, x, y_hat):
+        y = forward(spec, theta, x, theta_tilde, use_pallas=use_pallas)
+        return (ref.mse_cost_ref(y, y_hat),)
+
+    return cost_fn
+
+
+def _correct_count(spec: MlpSpec | CnnSpec, y: jnp.ndarray, y_hat: jnp.ndarray) -> jnp.ndarray:
+    """Number of correctly-classified samples in the batch (f32 scalar)."""
+    if spec.n_outputs == 1:
+        pred = y[:, 0] > 0.5
+        want = y_hat[:, 0] > 0.5
+        return jnp.sum((pred == want).astype(jnp.float32))
+    pred = jnp.argmax(y, axis=-1)
+    want = jnp.argmax(y_hat, axis=-1)
+    return jnp.sum((pred == want).astype(jnp.float32))
+
+
+def make_eval_fn(spec: MlpSpec | CnnSpec) -> Callable:
+    """``(theta[P], x[B,...], y_hat[B,K]) -> (C, correct_count)``."""
+
+    def eval_fn(theta, x, y_hat):
+        y = forward(spec, theta, x, use_pallas=False)
+        return ref.mse_cost_ref(y, y_hat), _correct_count(spec, y, y_hat)
+
+    return eval_fn
+
+
+def make_grad_fn(spec: MlpSpec | CnnSpec) -> Callable:
+    """``(theta[P], x[B,...], y_hat[B,K]) -> (C, dC/dtheta[P])``.
+
+    The paper's comparator (backprop + SGD, §3.6) and the "true gradient"
+    for the Fig. 5 angle metric.  Uses the jnp reference forward
+    (interpret-mode Pallas has no reverse-mode AD); equality of the two
+    forwards is pytest-enforced.
+    """
+
+    def loss(theta, x, y_hat):
+        y = forward(spec, theta, x, use_pallas=False)
+        return ref.mse_cost_ref(y, y_hat)
+
+    def grad_fn(theta, x, y_hat):
+        c, g = jax.value_and_grad(loss)(theta, x, y_hat)
+        return c, g
+
+    return grad_fn
+
+
+# ---------------------------------------------------------------------------
+# Fused on-chip MGD scan (the performance path)
+# ---------------------------------------------------------------------------
+
+
+def make_mgd_scan_fn(
+    spec: MlpSpec | CnnSpec,
+    *,
+    n_steps: int,
+    use_pallas: bool = True,
+) -> Callable:
+    """Build the fused "on-chip autonomous training" artifact.
+
+    Runs ``n_steps`` complete MGD timesteps (Algorithm 1 with
+    ``tau_p = 1`` and random code — i.e. SPSA-style rademacher —
+    perturbations) inside a single ``lax.scan``, so one PJRT call advances
+    training by a whole window.  This models the paper's end-state
+    deployment (§6: "local, autonomous circuits"), while the per-step
+    ``cost`` artifact models chip-in-the-loop training.
+
+    Runtime inputs (all supplied by the Rust coordinator)::
+
+        theta      f32[P]      parameter bus
+        g          f32[P]      gradient-integrator state (carried across calls)
+        seed       u32[]       PRNG seed for this window's perturbations/noise
+        eta        f32[]       learning rate
+        dtheta     f32[]       perturbation amplitude
+        sigma_c    f32[]       stddev of additive Gaussian cost noise (§3.5)
+        sigma_th   f32[]       stddev of additive parameter-update noise (§3.5)
+        tau_theta  i32[]       parameter-update period in steps (dynamic!)
+        t0         i32[]       global step offset (keeps the tau_theta
+                               phase continuous across windows)
+        x_all      f32[N,...]  resident dataset inputs
+        y_all      f32[N,K]    resident dataset targets
+        idx        i32[T,B]    per-step sample schedule (encodes tau_x)
+
+    Returns ``(theta', g', costs[T])`` where ``costs[t]`` is the perturbed
+    cost observed at step ``t`` (the signal a hardware monitor would see).
+
+    The per-step baseline cost C0 is re-measured every step; Algorithm 1
+    caches it within a ``tau_x`` window, but re-measuring is arithmetically
+    identical (theta is constant within a window) and keeps the scan body
+    branch-free.  The chip-in-the-loop Rust path implements the cached
+    variant literally.
+    """
+    p = spec.param_count
+
+    def scan_fn(theta, g, seed, eta, dtheta, sigma_c, sigma_th, tau_theta, t0, x_all, y_all, idx):
+        key = jax.random.PRNGKey(seed)
+        k_pert, k_cost_noise, k_upd_noise = jax.random.split(key, 3)
+
+        # Perf (EXPERIMENTS.md §Perf L2-1): generate the window's entire
+        # randomness in three batched ops instead of per-step fold_in +
+        # split + three draws — per-step threefry key scheduling dominated
+        # the scan body for the small models.
+        tt_all = dtheta * jax.random.rademacher(k_pert, (n_steps, p), jnp.float32)
+        cn_all = sigma_c * jax.random.normal(k_cost_noise, (n_steps, 2))
+        # Update noise is only consumed at update steps; skip generating
+        # the (T, P) block entirely when sigma_th == 0 (the common case).
+        un_all = lax.cond(
+            sigma_th > 0.0,
+            lambda: sigma_th * jax.random.normal(k_upd_noise, (n_steps, p)),
+            lambda: jnp.zeros((n_steps, p), jnp.float32),
+        )
+
+        def cost_at(th, tt, xb, yb):
+            y = forward(spec, th, xb, tt, use_pallas=use_pallas)
+            return ref.mse_cost_ref(y, yb)
+
+        def step(carry, t):
+            theta, g = carry
+            # Random code perturbation (statistically orthogonal, §3.4).
+            tt = tt_all[t]
+            xb = x_all[idx[t]]
+            yb = y_all[idx[t]]
+            # Baseline + perturbed cost, each with additive readout noise.
+            c0 = cost_at(theta, None, xb, yb) + cn_all[t, 0]
+            c = cost_at(theta, tt, xb, yb) + cn_all[t, 1]
+            c_tilde = c - c0
+            # Homodyne integration (L1 Pallas kernel on the hot path).
+            if use_pallas:
+                g = homodyne.homodyne_accumulate(g, c_tilde, tt, dtheta)
+            else:
+                g = ref.homodyne_accumulate_ref(g, c_tilde, tt, dtheta)
+            # Parameter update every tau_theta steps (Eq. 4 + update noise).
+            upd = ((t0 + t + 1) % tau_theta) == 0
+            theta = jnp.where(upd, theta - eta * g + un_all[t], theta)
+            g = jnp.where(upd, jnp.zeros_like(g), g)
+            return (theta, g), c
+
+        # Perf note (EXPERIMENTS.md §Perf L2-2): scan `unroll=4` was tried
+        # and gained ~13% under the jax 0.8 runtime but *regressed* 15-60%
+        # under the deployment runtime (xla_extension 0.5.1), so it is
+        # intentionally not applied — always measure on the target runtime.
+        (theta, g), costs = lax.scan(step, (theta, g), jnp.arange(n_steps))
+        return theta, g, costs
+
+    return scan_fn

@@ -1,0 +1,100 @@
+"""AOT pipeline: lowering, manifest integrity, HLO-text compatibility.
+
+These tests exercise ``compile.aot`` end-to-end into a temp directory and
+validate the manifest contract the Rust runtime depends on.
+"""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    aot.build(str(out), ["xor221"], None)
+    return out
+
+
+def test_manifest_schema(built):
+    with open(built / "manifest.json") as f:
+        manifest = json.load(f)
+    assert manifest["format"] == 1
+    assert "xor221" in manifest["models"]
+    model = manifest["models"]["xor221"]
+    assert model["param_count"] == 9
+    assert model["input_shape"] == [2]
+    assert [t["name"] for t in model["tensors"]] == ["w0", "b0", "w1", "b1"]
+    names = {a["name"] for a in manifest["artifacts"]}
+    assert names == {
+        "xor221_cost", "xor221_eval", "xor221_grad", "xor221_gradtrain", "xor221_mgd_scan",
+    }
+    for art in manifest["artifacts"]:
+        assert os.path.exists(built / art["file"]), art["file"]
+        assert art["inputs"], art["name"]
+        assert art["outputs"], art["name"]
+
+
+def test_hlo_text_is_parseable_entry_module(built):
+    """The interchange contract: HLO *text* with an ENTRY computation and
+    no Mosaic custom-calls (interpret-mode Pallas only)."""
+    for name in ["xor221_cost", "xor221_mgd_scan"]:
+        text = (built / f"{name}.hlo.txt").read_text()
+        assert "ENTRY" in text, name
+        assert "HloModule" in text, name
+        assert "mosaic" not in text.lower(), f"{name}: TPU custom-call leaked into CPU artifact"
+
+
+def test_scan_artifact_signature(built):
+    with open(built / "manifest.json") as f:
+        manifest = json.load(f)
+    scan = next(a for a in manifest["artifacts"] if a["name"] == "xor221_mgd_scan")
+    names = [i["name"] for i in scan["inputs"]]
+    assert names == [
+        "theta", "g", "seed", "eta", "dtheta", "sigma_c", "sigma_th",
+        "tau_theta", "t0", "x_all", "y_all", "idx",
+    ]
+    dtypes = {i["name"]: i["dtype"] for i in scan["inputs"]}
+    assert dtypes["seed"] == "u32"
+    assert dtypes["tau_theta"] == "i32"
+    assert dtypes["idx"] == "i32"
+    # Outputs: theta', g', costs[T]
+    assert [o["shape"] for o in scan["outputs"]] == [[9], [9], [1000]]
+
+
+def test_incremental_rebuild_preserves_other_models(built):
+    """Partial builds must merge with the existing manifest."""
+    aot.build(str(built), ["parity441"], kinds=["cost"])
+    with open(built / "manifest.json") as f:
+        manifest = json.load(f)
+    names = {a["name"] for a in manifest["artifacts"]}
+    assert "xor221_cost" in names, "previous artifacts lost"
+    assert "parity441_cost" in names
+    assert "parity441" in manifest["models"]
+
+
+def test_sha256_matches_file(built):
+    import hashlib
+
+    with open(built / "manifest.json") as f:
+        manifest = json.load(f)
+    art = next(a for a in manifest["artifacts"] if a["name"] == "xor221_cost")
+    text = (built / art["file"]).read_text()
+    assert hashlib.sha256(text.encode()).hexdigest() == art["sha256"]
+
+
+def test_artifact_dims_consistent_with_models():
+    for name, (b_cost, b_eval, b_train, scan) in aot.ARTIFACT_DIMS.items():
+        spec = M.MODELS[name]
+        assert b_cost >= 1 and b_eval >= 1 and b_train >= 1
+        assert scan.dataset_n >= scan.batch
+        specs = aot.artifact_specs(spec)
+        assert set(specs) == {"cost", "eval", "grad", "gradtrain", "mgd_scan"}
+        # Every input spec must carry a manifest-compatible dtype.
+        for _, (fn, inputs) in specs.items():
+            for (_, _, dt) in inputs:
+                assert dt in aot._DTYPES

@@ -1,0 +1,154 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+This is the core correctness signal for the kernel layer: hypothesis
+sweeps shapes (batch, fan-in, fan-out, parameter count), activations and
+value ranges, asserting allclose between ``pl.pallas_call`` (interpret
+mode) and ``ref.py``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dense, homodyne, ref
+
+# Keep example counts moderate: every example traces a pallas_call.
+COMMON = dict(deadline=None, max_examples=25)
+
+
+def rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(key, shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# dense_forward
+# ---------------------------------------------------------------------------
+
+
+@settings(**COMMON)
+@given(
+    batch=st.integers(1, 40),
+    n_in=st.integers(1, 64),
+    n_out=st.integers(1, 24),
+    activation=st.sampled_from(["sigmoid", "relu", "linear"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_matches_oracle(batch, n_in, n_out, activation, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    x = rand(ks[0], (batch, n_in))
+    w = rand(ks[1], (n_in, n_out))
+    b = rand(ks[2], (n_out,))
+    wt = rand(ks[3], (n_in, n_out), scale=0.01)
+    bt = rand(ks[4], (n_out,), scale=0.01)
+    got = dense.dense_forward(x, w, b, wt, bt, activation)
+    want = ref.dense_forward_ref(x, w, b, wt, bt, activation)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_dense_zero_perturbation_is_baseline():
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    x = rand(ks[0], (8, 16))
+    w = rand(ks[1], (16, 4))
+    b = rand(ks[2], (4,))
+    z = jnp.zeros_like(w)
+    zb = jnp.zeros_like(b)
+    base = dense.dense_forward(x, w, b, z, zb, "sigmoid")
+    want = ref.activate(x @ w + b, "sigmoid")
+    np.testing.assert_allclose(base, want, rtol=1e-5, atol=1e-6)
+
+
+def test_dense_shape_validation():
+    x = jnp.zeros((2, 3))
+    w = jnp.zeros((4, 5))  # contraction mismatch
+    b = jnp.zeros((5,))
+    with pytest.raises(ValueError):
+        dense.dense_forward(x, w, b, jnp.zeros_like(w), b)
+    w = jnp.zeros((3, 5))
+    with pytest.raises(ValueError):
+        dense.dense_forward(x, w, jnp.zeros((4,)), jnp.zeros_like(w), jnp.zeros((4,)))
+    with pytest.raises(ValueError):
+        dense.dense_forward(x, w, b, jnp.zeros((3, 4)), b)
+
+
+def test_dense_is_jittable_and_aot_stable():
+    """The kernel must trace under jit (the AOT path) bit-identically."""
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    args = (
+        rand(ks[0], (4, 7)),
+        rand(ks[1], (7, 3)),
+        rand(ks[2], (3,)),
+        rand(ks[3], (7, 3), 0.01),
+        rand(ks[4], (3,), 0.01),
+    )
+    eager = dense.dense_forward(*args, "relu")
+    jitted = jax.jit(lambda *a: dense.dense_forward(*a, "relu"))(*args)
+    np.testing.assert_array_equal(np.asarray(eager), np.asarray(jitted))
+
+
+def test_dense_vmem_footprint_fits_budget():
+    """DESIGN.md §Perf: the largest model tile must fit TPU VMEM (~16 MiB)."""
+    for batch, n_in, n_out in [(1, 2, 2), (1, 49, 4), (100, 256, 10), (512, 49, 4)]:
+        assert dense.vmem_footprint_bytes(batch, n_in, n_out) < 16 * 1024 * 1024
+
+
+# ---------------------------------------------------------------------------
+# homodyne_accumulate
+# ---------------------------------------------------------------------------
+
+
+@settings(**COMMON)
+@given(
+    p=st.integers(1, 2048),
+    c_tilde=st.floats(-5.0, 5.0, allow_nan=False, width=32),
+    dtheta=st.floats(0.0009765625, 1.0, allow_nan=False, width=32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_homodyne_matches_oracle(p, c_tilde, dtheta, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    g = rand(ks[0], (p,))
+    tt = dtheta * jax.random.rademacher(ks[1], (p,), jnp.float32)
+    got = homodyne.homodyne_accumulate(g, c_tilde, tt, dtheta)
+    want = ref.homodyne_accumulate_ref(g, c_tilde, tt, dtheta)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_homodyne_zero_modulation_is_identity():
+    g = jnp.arange(100, dtype=jnp.float32)
+    tt = jnp.ones(100, jnp.float32)
+    out = homodyne.homodyne_accumulate(g, 0.0, tt, 0.01)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(g))
+
+
+def test_homodyne_accumulates_additively():
+    """Two accumulations == one accumulation of the summed error signal."""
+    key = jax.random.PRNGKey(3)
+    g0 = jnp.zeros(64, jnp.float32)
+    tt = 0.05 * jax.random.rademacher(key, (64,), jnp.float32)
+    g1 = homodyne.homodyne_accumulate(g0, 0.3, tt, 0.05)
+    g2 = homodyne.homodyne_accumulate(g1, -0.1, tt, 0.05)
+    want = ref.homodyne_accumulate_ref(
+        ref.homodyne_accumulate_ref(g0, 0.3, tt, 0.05), -0.1, tt, 0.05
+    )
+    np.testing.assert_allclose(g2, want, rtol=1e-5, atol=1e-6)
+
+
+def test_homodyne_gradient_direction_on_quadratic():
+    """End-to-end Eq. 3 check: homodyne-estimated gradient of a quadratic
+    cost aligns with the analytic gradient."""
+    p = 32
+    key = jax.random.PRNGKey(7)
+    theta = jax.random.normal(key, (p,), jnp.float32)
+    true_grad = 2.0 * theta  # C = |theta|^2
+    dtheta = 1e-3
+    g = jnp.zeros(p, jnp.float32)
+    for t in range(400):
+        kt = jax.random.fold_in(key, t)
+        tt = dtheta * jax.random.rademacher(kt, (p,), jnp.float32)
+        c0 = jnp.sum(theta * theta)
+        c = jnp.sum((theta + tt) ** 2)
+        g = homodyne.homodyne_accumulate(g, c - c0, tt, dtheta)
+    g = np.asarray(g) / 400.0
+    cos = np.dot(g, true_grad) / (np.linalg.norm(g) * np.linalg.norm(true_grad))
+    assert cos > 0.95, f"homodyne estimate misaligned: cos={cos}"

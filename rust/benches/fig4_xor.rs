@@ -1,0 +1,111 @@
+//! Fig. 4 bench: wall-clock time-to-solution for XOR across training
+//! paths (MGD native loop, MGD fused on-chip, backprop-SGD).
+//!
+//! The end-to-end number behind the figure: how long this testbed takes
+//! to actually *solve* the problem, not just run steps.
+
+use std::time::Instant;
+
+use mgd::bench::fmt_time;
+use mgd::coordinator::{MgdConfig, MgdTrainer, OnChipTrainer, ScheduleKind, TrainOptions};
+use mgd::datasets::parity;
+use mgd::device::{HardwareDevice, NativeDevice};
+use mgd::metrics::Quartiles;
+use mgd::optim::{init_params_uniform, BackpropTrainer};
+use mgd::perturb::PerturbKind;
+use mgd::rng::Rng;
+use mgd::runtime::Runtime;
+
+const SEEDS: [u64; 5] = [0, 1, 2, 3, 5];
+
+fn theta_for(seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    let mut theta = vec![0f32; 9];
+    init_params_uniform(&mut rng, &mut theta, 1.0);
+    theta
+}
+
+fn summarize(name: &str, times: &[f64], solves: usize) {
+    match Quartiles::of(times) {
+        Some(q) => println!(
+            "{:<22} solved {}/{}  median {:>10}  [{} .. {}]",
+            name,
+            solves,
+            SEEDS.len(),
+            fmt_time(q.median),
+            fmt_time(q.min),
+            fmt_time(q.max)
+        ),
+        None => println!("{name:<22} solved 0/{}", SEEDS.len()),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new(mgd::find_artifact_dir()?)?;
+    let data = parity(2);
+    let opts = TrainOptions {
+        max_steps: 100_000,
+        eval_every: 500,
+        target_cost: Some(0.04),
+        ..Default::default()
+    };
+
+    // --- MGD on the native device (hardware-simulator loop) ----------------
+    let mut times = Vec::new();
+    let mut solves = 0;
+    for seed in SEEDS {
+        let mut dev = NativeDevice::new(&[2, 2, 1], 1);
+        dev.set_params(&theta_for(seed))?;
+        let cfg = MgdConfig {
+            eta: 0.5,
+            amplitude: 0.05,
+            kind: PerturbKind::RademacherCode,
+            seed,
+            ..Default::default()
+        };
+        let mut tr = MgdTrainer::new(&mut dev, &data, cfg, ScheduleKind::Cyclic);
+        let t0 = Instant::now();
+        let res = tr.train(&opts, None)?;
+        if res.solved() {
+            times.push(t0.elapsed().as_secs_f64());
+            solves += 1;
+        }
+    }
+    summarize("mgd/native-loop", &times, solves);
+
+    // --- MGD fused on-chip ---------------------------------------------------
+    let mut times = Vec::new();
+    let mut solves = 0;
+    for seed in SEEDS {
+        let cfg = MgdConfig {
+            eta: 0.5,
+            amplitude: 0.05,
+            kind: PerturbKind::RademacherCode,
+            seed,
+            ..Default::default()
+        };
+        let mut tr = OnChipTrainer::new(&rt, "xor221", &data, theta_for(seed), cfg)?;
+        let t0 = Instant::now();
+        let res = tr.train(&opts, &data)?;
+        if res.solved() {
+            times.push(t0.elapsed().as_secs_f64());
+            solves += 1;
+        }
+    }
+    summarize("mgd/onchip-fused", &times, solves);
+
+    // --- Backprop-SGD ---------------------------------------------------------
+    let mut times = Vec::new();
+    let mut solves = 0;
+    for seed in SEEDS {
+        let mut tr = BackpropTrainer::new(&rt, "xor221", &data, theta_for(seed), 0.5, seed)?;
+        let t0 = Instant::now();
+        let res = tr.train(&opts, None)?;
+        if res.solved() {
+            times.push(t0.elapsed().as_secs_f64());
+            solves += 1;
+        }
+    }
+    summarize("backprop/pjrt", &times, solves);
+    Ok(())
+}

@@ -1,0 +1,98 @@
+//! Fig. 7 bench: per-step overhead of each perturbation family plus an
+//! RWC-vs-MGD scaling ablation (§3.6's closing argument).
+//!
+//! Two measurements:
+//! 1. generator cost per step at the paper's parameter counts — showing
+//!    the coordinator-side multiplexing overhead is negligible against
+//!    device inference;
+//! 2. steps-to-solve XOR for MGD vs RWC at matched per-step budgets —
+//!    the gradient-scaled update (Eq. 4) beats keep/discard at equal
+//!    hardware cost.
+
+use mgd::bench::Bench;
+use mgd::coordinator::{MgdConfig, MgdTrainer, ScheduleKind, TrainOptions};
+use mgd::datasets::parity;
+use mgd::device::{HardwareDevice, NativeDevice};
+use mgd::metrics::Quartiles;
+use mgd::optim::{init_params_uniform, RwcTrainer};
+use mgd::perturb::{self, PerturbKind};
+use mgd::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let b = Bench::default();
+    println!("== perturbation-generator overhead ==");
+    for p in [9usize, 220, 5130, 26_154] {
+        for kind in [
+            PerturbKind::RademacherCode,
+            PerturbKind::WalshCode,
+            PerturbKind::SequentialFd,
+            PerturbKind::Sinusoidal,
+        ] {
+            let mut gen = perturb::make(kind, p, 0.01, 1, 1);
+            let mut buf = vec![0f32; p];
+            let mut t = 0u64;
+            b.run(&format!("fig7/gen/{kind:?}/P={p}"), || {
+                gen.fill(t, &mut buf);
+                t += 1;
+                buf[p - 1]
+            });
+        }
+    }
+
+    println!("\n== MGD vs RWC at matched per-step budget (XOR, 10 seeds) ==");
+    let data = parity(2);
+    let max_steps = 200_000u64;
+    let mut mgd_times = Vec::new();
+    let mut rwc_times = Vec::new();
+    for seed in 0..10u64 {
+        let mut theta = vec![0f32; 9];
+        init_params_uniform(&mut Rng::new(seed), &mut theta, 1.0);
+
+        let mut dev = NativeDevice::new(&[2, 2, 1], 1);
+        dev.set_params(&theta)?;
+        let cfg = MgdConfig {
+            eta: 0.5,
+            amplitude: 0.05,
+            kind: PerturbKind::RademacherCode,
+            seed,
+            ..Default::default()
+        };
+        let mut tr = MgdTrainer::new(&mut dev, &data, cfg, ScheduleKind::Cyclic);
+        let opts = TrainOptions {
+            max_steps,
+            eval_every: 500,
+            target_cost: Some(0.04),
+            ..Default::default()
+        };
+        if let Some(at) = tr.train(&opts, None)?.solved_at {
+            mgd_times.push(at as f64);
+        }
+
+        let mut dev = NativeDevice::new(&[2, 2, 1], 1);
+        dev.set_params(&theta)?;
+        let mut tr = RwcTrainer::new(&mut dev, &data, 0.05, 1, seed);
+        let opts = TrainOptions {
+            max_steps,
+            eval_every: 500,
+            target_cost: Some(0.04),
+            ..Default::default()
+        };
+        if let Some(at) = tr.train(&opts, None)?.solved_at {
+            rwc_times.push(at as f64);
+        }
+    }
+    let report = |name: &str, times: &[f64]| match Quartiles::of(times) {
+        Some(q) => println!(
+            "{:<6} solved {:>2}/10, median {:>9.0} steps [q1 {:.0}, q3 {:.0}]",
+            name,
+            times.len(),
+            q.median,
+            q.q1,
+            q.q3
+        ),
+        None => println!("{name:<6} solved 0/10"),
+    };
+    report("MGD", &mgd_times);
+    report("RWC", &rwc_times);
+    Ok(())
+}

@@ -1,0 +1,129 @@
+//! Hot-path micro-benchmarks — the profiling tool for the perf pass
+//! (EXPERIMENTS.md §Perf).
+//!
+//! Measures each layer of the stack in isolation:
+//! - L3 substrate ops: perturbation generation per family, homodyne
+//!   accumulation, native-device inference;
+//! - PJRT boundary: single `cost` artifact call (chip-in-the-loop step
+//!   cost), fused `mgd_scan` window (per-step amortized cost), dataset
+//!   upload vs resident reuse.
+
+use mgd::bench::Bench;
+use mgd::coordinator::{MgdConfig, MgdTrainer, OnChipTrainer, ScheduleKind};
+use mgd::datasets::{nist7x7, parity};
+use mgd::device::{HardwareDevice, NativeDevice, PjrtDevice};
+use mgd::optim::init_params_uniform;
+use mgd::perturb::{self, PerturbKind};
+use mgd::rng::Rng;
+use mgd::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let b = Bench::default();
+    println!("== L3 substrates ==");
+
+    // Perturbation generation, P = 220 (NIST) and P = 26154 (CIFAR).
+    for p in [220usize, 26_154] {
+        for kind in [
+            PerturbKind::RademacherCode,
+            PerturbKind::WalshCode,
+            PerturbKind::SequentialFd,
+            PerturbKind::Sinusoidal,
+        ] {
+            let mut gen = perturb::make(kind, p, 0.01, 1, 1);
+            let mut buf = vec![0f32; p];
+            let mut t = 0u64;
+            b.run(&format!("perturb/{kind:?}/P={p}"), || {
+                gen.fill(t, &mut buf);
+                t += 1;
+                buf[0]
+            });
+        }
+    }
+
+    // Homodyne accumulate (pure L3 loop, P = 26154).
+    {
+        let p = 26_154;
+        let mut g = vec![0f32; p];
+        let tt = vec![0.01f32; p];
+        b.run("homodyne_accumulate/P=26154", || {
+            let inv = 1.0 / (0.01f32 * 0.01);
+            for (gi, &ti) in g.iter_mut().zip(&tt) {
+                *gi += 0.3 * ti * inv;
+            }
+            g[0]
+        });
+    }
+
+    // Native device inference (49-4-4, B=1) — the Fig. 8/10 hot loop.
+    {
+        let mut dev = NativeDevice::new(&[49, 4, 4], 1);
+        let mut rng = Rng::new(1);
+        let mut theta = vec![0f32; 220];
+        init_params_uniform(&mut rng, &mut theta, 1.0);
+        dev.set_params(&theta)?;
+        let data = nist7x7(64, 1);
+        let (x, y) = data.gather(&[0]);
+        dev.load_batch(&x, &y)?;
+        let tt = vec![0.01f32; 220];
+        b.run("native_device/cost/nist744", || dev.cost(Some(&tt)).unwrap());
+    }
+
+    // Full discrete MGD step on the native device (Algorithm 1 loop body).
+    {
+        let data = nist7x7(256, 2);
+        let mut dev = NativeDevice::new(&[49, 4, 4], 1);
+        let mut rng = Rng::new(2);
+        let mut theta = vec![0f32; 220];
+        init_params_uniform(&mut rng, &mut theta, 1.0);
+        dev.set_params(&theta)?;
+        let cfg = MgdConfig { eta: 0.5, amplitude: 0.01, seed: 2, ..Default::default() };
+        let mut tr = MgdTrainer::new(&mut dev, &data, cfg, ScheduleKind::Cyclic);
+        b.run("mgd_step/native/nist744", || tr.step().unwrap().cost);
+    }
+
+    println!("\n== PJRT boundary ==");
+    let rt = Runtime::new(mgd::find_artifact_dir()?)?;
+
+    // Chip-in-the-loop step: one cost-artifact call (B=1 MLP).
+    {
+        let mut dev = PjrtDevice::new(&rt, "nist744")?;
+        let mut rng = Rng::new(3);
+        let mut theta = vec![0f32; 220];
+        init_params_uniform(&mut rng, &mut theta, 1.0);
+        dev.set_params(&theta)?;
+        let data = nist7x7(16, 3);
+        let (x, y) = data.gather(&[0]);
+        dev.load_batch(&x, &y)?;
+        let tt = vec![0.01f32; 220];
+        b.run("pjrt_cost_call/nist744", || dev.cost(Some(&tt)).unwrap());
+    }
+
+    // Fused scan window (1000 steps/call): amortized per-step cost.
+    {
+        let data = parity(2);
+        let mut rng = Rng::new(4);
+        let mut theta = vec![0f32; 9];
+        init_params_uniform(&mut rng, &mut theta, 1.0);
+        let cfg = MgdConfig { eta: 0.2, amplitude: 0.05, seed: 4, ..Default::default() };
+        let mut tr = OnChipTrainer::new(&rt, "xor221", &data, theta, cfg)?;
+        let t = tr.window_steps() as f64;
+        let m = b.run("mgd_scan_window/xor221(1000 steps)", || tr.window().unwrap()[0]);
+        println!(
+            "  -> amortized {:.2} us/MGD-step (vs per-call chip-in-the-loop above)",
+            m.median * 1e6 / t
+        );
+    }
+    {
+        let data = nist7x7(2048, 5);
+        let mut rng = Rng::new(5);
+        let mut theta = vec![0f32; 220];
+        init_params_uniform(&mut rng, &mut theta, 1.0);
+        let cfg = MgdConfig { eta: 0.5, amplitude: 0.01, seed: 5, ..Default::default() };
+        let mut tr = OnChipTrainer::new(&rt, "nist744", &data, theta, cfg)?;
+        let t = tr.window_steps() as f64;
+        let m = b.run("mgd_scan_window/nist744(1000 steps)", || tr.window().unwrap()[0]);
+        println!("  -> amortized {:.2} us/MGD-step", m.median * 1e6 / t);
+    }
+
+    Ok(())
+}

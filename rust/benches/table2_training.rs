@@ -1,0 +1,52 @@
+//! Table 2 end-to-end bench: MGD training throughput per model.
+//!
+//! Measures fused on-chip window time for every model in the table and
+//! reports per-MGD-step wall-clock — the number that, multiplied by the
+//! paper's step counts, gives this testbed's equivalent of Table 3.
+
+use mgd::bench::{fmt_time, Bench};
+use mgd::coordinator::{MgdConfig, OnChipTrainer};
+use mgd::datasets::{nist7x7, parity, synthetic_cifar, synthetic_fmnist, Dataset};
+use mgd::optim::init_params;
+use mgd::rng::Rng;
+use mgd::runtime::Runtime;
+
+fn dataset_for(model: &str, seed: u64) -> Dataset {
+    match model {
+        "xor221" => parity(2),
+        "parity441" => parity(4),
+        "nist744" => nist7x7(8192, seed),
+        "fmnist_cnn" => synthetic_fmnist(2048, seed),
+        "cifar_cnn" => synthetic_cifar(1024, seed),
+        _ => unreachable!(),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new(mgd::find_artifact_dir()?)?;
+    let b = Bench::quick();
+    println!("model        window(T x B)      time/window     time/step   samples/s");
+    for model in ["xor221", "parity441", "nist744", "fmnist_cnn", "cifar_cnn"] {
+        let meta = rt.manifest.model(model)?.clone();
+        let data = dataset_for(model, 42);
+        let mut rng = Rng::new(42);
+        let mut theta = vec![0f32; meta.param_count];
+        init_params(&mut rng, &meta.tensors, &mut theta);
+        let cfg = MgdConfig { eta: 0.05, amplitude: 0.01, seed: 42, ..Default::default() };
+        let mut tr = OnChipTrainer::new(&rt, model, &data, theta, cfg)?;
+        let m = b.run(&format!("table2/{model}"), || tr.window().unwrap()[0]);
+        let per_step = m.median / meta.scan_steps as f64;
+        // Each MGD step runs 2 inferences over B samples.
+        let samples_per_s = 2.0 * meta.scan_batch as f64 / per_step;
+        println!(
+            "{:<12} {:>5} x {:<6} {:>14} {:>12}  {:>10.0}",
+            model,
+            meta.scan_steps,
+            meta.scan_batch,
+            fmt_time(m.median),
+            fmt_time(per_step),
+            samples_per_s
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Table 3 bench: measured backprop step time vs MGD step time on this
+//! testbed, plus the paper's hardware projections.
+//!
+//! The paper's claim is *not* that MGD beats backprop per-step on a CPU —
+//! it's that with realistic hardware time constants (τp down to 200 ps),
+//! `steps x τp` beats a GPU's wall-clock.  This bench produces the
+//! measured columns; `mgd run table3` combines them with the projections.
+
+use mgd::bench::{fmt_time, Bench};
+use mgd::coordinator::{MgdConfig, OnChipTrainer};
+use mgd::datasets::{parity, synthetic_cifar, synthetic_fmnist, Dataset};
+use mgd::optim::{init_params, BackpropTrainer};
+use mgd::rng::Rng;
+use mgd::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new(mgd::find_artifact_dir()?)?;
+    let b = Bench::quick();
+    let rows: [(&str, Dataset, f64); 3] = [
+        ("xor221", parity(2), 1e4),
+        ("fmnist_cnn", synthetic_fmnist(1024, 42), 1e6),
+        ("cifar_cnn", synthetic_cifar(512, 42), 1e7),
+    ];
+    println!(
+        "{:<12} {:>14} {:>14} {:>18} {:>16}",
+        "model", "bp step", "mgd step(sim)", "paper steps x HW3", "paper steps x HW1"
+    );
+    for (model, data, paper_steps) in rows {
+        let meta = rt.manifest.model(model)?.clone();
+        let mut rng = Rng::new(42);
+        let mut theta = vec![0f32; meta.param_count];
+        init_params(&mut rng, &meta.tensors, &mut theta);
+
+        // Backprop step (gradtrain artifact).
+        let mut bp = BackpropTrainer::new(&rt, model, &data, theta.clone(), 0.1, 42)?;
+        bp.step()?; // warm
+        let m_bp = b.run(&format!("table3/backprop_step/{model}"), || bp.step().unwrap());
+
+        // MGD step (fused window, amortized).
+        let cfg = MgdConfig { eta: 0.05, amplitude: 0.01, seed: 42, ..Default::default() };
+        let mut tr = OnChipTrainer::new(&rt, model, &data, theta, cfg)?;
+        let m_w = b.run(&format!("table3/mgd_window/{model}"), || tr.window().unwrap()[0]);
+        let mgd_step = m_w.median / meta.scan_steps as f64;
+
+        // Paper hardware projections: HW3 τp = 200 ps, HW1 τp = 1 ms.
+        let hw3 = paper_steps * 200e-12;
+        let hw1 = paper_steps * 1e-3;
+        println!(
+            "{:<12} {:>14} {:>14} {:>18} {:>16}",
+            model,
+            fmt_time(m_bp.median),
+            fmt_time(mgd_step),
+            fmt_time(hw3),
+            fmt_time(hw1)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,154 @@
+//! Micro-benchmark harness — the in-repo substrate replacing criterion
+//! (offline build; see Cargo.toml).
+//!
+//! Warmup, adaptive iteration counts, and robust statistics (median +
+//! median absolute deviation).  Benches are plain `fn main()` binaries
+//! (`[[bench]] harness = false`) that call [`Bench::run`].
+
+use std::time::{Duration, Instant};
+
+/// One benchmark group with shared settings.
+pub struct Bench {
+    /// Minimum measured wall-clock per sample batch.
+    pub min_sample_time: Duration,
+    /// Number of sample batches collected per benchmark.
+    pub samples: usize,
+    /// Warmup duration.
+    pub warmup: Duration,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            min_sample_time: Duration::from_millis(200),
+            samples: 10,
+            warmup: Duration::from_millis(300),
+        }
+    }
+}
+
+/// Result of one benchmark.
+#[derive(Debug, Clone, Copy)]
+pub struct Measurement {
+    /// Median time per iteration (seconds).
+    pub median: f64,
+    /// Median absolute deviation (seconds).
+    pub mad: f64,
+    /// Total iterations measured.
+    pub iters: u64,
+}
+
+impl Measurement {
+    /// Iterations per second at the median.
+    pub fn throughput(&self) -> f64 {
+        1.0 / self.median
+    }
+}
+
+/// Render seconds/iteration in a readable unit.
+pub fn fmt_time(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} us", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.3} ms", secs * 1e3)
+    } else {
+        format!("{:.3} s", secs)
+    }
+}
+
+impl Bench {
+    /// Quick preset for expensive end-to-end benches.
+    pub fn quick() -> Self {
+        Bench {
+            min_sample_time: Duration::from_millis(100),
+            samples: 5,
+            warmup: Duration::from_millis(100),
+        }
+    }
+
+    /// Run `f` repeatedly, print a criterion-style line, return stats.
+    ///
+    /// `f` performs ONE logical iteration per call and returns a value
+    /// that is black-boxed to prevent dead-code elimination.
+    pub fn run<R, F: FnMut() -> R>(&self, name: &str, mut f: F) -> Measurement {
+        // Warmup + calibration: how many iters fit in min_sample_time?
+        let warm_start = Instant::now();
+        let mut warm_iters = 0u64;
+        while warm_start.elapsed() < self.warmup || warm_iters == 0 {
+            std::hint::black_box(f());
+            warm_iters += 1;
+        }
+        let per_iter = warm_start.elapsed().as_secs_f64() / warm_iters as f64;
+        let batch = ((self.min_sample_time.as_secs_f64() / per_iter).ceil() as u64).max(1);
+
+        let mut sample_times = Vec::with_capacity(self.samples);
+        let mut total_iters = 0u64;
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..batch {
+                std::hint::black_box(f());
+            }
+            sample_times.push(t0.elapsed().as_secs_f64() / batch as f64);
+            total_iters += batch;
+        }
+        sample_times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = sample_times[sample_times.len() / 2];
+        let mut devs: Vec<f64> = sample_times.iter().map(|t| (t - median).abs()).collect();
+        devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mad = devs[devs.len() / 2];
+        let m = Measurement { median, mad, iters: total_iters };
+        println!(
+            "bench {name:<44} {:>12}/iter (±{}, {} iters, {:.1} iter/s)",
+            fmt_time(m.median),
+            fmt_time(m.mad),
+            m.iters,
+            m.throughput()
+        );
+        m
+    }
+
+    /// Run a one-shot measurement (for long end-to-end runs where
+    /// repetition is impractical): times a single call of `f`.
+    pub fn once<R, F: FnOnce() -> R>(&self, name: &str, f: F) -> (R, f64) {
+        let t0 = Instant::now();
+        let r = std::hint::black_box(f());
+        let secs = t0.elapsed().as_secs_f64();
+        println!("bench {name:<44} {:>12} (single run)", fmt_time(secs));
+        (r, secs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_a_known_sleep() {
+        let b = Bench {
+            min_sample_time: Duration::from_millis(5),
+            samples: 3,
+            warmup: Duration::from_millis(2),
+        };
+        let m = b.run("sleep_1ms", || std::thread::sleep(Duration::from_millis(1)));
+        assert!(m.median > 0.0008 && m.median < 0.01, "median {}", m.median);
+        assert!(m.iters >= 3);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(3e-9).ends_with("ns"));
+        assert!(fmt_time(3e-6).ends_with("us"));
+        assert!(fmt_time(3e-3).ends_with("ms"));
+        assert!(fmt_time(3.0).ends_with(" s"));
+    }
+
+    #[test]
+    fn once_returns_value() {
+        let b = Bench::quick();
+        let (v, secs) = b.once("trivial", || 41 + 1);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+}

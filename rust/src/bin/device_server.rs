@@ -1,0 +1,86 @@
+//! `mgd-device-server` — standalone chip-in-the-loop device host.
+//!
+//! Runs a hardware device (native defective-MLP simulator or the PJRT
+//! AOT model) behind the TCP protocol of `mgd::device::protocol`, so a
+//! separate `mgd train --mode loop --device remote:ADDR` process — or a
+//! different machine — can train it exactly as the paper's external
+//! computer trains a lab chip (§6).
+//!
+//! ```text
+//! mgd-device-server --model nist744 --device native --defects 0.1 \
+//!                   --addr 127.0.0.1:7171
+//! ```
+
+use anyhow::{bail, Result};
+
+use mgd::cli::Args;
+use mgd::device::{server, HardwareDevice, NativeDevice, PjrtDevice};
+use mgd::noise::NeuronDefects;
+use mgd::optim::{init_params, init_params_uniform};
+use mgd::rng::Rng;
+use mgd::runtime::Runtime;
+
+const USAGE: &str = "\
+mgd-device-server — serve a hardware device over TCP
+
+OPTIONS:
+  --model M         xor221 | parity441 | nist744 | fmnist_cnn | cifar_cnn
+  --device D        native | pjrt                  (default native)
+  --defects F       activation-defect strength σ_a (native only, Fig. 10)
+  --addr A          listen address                 (default 127.0.0.1:7171)
+  --max-sessions N  exit after N sessions          (default: serve forever)
+  --seed N          init + defect seed             (default 42)
+";
+
+fn mlp_layers(model: &str) -> Result<Vec<usize>> {
+    Ok(match model {
+        "xor221" => vec![2, 2, 1],
+        "parity441" => vec![4, 4, 1],
+        "nist744" => vec![49, 4, 4],
+        other => bail!("model {other:?} has no native MLP form; use --device pjrt"),
+    })
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1), &["help"])?;
+    if args.has_flag("help") {
+        print!("{USAGE}");
+        return Ok(());
+    }
+    args.check_known(&["model", "device", "defects", "addr", "max-sessions", "seed", "help"])?;
+    let model = args.str_or("model", "xor221");
+    let seed = args.u64_or("seed", 42)?;
+    let defects = args.f32_or("defects", 0.0)?;
+
+    let dev: Box<dyn HardwareDevice> = match args.str_or("device", "native").as_str() {
+        "native" => {
+            let layers = mlp_layers(&model)?;
+            let n_neurons: usize = layers[1..].iter().sum();
+            let mut rng = Rng::new(seed);
+            let table = if defects > 0.0 {
+                NeuronDefects::sample(n_neurons, defects, &mut rng)
+            } else {
+                NeuronDefects::identity(n_neurons)
+            };
+            let mut dev = NativeDevice::with_defects(&layers, 1, table);
+            let mut theta = vec![0f32; dev.n_params()];
+            init_params_uniform(&mut rng, &mut theta, 1.0);
+            dev.set_params(&theta)?;
+            Box::new(dev)
+        }
+        "pjrt" => {
+            let rt = Runtime::new(mgd::find_artifact_dir()?)?;
+            let meta = rt.manifest.model(&model)?.clone();
+            let mut dev = PjrtDevice::new(&rt, &model)?;
+            let mut rng = Rng::new(seed);
+            let mut theta = vec![0f32; meta.param_count];
+            init_params(&mut rng, &meta.tensors, &mut theta);
+            dev.set_params(&theta)?;
+            Box::new(dev)
+        }
+        other => bail!("unknown device {other:?}"),
+    };
+    let max_sessions = args.usize_or("max-sessions", 0)?;
+    let max = if max_sessions == 0 { None } else { Some(max_sessions) };
+    server::serve(dev, &args.str_or("addr", "127.0.0.1:7171"), max)
+}

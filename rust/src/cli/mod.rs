@@ -1,0 +1,138 @@
+//! Minimal command-line argument parser — the in-repo substrate replacing
+//! clap (offline build; see Cargo.toml).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and
+//! positional arguments, with typed getters and collected error messages.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed arguments: options map + positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    ///
+    /// `bool_flags` lists options that take no value (e.g. `--help`).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I, bool_flags: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut iter = args.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if bool_flags.contains(&name) {
+                    out.flags.push(name.to_string());
+                } else {
+                    let value = iter
+                        .next()
+                        .with_context(|| format!("option --{name} requires a value"))?;
+                    out.opts.insert(name.to_string(), value);
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            Some(v) => v.parse().with_context(|| format!("--{name} expects an integer, got {v:?}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        Ok(self.u64_or(name, default as u64)? as usize)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            Some(v) => v.parse().with_context(|| format!("--{name} expects a number, got {v:?}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn f32_or(&self, name: &str, default: f32) -> Result<f32> {
+        Ok(self.f64_or(name, default as f64)? as f32)
+    }
+
+    /// Fail on unknown options (typo guard): every provided option must be
+    /// in `known`.
+    pub fn check_known(&self, known: &[&str]) -> Result<()> {
+        for k in self.opts.keys() {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown option --{k}; known options: {known:?}");
+            }
+        }
+        for f in &self.flags {
+            if !known.contains(&f.as_str()) {
+                bail!("unknown flag --{f}; known options: {known:?}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()), &["verbose", "help"]).unwrap()
+    }
+
+    #[test]
+    fn mixed_forms() {
+        let a = parse(&["run", "--steps", "100", "--eta=0.5", "--verbose", "fig4"]);
+        assert_eq!(a.positional(), &["run", "fig4"]);
+        assert_eq!(a.u64_or("steps", 0).unwrap(), 100);
+        assert_eq!(a.f64_or("eta", 0.0).unwrap(), 0.5);
+        assert!(a.has_flag("verbose"));
+        assert!(!a.has_flag("help"));
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = parse(&["--steps", "abc"]);
+        assert!(a.u64_or("steps", 1).is_err());
+        assert_eq!(a.u64_or("missing", 7).unwrap(), 7);
+        assert_eq!(a.str_or("mode", "onchip"), "onchip");
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        let r = Args::parse(["--steps".to_string()].into_iter(), &[]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn unknown_option_guard() {
+        let a = parse(&["--steps", "5"]);
+        assert!(a.check_known(&["steps"]).is_ok());
+        assert!(a.check_known(&["eta"]).is_err());
+    }
+}

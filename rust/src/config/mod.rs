@@ -1,0 +1,160 @@
+//! Experiment run context and JSON configuration overrides.
+//!
+//! Every experiment harness has compiled-in defaults reproducing the
+//! paper's settings (scaled for a CPU testbed; see DESIGN.md §3) and can
+//! be overridden by `configs/<experiment>.json` (parsed by the in-repo
+//! [`crate::json`] substrate).  The [`RunContext`] carries what every
+//! harness needs: artifact/results directories, the global seed, and a
+//! `scale` knob that uniformly shrinks/extends step budgets and replica
+//! counts.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::json::Json;
+
+/// Shared context for an experiment run.
+#[derive(Debug, Clone)]
+pub struct RunContext {
+    /// Directory with `manifest.json` + `*.hlo.txt` (from `make artifacts`).
+    pub artifact_dir: PathBuf,
+    /// Where CSV outputs go.
+    pub results_dir: PathBuf,
+    /// Directory with optional `<experiment>.json` overrides.
+    pub config_dir: PathBuf,
+    /// Base seed for replica statistics.
+    pub seed: u64,
+    /// Budget scale: 1.0 = the defaults; 0.1 = a 10× faster smoke run.
+    pub scale: f64,
+}
+
+impl RunContext {
+    /// Standard context rooted at the repo layout.
+    pub fn new(artifact_dir: PathBuf, results_dir: PathBuf, config_dir: PathBuf) -> Self {
+        RunContext { artifact_dir, results_dir, config_dir, seed: 42, scale: 1.0 }
+    }
+
+    /// Scale a step/replica budget, keeping at least `min`.
+    pub fn scaled(&self, base: u64, min: u64) -> u64 {
+        ((base as f64 * self.scale).round() as u64).max(min)
+    }
+
+    /// Path for a result CSV.
+    pub fn result_path(&self, name: &str) -> PathBuf {
+        self.results_dir.join(name)
+    }
+
+    /// Load the override table for an experiment
+    /// (`configs/<name>.json`, absent file → empty overrides).
+    pub fn overrides(&self, name: &str) -> Result<Overrides> {
+        Overrides::load(&self.config_dir.join(format!("{name}.json")))
+    }
+}
+
+/// Typed override lookup over an optional JSON object.
+#[derive(Debug, Clone)]
+pub struct Overrides(Option<Json>);
+
+impl Overrides {
+    pub fn empty() -> Self {
+        Overrides(None)
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        if !path.exists() {
+            return Ok(Overrides(None));
+        }
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading config {path:?}"))?;
+        let json = Json::parse(&text).with_context(|| format!("parsing config {path:?}"))?;
+        json.as_obj().with_context(|| format!("config {path:?} must be a JSON object"))?;
+        Ok(Overrides(Some(json)))
+    }
+
+    fn get(&self, key: &str) -> Option<&Json> {
+        self.0.as_ref().and_then(|j| j.get(key))
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> Result<u64> {
+        self.get(key).map_or(Ok(default), |v| v.as_u64())
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> Result<usize> {
+        self.get(key).map_or(Ok(default), |v| v.as_usize())
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> Result<f64> {
+        self.get(key).map_or(Ok(default), |v| v.as_f64())
+    }
+
+    pub fn f32(&self, key: &str, default: f32) -> Result<f32> {
+        Ok(self.f64(key, default as f64)? as f32)
+    }
+
+    pub fn string(&self, key: &str, default: &str) -> Result<String> {
+        self.get(key).map_or(Ok(default.to_string()), |v| Ok(v.as_str()?.to_string()))
+    }
+
+    pub fn u64_vec(&self, key: &str, default: &[u64]) -> Result<Vec<u64>> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v.as_arr()?.iter().map(|x| x.as_u64()).collect(),
+        }
+    }
+
+    pub fn f32_vec(&self, key: &str, default: &[f32]) -> Result<Vec<f32>> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v.as_arr()?.iter().map(|x| Ok(x.as_f64()? as f32)).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_file(name: &str, content: &str) -> PathBuf {
+        let path = std::env::temp_dir().join(format!(
+            "mgd-config-test-{}-{name}",
+            std::process::id()
+        ));
+        std::fs::write(&path, content).unwrap();
+        path
+    }
+
+    #[test]
+    fn missing_config_gives_defaults() {
+        let o = Overrides::load(Path::new("/nonexistent/x.json")).unwrap();
+        assert_eq!(o.u64("steps", 9).unwrap(), 9);
+        assert_eq!(o.f32("eta", 0.5).unwrap(), 0.5);
+        assert_eq!(o.u64_vec("taus", &[1, 2]).unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn json_overrides_apply() {
+        let path = temp_file("ov.json", r#"{"steps": 500, "eta": 0.25, "taus": [1, 10]}"#);
+        let o = Overrides::load(&path).unwrap();
+        assert_eq!(o.u64("steps", 9).unwrap(), 500);
+        assert_eq!(o.f32("eta", 0.5).unwrap(), 0.25);
+        assert_eq!(o.u64_vec("taus", &[]).unwrap(), vec![1, 10]);
+        assert_eq!(o.usize("missing", 3).unwrap(), 3);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn non_object_config_rejected() {
+        let path = temp_file("bad.json", "[1,2,3]");
+        assert!(Overrides::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn scaling() {
+        let mut ctx = RunContext::new(".".into(), ".".into(), ".".into());
+        ctx.scale = 0.1;
+        assert_eq!(ctx.scaled(1000, 1), 100);
+        assert_eq!(ctx.scaled(5, 10), 10);
+    }
+}

@@ -1,0 +1,256 @@
+//! Algorithm 2 — the continuous-time (analog) MGD loop.
+//!
+//! The analog variant replaces every discrete mechanism with its circuit
+//! equivalent (Fig. 2d, §4.2):
+//!
+//! | discrete (Algorithm 1)        | analog (Algorithm 2)                  |
+//! |-------------------------------|---------------------------------------|
+//! | store C₀, subtract            | highpass filter on C (τ_hp)           |
+//! | accumulate G, reset every τθ  | per-parameter lowpass bank (τθ)       |
+//! | update θ every τθ             | continuous update θ ← θ − ηG every dt |
+//! | discrete perturbation codes   | sinusoidal perturbations (bandwidth Δf)|
+//!
+//! The simulation step `dt` is 1 (one inference time); time constants are
+//! expressed in the same unit.
+
+use anyhow::Result;
+
+use super::schedule::{SampleSchedule, ScheduleKind};
+use super::{TrainOptions, TrainResult};
+use crate::datasets::Dataset;
+use crate::device::HardwareDevice;
+use crate::filters::{Highpass, LowpassBank};
+use crate::noise::NoiseConfig;
+use crate::perturb::{Perturbation, Sinusoidal};
+use crate::rng::Rng;
+
+/// Configuration for the analog loop (Algorithm 2's knobs).
+#[derive(Debug, Clone, Copy)]
+pub struct AnalogConfig {
+    /// τx: timesteps between sample changes.
+    pub tau_x: u64,
+    /// τθ: lowpass (gradient-integration) time constant.
+    pub tau_theta: f64,
+    /// τ_hp: highpass time constant at the cost output.
+    pub tau_hp: f64,
+    /// Perturbation bandwidth Δf expressed through an equivalent τp
+    /// (`Δf = 1/τp`; see §2.2's analog discussion).
+    pub tau_p: u64,
+    /// η: learning rate.
+    pub eta: f32,
+    /// Δθ: perturbation amplitude.
+    pub amplitude: f32,
+    /// Cost/update noise (§3.5).
+    pub noise: NoiseConfig,
+    pub seed: u64,
+}
+
+impl Default for AnalogConfig {
+    fn default() -> Self {
+        AnalogConfig {
+            tau_x: 1,
+            tau_theta: 10.0,
+            tau_hp: 100.0,
+            tau_p: 1,
+            eta: 1.0,
+            amplitude: 0.01,
+            noise: NoiseConfig::none(),
+            seed: 0,
+        }
+    }
+}
+
+/// One analog timestep's observables (for the Fig. 2d trace).
+#[derive(Debug, Clone, Copy)]
+pub struct AnalogStep {
+    pub step: u64,
+    /// Raw cost C(t).
+    pub cost: f32,
+    /// Highpassed cost modulation C̃(t).
+    pub c_tilde: f32,
+}
+
+/// Continuous-time MGD trainer (Algorithm 2) over a black-box device.
+pub struct AnalogTrainer<'d> {
+    dev: &'d mut dyn HardwareDevice,
+    cfg: AnalogConfig,
+    pert: Sinusoidal,
+    schedule: SampleSchedule,
+    dataset: &'d Dataset,
+    highpass: Highpass,
+    lowpass: LowpassBank,
+    g: Vec<f32>,
+    e: Vec<f32>,
+    tt: Vec<f32>,
+    delta: Vec<f32>,
+    rng: Rng,
+    step: u64,
+}
+
+impl<'d> AnalogTrainer<'d> {
+    pub fn new(
+        dev: &'d mut dyn HardwareDevice,
+        dataset: &'d Dataset,
+        cfg: AnalogConfig,
+        schedule_kind: ScheduleKind,
+    ) -> Self {
+        let p = dev.n_params();
+        let batch = dev.batch_size();
+        let schedule = SampleSchedule::new(dataset, batch, schedule_kind, cfg.seed);
+        AnalogTrainer {
+            dev,
+            pert: Sinusoidal::new(p, cfg.amplitude, cfg.tau_p),
+            schedule,
+            dataset,
+            highpass: Highpass::new(cfg.tau_hp, 1.0),
+            lowpass: LowpassBank::new(p, cfg.tau_theta, 1.0),
+            g: vec![0.0; p],
+            e: vec![0.0; p],
+            tt: vec![0.0; p],
+            delta: vec![0.0; p],
+            rng: Rng::new(cfg.seed ^ 0x4d47_4432), // "MGD2"
+            cfg,
+            step: 0,
+        }
+    }
+
+    /// Current (lowpassed) gradient approximation G(t).
+    pub fn gradient(&self) -> &[f32] {
+        &self.g
+    }
+
+    /// Snapshot the device's parameter memory (trace harnesses).
+    pub fn device_params(&mut self) -> Result<Vec<f32>> {
+        self.dev.get_params()
+    }
+
+    /// One dt of Algorithm 2.
+    pub fn step(&mut self) -> Result<AnalogStep> {
+        let t = self.step;
+        // Line 3–4: sample window.
+        if t % self.cfg.tau_x.max(1) == 0 {
+            let idx = self.schedule.next_window();
+            let (xb, yb) = self.dataset.gather(&idx);
+            self.dev.load_batch(&xb, &yb)?;
+        }
+        // Line 5–7: perturbation + perturbed inference + cost.
+        self.pert.fill(t, &mut self.tt);
+        let c = self.dev.cost(Some(&self.tt))? + self.cfg.noise.cost_noise(&mut self.rng);
+        // Line 8: highpass extracts C̃ (no C₀ memory anywhere).
+        let c_tilde = self.highpass.step(c as f64) as f32;
+        // Line 9: instantaneous error signal e(t) = C̃ θ̃ dt / Δθ².
+        let inv_a2 = 1.0 / (self.cfg.amplitude * self.cfg.amplitude);
+        for (e, &tt) in self.e.iter_mut().zip(self.tt.iter()) {
+            *e = c_tilde * tt * inv_a2;
+        }
+        // Line 10: lowpass bank integrates e into G.
+        let e = std::mem::take(&mut self.e);
+        self.lowpass.step(&e, &mut self.g);
+        self.e = e;
+        // Line 11: continuous parameter update.
+        for (d, &g) in self.delta.iter_mut().zip(self.g.iter()) {
+            *d = -self.cfg.eta * g;
+        }
+        self.cfg.noise.apply_update_noise(&mut self.rng, &mut self.delta);
+        self.dev.apply_update(&self.delta)?;
+        self.step += 1;
+        Ok(AnalogStep { step: t, cost: c, c_tilde })
+    }
+
+    /// Run with the shared stopping/recording options.
+    pub fn train(&mut self, opts: &TrainOptions, eval_set: Option<&Dataset>) -> Result<TrainResult> {
+        let eval = eval_set.unwrap_or(self.dataset);
+        let mut result = TrainResult::default();
+        while self.step < opts.max_steps {
+            let out = self.step()?;
+            if opts.record_cost_every > 0 && out.step % opts.record_cost_every == 0 {
+                result.cost_trace.push((out.step, out.cost));
+            }
+            if opts.eval_every > 0 && (out.step + 1) % opts.eval_every == 0 {
+                let (cost, correct) = self.dev.evaluate(&eval.x, &eval.y, eval.n)?;
+                let acc = correct / eval.n as f32;
+                result.eval_trace.push((out.step, cost, acc));
+                let cost_hit = opts.target_cost.is_some_and(|v| cost < v);
+                let acc_hit = opts.target_accuracy.is_some_and(|v| acc >= v);
+                if cost_hit || acc_hit {
+                    result.solved_at = Some(out.step);
+                    break;
+                }
+            }
+        }
+        result.steps_run = self.step;
+        result.cost_evals = self.step;
+        Ok(result)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::xor;
+    use crate::device::NativeDevice;
+    use crate::optim::init_params_uniform;
+
+    #[test]
+    fn analog_loop_reduces_xor_cost() {
+        // Fig. 7's analog configuration solves XOR; we require solid cost
+        // reduction within a modest budget for at least one of two seeds.
+        // Hyper-parameters from the calibration sweep recorded in
+        // EXPERIMENTS.md (amp 0.1, τ_hp 10, η 0.1 solves 7/8 seeds within
+        // 250k steps); the unit test uses 2 seeds and a reduced budget.
+        let data = xor();
+        let mut improved = false;
+        for seed in [0u64, 1] {
+            let mut dev = NativeDevice::new(&[2, 2, 1], 1);
+            let mut theta = vec![0f32; 9];
+            init_params_uniform(&mut Rng::new(seed), &mut theta, 1.0);
+            dev.set_params(&theta).unwrap();
+            let (c_start, _) = dev.evaluate(&data.x, &data.y, data.n).unwrap();
+            let cfg = AnalogConfig {
+                tau_x: 250,
+                tau_theta: 1.0,
+                tau_hp: 10.0,
+                tau_p: 3,
+                eta: 0.1,
+                amplitude: 0.1,
+                seed,
+                ..Default::default()
+            };
+            let mut tr = AnalogTrainer::new(&mut dev, &data, cfg, ScheduleKind::Cyclic);
+            let opts = TrainOptions {
+                max_steps: 120_000,
+                eval_every: 1000,
+                target_cost: Some(0.04),
+                ..Default::default()
+            };
+            let res = tr.train(&opts, None).unwrap();
+            let (c_end, _) = dev.evaluate(&data.x, &data.y, data.n).unwrap();
+            if res.solved() || c_end < 0.6 * c_start {
+                improved = true;
+            }
+        }
+        assert!(improved, "analog MGD failed to reduce cost on both seeds");
+    }
+
+    #[test]
+    fn highpass_keeps_gradient_bounded() {
+        // With a constant input (τx huge) the DC part of C must not leak
+        // into G: after a settling period G stays bounded near zero for a
+        // device at a local minimum (zero-ish perturbation response).
+        let data = xor();
+        let mut dev = NativeDevice::new(&[2, 2, 1], 1);
+        dev.set_params(&[0.0; 9]).unwrap();
+        let cfg = AnalogConfig {
+            tau_x: u64::MAX >> 1,
+            eta: 0.0, // observe only
+            amplitude: 1e-4,
+            ..Default::default()
+        };
+        let mut tr = AnalogTrainer::new(&mut dev, &data, cfg, ScheduleKind::Cyclic);
+        for _ in 0..2000 {
+            tr.step().unwrap();
+        }
+        let gnorm: f32 = tr.gradient().iter().map(|g| g * g).sum::<f32>().sqrt();
+        assert!(gnorm < 1.0, "DC leaked into analog G: |G| = {gnorm}");
+    }
+}

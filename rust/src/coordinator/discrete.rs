@@ -1,0 +1,337 @@
+//! Algorithm 1 — the discrete MGD training loop, step by step.
+//!
+//! This is the reference implementation of the paper's training semantics
+//! and the chip-in-the-loop driver: every timestep costs exactly one
+//! perturbed device inference, plus a baseline (C₀) re-measurement
+//! whenever the sample window or the parameters changed (Algorithm 1
+//! lines 5–7).  All four perturbation families plug in unchanged.
+//!
+//! The trainer exposes a fine-grained [`MgdTrainer::step`] (used by the
+//! Fig. 2/3 trace harnesses and the Fig. 5 infinite-integration mode) and
+//! a batch [`MgdTrainer::train`] loop with the stopping criteria the
+//! paper's experiments use.
+
+use anyhow::Result;
+
+use super::schedule::{SampleSchedule, ScheduleKind};
+use super::{MgdConfig, TrainOptions, TrainResult};
+use crate::datasets::Dataset;
+use crate::device::HardwareDevice;
+use crate::perturb::{self, Perturbation};
+use crate::rng::Rng;
+
+/// What one timestep observed (for trace harnesses).
+#[derive(Debug, Clone, Copy)]
+pub struct StepOutput {
+    /// Global step index (starts at 0).
+    pub step: u64,
+    /// Perturbed cost C measured this step (noise included).
+    pub cost: f32,
+    /// Cost modulation C̃ = C − C₀ used for the homodyne product.
+    pub c_tilde: f32,
+    /// Whether a parameter update fired at the end of this step.
+    pub updated: bool,
+}
+
+/// The discrete MGD trainer (Algorithm 1) over a black-box device.
+pub struct MgdTrainer<'d> {
+    dev: &'d mut dyn HardwareDevice,
+    cfg: MgdConfig,
+    pert: Box<dyn Perturbation>,
+    schedule: SampleSchedule,
+    dataset: &'d Dataset,
+    /// Gradient integrator G (Eq. 3, accumulated — not 1/T-normalized;
+    /// see the paper's footnote 1).
+    g: Vec<f32>,
+    /// Scratch perturbation vector.
+    tt: Vec<f32>,
+    /// Scratch update vector (−ηG + noise).
+    delta: Vec<f32>,
+    /// Reusable batch buffers (hot loop, no per-step allocation).
+    xb: Vec<f32>,
+    yb: Vec<f32>,
+    /// Cached baseline cost C₀ and its validity.
+    c0: f32,
+    c0_valid: bool,
+    step: u64,
+    rng: Rng,
+    cost_evals: u64,
+}
+
+impl<'d> MgdTrainer<'d> {
+    /// Build a trainer.  The device's parameters must already be
+    /// initialized (see [`crate::optim::init_params`]).
+    pub fn new(
+        dev: &'d mut dyn HardwareDevice,
+        dataset: &'d Dataset,
+        cfg: MgdConfig,
+        schedule_kind: ScheduleKind,
+    ) -> Self {
+        let p = dev.n_params();
+        let batch = dev.batch_size();
+        let schedule = SampleSchedule::new(dataset, batch, schedule_kind, cfg.seed);
+        let pert = perturb::make(cfg.kind, p, cfg.amplitude, cfg.tau_p, cfg.seed);
+        MgdTrainer {
+            dev,
+            cfg,
+            pert,
+            schedule,
+            dataset,
+            g: vec![0.0; p],
+            tt: vec![0.0; p],
+            delta: vec![0.0; p],
+            xb: Vec::new(),
+            yb: Vec::new(),
+            c0: 0.0,
+            c0_valid: false,
+            step: 0,
+            rng: Rng::new(cfg.seed ^ 0x4d47_4431), // "MGD1"
+            cost_evals: 0,
+        }
+    }
+
+    /// Current gradient integrator G (Fig. 5 reads this with τθ = ∞).
+    pub fn gradient(&self) -> &[f32] {
+        &self.g
+    }
+
+    /// Steps executed so far.
+    pub fn steps(&self) -> u64 {
+        self.step
+    }
+
+    /// Device cost-evaluations so far (perturbed + baseline).
+    pub fn cost_evals(&self) -> u64 {
+        self.cost_evals
+    }
+
+    /// The configuration in force.
+    pub fn config(&self) -> &MgdConfig {
+        &self.cfg
+    }
+
+    /// Snapshot the device's parameter memory (off-hot-path; trace
+    /// harnesses use this for the Fig. 2/3 θ traces).
+    pub fn device_params(&mut self) -> Result<Vec<f32>> {
+        self.dev.get_params()
+    }
+
+    /// Execute one MGD timestep (Algorithm 1 loop body).
+    pub fn step(&mut self) -> Result<StepOutput> {
+        let n = self.step;
+
+        // Lines 3–4: new training sample window every τx.
+        if n % self.cfg.tau_x.max(1) == 0 {
+            let idx = self.schedule.next_window();
+            self.dataset.gather_into(&idx, &mut self.xb, &mut self.yb);
+            self.dev.load_batch(&self.xb, &self.yb)?;
+            self.c0_valid = false;
+        }
+
+        // Lines 5–7: re-measure the baseline cost C₀ (θ̃ = 0) when the
+        // sample window or the parameters changed.
+        if !self.c0_valid {
+            self.c0 = self.dev.cost(None)? + self.cfg.noise.cost_noise(&mut self.rng);
+            self.cost_evals += 1;
+            self.c0_valid = true;
+        }
+
+        // Lines 8–9: advance the perturbation pattern every τp (the
+        // generator itself holds the pattern within a τp window).
+        self.pert.fill(n, &mut self.tt);
+
+        // Lines 10–12: perturbed inference, cost, modulation.
+        let c = self.dev.cost(Some(&self.tt))? + self.cfg.noise.cost_noise(&mut self.rng);
+        self.cost_evals += 1;
+        let c_tilde = c - self.c0;
+
+        // Lines 13–14: homodyne error signal, accumulated into G.
+        let inv_a2 = 1.0 / (self.cfg.amplitude * self.cfg.amplitude);
+        for (g, &t) in self.g.iter_mut().zip(self.tt.iter()) {
+            *g += c_tilde * t * inv_a2;
+        }
+
+        // Lines 15–17: parameter update every τθ.
+        let updated = self.cfg.tau_theta != u64::MAX
+            && (n + 1) % self.cfg.tau_theta.max(1) == 0;
+        if updated {
+            for (d, &g) in self.delta.iter_mut().zip(self.g.iter()) {
+                *d = -self.cfg.eta * g;
+            }
+            // §3.5 test 2: stochastic parameter-update noise (Eq. 5).
+            self.cfg.noise.apply_update_noise(&mut self.rng, &mut self.delta);
+            self.dev.apply_update(&self.delta)?;
+            self.g.fill(0.0);
+            self.c0_valid = false;
+        }
+
+        self.step += 1;
+        Ok(StepOutput { step: n, cost: c, c_tilde, updated })
+    }
+
+    /// Run the training loop with the given stopping/recording options.
+    /// `eval_set` provides the accuracy probe (defaults to the training
+    /// set for the paper's small problems).
+    pub fn train(&mut self, opts: &TrainOptions, eval_set: Option<&Dataset>) -> Result<TrainResult> {
+        let eval = eval_set.unwrap_or(self.dataset);
+        let mut result = TrainResult::default();
+        while self.step < opts.max_steps {
+            let out = self.step()?;
+            if opts.record_cost_every > 0 && out.step % opts.record_cost_every == 0 {
+                result.cost_trace.push((out.step, out.cost));
+            }
+            let check = opts.eval_every > 0 && (out.step + 1) % opts.eval_every == 0;
+            if check {
+                let (cost, correct) = self.dev.evaluate(&eval.x, &eval.y, eval.n)?;
+                let acc = correct / eval.n as f32;
+                result.eval_trace.push((out.step, cost, acc));
+                let cost_hit = opts.target_cost.is_some_and(|t| cost < t);
+                let acc_hit = opts.target_accuracy.is_some_and(|t| acc >= t);
+                if cost_hit || acc_hit {
+                    result.solved_at = Some(out.step);
+                    break;
+                }
+            }
+        }
+        result.steps_run = self.step;
+        result.cost_evals = self.cost_evals;
+        Ok(result)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::xor;
+    use crate::device::NativeDevice;
+    use crate::optim::init_params_uniform;
+    use crate::perturb::PerturbKind;
+
+    fn xor_device(seed: u64) -> NativeDevice {
+        let mut dev = NativeDevice::new(&[2, 2, 1], 1);
+        let mut rng = Rng::new(seed);
+        let mut theta = vec![0f32; 9];
+        init_params_uniform(&mut rng, &mut theta, 1.0);
+        dev.set_params(&theta).unwrap();
+        dev
+    }
+
+    #[test]
+    fn solves_xor_with_spsa_settings() {
+        // Paper Table 2 row 1: XOR with τθ = τp = 1 and η ≈ 5 solves
+        // reliably within 10⁴ steps.  Use a couple of seeds; at least one
+        // must solve quickly and none may blow up.
+        let data = xor();
+        let mut solved_any = false;
+        for seed in 0..3u64 {
+            let mut dev = xor_device(seed);
+            let cfg = MgdConfig {
+                eta: 2.0,
+                amplitude: 0.05,
+                kind: PerturbKind::RademacherCode,
+                seed,
+                ..Default::default()
+            };
+            let mut tr = MgdTrainer::new(&mut dev, &data, cfg, ScheduleKind::Cyclic);
+            let opts = TrainOptions {
+                max_steps: 60_000,
+                eval_every: 500,
+                target_cost: Some(0.04),
+                ..Default::default()
+            };
+            let res = tr.train(&opts, None).unwrap();
+            assert!(res.steps_run > 0);
+            if res.solved() {
+                solved_any = true;
+            }
+        }
+        assert!(solved_any, "no seed solved XOR within the budget");
+    }
+
+    #[test]
+    fn infinite_tau_theta_never_updates() {
+        let data = xor();
+        let mut dev = xor_device(1);
+        let theta_before = dev.get_params().unwrap();
+        let cfg = MgdConfig { tau_theta: u64::MAX, seed: 1, ..Default::default() };
+        let mut tr = MgdTrainer::new(&mut dev, &data, cfg, ScheduleKind::Cyclic);
+        for _ in 0..100 {
+            let out = tr.step().unwrap();
+            assert!(!out.updated);
+        }
+        assert!(tr.gradient().iter().any(|&g| g != 0.0), "G never accumulated");
+        assert_eq!(dev.get_params().unwrap(), theta_before);
+    }
+
+    #[test]
+    fn gradient_estimate_correlates_with_true_gradient() {
+        // Homodyne G (τθ=∞) must point in the same half-space as the true
+        // gradient after enough integration — the core Eq. 3 property.
+        let data = xor();
+        let mut dev = xor_device(3);
+        let theta = dev.get_params().unwrap();
+        let cfg = MgdConfig {
+            tau_theta: u64::MAX,
+            amplitude: 0.01,
+            seed: 3,
+            ..Default::default()
+        };
+        let mut tr = MgdTrainer::new(&mut dev, &data, cfg, ScheduleKind::Cyclic);
+        for _ in 0..4000 {
+            tr.step().unwrap();
+        }
+        let g = tr.gradient().to_vec();
+        // Finite-difference true gradient of the mean dataset cost.
+        let mut true_g = vec![0f32; 9];
+        let eps = 1e-3f32;
+        let mut dev2 = NativeDevice::new(&[2, 2, 1], 4);
+        dev2.set_params(&theta).unwrap();
+        dev2.load_batch(&data.x, &data.y).unwrap();
+        let base = dev2.cost(None).unwrap();
+        for i in 0..9 {
+            let mut tt = vec![0f32; 9];
+            tt[i] = eps;
+            true_g[i] = (dev2.cost(Some(&tt)).unwrap() - base) / eps;
+        }
+        let dot: f32 = g.iter().zip(&true_g).map(|(a, b)| a * b).sum();
+        let na: f32 = g.iter().map(|v| v * v).sum::<f32>().sqrt();
+        let nb: f32 = true_g.iter().map(|v| v * v).sum::<f32>().sqrt();
+        let cos = dot / (na * nb);
+        assert!(cos > 0.5, "G misaligned with true gradient: cos = {cos}");
+    }
+
+    #[test]
+    fn tau_theta_controls_update_cadence() {
+        let data = xor();
+        let mut dev = xor_device(2);
+        let cfg = MgdConfig { tau_theta: 5, seed: 2, ..Default::default() };
+        let mut tr = MgdTrainer::new(&mut dev, &data, cfg, ScheduleKind::Cyclic);
+        let mut updates = Vec::new();
+        for _ in 0..20 {
+            let out = tr.step().unwrap();
+            if out.updated {
+                updates.push(out.step);
+            }
+        }
+        assert_eq!(updates, vec![4, 9, 14, 19]);
+    }
+
+    #[test]
+    fn cost_evals_track_baseline_caching() {
+        let data = xor();
+        let mut dev = xor_device(4);
+        // τx = 10, τθ = MAX: baseline measured once per sample window.
+        let cfg = MgdConfig {
+            tau_x: 10,
+            tau_theta: u64::MAX,
+            seed: 4,
+            ..Default::default()
+        };
+        let mut tr = MgdTrainer::new(&mut dev, &data, cfg, ScheduleKind::Cyclic);
+        for _ in 0..20 {
+            tr.step().unwrap();
+        }
+        // 20 perturbed + 2 baselines (steps 0 and 10).
+        assert_eq!(tr.cost_evals(), 22);
+    }
+}

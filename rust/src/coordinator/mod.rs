@@ -1,0 +1,157 @@
+//! The MGD coordination layer — the paper's system contribution.
+//!
+//! Three training drivers share the same configuration language (the three
+//! time constants of §2.2) and the same black-box device interface:
+//!
+//! - [`discrete`] — Algorithm 1, literally: one device cost-evaluation per
+//!   timestep, baseline-cost caching, any perturbation family.  This is
+//!   the *chip-in-the-loop* mode and the reference semantics.
+//! - [`analog`] — Algorithm 2: continuous-time emulation with sinusoidal
+//!   perturbations, a highpass filter extracting C̃ at the output and a
+//!   per-parameter lowpass bank integrating G (Fig. 2d).
+//! - [`onchip`] — the fused `mgd_scan` artifact: whole τθ-windows of
+//!   Algorithm 1 execute inside one PJRT call (the paper's §6 "local,
+//!   autonomous circuits" end state).  Identical update rule; this is the
+//!   performance path used for the Table 2 datasets.
+//!
+//! [`schedule`] owns the τx clock (when samples change) and batch
+//! assembly; [`replica`] fans a training run across many random
+//! initializations for the paper's statistics.
+
+pub mod analog;
+pub mod discrete;
+pub mod onchip;
+pub mod replica;
+pub mod schedule;
+
+pub use analog::AnalogTrainer;
+pub use discrete::{MgdTrainer, StepOutput};
+pub use onchip::OnChipTrainer;
+pub use replica::{converged_fraction, replica_stats, solve_times, ReplicaOutcome};
+pub use schedule::{SampleSchedule, ScheduleKind};
+
+use crate::noise::NoiseConfig;
+use crate::perturb::PerturbKind;
+
+/// The MGD hyper-parameters of §2.2 — three time constants plus the
+/// perturbation family, learning rate and amplitude.
+#[derive(Debug, Clone, Copy)]
+pub struct MgdConfig {
+    /// τx: timesteps between training-sample changes.
+    pub tau_x: u64,
+    /// τθ: timesteps between parameter updates (gradient-integration time).
+    /// `u64::MAX` = integrate forever (Fig. 5 mode).
+    pub tau_theta: u64,
+    /// τp: timesteps between perturbation-pattern changes.
+    pub tau_p: u64,
+    /// η: learning rate (Eq. 4).
+    pub eta: f32,
+    /// Δθ: perturbation amplitude.
+    pub amplitude: f32,
+    /// Perturbation family (Fig. 1c).
+    pub kind: PerturbKind,
+    /// Hardware noise injection (§3.5).
+    pub noise: NoiseConfig,
+    /// Seed for perturbations, schedules and noise.
+    pub seed: u64,
+}
+
+impl Default for MgdConfig {
+    fn default() -> Self {
+        MgdConfig {
+            tau_x: 1,
+            tau_theta: 1,
+            tau_p: 1,
+            eta: 1.0,
+            amplitude: 0.01,
+            kind: PerturbKind::RademacherCode,
+            noise: NoiseConfig::none(),
+            seed: 0,
+        }
+    }
+}
+
+impl MgdConfig {
+    /// Effective batch size as defined in §2.2: τθ/τx (how many distinct
+    /// sample windows are integrated into one update), floored at 1.
+    pub fn effective_batch_ratio(&self) -> u64 {
+        if self.tau_theta == u64::MAX {
+            return u64::MAX;
+        }
+        (self.tau_theta / self.tau_x.max(1)).max(1)
+    }
+}
+
+/// Stopping / recording options shared by all trainers.
+#[derive(Debug, Clone)]
+pub struct TrainOptions {
+    /// Hard step budget.
+    pub max_steps: u64,
+    /// Record the observed (perturbed) cost every k steps (0 = never).
+    pub record_cost_every: u64,
+    /// Evaluate on the eval set every k steps (0 = never).
+    pub eval_every: u64,
+    /// Stop once the *full-dataset* cost falls below this (Fig. 6/7's
+    /// "solved" criterion, checked at `eval_every` cadence).
+    pub target_cost: Option<f32>,
+    /// Stop once eval accuracy reaches this fraction (Fig. 8's criterion).
+    pub target_accuracy: Option<f32>,
+}
+
+impl Default for TrainOptions {
+    fn default() -> Self {
+        TrainOptions {
+            max_steps: 100_000,
+            record_cost_every: 0,
+            eval_every: 0,
+            target_cost: None,
+            target_accuracy: None,
+        }
+    }
+}
+
+/// Output of a training run.
+#[derive(Debug, Clone, Default)]
+pub struct TrainResult {
+    /// Steps actually executed.
+    pub steps_run: u64,
+    /// Step at which the target criterion was met, if it was.
+    pub solved_at: Option<u64>,
+    /// (step, observed cost) samples.
+    pub cost_trace: Vec<(u64, f32)>,
+    /// (step, eval cost, eval accuracy) samples.
+    pub eval_trace: Vec<(u64, f32, f32)>,
+    /// Total device cost-evaluations (perturbed + baseline measurements) —
+    /// the paper's hardware-time unit.
+    pub cost_evals: u64,
+}
+
+impl TrainResult {
+    /// Final recorded accuracy, if any eval ran.
+    pub fn final_accuracy(&self) -> Option<f32> {
+        self.eval_trace.last().map(|&(_, _, acc)| acc)
+    }
+
+    /// Whether the run met its target.
+    pub fn solved(&self) -> bool {
+        self.solved_at.is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_ratio() {
+        let mut cfg = MgdConfig { tau_theta: 4, tau_x: 1, ..Default::default() };
+        assert_eq!(cfg.effective_batch_ratio(), 4);
+        cfg.tau_x = 4;
+        assert_eq!(cfg.effective_batch_ratio(), 1);
+        cfg.tau_theta = u64::MAX;
+        assert_eq!(cfg.effective_batch_ratio(), u64::MAX);
+        cfg.tau_theta = 1;
+        cfg.tau_x = 250;
+        assert_eq!(cfg.effective_batch_ratio(), 1, "floors at 1");
+    }
+}

@@ -1,0 +1,236 @@
+//! The fused on-chip MGD driver — the performance path.
+//!
+//! The paper's end state (§6) is MGD implemented "directly on-chip with
+//! local, autonomous circuits": the hardware runs whole stretches of
+//! Algorithm 1 by itself, and the external coordinator only sets
+//! hyper-parameters, streams data and reads telemetry.  Here the "chip"
+//! is the `mgd_scan` AOT artifact: one PJRT call executes T complete MGD
+//! timesteps (perturb → measure → homodyne-integrate → update) with the
+//! L1 Pallas homodyne kernel inside the loop body.
+//!
+//! The coordinator keeps the training dataset **resident on the device**
+//! ([`crate::runtime::Arg::Resident`]) and ships only the parameter bus,
+//! the PRNG seed and the per-window sample schedule per call — the
+//! host↔device traffic pattern a real autonomous trainer would have
+//! (EXPERIMENTS.md §Perf quantifies the win over per-step calls).
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::schedule::{SampleSchedule, ScheduleKind};
+use super::{MgdConfig, TrainOptions, TrainResult};
+use crate::datasets::Dataset;
+use crate::runtime::{Arg, Executable, ResidentBuffer, Runtime, Value};
+
+/// Fused-window MGD trainer over a `mgd_scan` artifact.
+pub struct OnChipTrainer<'r> {
+    rt: &'r Runtime,
+    scan_exe: Arc<Executable>,
+    eval_exe: Arc<Executable>,
+    /// Parameter bus (host copy; authoritative between windows).
+    pub theta: Vec<f32>,
+    /// Gradient integrator carried across windows.
+    g: Vec<f32>,
+    x_buf: ResidentBuffer,
+    y_buf: ResidentBuffer,
+    schedule: SampleSchedule,
+    cfg: MgdConfig,
+    /// T: steps per window (artifact-static).
+    window_steps: usize,
+    /// B: samples per step (artifact-static).
+    scan_batch: usize,
+    eval_batch: usize,
+    input_shape: Vec<usize>,
+    n_outputs: usize,
+    steps: u64,
+    window_ctr: u32,
+}
+
+impl<'r> OnChipTrainer<'r> {
+    /// Build a trainer for `model`.  `dataset` is resized (round-robin) to
+    /// the artifact's static resident size; `theta` is the initial bus.
+    pub fn new(
+        rt: &'r Runtime,
+        model: &str,
+        dataset: &Dataset,
+        theta: Vec<f32>,
+        cfg: MgdConfig,
+    ) -> Result<Self> {
+        let meta = rt.manifest.model(model)?.clone();
+        if theta.len() != meta.param_count {
+            bail!("theta has {} params, model {model} needs {}", theta.len(), meta.param_count);
+        }
+        let scan_exe = rt
+            .executable(&format!("{model}_mgd_scan"))
+            .with_context(|| format!("loading mgd_scan artifact for {model}"))?;
+        let eval_exe = rt.executable(&format!("{model}_eval"))?;
+        let resident = dataset.resize_to(meta.scan_dataset_n);
+        let mut x_shape = vec![meta.scan_dataset_n];
+        x_shape.extend_from_slice(&meta.input_shape);
+        let x_buf = rt.upload(&Value::f32(resident.x.clone(), &x_shape))?;
+        let y_buf = rt.upload(&Value::f32(
+            resident.y.clone(),
+            &[meta.scan_dataset_n, meta.n_outputs],
+        ))?;
+        let schedule =
+            SampleSchedule::new(&resident, meta.scan_batch, ScheduleKind::Cyclic, cfg.seed);
+        let p = meta.param_count;
+        Ok(OnChipTrainer {
+            rt,
+            scan_exe,
+            eval_exe,
+            theta,
+            g: vec![0.0; p],
+            x_buf,
+            y_buf,
+            schedule,
+            cfg,
+            window_steps: meta.scan_steps,
+            scan_batch: meta.scan_batch,
+            eval_batch: meta.batch_eval,
+            input_shape: meta.input_shape.clone(),
+            n_outputs: meta.n_outputs,
+            steps: 0,
+            window_ctr: 0,
+        })
+    }
+
+    /// Total MGD timesteps executed.
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    /// Steps per fused window (the artifact's T).
+    pub fn window_steps(&self) -> usize {
+        self.window_steps
+    }
+
+    /// Current gradient integrator.
+    pub fn gradient(&self) -> &[f32] {
+        &self.g
+    }
+
+    /// Run one fused window of T MGD steps; returns the per-step observed
+    /// (perturbed) costs.
+    pub fn window(&mut self) -> Result<Vec<f32>> {
+        let p = self.theta.len();
+        let idx = self.schedule.window_tensor(self.window_steps, self.cfg.tau_x);
+        let tau_theta: i32 = if self.cfg.tau_theta == u64::MAX {
+            i32::MAX
+        } else {
+            self.cfg.tau_theta.min(i32::MAX as u64) as i32
+        };
+        // Window seed: decorrelated per window but reproducible per run.
+        let seed = self
+            .cfg
+            .seed
+            .wrapping_mul(0x9E37_79B9)
+            .wrapping_add(self.window_ctr as u64) as u32;
+        let out = self.scan_exe.run_mixed(
+            self.rt.client(),
+            &[
+                Arg::Host(Value::f32(self.theta.clone(), &[p])),
+                Arg::Host(Value::f32(self.g.clone(), &[p])),
+                Arg::Host(Value::scalar_u32(seed)),
+                Arg::Host(Value::scalar_f32(self.cfg.eta)),
+                Arg::Host(Value::scalar_f32(self.cfg.amplitude)),
+                Arg::Host(Value::scalar_f32(self.cfg.noise.sigma_cost)),
+                Arg::Host(Value::scalar_f32(self.cfg.noise.sigma_update)),
+                Arg::Host(Value::scalar_i32(tau_theta)),
+                Arg::Host(Value::scalar_i32((self.steps % i32::MAX as u64) as i32)),
+                Arg::Resident(&self.x_buf),
+                Arg::Resident(&self.y_buf),
+                Arg::Host(Value::i32(idx, &[self.window_steps, self.scan_batch])),
+            ],
+        )?;
+        self.theta = out[0].as_f32()?.to_vec();
+        self.g = out[1].as_f32()?.to_vec();
+        let costs = out[2].as_f32()?.to_vec();
+        self.steps += self.window_steps as u64;
+        self.window_ctr += 1;
+        Ok(costs)
+    }
+
+    /// Evaluate (mean cost, accuracy) on a labelled set via the eval
+    /// artifact, chunked to its static batch.
+    pub fn evaluate(&self, eval: &Dataset) -> Result<(f32, f32)> {
+        evaluate_chunked(
+            &self.eval_exe,
+            &self.theta,
+            eval,
+            self.eval_batch,
+            &self.input_shape,
+            self.n_outputs,
+        )
+    }
+
+    /// Run whole windows until `opts.max_steps` (rounded up to a window)
+    /// or a target criterion fires.
+    pub fn train(&mut self, opts: &TrainOptions, eval_set: &Dataset) -> Result<TrainResult> {
+        let mut result = TrainResult::default();
+        while self.steps < opts.max_steps {
+            let costs = self.window()?;
+            if opts.record_cost_every > 0 {
+                let start = self.steps - costs.len() as u64;
+                for (i, &c) in costs.iter().enumerate() {
+                    let step = start + i as u64;
+                    if step % opts.record_cost_every == 0 {
+                        result.cost_trace.push((step, c));
+                    }
+                }
+            }
+            let eval_due = opts.eval_every > 0
+                && (self.steps / opts.eval_every) > ((self.steps - self.window_steps as u64) / opts.eval_every);
+            if eval_due {
+                let (cost, correct) = self.evaluate(eval_set)?;
+                let acc = correct / eval_set.n as f32;
+                result.eval_trace.push((self.steps, cost, acc));
+                let cost_hit = opts.target_cost.is_some_and(|t| cost < t);
+                let acc_hit = opts.target_accuracy.is_some_and(|t| acc >= t);
+                if cost_hit || acc_hit {
+                    result.solved_at = Some(self.steps);
+                    break;
+                }
+            }
+        }
+        result.steps_run = self.steps;
+        // Two device inferences per fused step (C0 + perturbed).
+        result.cost_evals = 2 * self.steps;
+        Ok(result)
+    }
+}
+
+/// Shared chunked-eval helper (also used by experiment harnesses).
+pub fn evaluate_chunked(
+    exe: &Executable,
+    theta: &[f32],
+    eval: &Dataset,
+    batch: usize,
+    input_shape: &[usize],
+    n_outputs: usize,
+) -> Result<(f32, f32)> {
+    let p = theta.len();
+    let mut shape = vec![batch];
+    shape.extend_from_slice(input_shape);
+    let mut total_cost = 0f64;
+    let mut total_correct = 0f64;
+    let mut done = 0usize;
+    while done < eval.n {
+        let take = (eval.n - done).min(batch);
+        let idx: Vec<usize> = (0..batch).map(|j| done + (j % take)).collect();
+        let (xb, yb) = eval.gather(&idx);
+        let out = exe.run(&[
+            Value::f32(theta.to_vec(), &[p]),
+            Value::f32(xb, &shape),
+            Value::f32(yb, &[batch, n_outputs]),
+        ])?;
+        total_cost += out[0].to_scalar_f32()? as f64 * take as f64;
+        total_correct += out[1].to_scalar_f32()? as f64 * take as f64 / batch as f64;
+        done += take;
+    }
+    Ok((
+        (total_cost / eval.n as f64) as f32,
+        total_correct as f32,
+    ))
+}

@@ -1,0 +1,100 @@
+//! Replica statistics: fan a training run across many random seeds.
+//!
+//! Every figure in the paper reports statistics over random network
+//! initializations (100–1000 replicas).  Each replica here gets an
+//! independent seed (init, perturbations, schedule, noise) and runs in
+//! parallel via the in-repo scoped-thread pool — NativeDevice replicas are embarrassingly parallel;
+//! PJRT-backed runs should use `parallel = false` (the CPU client is a
+//! shared, internally-threaded resource).
+
+use anyhow::Result;
+
+use super::TrainResult;
+use crate::par::parallel_map;
+
+/// One replica's outcome.
+#[derive(Debug, Clone)]
+pub struct ReplicaOutcome {
+    pub seed: u64,
+    pub result: TrainResult,
+}
+
+/// Run `n_replicas` independent trainings of `run(seed)`.
+///
+/// Replica seeds are `base_seed + i`.  Failures propagate (a replica
+/// erroring is a bug, not a statistic).
+pub fn replica_stats<F>(
+    n_replicas: usize,
+    base_seed: u64,
+    parallel: bool,
+    run: F,
+) -> Result<Vec<ReplicaOutcome>>
+where
+    F: Fn(u64) -> Result<TrainResult> + Sync + Send,
+{
+    let seeds: Vec<u64> = (0..n_replicas as u64).map(|i| base_seed + i).collect();
+    if parallel {
+        parallel_map(&seeds, |_, &seed| run(seed).map(|result| ReplicaOutcome { seed, result }))
+            .into_iter()
+            .collect()
+    } else {
+        seeds
+            .iter()
+            .map(|&seed| Ok(ReplicaOutcome { seed, result: run(seed)? }))
+            .collect()
+    }
+}
+
+/// Fraction of replicas that met their target.
+pub fn converged_fraction(outcomes: &[ReplicaOutcome]) -> f64 {
+    if outcomes.is_empty() {
+        return 0.0;
+    }
+    outcomes.iter().filter(|o| o.result.solved()).count() as f64 / outcomes.len() as f64
+}
+
+/// Solve times (steps) of the replicas that converged.
+pub fn solve_times(outcomes: &[ReplicaOutcome]) -> Vec<u64> {
+    let mut times: Vec<u64> =
+        outcomes.iter().filter_map(|o| o.result.solved_at).collect();
+    times.sort_unstable();
+    times
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake(solved_at: Option<u64>) -> TrainResult {
+        TrainResult { solved_at, steps_run: 100, ..Default::default() }
+    }
+
+    #[test]
+    fn stats_aggregate() {
+        let outcomes = replica_stats(4, 10, true, |seed| {
+            Ok(fake(if seed % 2 == 0 { Some(seed * 10) } else { None }))
+        })
+        .unwrap();
+        assert_eq!(outcomes.len(), 4);
+        assert_eq!(converged_fraction(&outcomes), 0.5);
+        assert_eq!(solve_times(&outcomes), vec![100, 120]);
+    }
+
+    #[test]
+    fn seeds_are_distinct_and_ordered() {
+        let outcomes = replica_stats(3, 5, false, |seed| Ok(fake(Some(seed)))).unwrap();
+        let seeds: Vec<u64> = outcomes.iter().map(|o| o.seed).collect();
+        assert_eq!(seeds, vec![5, 6, 7]);
+    }
+
+    #[test]
+    fn errors_propagate() {
+        let res = replica_stats(2, 0, false, |seed| {
+            if seed == 1 {
+                anyhow::bail!("boom");
+            }
+            Ok(fake(None))
+        });
+        assert!(res.is_err());
+    }
+}

@@ -1,0 +1,135 @@
+//! The τx clock: which samples the hardware sees at each timestep.
+//!
+//! §2.2: "τx controls how often new training samples are shown to the
+//! hardware" — and via the ratio τθ/τx it implements mini-batching on
+//! hardware that only accepts one sample at a time (Fig. 3).  For devices
+//! with native input parallelism B > 1 (Table 2's batch-1000 CNN rows),
+//! each window is a B-sample batch instead of a single sample.
+
+use crate::datasets::Dataset;
+use crate::rng::Rng;
+
+/// How sample windows walk the dataset.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScheduleKind {
+    /// Deterministic round-robin (the paper's Fig. 3 ordering).
+    Cyclic,
+    /// Uniform random batches with replacement (SGD-style).
+    Random,
+}
+
+/// Sample scheduler: produces the index window for each τx period.
+#[derive(Debug, Clone)]
+pub struct SampleSchedule {
+    kind: ScheduleKind,
+    n: usize,
+    batch: usize,
+    cursor: usize,
+    rng: Rng,
+}
+
+impl SampleSchedule {
+    pub fn new(dataset: &Dataset, batch: usize, kind: ScheduleKind, seed: u64) -> Self {
+        assert!(dataset.n > 0, "empty dataset");
+        SampleSchedule {
+            kind,
+            n: dataset.n,
+            batch,
+            cursor: 0,
+            rng: Rng::new(seed ^ 0x5343_4845), // "SCHE"
+        }
+    }
+
+    /// Indices for the next sample window (len = device batch size).
+    pub fn next_window(&mut self) -> Vec<usize> {
+        let mut idx = Vec::with_capacity(self.batch);
+        match self.kind {
+            ScheduleKind::Cyclic => {
+                for _ in 0..self.batch {
+                    idx.push(self.cursor);
+                    self.cursor = (self.cursor + 1) % self.n;
+                }
+            }
+            ScheduleKind::Random => {
+                for _ in 0..self.batch {
+                    idx.push(self.rng.below(self.n as u64) as usize);
+                }
+            }
+        }
+        idx
+    }
+
+    /// Build the `[T, B]` i32 index tensor for a fused on-chip window:
+    /// the sample window advances every `tau_x` steps, exactly as the
+    /// discrete loop would drive `load_batch`.
+    pub fn window_tensor(&mut self, t_steps: usize, tau_x: u64) -> Vec<i32> {
+        let mut out = Vec::with_capacity(t_steps * self.batch);
+        let mut current: Vec<usize> = Vec::new();
+        for t in 0..t_steps {
+            if t as u64 % tau_x.max(1) == 0 || current.is_empty() {
+                current = self.next_window();
+            }
+            out.extend(current.iter().map(|&i| i as i32));
+        }
+        out
+    }
+
+    /// Dataset size this schedule walks.
+    pub fn dataset_len(&self) -> usize {
+        self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::xor;
+
+    #[test]
+    fn cyclic_covers_dataset_in_order() {
+        let d = xor();
+        let mut s = SampleSchedule::new(&d, 1, ScheduleKind::Cyclic, 0);
+        let seen: Vec<usize> = (0..8).map(|_| s.next_window()[0]).collect();
+        assert_eq!(seen, vec![0, 1, 2, 3, 0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn cyclic_batches_wrap() {
+        let d = xor();
+        let mut s = SampleSchedule::new(&d, 3, ScheduleKind::Cyclic, 0);
+        assert_eq!(s.next_window(), vec![0, 1, 2]);
+        assert_eq!(s.next_window(), vec![3, 0, 1]);
+    }
+
+    #[test]
+    fn random_stays_in_range_and_varies() {
+        let d = xor();
+        let mut s = SampleSchedule::new(&d, 2, ScheduleKind::Random, 1);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..50 {
+            for i in s.next_window() {
+                assert!(i < d.n);
+                seen.insert(i);
+            }
+        }
+        assert_eq!(seen.len(), d.n, "random schedule never hit some samples");
+    }
+
+    #[test]
+    fn window_tensor_respects_tau_x() {
+        let d = xor();
+        let mut s = SampleSchedule::new(&d, 1, ScheduleKind::Cyclic, 0);
+        // τx = 3: sample held for 3 consecutive steps.
+        let idx = s.window_tensor(7, 3);
+        assert_eq!(idx, vec![0, 0, 0, 1, 1, 1, 2]);
+    }
+
+    #[test]
+    fn window_tensor_batch_layout() {
+        let d = xor();
+        let mut s = SampleSchedule::new(&d, 2, ScheduleKind::Cyclic, 0);
+        let idx = s.window_tensor(2, 1);
+        // step 0 → [0,1], step 1 → [2,3]
+        assert_eq!(idx, vec![0, 1, 2, 3]);
+    }
+}

@@ -1,0 +1,217 @@
+//! Training datasets for every experiment in the paper.
+//!
+//! - [`parity`] — 2-bit (XOR) and n-bit parity, enumerated exactly
+//!   (Figs. 4, 6, 7, 9; Table 2 rows 1–2).
+//! - [`nist7x7`] — procedural reconstruction of the paper's NIST7x7 set:
+//!   the letters N, I, S, T on a 7×7 pixel plane with augmentation
+//!   (Figs. 5, 8, 10; Table 2).
+//! - [`synthetic_images`] — seeded procedural 10-class image sets standing
+//!   in for Fashion-MNIST (28×28×1) and CIFAR-10 (32×32×3), which are not
+//!   available offline (substitution documented in DESIGN.md §3).
+//!
+//! A [`Dataset`] stores samples row-major in two flat `f32` buffers (inputs
+//! and MSE targets), which is exactly the layout the AOT artifacts expect —
+//! `gather` produces artifact-ready batches without reshaping.
+
+pub mod nist7x7;
+pub mod parity;
+pub mod synthetic_images;
+
+pub use nist7x7::{nist7x7, nist7x7_with, Nist7x7Spec};
+pub use parity::{parity, xor};
+pub use synthetic_images::{synthetic_cifar, synthetic_fmnist, SyntheticSpec};
+
+use crate::rng::Rng;
+
+/// An in-memory dataset in artifact layout.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// Row-major inputs, `n * input_len` values.
+    pub x: Vec<f32>,
+    /// Row-major targets, `n * n_outputs` values (one-hot for multi-class,
+    /// `{0,1}` scalar for parity).
+    pub y: Vec<f32>,
+    /// Number of samples.
+    pub n: usize,
+    /// Per-sample input shape (e.g. `[49]` or `[28, 28, 1]`).
+    pub input_shape: Vec<usize>,
+    /// Target width K.
+    pub n_outputs: usize,
+}
+
+impl Dataset {
+    /// Features per sample.
+    pub fn input_len(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    /// Borrow sample `i`'s input row.
+    pub fn input(&self, i: usize) -> &[f32] {
+        let d = self.input_len();
+        &self.x[i * d..(i + 1) * d]
+    }
+
+    /// Borrow sample `i`'s target row.
+    pub fn target(&self, i: usize) -> &[f32] {
+        let k = self.n_outputs;
+        &self.y[i * k..(i + 1) * k]
+    }
+
+    /// Class label of sample `i` (argmax of the target row; for K=1 the
+    /// thresholded scalar).
+    pub fn label(&self, i: usize) -> usize {
+        let t = self.target(i);
+        if self.n_outputs == 1 {
+            usize::from(t[0] > 0.5)
+        } else {
+            t.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(j, _)| j)
+                .unwrap_or(0)
+        }
+    }
+
+    /// Copy the given sample indices into contiguous `(x, y)` batch buffers.
+    pub fn gather(&self, idx: &[usize]) -> (Vec<f32>, Vec<f32>) {
+        let mut xb = Vec::new();
+        let mut yb = Vec::new();
+        self.gather_into(idx, &mut xb, &mut yb);
+        (xb, yb)
+    }
+
+    /// Allocation-free variant of [`Dataset::gather`]: reuses the caller's
+    /// buffers (the discrete MGD loop calls this every τx; see
+    /// EXPERIMENTS.md §Perf L3-3).
+    pub fn gather_into(&self, idx: &[usize], xb: &mut Vec<f32>, yb: &mut Vec<f32>) {
+        let d = self.input_len();
+        let k = self.n_outputs;
+        xb.clear();
+        yb.clear();
+        xb.reserve(idx.len() * d);
+        yb.reserve(idx.len() * k);
+        for &i in idx {
+            xb.extend_from_slice(self.input(i));
+            yb.extend_from_slice(self.target(i));
+        }
+    }
+
+    /// Batch shape for `b` samples: `[b, ...input_shape]`.
+    pub fn batch_shape(&self, b: usize) -> Vec<usize> {
+        let mut s = vec![b];
+        s.extend_from_slice(&self.input_shape);
+        s
+    }
+
+    /// Split off the last `n_test` samples as a test set (deterministic;
+    /// shuffle first if ordering matters).
+    pub fn split_test(mut self, n_test: usize) -> (Dataset, Dataset) {
+        assert!(n_test < self.n, "test split larger than dataset");
+        let n_train = self.n - n_test;
+        let d = self.input_len();
+        let k = self.n_outputs;
+        let test = Dataset {
+            x: self.x.split_off(n_train * d),
+            y: self.y.split_off(n_train * k),
+            n: n_test,
+            input_shape: self.input_shape.clone(),
+            n_outputs: self.n_outputs,
+        };
+        self.n = n_train;
+        (self, test)
+    }
+
+    /// Shuffle samples in place (keeps x/y rows paired).
+    pub fn shuffle(&mut self, rng: &mut Rng) {
+        let d = self.input_len();
+        let k = self.n_outputs;
+        let mut order: Vec<usize> = (0..self.n).collect();
+        rng.shuffle(&mut order);
+        let mut x = Vec::with_capacity(self.x.len());
+        let mut y = Vec::with_capacity(self.y.len());
+        for &i in &order {
+            x.extend_from_slice(&self.x[i * d..(i + 1) * d]);
+            y.extend_from_slice(&self.y[i * k..(i + 1) * k]);
+        }
+        self.x = x;
+        self.y = y;
+    }
+
+    /// Pad (by repeating samples round-robin) or truncate to exactly `n`
+    /// samples — used to match an artifact's static resident-dataset size.
+    pub fn resize_to(&self, n: usize) -> Dataset {
+        let d = self.input_len();
+        let k = self.n_outputs;
+        let mut x = Vec::with_capacity(n * d);
+        let mut y = Vec::with_capacity(n * k);
+        for i in 0..n {
+            let src = i % self.n;
+            x.extend_from_slice(self.input(src));
+            y.extend_from_slice(self.target(src));
+        }
+        Dataset { x, y, n, input_shape: self.input_shape.clone(), n_outputs: self.n_outputs }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        Dataset {
+            x: vec![0.0, 0.0, 0.0, 1.0, 1.0, 0.0, 1.0, 1.0],
+            y: vec![0.0, 1.0, 1.0, 0.0],
+            n: 4,
+            input_shape: vec![2],
+            n_outputs: 1,
+        }
+    }
+
+    #[test]
+    fn gather_layout() {
+        let d = toy();
+        let (xb, yb) = d.gather(&[3, 0]);
+        assert_eq!(xb, vec![1.0, 1.0, 0.0, 0.0]);
+        assert_eq!(yb, vec![0.0, 0.0]);
+        assert_eq!(d.batch_shape(2), vec![2, 2]);
+    }
+
+    #[test]
+    fn labels() {
+        let d = toy();
+        assert_eq!(d.label(0), 0);
+        assert_eq!(d.label(1), 1);
+        let multi = Dataset {
+            x: vec![0.0; 2],
+            y: vec![0.1, 0.9, 0.8, 0.2],
+            n: 2,
+            input_shape: vec![1],
+            n_outputs: 2,
+        };
+        assert_eq!(multi.label(0), 1);
+        assert_eq!(multi.label(1), 0);
+    }
+
+    #[test]
+    fn split_and_resize() {
+        let d = toy();
+        let (train, test) = d.clone().split_test(1);
+        assert_eq!(train.n, 3);
+        assert_eq!(test.n, 1);
+        assert_eq!(test.input(0), d.input(3));
+        let big = d.resize_to(10);
+        assert_eq!(big.n, 10);
+        assert_eq!(big.input(9), d.input(1)); // 9 % 4 == 1
+    }
+
+    #[test]
+    fn shuffle_preserves_pairs() {
+        let mut d = toy();
+        d.shuffle(&mut Rng::new(1));
+        for i in 0..d.n {
+            let x = d.input(i);
+            let expected = f32::from((x[0] > 0.5) != (x[1] > 0.5));
+            assert_eq!(d.target(i)[0], expected, "xor pair broken at {i}");
+        }
+    }
+}

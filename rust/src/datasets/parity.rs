@@ -1,0 +1,56 @@
+//! n-bit parity datasets (exact enumerations).
+//!
+//! The paper uses 2-bit parity (XOR, a 2-2-1 network, 9 parameters) as its
+//! canonical small problem (Figs. 4, 6, 7, 9; Table 2 row 1) and 4-bit
+//! parity (4-4-1, 25 parameters) in the gradient-angle study (Fig. 5).
+
+use super::Dataset;
+
+/// n-bit parity: all `2^n` bit patterns, target = XOR of the bits.
+pub fn parity(n_bits: usize) -> Dataset {
+    assert!((1..=16).contains(&n_bits), "parity n_bits out of range");
+    let n = 1usize << n_bits;
+    let mut x = Vec::with_capacity(n * n_bits);
+    let mut y = Vec::with_capacity(n);
+    for pattern in 0..n {
+        for bit in 0..n_bits {
+            x.push(((pattern >> bit) & 1) as f32);
+        }
+        y.push((pattern.count_ones() % 2) as f32);
+    }
+    Dataset { x, y, n, input_shape: vec![n_bits], n_outputs: 1 }
+}
+
+/// 2-bit parity — the XOR problem.
+pub fn xor() -> Dataset {
+    parity(2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xor_truth_table() {
+        let d = xor();
+        assert_eq!(d.n, 4);
+        assert_eq!(d.input_len(), 2);
+        let expected = [(0.0, 0.0, 0.0), (1.0, 0.0, 1.0), (0.0, 1.0, 1.0), (1.0, 1.0, 0.0)];
+        for (i, (a, b, t)) in expected.iter().enumerate() {
+            assert_eq!(d.input(i), &[*a, *b], "sample {i}");
+            assert_eq!(d.target(i), &[*t], "target {i}");
+        }
+    }
+
+    #[test]
+    fn parity4_counts() {
+        let d = parity(4);
+        assert_eq!(d.n, 16);
+        // Half the patterns have odd parity.
+        let ones: f32 = d.y.iter().sum();
+        assert_eq!(ones, 8.0);
+        // Spot-check: 0b1011 has odd popcount.
+        assert_eq!(d.target(0b1011), &[1.0]);
+        assert_eq!(d.target(0b1111), &[0.0]);
+    }
+}

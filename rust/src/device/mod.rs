@@ -1,0 +1,92 @@
+//! The black-box hardware abstraction that MGD trains.
+//!
+//! The paper's premise (§2.1) is that training requires **no knowledge of
+//! the network internals** — only the ability to:
+//!
+//! 1. load a training sample (input + target),
+//! 2. perturb / update the parameter memory, and
+//! 3. read the scalar cost at the output.
+//!
+//! [`HardwareDevice`] is exactly that capability set and nothing more.  The
+//! MGD coordinator ([`crate::coordinator`]) is generic over it, which *is*
+//! the model-free property: the same training loop runs against
+//!
+//! - [`PjrtDevice`] — the AOT-compiled JAX/Pallas model on the PJRT CPU
+//!   client (the "emerging hardware" stand-in; Python-free at runtime),
+//! - [`NativeDevice`] — a pure-Rust analog-hardware simulator with
+//!   per-neuron activation defects (§3.5 / Fig. 10),
+//! - [`RemoteDevice`] — any of the above behind a TCP link, reproducing
+//!   the chip-in-the-loop setup of §4/§6 where an external computer
+//!   drives perturbations over lab I/O.
+
+pub mod native;
+pub mod pjrt;
+pub mod protocol;
+pub mod remote;
+pub mod server;
+
+pub use native::NativeDevice;
+pub use pjrt::PjrtDevice;
+pub use remote::RemoteDevice;
+
+use anyhow::Result;
+
+/// A trainable black-box inference device (the paper's Fig. 1a, minus the
+/// MGD circuitry — that lives in the coordinator).
+pub trait HardwareDevice: Send {
+    /// Number of programmable parameters P.
+    fn n_params(&self) -> usize;
+
+    /// Samples the device consumes per cost evaluation (its native input
+    /// parallelism; 1 for the paper's "one sample at a time" hardware).
+    fn batch_size(&self) -> usize;
+
+    /// Input features per sample (the width of the device's input port —
+    /// external interface, not internal structure).
+    fn input_len(&self) -> usize;
+
+    /// Outputs per sample (the width of the inference port).
+    fn n_outputs(&self) -> usize;
+
+    /// Program the parameter memory to `theta` (len P).
+    fn set_params(&mut self, theta: &[f32]) -> Result<()>;
+
+    /// Read back the parameter memory (len P).  Chip-in-the-loop hardware
+    /// supports this for checkpointing; MGD itself never needs it on the
+    /// hot path.
+    fn get_params(&mut self) -> Result<Vec<f32>>;
+
+    /// Apply an in-place parameter update `θ ← θ + delta` (len P).  This
+    /// is the only write the MGD hot loop performs (Eq. 4 passes
+    /// `delta = −ηG`, plus update noise when modelled device-side).
+    fn apply_update(&mut self, delta: &[f32]) -> Result<()>;
+
+    /// Present a sample window: `x` is `[batch_size × input_len]`,
+    /// `y` is `[batch_size × n_outputs]`.  Stays loaded until replaced
+    /// (the τx clock decides when the coordinator calls this).
+    fn load_batch(&mut self, x: &[f32], y: &[f32]) -> Result<()>;
+
+    /// Run inference on the loaded batch with perturbation `theta_tilde`
+    /// riding on the parameters, and return the scalar cost C.
+    /// `None` = unperturbed baseline measurement (C₀).
+    fn cost(&mut self, theta_tilde: Option<&[f32]>) -> Result<f32>;
+
+    /// Evaluate (cost, #correct) over an arbitrary labelled set — the
+    /// "accuracy probe" used between training windows.  Not part of the
+    /// training hot path.
+    fn evaluate(&mut self, x: &[f32], y: &[f32], n: usize) -> Result<(f32, f32)>;
+
+    /// Human-readable device description (for logs / metrics).
+    fn describe(&self) -> String {
+        format!("device(P={}, B={})", self.n_params(), self.batch_size())
+    }
+}
+
+/// Count of device cost-evaluations — the paper's unit of "hardware time"
+/// (each evaluation is one inference pass, ≈ τp; Fig. 4b's x-axis).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct DeviceStats {
+    pub cost_evals: u64,
+    pub updates: u64,
+    pub batches_loaded: u64,
+}

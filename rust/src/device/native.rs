@@ -1,0 +1,345 @@
+//! Pure-Rust analog-hardware simulator: a sigmoid MLP with per-neuron
+//! activation defects.
+//!
+//! This device exists for two reasons:
+//!
+//! 1. **Fidelity** — the Fig. 10 experiment requires every hidden/output
+//!    neuron to have its own randomly scaled-and-offset logistic activation
+//!    (`f_k(a) = α_k (1+e^{−β_k(a−a_k)})^{−1} + b_k`), i.e. a *defective
+//!    physical device*.  MGD must train it without knowing the defects —
+//!    which this device never exposes through the [`HardwareDevice`] trait.
+//! 2. **Statistics** — experiments that need hundreds of random restarts
+//!    (Figs. 4, 6, 7, 9) run this device in parallel across replicas at
+//!    hardware-simulation speeds.  Its numerics match the PJRT path
+//!    exactly for identity defects (integration-tested in
+//!    `rust/tests/pjrt_parity.rs`).
+
+use anyhow::{bail, Result};
+
+use super::HardwareDevice;
+use crate::noise::NeuronDefects;
+
+/// MLP layer widths + defect table.
+#[derive(Debug, Clone)]
+pub struct NativeDevice {
+    layers: Vec<usize>,
+    theta: Vec<f32>,
+    defects: NeuronDefects,
+    batch: usize,
+    /// Currently-loaded sample window.
+    x: Vec<f32>,
+    y: Vec<f32>,
+    /// Scratch activations (avoid per-call allocation on the hot path).
+    scratch_a: Vec<f32>,
+    scratch_b: Vec<f32>,
+}
+
+impl NativeDevice {
+    /// Build a device with ideal (identity) activations.
+    pub fn new(layers: &[usize], batch: usize) -> Self {
+        let n_neurons: usize = layers[1..].iter().sum();
+        Self::with_defects(layers, batch, NeuronDefects::identity(n_neurons))
+    }
+
+    /// Build a device with the given per-neuron defect table.  The table
+    /// covers all non-input neurons, layer by layer.
+    pub fn with_defects(layers: &[usize], batch: usize, defects: NeuronDefects) -> Self {
+        assert!(layers.len() >= 2, "need at least input and output layers");
+        let n_neurons: usize = layers[1..].iter().sum();
+        assert_eq!(defects.n_neurons(), n_neurons, "defect table size mismatch");
+        let p: usize = layers.windows(2).map(|w| w[0] * w[1] + w[1]).sum();
+        let widest = *layers.iter().max().unwrap();
+        NativeDevice {
+            layers: layers.to_vec(),
+            theta: vec![0.0; p],
+            defects,
+            batch,
+            x: Vec::new(),
+            y: Vec::new(),
+            scratch_a: vec![0.0; widest * batch],
+            scratch_b: vec![0.0; widest * batch],
+        }
+    }
+
+    pub fn layers(&self) -> &[usize] {
+        &self.layers
+    }
+
+    fn n_outputs(&self) -> usize {
+        *self.layers.last().unwrap()
+    }
+
+    /// Forward pass over `n` samples in `x`, writing outputs into `out`
+    /// (`n * n_outputs`).  `tilde` optionally rides on the parameters.
+    fn forward(&mut self, x: &[f32], n: usize, tilde: Option<&[f32]>, out: &mut [f32]) {
+        let n_in = self.layers[0];
+        debug_assert_eq!(x.len(), n * n_in);
+        debug_assert_eq!(out.len(), n * self.n_outputs());
+
+        // h := x (scratch_a holds the current layer's activations).
+        self.scratch_a[..x.len()].copy_from_slice(x);
+        let mut width = n_in;
+        let mut offset = 0usize; // into theta
+        let mut neuron_base = 0usize; // into defect table
+
+        let n_layers = self.layers.len() - 1;
+        for li in 0..n_layers {
+            let n_out = self.layers[li + 1];
+            let w = &self.theta[offset..offset + width * n_out];
+            let b = &self.theta[offset + width * n_out..offset + width * n_out + n_out];
+            // z = h @ W + b, with optional perturbation on W and b.
+            for s in 0..n {
+                let h_row = &self.scratch_a[s * width..(s + 1) * width];
+                for j in 0..n_out {
+                    let mut z = b[j];
+                    if let Some(tt) = tilde {
+                        z += tt[offset + width * n_out + j];
+                        for (i, &hv) in h_row.iter().enumerate() {
+                            z += hv * (w[i * n_out + j] + tt[offset + i * n_out + j]);
+                        }
+                    } else {
+                        for (i, &hv) in h_row.iter().enumerate() {
+                            z += hv * w[i * n_out + j];
+                        }
+                    }
+                    self.scratch_b[s * n_out + j] = self.defects.activate(neuron_base + j, z);
+                }
+            }
+            std::mem::swap(&mut self.scratch_a, &mut self.scratch_b);
+            offset += width * n_out + n_out;
+            neuron_base += n_out;
+            width = n_out;
+        }
+        out.copy_from_slice(&self.scratch_a[..n * width]);
+    }
+
+    fn mse(&self, y_pred: &[f32], y_true: &[f32]) -> f32 {
+        debug_assert_eq!(y_pred.len(), y_true.len());
+        let sum: f32 = y_pred
+            .iter()
+            .zip(y_true)
+            .map(|(p, t)| {
+                let d = p - t;
+                d * d
+            })
+            .sum();
+        sum / y_pred.len() as f32
+    }
+}
+
+impl HardwareDevice for NativeDevice {
+    fn n_params(&self) -> usize {
+        self.theta.len()
+    }
+
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn input_len(&self) -> usize {
+        self.layers[0]
+    }
+
+    fn n_outputs(&self) -> usize {
+        *self.layers.last().unwrap()
+    }
+
+    fn set_params(&mut self, theta: &[f32]) -> Result<()> {
+        if theta.len() != self.theta.len() {
+            bail!("set_params: expected {} params, got {}", self.theta.len(), theta.len());
+        }
+        self.theta.copy_from_slice(theta);
+        Ok(())
+    }
+
+    fn get_params(&mut self) -> Result<Vec<f32>> {
+        Ok(self.theta.clone())
+    }
+
+    fn apply_update(&mut self, delta: &[f32]) -> Result<()> {
+        if delta.len() != self.theta.len() {
+            bail!("apply_update: expected {} params, got {}", self.theta.len(), delta.len());
+        }
+        for (t, d) in self.theta.iter_mut().zip(delta) {
+            *t += d;
+        }
+        Ok(())
+    }
+
+    fn load_batch(&mut self, x: &[f32], y: &[f32]) -> Result<()> {
+        let n_in = self.layers[0];
+        let k = self.n_outputs();
+        if x.len() != self.batch * n_in || y.len() != self.batch * k {
+            bail!(
+                "load_batch: expected x[{}] y[{}], got x[{}] y[{}]",
+                self.batch * n_in,
+                self.batch * k,
+                x.len(),
+                y.len()
+            );
+        }
+        self.x = x.to_vec();
+        self.y = y.to_vec();
+        Ok(())
+    }
+
+    fn cost(&mut self, theta_tilde: Option<&[f32]>) -> Result<f32> {
+        if self.x.is_empty() {
+            bail!("cost: no batch loaded");
+        }
+        if let Some(tt) = theta_tilde {
+            if tt.len() != self.theta.len() {
+                bail!("cost: perturbation length {} != {}", tt.len(), self.theta.len());
+            }
+        }
+        let n = self.batch;
+        let k = self.n_outputs();
+        let mut out = vec![0f32; n * k];
+        let x = std::mem::take(&mut self.x);
+        self.forward(&x, n, theta_tilde, &mut out);
+        self.x = x;
+        Ok(self.mse(&out, &self.y.clone()))
+    }
+
+    fn evaluate(&mut self, x: &[f32], y: &[f32], n: usize) -> Result<(f32, f32)> {
+        let n_in = self.layers[0];
+        let k = self.n_outputs();
+        if x.len() != n * n_in || y.len() != n * k {
+            bail!("evaluate: shape mismatch");
+        }
+        // Grow scratch if the eval set is larger than the training batch.
+        let widest = *self.layers.iter().max().unwrap();
+        if self.scratch_a.len() < widest * n {
+            self.scratch_a.resize(widest * n, 0.0);
+            self.scratch_b.resize(widest * n, 0.0);
+        }
+        let mut out = vec![0f32; n * k];
+        self.forward(x, n, None, &mut out);
+        let cost = self.mse(&out, y);
+        let mut correct = 0f32;
+        for s in 0..n {
+            let yp = &out[s * k..(s + 1) * k];
+            let yt = &y[s * k..(s + 1) * k];
+            let ok = if k == 1 {
+                (yp[0] > 0.5) == (yt[0] > 0.5)
+            } else {
+                let am = |v: &[f32]| {
+                    v.iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .map(|(i, _)| i)
+                        .unwrap()
+                };
+                am(yp) == am(yt)
+            };
+            if ok {
+                correct += 1.0;
+            }
+        }
+        Ok((cost, correct))
+    }
+
+    fn describe(&self) -> String {
+        format!("native-mlp{:?}(P={}, B={})", self.layers, self.theta.len(), self.batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn sigmoid(z: f32) -> f32 {
+        1.0 / (1.0 + (-z).exp())
+    }
+
+    #[test]
+    fn forward_matches_hand_computation() {
+        // 2-2-1 with known weights: w0=[[1,2],[3,4]], b0=[0.5,-0.5],
+        // w1=[[1],[−1]], b1=[0.25].
+        let mut dev = NativeDevice::new(&[2, 2, 1], 1);
+        let theta = vec![1.0, 2.0, 3.0, 4.0, 0.5, -0.5, 1.0, -1.0, 0.25];
+        dev.set_params(&theta).unwrap();
+        dev.load_batch(&[1.0, 0.5], &[0.0]).unwrap();
+        let h0 = sigmoid(1.0 * 1.0 + 0.5 * 3.0 + 0.5);
+        let h1 = sigmoid(1.0 * 2.0 + 0.5 * 4.0 - 0.5);
+        let y = sigmoid(h0 * 1.0 + h1 * -1.0 + 0.25);
+        let want = y * y; // MSE against target 0
+        let got = dev.cost(None).unwrap();
+        assert!((got - want).abs() < 1e-6, "got {got}, want {want}");
+    }
+
+    #[test]
+    fn perturbation_changes_cost_in_right_direction() {
+        let mut dev = NativeDevice::new(&[2, 2, 1], 1);
+        let mut rng = Rng::new(5);
+        let mut theta = vec![0f32; 9];
+        rng.fill_uniform(&mut theta, -1.0, 1.0);
+        dev.set_params(&theta).unwrap();
+        dev.load_batch(&[1.0, 0.0], &[1.0]).unwrap();
+        let c0 = dev.cost(None).unwrap();
+        // Finite-difference vs perturbed-cost consistency: for a small
+        // single-parameter perturbation, (C - C0)/dθ ≈ dC/dθ.
+        let dtheta = 1e-3f32;
+        let mut tt = vec![0f32; 9];
+        tt[8] = dtheta; // output bias
+        let c = dev.cost(Some(&tt)).unwrap();
+        let fd = (c - c0) / dtheta;
+        // Analytic: dC/db1 = 2(y−t)·y·(1−y) for MSE with K=1.
+        let mut out = vec![0f32; 1];
+        let x = dev.x.clone();
+        dev.forward(&x, 1, None, &mut out);
+        let y = out[0];
+        let want = 2.0 * (y - 1.0) * y * (1.0 - y);
+        assert!((fd - want).abs() < 1e-3, "fd {fd} vs analytic {want}");
+    }
+
+    #[test]
+    fn update_accumulates() {
+        let mut dev = NativeDevice::new(&[2, 2, 1], 1);
+        dev.set_params(&[0.0; 9]).unwrap();
+        dev.apply_update(&[1.0; 9]).unwrap();
+        dev.apply_update(&[0.5; 9]).unwrap();
+        assert_eq!(dev.get_params().unwrap(), vec![1.5; 9]);
+    }
+
+    #[test]
+    fn defective_activation_differs_from_ideal() {
+        let mut rng = Rng::new(1);
+        let defects = NeuronDefects::sample(3, 0.5, &mut rng);
+        let mut ideal = NativeDevice::new(&[2, 2, 1], 1);
+        let mut broken = NativeDevice::with_defects(&[2, 2, 1], 1, defects);
+        let theta = vec![0.3; 9];
+        ideal.set_params(&theta).unwrap();
+        broken.set_params(&theta).unwrap();
+        ideal.load_batch(&[1.0, 1.0], &[1.0]).unwrap();
+        broken.load_batch(&[1.0, 1.0], &[1.0]).unwrap();
+        let ci = ideal.cost(None).unwrap();
+        let cb = broken.cost(None).unwrap();
+        assert!((ci - cb).abs() > 1e-4, "defects had no effect: {ci} vs {cb}");
+    }
+
+    #[test]
+    fn evaluate_counts_correct() {
+        let mut dev = NativeDevice::new(&[2, 2, 1], 1);
+        dev.set_params(&[0.0; 9]).unwrap();
+        // All-zero params → output = sigmoid(b1 + Σ w·σ(..)) = sigmoid(0 + 0) = 0.5
+        // → prediction `false` for every sample (0.5 is not > 0.5).
+        let x = vec![0.0, 0.0, 1.0, 1.0];
+        let y = vec![0.0, 1.0];
+        let (_, correct) = dev.evaluate(&x, &y, 2).unwrap();
+        assert_eq!(correct, 1.0);
+    }
+
+    #[test]
+    fn shape_errors_are_rejected() {
+        let mut dev = NativeDevice::new(&[2, 2, 1], 1);
+        assert!(dev.set_params(&[0.0; 3]).is_err());
+        assert!(dev.apply_update(&[0.0; 3]).is_err());
+        assert!(dev.load_batch(&[0.0; 3], &[0.0]).is_err());
+        assert!(dev.cost(None).is_err(), "cost before load_batch must fail");
+        dev.set_params(&[0.0; 9]).unwrap();
+        dev.load_batch(&[0.0, 0.0], &[0.0]).unwrap();
+        assert!(dev.cost(Some(&[0.0; 4])).is_err());
+    }
+}

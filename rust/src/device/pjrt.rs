@@ -1,0 +1,185 @@
+//! PJRT-backed hardware device: the AOT-compiled JAX/Pallas model.
+//!
+//! This is the "emerging hardware platform" of the reproduction: inference
+//! is an opaque compiled executable (HLO produced once at build time by
+//! `python/compile/aot.py`); the MGD coordinator interacts with it only
+//! through the [`HardwareDevice`] cost interface.  Python never runs here.
+
+use anyhow::{bail, Context, Result};
+
+use super::HardwareDevice;
+use crate::runtime::{Executable, Runtime, Value};
+use std::sync::Arc;
+
+/// A model instance on the PJRT CPU client.
+pub struct PjrtDevice {
+    model: String,
+    cost_exe: Arc<Executable>,
+    eval_exe: Arc<Executable>,
+    theta: Vec<f32>,
+    zeros: Vec<f32>,
+    batch: usize,
+    input_len: usize,
+    n_outputs: usize,
+    eval_batch: usize,
+    x: Vec<f32>,
+    y: Vec<f32>,
+    x_shape: Vec<usize>,
+    eval_x_shape: Vec<usize>,
+}
+
+impl PjrtDevice {
+    /// Instantiate the named model (`xor221`, `nist744`, ...) from the
+    /// runtime's manifest.  Parameters start at zero; call
+    /// [`HardwareDevice::set_params`] before training.
+    pub fn new(rt: &Runtime, model: &str) -> Result<Self> {
+        let meta = rt.manifest.model(model)?.clone();
+        let cost_exe = rt
+            .executable(&format!("{model}_cost"))
+            .with_context(|| format!("loading cost artifact for {model}"))?;
+        let eval_exe = rt
+            .executable(&format!("{model}_eval"))
+            .with_context(|| format!("loading eval artifact for {model}"))?;
+        let p = meta.param_count;
+        let mut x_shape = vec![meta.batch_cost];
+        x_shape.extend_from_slice(&meta.input_shape);
+        let mut eval_x_shape = vec![meta.batch_eval];
+        eval_x_shape.extend_from_slice(&meta.input_shape);
+        Ok(PjrtDevice {
+            model: model.to_string(),
+            cost_exe,
+            eval_exe,
+            theta: vec![0.0; p],
+            zeros: vec![0.0; p],
+            batch: meta.batch_cost,
+            input_len: meta.input_len(),
+            n_outputs: meta.n_outputs,
+            eval_batch: meta.batch_eval,
+            x: Vec::new(),
+            y: Vec::new(),
+            x_shape,
+            eval_x_shape,
+        })
+    }
+
+    /// The model id this device runs.
+    pub fn model(&self) -> &str {
+        &self.model
+    }
+}
+
+impl HardwareDevice for PjrtDevice {
+    fn n_params(&self) -> usize {
+        self.theta.len()
+    }
+
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn input_len(&self) -> usize {
+        self.input_len
+    }
+
+    fn n_outputs(&self) -> usize {
+        self.n_outputs
+    }
+
+    fn set_params(&mut self, theta: &[f32]) -> Result<()> {
+        if theta.len() != self.theta.len() {
+            bail!("set_params: expected {} params, got {}", self.theta.len(), theta.len());
+        }
+        self.theta.copy_from_slice(theta);
+        Ok(())
+    }
+
+    fn get_params(&mut self) -> Result<Vec<f32>> {
+        Ok(self.theta.clone())
+    }
+
+    fn apply_update(&mut self, delta: &[f32]) -> Result<()> {
+        if delta.len() != self.theta.len() {
+            bail!("apply_update: expected {} params, got {}", self.theta.len(), delta.len());
+        }
+        for (t, d) in self.theta.iter_mut().zip(delta) {
+            *t += d;
+        }
+        Ok(())
+    }
+
+    fn load_batch(&mut self, x: &[f32], y: &[f32]) -> Result<()> {
+        if x.len() != self.batch * self.input_len || y.len() != self.batch * self.n_outputs {
+            bail!(
+                "load_batch: expected x[{}] y[{}], got x[{}] y[{}]",
+                self.batch * self.input_len,
+                self.batch * self.n_outputs,
+                x.len(),
+                y.len()
+            );
+        }
+        self.x = x.to_vec();
+        self.y = y.to_vec();
+        Ok(())
+    }
+
+    fn cost(&mut self, theta_tilde: Option<&[f32]>) -> Result<f32> {
+        if self.x.is_empty() {
+            bail!("cost: no batch loaded");
+        }
+        let tt = match theta_tilde {
+            Some(tt) if tt.len() != self.theta.len() => {
+                bail!("cost: perturbation length {} != {}", tt.len(), self.theta.len())
+            }
+            Some(tt) => tt,
+            None => &self.zeros,
+        };
+        let p = self.theta.len();
+        let out = self.cost_exe.run(&[
+            Value::f32(self.theta.clone(), &[p]),
+            Value::f32(tt.to_vec(), &[p]),
+            Value::f32(self.x.clone(), &self.x_shape),
+            Value::f32(self.y.clone(), &[self.batch, self.n_outputs]),
+        ])?;
+        out[0].to_scalar_f32()
+    }
+
+    fn evaluate(&mut self, x: &[f32], y: &[f32], n: usize) -> Result<(f32, f32)> {
+        if x.len() != n * self.input_len || y.len() != n * self.n_outputs {
+            bail!("evaluate: shape mismatch");
+        }
+        // The eval artifact has a fixed batch; run in chunks, padding the
+        // tail by wrapping (padded duplicates are excluded from counts).
+        let b = self.eval_batch;
+        let p = self.theta.len();
+        let mut total_cost = 0f64;
+        let mut total_correct = 0f64;
+        let mut done = 0usize;
+        while done < n {
+            let take = (n - done).min(b);
+            let mut xb = Vec::with_capacity(b * self.input_len);
+            let mut yb = Vec::with_capacity(b * self.n_outputs);
+            for j in 0..b {
+                let src = done + (j % take);
+                xb.extend_from_slice(&x[src * self.input_len..(src + 1) * self.input_len]);
+                yb.extend_from_slice(&y[src * self.n_outputs..(src + 1) * self.n_outputs]);
+            }
+            let out = self.eval_exe.run(&[
+                Value::f32(self.theta.clone(), &[p]),
+                Value::f32(xb, &self.eval_x_shape),
+                Value::f32(yb, &[b, self.n_outputs]),
+            ])?;
+            let cost = out[0].to_scalar_f32()? as f64;
+            let correct = out[1].to_scalar_f32()? as f64;
+            // Padded chunk: correct-count includes duplicates; rescale.
+            let scale = take as f64 / b as f64;
+            total_cost += cost * take as f64;
+            total_correct += correct * scale;
+            done += take;
+        }
+        Ok(((total_cost / n as f64) as f32, total_correct as f32))
+    }
+
+    fn describe(&self) -> String {
+        format!("pjrt:{}(P={}, B={})", self.model, self.theta.len(), self.batch)
+    }
+}

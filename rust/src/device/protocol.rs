@@ -1,0 +1,230 @@
+//! Wire protocol for chip-in-the-loop training over TCP (§4/§6).
+//!
+//! The paper's most direct deployment path is an external computer driving
+//! an existing inference chip: "perturbations can be injected directly to
+//! the hardware from an external computer, and that same computer could
+//! capture the changes in cost ... without any changes to the hardware"
+//! (§6).  [`RemoteDevice`](super::RemoteDevice) is that external-computer
+//! side; [`serve`](super::server::serve) is the lab-bench side wrapping any
+//! local [`HardwareDevice`](super::HardwareDevice).
+//!
+//! Framing (all little-endian):
+//!
+//! ```text
+//! request  := opcode:u8  payload_len:u32  payload
+//! response := status:u8  payload_len:u32  payload      (status 0 = ok)
+//! array    := count:u32  f32 * count
+//! ```
+//!
+//! The protocol is deliberately minimal — it is the I/O bottleneck the
+//! paper warns about ("the speed will most likely be limited by system
+//! I/O"), and the Table 3 HW1 row models exactly this regime.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Result};
+
+/// Request opcodes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Op {
+    /// Query device shape; reply payload: `[P:u32, B:u32, in_len:u32, K:u32]`.
+    Hello = 0x01,
+    /// Program parameters; payload: array. Reply: empty.
+    SetParams = 0x02,
+    /// Read parameters; reply payload: array.
+    GetParams = 0x03,
+    /// θ ← θ + delta; payload: array. Reply: empty.
+    ApplyUpdate = 0x04,
+    /// Load sample window; payload: array x, array y. Reply: empty.
+    LoadBatch = 0x05,
+    /// Measure cost; payload: `has_tilde:u8 [, array θ̃]`. Reply: `f32`.
+    Cost = 0x06,
+    /// Evaluate; payload: `n:u32, array x, array y`. Reply: `f32 cost, f32 correct`.
+    Evaluate = 0x07,
+    /// Close the session. Reply: empty.
+    Bye = 0x08,
+}
+
+impl Op {
+    pub fn from_u8(v: u8) -> Result<Op> {
+        Ok(match v {
+            0x01 => Op::Hello,
+            0x02 => Op::SetParams,
+            0x03 => Op::GetParams,
+            0x04 => Op::ApplyUpdate,
+            0x05 => Op::LoadBatch,
+            0x06 => Op::Cost,
+            0x07 => Op::Evaluate,
+            0x08 => Op::Bye,
+            other => bail!("unknown opcode {other:#x}"),
+        })
+    }
+}
+
+/// Encode an f32 array into a payload buffer.
+pub fn put_array(buf: &mut Vec<u8>, xs: &[f32]) {
+    buf.extend_from_slice(&(xs.len() as u32).to_le_bytes());
+    for x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Decode an f32 array, advancing `pos`.
+pub fn get_array(payload: &[u8], pos: &mut usize) -> Result<Vec<f32>> {
+    let n = get_u32(payload, pos)? as usize;
+    if payload.len() < *pos + 4 * n {
+        bail!("payload truncated: array of {n} floats");
+    }
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(f32::from_le_bytes(payload[*pos..*pos + 4].try_into().unwrap()));
+        *pos += 4;
+    }
+    Ok(out)
+}
+
+pub fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn get_u32(payload: &[u8], pos: &mut usize) -> Result<u32> {
+    if payload.len() < *pos + 4 {
+        bail!("payload truncated: u32");
+    }
+    let v = u32::from_le_bytes(payload[*pos..*pos + 4].try_into().unwrap());
+    *pos += 4;
+    Ok(v)
+}
+
+pub fn put_f32(buf: &mut Vec<u8>, v: f32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn get_f32(payload: &[u8], pos: &mut usize) -> Result<f32> {
+    if payload.len() < *pos + 4 {
+        bail!("payload truncated: f32");
+    }
+    let v = f32::from_le_bytes(payload[*pos..*pos + 4].try_into().unwrap());
+    *pos += 4;
+    Ok(v)
+}
+
+/// Write one framed request.
+pub fn write_request(w: &mut impl Write, op: Op, payload: &[u8]) -> Result<()> {
+    w.write_all(&[op as u8])?;
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one framed request; returns `(op, payload)`.
+pub fn read_request(r: &mut impl Read) -> Result<(Op, Vec<u8>)> {
+    let mut head = [0u8; 5];
+    r.read_exact(&mut head)?;
+    let op = Op::from_u8(head[0])?;
+    let len = u32::from_le_bytes(head[1..5].try_into().unwrap()) as usize;
+    if len > 1 << 30 {
+        bail!("oversized request payload ({len} bytes)");
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok((op, payload))
+}
+
+/// Write an ok response.
+pub fn write_ok(w: &mut impl Write, payload: &[u8]) -> Result<()> {
+    w.write_all(&[0u8])?;
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Write an error response (message as UTF-8).
+pub fn write_err(w: &mut impl Write, msg: &str) -> Result<()> {
+    let bytes = msg.as_bytes();
+    w.write_all(&[1u8])?;
+    w.write_all(&(bytes.len() as u32).to_le_bytes())?;
+    w.write_all(bytes)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read a response; errors become `anyhow::Error`.
+pub fn read_response(r: &mut impl Read) -> Result<Vec<u8>> {
+    let mut head = [0u8; 5];
+    r.read_exact(&mut head)?;
+    let len = u32::from_le_bytes(head[1..5].try_into().unwrap()) as usize;
+    if len > 1 << 30 {
+        bail!("oversized response payload ({len} bytes)");
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    if head[0] != 0 {
+        bail!("device error: {}", String::from_utf8_lossy(&payload));
+    }
+    Ok(payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn array_roundtrip() {
+        let mut buf = Vec::new();
+        put_array(&mut buf, &[1.0, -2.5, 3.25]);
+        let mut pos = 0;
+        let out = get_array(&buf, &mut pos).unwrap();
+        assert_eq!(out, vec![1.0, -2.5, 3.25]);
+        assert_eq!(pos, buf.len());
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let mut buf = Vec::new();
+        put_u32(&mut buf, 42);
+        put_f32(&mut buf, -1.5);
+        let mut pos = 0;
+        assert_eq!(get_u32(&buf, &mut pos).unwrap(), 42);
+        assert_eq!(get_f32(&buf, &mut pos).unwrap(), -1.5);
+    }
+
+    #[test]
+    fn truncated_payload_errors() {
+        let buf = vec![5u8, 0, 0, 0]; // claims 5 floats, provides none
+        let mut pos = 0;
+        assert!(get_array(&buf, &mut pos).is_err());
+    }
+
+    #[test]
+    fn request_roundtrip_via_cursor() {
+        let mut wire = Vec::new();
+        let mut payload = Vec::new();
+        put_array(&mut payload, &[9.0; 4]);
+        write_request(&mut wire, Op::SetParams, &payload).unwrap();
+        let mut cursor = std::io::Cursor::new(wire);
+        let (op, got) = read_request(&mut cursor).unwrap();
+        assert_eq!(op, Op::SetParams);
+        assert_eq!(got, payload);
+    }
+
+    #[test]
+    fn error_response_surfaces_message() {
+        let mut wire = Vec::new();
+        write_err(&mut wire, "boom").unwrap();
+        let mut cursor = std::io::Cursor::new(wire);
+        let err = read_response(&mut cursor).unwrap_err();
+        assert!(err.to_string().contains("boom"));
+    }
+
+    #[test]
+    fn opcode_range() {
+        assert!(Op::from_u8(0x01).is_ok());
+        assert!(Op::from_u8(0x08).is_ok());
+        assert!(Op::from_u8(0x09).is_err());
+        assert!(Op::from_u8(0x00).is_err());
+    }
+}

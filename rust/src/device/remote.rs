@@ -1,0 +1,138 @@
+//! The external-computer side of chip-in-the-loop training: a
+//! [`HardwareDevice`] proxy over TCP.
+//!
+//! Every trait call becomes one request/response round trip — faithfully
+//! reproducing the I/O-limited regime of §6 ("the speed will most likely
+//! be limited by system I/O").  The Table 3 HW1 row (chip-in-the-loop,
+//! τp = 1 ms) corresponds to this device; the `chip_in_the_loop` example
+//! trains through it end-to-end.
+
+use std::io::BufReader;
+use std::net::TcpStream;
+
+use anyhow::{Context, Result};
+
+use super::protocol as p;
+use super::HardwareDevice;
+
+/// TCP proxy to a remote device served by [`super::server::serve`].
+pub struct RemoteDevice {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    n_params: usize,
+    batch: usize,
+    input_len: usize,
+    n_outputs: usize,
+    addr: String,
+}
+
+impl RemoteDevice {
+    /// Connect and handshake.
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+        stream.set_nodelay(true).ok();
+        let writer = stream.try_clone()?;
+        let mut dev = RemoteDevice {
+            reader: BufReader::new(stream),
+            writer,
+            n_params: 0,
+            batch: 0,
+            input_len: 0,
+            n_outputs: 0,
+            addr: addr.to_string(),
+        };
+        let reply = dev.roundtrip(p::Op::Hello, &[])?;
+        let mut pos = 0;
+        dev.n_params = p::get_u32(&reply, &mut pos)? as usize;
+        dev.batch = p::get_u32(&reply, &mut pos)? as usize;
+        dev.input_len = p::get_u32(&reply, &mut pos)? as usize;
+        dev.n_outputs = p::get_u32(&reply, &mut pos)? as usize;
+        Ok(dev)
+    }
+
+    fn roundtrip(&mut self, op: p::Op, payload: &[u8]) -> Result<Vec<u8>> {
+        p::write_request(&mut self.writer, op, payload)?;
+        p::read_response(&mut self.reader)
+    }
+
+    /// Politely close the session.
+    pub fn close(mut self) {
+        let _ = self.roundtrip(p::Op::Bye, &[]);
+    }
+}
+
+impl HardwareDevice for RemoteDevice {
+    fn n_params(&self) -> usize {
+        self.n_params
+    }
+
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn input_len(&self) -> usize {
+        self.input_len
+    }
+
+    fn n_outputs(&self) -> usize {
+        self.n_outputs
+    }
+
+    fn set_params(&mut self, theta: &[f32]) -> Result<()> {
+        let mut payload = Vec::with_capacity(4 + 4 * theta.len());
+        p::put_array(&mut payload, theta);
+        self.roundtrip(p::Op::SetParams, &payload)?;
+        Ok(())
+    }
+
+    fn get_params(&mut self) -> Result<Vec<f32>> {
+        let reply = self.roundtrip(p::Op::GetParams, &[])?;
+        let mut pos = 0;
+        p::get_array(&reply, &mut pos)
+    }
+
+    fn apply_update(&mut self, delta: &[f32]) -> Result<()> {
+        let mut payload = Vec::with_capacity(4 + 4 * delta.len());
+        p::put_array(&mut payload, delta);
+        self.roundtrip(p::Op::ApplyUpdate, &payload)?;
+        Ok(())
+    }
+
+    fn load_batch(&mut self, x: &[f32], y: &[f32]) -> Result<()> {
+        let mut payload = Vec::with_capacity(8 + 4 * (x.len() + y.len()));
+        p::put_array(&mut payload, x);
+        p::put_array(&mut payload, y);
+        self.roundtrip(p::Op::LoadBatch, &payload)?;
+        Ok(())
+    }
+
+    fn cost(&mut self, theta_tilde: Option<&[f32]>) -> Result<f32> {
+        let mut payload = Vec::new();
+        match theta_tilde {
+            Some(tt) => {
+                payload.push(1u8);
+                p::put_array(&mut payload, tt);
+            }
+            None => payload.push(0u8),
+        }
+        let reply = self.roundtrip(p::Op::Cost, &payload)?;
+        let mut pos = 0;
+        p::get_f32(&reply, &mut pos)
+    }
+
+    fn evaluate(&mut self, x: &[f32], y: &[f32], n: usize) -> Result<(f32, f32)> {
+        let mut payload = Vec::with_capacity(12 + 4 * (x.len() + y.len()));
+        p::put_u32(&mut payload, n as u32);
+        p::put_array(&mut payload, x);
+        p::put_array(&mut payload, y);
+        let reply = self.roundtrip(p::Op::Evaluate, &payload)?;
+        let mut pos = 0;
+        let cost = p::get_f32(&reply, &mut pos)?;
+        let correct = p::get_f32(&reply, &mut pos)?;
+        Ok((cost, correct))
+    }
+
+    fn describe(&self) -> String {
+        format!("remote@{}(P={}, B={})", self.addr, self.n_params, self.batch)
+    }
+}

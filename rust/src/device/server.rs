@@ -1,0 +1,245 @@
+//! The lab-bench side of chip-in-the-loop training: serve a local
+//! [`HardwareDevice`] over TCP.
+//!
+//! Sessions are handled one at a time — hardware is a serially-shared
+//! resource (the paper's chip sits on one lab bench); a queued client
+//! blocks until the current session ends.  Plain `std::net` blocking I/O
+//! on an accept thread (this offline build has no async runtime; the
+//! protocol is strictly request/response so blocking I/O is exact).
+
+use std::io::{BufReader, BufWriter};
+use std::net::{TcpListener, TcpStream};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use super::protocol as p;
+use super::HardwareDevice;
+
+/// Serve `device` on `addr`.
+///
+/// `max_sessions`: if `Some(n)`, return after `n` client sessions have
+/// completed (used by tests and the chip-in-the-loop example).
+pub fn serve(
+    device: Box<dyn HardwareDevice>,
+    addr: &str,
+    max_sessions: Option<usize>,
+) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    serve_on(device, listener, max_sessions)
+}
+
+/// Serve on an already-bound listener (lets callers bind port 0 and learn
+/// the real address before serving).
+pub fn serve_on(
+    device: Box<dyn HardwareDevice>,
+    listener: TcpListener,
+    max_sessions: Option<usize>,
+) -> Result<()> {
+    eprintln!(
+        "[device-server] {} listening on {}",
+        device.describe(),
+        listener.local_addr()?
+    );
+    let device = Arc::new(Mutex::new(device));
+    let mut sessions = 0usize;
+    for stream in listener.incoming() {
+        let stream = stream?;
+        if let Ok(peer) = stream.peer_addr() {
+            eprintln!("[device-server] session from {peer}");
+        }
+        if let Err(e) = handle_session(stream, device.clone()) {
+            eprintln!("[device-server] session ended: {e:#}");
+        }
+        sessions += 1;
+        if let Some(max) = max_sessions {
+            if sessions >= max {
+                return Ok(());
+            }
+        }
+    }
+    Ok(())
+}
+
+fn handle_session(
+    stream: TcpStream,
+    device: Arc<Mutex<Box<dyn HardwareDevice>>>,
+) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    loop {
+        let (op, payload) = match p::read_request(&mut reader) {
+            Ok(req) => req,
+            // Client hung up without Bye — fine.
+            Err(_) => return Ok(()),
+        };
+        let mut dev = device.lock().unwrap();
+        match handle_request(&mut **dev, op, &payload) {
+            Ok(Some(reply)) => p::write_ok(&mut writer, &reply)?,
+            Ok(None) => {
+                p::write_ok(&mut writer, &[])?;
+                return Ok(()); // Bye
+            }
+            Err(e) => p::write_err(&mut writer, &format!("{e:#}"))?,
+        }
+    }
+}
+
+/// Dispatch one request. `Ok(None)` signals session end (Bye).
+fn handle_request(
+    dev: &mut dyn HardwareDevice,
+    op: p::Op,
+    payload: &[u8],
+) -> Result<Option<Vec<u8>>> {
+    let mut pos = 0usize;
+    let reply = match op {
+        p::Op::Hello => {
+            let mut out = Vec::with_capacity(16);
+            p::put_u32(&mut out, dev.n_params() as u32);
+            p::put_u32(&mut out, dev.batch_size() as u32);
+            p::put_u32(&mut out, dev.input_len() as u32);
+            p::put_u32(&mut out, dev.n_outputs() as u32);
+            out
+        }
+        p::Op::SetParams => {
+            let theta = p::get_array(payload, &mut pos)?;
+            dev.set_params(&theta)?;
+            Vec::new()
+        }
+        p::Op::GetParams => {
+            let theta = dev.get_params()?;
+            let mut out = Vec::with_capacity(4 + 4 * theta.len());
+            p::put_array(&mut out, &theta);
+            out
+        }
+        p::Op::ApplyUpdate => {
+            let delta = p::get_array(payload, &mut pos)?;
+            dev.apply_update(&delta)?;
+            Vec::new()
+        }
+        p::Op::LoadBatch => {
+            let x = p::get_array(payload, &mut pos)?;
+            let y = p::get_array(payload, &mut pos)?;
+            dev.load_batch(&x, &y)?;
+            Vec::new()
+        }
+        p::Op::Cost => {
+            if payload.is_empty() {
+                anyhow::bail!("Cost request missing flag byte");
+            }
+            let has_tilde = payload[0] != 0;
+            pos = 1;
+            let c = if has_tilde {
+                let tt = p::get_array(payload, &mut pos)?;
+                dev.cost(Some(&tt))?
+            } else {
+                dev.cost(None)?
+            };
+            let mut out = Vec::with_capacity(4);
+            p::put_f32(&mut out, c);
+            out
+        }
+        p::Op::Evaluate => {
+            let n = p::get_u32(payload, &mut pos)? as usize;
+            let x = p::get_array(payload, &mut pos)?;
+            let y = p::get_array(payload, &mut pos)?;
+            let (cost, correct) = dev.evaluate(&x, &y, n)?;
+            let mut out = Vec::with_capacity(8);
+            p::put_f32(&mut out, cost);
+            p::put_f32(&mut out, correct);
+            out
+        }
+        p::Op::Bye => return Ok(None),
+    };
+    Ok(Some(reply))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::NativeDevice;
+
+    #[test]
+    fn hello_reports_io_shape() {
+        let mut dev: Box<dyn HardwareDevice> = Box::new(NativeDevice::new(&[49, 4, 4], 1));
+        let reply = handle_request(&mut *dev, p::Op::Hello, &[]).unwrap().unwrap();
+        let mut pos = 0;
+        assert_eq!(p::get_u32(&reply, &mut pos).unwrap(), 220); // P
+        assert_eq!(p::get_u32(&reply, &mut pos).unwrap(), 1); // B
+        assert_eq!(p::get_u32(&reply, &mut pos).unwrap(), 49); // input_len
+        assert_eq!(p::get_u32(&reply, &mut pos).unwrap(), 4); // n_outputs
+    }
+
+    #[test]
+    fn dispatch_set_get_roundtrip() {
+        let mut dev: Box<dyn HardwareDevice> = Box::new(NativeDevice::new(&[2, 2, 1], 1));
+        let mut payload = Vec::new();
+        p::put_array(&mut payload, &[0.5; 9]);
+        handle_request(&mut *dev, p::Op::SetParams, &payload).unwrap();
+        let reply = handle_request(&mut *dev, p::Op::GetParams, &[]).unwrap().unwrap();
+        let mut pos = 0;
+        assert_eq!(p::get_array(&reply, &mut pos).unwrap(), vec![0.5; 9]);
+    }
+
+    #[test]
+    fn dispatch_cost_flow() {
+        let mut dev: Box<dyn HardwareDevice> = Box::new(NativeDevice::new(&[2, 2, 1], 1));
+        handle_request(&mut *dev, p::Op::SetParams, &{
+            let mut b = Vec::new();
+            p::put_array(&mut b, &[0.1; 9]);
+            b
+        })
+        .unwrap();
+        let mut batch = Vec::new();
+        p::put_array(&mut batch, &[1.0, 0.0]);
+        p::put_array(&mut batch, &[1.0]);
+        handle_request(&mut *dev, p::Op::LoadBatch, &batch).unwrap();
+        let reply = handle_request(&mut *dev, p::Op::Cost, &[0u8]).unwrap().unwrap();
+        let mut pos = 0;
+        let c = p::get_f32(&reply, &mut pos).unwrap();
+        assert!(c.is_finite() && c >= 0.0);
+    }
+
+    #[test]
+    fn dispatch_bye_ends_session() {
+        let mut dev: Box<dyn HardwareDevice> = Box::new(NativeDevice::new(&[2, 2, 1], 1));
+        assert!(handle_request(&mut *dev, p::Op::Bye, &[]).unwrap().is_none());
+    }
+
+    #[test]
+    fn dispatch_errors_do_not_panic() {
+        let mut dev: Box<dyn HardwareDevice> = Box::new(NativeDevice::new(&[2, 2, 1], 1));
+        // Wrong param count → error, not panic.
+        let mut payload = Vec::new();
+        p::put_array(&mut payload, &[0.5; 3]);
+        assert!(handle_request(&mut *dev, p::Op::SetParams, &payload).is_err());
+        // Cost without a batch → error.
+        assert!(handle_request(&mut *dev, p::Op::Cost, &[0u8]).is_err());
+    }
+
+    #[test]
+    fn end_to_end_over_tcp() {
+        use crate::device::RemoteDevice;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let dev: Box<dyn HardwareDevice> = Box::new(NativeDevice::new(&[2, 2, 1], 1));
+            serve_on(dev, listener, Some(1)).unwrap();
+        });
+        let mut remote = RemoteDevice::connect(&addr).unwrap();
+        assert_eq!(remote.n_params(), 9);
+        assert_eq!(remote.input_len(), 2);
+        remote.set_params(&[0.25; 9]).unwrap();
+        remote.load_batch(&[1.0, 0.0], &[1.0]).unwrap();
+        let c0 = remote.cost(None).unwrap();
+        let c1 = remote.cost(Some(&[0.1; 9])).unwrap();
+        assert!(c0.is_finite() && c1.is_finite());
+        assert_ne!(c0, c1, "perturbation must change the cost");
+        remote.apply_update(&[0.1; 9]).unwrap();
+        let (cost, correct) = remote.evaluate(&[1.0, 0.0, 0.0, 0.0], &[1.0, 0.0], 2).unwrap();
+        assert!(cost.is_finite() && correct <= 2.0);
+        remote.close();
+        server.join().unwrap();
+    }
+}

@@ -1,0 +1,80 @@
+//! Shared helpers for the experiment harnesses.
+
+use anyhow::Result;
+
+use crate::device::NativeDevice;
+use crate::noise::NeuronDefects;
+use crate::optim::init_params_uniform;
+use crate::rng::Rng;
+
+/// Build a NativeDevice MLP with uniform(−1, 1) initialization — the
+/// paper's "random initialization" for its sigmoid networks.
+pub fn native_mlp(layers: &[usize], batch: usize, seed: u64) -> Result<NativeDevice> {
+    native_mlp_with_defects(layers, batch, seed, None)
+}
+
+/// Same, with optional per-neuron activation defects (Fig. 10).
+pub fn native_mlp_with_defects(
+    layers: &[usize],
+    batch: usize,
+    seed: u64,
+    defects: Option<NeuronDefects>,
+) -> Result<NativeDevice> {
+    use crate::device::HardwareDevice;
+    let mut dev = match defects {
+        Some(d) => NativeDevice::with_defects(layers, batch, d),
+        None => NativeDevice::new(layers, batch),
+    };
+    let mut rng = Rng::new(seed ^ 0x494e_4954); // "INIT"
+    let mut theta = vec![0f32; dev.n_params()];
+    init_params_uniform(&mut rng, &mut theta, 1.0);
+    dev.set_params(&theta)?;
+    Ok(dev)
+}
+
+/// Log-spaced u64 checkpoints from 1 to `max` inclusive (deduplicated).
+pub fn log_checkpoints(max: u64, per_decade: usize) -> Vec<u64> {
+    let mut out = Vec::new();
+    let mut last = 0u64;
+    let decades = (max as f64).log10();
+    let n = (decades * per_decade as f64).ceil() as usize + 1;
+    for i in 0..=n {
+        let v = 10f64.powf(i as f64 / per_decade as f64).round() as u64;
+        let v = v.min(max).max(1);
+        if v != last {
+            out.push(v);
+            last = v;
+        }
+    }
+    if *out.last().unwrap() != max {
+        out.push(max);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::HardwareDevice;
+
+    #[test]
+    fn native_mlp_is_initialized() {
+        let mut dev = native_mlp(&[2, 2, 1], 1, 0).unwrap();
+        let theta = dev.get_params().unwrap();
+        assert_eq!(theta.len(), 9);
+        assert!(theta.iter().any(|&v| v != 0.0));
+        // Determinism per seed.
+        let mut dev2 = native_mlp(&[2, 2, 1], 1, 0).unwrap();
+        assert_eq!(theta, dev2.get_params().unwrap());
+    }
+
+    #[test]
+    fn checkpoints_are_monotone_and_bounded() {
+        let cps = log_checkpoints(100_000, 3);
+        assert_eq!(*cps.first().unwrap(), 1);
+        assert_eq!(*cps.last().unwrap(), 100_000);
+        for w in cps.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+    }
+}

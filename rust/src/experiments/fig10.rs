@@ -1,0 +1,144 @@
+//! Fig. 10 — per-neuron activation-function defects (§3.5 test 3).
+//!
+//! NIST7x7 on a 49-4-4 NativeDevice whose neurons have static random
+//! generalized-logistic activations, f_k(a) = α_k(1+e^{−β_k(a−a_k)})^{−1}
+//! + b_k with α, β ~ N(1, σ_a) and a, b ~ N(0, σ_a).  MGD never sees the
+//! defect table — the device is a black box — yet trains through
+//! moderate defects with only ~2× slowdown; very large σ_a prevents the
+//! output neurons from expressing the targets at all and convergence
+//! collapses (the paper's observed cliff at σ_a > 0.25).
+//!
+//! Output: `results/fig10.csv` — σ_a, converged fraction, median time.
+
+use anyhow::Result;
+
+use super::common::native_mlp_with_defects;
+use crate::config::RunContext;
+use crate::coordinator::{
+    converged_fraction, replica_stats, solve_times, MgdConfig, MgdTrainer, ScheduleKind,
+    TrainOptions,
+};
+use crate::datasets::nist7x7;
+use crate::metrics::{CsvWriter, Quartiles};
+use crate::noise::NeuronDefects;
+use crate::perturb::PerturbKind;
+use crate::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct Fig10Config {
+    pub replicas: usize,
+    pub amplitude: f32,
+    pub eta: f32,
+    pub sigmas: Vec<f32>,
+    pub max_steps: u64,
+    pub train_n: usize,
+    pub target_accuracy: f32,
+}
+
+impl Default for Fig10Config {
+    fn default() -> Self {
+        Fig10Config {
+            replicas: 12,
+            amplitude: 0.01,
+            eta: 0.1,
+            sigmas: vec![0.0, 0.05, 0.1, 0.15, 0.2, 0.25, 0.3, 0.4],
+            max_steps: 500_000,
+            train_n: 8192,
+            target_accuracy: 0.75,
+        }
+    }
+}
+
+const LAYERS: [usize; 3] = [49, 4, 4];
+
+impl Fig10Config {
+    fn load(ctx: &RunContext) -> Result<Self> {
+        let d = Fig10Config::default();
+        let o = ctx.overrides("fig10")?;
+        Ok(Fig10Config {
+            replicas: o.usize("replicas", d.replicas)?,
+            amplitude: o.f32("amplitude", d.amplitude)?,
+            eta: o.f32("eta", d.eta)?,
+            sigmas: o.f32_vec("sigmas", &d.sigmas)?,
+            max_steps: o.u64("max_steps", d.max_steps)?,
+            train_n: o.usize("train_n", d.train_n)?,
+            target_accuracy: o.f32("target_accuracy", d.target_accuracy)?,
+        })
+    }
+}
+
+pub fn run(ctx: &RunContext) -> Result<()> {
+    let cfg = Fig10Config::load(ctx)?;
+    let replicas = ctx.scaled(cfg.replicas as u64, 3) as usize;
+    let data = nist7x7(cfg.train_n, ctx.seed);
+
+    let mut csv = CsvWriter::create(
+        ctx.result_path("fig10.csv"),
+        &["sigma_a", "converged_fraction", "median_steps", "q1", "q3", "replicas"],
+    )?;
+
+    println!(
+        "fig10: activation defects on NIST7x7 (eta={}, target {}%)",
+        cfg.eta,
+        cfg.target_accuracy * 100.0
+    );
+    let n_neurons: usize = LAYERS[1..].iter().sum();
+    for &sigma_a in &cfg.sigmas {
+        let outcomes = replica_stats(replicas, ctx.seed, true, |seed| {
+            // Independent defect table AND independent init per replica
+            // ("25 different random network initializations and
+            // activation-function randomizations").
+            let defects = if sigma_a == 0.0 {
+                NeuronDefects::identity(n_neurons)
+            } else {
+                NeuronDefects::sample(n_neurons, sigma_a, &mut Rng::new(seed ^ 0x00de_fec7))
+            };
+            let mut dev = native_mlp_with_defects(&LAYERS, 1, seed, Some(defects))?;
+            let mcfg = MgdConfig {
+                tau_x: 1,
+                tau_theta: 1,
+                tau_p: 1,
+                eta: cfg.eta,
+                amplitude: cfg.amplitude,
+                kind: PerturbKind::RademacherCode,
+                seed,
+                ..Default::default()
+            };
+            let mut tr = MgdTrainer::new(&mut dev, &data, mcfg, ScheduleKind::Cyclic);
+            let opts = TrainOptions {
+                max_steps: ctx.scaled(cfg.max_steps, 20_000),
+                eval_every: 4000,
+                target_accuracy: Some(cfg.target_accuracy),
+                ..Default::default()
+            };
+            tr.train(&opts, None)
+        })?;
+        let frac = converged_fraction(&outcomes);
+        let times: Vec<f64> = solve_times(&outcomes).iter().map(|&t| t as f64).collect();
+        let q = Quartiles::of(&times);
+        let (med, q1, q3) = match q {
+            Some(q) => (
+                format!("{:.0}", q.median),
+                format!("{:.0}", q.q1),
+                format!("{:.0}", q.q3),
+            ),
+            None => (String::new(), String::new(), String::new()),
+        };
+        println!(
+            "  sigma_a={sigma_a:<5} converged {:>5.1}%  median {}",
+            frac * 100.0,
+            if med.is_empty() { "-" } else { &med }
+        );
+        csv.row(&[
+            sigma_a.to_string(),
+            format!("{frac:.3}"),
+            med,
+            q1,
+            q3,
+            replicas.to_string(),
+        ])?;
+    }
+    csv.flush()?;
+    println!("      -> {}", ctx.result_path("fig10.csv").display());
+    Ok(())
+}

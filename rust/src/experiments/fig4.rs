@@ -1,0 +1,161 @@
+//! Fig. 4 — MGD ≡ backpropagation in the long-integration limit.
+//!
+//! XOR on a 2-2-1 network (9 parameters), batch ratio τθ/τx = 1:
+//!
+//! - MGD with τθ = τx = 1000: the gradient estimate per sample is nearly
+//!   exact → the cost-vs-**epoch** trajectory tracks backprop (panel a).
+//! - MGD with τθ = τx = 1: poor per-sample estimate → many more epochs,
+//!   but *fewer total timesteps* (panel b) — the paper's data-efficiency
+//!   vs wall-clock trade.
+//! - Backprop (SGD batch 1, same η schedule) as the dashed reference,
+//!   running on the `gradtrain` AOT artifact.
+//!
+//! Output: `results/fig4.csv` — series, epoch, steps, mean cost over
+//! replicas (paper: 1000 random inits; scaled by `--scale`).
+
+use anyhow::Result;
+
+use super::common::native_mlp;
+use crate::config::RunContext;
+use crate::coordinator::{replica_stats, MgdConfig, MgdTrainer, ScheduleKind, TrainOptions};
+use crate::datasets::xor;
+use crate::metrics::CsvWriter;
+use crate::optim::{init_params_uniform, BackpropTrainer};
+use crate::perturb::PerturbKind;
+use crate::rng::Rng;
+use crate::runtime::Runtime;
+
+#[derive(Debug, Clone)]
+pub struct Fig4Config {
+    pub replicas: usize,
+    pub epochs: u64,
+    pub eta: f32,
+    pub amplitude: f32,
+    pub tau_long: u64,
+}
+
+impl Default for Fig4Config {
+    fn default() -> Self {
+        Fig4Config { replicas: 40, epochs: 400, eta: 1.0, amplitude: 0.02, tau_long: 1000 }
+    }
+}
+
+impl Fig4Config {
+    fn load(ctx: &RunContext) -> Result<Self> {
+        let d = Fig4Config::default();
+        let o = ctx.overrides("fig4")?;
+        Ok(Fig4Config {
+            replicas: o.usize("replicas", d.replicas)?,
+            epochs: o.u64("epochs", d.epochs)?,
+            eta: o.f32("eta", d.eta)?,
+            amplitude: o.f32("amplitude", d.amplitude)?,
+            tau_long: o.u64("tau_long", d.tau_long)?,
+        })
+    }
+}
+
+pub fn run(ctx: &RunContext) -> Result<()> {
+    let cfg = Fig4Config::load(ctx)?;
+    let replicas = ctx.scaled(cfg.replicas as u64, 4) as usize;
+    let epochs = ctx.scaled(cfg.epochs, 20);
+    let data = xor();
+    let epoch_steps_short = data.n as u64; // τθ=1: 4 steps per epoch
+    let epoch_steps_long = data.n as u64 * cfg.tau_long; // τθ=1000
+
+    let mut csv = CsvWriter::create(
+        ctx.result_path("fig4.csv"),
+        &["series", "epoch", "steps", "mean_cost"],
+    )?;
+
+    // --- MGD, τθ = τx ∈ {1, tau_long} ------------------------------------
+    for (series, tau) in [("mgd_tau1", 1u64), ("mgd_tau1000", cfg.tau_long)] {
+        let epochs_this = if tau == 1 { epochs } else { epochs.min(120) };
+        // Per-replica cost trajectory, sampled once per epoch.
+        let trajectories: Vec<Vec<f32>> = {
+            let outcomes = replica_stats(replicas, ctx.seed, true, |seed| {
+                let mut dev = native_mlp(&[2, 2, 1], 1, seed)?;
+                let mcfg = MgdConfig {
+                    tau_x: tau,
+                    tau_theta: tau,
+                    tau_p: 1,
+                    eta: cfg.eta,
+                    amplitude: cfg.amplitude,
+                    kind: PerturbKind::RademacherCode,
+                    seed,
+                    ..Default::default()
+                };
+                let mut tr = MgdTrainer::new(&mut dev, &data, mcfg, ScheduleKind::Cyclic);
+                let opts = TrainOptions {
+                    max_steps: epochs_this * data.n as u64 * tau,
+                    eval_every: data.n as u64 * tau, // once per epoch
+                    ..Default::default()
+                };
+                tr.train(&opts, None)
+            })?;
+            outcomes
+                .into_iter()
+                .map(|o| o.result.eval_trace.iter().map(|&(_, c, _)| c).collect())
+                .collect()
+        };
+        let per_epoch = epochs_this as usize;
+        let steps_per_epoch = if tau == 1 { epoch_steps_short } else { epoch_steps_long };
+        for e in 0..per_epoch {
+            let costs: Vec<f32> =
+                trajectories.iter().filter_map(|t| t.get(e).copied()).collect();
+            if costs.is_empty() {
+                break;
+            }
+            let mean = costs.iter().sum::<f32>() / costs.len() as f32;
+            csv.row(&[
+                series.to_string(),
+                (e + 1).to_string(),
+                ((e as u64 + 1) * steps_per_epoch).to_string(),
+                format!("{mean:.6}"),
+            ])?;
+        }
+        println!(
+            "fig4: {series}: {replicas} replicas x {epochs_this} epochs (tau_theta = tau_x = {tau})"
+        );
+    }
+
+    // --- Backprop reference (PJRT gradtrain artifact, SGD batch 1) --------
+    {
+        let rt = Runtime::new(&ctx.artifact_dir)?;
+        let mut mean_costs = vec![0f64; epochs as usize];
+        let mut counts = vec![0usize; epochs as usize];
+        for r in 0..replicas.min(16) {
+            let seed = ctx.seed + r as u64;
+            let mut rng = Rng::new(seed ^ 0x494e_4954);
+            let mut theta = vec![0f32; 9];
+            init_params_uniform(&mut rng, &mut theta, 1.0);
+            let mut tr = BackpropTrainer::new(&rt, "xor221", &data, theta, cfg.eta, seed)?;
+            let opts = TrainOptions {
+                max_steps: epochs * data.n as u64,
+                eval_every: data.n as u64,
+                ..Default::default()
+            };
+            let res = tr.train(&opts, None)?;
+            for (e, &(_, c, _)) in res.eval_trace.iter().enumerate() {
+                if e < mean_costs.len() {
+                    mean_costs[e] += c as f64;
+                    counts[e] += 1;
+                }
+            }
+        }
+        for e in 0..epochs as usize {
+            if counts[e] == 0 {
+                break;
+            }
+            csv.row(&[
+                "backprop".to_string(),
+                (e + 1).to_string(),
+                ((e as u64 + 1) * epoch_steps_short).to_string(),
+                format!("{:.6}", mean_costs[e] / counts[e] as f64),
+            ])?;
+        }
+        println!("fig4: backprop reference via PJRT gradtrain artifact");
+    }
+    csv.flush()?;
+    println!("      -> {}", ctx.result_path("fig4.csv").display());
+    Ok(())
+}

@@ -1,0 +1,174 @@
+//! Fig. 5 — convergence of the gradient approximation G to the true
+//! gradient.
+//!
+//! With τθ = ∞ (no updates) and τx = τp = 1, the homodyne integrator G
+//! accumulates forever; the angle between G and the true gradient
+//! ∂C/∂θ (computed by backprop via the `grad` AOT artifact) decreases
+//! with integration time, more slowly for networks with more parameters:
+//! 2-bit parity (9 p) < 4-bit parity (25 p) < NIST7x7 (220 p).
+//!
+//! The MGD side runs model-free on the NativeDevice; the true gradient
+//! comes from PJRT.  Since no updates fire, θ is constant and the true
+//! gradient is computed once per replica.
+//!
+//! Output: `results/fig5.csv` — problem, step, median/q1/q3 angle.
+
+use anyhow::Result;
+
+use super::common::{log_checkpoints, native_mlp};
+use crate::config::RunContext;
+use crate::coordinator::{MgdConfig, MgdTrainer, ScheduleKind};
+use crate::datasets::{nist7x7, parity, Dataset};
+use crate::device::HardwareDevice;
+use crate::metrics::{angle_degrees, CsvWriter, Quartiles};
+use crate::perturb::PerturbKind;
+use crate::runtime::{Runtime, Value};
+
+#[derive(Debug, Clone)]
+pub struct Fig5Config {
+    pub max_steps: u64,
+    pub replicas_parity: usize,
+    pub replicas_nist: usize,
+    pub amplitude: f32,
+}
+
+impl Default for Fig5Config {
+    fn default() -> Self {
+        Fig5Config { max_steps: 100_000, replicas_parity: 40, replicas_nist: 8, amplitude: 0.01 }
+    }
+}
+
+struct Problem {
+    name: &'static str,
+    layers: Vec<usize>,
+    dataset: Dataset,
+    grad_artifact: &'static str,
+    replicas: usize,
+}
+
+impl Fig5Config {
+    fn load(ctx: &RunContext) -> Result<Self> {
+        let d = Fig5Config::default();
+        let o = ctx.overrides("fig5")?;
+        Ok(Fig5Config {
+            max_steps: o.u64("max_steps", d.max_steps)?,
+            replicas_parity: o.usize("replicas_parity", d.replicas_parity)?,
+            replicas_nist: o.usize("replicas_nist", d.replicas_nist)?,
+            amplitude: o.f32("amplitude", d.amplitude)?,
+        })
+    }
+}
+
+pub fn run(ctx: &RunContext) -> Result<()> {
+    let cfg = Fig5Config::load(ctx)?;
+    let rt = Runtime::new(&ctx.artifact_dir)?;
+    let max_steps = ctx.scaled(cfg.max_steps, 1000);
+    let checkpoints = log_checkpoints(max_steps, 4);
+
+    let problems = vec![
+        Problem {
+            name: "parity2",
+            layers: vec![2, 2, 1],
+            dataset: parity(2),
+            grad_artifact: "xor221_grad",
+            replicas: ctx.scaled(cfg.replicas_parity as u64, 4) as usize,
+        },
+        Problem {
+            name: "parity4",
+            layers: vec![4, 4, 1],
+            dataset: parity(4),
+            grad_artifact: "parity441_grad",
+            replicas: ctx.scaled(cfg.replicas_parity as u64, 4) as usize,
+        },
+        Problem {
+            name: "nist7x7",
+            layers: vec![49, 4, 4],
+            // Sized to the grad artifact's eval batch so the "true
+            // gradient" covers exactly the samples MGD cycles through.
+            dataset: nist7x7(512, ctx.seed),
+            grad_artifact: "nist744_grad",
+            replicas: ctx.scaled(cfg.replicas_nist as u64, 2) as usize,
+        },
+    ];
+
+    let mut csv = CsvWriter::create(
+        ctx.result_path("fig5.csv"),
+        &["problem", "n_params", "step", "median_angle_deg", "q1", "q3", "replicas"],
+    )?;
+
+    for prob in &problems {
+        let grad_exe = rt.executable(prob.grad_artifact)?;
+        let p: usize = prob.layers.windows(2).map(|w| w[0] * w[1] + w[1]).sum();
+        let b = grad_exe.meta.inputs[1].shape[0];
+        anyhow::ensure!(
+            b == prob.dataset.n,
+            "{}: grad artifact batch {b} != dataset size {}",
+            prob.name,
+            prob.dataset.n
+        );
+
+        // angles[replica][checkpoint]
+        let mut angles = vec![vec![f64::NAN; checkpoints.len()]; prob.replicas];
+        for (r, row) in angles.iter_mut().enumerate() {
+            let seed = ctx.seed + r as u64;
+            let mut dev = native_mlp(&prob.layers, 1, seed)?;
+            let theta = dev.get_params()?;
+            // True gradient over the full dataset (constant: τθ = ∞).
+            let mut shape = vec![b];
+            shape.extend_from_slice(&prob.dataset.input_shape);
+            let out = grad_exe.run(&[
+                Value::f32(theta.clone(), &[p]),
+                Value::f32(prob.dataset.x.clone(), &shape),
+                Value::f32(prob.dataset.y.clone(), &[b, prob.dataset.n_outputs]),
+            ])?;
+            let true_grad = out[1].as_f32()?.to_vec();
+
+            let mcfg = MgdConfig {
+                tau_x: 1,
+                tau_theta: u64::MAX,
+                tau_p: 1,
+                amplitude: cfg.amplitude,
+                kind: PerturbKind::RademacherCode,
+                seed,
+                ..Default::default()
+            };
+            let mut tr = MgdTrainer::new(&mut dev, &prob.dataset, mcfg, ScheduleKind::Cyclic);
+            let mut next_cp = 0usize;
+            for step in 1..=max_steps {
+                tr.step()?;
+                if next_cp < checkpoints.len() && step == checkpoints[next_cp] {
+                    row[next_cp] = angle_degrees(tr.gradient(), &true_grad);
+                    next_cp += 1;
+                }
+            }
+        }
+
+        for (ci, &cp) in checkpoints.iter().enumerate() {
+            let vals: Vec<f64> = angles
+                .iter()
+                .map(|row| row[ci])
+                .filter(|v| v.is_finite())
+                .collect();
+            if let Some(q) = Quartiles::of(&vals) {
+                csv.row(&[
+                    prob.name.to_string(),
+                    p.to_string(),
+                    cp.to_string(),
+                    format!("{:.3}", q.median),
+                    format!("{:.3}", q.q1),
+                    format!("{:.3}", q.q3),
+                    q.n.to_string(),
+                ])?;
+            }
+        }
+        let final_vals: Vec<f64> = angles.iter().map(|r| *r.last().unwrap()).collect();
+        let q = Quartiles::of(&final_vals).unwrap();
+        println!(
+            "fig5: {:<8} P={:<4} angle @ {} steps: median {:.1} deg (q1 {:.1}, q3 {:.1})",
+            prob.name, p, max_steps, q.median, q.q1, q.q3
+        );
+    }
+    csv.flush()?;
+    println!("      -> {}", ctx.result_path("fig5.csv").display());
+    Ok(())
+}

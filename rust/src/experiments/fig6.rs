@@ -1,0 +1,190 @@
+//! Fig. 6 — effect of the gradient-integration time τθ on training time.
+//!
+//! XOR on 2-2-1 over a τθ sweep with the batch ratio τθ/τx held at 1 or 4:
+//!
+//! - (a) fixed (low) η: with batch ratio 1, increasing τθ increases
+//!   training time; with batch ratio 4, τθ has little effect — the
+//!   accumulated (un-normalized) G compensates.
+//! - (b) max achievable η: longer τθ forces smaller η (instability),
+//!   so the *minimum* achievable training time grows with τθ.
+//!
+//! "Solved" = full-dataset cost < 0.04 (the paper's criterion).
+//!
+//! Output: `results/fig6.csv`.
+
+use anyhow::Result;
+
+use super::common::native_mlp;
+use crate::config::RunContext;
+use crate::coordinator::{
+    converged_fraction, replica_stats, solve_times, MgdConfig, MgdTrainer, ScheduleKind,
+    TrainOptions,
+};
+use crate::datasets::xor;
+use crate::metrics::{CsvWriter, Quartiles};
+use crate::perturb::PerturbKind;
+
+#[derive(Debug, Clone)]
+pub struct Fig6Config {
+    pub replicas: usize,
+    pub fixed_eta: f32,
+    pub amplitude: f32,
+    pub max_steps: u64,
+    pub tau_thetas: Vec<u64>,
+    pub eta_grid: Vec<f32>,
+}
+
+impl Default for Fig6Config {
+    fn default() -> Self {
+        Fig6Config {
+            replicas: 24,
+            fixed_eta: 0.3,
+            amplitude: 0.02,
+            max_steps: 400_000,
+            tau_thetas: vec![1, 4, 16, 64, 256, 1024],
+            eta_grid: vec![0.1, 0.2, 0.5, 1.0, 2.0, 5.0, 10.0, 20.0],
+        }
+    }
+}
+
+/// Median steps-to-solve for one (τθ, batch-ratio, η) cell.
+fn cell(
+    ctx: &RunContext,
+    cfg: &Fig6Config,
+    tau_theta: u64,
+    batch_ratio: u64,
+    eta: f32,
+    replicas: usize,
+) -> Result<(f64, Option<f64>)> {
+    let data = xor();
+    // batch ratio τθ/τx: τx = τθ / ratio (≥1).
+    let tau_x = (tau_theta / batch_ratio).max(1);
+    let outcomes = replica_stats(replicas, ctx.seed, true, |seed| {
+        let mut dev = native_mlp(&[2, 2, 1], 1, seed)?;
+        let mcfg = MgdConfig {
+            tau_x,
+            tau_theta,
+            tau_p: 1,
+            eta,
+            amplitude: cfg.amplitude,
+            kind: PerturbKind::RademacherCode,
+            seed,
+            ..Default::default()
+        };
+        let mut tr = MgdTrainer::new(&mut dev, &data, mcfg, ScheduleKind::Cyclic);
+        let opts = TrainOptions {
+            max_steps: ctx.scaled(cfg.max_steps, 10_000),
+            eval_every: 200.max(tau_theta),
+            target_cost: Some(0.04),
+            ..Default::default()
+        };
+        tr.train(&opts, None)
+    })?;
+    let frac = converged_fraction(&outcomes);
+    let times: Vec<f64> = solve_times(&outcomes).iter().map(|&t| t as f64).collect();
+    let median = Quartiles::of(&times).map(|q| q.median);
+    Ok((frac, median))
+}
+
+impl Fig6Config {
+    fn load(ctx: &RunContext) -> Result<Self> {
+        let d = Fig6Config::default();
+        let o = ctx.overrides("fig6")?;
+        Ok(Fig6Config {
+            replicas: o.usize("replicas", d.replicas)?,
+            fixed_eta: o.f32("fixed_eta", d.fixed_eta)?,
+            amplitude: o.f32("amplitude", d.amplitude)?,
+            max_steps: o.u64("max_steps", d.max_steps)?,
+            tau_thetas: o.u64_vec("tau_thetas", &d.tau_thetas)?,
+            eta_grid: o.f32_vec("eta_grid", &d.eta_grid)?,
+        })
+    }
+}
+
+pub fn run(ctx: &RunContext) -> Result<()> {
+    let cfg = Fig6Config::load(ctx)?;
+    let replicas = ctx.scaled(cfg.replicas as u64, 4) as usize;
+
+    let mut csv = CsvWriter::create(
+        ctx.result_path("fig6.csv"),
+        &[
+            "panel",
+            "tau_theta",
+            "batch_ratio",
+            "eta",
+            "converged_fraction",
+            "median_steps",
+        ],
+    )?;
+
+    // Panel (a): fixed low η.
+    println!("fig6(a): fixed eta = {}", cfg.fixed_eta);
+    for &ratio in &[1u64, 4] {
+        for &tau in &cfg.tau_thetas {
+            if tau < ratio {
+                continue;
+            }
+            let (frac, median) = cell(ctx, &cfg, tau, ratio, cfg.fixed_eta, replicas)?;
+            let med_str = median.map_or("".into(), |m| format!("{m:.0}"));
+            println!(
+                "  tau_theta={tau:<5} batch={ratio}  solved {:>5.1}%  median {} steps",
+                frac * 100.0,
+                if med_str.is_empty() { "-" } else { &med_str }
+            );
+            csv.row(&[
+                "a_fixed_eta".into(),
+                tau.to_string(),
+                ratio.to_string(),
+                cfg.fixed_eta.to_string(),
+                format!("{frac:.3}"),
+                med_str,
+            ])?;
+        }
+    }
+
+    // Panel (b): max achievable η per τθ (>=50% convergence), and the
+    // training time at that η.
+    println!("fig6(b): max eta sweep");
+    for &ratio in &[1u64, 4] {
+        for &tau in &cfg.tau_thetas {
+            if tau < ratio {
+                continue;
+            }
+            let mut best: Option<(f32, f64)> = None; // (eta, median steps)
+            for &eta in &cfg.eta_grid {
+                let (frac, median) = cell(ctx, &cfg, tau, ratio, eta, replicas.min(12))?;
+                if frac >= 0.5 {
+                    if let Some(m) = median {
+                        let better = match best {
+                            Some((be, _)) => eta > be,
+                            None => true,
+                        };
+                        if better {
+                            best = Some((eta, m));
+                        }
+                    }
+                }
+            }
+            let (eta_str, med_str) = match best {
+                Some((e, m)) => (format!("{e}"), format!("{m:.0}")),
+                None => ("".into(), "".into()),
+            };
+            println!(
+                "  tau_theta={tau:<5} batch={ratio}  max_eta {}  min time {} steps",
+                if eta_str.is_empty() { "-" } else { &eta_str },
+                if med_str.is_empty() { "-" } else { &med_str }
+            );
+            csv.row(&[
+                "b_max_eta".into(),
+                tau.to_string(),
+                ratio.to_string(),
+                eta_str,
+                "".into(),
+                med_str,
+            ])?;
+        }
+    }
+    csv.flush()?;
+    println!("      -> {}", ctx.result_path("fig6.csv").display());
+    Ok(())
+}

@@ -1,0 +1,154 @@
+//! Fig. 7 — equivalence of the perturbation families.
+//!
+//! XOR on 2-2-1 with the paper's hyper-parameters (τx = 250, τθ = 1,
+//! η = 0.05, τp = 1 discrete / Δf ≈ 0.3 analog): training-time box plots
+//! for sequential finite-difference, Walsh codes, random (Rademacher)
+//! codes, discrete sinusoids, and the fully-analog loop.  All families
+//! share one broadcast-cost channel, so their information rate — and
+//! hence training time — is approximately equal (the paper's §5
+//! "multiple access" argument).
+//!
+//! Output: `results/fig7.csv` — per-replica solve times per family.
+
+use anyhow::Result;
+
+use super::common::native_mlp;
+use crate::config::RunContext;
+use crate::coordinator::analog::{AnalogConfig, AnalogTrainer};
+use crate::coordinator::{
+    converged_fraction, replica_stats, solve_times, MgdConfig, MgdTrainer, ScheduleKind,
+    TrainOptions,
+};
+use crate::datasets::xor;
+use crate::metrics::{CsvWriter, Quartiles};
+use crate::perturb::PerturbKind;
+
+#[derive(Debug, Clone)]
+pub struct Fig7Config {
+    pub replicas: usize,
+    pub eta: f32,
+    pub amplitude: f32,
+    pub tau_x: u64,
+    pub max_steps: u64,
+}
+
+impl Default for Fig7Config {
+    fn default() -> Self {
+        Fig7Config { replicas: 40, eta: 0.05, amplitude: 0.05, tau_x: 250, max_steps: 2_000_000 }
+    }
+}
+
+impl Fig7Config {
+    fn load(ctx: &RunContext) -> Result<Self> {
+        let d = Fig7Config::default();
+        let o = ctx.overrides("fig7")?;
+        Ok(Fig7Config {
+            replicas: o.usize("replicas", d.replicas)?,
+            eta: o.f32("eta", d.eta)?,
+            amplitude: o.f32("amplitude", d.amplitude)?,
+            tau_x: o.u64("tau_x", d.tau_x)?,
+            max_steps: o.u64("max_steps", d.max_steps)?,
+        })
+    }
+}
+
+pub fn run(ctx: &RunContext) -> Result<()> {
+    let cfg = Fig7Config::load(ctx)?;
+    let replicas = ctx.scaled(cfg.replicas as u64, 5) as usize;
+    let max_steps = ctx.scaled(cfg.max_steps, 50_000);
+    let data = xor();
+
+    let mut csv = CsvWriter::create(
+        ctx.result_path("fig7.csv"),
+        &["family", "seed", "solved", "solve_steps"],
+    )?;
+
+    let opts = TrainOptions {
+        max_steps,
+        eval_every: 1000,
+        target_cost: Some(0.04),
+        ..Default::default()
+    };
+
+    let discrete: [(&str, PerturbKind); 4] = [
+        ("sequential_fd", PerturbKind::SequentialFd),
+        ("walsh_code", PerturbKind::WalshCode),
+        ("rademacher_code", PerturbKind::RademacherCode),
+        ("sinusoidal", PerturbKind::Sinusoidal),
+    ];
+    println!(
+        "fig7: XOR, tau_x={}, tau_theta=1, eta={}, {replicas} replicas, budget {max_steps} steps",
+        cfg.tau_x, cfg.eta
+    );
+    for (family, kind) in discrete {
+        let outcomes = replica_stats(replicas, ctx.seed, true, |seed| {
+            let mut dev = native_mlp(&[2, 2, 1], 1, seed)?;
+            let mcfg = MgdConfig {
+                tau_x: cfg.tau_x,
+                tau_theta: 1,
+                tau_p: 1,
+                eta: cfg.eta,
+                amplitude: cfg.amplitude,
+                kind,
+                seed,
+                ..Default::default()
+            };
+            let mut tr = MgdTrainer::new(&mut dev, &data, mcfg, ScheduleKind::Cyclic);
+            tr.train(&opts, None)
+        })?;
+        emit(&mut csv, family, &outcomes)?;
+    }
+
+    // Fully-analog loop (sinusoids + highpass + lowpass bank, Fig. 2d).
+    {
+        let outcomes = replica_stats(replicas, ctx.seed, true, |seed| {
+            let mut dev = native_mlp(&[2, 2, 1], 1, seed)?;
+            let acfg = AnalogConfig {
+                tau_x: cfg.tau_x,
+                tau_theta: 1.0,
+                tau_hp: 10.0,
+                tau_p: 3, // Δf ≈ 0.33, the paper's analog bandwidth
+                // The analog loop's stable region sits at ~2x the discrete
+                // amplitude/learning rate (calibration in EXPERIMENTS.md).
+                eta: 2.0 * cfg.eta,
+                amplitude: 2.0 * cfg.amplitude,
+                seed,
+                ..Default::default()
+            };
+            let mut tr = AnalogTrainer::new(&mut dev, &data, acfg, ScheduleKind::Cyclic);
+            tr.train(&opts, None)
+        })?;
+        emit(&mut csv, "analog", &outcomes)?;
+    }
+    csv.flush()?;
+    println!("      -> {}", ctx.result_path("fig7.csv").display());
+    Ok(())
+}
+
+fn emit(
+    csv: &mut CsvWriter,
+    family: &str,
+    outcomes: &[crate::coordinator::ReplicaOutcome],
+) -> Result<()> {
+    for o in outcomes {
+        csv.row(&[
+            family.to_string(),
+            o.seed.to_string(),
+            (o.result.solved() as u8).to_string(),
+            o.result.solved_at.map_or(String::new(), |s| s.to_string()),
+        ])?;
+    }
+    let times: Vec<f64> = solve_times(outcomes).iter().map(|&t| t as f64).collect();
+    let frac = converged_fraction(outcomes);
+    match Quartiles::of(&times) {
+        Some(q) => println!(
+            "  {family:<16} solved {:>5.1}%  median {:>9.0}  [q1 {:>9.0}, q3 {:>9.0}]",
+            frac * 100.0,
+            q.median,
+            q.q1,
+            q.q3
+        ),
+        None => println!("  {family:<16} solved 0%"),
+    }
+    Ok(())
+}

@@ -1,0 +1,175 @@
+//! Fig. 8 — cost-readout noise (§3.5 test 1).
+//!
+//! NIST7x7 on 49-4-4 with additive Gaussian noise on every cost
+//! measurement.  σ_C is expressed relative to the perturbation amplitude
+//! Δθ (the paper normalizes "to the perturbation magnitude |θ̃|"; with
+//! Δθ-normalization our measured knee lands at σ ≈ 0.3–1, matching the
+//! paper's Fig. 8 axis).
+//!
+//! - (a) training time to 80% accuracy vs σ_C, for several fixed η:
+//!   below a threshold the noise is harmless; above it training slows
+//!   and then fails.
+//! - (b) max achievable η (≥80% of replicas converge) and the resulting
+//!   minimum training time vs σ_C: less noise → larger η → faster.
+//!
+//! Output: `results/fig8.csv`.
+
+use anyhow::Result;
+
+use super::common::native_mlp;
+use crate::config::RunContext;
+use crate::coordinator::{
+    converged_fraction, replica_stats, solve_times, MgdConfig, MgdTrainer, ScheduleKind,
+    TrainOptions,
+};
+use crate::datasets::nist7x7;
+use crate::metrics::{CsvWriter, Quartiles};
+use crate::noise::NoiseConfig;
+use crate::perturb::PerturbKind;
+
+#[derive(Debug, Clone)]
+pub struct Fig8Config {
+    pub replicas: usize,
+    pub amplitude: f32,
+    pub etas: Vec<f32>,
+    pub eta_grid: Vec<f32>,
+    pub sigma_rel: Vec<f32>,
+    pub max_steps: u64,
+    pub train_n: usize,
+    pub target_accuracy: f32,
+}
+
+impl Default for Fig8Config {
+    fn default() -> Self {
+        Fig8Config {
+            replicas: 10,
+            amplitude: 0.01,
+            // The paper's η = 0.5/1/3 are in its own unit convention; the
+            // calibrated equivalents for this implementation (EXPERIMENTS.md
+            // §Calibration) are ~30x smaller.
+            etas: vec![0.05, 0.1, 0.2],
+            eta_grid: vec![0.025, 0.05, 0.1, 0.2, 0.4],
+            sigma_rel: vec![0.0, 0.01, 0.03, 0.1, 0.3, 1.0, 3.0],
+            max_steps: 400_000,
+            train_n: 8192,
+            target_accuracy: 0.75,
+        }
+    }
+}
+
+const LAYERS: [usize; 3] = [49, 4, 4];
+
+fn cell(
+    ctx: &RunContext,
+    cfg: &Fig8Config,
+    sigma_rel: f32,
+    eta: f32,
+    replicas: usize,
+) -> Result<(f64, Option<f64>)> {
+    let data = nist7x7(cfg.train_n, ctx.seed);
+    // σ_C expressed in units of the per-parameter perturbation amplitude
+    // Δθ (normalizing by the full vector magnitude Δθ·√P places the
+    // paper's σ ≈ 1 knee at ~15x the cost-modulation scale and nothing
+    // trains; Δθ-normalization reproduces the knee — EXPERIMENTS.md).
+    let sigma_abs = sigma_rel * cfg.amplitude;
+    let outcomes = replica_stats(replicas, ctx.seed, true, |seed| {
+        let mut dev = native_mlp(&LAYERS, 1, seed)?;
+        let mcfg = MgdConfig {
+            tau_x: 1,
+            tau_theta: 1,
+            tau_p: 1,
+            eta,
+            amplitude: cfg.amplitude,
+            kind: PerturbKind::RademacherCode,
+            noise: NoiseConfig { sigma_cost: sigma_abs, sigma_update: 0.0 },
+            seed,
+            ..Default::default()
+        };
+        let mut tr = MgdTrainer::new(&mut dev, &data, mcfg, ScheduleKind::Cyclic);
+        let opts = TrainOptions {
+            max_steps: ctx.scaled(cfg.max_steps, 20_000),
+            eval_every: 4000,
+            target_accuracy: Some(cfg.target_accuracy),
+            ..Default::default()
+        };
+        tr.train(&opts, None)
+    })?;
+    let frac = converged_fraction(&outcomes);
+    let times: Vec<f64> = solve_times(&outcomes).iter().map(|&t| t as f64).collect();
+    Ok((frac, Quartiles::of(&times).map(|q| q.median)))
+}
+
+impl Fig8Config {
+    fn load(ctx: &RunContext) -> Result<Self> {
+        let d = Fig8Config::default();
+        let o = ctx.overrides("fig8")?;
+        Ok(Fig8Config {
+            replicas: o.usize("replicas", d.replicas)?,
+            amplitude: o.f32("amplitude", d.amplitude)?,
+            etas: o.f32_vec("etas", &d.etas)?,
+            eta_grid: o.f32_vec("eta_grid", &d.eta_grid)?,
+            sigma_rel: o.f32_vec("sigma_rel", &d.sigma_rel)?,
+            max_steps: o.u64("max_steps", d.max_steps)?,
+            train_n: o.usize("train_n", d.train_n)?,
+            target_accuracy: o.f32("target_accuracy", d.target_accuracy)?,
+        })
+    }
+}
+
+pub fn run(ctx: &RunContext) -> Result<()> {
+    let cfg = Fig8Config::load(ctx)?;
+    let replicas = ctx.scaled(cfg.replicas as u64, 3) as usize;
+
+    let mut csv = CsvWriter::create(
+        ctx.result_path("fig8.csv"),
+        &["panel", "sigma_c_rel", "eta", "converged_fraction", "median_steps"],
+    )?;
+
+    println!("fig8(a): training time vs cost noise (NIST7x7, target {}% acc)", cfg.target_accuracy * 100.0);
+    for &eta in &cfg.etas {
+        for &s in &cfg.sigma_rel {
+            let (frac, median) = cell(ctx, &cfg, s, eta, replicas)?;
+            let med = median.map_or(String::new(), |m| format!("{m:.0}"));
+            println!(
+                "  eta={eta:<4} sigma={s:<5} solved {:>5.1}%  median {}",
+                frac * 100.0,
+                if med.is_empty() { "-" } else { &med }
+            );
+            csv.row(&[
+                "a_fixed_eta".into(),
+                s.to_string(),
+                eta.to_string(),
+                format!("{frac:.3}"),
+                med,
+            ])?;
+        }
+    }
+
+    println!("fig8(b): max eta vs cost noise");
+    for &s in &cfg.sigma_rel {
+        let mut best: Option<(f32, f64)> = None;
+        for &eta in &cfg.eta_grid {
+            let (frac, median) = cell(ctx, &cfg, s, eta, replicas.min(6))?;
+            if frac >= 0.8 {
+                if let Some(m) = median {
+                    if best.map_or(true, |(be, _)| eta > be) {
+                        best = Some((eta, m));
+                    }
+                }
+            }
+        }
+        let (eta_str, med_str) = match best {
+            Some((e, m)) => (e.to_string(), format!("{m:.0}")),
+            None => (String::new(), String::new()),
+        };
+        println!(
+            "  sigma={s:<5} max_eta {}  min time {}",
+            if eta_str.is_empty() { "-" } else { &eta_str },
+            if med_str.is_empty() { "-" } else { &med_str }
+        );
+        csv.row(&["b_max_eta".into(), s.to_string(), eta_str, "".into(), med_str])?;
+    }
+    csv.flush()?;
+    println!("      -> {}", ctx.result_path("fig8.csv").display());
+    Ok(())
+}

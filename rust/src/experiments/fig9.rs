@@ -1,0 +1,136 @@
+//! Fig. 9 — noisy parameter updates (§3.5 test 2, Eq. 5).
+//!
+//! XOR on 2-2-1 with Gaussian noise added to every weight update,
+//! θ ← θ − ηG + θ_noise, θ_noise ~ N(0, σθ·Δθ) (σθ expressed in units of
+//! the perturbation amplitude, as in the paper's normalization).
+//!
+//! Reproduced phenomena:
+//! - (a) at τθ = 1, large σθ prevents convergence entirely, and
+//!   *increasing* η can rescue it (ηG must outgrow the noise floor);
+//! - (b) at τθ = 100 the accumulated G makes ηG ~100× larger relative to
+//!   the per-update noise, so even the largest σθ trains fine;
+//! - (c, d) training time vs η for both τθ.
+//!
+//! Output: `results/fig9.csv`.
+
+use anyhow::Result;
+
+use super::common::native_mlp;
+use crate::config::RunContext;
+use crate::coordinator::{
+    converged_fraction, replica_stats, solve_times, MgdConfig, MgdTrainer, ScheduleKind,
+    TrainOptions,
+};
+use crate::datasets::xor;
+use crate::metrics::{CsvWriter, Quartiles};
+use crate::noise::NoiseConfig;
+use crate::perturb::PerturbKind;
+
+#[derive(Debug, Clone)]
+pub struct Fig9Config {
+    pub replicas: usize,
+    pub amplitude: f32,
+    pub sigmas: Vec<f32>,
+    pub etas: Vec<f32>,
+    pub tau_thetas: Vec<u64>,
+    pub max_steps: u64,
+    pub target_accuracy: f32,
+}
+
+impl Default for Fig9Config {
+    fn default() -> Self {
+        Fig9Config {
+            replicas: 16,
+            amplitude: 0.05,
+            sigmas: vec![0.0, 0.01, 0.03, 0.1, 0.3],
+            etas: vec![0.05, 0.1, 0.2, 0.5, 1.0, 2.0, 5.0, 10.0],
+            tau_thetas: vec![1, 100],
+            max_steps: 300_000,
+            target_accuracy: 0.93,
+        }
+    }
+}
+
+impl Fig9Config {
+    fn load(ctx: &RunContext) -> Result<Self> {
+        let d = Fig9Config::default();
+        let o = ctx.overrides("fig9")?;
+        Ok(Fig9Config {
+            replicas: o.usize("replicas", d.replicas)?,
+            amplitude: o.f32("amplitude", d.amplitude)?,
+            sigmas: o.f32_vec("sigmas", &d.sigmas)?,
+            etas: o.f32_vec("etas", &d.etas)?,
+            tau_thetas: o.u64_vec("tau_thetas", &d.tau_thetas)?,
+            max_steps: o.u64("max_steps", d.max_steps)?,
+            target_accuracy: o.f32("target_accuracy", d.target_accuracy)?,
+        })
+    }
+}
+
+pub fn run(ctx: &RunContext) -> Result<()> {
+    let cfg = Fig9Config::load(ctx)?;
+    let replicas = ctx.scaled(cfg.replicas as u64, 4) as usize;
+    let data = xor();
+
+    let mut csv = CsvWriter::create(
+        ctx.result_path("fig9.csv"),
+        &["tau_theta", "sigma_theta", "eta", "converged_fraction", "median_steps"],
+    )?;
+
+    for &tau in &cfg.tau_thetas {
+        println!("fig9: tau_theta = {tau}");
+        for &sigma in &cfg.sigmas {
+            for &eta in &cfg.etas {
+                let outcomes = replica_stats(replicas, ctx.seed, true, |seed| {
+                    let mut dev = native_mlp(&[2, 2, 1], 1, seed)?;
+                    let mcfg = MgdConfig {
+                        tau_x: 1,
+                        tau_theta: tau,
+                        tau_p: 1,
+                        eta,
+                        amplitude: cfg.amplitude,
+                        kind: PerturbKind::RademacherCode,
+                        noise: NoiseConfig {
+                            sigma_cost: 0.0,
+                            // σθ in units of Δθ (paper's normalization).
+                            sigma_update: sigma * cfg.amplitude,
+                        },
+                        seed,
+                        ..Default::default()
+                    };
+                    let mut tr =
+                        MgdTrainer::new(&mut dev, &data, mcfg, ScheduleKind::Cyclic);
+                    let opts = TrainOptions {
+                        max_steps: ctx.scaled(cfg.max_steps, 20_000),
+                        eval_every: 500.max(tau),
+                        target_accuracy: Some(cfg.target_accuracy),
+                        ..Default::default()
+                    };
+                    tr.train(&opts, None)
+                })?;
+                let frac = converged_fraction(&outcomes);
+                let times: Vec<f64> =
+                    solve_times(&outcomes).iter().map(|&t| t as f64).collect();
+                let med = Quartiles::of(&times)
+                    .map_or(String::new(), |q| format!("{:.0}", q.median));
+                csv.row(&[
+                    tau.to_string(),
+                    sigma.to_string(),
+                    eta.to_string(),
+                    format!("{frac:.3}"),
+                    med.clone(),
+                ])?;
+                if frac > 0.0 {
+                    println!(
+                        "  sigma={sigma:<5} eta={eta:<5} converged {:>5.1}%  median {}",
+                        frac * 100.0,
+                        if med.is_empty() { "-" } else { &med }
+                    );
+                }
+            }
+        }
+    }
+    csv.flush()?;
+    println!("      -> {}", ctx.result_path("fig9.csv").display());
+    Ok(())
+}

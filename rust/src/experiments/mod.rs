@@ -1,0 +1,56 @@
+//! One harness per figure/table in the paper's evaluation (DESIGN.md §5).
+//!
+//! Every harness:
+//! 1. has compiled-in defaults reproducing the paper's settings (scaled
+//!    for the CPU testbed via [`RunContext::scale`]),
+//! 2. prints the paper's rows/series to stdout, and
+//! 3. writes `results/<id>.csv` for plotting.
+//!
+//! Run them with `mgd run <id>` (or `mgd run all`).
+
+pub mod common;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod fig10;
+pub mod table2;
+pub mod table3;
+
+use anyhow::{bail, Result};
+
+use crate::config::RunContext;
+
+/// All experiment ids, in paper order.
+pub const ALL: &[&str] = &[
+    "fig2", "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "table2", "table3",
+];
+
+/// Dispatch an experiment by id.
+pub fn run(id: &str, ctx: &RunContext) -> Result<()> {
+    match id {
+        "fig2" => fig2::run(ctx),
+        "fig3" => fig3::run(ctx),
+        "fig4" => fig4::run(ctx),
+        "fig5" => fig5::run(ctx),
+        "fig6" => fig6::run(ctx),
+        "fig7" => fig7::run(ctx),
+        "fig8" => fig8::run(ctx),
+        "fig9" => fig9::run(ctx),
+        "fig10" => fig10::run(ctx),
+        "table2" => table2::run(ctx),
+        "table3" => table3::run(ctx),
+        "all" => {
+            for id in ALL {
+                eprintln!("\n================ {id} ================");
+                run(id, ctx)?;
+            }
+            Ok(())
+        }
+        other => bail!("unknown experiment {other:?}; known: {ALL:?} or 'all'"),
+    }
+}

@@ -1,0 +1,270 @@
+//! Table 2 — MGD vs backpropagation on the paper's four datasets.
+//!
+//! Runs the fused on-chip MGD trainer (PJRT `mgd_scan` artifact, random
+//! code perturbations) for each row and reports test accuracy at
+//! geometric step checkpoints, plus the backprop-SGD accuracy on the same
+//! network as the comparator column.
+//!
+//! Substitutions & scaling (DESIGN.md §3, EXPERIMENTS.md):
+//! - Fashion-MNIST / CIFAR-10 → seeded synthetic 10-class image sets
+//!   (identical tensor shapes);
+//! - step budgets default to ~10³–10⁵ on this CPU testbed instead of the
+//!   paper's 10⁷ (scaled via `--scale`); the *shape* under test is MGD
+//!   climbing toward (but trailing) backprop, τθ having marginal effect,
+//!   and large batch training stably.
+//!
+//! Output: `results/table2.csv`.
+
+use anyhow::Result;
+
+use crate::config::RunContext;
+use crate::coordinator::{MgdConfig, OnChipTrainer, TrainOptions};
+use crate::datasets::{nist7x7, parity, synthetic_cifar, synthetic_fmnist, Dataset};
+use crate::metrics::CsvWriter;
+use crate::optim::{init_params, BackpropTrainer};
+use crate::perturb::PerturbKind;
+use crate::rng::Rng;
+use crate::runtime::Runtime;
+
+#[derive(Debug, Clone)]
+pub struct Table2Config {
+    /// Per-row MGD step budgets (before `--scale`).
+    pub steps_xor: u64,
+    pub steps_nist: u64,
+    pub steps_fmnist: u64,
+    pub steps_cifar: u64,
+    /// Backprop step budgets.
+    pub bp_steps_small: u64,
+    pub bp_steps_cnn: u64,
+    /// τθ sweep for the Fashion rows.
+    pub fmnist_tau_thetas: Vec<u64>,
+    pub amplitude: f32,
+    pub eta_cnn: f32,
+}
+
+impl Default for Table2Config {
+    fn default() -> Self {
+        Table2Config {
+            steps_xor: 20_000,
+            steps_nist: 1_000_000,
+            // CNN budgets sit inside the η=0.05 stability window validated
+            // by the E2E example (divergence observed past ~2.5k steps).
+            steps_fmnist: 2_000,
+            steps_cifar: 1_000,
+            bp_steps_small: 20_000,
+            bp_steps_cnn: 1_500,
+            fmnist_tau_thetas: vec![1, 10, 100, 1000],
+            amplitude: 0.01,
+            // 0.05 sits on the stability edge (diverges for some inits
+            // past ~1k steps); 0.02 climbs monotonically for all tested.
+            eta_cnn: 0.02,
+        }
+    }
+}
+
+struct Row {
+    task: &'static str,
+    model: &'static str,
+    dataset: Dataset,
+    eval: Dataset,
+    tau_theta: u64,
+    eta: f32,
+    steps: u64,
+    bp_steps: u64,
+    bp_eta: f32,
+}
+
+impl Table2Config {
+    fn load(ctx: &RunContext) -> Result<Self> {
+        let d = Table2Config::default();
+        let o = ctx.overrides("table2")?;
+        Ok(Table2Config {
+            steps_xor: o.u64("steps_xor", d.steps_xor)?,
+            steps_nist: o.u64("steps_nist", d.steps_nist)?,
+            steps_fmnist: o.u64("steps_fmnist", d.steps_fmnist)?,
+            steps_cifar: o.u64("steps_cifar", d.steps_cifar)?,
+            bp_steps_small: o.u64("bp_steps_small", d.bp_steps_small)?,
+            bp_steps_cnn: o.u64("bp_steps_cnn", d.bp_steps_cnn)?,
+            fmnist_tau_thetas: o.u64_vec("fmnist_tau_thetas", &d.fmnist_tau_thetas)?,
+            amplitude: o.f32("amplitude", d.amplitude)?,
+            eta_cnn: o.f32("eta_cnn", d.eta_cnn)?,
+        })
+    }
+}
+
+pub fn run(ctx: &RunContext) -> Result<()> {
+    let cfg = Table2Config::load(ctx)?;
+    let rt = Runtime::new(&ctx.artifact_dir)?;
+
+    let mut rows: Vec<Row> = Vec::new();
+    // XOR row (paper: τθ=1, η=5, batch 1).
+    rows.push(Row {
+        task: "2-bit parity",
+        model: "xor221",
+        dataset: parity(2),
+        eval: parity(2),
+        tau_theta: 1,
+        eta: 0.5,
+        steps: ctx.scaled(cfg.steps_xor, 2_000),
+        bp_steps: ctx.scaled(cfg.bp_steps_small, 2_000),
+        bp_eta: 0.5,
+    });
+    // NIST7x7 rows (paper: η = 3 and 0.5 in its unit convention; the
+    // calibrated equivalents here are 0.2 and 0.1 — EXPERIMENTS.md
+    // §Calibration — preserving the "larger η faster early, smaller η
+    // better late" contrast).
+    for eta in [0.2f32, 0.1] {
+        let train = nist7x7(44_136, ctx.seed);
+        let eval = nist7x7(2048, ctx.seed + 999);
+        rows.push(Row {
+            task: "N-I-S-T",
+            model: "nist744",
+            dataset: train,
+            eval,
+            tau_theta: 1,
+            eta,
+            steps: ctx.scaled(cfg.steps_nist, 10_000),
+            bp_steps: ctx.scaled(cfg.bp_steps_small, 2_000),
+            bp_eta: 0.5,
+        });
+    }
+    // Fashion rows: τθ sweep (paper: τθ ∈ {1,10,100,1000}, η=9, batch 1000
+    // — here scan batch 100, synthetic data, scaled steps).
+    for &tau in &cfg.fmnist_tau_thetas {
+        let train = synthetic_fmnist(8192, ctx.seed);
+        let (train, eval) = train.split_test(1024);
+        rows.push(Row {
+            task: "Fashion-MNIST(synthetic)",
+            model: "fmnist_cnn",
+            dataset: train,
+            eval,
+            tau_theta: tau,
+            eta: cfg.eta_cnn,
+            steps: ctx.scaled(cfg.steps_fmnist, 200),
+            bp_steps: ctx.scaled(cfg.bp_steps_cnn, 200),
+            bp_eta: 0.1,
+        });
+    }
+    // CIFAR row.
+    {
+        let train = synthetic_cifar(4096, ctx.seed);
+        let (train, eval) = train.split_test(512);
+        rows.push(Row {
+            task: "CIFAR-10(synthetic)",
+            model: "cifar_cnn",
+            dataset: train,
+            eval,
+            tau_theta: 1,
+            eta: cfg.eta_cnn,
+            steps: ctx.scaled(cfg.steps_cifar, 150),
+            bp_steps: ctx.scaled(cfg.bp_steps_cnn, 150),
+            bp_eta: 0.1,
+        });
+    }
+
+    let mut csv = CsvWriter::create(
+        ctx.result_path("table2.csv"),
+        &[
+            "task",
+            "model",
+            "params",
+            "tau_theta",
+            "eta",
+            "checkpoint_steps",
+            "mgd_accuracy",
+            "backprop_accuracy",
+        ],
+    )?;
+
+    println!(
+        "{:<26} {:<11} {:>6} {:>5} {:>5}  accuracy@checkpoints (MGD) | backprop",
+        "task", "model", "P", "tau", "eta"
+    );
+    // Backprop column is per (task, model); cache it.
+    let mut bp_cache: std::collections::HashMap<String, f32> = Default::default();
+
+    for row in &rows {
+        let meta = rt.manifest.model(row.model)?.clone();
+        let mut rng = Rng::new(ctx.seed ^ 0x7ab2_e2e2);
+        let mut theta = vec![0f32; meta.param_count];
+        init_params(&mut rng, &meta.tensors, &mut theta);
+
+        // --- backprop comparator (cached per model) -----------------------
+        let bp_key = row.model.to_string();
+        if !bp_cache.contains_key(&bp_key) {
+            let mut bp =
+                BackpropTrainer::new(&rt, row.model, &row.dataset, theta.clone(), row.bp_eta, ctx.seed)?;
+            let opts = TrainOptions {
+                max_steps: row.bp_steps,
+                eval_every: (row.bp_steps / 10).max(1),
+                ..Default::default()
+            };
+            let res = bp.train(&opts, Some(&row.eval))?;
+            let best = res
+                .eval_trace
+                .iter()
+                .map(|&(_, _, a)| a)
+                .fold(0f32, f32::max);
+            bp_cache.insert(bp_key.clone(), best);
+        }
+        let bp_acc = bp_cache[&bp_key];
+
+        // --- MGD on-chip run ----------------------------------------------
+        let mcfg = MgdConfig {
+            tau_x: 1,
+            tau_theta: row.tau_theta,
+            tau_p: 1,
+            eta: row.eta,
+            amplitude: cfg.amplitude,
+            kind: PerturbKind::RademacherCode,
+            seed: ctx.seed,
+            ..Default::default()
+        };
+        let mut tr = OnChipTrainer::new(&rt, row.model, &row.dataset, theta, mcfg)?;
+        // Geometric checkpoints: 4 per run.
+        let cps: Vec<u64> = (1..=4u32)
+            .map(|i| {
+                (row.steps as f64).powf(i as f64 / 4.0).round() as u64
+            })
+            .map(|v| v.max(tr.window_steps() as u64))
+            .collect();
+        let mut acc_at = Vec::new();
+        for &cp in &cps {
+            while tr.steps() < cp {
+                tr.window()?;
+            }
+            let (_, correct) = tr.evaluate(&row.eval)?;
+            acc_at.push((tr.steps(), correct / row.eval.n as f32));
+        }
+
+        let accs: Vec<String> = acc_at
+            .iter()
+            .map(|(s, a)| format!("{:.1}%@{}", a * 100.0, s))
+            .collect();
+        println!(
+            "{:<26} {:<11} {:>6} {:>5} {:>5}  {} | {:.1}%",
+            row.task,
+            row.model,
+            meta.param_count,
+            row.tau_theta,
+            row.eta,
+            accs.join(" "),
+            bp_acc * 100.0
+        );
+        for (s, a) in &acc_at {
+            csv.row(&[
+                row.task.into(),
+                row.model.into(),
+                meta.param_count.to_string(),
+                row.tau_theta.to_string(),
+                row.eta.to_string(),
+                s.to_string(),
+                format!("{a:.4}"),
+                format!("{bp_acc:.4}"),
+            ])?;
+        }
+    }
+    csv.flush()?;
+    println!("      -> {}", ctx.result_path("table2.csv").display());
+    Ok(())
+}

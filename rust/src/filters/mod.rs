@@ -1,0 +1,182 @@
+//! Single-pole analog filters for the continuous-time MGD loop
+//! (Algorithm 2 of the paper).
+//!
+//! The analog implementation replaces the discrete subtraction of the
+//! baseline cost C₀ with a **highpass** filter at the network output
+//! (extracting C̃ from C) and replaces the discrete accumulate-and-reset
+//! gradient integrator with a **lowpass** filter at every parameter
+//! (leaky integration of the error signal `e(t)` into `G(t)`).
+//! Both are the discretized RC filters given verbatim in Algorithm 2.
+
+/// Discretized single-pole highpass: Algorithm 2 line 8,
+///
+/// `C̃(t) = τ_hp/(τ_hp + dt) · (C̃(t−dt) + C(t) − C(t−dt))`
+#[derive(Debug, Clone)]
+pub struct Highpass {
+    tau: f64,
+    dt: f64,
+    prev_in: f64,
+    state: f64,
+    primed: bool,
+}
+
+impl Highpass {
+    pub fn new(tau: f64, dt: f64) -> Self {
+        assert!(tau > 0.0 && dt > 0.0);
+        Highpass { tau, dt, prev_in: 0.0, state: 0.0, primed: false }
+    }
+
+    /// Process one input sample, returning the highpassed output.
+    pub fn step(&mut self, input: f64) -> f64 {
+        if !self.primed {
+            // Start from rest at the first observed input so turning the
+            // filter on does not inject a spurious step edge.
+            self.prev_in = input;
+            self.primed = true;
+        }
+        let a = self.tau / (self.tau + self.dt);
+        self.state = a * (self.state + input - self.prev_in);
+        self.prev_in = input;
+        self.state
+    }
+
+    pub fn reset(&mut self) {
+        self.state = 0.0;
+        self.primed = false;
+    }
+}
+
+/// Discretized single-pole lowpass (leaky integrator): Algorithm 2 line 10,
+///
+/// `G(t) = dt/(τ + dt) · (e(t) + (τ/dt) · G(t−dt))`
+#[derive(Debug, Clone)]
+pub struct Lowpass {
+    tau: f64,
+    dt: f64,
+    state: f64,
+}
+
+impl Lowpass {
+    pub fn new(tau: f64, dt: f64) -> Self {
+        assert!(tau > 0.0 && dt > 0.0);
+        Lowpass { tau, dt, state: 0.0 }
+    }
+
+    /// Process one input sample, returning the filtered output.
+    pub fn step(&mut self, input: f64) -> f64 {
+        self.state = self.dt / (self.tau + self.dt) * (input + self.tau / self.dt * self.state);
+        self.state
+    }
+
+    pub fn value(&self) -> f64 {
+        self.state
+    }
+
+    pub fn reset(&mut self) {
+        self.state = 0.0;
+    }
+}
+
+/// A bank of independent lowpass filters, one per parameter (the analog
+/// gradient integrator of Fig. 1b).
+#[derive(Debug, Clone)]
+pub struct LowpassBank {
+    tau: f64,
+    dt: f64,
+    state: Vec<f64>,
+}
+
+impl LowpassBank {
+    pub fn new(n: usize, tau: f64, dt: f64) -> Self {
+        assert!(tau > 0.0 && dt > 0.0);
+        LowpassBank { tau, dt, state: vec![0.0; n] }
+    }
+
+    /// Step every filter with its own input; `out[i]` receives filter i's
+    /// output. `inputs` and `out` may alias the same logical signal, but
+    /// must be distinct slices.
+    pub fn step(&mut self, inputs: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(inputs.len(), self.state.len());
+        debug_assert_eq!(out.len(), self.state.len());
+        let a = self.dt / (self.tau + self.dt);
+        let b = self.tau / self.dt;
+        for ((s, &x), o) in self.state.iter_mut().zip(inputs).zip(out.iter_mut()) {
+            *s = a * (x as f64 + b * *s);
+            *o = *s as f32;
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.state.fill(0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn highpass_blocks_dc() {
+        let mut hp = Highpass::new(10.0, 1.0);
+        let mut last = f64::NAN;
+        for _ in 0..500 {
+            last = hp.step(3.7);
+        }
+        assert!(last.abs() < 1e-6, "DC leaked through: {last}");
+    }
+
+    #[test]
+    fn highpass_passes_edges() {
+        let mut hp = Highpass::new(50.0, 1.0);
+        for _ in 0..100 {
+            hp.step(0.0);
+        }
+        let edge = hp.step(1.0);
+        assert!(edge > 0.9, "step edge attenuated: {edge}");
+    }
+
+    #[test]
+    fn highpass_no_startup_transient() {
+        let mut hp = Highpass::new(10.0, 1.0);
+        let first = hp.step(5.0);
+        assert_eq!(first, 0.0, "first sample must not see a turn-on edge");
+    }
+
+    #[test]
+    fn lowpass_converges_to_dc() {
+        let mut lp = Lowpass::new(5.0, 1.0);
+        let mut last = 0.0;
+        for _ in 0..200 {
+            last = lp.step(2.0);
+        }
+        assert!((last - 2.0).abs() < 1e-6, "lowpass DC gain wrong: {last}");
+    }
+
+    #[test]
+    fn lowpass_time_constant_scale() {
+        // After exactly tau steps of a unit input, a single-pole RC reaches
+        // roughly 1 - 1/e of the final value.
+        let tau = 50.0;
+        let mut lp = Lowpass::new(tau, 1.0);
+        let mut v = 0.0;
+        for _ in 0..(tau as usize) {
+            v = lp.step(1.0);
+        }
+        assert!((v - 0.632).abs() < 0.05, "after tau steps got {v}");
+    }
+
+    #[test]
+    fn bank_matches_scalar_filter() {
+        let mut bank = LowpassBank::new(3, 7.0, 0.5);
+        let mut single = Lowpass::new(7.0, 0.5);
+        let mut out = vec![0f32; 3];
+        for t in 0..100 {
+            let x = (t as f64 * 0.3).sin() as f32;
+            bank.step(&[x, 0.0, x], &mut out);
+            let want = single.step(x as f64) as f32;
+            assert!((out[0] - want).abs() < 1e-6);
+            assert!((out[2] - want).abs() < 1e-6);
+            assert_eq!(out[1], 0.0);
+        }
+    }
+}

@@ -1,0 +1,67 @@
+//! # mgd — Multiplexed Gradient Descent for hardware neural networks
+//!
+//! Rust + JAX + Pallas reproduction of McCaughan et al., *"Multiplexed
+//! gradient descent: Fast online training of modern datasets on hardware
+//! neural networks without backpropagation"* (2023, DOI 10.1063/5.0157645).
+//!
+//! The crate is the paper's **L3 coordinator**: a model-free training
+//! framework that perturbs the parameters of a black-box inference device,
+//! observes only the scalar cost at the device output, extracts the
+//! gradient by homodyne detection (Eq. 3), and performs gradient descent
+//! (Eq. 4) — no backpropagation anywhere on the request path.
+//!
+//! Modules:
+//!
+//! - [`runtime`] — PJRT client; loads AOT HLO artifacts built by
+//!   `python/compile/aot.py` (L2 JAX models calling L1 Pallas kernels).
+//! - [`device`] — the black-box hardware abstraction ([`device::HardwareDevice`]):
+//!   PJRT-backed, pure-Rust native (with per-neuron defects, §3.5), or
+//!   remote-over-TCP (chip-in-the-loop, §4/§6).
+//! - [`perturb`] — the four perturbation families of §3.4 / Fig. 1c.
+//! - [`coordinator`] — Algorithm 1 (discrete), Algorithm 2 (analog), and
+//!   the fused on-chip window driver; time constants τp, τθ, τx.
+//! - [`optim`] — MGD update rule plus baselines (backprop-SGD, RWC).
+//! - [`datasets`] — XOR / n-bit parity / NIST7x7 / synthetic image sets.
+//! - [`noise`], [`filters`] — §3.5 imperfection models, analog RC filters.
+//! - [`experiments`] — one harness per paper figure/table (DESIGN.md §5).
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod json;
+pub mod par;
+pub mod datasets;
+pub mod device;
+pub mod experiments;
+pub mod filters;
+pub mod metrics;
+pub mod noise;
+pub mod optim;
+pub mod perturb;
+pub mod rng;
+pub mod runtime;
+
+/// Default artifact directory (relative to the repo root).
+pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";
+
+/// Locate the artifact directory: `$MGD_ARTIFACT_DIR`, else walk up from
+/// the current directory looking for `artifacts/manifest.json`.
+pub fn find_artifact_dir() -> anyhow::Result<std::path::PathBuf> {
+    if let Ok(dir) = std::env::var("MGD_ARTIFACT_DIR") {
+        return Ok(std::path::PathBuf::from(dir));
+    }
+    let mut cur = std::env::current_dir()?;
+    loop {
+        let candidate = cur.join(DEFAULT_ARTIFACT_DIR);
+        if candidate.join("manifest.json").exists() {
+            return Ok(candidate);
+        }
+        if !cur.pop() {
+            anyhow::bail!(
+                "artifacts/manifest.json not found in any parent directory; \
+                 run `make artifacts` or set MGD_ARTIFACT_DIR"
+            );
+        }
+    }
+}

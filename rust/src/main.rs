@@ -1,0 +1,304 @@
+//! `mgd` — the MGD framework CLI.
+//!
+//! ```text
+//! mgd run <experiment>     regenerate a paper figure/table (fig2..fig10,
+//!                          table2, table3, all)
+//! mgd train [...]          train a model with MGD
+//! mgd serve [...]          expose a local device over TCP
+//! mgd info                 list models + artifacts from the manifest
+//! ```
+//!
+//! Global options: `--artifacts DIR --results DIR --configs DIR`
+//! `--scale F --seed N`.  Argument parsing is the in-repo [`mgd::cli`]
+//! substrate (offline build, no clap).
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use mgd::cli::Args;
+use mgd::config::RunContext;
+use mgd::coordinator::{MgdConfig, MgdTrainer, OnChipTrainer, ScheduleKind, TrainOptions};
+use mgd::datasets::{self, Dataset};
+use mgd::device::{server, HardwareDevice, NativeDevice, PjrtDevice, RemoteDevice};
+use mgd::optim::{init_params, init_params_uniform};
+use mgd::perturb::PerturbKind;
+use mgd::rng::Rng;
+use mgd::runtime::Runtime;
+
+const USAGE: &str = "\
+mgd — Multiplexed Gradient Descent for hardware neural networks
+
+USAGE:
+  mgd run <experiment>   regenerate a paper figure/table
+                         (fig2 fig3 fig4 fig5 fig6 fig7 fig8 fig9 fig10
+                          table2 table3 | all)
+  mgd train [opts]       train a model with MGD
+  mgd serve [opts]       serve a device over TCP (chip-in-the-loop)
+  mgd info               list models and artifacts
+
+GLOBAL OPTIONS:
+  --artifacts DIR   artifact directory (default: search for artifacts/)
+  --results DIR     CSV output directory (default: results)
+  --configs DIR     per-experiment JSON overrides (default: configs)
+  --scale F         budget scale, e.g. 0.1 for a fast smoke run (default 1)
+  --seed N          base seed (default 42)
+
+TRAIN OPTIONS:
+  --model M         xor221 | parity441 | nist744 | fmnist_cnn | cifar_cnn
+  --mode M          onchip | loop | analog        (default onchip)
+  --device D        native | pjrt | remote:ADDR   (default pjrt; loop/analog)
+  --steps N         total MGD timesteps            (default 10000)
+  --eta F           learning rate                  (default 1.0)
+  --amplitude F     perturbation amplitude Δθ      (default 0.01)
+  --tau-x N --tau-theta N --tau-p N                (defaults 1)
+  --perturb P       rademacher | walsh | sequential | sinusoidal
+  --sigma-cost F --sigma-update F                  noise injection (§3.5)
+  --eval-every N    evaluation cadence             (default 1000)
+
+SERVE OPTIONS:
+  --model M --device native|pjrt --addr HOST:PORT --max-sessions N
+  --defects F       activation-defect strength (native device, Fig. 10)
+";
+
+const GLOBAL_OPTS: &[&str] = &["artifacts", "results", "configs", "scale", "seed", "help"];
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(argv, &["help"])?;
+    if args.has_flag("help") || args.positional().is_empty() {
+        print!("{USAGE}");
+        return Ok(());
+    }
+
+    let artifact_dir = match args.get("artifacts") {
+        Some(dir) => PathBuf::from(dir),
+        None => mgd::find_artifact_dir()?,
+    };
+    let mut ctx = RunContext::new(
+        artifact_dir,
+        PathBuf::from(args.str_or("results", "results")),
+        PathBuf::from(args.str_or("configs", "configs")),
+    );
+    ctx.scale = args.f64_or("scale", 1.0)?;
+    ctx.seed = args.u64_or("seed", 42)?;
+
+    match args.positional()[0].as_str() {
+        "run" => {
+            let known: Vec<&str> = GLOBAL_OPTS.to_vec();
+            args.check_known(&known)?;
+            let Some(exp) = args.positional().get(1) else {
+                bail!("mgd run <experiment>; see --help");
+            };
+            mgd::experiments::run(exp, &ctx)
+        }
+        "info" => info(&ctx),
+        "train" => {
+            let mut known = GLOBAL_OPTS.to_vec();
+            known.extend([
+                "model", "mode", "device", "steps", "eta", "amplitude", "tau-x", "tau-theta",
+                "tau-p", "perturb", "sigma-cost", "sigma-update", "eval-every",
+            ]);
+            args.check_known(&known)?;
+            let cfg = MgdConfig {
+                tau_x: args.u64_or("tau-x", 1)?,
+                tau_theta: args.u64_or("tau-theta", 1)?,
+                tau_p: args.u64_or("tau-p", 1)?,
+                eta: args.f32_or("eta", 1.0)?,
+                amplitude: args.f32_or("amplitude", 0.01)?,
+                kind: args.str_or("perturb", "rademacher").parse::<PerturbKind>()?,
+                noise: mgd::noise::NoiseConfig {
+                    sigma_cost: args.f32_or("sigma-cost", 0.0)?,
+                    sigma_update: args.f32_or("sigma-update", 0.0)?,
+                },
+                seed: ctx.seed,
+            };
+            train(
+                &ctx,
+                &args.str_or("model", "xor221"),
+                &args.str_or("mode", "onchip"),
+                &args.str_or("device", "pjrt"),
+                args.u64_or("steps", 10_000)?,
+                cfg,
+                args.u64_or("eval-every", 1000)?,
+            )
+        }
+        "serve" => {
+            let mut known = GLOBAL_OPTS.to_vec();
+            known.extend(["model", "device", "addr", "max-sessions", "defects"]);
+            args.check_known(&known)?;
+            let model = args.str_or("model", "xor221");
+            let device = args.str_or("device", "native");
+            let rt = if device == "pjrt" { Some(Runtime::new(&ctx.artifact_dir)?) } else { None };
+            let dev = build_device(&ctx, rt.as_ref(), &model, &device)?;
+            let max_sessions = args.usize_or("max-sessions", 0)?;
+            let max = if max_sessions == 0 { None } else { Some(max_sessions) };
+            server::serve(dev, &args.str_or("addr", "127.0.0.1:7171"), max)
+        }
+        other => bail!("unknown command {other:?}; see --help"),
+    }
+}
+
+/// Dataset for a model id (training, eval).
+fn model_dataset(model: &str, seed: u64) -> Result<(Dataset, Dataset)> {
+    Ok(match model {
+        "xor221" => (datasets::parity(2), datasets::parity(2)),
+        "parity441" => (datasets::parity(4), datasets::parity(4)),
+        "nist744" => (datasets::nist7x7(44_136, seed), datasets::nist7x7(2048, seed + 999)),
+        "fmnist_cnn" => datasets::synthetic_fmnist(8192, seed).split_test(1024),
+        "cifar_cnn" => datasets::synthetic_cifar(4096, seed).split_test(512),
+        other => bail!("no dataset mapping for model {other:?}"),
+    })
+}
+
+/// MLP layer widths for native devices.
+fn model_layers(model: &str) -> Result<Vec<usize>> {
+    Ok(match model {
+        "xor221" => vec![2, 2, 1],
+        "parity441" => vec![4, 4, 1],
+        "nist744" => vec![49, 4, 4],
+        other => bail!("model {other:?} has no native (pure-Rust MLP) form; use --device pjrt"),
+    })
+}
+
+fn build_device(
+    ctx: &RunContext,
+    rt: Option<&Runtime>,
+    model: &str,
+    device: &str,
+) -> Result<Box<dyn HardwareDevice>> {
+    if let Some(addr) = device.strip_prefix("remote:") {
+        return Ok(Box::new(RemoteDevice::connect(addr)?));
+    }
+    match device {
+        "native" => {
+            let layers = model_layers(model)?;
+            let mut dev = NativeDevice::new(&layers, 1);
+            let mut rng = Rng::new(ctx.seed ^ 0x494e_4954);
+            let mut theta = vec![0f32; dev.n_params()];
+            init_params_uniform(&mut rng, &mut theta, 1.0);
+            dev.set_params(&theta)?;
+            Ok(Box::new(dev))
+        }
+        "pjrt" => {
+            let rt = rt.ok_or_else(|| anyhow::anyhow!("pjrt device needs a runtime"))?;
+            let meta = rt.manifest.model(model)?.clone();
+            let mut dev = PjrtDevice::new(rt, model)?;
+            let mut rng = Rng::new(ctx.seed ^ 0x494e_4954);
+            let mut theta = vec![0f32; meta.param_count];
+            init_params(&mut rng, &meta.tensors, &mut theta);
+            dev.set_params(&theta)?;
+            Ok(Box::new(dev))
+        }
+        other => bail!("unknown device {other:?} (native | pjrt | remote:ADDR)"),
+    }
+}
+
+fn train(
+    ctx: &RunContext,
+    model: &str,
+    mode: &str,
+    device: &str,
+    steps: u64,
+    cfg: MgdConfig,
+    eval_every: u64,
+) -> Result<()> {
+    let (train_set, eval_set) = model_dataset(model, ctx.seed)?;
+    let opts = TrainOptions {
+        max_steps: steps,
+        eval_every,
+        record_cost_every: (steps / 100).max(1),
+        ..Default::default()
+    };
+    match mode {
+        "onchip" => {
+            let rt = Runtime::new(&ctx.artifact_dir)?;
+            let meta = rt.manifest.model(model)?.clone();
+            let mut rng = Rng::new(ctx.seed ^ 0x494e_4954);
+            let mut theta = vec![0f32; meta.param_count];
+            init_params(&mut rng, &meta.tensors, &mut theta);
+            let mut tr = OnChipTrainer::new(&rt, model, &train_set, theta, cfg)?;
+            println!(
+                "training {model} on-chip: {} steps/window, eta={}, tau_theta={}",
+                tr.window_steps(),
+                cfg.eta,
+                cfg.tau_theta
+            );
+            let res = tr.train(&opts, &eval_set)?;
+            report(&res, &eval_set);
+        }
+        "loop" => {
+            let rt = if device == "pjrt" { Some(Runtime::new(&ctx.artifact_dir)?) } else { None };
+            let mut dev = build_device(ctx, rt.as_ref(), model, device)?;
+            println!("training {model} chip-in-the-loop on {}", dev.describe());
+            let mut tr = MgdTrainer::new(&mut *dev, &train_set, cfg, ScheduleKind::Cyclic);
+            let res = tr.train(&opts, Some(&eval_set))?;
+            report(&res, &eval_set);
+        }
+        "analog" => {
+            let rt = if device == "pjrt" { Some(Runtime::new(&ctx.artifact_dir)?) } else { None };
+            let mut dev = build_device(ctx, rt.as_ref(), model, device)?;
+            println!("training {model} in analog mode on {}", dev.describe());
+            let acfg = mgd::coordinator::analog::AnalogConfig {
+                tau_x: cfg.tau_x,
+                tau_theta: cfg.tau_theta as f64,
+                tau_hp: 100.0,
+                tau_p: cfg.tau_p,
+                eta: cfg.eta,
+                amplitude: cfg.amplitude,
+                noise: cfg.noise,
+                seed: cfg.seed,
+            };
+            let mut tr = mgd::coordinator::AnalogTrainer::new(
+                &mut *dev,
+                &train_set,
+                acfg,
+                ScheduleKind::Cyclic,
+            );
+            let res = tr.train(&opts, Some(&eval_set))?;
+            report(&res, &eval_set);
+        }
+        other => bail!("unknown mode {other:?} (onchip | loop | analog)"),
+    }
+    Ok(())
+}
+
+fn report(res: &mgd::coordinator::TrainResult, eval_set: &Dataset) {
+    println!("steps run: {}", res.steps_run);
+    println!("device cost evaluations: {}", res.cost_evals);
+    for (step, cost, acc) in &res.eval_trace {
+        println!("  step {step:>9}: eval cost {cost:.5}, accuracy {:.2}%", acc * 100.0);
+    }
+    if let Some(acc) = res.final_accuracy() {
+        println!(
+            "final accuracy: {:.2}% over {} eval samples",
+            acc * 100.0,
+            eval_set.n
+        );
+    }
+}
+
+fn info(ctx: &RunContext) -> Result<()> {
+    let rt = Runtime::new(&ctx.artifact_dir)?;
+    println!("artifact dir: {}", rt.dir().display());
+    println!("\nmodels:");
+    let mut models: Vec<_> = rt.manifest.models.iter().collect();
+    models.sort_by_key(|(k, _)| (*k).clone());
+    for (name, m) in models {
+        println!(
+            "  {name:<12} P={:<6} input={:?} K={} kind={} scan: T={} B={} N={}",
+            m.param_count,
+            m.input_shape,
+            m.n_outputs,
+            m.kind,
+            m.scan_steps,
+            m.scan_batch,
+            m.scan_dataset_n
+        );
+    }
+    println!("\nartifacts:");
+    for a in &rt.manifest.artifacts {
+        println!("  {:<24} kind={:<9} file={}", a.name, a.kind, a.file);
+    }
+    Ok(())
+}

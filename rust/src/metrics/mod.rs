@@ -1,0 +1,167 @@
+//! Measurement utilities: gradient-angle metric, order statistics, and
+//! CSV emission for the experiment harnesses.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Angle in degrees between two vectors — the Fig. 5 metric
+/// ("angle between the gradient approximation G and the true gradient").
+pub fn angle_degrees(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len(), "angle over mismatched vectors");
+    let dot: f64 = a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum();
+    let na: f64 = a.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+    let nb: f64 = b.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+    if na == 0.0 || nb == 0.0 {
+        return 90.0; // undefined direction: report orthogonal
+    }
+    (dot / (na * nb)).clamp(-1.0, 1.0).acos().to_degrees()
+}
+
+/// Linear-interpolated quantile of a sorted slice (q in [0, 1]).
+pub fn quantile_sorted(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty(), "quantile of empty slice");
+    let q = q.clamp(0.0, 1.0);
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = pos - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Median / quartile summary of a sample (the paper's box plots and
+/// shaded quartile bands).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Quartiles {
+    pub q1: f64,
+    pub median: f64,
+    pub q3: f64,
+    pub min: f64,
+    pub max: f64,
+    pub n: usize,
+}
+
+impl Quartiles {
+    pub fn of(values: &[f64]) -> Option<Quartiles> {
+        if values.is_empty() {
+            return None;
+        }
+        let mut sorted = values.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Some(Quartiles {
+            q1: quantile_sorted(&sorted, 0.25),
+            median: quantile_sorted(&sorted, 0.5),
+            q3: quantile_sorted(&sorted, 0.75),
+            min: sorted[0],
+            max: *sorted.last().unwrap(),
+            n: sorted.len(),
+        })
+    }
+}
+
+/// Tiny CSV writer (header + typed rows), used by every experiment
+/// harness to emit `results/<experiment>.csv`.
+pub struct CsvWriter {
+    out: BufWriter<File>,
+    columns: usize,
+}
+
+impl CsvWriter {
+    /// Create `path` (parent directories included) with the given header.
+    pub fn create(path: impl AsRef<Path>, header: &[&str]) -> Result<Self> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent).ok();
+        }
+        let file = File::create(path).with_context(|| format!("creating {path:?}"))?;
+        let mut out = BufWriter::new(file);
+        writeln!(out, "{}", header.join(","))?;
+        Ok(CsvWriter { out, columns: header.len() })
+    }
+
+    /// Write one row of already-formatted cells.
+    pub fn row(&mut self, cells: &[String]) -> Result<()> {
+        anyhow::ensure!(
+            cells.len() == self.columns,
+            "row has {} cells, header has {}",
+            cells.len(),
+            self.columns
+        );
+        writeln!(self.out, "{}", cells.join(","))?;
+        Ok(())
+    }
+
+    /// Convenience: format every cell with `Display`.
+    pub fn row_disp(&mut self, cells: &[&dyn std::fmt::Display]) -> Result<()> {
+        let strings: Vec<String> = cells.iter().map(|c| c.to_string()).collect();
+        self.row(&strings)
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+/// Geometric spacing helper for sweep axes (e.g. Fig. 8's σ_C axis).
+pub fn geomspace(lo: f64, hi: f64, n: usize) -> Vec<f64> {
+    assert!(lo > 0.0 && hi > lo && n >= 2);
+    let ratio = (hi / lo).powf(1.0 / (n - 1) as f64);
+    (0..n).map(|i| lo * ratio.powi(i as i32)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn angle_basics() {
+        assert!((angle_degrees(&[1.0, 0.0], &[1.0, 0.0])).abs() < 1e-9);
+        assert!((angle_degrees(&[1.0, 0.0], &[0.0, 1.0]) - 90.0).abs() < 1e-9);
+        assert!((angle_degrees(&[1.0, 0.0], &[-1.0, 0.0]) - 180.0).abs() < 1e-6);
+        assert_eq!(angle_degrees(&[0.0, 0.0], &[1.0, 0.0]), 90.0);
+    }
+
+    #[test]
+    fn quartiles_of_known_sample() {
+        let q = Quartiles::of(&[1.0, 2.0, 3.0, 4.0, 5.0]).unwrap();
+        assert_eq!(q.median, 3.0);
+        assert_eq!(q.q1, 2.0);
+        assert_eq!(q.q3, 4.0);
+        assert_eq!(q.min, 1.0);
+        assert_eq!(q.max, 5.0);
+        assert!(Quartiles::of(&[]).is_none());
+    }
+
+    #[test]
+    fn geomspace_endpoints() {
+        let xs = geomspace(0.01, 1.0, 5);
+        assert_eq!(xs.len(), 5);
+        assert!((xs[0] - 0.01).abs() < 1e-12);
+        assert!((xs[4] - 1.0).abs() < 1e-9);
+        for w in xs.windows(2) {
+            assert!(w[1] > w[0]);
+        }
+    }
+
+    #[test]
+    fn csv_writer_emits_rows() {
+        let path = std::env::temp_dir().join(format!("mgd-csv-test-{}.csv", std::process::id()));
+        {
+            let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+            w.row(&["1".into(), "2".into()]).unwrap();
+            w.row_disp(&[&3.5, &"x"]).unwrap();
+            assert!(w.row(&["only-one".into()]).is_err());
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(text, "a,b\n1,2\n3.5,x\n");
+    }
+}

@@ -1,0 +1,171 @@
+//! Hardware imperfection models (§3.5).
+//!
+//! The paper studies three non-idealities and shows MGD trains through all
+//! of them; these are the corresponding injection points:
+//!
+//! 1. **Cost readout noise** — additive Gaussian on every cost measurement
+//!    (`C(t) = C_ideal(t) + N(0, σ_C)`, Fig. 8).  In the paper σ_C is
+//!    reported normalized to the perturbation magnitude `|θ̃|`; the
+//!    experiment harness performs that normalization, this module works in
+//!    absolute units.
+//! 2. **Parameter-update noise** — each update gains a Gaussian deviation
+//!    (`θ ← θ − ηG + θ_noise`, Eq. 5, Fig. 9), as seen in analog memories
+//!    without closed-loop feedback.
+//! 3. **Activation defects** — static per-neuron scale/offset on the
+//!    sigmoid, `f_k(a) = α_k (1 + e^{−β_k(a−a_k)})^{−1} + b_k`, with
+//!    α, β ~ N(1, σ_a) and a, b ~ N(0, σ_a) (Fig. 10).  These are applied
+//!    by [`crate::device::NativeDevice`].
+
+use crate::rng::Rng;
+
+/// Stochastic noise configuration for a training run (absolute units).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NoiseConfig {
+    /// Std-dev of additive Gaussian noise on every cost readout.
+    pub sigma_cost: f32,
+    /// Std-dev of additive Gaussian noise on every parameter update.
+    pub sigma_update: f32,
+}
+
+impl NoiseConfig {
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    pub fn is_noiseless(&self) -> bool {
+        self.sigma_cost == 0.0 && self.sigma_update == 0.0
+    }
+
+    /// Sample cost-readout noise for one measurement.
+    #[inline]
+    pub fn cost_noise(&self, rng: &mut Rng) -> f32 {
+        if self.sigma_cost == 0.0 {
+            0.0
+        } else {
+            rng.normal_with(0.0, self.sigma_cost as f64) as f32
+        }
+    }
+
+    /// Add update noise to a parameter vector in place.
+    pub fn apply_update_noise(&self, rng: &mut Rng, theta: &mut [f32]) {
+        if self.sigma_update == 0.0 {
+            return;
+        }
+        for v in theta.iter_mut() {
+            *v += rng.normal_with(0.0, self.sigma_update as f64) as f32;
+        }
+    }
+}
+
+/// Static per-neuron generalized-logistic defects (Fig. 10).
+///
+/// `f_k(a) = α_k / (1 + e^{−β_k (a − a_k)}) + b_k`
+#[derive(Debug, Clone)]
+pub struct NeuronDefects {
+    pub alpha: Vec<f32>,
+    pub beta: Vec<f32>,
+    pub offset_a: Vec<f32>,
+    pub offset_b: Vec<f32>,
+}
+
+impl NeuronDefects {
+    /// Ideal neurons: α = β = 1, a = b = 0 (plain sigmoid).
+    pub fn identity(n_neurons: usize) -> Self {
+        NeuronDefects {
+            alpha: vec![1.0; n_neurons],
+            beta: vec![1.0; n_neurons],
+            offset_a: vec![0.0; n_neurons],
+            offset_b: vec![0.0; n_neurons],
+        }
+    }
+
+    /// Sample defective neurons with strength σ_a (paper Fig. 10):
+    /// scaling factors α, β ~ N(1, σ_a); offsets a, b ~ N(0, σ_a).
+    pub fn sample(n_neurons: usize, sigma_a: f32, rng: &mut Rng) -> Self {
+        let s = sigma_a as f64;
+        let mut d = NeuronDefects::identity(n_neurons);
+        for k in 0..n_neurons {
+            d.alpha[k] = rng.normal_with(1.0, s) as f32;
+            d.beta[k] = rng.normal_with(1.0, s) as f32;
+            d.offset_a[k] = rng.normal_with(0.0, s) as f32;
+            d.offset_b[k] = rng.normal_with(0.0, s) as f32;
+        }
+        d
+    }
+
+    /// Evaluate neuron `k`'s defective activation at pre-activation `a`.
+    #[inline]
+    pub fn activate(&self, k: usize, a: f32) -> f32 {
+        let z = self.beta[k] * (a - self.offset_a[k]);
+        self.alpha[k] / (1.0 + (-z).exp()) + self.offset_b[k]
+    }
+
+    pub fn n_neurons(&self) -> usize {
+        self.alpha.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn noiseless_config_is_exact_zero() {
+        let cfg = NoiseConfig::none();
+        assert!(cfg.is_noiseless());
+        let mut rng = Rng::new(1);
+        assert_eq!(cfg.cost_noise(&mut rng), 0.0);
+        let mut theta = vec![1.0, 2.0];
+        cfg.apply_update_noise(&mut rng, &mut theta);
+        assert_eq!(theta, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn cost_noise_statistics() {
+        let cfg = NoiseConfig { sigma_cost: 0.5, sigma_update: 0.0 };
+        let mut rng = Rng::new(2);
+        let n = 50_000;
+        let mut sum = 0.0;
+        let mut sq = 0.0;
+        for _ in 0..n {
+            let v = cfg.cost_noise(&mut rng) as f64;
+            sum += v;
+            sq += v * v;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var.sqrt() - 0.5).abs() < 0.01, "std {}", var.sqrt());
+    }
+
+    #[test]
+    fn update_noise_perturbs_every_param() {
+        let cfg = NoiseConfig { sigma_cost: 0.0, sigma_update: 0.1 };
+        let mut rng = Rng::new(3);
+        let mut theta = vec![0.0f32; 64];
+        cfg.apply_update_noise(&mut rng, &mut theta);
+        assert!(theta.iter().all(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn identity_defects_are_plain_sigmoid() {
+        let d = NeuronDefects::identity(3);
+        for &a in &[-2.0f32, 0.0, 1.5] {
+            let sig = 1.0 / (1.0 + (-a).exp());
+            assert!((d.activate(1, a) - sig).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn sampled_defects_have_requested_spread() {
+        let mut rng = Rng::new(4);
+        let d = NeuronDefects::sample(10_000, 0.2, &mut rng);
+        let mean_alpha: f32 = d.alpha.iter().sum::<f32>() / d.alpha.len() as f32;
+        let var_alpha: f32 = d.alpha.iter().map(|a| (a - mean_alpha).powi(2)).sum::<f32>()
+            / d.alpha.len() as f32;
+        assert!((mean_alpha - 1.0).abs() < 0.01, "alpha mean {mean_alpha}");
+        assert!((var_alpha.sqrt() - 0.2).abs() < 0.01, "alpha std {}", var_alpha.sqrt());
+        let mean_b: f32 = d.offset_b.iter().sum::<f32>() / d.offset_b.len() as f32;
+        assert!(mean_b.abs() < 0.01, "offset_b mean {mean_b}");
+    }
+}

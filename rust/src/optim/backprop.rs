@@ -1,0 +1,145 @@
+//! The paper's comparator: backpropagation + plain SGD.
+//!
+//! §3.6: "for the backpropagation results we used a basic stochastic
+//! gradient descent (SGD) optimizer without momentum ... mean squared
+//! error (MSE) cost function".  The gradient comes from the `gradtrain`
+//! AOT artifact (jax `value_and_grad` lowered to HLO) — so the baseline
+//! runs on the same runtime as MGD, Python-free, and its step wall-clock
+//! is directly measurable for the Table 3 comparison.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::super::coordinator::{ScheduleKind, TrainOptions, TrainResult};
+use crate::coordinator::SampleSchedule;
+use crate::datasets::Dataset;
+use crate::runtime::{Executable, Runtime, Value};
+
+/// SGD-over-backprop trainer on the PJRT runtime.
+pub struct BackpropTrainer<'d> {
+    grad_exe: Arc<Executable>,
+    eval_exe: Arc<Executable>,
+    dataset: &'d Dataset,
+    schedule: SampleSchedule,
+    pub theta: Vec<f32>,
+    eta: f32,
+    batch: usize,
+    eval_batch: usize,
+    input_shape: Vec<usize>,
+    n_outputs: usize,
+    step: u64,
+}
+
+impl<'d> BackpropTrainer<'d> {
+    /// Build a trainer for `model`; `theta` is the initial parameter bus.
+    pub fn new(
+        rt: &Runtime,
+        model: &str,
+        dataset: &'d Dataset,
+        theta: Vec<f32>,
+        eta: f32,
+        seed: u64,
+    ) -> Result<Self> {
+        let meta = rt.manifest.model(model)?.clone();
+        anyhow::ensure!(
+            theta.len() == meta.param_count,
+            "theta has {} params, model {model} needs {}",
+            theta.len(),
+            meta.param_count
+        );
+        let grad_exe = rt.executable(&format!("{model}_gradtrain"))?;
+        let eval_exe = rt.executable(&format!("{model}_eval"))?;
+        let schedule = SampleSchedule::new(dataset, meta.batch_train, ScheduleKind::Cyclic, seed);
+        Ok(BackpropTrainer {
+            grad_exe,
+            eval_exe,
+            dataset,
+            schedule,
+            theta,
+            eta,
+            batch: meta.batch_train,
+            eval_batch: meta.batch_eval,
+            input_shape: meta.input_shape.clone(),
+            n_outputs: meta.n_outputs,
+            step: 0,
+        })
+    }
+
+    fn batch_shape(&self, b: usize) -> Vec<usize> {
+        let mut s = vec![b];
+        s.extend_from_slice(&self.input_shape);
+        s
+    }
+
+    /// One SGD step: `θ ← θ − η ∇C(θ; batch)`.  Returns the batch cost.
+    pub fn step(&mut self) -> Result<f32> {
+        let idx = self.schedule.next_window();
+        let (xb, yb) = self.dataset.gather(&idx);
+        let p = self.theta.len();
+        let out = self.grad_exe.run(&[
+            Value::f32(self.theta.clone(), &[p]),
+            Value::f32(xb, &self.batch_shape(self.batch)),
+            Value::f32(yb, &[self.batch, self.n_outputs]),
+        ])?;
+        let cost = out[0].to_scalar_f32()?;
+        let grad = out[1].as_f32()?;
+        for (t, g) in self.theta.iter_mut().zip(grad) {
+            *t -= self.eta * g;
+        }
+        self.step += 1;
+        Ok(cost)
+    }
+
+    /// Evaluate (mean cost, accuracy) over a labelled set, chunked to the
+    /// eval artifact's static batch.
+    pub fn evaluate(&self, eval: &Dataset) -> Result<(f32, f32)> {
+        let b = self.eval_batch;
+        let p = self.theta.len();
+        let mut total_cost = 0f64;
+        let mut total_correct = 0f64;
+        let mut done = 0usize;
+        while done < eval.n {
+            let take = (eval.n - done).min(b);
+            let idx: Vec<usize> = (0..b).map(|j| done + (j % take)).collect();
+            let (xb, yb) = eval.gather(&idx);
+            let out = self.eval_exe.run(&[
+                Value::f32(self.theta.clone(), &[p]),
+                Value::f32(xb, &self.batch_shape(b)),
+                Value::f32(yb, &[b, self.n_outputs]),
+            ])?;
+            total_cost += out[0].to_scalar_f32()? as f64 * take as f64;
+            total_correct += out[1].to_scalar_f32()? as f64 * take as f64 / b as f64;
+            done += take;
+        }
+        Ok((
+            (total_cost / eval.n as f64) as f32,
+            (total_correct / eval.n as f64) as f32,
+        ))
+    }
+
+    /// Train with the shared options (step budget / targets / traces).
+    pub fn train(&mut self, opts: &TrainOptions, eval_set: Option<&Dataset>) -> Result<TrainResult> {
+        let eval = eval_set.unwrap_or(self.dataset);
+        let mut result = TrainResult::default();
+        while self.step < opts.max_steps {
+            let cost = self.step()?;
+            let step = self.step - 1;
+            if opts.record_cost_every > 0 && step % opts.record_cost_every == 0 {
+                result.cost_trace.push((step, cost));
+            }
+            if opts.eval_every > 0 && (step + 1) % opts.eval_every == 0 {
+                let (ecost, acc) = self.evaluate(eval)?;
+                result.eval_trace.push((step, ecost, acc));
+                let cost_hit = opts.target_cost.is_some_and(|t| ecost < t);
+                let acc_hit = opts.target_accuracy.is_some_and(|t| acc >= t);
+                if cost_hit || acc_hit {
+                    result.solved_at = Some(step);
+                    break;
+                }
+            }
+        }
+        result.steps_run = self.step;
+        Ok(result)
+    }
+}

@@ -1,0 +1,115 @@
+//! Parameter initialization and baseline optimizers.
+//!
+//! - [`init_params`] / [`init_params_uniform`] — seedable initialization
+//!   matching the tensor layout exported in the artifact manifest.
+//! - [`backprop`] — the paper's comparator: plain SGD over the
+//!   `gradtrain` AOT artifact (jax `value_and_grad`, MSE, no momentum —
+//!   §3.6's "basic stochastic gradient descent optimizer").
+//! - [`rwc`] — random weight change, the non-gradient baseline the paper
+//!   contrasts MGD against in §3.6 (kept/discarded random perturbations;
+//!   scales poorly with parameter count).
+
+pub mod backprop;
+pub mod rwc;
+
+pub use backprop::BackpropTrainer;
+pub use rwc::RwcTrainer;
+
+use crate::rng::Rng;
+use crate::runtime::TensorMeta;
+
+/// Uniform(−scale, +scale) init over the whole bus — the paper's style for
+/// the small sigmoid MLPs ("random initializations").
+pub fn init_params_uniform(rng: &mut Rng, theta: &mut [f32], scale: f32) {
+    rng.fill_uniform(theta, -scale, scale);
+}
+
+/// Initialize a flat parameter bus per the manifest tensor layout:
+/// `uniform_pm1` → U(−1, 1); `xavier_uniform` → U(±√(6/(fan_in+fan_out)));
+/// `zeros` → 0.
+pub fn init_params(rng: &mut Rng, tensors: &[TensorMeta], theta: &mut [f32]) {
+    let mut offset = 0usize;
+    for t in tensors {
+        let len = t.len();
+        let slot = &mut theta[offset..offset + len];
+        match t.init.as_str() {
+            "uniform_pm1" => rng.fill_uniform(slot, -1.0, 1.0),
+            "xavier_uniform" => {
+                let (fan_in, fan_out) = fans(&t.shape);
+                let bound = (6.0 / (fan_in + fan_out) as f32).sqrt();
+                rng.fill_uniform(slot, -bound, bound);
+            }
+            "zeros" => slot.fill(0.0),
+            other => panic!("unknown init scheme {other:?} for tensor {}", t.name),
+        }
+        offset += len;
+    }
+    assert_eq!(offset, theta.len(), "tensor layout does not cover the bus");
+}
+
+/// (fan_in, fan_out) for dense `[in, out]` and conv HWIO `[kh, kw, in, out]`.
+fn fans(shape: &[usize]) -> (usize, usize) {
+    match shape.len() {
+        2 => (shape[0], shape[1]),
+        4 => {
+            let receptive = shape[0] * shape[1];
+            (receptive * shape[2], receptive * shape[3])
+        }
+        // Bias or unusual rank: symmetric small fan.
+        _ => {
+            let n: usize = shape.iter().product();
+            (n, n)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tensor(name: &str, shape: &[usize], init: &str) -> TensorMeta {
+        TensorMeta { name: name.to_string(), shape: shape.to_vec(), init: init.to_string() }
+    }
+
+    #[test]
+    fn layout_init_covers_bus() {
+        let tensors = vec![
+            tensor("w0", &[2, 2], "uniform_pm1"),
+            tensor("b0", &[2], "zeros"),
+            tensor("w1", &[2, 1], "xavier_uniform"),
+            tensor("b1", &[1], "zeros"),
+        ];
+        let mut theta = vec![f32::NAN; 9];
+        init_params(&mut Rng::new(0), &tensors, &mut theta);
+        assert!(theta.iter().all(|v| v.is_finite()));
+        assert_eq!(&theta[4..6], &[0.0, 0.0]);
+        assert_eq!(theta[8], 0.0);
+        // Xavier bound for [2,1]: sqrt(6/3) ≈ 1.414.
+        for v in &theta[6..8] {
+            assert!(v.abs() <= 1.415);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "does not cover")]
+    fn layout_mismatch_panics() {
+        let tensors = vec![tensor("w0", &[2, 2], "zeros")];
+        let mut theta = vec![0f32; 9];
+        init_params(&mut Rng::new(0), &tensors, &mut theta);
+    }
+
+    #[test]
+    fn conv_fans() {
+        assert_eq!(fans(&[3, 3, 16, 32]), (144, 288));
+        assert_eq!(fans(&[49, 4]), (49, 4));
+    }
+
+    #[test]
+    fn uniform_init_spread() {
+        let mut theta = vec![0f32; 1000];
+        init_params_uniform(&mut Rng::new(1), &mut theta, 0.5);
+        assert!(theta.iter().all(|v| v.abs() <= 0.5));
+        let mean: f32 = theta.iter().sum::<f32>() / 1000.0;
+        assert!(mean.abs() < 0.05);
+    }
+}

@@ -1,0 +1,112 @@
+//! Scoped-thread parallel map — the in-repo substrate replacing rayon
+//! (offline build; see Cargo.toml).
+//!
+//! Replica statistics fan hundreds of independent NativeDevice trainings
+//! across cores.  This is a plain work-stealing-free chunked fan-out on
+//! `std::thread::scope`: items are handed out via an atomic cursor, so
+//! uneven run times still balance well.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of worker threads to use (available parallelism, capped).
+pub fn default_workers(n_items: usize) -> usize {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    cores.min(n_items).max(1)
+}
+
+/// Parallel map preserving input order: `out[i] = f(i, &items[i])`.
+///
+/// `f` runs on worker threads; panics propagate (the scope join panics).
+pub fn parallel_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = default_workers(n);
+    if workers == 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i, &items[i]);
+                *results[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker missed an item"))
+        .collect()
+}
+
+/// Parallel map over `0..n` (convenience for seed fan-outs).
+pub fn parallel_map_idx<R, F>(n: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    let idx: Vec<usize> = (0..n).collect();
+    parallel_map(&idx, |_, &i| f(i))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn preserves_order() {
+        let items: Vec<u64> = (0..257).collect();
+        let out = parallel_map(&items, |i, &x| {
+            assert_eq!(i as u64, x);
+            x * 2
+        });
+        assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn runs_every_item_exactly_once() {
+        let counter = AtomicU64::new(0);
+        let out = parallel_map_idx(1000, |i| {
+            counter.fetch_add(1, Ordering::Relaxed);
+            i
+        });
+        assert_eq!(counter.load(Ordering::Relaxed), 1000);
+        assert_eq!(out.len(), 1000);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let empty: Vec<u32> = vec![];
+        assert!(parallel_map(&empty, |_, &x| x).is_empty());
+        assert_eq!(parallel_map(&[7], |_, &x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn uses_multiple_threads_for_large_inputs() {
+        use std::collections::HashSet;
+        use std::sync::Mutex as M;
+        let ids = M::new(HashSet::new());
+        parallel_map_idx(64, |_| {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+            ids.lock().unwrap().insert(std::thread::current().id());
+        });
+        // At least 2 threads on any multi-core machine.
+        if std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1) > 1 {
+            assert!(ids.lock().unwrap().len() > 1);
+        }
+    }
+}

@@ -1,0 +1,466 @@
+//! Perturbation generators — the four families of §3.4 / Fig. 1(c).
+//!
+//! Each generator produces the perturbation vector `θ̃(t)` for all `P`
+//! parameters at discrete timestep `t`.  The families differ in how they
+//! share the single broadcast-cost channel (the paper's "multiple access"
+//! analogy, §5):
+//!
+//! | family              | multiplexing      | orthogonality            |
+//! |---------------------|-------------------|--------------------------|
+//! | [`Sinusoidal`]      | frequency (FDMA)  | exact as T→∞             |
+//! | [`SequentialFd`]    | time (TDMA)       | exact (disjoint support) |
+//! | [`WalshCode`]       | code (CDMA)       | exact over one period    |
+//! | [`RademacherCode`]  | code (random)     | statistical (≈1/√T)      |
+//!
+//! All are mean-zero and amplitude `Δθ`.  `tau_p` controls how often the
+//! perturbation pattern advances (Algorithm 1 line 8: perturbations update
+//! only when `t % τp == 0`); between updates the vector is held.
+
+use crate::rng::Rng;
+
+/// Which perturbation family to use (mirrors Fig. 1c / Fig. 7).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PerturbKind {
+    /// Unique frequency per parameter (analog FDMA).
+    Sinusoidal,
+    /// One parameter at a time, +Δθ (finite-difference style TDMA).
+    SequentialFd,
+    /// Deterministic pairwise-orthogonal ±Δθ square waves (Walsh CDMA).
+    WalshCode,
+    /// Locally-generated random ±Δθ codes, statistically orthogonal
+    /// (SPSA-style; the paper's preferred hardware-friendly choice).
+    RademacherCode,
+}
+
+impl std::str::FromStr for PerturbKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "sinusoidal" => Ok(Self::Sinusoidal),
+            "sequential_fd" | "sequential" => Ok(Self::SequentialFd),
+            "walsh" | "walsh_code" => Ok(Self::WalshCode),
+            "rademacher" | "rademacher_code" | "random_code" => Ok(Self::RademacherCode),
+            other => anyhow::bail!("unknown perturbation kind {other:?}"),
+        }
+    }
+}
+
+/// A perturbation generator: fills `θ̃` for timestep `t`.
+///
+/// Implementations must be deterministic in `(seed, t)` history so that
+/// the same seed replays the same training trajectory.
+pub trait Perturbation: Send {
+    /// Write the perturbation vector for timestep `t` into `out` (len P).
+    fn fill(&mut self, t: u64, out: &mut [f32]);
+
+    /// Perturbation amplitude Δθ.
+    fn amplitude(&self) -> f32;
+
+    /// The family, for logging.
+    fn kind(&self) -> PerturbKind;
+}
+
+/// Build a generator of the given family.
+pub fn make(
+    kind: PerturbKind,
+    n_params: usize,
+    amplitude: f32,
+    tau_p: u64,
+    seed: u64,
+) -> Box<dyn Perturbation> {
+    match kind {
+        PerturbKind::Sinusoidal => Box::new(Sinusoidal::new(n_params, amplitude, tau_p)),
+        PerturbKind::SequentialFd => Box::new(SequentialFd::new(n_params, amplitude, tau_p)),
+        PerturbKind::WalshCode => Box::new(WalshCode::new(n_params, amplitude, tau_p)),
+        PerturbKind::RademacherCode => {
+            Box::new(RademacherCode::new(n_params, amplitude, tau_p, seed))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sinusoidal (frequency multiplexing)
+// ---------------------------------------------------------------------------
+
+/// `θ̃_i(t) = Δθ · sin(2π f_i t)` with unique per-parameter frequencies.
+///
+/// Frequencies are spread uniformly over the band `(0, 1/(2τp)]` — the
+/// paper sets the sinusoidal bandwidth to `1/(2τp)` in Fig. 7 so the
+/// fastest perturbation respects the system's inference time.  All
+/// frequencies are distinct, giving pairwise orthogonality over long
+/// integration windows.
+pub struct Sinusoidal {
+    freqs: Vec<f64>,
+    amplitude: f32,
+    /// Rotation recurrence state (Perf, EXPERIMENTS.md §Perf L3-2): the
+    /// phasor `e^{iω_i t}` per parameter, advanced by one complex multiply
+    /// per step instead of a `sin()` call.  `state_t` tracks the timestep
+    /// the state corresponds to; out-of-sequence `t` falls back to direct
+    /// evaluation (and re-seeds the recurrence).
+    sin: Vec<f64>,
+    cos: Vec<f64>,
+    rot_sin: Vec<f64>,
+    rot_cos: Vec<f64>,
+    state_t: Option<u64>,
+}
+
+impl Sinusoidal {
+    pub fn new(n_params: usize, amplitude: f32, tau_p: u64) -> Self {
+        // Spread strictly inside (0, 1/(2τp)): the band edges are
+        // degenerate on an integer time grid (f = 1/2 samples sin(πt) = 0
+        // identically), so use P+1 subdivisions and skip the endpoints.
+        let band = 0.5 / tau_p.max(1) as f64; // f_max = 1/(2 τp)
+        let freqs: Vec<f64> = (0..n_params)
+            .map(|i| band * (i + 1) as f64 / (n_params + 1) as f64)
+            .collect();
+        let tau = std::f64::consts::TAU;
+        let rot_sin = freqs.iter().map(|f| (tau * f).sin()).collect();
+        let rot_cos = freqs.iter().map(|f| (tau * f).cos()).collect();
+        Sinusoidal {
+            sin: vec![0.0; n_params],
+            cos: vec![1.0; n_params],
+            rot_sin,
+            rot_cos,
+            freqs,
+            amplitude,
+            state_t: None,
+        }
+    }
+
+    fn seed_state(&mut self, t: u64) {
+        let tau = std::f64::consts::TAU;
+        for i in 0..self.freqs.len() {
+            let phase = tau * self.freqs[i] * t as f64;
+            self.sin[i] = phase.sin();
+            self.cos[i] = phase.cos();
+        }
+        self.state_t = Some(t);
+    }
+}
+
+impl Perturbation for Sinusoidal {
+    fn fill(&mut self, t: u64, out: &mut [f32]) {
+        match self.state_t {
+            Some(prev) if prev == t => {}
+            Some(prev) if prev + 1 == t => {
+                // Advance the phasor: (cos,sin) ← (cos,sin)·e^{iω}.
+                for i in 0..self.sin.len() {
+                    let (s, c) = (self.sin[i], self.cos[i]);
+                    self.sin[i] = s * self.rot_cos[i] + c * self.rot_sin[i];
+                    self.cos[i] = c * self.rot_cos[i] - s * self.rot_sin[i];
+                }
+                self.state_t = Some(t);
+            }
+            _ => self.seed_state(t),
+        }
+        for (o, &s) in out.iter_mut().zip(&self.sin) {
+            *o = self.amplitude * s as f32;
+        }
+    }
+
+    fn amplitude(&self) -> f32 {
+        self.amplitude
+    }
+
+    fn kind(&self) -> PerturbKind {
+        PerturbKind::Sinusoidal
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Sequential finite-difference (time multiplexing)
+// ---------------------------------------------------------------------------
+
+/// One parameter perturbed (+Δθ) per τp window, in round-robin order.
+///
+/// With `τθ = P·τp` this is exactly forward finite-difference; with
+/// `τθ = τp` it is coordinate descent (§2.2, Fig. 2a–b).
+pub struct SequentialFd {
+    n_params: usize,
+    amplitude: f32,
+    tau_p: u64,
+}
+
+impl SequentialFd {
+    pub fn new(n_params: usize, amplitude: f32, tau_p: u64) -> Self {
+        SequentialFd { n_params, amplitude, tau_p: tau_p.max(1) }
+    }
+}
+
+impl Perturbation for SequentialFd {
+    fn fill(&mut self, t: u64, out: &mut [f32]) {
+        out.fill(0.0);
+        let active = ((t / self.tau_p) % self.n_params as u64) as usize;
+        out[active] = self.amplitude;
+    }
+
+    fn amplitude(&self) -> f32 {
+        self.amplitude
+    }
+
+    fn kind(&self) -> PerturbKind {
+        PerturbKind::SequentialFd
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Walsh codes (deterministic code multiplexing)
+// ---------------------------------------------------------------------------
+
+/// Pairwise-orthogonal ±Δθ square waves (Walsh–Hadamard rows).
+///
+/// Row `i` of the Hadamard matrix of order `L = next_pow2(P+1)` evaluated
+/// at column `t mod L`: `walsh(i, t) = (−1)^popcount(i & t)`.  Row 0 is
+/// constant (not mean-zero) so parameters use rows `1..=P`.  Any two
+/// distinct rows are exactly orthogonal over a full period of `L` steps.
+pub struct WalshCode {
+    n_params: usize,
+    amplitude: f32,
+    tau_p: u64,
+    period: u64,
+}
+
+impl WalshCode {
+    pub fn new(n_params: usize, amplitude: f32, tau_p: u64) -> Self {
+        let period = (n_params as u64 + 1).next_power_of_two();
+        WalshCode { n_params, amplitude, tau_p: tau_p.max(1), period }
+    }
+
+    /// Code period in perturbation-steps (τp units).
+    pub fn period(&self) -> u64 {
+        self.period
+    }
+
+    #[inline]
+    fn code(&self, row: u64, col: u64) -> f32 {
+        if (row & col).count_ones() % 2 == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+}
+
+impl Perturbation for WalshCode {
+    fn fill(&mut self, t: u64, out: &mut [f32]) {
+        let col = (t / self.tau_p) % self.period;
+        for (i, o) in out.iter_mut().enumerate().take(self.n_params) {
+            *o = self.amplitude * self.code(i as u64 + 1, col);
+        }
+    }
+
+    fn amplitude(&self) -> f32 {
+        self.amplitude
+    }
+
+    fn kind(&self) -> PerturbKind {
+        PerturbKind::WalshCode
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rademacher codes (random code multiplexing / SPSA)
+// ---------------------------------------------------------------------------
+
+/// Locally-generated random ±Δθ codes, re-drawn every τp steps.
+///
+/// "Statistically orthogonal" (§3.4): any finite window has O(1/√T)
+/// cross-correlation.  This is the most hardware-friendly family — each
+/// parameter needs only a local RNG, no global synchronization — and is
+/// what the fused on-chip artifact implements.
+pub struct RademacherCode {
+    amplitude: f32,
+    tau_p: u64,
+    rng: Rng,
+    current: Vec<f32>,
+    current_window: Option<u64>,
+}
+
+impl RademacherCode {
+    pub fn new(n_params: usize, amplitude: f32, tau_p: u64, seed: u64) -> Self {
+        RademacherCode {
+            amplitude,
+            tau_p: tau_p.max(1),
+            rng: Rng::new(seed ^ 0x7261_6465), // "rade"
+            current: vec![0.0; n_params],
+            current_window: None,
+        }
+    }
+}
+
+impl Perturbation for RademacherCode {
+    fn fill(&mut self, t: u64, out: &mut [f32]) {
+        let window = t / self.tau_p;
+        // Advance the held pattern only when the τp window changes.  The
+        // stream is deterministic as long as `fill` is called with
+        // non-decreasing `t` (the coordinator guarantees this).
+        if self.current_window != Some(window) {
+            // Perf (EXPERIMENTS.md §Perf L3-1): draw 64 sign bits per
+            // PRNG call instead of one — this fill dominated the native
+            // MGD step (2.66 µs of a 4.2 µs step at P = 220) when each
+            // sign burned a full xoshiro draw.
+            let amp_bits = self.amplitude.to_bits();
+            for chunk in self.current.chunks_mut(64) {
+                let mut bits = self.rng.next_u64();
+                for v in chunk.iter_mut() {
+                    // Branchless: splat the low bit into the f32 sign bit.
+                    *v = f32::from_bits(amp_bits ^ ((bits as u32 & 1) << 31));
+                    bits >>= 1;
+                }
+            }
+            self.current_window = Some(window);
+        }
+        out.copy_from_slice(&self.current);
+    }
+
+    fn amplitude(&self) -> f32 {
+        self.amplitude
+    }
+
+    fn kind(&self) -> PerturbKind {
+        PerturbKind::RademacherCode
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn correlation(kind: PerturbKind, p: usize, steps: u64) -> Vec<Vec<f64>> {
+        let mut gen = make(kind, p, 1.0, 1, 42);
+        let mut sums = vec![vec![0f64; p]; p];
+        let mut buf = vec![0f32; p];
+        for t in 0..steps {
+            gen.fill(t, &mut buf);
+            for i in 0..p {
+                for j in 0..p {
+                    sums[i][j] += (buf[i] * buf[j]) as f64;
+                }
+            }
+        }
+        for row in sums.iter_mut() {
+            for v in row.iter_mut() {
+                *v /= steps as f64;
+            }
+        }
+        sums
+    }
+
+    #[test]
+    fn walsh_exactly_orthogonal_over_period() {
+        let p = 9;
+        let period = (p as u64 + 1).next_power_of_two();
+        let corr = correlation(PerturbKind::WalshCode, p, period);
+        for i in 0..p {
+            for j in 0..p {
+                if i == j {
+                    assert!((corr[i][j] - 1.0).abs() < 1e-9);
+                } else {
+                    assert!(corr[i][j].abs() < 1e-9, "walsh corr[{i}][{j}] = {}", corr[i][j]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sequential_disjoint_support() {
+        let corr = correlation(PerturbKind::SequentialFd, 5, 5 * 8);
+        for i in 0..5 {
+            for j in 0..5 {
+                if i != j {
+                    assert_eq!(corr[i][j], 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rademacher_statistically_orthogonal() {
+        let steps = 20_000;
+        let corr = correlation(PerturbKind::RademacherCode, 6, steps);
+        for i in 0..6 {
+            assert!((corr[i][i] - 1.0).abs() < 1e-9);
+            for j in 0..6 {
+                if i != j {
+                    // O(1/sqrt(T)) — allow 5 sigma.
+                    let bound = 5.0 / (steps as f64).sqrt();
+                    assert!(corr[i][j].abs() < bound, "corr[{i}][{j}] = {}", corr[i][j]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sinusoidal_near_orthogonal_long_window() {
+        let corr = correlation(PerturbKind::Sinusoidal, 4, 200_000);
+        for i in 0..4 {
+            assert!(corr[i][i] > 0.3, "diagonal power too low: {}", corr[i][i]);
+            for j in 0..4 {
+                if i != j {
+                    assert!(
+                        corr[i][j].abs() < 0.02,
+                        "sinusoid corr[{i}][{j}] = {}",
+                        corr[i][j]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_kinds_mean_zero_except_sequential() {
+        for kind in [PerturbKind::Sinusoidal, PerturbKind::WalshCode, PerturbKind::RademacherCode]
+        {
+            let p = 5;
+            let mut gen = make(kind, p, 0.7, 1, 9);
+            let mut buf = vec![0f32; p];
+            let steps = 16_384;
+            let mut mean = vec![0f64; p];
+            for t in 0..steps {
+                gen.fill(t, &mut buf);
+                for (m, v) in mean.iter_mut().zip(&buf) {
+                    *m += *v as f64;
+                }
+            }
+            for m in &mean {
+                assert!(
+                    (m / steps as f64).abs() < 0.02,
+                    "{kind:?} not mean-zero: {}",
+                    m / steps as f64
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn amplitude_respected() {
+        for kind in [
+            PerturbKind::Sinusoidal,
+            PerturbKind::SequentialFd,
+            PerturbKind::WalshCode,
+            PerturbKind::RademacherCode,
+        ] {
+            let mut gen = make(kind, 8, 0.05, 2, 3);
+            let mut buf = vec![0f32; 8];
+            for t in 0..64 {
+                gen.fill(t, &mut buf);
+                for v in &buf {
+                    assert!(v.abs() <= 0.05 + 1e-6, "{kind:?} exceeded amplitude: {v}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tau_p_holds_pattern() {
+        let mut gen = make(PerturbKind::RademacherCode, 16, 1.0, 4, 11);
+        let mut a = vec![0f32; 16];
+        let mut b = vec![0f32; 16];
+        gen.fill(0, &mut a);
+        gen.fill(3, &mut b);
+        assert_eq!(a, b, "pattern must hold within a τp window");
+        gen.fill(4, &mut b);
+        assert_ne!(a, b, "pattern must advance at the τp boundary");
+    }
+}

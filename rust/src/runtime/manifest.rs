@@ -1,0 +1,307 @@
+//! Types for `artifacts/manifest.json` (written by `python/compile/aot.py`),
+//! parsed with the in-repo [`crate::json`] substrate.
+//!
+//! The manifest is the contract between the build-time Python layer and the
+//! runtime Rust layer: it tells the coordinator how many parameters each
+//! model has, how the flat parameter bus decomposes into tensors (and how
+//! each tensor is initialized), and the exact input/output signature of
+//! every AOT-compiled HLO artifact.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::json::Json;
+
+/// Top-level manifest file.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Manifest format version (bumped on incompatible layout changes).
+    pub format: u32,
+    /// Per-model metadata, keyed by model id (`xor221`, `nist744`, ...).
+    pub models: HashMap<String, ModelMeta>,
+    /// Every lowered artifact.
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+/// Metadata for one model (one "hardware device design").
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    /// Total number of trainable parameters P (the flat bus length).
+    pub param_count: usize,
+    /// Per-sample input shape (e.g. `[49]` or `[28, 28, 1]`).
+    pub input_shape: Vec<usize>,
+    /// Number of network outputs K.
+    pub n_outputs: usize,
+    /// `"mlp"` or `"cnn"`.
+    pub kind: String,
+    /// Batch of the `cost` artifact (chip-in-the-loop hot path).
+    pub batch_cost: usize,
+    /// Batch of the `eval`/`grad` artifacts.
+    pub batch_eval: usize,
+    /// Batch of the `gradtrain` artifact (backprop baseline).
+    pub batch_train: usize,
+    /// Timesteps per fused `mgd_scan` call (T).
+    pub scan_steps: usize,
+    /// Samples per timestep inside `mgd_scan` (B).
+    pub scan_batch: usize,
+    /// Resident dataset rows the `mgd_scan` artifact expects (N).
+    pub scan_dataset_n: usize,
+    /// Flat-bus decomposition, in order.
+    pub tensors: Vec<TensorMeta>,
+    /// MLP only: layer widths, e.g. `[49, 4, 4]`.
+    pub layers: Option<Vec<usize>>,
+    /// MLP only: activation name.
+    pub activation: Option<String>,
+}
+
+impl ModelMeta {
+    /// Number of input features per sample (product of `input_shape`).
+    pub fn input_len(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(ModelMeta {
+            param_count: j.field("param_count")?.as_usize()?,
+            input_shape: j.field("input_shape")?.as_usize_vec()?,
+            n_outputs: j.field("n_outputs")?.as_usize()?,
+            kind: j.field("kind")?.as_str()?.to_string(),
+            batch_cost: j.field("batch_cost")?.as_usize()?,
+            batch_eval: j.field("batch_eval")?.as_usize()?,
+            batch_train: j.field("batch_train")?.as_usize()?,
+            scan_steps: j.field("scan_steps")?.as_usize()?,
+            scan_batch: j.field("scan_batch")?.as_usize()?,
+            scan_dataset_n: j.field("scan_dataset_n")?.as_usize()?,
+            tensors: j
+                .field("tensors")?
+                .as_arr()?
+                .iter()
+                .map(TensorMeta::from_json)
+                .collect::<Result<_>>()?,
+            layers: j.get("layers").map(|v| v.as_usize_vec()).transpose()?,
+            activation: j
+                .get("activation")
+                .map(|v| Ok::<_, anyhow::Error>(v.as_str()?.to_string()))
+                .transpose()?,
+        })
+    }
+}
+
+/// One tensor inside the flat parameter vector.
+#[derive(Debug, Clone)]
+pub struct TensorMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// Init scheme: `uniform_pm1` | `xavier_uniform` | `zeros`.
+    pub init: String,
+}
+
+impl TensorMeta {
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(TensorMeta {
+            name: j.field("name")?.as_str()?.to_string(),
+            shape: j.field("shape")?.as_usize_vec()?,
+            init: j.field("init")?.as_str()?.to_string(),
+        })
+    }
+}
+
+/// One AOT-compiled HLO artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    /// Owning model id.
+    pub model: String,
+    /// `cost` | `eval` | `grad` | `gradtrain` | `mgd_scan`.
+    pub kind: String,
+    /// HLO text filename, relative to the artifact directory.
+    pub file: String,
+    /// SHA-256 of the HLO text (staleness detection).
+    pub sha256: String,
+    pub inputs: Vec<IoMeta>,
+    pub outputs: Vec<IoMeta>,
+}
+
+impl ArtifactMeta {
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(ArtifactMeta {
+            name: j.field("name")?.as_str()?.to_string(),
+            model: j.field("model")?.as_str()?.to_string(),
+            kind: j.field("kind")?.as_str()?.to_string(),
+            file: j.field("file")?.as_str()?.to_string(),
+            sha256: j.field("sha256")?.as_str()?.to_string(),
+            inputs: j
+                .field("inputs")?
+                .as_arr()?
+                .iter()
+                .map(IoMeta::from_json)
+                .collect::<Result<_>>()?,
+            outputs: j
+                .field("outputs")?
+                .as_arr()?
+                .iter()
+                .map(IoMeta::from_json)
+                .collect::<Result<_>>()?,
+        })
+    }
+}
+
+/// Input/output tensor signature.
+#[derive(Debug, Clone)]
+pub struct IoMeta {
+    /// Input name (outputs are positional and unnamed).
+    pub name: Option<String>,
+    pub shape: Vec<usize>,
+    /// `f32` | `i32` | `u32` (as written by aot.py) or numpy names
+    /// (`float32`, ...) for outputs.
+    pub dtype: String,
+}
+
+impl IoMeta {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(IoMeta {
+            name: j
+                .get("name")
+                .map(|v| Ok::<_, anyhow::Error>(v.as_str()?.to_string()))
+                .transpose()?,
+            shape: j.field("shape")?.as_usize_vec()?,
+            dtype: j.field("dtype")?.as_str()?.to_string(),
+        })
+    }
+}
+
+impl Manifest {
+    /// Parse a manifest from JSON text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text).context("parsing manifest JSON")?;
+        let mut models = HashMap::new();
+        for (name, m) in j.field("models")?.as_obj()? {
+            models.insert(
+                name.clone(),
+                ModelMeta::from_json(m).with_context(|| format!("model {name:?}"))?,
+            );
+        }
+        let artifacts = j
+            .field("artifacts")?
+            .as_arr()?
+            .iter()
+            .map(|a| ArtifactMeta::from_json(a).with_context(|| format!("artifact {a}")))
+            .collect::<Result<_>>()?;
+        Ok(Manifest { format: j.field("format")?.as_u64()? as u32, models, artifacts })
+    }
+
+    /// Load and parse `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text).with_context(|| format!("parsing {path:?}"))
+    }
+
+    /// Look up an artifact by name.
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .with_context(|| {
+                format!(
+                    "artifact {name:?} not in manifest (have: {:?})",
+                    self.artifacts.iter().map(|a| &a.name).collect::<Vec<_>>()
+                )
+            })
+    }
+
+    /// Look up a model by id.
+    pub fn model(&self, name: &str) -> Result<&ModelMeta> {
+        self.models.get(name).with_context(|| {
+            format!(
+                "model {name:?} not in manifest (have: {:?})",
+                self.models.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "format": 1,
+        "models": {
+            "xor221": {
+                "param_count": 9,
+                "input_shape": [2],
+                "n_outputs": 1,
+                "kind": "mlp",
+                "batch_cost": 1,
+                "batch_eval": 4,
+                "batch_train": 1,
+                "scan_steps": 1000,
+                "scan_batch": 1,
+                "scan_dataset_n": 4,
+                "tensors": [
+                    {"name": "w0", "shape": [2, 2], "init": "uniform_pm1"},
+                    {"name": "b0", "shape": [2], "init": "uniform_pm1"},
+                    {"name": "w1", "shape": [2, 1], "init": "uniform_pm1"},
+                    {"name": "b1", "shape": [1], "init": "uniform_pm1"}
+                ],
+                "layers": [2, 2, 1],
+                "activation": "sigmoid"
+            }
+        },
+        "artifacts": [
+            {
+                "name": "xor221_cost",
+                "model": "xor221",
+                "kind": "cost",
+                "file": "xor221_cost.hlo.txt",
+                "sha256": "abc",
+                "inputs": [
+                    {"name": "theta", "shape": [9], "dtype": "f32"}
+                ],
+                "outputs": [
+                    {"shape": [], "dtype": "float32"}
+                ]
+            }
+        ]
+    }"#;
+
+    #[test]
+    fn parses_sample_manifest() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.format, 1);
+        let model = m.model("xor221").unwrap();
+        assert_eq!(model.param_count, 9);
+        assert_eq!(model.tensors.iter().map(|t| t.len()).sum::<usize>(), 9);
+        assert_eq!(model.input_len(), 2);
+        assert_eq!(model.layers.as_deref(), Some(&[2, 2, 1][..]));
+        let art = m.artifact("xor221_cost").unwrap();
+        assert_eq!(art.kind, "cost");
+        assert_eq!(art.inputs[0].element_count(), 9);
+        assert_eq!(art.inputs[0].name.as_deref(), Some("theta"));
+        assert!(art.outputs[0].name.is_none());
+        assert!(m.artifact("nope").is_err());
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn missing_fields_error_with_context() {
+        let err = Manifest::parse(r#"{"format": 1, "models": {}}"#).unwrap_err();
+        assert!(format!("{err:#}").contains("artifacts"));
+    }
+}

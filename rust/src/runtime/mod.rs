@@ -1,0 +1,319 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them from Rust.
+//!
+//! This is the only module that talks to the `xla` crate.  The rest of the
+//! coordinator sees two things:
+//!
+//! * [`Runtime`] — owns the PJRT CPU client, the artifact manifest and a
+//!   compile-on-demand executable cache.
+//! * [`Executable`] — one compiled artifact with typed helpers to run it on
+//!   host data ([`Executable::run`]) or with a mix of host data and
+//!   device-resident buffers ([`Executable::run_mixed`], used to keep the
+//!   training dataset on-device across `mgd_scan` calls — see
+//!   EXPERIMENTS.md §Perf).
+//!
+//! Interchange is HLO **text** (`HloModuleProto::from_text_file`): jax ≥ 0.5
+//! serialized protos use 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+pub use manifest::{ArtifactMeta, IoMeta, Manifest, ModelMeta, TensorMeta};
+
+/// Typed host-side value passed to / returned from an artifact.
+///
+/// A thin tagged wrapper so coordinator code never touches `xla::Literal`
+/// directly (and so `NativeDevice` / tests can run without PJRT at all).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    F32 { data: Vec<f32>, shape: Vec<usize> },
+    I32 { data: Vec<i32>, shape: Vec<usize> },
+    U32 { data: Vec<u32>, shape: Vec<usize> },
+}
+
+impl Value {
+    pub fn scalar_f32(v: f32) -> Self {
+        Value::F32 { data: vec![v], shape: vec![] }
+    }
+
+    pub fn scalar_i32(v: i32) -> Self {
+        Value::I32 { data: vec![v], shape: vec![] }
+    }
+
+    pub fn scalar_u32(v: u32) -> Self {
+        Value::U32 { data: vec![v], shape: vec![] }
+    }
+
+    pub fn f32(data: Vec<f32>, shape: &[usize]) -> Self {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        Value::F32 { data, shape: shape.to_vec() }
+    }
+
+    pub fn i32(data: Vec<i32>, shape: &[usize]) -> Self {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        Value::I32 { data, shape: shape.to_vec() }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32 { shape, .. } | Value::I32 { shape, .. } | Value::U32 { shape, .. } => shape,
+        }
+    }
+
+    /// Borrow as f32 data, failing on other dtypes.
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Value::F32 { data, .. } => Ok(data),
+            other => bail!("expected f32 value, got {other:?}"),
+        }
+    }
+
+    /// Extract a scalar f32.
+    pub fn to_scalar_f32(&self) -> Result<f32> {
+        let data = self.as_f32()?;
+        if data.len() != 1 {
+            bail!("expected scalar, got {} elements", data.len());
+        }
+        Ok(data[0])
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            Value::F32 { data, shape } => {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+            Value::I32 { data, shape } => {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+            Value::U32 { data, shape } => {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(data).reshape(&dims)?
+            }
+        };
+        Ok(lit)
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<Value> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let value = match shape.ty() {
+            xla::ElementType::F32 => Value::F32 { data: lit.to_vec::<f32>()?, shape: dims },
+            xla::ElementType::S32 => Value::I32 { data: lit.to_vec::<i32>()?, shape: dims },
+            xla::ElementType::U32 => Value::U32 {
+                data: lit.to_vec::<u32>()?,
+                shape: dims,
+            },
+            ty => bail!("unsupported output element type {ty:?}"),
+        };
+        Ok(value)
+    }
+}
+
+/// A device-resident buffer plus the host literal that backs it.
+///
+/// PJRT's `buffer_from_host_literal` copy is **asynchronous**: the source
+/// literal must stay alive until the copy lands on a worker thread, or the
+/// copy reads freed memory (observed as a SIGSEGV inside
+/// `AbstractTfrtCpuBuffer::CopyFromLiteral`).  Holding the literal for the
+/// buffer's lifetime makes residency unconditionally safe.
+pub struct ResidentBuffer {
+    buf: xla::PjRtBuffer,
+    _lit: xla::Literal,
+}
+
+impl ResidentBuffer {
+    pub fn buffer(&self) -> &xla::PjRtBuffer {
+        &self.buf
+    }
+}
+
+/// Argument to [`Executable::run_mixed`]: host data or a resident buffer.
+pub enum Arg<'a> {
+    Host(Value),
+    /// A device-resident buffer previously created with
+    /// [`Runtime::upload`] (e.g. the training dataset).
+    Resident(&'a ResidentBuffer),
+}
+
+impl<'a> From<Value> for Arg<'a> {
+    fn from(v: Value) -> Self {
+        Arg::Host(v)
+    }
+}
+
+/// One compiled artifact.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub meta: ArtifactMeta,
+}
+
+// SAFETY: the PJRT CPU client is internally synchronized on the C++ side;
+// the Rust wrapper's `Rc` exists only for lifetime management.  We move
+// whole object graphs (device + its executables) between threads as a
+// unit and never use them concurrently without external synchronization
+// (the device server serializes sessions behind a Mutex; every trainer is
+// single-threaded).  Cross-thread *concurrent* use of one Executable
+// would still be unsound — do not add it.
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+impl Executable {
+    /// Execute on host values; returns the decomposed output tuple.
+    pub fn run(&self, args: &[Value]) -> Result<Vec<Value>> {
+        self.check_args(args.len())?;
+        let literals: Vec<xla::Literal> =
+            args.iter().map(|v| v.to_literal()).collect::<Result<_>>()?;
+        let bufs = self.exe.execute::<xla::Literal>(&literals)?;
+        self.collect_outputs(bufs)
+    }
+
+    /// Execute with a mix of host values and device-resident buffers.
+    ///
+    /// Host values are uploaded to fresh device buffers; resident buffers
+    /// are passed as-is (zero copy).  This is the hot-path entry point for
+    /// the fused `mgd_scan` artifact where the dataset (tens of MB) stays
+    /// on-device across thousands of calls.
+    pub fn run_mixed(&self, client: &xla::PjRtClient, args: &[Arg]) -> Result<Vec<Value>> {
+        self.check_args(args.len())?;
+        // Host literals must outlive the (asynchronous) host->device copy;
+        // `collect_outputs` blocks on execution completion, after which the
+        // inputs have been consumed, so dropping them at return is safe.
+        let mut lits: Vec<xla::Literal> = Vec::new();
+        let mut owned: Vec<xla::PjRtBuffer> = Vec::new();
+        let mut slots: Vec<Option<usize>> = Vec::with_capacity(args.len());
+        for arg in args {
+            match arg {
+                Arg::Host(v) => {
+                    let lit = v.to_literal()?;
+                    let buf = client.buffer_from_host_literal(None, &lit)?;
+                    lits.push(lit);
+                    owned.push(buf);
+                    slots.push(Some(owned.len() - 1));
+                }
+                Arg::Resident(_) => slots.push(None),
+            }
+        }
+        let refs: Vec<&xla::PjRtBuffer> = args
+            .iter()
+            .zip(slots.iter())
+            .map(|(arg, slot)| match (arg, slot) {
+                (Arg::Resident(rb), None) => rb.buffer(),
+                (_, Some(i)) => &owned[*i],
+                _ => unreachable!(),
+            })
+            .collect();
+        let bufs = self.exe.execute_b::<&xla::PjRtBuffer>(&refs)?;
+        let out = self.collect_outputs(bufs);
+        drop(lits);
+        out
+    }
+
+    fn check_args(&self, n: usize) -> Result<()> {
+        if n != self.meta.inputs.len() {
+            bail!(
+                "artifact {} expects {} inputs, got {n}",
+                self.meta.name,
+                self.meta.inputs.len()
+            );
+        }
+        Ok(())
+    }
+
+    fn collect_outputs(&self, bufs: Vec<Vec<xla::PjRtBuffer>>) -> Result<Vec<Value>> {
+        // return_tuple=True in aot.py: one replica, one tuple output.
+        let buf = bufs
+            .first()
+            .and_then(|replica| replica.first())
+            .context("artifact produced no outputs")?;
+        let mut tuple = buf.to_literal_sync()?;
+        let literals = tuple.decompose_tuple()?;
+        literals.iter().map(Value::from_literal).collect()
+    }
+}
+
+/// PJRT runtime: client + manifest + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+impl Runtime {
+    /// Create a CPU-PJRT runtime over the given artifact directory.
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = artifact_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, manifest, dir, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// The underlying PJRT client (needed for `run_mixed` / `upload`).
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Compile (or fetch from cache) the named artifact.
+    pub fn executable(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let meta = self.manifest.artifact(name)?.clone();
+        let path = self.dir.join(&meta.file);
+        let path_str = path
+            .to_str()
+            .with_context(|| format!("non-UTF8 artifact path {path:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name}"))?;
+        let exe = Arc::new(Executable { exe, meta });
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Upload host data to a device-resident buffer (kept alive by the
+    /// caller; pass it back via [`Arg::Resident`]).  The backing literal
+    /// travels inside the [`ResidentBuffer`] — see that type's safety note.
+    pub fn upload(&self, value: &Value) -> Result<ResidentBuffer> {
+        let lit = value.to_literal()?;
+        let buf = self.client.buffer_from_host_literal(None, &lit)?;
+        Ok(ResidentBuffer { buf, _lit: lit })
+    }
+
+    /// Artifact directory this runtime reads from.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn value_scalar_roundtrip() {
+        let v = Value::scalar_f32(3.5);
+        assert_eq!(v.to_scalar_f32().unwrap(), 3.5);
+        assert!(Value::f32(vec![1.0, 2.0], &[2]).to_scalar_f32().is_err());
+        assert!(Value::scalar_i32(1).as_f32().is_err());
+    }
+
+    #[test]
+    fn value_shapes() {
+        let v = Value::f32(vec![0.0; 6], &[2, 3]);
+        assert_eq!(v.shape(), &[2, 3]);
+        let v = Value::i32(vec![1, 2], &[2]);
+        assert_eq!(v.shape(), &[2]);
+    }
+}

@@ -1,0 +1,133 @@
+//! Integration: the PJRT runtime against the real AOT artifacts.
+//!
+//! Requires `make artifacts` to have run (the Makefile `test` target
+//! guarantees this).  These tests pin the cross-layer contracts:
+//! Rust↔manifest↔HLO shapes, NativeDevice↔PjrtDevice numerical parity,
+//! and the black-box device semantics MGD depends on.
+
+use mgd::datasets::{nist7x7, parity};
+use mgd::device::{HardwareDevice, NativeDevice, PjrtDevice};
+use mgd::optim::init_params_uniform;
+use mgd::rng::Rng;
+use mgd::runtime::{Runtime, Value};
+
+fn runtime() -> Runtime {
+    let dir = mgd::find_artifact_dir().expect("run `make artifacts` before `cargo test`");
+    Runtime::new(dir).expect("creating PJRT runtime")
+}
+
+#[test]
+fn manifest_lists_all_models_and_artifacts() {
+    let rt = runtime();
+    for model in ["xor221", "parity441", "nist744", "fmnist_cnn", "cifar_cnn"] {
+        let meta = rt.manifest.model(model).unwrap();
+        assert!(meta.param_count > 0);
+        for kind in ["cost", "eval", "grad", "gradtrain", "mgd_scan"] {
+            rt.manifest.artifact(&format!("{model}_{kind}")).unwrap();
+        }
+    }
+}
+
+#[test]
+fn native_and_pjrt_cost_agree_on_xor() {
+    let rt = runtime();
+    let mut pjrt = PjrtDevice::new(&rt, "xor221").unwrap();
+    let mut native = NativeDevice::new(&[2, 2, 1], 1);
+    let mut rng = Rng::new(7);
+    let mut theta = vec![0f32; 9];
+    init_params_uniform(&mut rng, &mut theta, 1.0);
+    pjrt.set_params(&theta).unwrap();
+    native.set_params(&theta).unwrap();
+
+    let data = parity(2);
+    for i in 0..data.n {
+        let (x, y) = data.gather(&[i]);
+        pjrt.load_batch(&x, &y).unwrap();
+        native.load_batch(&x, &y).unwrap();
+        let c_p = pjrt.cost(None).unwrap();
+        let c_n = native.cost(None).unwrap();
+        assert!((c_p - c_n).abs() < 1e-5, "sample {i}: pjrt {c_p} vs native {c_n}");
+        // Perturbed path too.
+        let mut tt = vec![0f32; 9];
+        rng.fill_uniform(&mut tt, -0.05, 0.05);
+        let c_p = pjrt.cost(Some(&tt)).unwrap();
+        let c_n = native.cost(Some(&tt)).unwrap();
+        assert!((c_p - c_n).abs() < 1e-5, "perturbed {i}: {c_p} vs {c_n}");
+    }
+}
+
+#[test]
+fn native_and_pjrt_agree_on_nist744() {
+    let rt = runtime();
+    let mut pjrt = PjrtDevice::new(&rt, "nist744").unwrap();
+    let mut native = NativeDevice::new(&[49, 4, 4], 1);
+    let mut rng = Rng::new(11);
+    let mut theta = vec![0f32; 220];
+    init_params_uniform(&mut rng, &mut theta, 1.0);
+    pjrt.set_params(&theta).unwrap();
+    native.set_params(&theta).unwrap();
+    let data = nist7x7(16, 3);
+    for i in 0..8 {
+        let (x, y) = data.gather(&[i]);
+        pjrt.load_batch(&x, &y).unwrap();
+        native.load_batch(&x, &y).unwrap();
+        let c_p = pjrt.cost(None).unwrap();
+        let c_n = native.cost(None).unwrap();
+        assert!((c_p - c_n).abs() < 1e-5, "sample {i}: {c_p} vs {c_n}");
+    }
+    // Eval parity over the batch (chunked PJRT eval vs native eval).
+    let (cost_p, correct_p) = pjrt.evaluate(&data.x, &data.y, data.n).unwrap();
+    let (cost_n, correct_n) = native.evaluate(&data.x, &data.y, data.n).unwrap();
+    assert!((cost_p - cost_n).abs() < 1e-4, "eval cost {cost_p} vs {cost_n}");
+    assert_eq!(correct_p.round(), correct_n.round());
+}
+
+#[test]
+fn grad_artifact_matches_native_finite_difference() {
+    let rt = runtime();
+    let exe = rt.executable("xor221_grad").unwrap();
+    let data = parity(2);
+    let mut rng = Rng::new(5);
+    let mut theta = vec![0f32; 9];
+    init_params_uniform(&mut rng, &mut theta, 1.0);
+    let out = exe
+        .run(&[
+            Value::f32(theta.clone(), &[9]),
+            Value::f32(data.x.clone(), &[4, 2]),
+            Value::f32(data.y.clone(), &[4, 1]),
+        ])
+        .unwrap();
+    let c = out[0].to_scalar_f32().unwrap();
+    let grad = out[1].as_f32().unwrap().to_vec();
+
+    let mut native = NativeDevice::new(&[2, 2, 1], 4);
+    native.set_params(&theta).unwrap();
+    native.load_batch(&data.x, &data.y).unwrap();
+    let c_n = native.cost(None).unwrap();
+    assert!((c - c_n).abs() < 1e-5);
+    let eps = 1e-3f32;
+    for i in 0..9 {
+        let mut tt = vec![0f32; 9];
+        tt[i] = eps;
+        let fd = (native.cost(Some(&tt)).unwrap() - c_n) / eps;
+        assert!(
+            (fd - grad[i]).abs() < 5e-3,
+            "param {i}: fd {fd} vs backprop {}",
+            grad[i]
+        );
+    }
+}
+
+#[test]
+fn executable_rejects_wrong_arity() {
+    let rt = runtime();
+    let exe = rt.executable("xor221_cost").unwrap();
+    let err = exe.run(&[Value::scalar_f32(0.0)]).unwrap_err();
+    assert!(format!("{err:#}").contains("expects"));
+}
+
+#[test]
+fn unknown_artifact_is_a_clean_error() {
+    let rt = runtime();
+    assert!(rt.executable("nonexistent_artifact").is_err());
+}

@@ -1,0 +1,285 @@
+//! Randomized property tests (proptest-style, driven by the in-repo RNG).
+//!
+//! Each property runs against many randomly-generated cases; failures
+//! print the offending seed so they can be replayed deterministically.
+
+use mgd::coordinator::{SampleSchedule, ScheduleKind};
+use mgd::datasets::{nist7x7, parity, synthetic_fmnist, Dataset};
+use mgd::device::{HardwareDevice, NativeDevice};
+use mgd::json::Json;
+use mgd::metrics::{angle_degrees, quantile_sorted, Quartiles};
+use mgd::perturb::{self, PerturbKind};
+use mgd::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// NativeDevice ≈ finite-difference oracle
+// ---------------------------------------------------------------------------
+
+/// For small perturbations, `C(θ+θ̃) − C(θ) ≈ θ̃ · ∇C` on random networks,
+/// random parameters and random inputs — the core linearization MGD
+/// exploits (Eq. 2's small-Δθ limit).
+#[test]
+fn native_device_cost_is_locally_linear() {
+    let mut meta_rng = Rng::new(0xfeed);
+    for case in 0..25 {
+        let seed = meta_rng.next_u64();
+        let mut rng = Rng::new(seed);
+        let n_in = 1 + rng.below(8) as usize;
+        let n_hidden = 1 + rng.below(6) as usize;
+        let n_out = 1 + rng.below(3) as usize;
+        let layers = [n_in, n_hidden, n_out];
+        let p: usize = layers.windows(2).map(|w| w[0] * w[1] + w[1]).sum();
+
+        let mut dev = NativeDevice::new(&layers, 1);
+        let mut theta = vec![0f32; p];
+        rng.fill_uniform(&mut theta, -1.0, 1.0);
+        dev.set_params(&theta).unwrap();
+        let mut x = vec![0f32; n_in];
+        rng.fill_uniform(&mut x, 0.0, 1.0);
+        let mut y = vec![0f32; n_out];
+        rng.fill_uniform(&mut y, 0.0, 1.0);
+        dev.load_batch(&x, &y).unwrap();
+
+        let c0 = dev.cost(None).unwrap();
+        // Gradient by per-coordinate central differences.
+        let eps = 1e-3f32;
+        let mut grad = vec![0f32; p];
+        for i in 0..p {
+            let mut tp = vec![0f32; p];
+            tp[i] = eps;
+            let cp = dev.cost(Some(&tp)).unwrap();
+            tp[i] = -eps;
+            let cm = dev.cost(Some(&tp)).unwrap();
+            grad[i] = (cp - cm) / (2.0 * eps);
+        }
+        // Random small simultaneous perturbation: predicted vs actual ΔC.
+        let mut tt = vec![0f32; p];
+        for v in tt.iter_mut() {
+            *v = 1e-3 * rng.sign();
+        }
+        let c1 = dev.cost(Some(&tt)).unwrap();
+        let predicted: f32 = grad.iter().zip(&tt).map(|(g, t)| g * t).sum();
+        let actual = c1 - c0;
+        assert!(
+            (predicted - actual).abs() < 2e-4 + 0.2 * actual.abs().max(predicted.abs()),
+            "case {case} (seed {seed:#x}): predicted ΔC {predicted}, actual {actual}"
+        );
+    }
+}
+
+/// set_params/get_params/apply_update compose like plain vector algebra.
+#[test]
+fn device_parameter_memory_is_a_vector() {
+    let mut meta_rng = Rng::new(0xbeef);
+    for _ in 0..20 {
+        let seed = meta_rng.next_u64();
+        let mut rng = Rng::new(seed);
+        let mut dev = NativeDevice::new(&[3, 4, 2], 1);
+        let p = dev.n_params();
+        let mut a = vec![0f32; p];
+        let mut b = vec![0f32; p];
+        rng.fill_uniform(&mut a, -2.0, 2.0);
+        rng.fill_uniform(&mut b, -0.1, 0.1);
+        dev.set_params(&a).unwrap();
+        dev.apply_update(&b).unwrap();
+        let got = dev.get_params().unwrap();
+        for i in 0..p {
+            assert!((got[i] - (a[i] + b[i])).abs() < 1e-6, "seed {seed:#x} idx {i}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Perturbation families
+// ---------------------------------------------------------------------------
+
+/// Walsh codes are exactly orthogonal over one period for *any* P.
+#[test]
+fn walsh_orthogonality_holds_for_random_p() {
+    let mut meta_rng = Rng::new(0x3141);
+    for _ in 0..10 {
+        let p = 2 + meta_rng.below(60) as usize;
+        let period = (p as u64 + 1).next_power_of_two();
+        let mut gen = perturb::make(PerturbKind::WalshCode, p, 1.0, 1, 0);
+        let mut acc = vec![0f64; p * p];
+        let mut buf = vec![0f32; p];
+        for t in 0..period {
+            gen.fill(t, &mut buf);
+            for i in 0..p {
+                for j in 0..p {
+                    acc[i * p + j] += (buf[i] * buf[j]) as f64;
+                }
+            }
+        }
+        for i in 0..p {
+            for j in 0..p {
+                let v = acc[i * p + j] / period as f64;
+                if i == j {
+                    assert!((v - 1.0).abs() < 1e-9, "P={p} diag");
+                } else {
+                    assert!(v.abs() < 1e-9, "P={p} off-diag [{i}][{j}] = {v}");
+                }
+            }
+        }
+    }
+}
+
+/// All discrete families replay deterministically for the same seed and
+/// monotone t sequence.
+#[test]
+fn perturbations_replay_deterministically() {
+    for kind in [
+        PerturbKind::Sinusoidal,
+        PerturbKind::SequentialFd,
+        PerturbKind::WalshCode,
+        PerturbKind::RademacherCode,
+    ] {
+        let p = 33;
+        let run = || {
+            let mut gen = perturb::make(kind, p, 0.02, 3, 77);
+            let mut out = Vec::new();
+            let mut buf = vec![0f32; p];
+            for t in 0..200 {
+                gen.fill(t, &mut buf);
+                out.extend_from_slice(&buf);
+            }
+            out
+        };
+        assert_eq!(run(), run(), "{kind:?} not deterministic");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Schedule ↔ window-tensor consistency
+// ---------------------------------------------------------------------------
+
+/// The fused-scan index tensor must show exactly the samples the discrete
+/// loop would load, for random (batch, τx, T).
+#[test]
+fn window_tensor_matches_discrete_schedule() {
+    let mut meta_rng = Rng::new(0x5ced);
+    let data = nist7x7(64, 1);
+    for _ in 0..20 {
+        let batch = 1 + meta_rng.below(4) as usize;
+        let tau_x = 1 + meta_rng.below(7);
+        let t_steps = 1 + meta_rng.below(50) as usize;
+        let seed = meta_rng.next_u64();
+
+        let mut s1 = SampleSchedule::new(&data, batch, ScheduleKind::Cyclic, seed);
+        let tensor = s1.window_tensor(t_steps, tau_x);
+
+        let mut s2 = SampleSchedule::new(&data, batch, ScheduleKind::Cyclic, seed);
+        let mut expect = Vec::new();
+        let mut current: Vec<usize> = Vec::new();
+        for t in 0..t_steps {
+            if t as u64 % tau_x == 0 || current.is_empty() {
+                current = s2.next_window();
+            }
+            expect.extend(current.iter().map(|&i| i as i32));
+        }
+        assert_eq!(tensor, expect, "batch={batch} tau_x={tau_x} T={t_steps}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dataset invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn datasets_have_valid_one_hot_targets() {
+    let sets: Vec<Dataset> = vec![parity(3), nist7x7(128, 5), synthetic_fmnist(64, 5)];
+    for d in &sets {
+        for i in 0..d.n {
+            let t = d.target(i);
+            let sum: f32 = t.iter().sum();
+            if d.n_outputs == 1 {
+                assert!(t[0] == 0.0 || t[0] == 1.0);
+            } else {
+                assert!((sum - 1.0).abs() < 1e-6, "target row {i} sums to {sum}");
+                assert!(t.iter().all(|&v| v == 0.0 || v == 1.0));
+            }
+        }
+    }
+}
+
+#[test]
+fn gather_agrees_with_row_views() {
+    let mut rng = Rng::new(9);
+    let d = synthetic_fmnist(40, 2);
+    for _ in 0..10 {
+        let idx: Vec<usize> = (0..5).map(|_| rng.below(d.n as u64) as usize).collect();
+        let (xb, yb) = d.gather(&idx);
+        for (k, &i) in idx.iter().enumerate() {
+            assert_eq!(&xb[k * d.input_len()..(k + 1) * d.input_len()], d.input(i));
+            assert_eq!(&yb[k * d.n_outputs..(k + 1) * d.n_outputs], d.target(i));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JSON parser round-trips against generated documents
+// ---------------------------------------------------------------------------
+
+fn gen_json(rng: &mut Rng, depth: usize) -> String {
+    match if depth == 0 { rng.below(3) } else { rng.below(5) } {
+        0 => format!("{}", (rng.next_u64() % 100_000) as f64 / 100.0),
+        1 => format!("\"s{}\"", rng.next_u64() % 1000),
+        2 => ["true", "false", "null"][rng.below(3) as usize].to_string(),
+        3 => {
+            let n = rng.below(4);
+            let items: Vec<String> = (0..n).map(|_| gen_json(rng, depth - 1)).collect();
+            format!("[{}]", items.join(","))
+        }
+        _ => {
+            let n = rng.below(4);
+            let items: Vec<String> = (0..n)
+                .map(|i| format!("\"k{i}\": {}", gen_json(rng, depth - 1)))
+                .collect();
+            format!("{{{}}}", items.join(","))
+        }
+    }
+}
+
+#[test]
+fn json_parser_accepts_generated_documents() {
+    let mut rng = Rng::new(0x150d);
+    for case in 0..200 {
+        let doc = gen_json(&mut rng, 3);
+        Json::parse(&doc).unwrap_or_else(|e| panic!("case {case}: {doc} -> {e:#}"));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Metrics
+// ---------------------------------------------------------------------------
+
+#[test]
+fn quantiles_bound_the_sample() {
+    let mut rng = Rng::new(21);
+    for _ in 0..20 {
+        let n = 1 + rng.below(50) as usize;
+        let vals: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let q = Quartiles::of(&vals).unwrap();
+        assert!(q.min <= q.q1 && q.q1 <= q.median && q.median <= q.q3 && q.q3 <= q.max);
+        let mut sorted = vals.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(q.median, quantile_sorted(&sorted, 0.5));
+    }
+}
+
+#[test]
+fn angle_is_scale_invariant_and_symmetric() {
+    let mut rng = Rng::new(31);
+    for _ in 0..30 {
+        let n = 2 + rng.below(40) as usize;
+        let mut a = vec![0f32; n];
+        let mut b = vec![0f32; n];
+        rng.fill_normal(&mut a, 0.0, 1.0);
+        rng.fill_normal(&mut b, 0.0, 1.0);
+        let base = angle_degrees(&a, &b);
+        let scaled: Vec<f32> = a.iter().map(|v| v * 7.5).collect();
+        assert!((angle_degrees(&scaled, &b) - base).abs() < 1e-6);
+        assert!((angle_degrees(&b, &a) - base).abs() < 1e-6);
+        assert!((0.0..=180.0).contains(&base));
+    }
+}
