@@ -1,0 +1,91 @@
+//! Fleet throughput: jobs/sec and device cost-evals/sec versus pool size.
+//!
+//! A fixed batch of identical MGD training jobs (XOR, 2'000 steps each) is
+//! pushed through fleets of 1, 2, 4 and 8 native devices.  Perfect scaling
+//! doubles jobs/sec with the pool; the gap to perfect is the scheduler +
+//! lease overhead this bench exists to watch.
+//!
+//! ```text
+//! cargo bench --bench fleet_throughput
+//! ```
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use mgd::coordinator::{MgdConfig, TrainOptions};
+use mgd::datasets::parity;
+use mgd::device::{HardwareDevice, NativeDevice};
+use mgd::fleet::{Fleet, JobSpec, SchedulerConfig, Telemetry};
+use mgd::optim::init_params_uniform;
+use mgd::rng::Rng;
+
+const JOBS: usize = 16;
+const STEPS: u64 = 2_000;
+
+fn xor_device(seed: u64) -> Box<dyn HardwareDevice> {
+    let mut dev = NativeDevice::new(&[2, 2, 1], 1);
+    let mut rng = Rng::new(seed);
+    let mut theta = vec![0f32; 9];
+    init_params_uniform(&mut rng, &mut theta, 1.0);
+    dev.set_params(&theta).unwrap();
+    Box::new(dev)
+}
+
+fn main() -> anyhow::Result<()> {
+    let data = Arc::new(parity(2));
+    println!("fleet_throughput: {JOBS} jobs x {STEPS} MGD steps (XOR, native devices)");
+    println!(
+        "{:<8} {:>10} {:>12} {:>18} {:>10}",
+        "devices", "wall (s)", "jobs/sec", "cost-evals/sec", "speedup"
+    );
+    let mut baseline = None;
+    for &pool_size in &[1usize, 2, 4, 8] {
+        let devices: Vec<Box<dyn HardwareDevice>> =
+            (0..pool_size).map(|i| xor_device(1000 + i as u64)).collect();
+        let fleet = Fleet::new(devices, SchedulerConfig::default(), Telemetry::null());
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..JOBS)
+            .map(|j| {
+                let cfg = MgdConfig {
+                    eta: 1.0,
+                    amplitude: 0.05,
+                    seed: j as u64,
+                    ..Default::default()
+                };
+                let opts = TrainOptions { max_steps: STEPS, ..Default::default() };
+                fleet
+                    .submit_training(
+                        JobSpec::named(format!("xor-{j}")),
+                        data.clone(),
+                        None,
+                        cfg,
+                        opts,
+                    )
+                    .expect("submit")
+            })
+            .collect();
+        let mut total_evals = 0u64;
+        for h in handles {
+            total_evals += h.wait().expect("job failed").cost_evals;
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        fleet.shutdown()?;
+        let jobs_per_sec = JOBS as f64 / secs;
+        let speedup = match baseline {
+            None => {
+                baseline = Some(secs);
+                1.0
+            }
+            Some(b) => b / secs,
+        };
+        println!(
+            "{:<8} {:>10.3} {:>12.2} {:>18.0} {:>9.2}x",
+            pool_size,
+            secs,
+            jobs_per_sec,
+            total_evals as f64 / secs,
+            speedup
+        );
+    }
+    Ok(())
+}

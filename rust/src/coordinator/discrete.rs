@@ -116,6 +116,24 @@ impl<'d> MgdTrainer<'d> {
         self.dev.get_params()
     }
 
+    /// Overwrite the device's parameter memory mid-training — the fleet's
+    /// data-parallel averaging entry point.  Clears the gradient
+    /// integrator G and invalidates the cached baseline cost C₀ (both are
+    /// functions of the old θ).
+    pub fn sync_params(&mut self, theta: &[f32]) -> Result<()> {
+        self.dev.set_params(theta)?;
+        self.g.fill(0.0);
+        self.c0_valid = false;
+        Ok(())
+    }
+
+    /// Evaluate the device on a labelled set (the accuracy probe, exposed
+    /// so fleet drivers can measure synchronized parameters without
+    /// reaching around the trainer).  Returns `(cost, #correct)`.
+    pub fn evaluate_on(&mut self, set: &Dataset) -> Result<(f32, f32)> {
+        self.dev.evaluate(&set.x, &set.y, set.n)
+    }
+
     /// Execute one MGD timestep (Algorithm 1 loop body).
     pub fn step(&mut self) -> Result<StepOutput> {
         let n = self.step;
@@ -314,6 +332,25 @@ mod tests {
             }
         }
         assert_eq!(updates, vec![4, 9, 14, 19]);
+    }
+
+    #[test]
+    fn sync_params_overwrites_and_resets_state() {
+        let data = xor();
+        let mut dev = xor_device(6);
+        let cfg = MgdConfig { tau_theta: u64::MAX, seed: 6, ..Default::default() };
+        let mut tr = MgdTrainer::new(&mut dev, &data, cfg, ScheduleKind::Cyclic);
+        for _ in 0..10 {
+            tr.step().unwrap();
+        }
+        assert!(tr.gradient().iter().any(|&g| g != 0.0));
+        tr.sync_params(&[0.25; 9]).unwrap();
+        assert!(tr.gradient().iter().all(|&g| g == 0.0), "G must reset on sync");
+        assert_eq!(tr.device_params().unwrap(), vec![0.25; 9]);
+        let (cost, correct) = tr.evaluate_on(&data).unwrap();
+        assert!(cost.is_finite() && correct <= data.n as f32);
+        // Training continues cleanly after the sync.
+        tr.step().unwrap();
     }
 
     #[test]

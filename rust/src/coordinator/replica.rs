@@ -2,15 +2,19 @@
 //!
 //! Every figure in the paper reports statistics over random network
 //! initializations (100–1000 replicas).  Each replica here gets an
-//! independent seed (init, perturbations, schedule, noise) and runs in
-//! parallel via the in-repo scoped-thread pool — NativeDevice replicas are embarrassingly parallel;
-//! PJRT-backed runs should use `parallel = false` (the CPU client is a
-//! shared, internally-threaded resource).
+//! independent seed (init, perturbations, schedule, noise).  Execution is
+//! a thin wrapper over the fleet scheduler's scoped batch engine
+//! ([`crate::fleet::run_batch`]) — replica statistics and the production
+//! training farm share one queue/worker code path.  NativeDevice replicas
+//! are embarrassingly parallel; PJRT-backed runs should use
+//! `parallel = false` (the CPU client is a shared, internally-threaded
+//! resource).
 
 use anyhow::Result;
 
 use super::TrainResult;
-use crate::par::parallel_map;
+use crate::fleet::run_batch;
+use crate::par::default_workers;
 
 /// One replica's outcome.
 #[derive(Debug, Clone)]
@@ -22,7 +26,10 @@ pub struct ReplicaOutcome {
 /// Run `n_replicas` independent trainings of `run(seed)`.
 ///
 /// Replica seeds are `base_seed + i`.  Failures propagate (a replica
-/// erroring is a bug, not a statistic).
+/// erroring is a bug, not a statistic).  Replicas are scheduled as one
+/// batch of fleet jobs: `parallel = true` fans them over
+/// [`default_workers`] scoped workers, `parallel = false` pins the batch
+/// to one worker (strictly sequential, in seed order).
 pub fn replica_stats<F>(
     n_replicas: usize,
     base_seed: u64,
@@ -33,16 +40,14 @@ where
     F: Fn(u64) -> Result<TrainResult> + Sync + Send,
 {
     let seeds: Vec<u64> = (0..n_replicas as u64).map(|i| base_seed + i).collect();
-    if parallel {
-        parallel_map(&seeds, |_, &seed| run(seed).map(|result| ReplicaOutcome { seed, result }))
-            .into_iter()
-            .collect()
-    } else {
-        seeds
-            .iter()
-            .map(|&seed| Ok(ReplicaOutcome { seed, result: run(seed)? }))
-            .collect()
-    }
+    let workers = if parallel { default_workers(n_replicas) } else { 1 };
+    let run = &run;
+    let jobs: Vec<_> = seeds.iter().map(|&seed| move || run(seed)).collect();
+    seeds
+        .iter()
+        .zip(run_batch(workers, jobs))
+        .map(|(&seed, r)| r.map(|result| ReplicaOutcome { seed, result }))
+        .collect()
 }
 
 /// Fraction of replicas that met their target.

@@ -24,6 +24,16 @@ use std::io::{Read, Write};
 
 use anyhow::{bail, Result};
 
+/// Maximum accepted frame payload (64 MiB).
+///
+/// Large enough for every in-repo workload (the biggest legitimate payload
+/// is the synthetic-CIFAR eval batch at ~25 MiB), small enough that a
+/// corrupt or hostile length prefix can never trigger a gigabyte
+/// allocation before the first payload byte is read.  An `Evaluate` over
+/// a set larger than ~16M floats needs client-side chunking (not yet
+/// implemented); the server reports the violation cleanly.
+pub const MAX_FRAME_BYTES: usize = 64 << 20;
+
 /// Request opcodes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 #[repr(u8)]
@@ -125,8 +135,8 @@ pub fn read_request(r: &mut impl Read) -> Result<(Op, Vec<u8>)> {
     r.read_exact(&mut head)?;
     let op = Op::from_u8(head[0])?;
     let len = u32::from_le_bytes(head[1..5].try_into().unwrap()) as usize;
-    if len > 1 << 30 {
-        bail!("oversized request payload ({len} bytes)");
+    if len > MAX_FRAME_BYTES {
+        bail!("request frame of {len} bytes exceeds protocol maximum {MAX_FRAME_BYTES}");
     }
     let mut payload = vec![0u8; len];
     r.read_exact(&mut payload)?;
@@ -157,8 +167,8 @@ pub fn read_response(r: &mut impl Read) -> Result<Vec<u8>> {
     let mut head = [0u8; 5];
     r.read_exact(&mut head)?;
     let len = u32::from_le_bytes(head[1..5].try_into().unwrap()) as usize;
-    if len > 1 << 30 {
-        bail!("oversized response payload ({len} bytes)");
+    if len > MAX_FRAME_BYTES {
+        bail!("response frame of {len} bytes exceeds protocol maximum {MAX_FRAME_BYTES}");
     }
     let mut payload = vec![0u8; len];
     r.read_exact(&mut payload)?;
@@ -218,6 +228,64 @@ mod tests {
         let mut cursor = std::io::Cursor::new(wire);
         let err = read_response(&mut cursor).unwrap_err();
         assert!(err.to_string().contains("boom"));
+    }
+
+    #[test]
+    fn oversized_request_frame_is_rejected_before_allocation() {
+        // Header claims a payload just past the cap; no payload follows.
+        // The reader must fail on the length check, not on allocation or
+        // a short read.
+        let mut wire = vec![Op::SetParams as u8];
+        wire.extend_from_slice(&((MAX_FRAME_BYTES as u32) + 1).to_le_bytes());
+        let mut cursor = std::io::Cursor::new(wire);
+        let err = read_request(&mut cursor).unwrap_err();
+        assert!(err.to_string().contains("exceeds protocol maximum"), "{err:#}");
+    }
+
+    #[test]
+    fn oversized_response_frame_is_rejected() {
+        let mut wire = vec![0u8];
+        wire.extend_from_slice(&u32::MAX.to_le_bytes());
+        let mut cursor = std::io::Cursor::new(wire);
+        let err = read_response(&mut cursor).unwrap_err();
+        assert!(err.to_string().contains("exceeds protocol maximum"), "{err:#}");
+    }
+
+    #[test]
+    fn frame_at_cap_boundary_passes_the_length_check() {
+        // A header claiming exactly MAX_FRAME_BYTES must get past the cap
+        // check (the error is reserved for frames strictly beyond it).
+        // The body is truncated, so the failure we expect is the short
+        // read — an off-by-one cap (`>=`) would produce the "exceeds"
+        // error instead and fail this test.
+        let mut wire = vec![Op::SetParams as u8];
+        wire.extend_from_slice(&(MAX_FRAME_BYTES as u32).to_le_bytes());
+        wire.extend_from_slice(&[0u8; 16]);
+        let mut cursor = std::io::Cursor::new(wire);
+        let err = read_request(&mut cursor).unwrap_err();
+        assert!(
+            !err.to_string().contains("exceeds protocol maximum"),
+            "cap check must accept len == MAX_FRAME_BYTES: {err:#}"
+        );
+    }
+
+    #[test]
+    fn truncated_request_frame_is_an_error() {
+        // Header promises 16 payload bytes; only 4 arrive before EOF.
+        let mut wire = vec![Op::LoadBatch as u8];
+        wire.extend_from_slice(&16u32.to_le_bytes());
+        wire.extend_from_slice(&[1, 2, 3, 4]);
+        let mut cursor = std::io::Cursor::new(wire);
+        assert!(read_request(&mut cursor).is_err());
+    }
+
+    #[test]
+    fn truncated_response_frame_is_an_error() {
+        let mut wire = vec![0u8];
+        wire.extend_from_slice(&8u32.to_le_bytes());
+        wire.push(0xFF);
+        let mut cursor = std::io::Cursor::new(wire);
+        assert!(read_response(&mut cursor).is_err());
     }
 
     #[test]

@@ -1,22 +1,54 @@
-//! The lab-bench side of chip-in-the-loop training: serve a local
-//! [`HardwareDevice`] over TCP.
+//! The lab-bench side of chip-in-the-loop training: serve hardware
+//! devices over TCP.
 //!
-//! Sessions are handled one at a time — hardware is a serially-shared
-//! resource (the paper's chip sits on one lab bench); a queued client
-//! blocks until the current session ends.  Plain `std::net` blocking I/O
-//! on an accept thread (this offline build has no async runtime; the
-//! protocol is strictly request/response so blocking I/O is exact).
+//! The seed implementation handled one session at a time — one chip, one
+//! lab bench.  The fleet version serves a whole [`DevicePool`]: one accept
+//! loop, one thread per client session, and a pool lease held for the
+//! session's lifetime (the protocol is stateful — `LoadBatch` … `Cost`
+//! sequences must hit the same device).  A client that connects while
+//! every device is leased out waits inside the lease, bounded by
+//! [`ServeOptions::lease_timeout`]; on timeout its first request is
+//! answered with a clean protocol error instead of a hang.
+//!
+//! Plain `std::net` blocking I/O (this offline build has no async
+//! runtime; the protocol is strictly request/response so blocking I/O is
+//! exact).
 
 use std::io::{BufReader, BufWriter};
 use std::net::{TcpListener, TcpStream};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::Result;
 
 use super::protocol as p;
 use super::HardwareDevice;
+use crate::fleet::pool::DevicePool;
+use crate::fleet::telemetry::{Event, Telemetry};
 
-/// Serve `device` on `addr`.
+/// Pooled-server knobs.
+pub struct ServeOptions {
+    /// Stop accepting after this many sessions (in-flight sessions still
+    /// complete before return).  `None` = serve forever.
+    pub max_sessions: Option<usize>,
+    /// How long a session waits for a free device before failing.
+    pub lease_timeout: Duration,
+    /// Event stream for session lifecycle.
+    pub telemetry: Arc<Telemetry>,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            max_sessions: None,
+            lease_timeout: Duration::from_secs(30),
+            telemetry: Telemetry::null(),
+        }
+    }
+}
+
+/// Serve a single `device` on `addr` (compatibility wrapper: a one-device
+/// pool).
 ///
 /// `max_sessions`: if `Some(n)`, return after `n` client sessions have
 /// completed (used by tests and the chip-in-the-loop example).
@@ -29,53 +61,155 @@ pub fn serve(
     serve_on(device, listener, max_sessions)
 }
 
-/// Serve on an already-bound listener (lets callers bind port 0 and learn
-/// the real address before serving).
+/// Serve a single device on an already-bound listener (lets callers bind
+/// port 0 and learn the real address before serving).
+///
+/// Matches the seed's serial-server semantics: a queued client waits for
+/// the device as long as it takes (effectively no lease timeout), exactly
+/// as it used to wait in the accept backlog.
 pub fn serve_on(
     device: Box<dyn HardwareDevice>,
     listener: TcpListener,
     max_sessions: Option<usize>,
 ) -> Result<()> {
+    let pool = DevicePool::new(vec![device]);
+    // ~10 years; Duration::MAX risks platform-specific saturation quirks
+    // inside Condvar::wait_timeout.
+    let effectively_forever = Duration::from_secs(315_360_000);
+    serve_pool(
+        pool,
+        listener,
+        ServeOptions { max_sessions, lease_timeout: effectively_forever, ..Default::default() },
+    )
+}
+
+/// Serve a whole device pool: concurrent sessions, each holding one
+/// leased device for its lifetime.
+///
+/// Trust model: lab-bench instrument on a trusted network (same as the
+/// seed's serial server).  A connected-but-silent client parks its
+/// session thread in a blocking read, exactly as it parked the whole
+/// server before; threads are reaped as sessions end, but a hostile
+/// flood of idle connections is out of scope here — front with a real
+/// proxy if the listener ever faces one.
+pub fn serve_pool(
+    pool: Arc<DevicePool>,
+    listener: TcpListener,
+    opts: ServeOptions,
+) -> Result<()> {
     eprintln!(
-        "[device-server] {} listening on {}",
-        device.describe(),
+        "[device-server] pool of {} device(s) listening on {}",
+        pool.size(),
         listener.local_addr()?
     );
-    let device = Arc::new(Mutex::new(device));
-    let mut sessions = 0usize;
+    let mut handles = Vec::new();
+    let mut accepted = 0usize;
+    // On an accept error, fall through to the join below before
+    // returning: callers sharing the pool must see every session lease
+    // released once serve_pool returns.
+    let mut accept_err: Option<anyhow::Error> = None;
     for stream in listener.incoming() {
-        let stream = stream?;
-        if let Ok(peer) = stream.peer_addr() {
-            eprintln!("[device-server] session from {peer}");
-        }
-        if let Err(e) = handle_session(stream, device.clone()) {
-            eprintln!("[device-server] session ended: {e:#}");
-        }
-        sessions += 1;
-        if let Some(max) = max_sessions {
-            if sessions >= max {
-                return Ok(());
+        let stream = match stream {
+            Ok(stream) => stream,
+            Err(e) => {
+                accept_err = Some(e.into());
+                break;
+            }
+        };
+        accepted += 1;
+        let session = accepted as u64;
+        let peer = stream
+            .peer_addr()
+            .map(|a| a.to_string())
+            .unwrap_or_else(|_| "unknown".to_string());
+        eprintln!("[device-server] session {session} from {peer}");
+        opts.telemetry.emit(Event::SessionOpened { session, peer });
+        let pool = pool.clone();
+        let telemetry = opts.telemetry.clone();
+        let lease_timeout = opts.lease_timeout;
+        let handle = std::thread::Builder::new()
+            .name(format!("mgd-session-{session}"))
+            .spawn(move || {
+                let mut requests = 0u64;
+                match handle_session(stream, &pool, lease_timeout, &mut requests) {
+                    Ok(()) => telemetry.emit(Event::SessionClosed {
+                        session,
+                        requests,
+                        ok: true,
+                        error: None,
+                    }),
+                    Err(e) => {
+                        eprintln!("[device-server] session {session} ended: {e:#}");
+                        telemetry.emit(Event::SessionClosed {
+                            session,
+                            requests,
+                            ok: false,
+                            error: Some(format!("{e:#}")),
+                        });
+                    }
+                }
+            })
+            .expect("spawning device-server session thread");
+        handles.push(handle);
+        // Reap finished sessions so a serve-forever server does not grow an
+        // unbounded handle list (dropping a finished handle just detaches).
+        handles.retain(|h| !h.is_finished());
+        if let Some(max) = opts.max_sessions {
+            if accepted >= max {
+                break;
             }
         }
     }
-    Ok(())
+    for handle in handles {
+        let _ = handle.join();
+    }
+    match accept_err {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
 }
 
+/// One client session over a pool lease.  Counts served requests into
+/// `requests` (kept accurate on the error path for telemetry).
 fn handle_session(
     stream: TcpStream,
-    device: Arc<Mutex<Box<dyn HardwareDevice>>>,
+    pool: &Arc<DevicePool>,
+    lease_timeout: Duration,
+    requests: &mut u64,
 ) -> Result<()> {
     stream.set_nodelay(true).ok();
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = BufWriter::new(stream);
+    // Lease for the whole session: the protocol is stateful, so every
+    // request of a session must land on the same device.
+    let mut lease = match pool.lease(lease_timeout) {
+        Ok(lease) => lease,
+        Err(e) => {
+            // Answer the client's pending first request (Hello, for
+            // RemoteDevice) with the reason before hanging up.  Bound the
+            // read so a silent-but-open connection cannot pin this thread
+            // forever.
+            reader.get_ref().set_read_timeout(Some(Duration::from_secs(5))).ok();
+            if p::read_request(&mut reader).is_ok() {
+                let _ = p::write_err(&mut writer, &format!("{e:#}"));
+            }
+            return Err(e);
+        }
+    };
     loop {
         let (op, payload) = match p::read_request(&mut reader) {
             Ok(req) => req,
-            // Client hung up without Bye — fine.
-            Err(_) => return Ok(()),
+            Err(e) => {
+                // Usually the client hung up without Bye — fine.  If the
+                // connection is actually alive (e.g. an oversized frame
+                // tripped MAX_FRAME_BYTES), tell it why before closing
+                // instead of a silent EOF; a real hangup ignores this.
+                let _ = p::write_err(&mut writer, &format!("{e:#}"));
+                return Ok(());
+            }
         };
-        let mut dev = device.lock().unwrap();
-        match handle_request(&mut **dev, op, &payload) {
+        *requests += 1;
+        match handle_request(lease.device(), op, &payload) {
             Ok(Some(reply)) => p::write_ok(&mut writer, &reply)?,
             Ok(None) => {
                 p::write_ok(&mut writer, &[])?;

@@ -1,0 +1,394 @@
+//! Data-parallel MGD across the fleet: N replicas, periodic parameter
+//! averaging.
+//!
+//! The paper's §3.5 story — MGD tolerates device-to-device variation — is
+//! replayed at fleet scale: every pooled device trains its own MGD replica
+//! (independent perturbation streams, seeds offset per replica, its own
+//! activation defects if configured), and every `steps_per_round` steps the
+//! fleet synchronizes by averaging parameter memories across replicas and
+//! broadcasting the mean back.  Averaging perturbative gradients over
+//! replicas is exactly the variance reduction of a larger τθ (Eq. 3), but
+//! bought with wall-clock parallelism instead of serial hardware time —
+//! the regime the scaling follow-up (Oripov et al., 2025) identifies as
+//! where perturbative training pays off.
+//!
+//! Synchronization is barrier-based and deadlock-safe: a replica that
+//! fails keeps participating in barriers (doing no work) so the remaining
+//! replicas never hang, and the first error is reported after the scope
+//! joins.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Barrier, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::{MgdConfig, MgdTrainer, ScheduleKind, TrainOptions, TrainResult};
+use crate::datasets::Dataset;
+use crate::fleet::pool::DevicePool;
+use crate::fleet::telemetry::{Event, Telemetry};
+
+/// Data-parallel hyper-parameters.
+#[derive(Debug, Clone)]
+pub struct DataParallelConfig {
+    /// Averaging rounds to run.
+    pub rounds: u64,
+    /// MGD timesteps each replica runs between synchronizations.  Align
+    /// to a multiple of τθ so every round ends on an update boundary.
+    pub steps_per_round: u64,
+    /// How long to wait when leasing the whole pool.
+    pub lease_timeout: Duration,
+}
+
+impl Default for DataParallelConfig {
+    fn default() -> Self {
+        DataParallelConfig {
+            rounds: 8,
+            steps_per_round: 1000,
+            lease_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Outcome of a data-parallel run.
+#[derive(Debug, Clone, Default)]
+pub struct DataParallelResult {
+    /// Replicas trained (== pool size).
+    pub replicas: usize,
+    /// Rounds completed.
+    pub rounds_run: u64,
+    /// Each replica's cumulative training result.
+    pub per_replica: Vec<TrainResult>,
+    /// The synchronized parameter vector after the last round.
+    pub final_params: Vec<f32>,
+    /// `(cost, accuracy)` of the synchronized parameters on the eval set,
+    /// measured on replica 0's device.
+    pub eval: Option<(f32, f32)>,
+    /// Total device cost-evaluations across the fleet.
+    pub total_cost_evals: u64,
+    /// Wall-clock for the whole run.
+    pub wall_secs: f64,
+}
+
+/// Keeps a replica honoring the round barriers no matter how it exits.
+///
+/// Each replica owes the barrier exactly `2 * rounds` waits.  If a thread
+/// unwinds (a panicking device, an internal unwrap) — or ever returns
+/// early — without this, the sibling replicas block in `Barrier::wait`
+/// forever and the whole run hangs instead of reporting the failure.  The
+/// guard pays the outstanding waits on drop, flagging the run as failed so
+/// no leader averages half-baked state.
+struct RoundBarrier<'a> {
+    barrier: &'a Barrier,
+    failed: &'a AtomicBool,
+    waits_owed: u64,
+}
+
+impl<'a> RoundBarrier<'a> {
+    fn wait(&mut self) -> std::sync::BarrierWaitResult {
+        self.waits_owed -= 1;
+        self.barrier.wait()
+    }
+}
+
+impl Drop for RoundBarrier<'_> {
+    fn drop(&mut self) {
+        if self.waits_owed == 0 {
+            return;
+        }
+        self.failed.store(true, Ordering::Release);
+        for _ in 0..self.waits_owed {
+            self.barrier.wait();
+        }
+    }
+}
+
+/// Element-wise mean of equally-sized parameter vectors (f64 accumulation).
+pub fn average_params(params: &[Vec<f32>]) -> Result<Vec<f32>> {
+    let Some(first) = params.first() else {
+        bail!("average_params: no parameter vectors");
+    };
+    let p = first.len();
+    for (i, v) in params.iter().enumerate() {
+        if v.len() != p {
+            bail!("average_params: replica {i} has {} params, expected {p}", v.len());
+        }
+    }
+    let inv = 1.0 / params.len() as f64;
+    let mut acc = vec![0f64; p];
+    for v in params {
+        for (a, &x) in acc.iter_mut().zip(v) {
+            *a += x as f64;
+        }
+    }
+    Ok(acc.into_iter().map(|a| (a * inv) as f32).collect())
+}
+
+/// Train one MGD replica per pooled device with periodic parameter
+/// averaging.  Replica `i` runs with `cfg.seed + i` (independent
+/// perturbation/schedule streams — averaging identical replicas would be a
+/// no-op).  All replicas start from the mean of the devices' current
+/// parameters.
+pub fn train_data_parallel(
+    pool: &Arc<DevicePool>,
+    dataset: &Dataset,
+    eval_set: &Dataset,
+    cfg: MgdConfig,
+    dp: &DataParallelConfig,
+    telemetry: &Telemetry,
+) -> Result<DataParallelResult> {
+    let n = pool.size();
+    if n == 0 {
+        bail!("data-parallel training needs a non-empty device pool");
+    }
+    if dp.rounds == 0 || dp.steps_per_round == 0 {
+        bail!("data-parallel training needs rounds > 0 and steps_per_round > 0");
+    }
+    let mut leases = pool.lease_many(n, dp.lease_timeout).context("leasing the fleet")?;
+
+    // Fleet-shape check + synchronized start from the mean of the current
+    // parameter memories.
+    let p = leases[0].n_params();
+    for lease in &leases {
+        if lease.n_params() != p {
+            bail!(
+                "data-parallel fleet is heterogeneous: {} has {} params, {} has {p}",
+                lease.describe(),
+                lease.n_params(),
+                leases[0].describe()
+            );
+        }
+    }
+    let initial: Vec<Vec<f32>> =
+        leases.iter_mut().map(|l| l.device().get_params()).collect::<Result<_>>()?;
+    let theta0 = average_params(&initial)?;
+    for lease in leases.iter_mut() {
+        lease.device().set_params(&theta0)?;
+    }
+
+    let start = Instant::now();
+    let barrier = Barrier::new(n);
+    // One slot per replica, summed by the barrier leader in replica order:
+    // float addition is not associative, so summing in thread-completion
+    // order would make seeded runs non-bit-reproducible.
+    let thetas: Vec<Mutex<Vec<f32>>> = (0..n).map(|_| Mutex::new(Vec::new())).collect();
+    let avg: Mutex<Vec<f32>> = Mutex::new(theta0);
+    let failed = AtomicBool::new(false);
+
+    type ReplicaReturn = Result<(TrainResult, Vec<f32>, Option<(f32, f32)>)>;
+    let outcomes: Vec<ReplicaReturn> = std::thread::scope(|scope| {
+        let handles: Vec<_> = leases
+            .into_iter()
+            .enumerate()
+            .map(|(ri, mut lease)| {
+                let barrier = &barrier;
+                let thetas = &thetas;
+                let avg = &avg;
+                let failed = &failed;
+                scope.spawn(move || -> ReplicaReturn {
+                    // Armed before anything that can panic (trainer
+                    // construction included) so siblings never deadlock.
+                    let mut rb =
+                        RoundBarrier { barrier, failed, waits_owed: 2 * dp.rounds };
+                    let mut rcfg = cfg;
+                    rcfg.seed = cfg.seed.wrapping_add(ri as u64);
+                    let mut trainer =
+                        MgdTrainer::new(lease.device(), dataset, rcfg, ScheduleKind::Cyclic);
+                    let mut thread_err: Option<anyhow::Error> = None;
+                    let mut result = TrainResult::default();
+                    for round in 0..dp.rounds {
+                        // Work phase (skipped once anything failed).
+                        if thread_err.is_none() && !failed.load(Ordering::Acquire) {
+                            let opts = TrainOptions {
+                                max_steps: (round + 1) * dp.steps_per_round,
+                                record_cost_every: 0,
+                                eval_every: 0,
+                                target_cost: None,
+                                target_accuracy: None,
+                            };
+                            match trainer.train(&opts, Some(eval_set)).and_then(|r| {
+                                let theta = trainer.device_params()?;
+                                Ok((r, theta))
+                            }) {
+                                Ok((r, theta)) => {
+                                    result = r;
+                                    *thetas[ri].lock().unwrap() = theta;
+                                }
+                                Err(e) => {
+                                    failed.store(true, Ordering::Release);
+                                    thread_err = Some(e);
+                                }
+                            }
+                        }
+                        // Sync phase: every replica reaches both barriers
+                        // even after a failure, so nobody deadlocks.
+                        let wait = rb.wait();
+                        if wait.is_leader() && !failed.load(Ordering::Acquire) {
+                            let round_thetas: Vec<Vec<f32>> = thetas
+                                .iter()
+                                .map(|slot| slot.lock().unwrap().clone())
+                                .collect();
+                            match average_params(&round_thetas) {
+                                Ok(mean) => {
+                                    let norm = mean
+                                        .iter()
+                                        .map(|&v| (v as f64) * (v as f64))
+                                        .sum::<f64>()
+                                        .sqrt();
+                                    *avg.lock().unwrap() = mean;
+                                    telemetry.emit(Event::RoundSynced {
+                                        round,
+                                        replicas: n,
+                                        avg_param_norm: norm,
+                                        secs: start.elapsed().as_secs_f64(),
+                                    });
+                                }
+                                Err(e) => {
+                                    failed.store(true, Ordering::Release);
+                                    thread_err = Some(e);
+                                }
+                            }
+                        }
+                        rb.wait();
+                        if thread_err.is_none() && !failed.load(Ordering::Acquire) {
+                            // Clone out of the lock so the fleet-wide
+                            // broadcast (n device writes, possibly remote)
+                            // runs in parallel, not serialized on `avg`.
+                            let mean = avg.lock().unwrap().clone();
+                            if let Err(e) = trainer.sync_params(&mean) {
+                                failed.store(true, Ordering::Release);
+                                thread_err = Some(e);
+                            }
+                        }
+                    }
+                    if let Some(e) = thread_err {
+                        return Err(e);
+                    }
+                    let final_theta = trainer.device_params()?;
+                    let eval = if ri == 0 {
+                        let (cost, correct) = trainer.evaluate_on(eval_set)?;
+                        Some((cost, correct / eval_set.n.max(1) as f32))
+                    } else {
+                        None
+                    };
+                    Ok((result, final_theta, eval))
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| match h.join() {
+                Ok(r) => r,
+                Err(_) => Err(anyhow::anyhow!("a data-parallel replica thread panicked")),
+            })
+            .collect()
+    });
+
+    let mut per_replica = Vec::with_capacity(n);
+    let mut final_params = Vec::new();
+    let mut eval = None;
+    for (ri, outcome) in outcomes.into_iter().enumerate() {
+        let (result, theta, replica_eval) =
+            outcome.with_context(|| format!("data-parallel replica {ri}"))?;
+        if ri == 0 {
+            final_params = theta;
+            eval = replica_eval;
+        }
+        per_replica.push(result);
+    }
+    let total_cost_evals = per_replica.iter().map(|r| r.cost_evals).sum();
+    Ok(DataParallelResult {
+        replicas: n,
+        rounds_run: dp.rounds,
+        per_replica,
+        final_params,
+        eval,
+        total_cost_evals,
+        wall_secs: start.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::xor;
+    use crate::device::{HardwareDevice, NativeDevice};
+    use crate::optim::init_params_uniform;
+    use crate::rng::Rng;
+
+    fn xor_device(seed: u64) -> Box<dyn HardwareDevice> {
+        let mut dev = NativeDevice::new(&[2, 2, 1], 1);
+        let mut rng = Rng::new(seed);
+        let mut theta = vec![0f32; 9];
+        init_params_uniform(&mut rng, &mut theta, 1.0);
+        dev.set_params(&theta).unwrap();
+        Box::new(dev)
+    }
+
+    #[test]
+    fn average_params_is_the_elementwise_mean() {
+        let avg =
+            average_params(&[vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 0.0]]).unwrap();
+        assert_eq!(avg, vec![3.0, 2.0]);
+        assert!(average_params(&[]).is_err());
+        assert!(average_params(&[vec![1.0], vec![1.0, 2.0]]).is_err());
+    }
+
+    #[test]
+    fn data_parallel_trains_and_returns_devices() {
+        let pool = DevicePool::new(vec![xor_device(1), xor_device(2), xor_device(3)]);
+        let data = xor();
+        let cfg =
+            MgdConfig { eta: 1.0, amplitude: 0.05, tau_theta: 4, seed: 9, ..Default::default() };
+        let dp = DataParallelConfig { rounds: 3, steps_per_round: 100, ..Default::default() };
+        let res =
+            train_data_parallel(&pool, &data, &data, cfg, &dp, &Telemetry::null()).unwrap();
+        assert_eq!(res.replicas, 3);
+        assert_eq!(res.rounds_run, 3);
+        assert_eq!(res.per_replica.len(), 3);
+        for r in &res.per_replica {
+            assert_eq!(r.steps_run, 300);
+            assert!(r.cost_evals > 0);
+        }
+        assert_eq!(res.final_params.len(), 9);
+        assert!(res.final_params.iter().all(|v| v.is_finite()));
+        assert!(res.eval.is_some());
+        assert!(res.total_cost_evals > 0);
+        // Every device must be back in the pool after the run.
+        assert_eq!(pool.available(), 3);
+    }
+
+    #[test]
+    fn replicas_end_each_round_with_identical_params() {
+        // After the final sync all devices hold the same vector; verify by
+        // reading them back out of the pool.
+        let pool = DevicePool::new(vec![xor_device(4), xor_device(5)]);
+        let data = xor();
+        let cfg = MgdConfig { eta: 0.5, amplitude: 0.05, seed: 1, ..Default::default() };
+        let dp = DataParallelConfig { rounds: 2, steps_per_round: 50, ..Default::default() };
+        let res =
+            train_data_parallel(&pool, &data, &data, cfg, &dp, &Telemetry::null()).unwrap();
+        let mut a = pool.lease(Duration::from_secs(1)).unwrap();
+        let mut b = pool.lease(Duration::from_secs(1)).unwrap();
+        let ta = a.device().get_params().unwrap();
+        let tb = b.device().get_params().unwrap();
+        assert_eq!(ta, tb, "devices must hold the synchronized parameters");
+        assert_eq!(ta, res.final_params);
+    }
+
+    #[test]
+    fn empty_pool_is_an_error() {
+        let pool = DevicePool::new(Vec::new());
+        let data = xor();
+        let err = train_data_parallel(
+            &pool,
+            &data,
+            &data,
+            MgdConfig::default(),
+            &DataParallelConfig::default(),
+            &Telemetry::null(),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("non-empty"), "{err:#}");
+    }
+}

@@ -1,0 +1,170 @@
+//! The fleet: concurrent device pool, job scheduler, and data-parallel
+//! MGD training farm.
+//!
+//! The paper trains one black-box device; its §6 end state is *many*
+//! hardware copies trained chip-in-the-loop at once.  This subsystem is
+//! the orchestration layer above [`crate::coordinator`] and
+//! [`crate::device`] that makes that real:
+//!
+//! - [`pool`] — N boxed [`HardwareDevice`]s (native, PJRT, remote, or
+//!   mixed) behind leased, timeout-guarded exclusive access.
+//! - [`scheduler`] — a bounded priority job queue (FIFO within priority)
+//!   with graceful or aborting shutdown, plus the scoped batch engine
+//!   behind [`crate::coordinator::replica_stats`].
+//! - [`worker`] — worker threads that pop jobs, lease a device, and run a
+//!   trainer loop against it.
+//! - [`aggregate`] — data-parallel MGD: one replica per device, periodic
+//!   parameter averaging across the fleet (§3.5's device-variation story
+//!   at fleet scale).
+//! - [`telemetry`] — a JSONL event stream over the in-repo
+//!   [`crate::json`] substrate.
+//!
+//! [`Fleet`] bundles the pieces for the common case:
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use mgd::coordinator::{MgdConfig, TrainOptions};
+//! use mgd::datasets;
+//! use mgd::device::{HardwareDevice, NativeDevice};
+//! use mgd::fleet::{Fleet, JobSpec, SchedulerConfig, Telemetry};
+//!
+//! let devices: Vec<Box<dyn HardwareDevice>> = (0..4)
+//!     .map(|_| Box::new(NativeDevice::new(&[2, 2, 1], 1)) as Box<dyn HardwareDevice>)
+//!     .collect();
+//! let fleet = Fleet::new(devices, SchedulerConfig::default(), Telemetry::stderr());
+//! let data = Arc::new(datasets::xor());
+//! let h = fleet.submit_training(
+//!     JobSpec::named("xor-0"),
+//!     data,
+//!     None,
+//!     MgdConfig::default(),
+//!     TrainOptions { max_steps: 10_000, ..Default::default() },
+//! ).unwrap();
+//! let result = h.wait().unwrap();
+//! println!("cost evals: {}", result.cost_evals);
+//! fleet.shutdown().unwrap();
+//! ```
+//!
+//! The pooled device server ([`crate::device::server::serve_pool`]) serves
+//! the same [`DevicePool`] over TCP to remote chip-in-the-loop trainers,
+//! so local jobs and remote sessions share one hardware arbiter.
+
+pub mod aggregate;
+pub mod pool;
+pub mod scheduler;
+pub mod telemetry;
+pub mod worker;
+
+pub use aggregate::{
+    average_params, train_data_parallel, DataParallelConfig, DataParallelResult,
+};
+pub use pool::{DeviceLease, DevicePool, PoolStats};
+pub use scheduler::{
+    run_batch, DeviceJobFn, JobHandle, JobOutcome, JobQueue, JobSpec, Priority, Scheduler,
+    SchedulerConfig,
+};
+pub use telemetry::{Event, Telemetry};
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::{MgdConfig, MgdTrainer, ScheduleKind, TrainOptions, TrainResult};
+use crate::datasets::Dataset;
+use crate::device::HardwareDevice;
+
+/// Pool + scheduler + telemetry, wired together.
+pub struct Fleet {
+    pool: Arc<DevicePool>,
+    scheduler: Scheduler,
+    telemetry: Arc<Telemetry>,
+}
+
+impl Fleet {
+    /// Build a fleet over the given devices.
+    pub fn new(
+        devices: Vec<Box<dyn HardwareDevice>>,
+        cfg: SchedulerConfig,
+        telemetry: Arc<Telemetry>,
+    ) -> Fleet {
+        let pool = DevicePool::new(devices);
+        telemetry.emit(Event::PoolCreated {
+            devices: pool.size(),
+            descriptions: pool.descriptions(),
+        });
+        let scheduler = Scheduler::new(pool.clone(), telemetry.clone(), cfg);
+        Fleet { pool, scheduler, telemetry }
+    }
+
+    /// The underlying device pool (shareable with the TCP server).
+    pub fn pool(&self) -> &Arc<DevicePool> {
+        &self.pool
+    }
+
+    /// The event stream.
+    pub fn telemetry(&self) -> &Arc<Telemetry> {
+        &self.telemetry
+    }
+
+    /// Jobs waiting in the queue.
+    pub fn queued(&self) -> usize {
+        self.scheduler.queued()
+    }
+
+    /// Submit a raw device job.
+    pub fn submit(&self, spec: JobSpec, run: DeviceJobFn) -> Result<JobHandle> {
+        self.scheduler.submit(spec, run)
+    }
+
+    /// Submit a standard MGD training job: an [`MgdTrainer`] loop over
+    /// `dataset` on whichever device the job leases.
+    pub fn submit_training(
+        &self,
+        spec: JobSpec,
+        dataset: Arc<Dataset>,
+        eval_set: Option<Arc<Dataset>>,
+        cfg: MgdConfig,
+        opts: TrainOptions,
+    ) -> Result<JobHandle> {
+        self.submit(
+            spec,
+            Box::new(move |dev| {
+                let mut trainer = MgdTrainer::new(dev, &dataset, cfg, ScheduleKind::Cyclic);
+                trainer.train(&opts, eval_set.as_deref())
+            }),
+        )
+    }
+
+    /// Run data-parallel MGD across every pooled device (blocks until the
+    /// rounds finish; submit farm jobs before or after, not during — the
+    /// run leases the whole pool).
+    pub fn train_data_parallel(
+        &self,
+        dataset: &Dataset,
+        eval_set: &Dataset,
+        cfg: MgdConfig,
+        dp: &DataParallelConfig,
+    ) -> Result<DataParallelResult> {
+        train_data_parallel(&self.pool, dataset, eval_set, cfg, dp, &self.telemetry)
+    }
+
+    /// Graceful shutdown: drain queued jobs, stop workers, report pool
+    /// counters.
+    pub fn shutdown(self) -> Result<PoolStats> {
+        let Fleet { pool, scheduler, telemetry: _ } = self;
+        scheduler.shutdown()?;
+        Ok(pool.stats())
+    }
+
+    /// Hard shutdown: discard queued jobs; returns how many were dropped.
+    pub fn abort(self) -> Result<usize> {
+        let Fleet { pool: _, scheduler, telemetry: _ } = self;
+        scheduler.abort()
+    }
+
+    /// Sum of `TrainResult::cost_evals` over a slice of results — the
+    /// fleet's aggregate hardware time.
+    pub fn total_cost_evals(results: &[TrainResult]) -> u64 {
+        results.iter().map(|r| r.cost_evals).sum()
+    }
+}

@@ -1,0 +1,303 @@
+//! A concurrent pool of [`HardwareDevice`]s with leased, exclusive access.
+//!
+//! Hardware is a serially-shared resource (the paper's chip sits on one lab
+//! bench), but a *fleet* of chips is not: §6 ends with many hardware copies
+//! trained chip-in-the-loop at once.  The pool owns N boxed devices —
+//! native simulators, PJRT models, remote chips, or any mix — and hands
+//! them out one holder at a time via [`DevicePool::lease`].
+//!
+//! A [`DeviceLease`] is a RAII guard: while held it derefs to the device;
+//! on drop the device returns to the pool and one waiter wakes.  Leases
+//! are `'static` (the guard keeps the pool state alive), so sessions and
+//! worker threads can own them.  Leasing blocks with a timeout, so a stuck
+//! session cannot deadlock the fleet silently — the waiter gets a clean
+//! error instead.
+
+use std::ops::{Deref, DerefMut};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::device::HardwareDevice;
+
+/// Aggregate pool counters (monotonic since pool creation).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct PoolStats {
+    /// Leases granted.
+    pub leases_granted: u64,
+    /// Lease attempts that timed out with every device busy.
+    pub lease_timeouts: u64,
+    /// Total time lease callers spent waiting for a free device.
+    pub total_wait: Duration,
+}
+
+struct Slot {
+    /// `None` while the device is out on a lease.
+    device: Option<Box<dyn HardwareDevice>>,
+    /// Cached description (the device itself may be leased out).
+    description: String,
+    /// Leases granted against this slot.
+    leases: u64,
+}
+
+/// The state every handle and lease shares.
+struct PoolShared {
+    slots: Mutex<Vec<Slot>>,
+    available: Condvar,
+    stats: Mutex<PoolStats>,
+}
+
+impl PoolShared {
+    fn record_grant(&self, waited: Duration) {
+        let mut st = self.stats.lock().unwrap();
+        st.leases_granted += 1;
+        st.total_wait += waited;
+    }
+
+    /// Called by [`DeviceLease::drop`].
+    fn release(&self, slot: usize, device: Box<dyn HardwareDevice>) {
+        let mut slots = self.slots.lock().unwrap();
+        debug_assert!(slots[slot].device.is_none(), "double release of slot {slot}");
+        slots[slot].device = Some(device);
+        drop(slots);
+        self.available.notify_one();
+    }
+}
+
+/// Shared pool of black-box devices.  Cheap to clone (a handle over shared
+/// state); [`DevicePool::new`] wraps it in an `Arc` for API symmetry with
+/// the rest of the fleet.
+#[derive(Clone)]
+pub struct DevicePool {
+    shared: Arc<PoolShared>,
+}
+
+impl DevicePool {
+    /// Build a pool owning the given devices.
+    pub fn new(devices: Vec<Box<dyn HardwareDevice>>) -> Arc<DevicePool> {
+        let slots = devices
+            .into_iter()
+            .map(|d| {
+                let description = d.describe();
+                Slot { device: Some(d), description, leases: 0 }
+            })
+            .collect();
+        Arc::new(DevicePool {
+            shared: Arc::new(PoolShared {
+                slots: Mutex::new(slots),
+                available: Condvar::new(),
+                stats: Mutex::new(PoolStats::default()),
+            }),
+        })
+    }
+
+    /// Number of devices the pool owns (leased or not).
+    pub fn size(&self) -> usize {
+        self.shared.slots.lock().unwrap().len()
+    }
+
+    /// Devices currently available for lease.
+    pub fn available(&self) -> usize {
+        self.shared.slots.lock().unwrap().iter().filter(|s| s.device.is_some()).count()
+    }
+
+    /// Cached per-device descriptions.
+    pub fn descriptions(&self) -> Vec<String> {
+        self.shared.slots.lock().unwrap().iter().map(|s| s.description.clone()).collect()
+    }
+
+    /// Per-slot lease counts (index-aligned with [`DevicePool::descriptions`]).
+    pub fn lease_counts(&self) -> Vec<u64> {
+        self.shared.slots.lock().unwrap().iter().map(|s| s.leases).collect()
+    }
+
+    /// Snapshot of the aggregate counters.
+    pub fn stats(&self) -> PoolStats {
+        *self.shared.stats.lock().unwrap()
+    }
+
+    /// Lease a device if one is free right now.
+    pub fn try_lease(&self) -> Option<DeviceLease> {
+        let mut slots = self.shared.slots.lock().unwrap();
+        let idx = slots.iter().position(|s| s.device.is_some())?;
+        let device = slots[idx].device.take();
+        slots[idx].leases += 1;
+        drop(slots);
+        self.shared.record_grant(Duration::ZERO);
+        Some(DeviceLease { shared: self.shared.clone(), slot: idx, device })
+    }
+
+    /// Lease a device, waiting up to `timeout` for one to free up.
+    pub fn lease(&self, timeout: Duration) -> Result<DeviceLease> {
+        let start = Instant::now();
+        let mut slots = self.shared.slots.lock().unwrap();
+        loop {
+            if let Some(idx) = slots.iter().position(|s| s.device.is_some()) {
+                let device = slots[idx].device.take();
+                slots[idx].leases += 1;
+                drop(slots);
+                self.shared.record_grant(start.elapsed());
+                return Ok(DeviceLease { shared: self.shared.clone(), slot: idx, device });
+            }
+            if slots.is_empty() {
+                bail!("device pool is empty — nothing to lease");
+            }
+            let waited = start.elapsed();
+            if waited >= timeout {
+                let n = slots.len();
+                drop(slots);
+                self.shared.stats.lock().unwrap().lease_timeouts += 1;
+                bail!(
+                    "device lease timed out after {:.1}s ({n} devices, all leased out)",
+                    timeout.as_secs_f64()
+                );
+            }
+            let (guard, _timed_out) =
+                self.shared.available.wait_timeout(slots, timeout - waited).unwrap();
+            slots = guard;
+        }
+    }
+
+    /// Lease `n` devices at once (the data-parallel entry point).  Waits up
+    /// to `timeout` overall; on failure, already-acquired leases are
+    /// released by drop.
+    pub fn lease_many(&self, n: usize, timeout: Duration) -> Result<Vec<DeviceLease>> {
+        let start = Instant::now();
+        let mut leases = Vec::with_capacity(n);
+        for _ in 0..n {
+            let remaining = timeout.saturating_sub(start.elapsed());
+            leases.push(self.lease(remaining)?);
+        }
+        Ok(leases)
+    }
+}
+
+/// Exclusive RAII access to one pooled device.
+pub struct DeviceLease {
+    shared: Arc<PoolShared>,
+    slot: usize,
+    /// Always `Some` until drop.
+    device: Option<Box<dyn HardwareDevice>>,
+}
+
+impl DeviceLease {
+    /// Pool slot index this lease came from.
+    pub fn slot(&self) -> usize {
+        self.slot
+    }
+
+    /// Mutable access to the leased device (what trainers consume).
+    pub fn device(&mut self) -> &mut dyn HardwareDevice {
+        self.device.as_mut().expect("lease already released").as_mut()
+    }
+}
+
+impl Deref for DeviceLease {
+    type Target = dyn HardwareDevice;
+
+    fn deref(&self) -> &Self::Target {
+        self.device.as_ref().expect("lease already released").as_ref()
+    }
+}
+
+impl DerefMut for DeviceLease {
+    fn deref_mut(&mut self) -> &mut Self::Target {
+        self.device()
+    }
+}
+
+impl Drop for DeviceLease {
+    fn drop(&mut self) {
+        if let Some(device) = self.device.take() {
+            self.shared.release(self.slot, device);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::NativeDevice;
+
+    fn pool_of(n: usize) -> Arc<DevicePool> {
+        let devices: Vec<Box<dyn HardwareDevice>> = (0..n)
+            .map(|_| Box::new(NativeDevice::new(&[2, 2, 1], 1)) as Box<dyn HardwareDevice>)
+            .collect();
+        DevicePool::new(devices)
+    }
+
+    #[test]
+    fn lease_and_release_cycle() {
+        let pool = pool_of(2);
+        assert_eq!(pool.size(), 2);
+        assert_eq!(pool.available(), 2);
+        let a = pool.lease(Duration::from_secs(1)).unwrap();
+        let b = pool.lease(Duration::from_secs(1)).unwrap();
+        assert_ne!(a.slot(), b.slot());
+        assert_eq!(pool.available(), 0);
+        drop(a);
+        assert_eq!(pool.available(), 1);
+        drop(b);
+        assert_eq!(pool.available(), 2);
+        assert_eq!(pool.stats().leases_granted, 2);
+    }
+
+    #[test]
+    fn lease_timeout_is_a_clean_error() {
+        let pool = pool_of(1);
+        let _held = pool.lease(Duration::from_secs(1)).unwrap();
+        let err = pool.lease(Duration::from_millis(30)).unwrap_err();
+        assert!(err.to_string().contains("timed out"), "{err:#}");
+        assert_eq!(pool.stats().lease_timeouts, 1);
+    }
+
+    #[test]
+    fn empty_pool_errors_immediately() {
+        let pool = DevicePool::new(Vec::new());
+        let err = pool.lease(Duration::from_secs(5)).unwrap_err();
+        assert!(err.to_string().contains("empty"), "{err:#}");
+    }
+
+    #[test]
+    fn lease_unblocks_a_waiter() {
+        let pool = pool_of(1);
+        let held = pool.lease(Duration::from_secs(1)).unwrap();
+        let p2 = pool.clone();
+        let waiter = std::thread::spawn(move || p2.lease(Duration::from_secs(5)).map(|l| l.slot()));
+        std::thread::sleep(Duration::from_millis(50));
+        drop(held);
+        assert_eq!(waiter.join().unwrap().unwrap(), 0);
+    }
+
+    #[test]
+    fn leased_device_is_usable_through_the_guard() {
+        let pool = pool_of(1);
+        let mut lease = pool.lease(Duration::from_secs(1)).unwrap();
+        lease.set_params(&[0.1; 9]).unwrap();
+        lease.load_batch(&[1.0, 0.0], &[1.0]).unwrap();
+        let c = lease.cost(None).unwrap();
+        assert!(c.is_finite());
+        assert_eq!(lease.device().get_params().unwrap().len(), 9);
+    }
+
+    #[test]
+    fn try_lease_respects_availability() {
+        let pool = pool_of(1);
+        let held = pool.try_lease().unwrap();
+        assert!(pool.try_lease().is_none());
+        drop(held);
+        assert!(pool.try_lease().is_some());
+    }
+
+    #[test]
+    fn lease_many_acquires_the_whole_pool() {
+        let pool = pool_of(3);
+        let leases = pool.lease_many(3, Duration::from_secs(1)).unwrap();
+        assert_eq!(leases.len(), 3);
+        assert_eq!(pool.available(), 0);
+        drop(leases);
+        assert_eq!(pool.available(), 3);
+        assert!(pool.lease_many(4, Duration::from_millis(30)).is_err());
+    }
+}

@@ -1,0 +1,572 @@
+//! Bounded priority job queue + the fleet scheduler that feeds it to
+//! workers.
+//!
+//! Two execution paths share one queue implementation:
+//!
+//! - [`Scheduler`] — the long-lived training farm: submit jobs from any
+//!   thread, each runs on a worker against a leased pool device, results
+//!   come back through per-job [`JobHandle`]s.  Shutdown is graceful
+//!   (queued jobs drain) or aborting (queued jobs are discarded).
+//! - [`run_batch`] — the scoped path: a fixed batch of independent
+//!   closures fanned over ephemeral workers, results in submission order.
+//!   This is the execution engine behind
+//!   [`crate::coordinator::replica_stats`], so replica statistics and the
+//!   production farm exercise the same queue semantics.
+//!
+//! Scheduling order is priority-first, FIFO within a priority (a
+//! monotonically increasing sequence number breaks ties).
+
+use std::cmp::Ordering as CmpOrdering;
+use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::TrainResult;
+use crate::device::HardwareDevice;
+use crate::fleet::pool::DevicePool;
+use crate::fleet::telemetry::{Event, Telemetry};
+use crate::fleet::worker;
+
+/// Job priority; higher runs sooner.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Priority {
+    Low,
+    #[default]
+    Normal,
+    High,
+}
+
+struct Entry<J> {
+    priority: Priority,
+    seq: u64,
+    job: J,
+}
+
+impl<J> PartialEq for Entry<J> {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == CmpOrdering::Equal
+    }
+}
+
+impl<J> Eq for Entry<J> {}
+
+impl<J> PartialOrd for Entry<J> {
+    fn partial_cmp(&self, other: &Self) -> Option<CmpOrdering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<J> Ord for Entry<J> {
+    fn cmp(&self, other: &Self) -> CmpOrdering {
+        // Max-heap: higher priority first, then lower sequence (FIFO).
+        self.priority.cmp(&other.priority).then(other.seq.cmp(&self.seq))
+    }
+}
+
+struct QueueState<J> {
+    heap: BinaryHeap<Entry<J>>,
+    next_seq: u64,
+    closed: bool,
+}
+
+/// Bounded, closable priority queue (condvar-based; no busy waiting).
+pub struct JobQueue<J> {
+    state: Mutex<QueueState<J>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+}
+
+impl<J> JobQueue<J> {
+    /// A queue holding at most `capacity` pending jobs (floored at 1).
+    pub fn bounded(capacity: usize) -> JobQueue<J> {
+        JobQueue {
+            state: Mutex::new(QueueState {
+                heap: BinaryHeap::new(),
+                next_seq: 0,
+                closed: false,
+            }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Enqueue a job, blocking while the queue is full.  Errors once the
+    /// queue is closed.  Returns the job's sequence number.
+    pub fn push(&self, priority: Priority, job: J) -> Result<u64> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.closed {
+                bail!("job queue is closed");
+            }
+            if st.heap.len() < self.capacity {
+                break;
+            }
+            st = self.not_full.wait(st).unwrap();
+        }
+        let seq = st.next_seq;
+        st.next_seq += 1;
+        st.heap.push(Entry { priority, seq, job });
+        drop(st);
+        self.not_empty.notify_one();
+        Ok(seq)
+    }
+
+    /// Non-blocking enqueue: `Err(job)` hands the job back if the queue is
+    /// closed or full (used by workers requeueing after a lease timeout —
+    /// a worker must never block on its own queue).
+    pub fn try_push(&self, priority: Priority, job: J) -> std::result::Result<u64, J> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed || st.heap.len() >= self.capacity {
+            return Err(job);
+        }
+        let seq = st.next_seq;
+        st.next_seq += 1;
+        st.heap.push(Entry { priority, seq, job });
+        drop(st);
+        self.not_empty.notify_one();
+        Ok(seq)
+    }
+
+    /// Dequeue the highest-priority job, blocking while the queue is empty
+    /// and open.  Returns `None` once the queue is closed *and* drained.
+    pub fn pop(&self) -> Option<J> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(entry) = st.heap.pop() {
+                drop(st);
+                self.not_full.notify_one();
+                return Some(entry.job);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Close the queue: queued jobs still drain through [`JobQueue::pop`],
+    /// new pushes fail, idle poppers wake and see the end.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Close the queue and discard everything queued; returns the number
+    /// of jobs dropped.
+    pub fn abort(&self) -> usize {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        let dropped = st.heap.len();
+        st.heap.clear();
+        drop(st);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+        dropped
+    }
+
+    /// Jobs currently queued (racy snapshot).
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().heap.len()
+    }
+
+    /// Whether the queue is currently empty (racy snapshot).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// What a submitted job runs against its leased device.
+pub type DeviceJobFn =
+    Box<dyn FnOnce(&mut dyn HardwareDevice) -> Result<TrainResult> + Send + 'static>;
+
+/// Submission metadata for a fleet job.
+#[derive(Debug, Clone)]
+pub struct JobSpec {
+    /// Human-readable label (telemetry / logs).
+    pub name: String,
+    /// Scheduling priority.
+    pub priority: Priority,
+}
+
+impl JobSpec {
+    pub fn named(name: impl Into<String>) -> JobSpec {
+        JobSpec { name: name.into(), priority: Priority::Normal }
+    }
+
+    pub fn with_priority(mut self, priority: Priority) -> JobSpec {
+        self.priority = priority;
+        self
+    }
+}
+
+/// A job as it sits in the scheduler queue.
+pub(crate) struct QueuedJob {
+    pub(crate) id: u64,
+    pub(crate) spec: JobSpec,
+    pub(crate) run: DeviceJobFn,
+    pub(crate) done: mpsc::Sender<JobOutcome>,
+}
+
+/// Everything known about a finished job.
+#[derive(Debug)]
+pub struct JobOutcome {
+    pub job_id: u64,
+    pub name: String,
+    /// Worker thread index that ran the job.
+    pub worker: usize,
+    /// Pool slot of the leased device (`None` if the lease itself failed).
+    pub device_slot: Option<usize>,
+    /// Wall-clock the job spent running on its device (lease wait
+    /// excluded; a job that never got a device reports zero).
+    pub wall: Duration,
+    /// The training outcome.
+    pub result: Result<TrainResult>,
+}
+
+/// Await one submitted job.
+pub struct JobHandle {
+    id: u64,
+    name: String,
+    rx: mpsc::Receiver<JobOutcome>,
+}
+
+impl JobHandle {
+    /// Scheduler-assigned job id.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Job label.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Block until the job finishes and return its training result.
+    pub fn wait(self) -> Result<TrainResult> {
+        self.wait_outcome()?.result
+    }
+
+    /// Block until the job finishes and return the full outcome.
+    pub fn wait_outcome(self) -> Result<JobOutcome> {
+        self.rx.recv().map_err(|_| {
+            anyhow!(
+                "job {} ({}) was dropped before completion (scheduler aborted)",
+                self.id,
+                self.name,
+            )
+        })
+    }
+
+    /// Non-blocking poll.  `None` while the job is queued or running;
+    /// `Some(Err(..))` if the scheduler dropped the job (abort), so a
+    /// poller never spins forever on a job that will not complete.
+    pub fn try_outcome(&self) -> Option<Result<JobOutcome>> {
+        match self.rx.try_recv() {
+            Ok(outcome) => Some(Ok(outcome)),
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) => Some(Err(anyhow!(
+                "job {} ({}) was dropped before completion (scheduler aborted)",
+                self.id,
+                self.name,
+            ))),
+        }
+    }
+}
+
+/// Scheduler tuning knobs.
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    /// Worker threads; `0` = one per pooled device.
+    pub workers: usize,
+    /// Pending-job bound (submit blocks past this).
+    pub queue_capacity: usize,
+    /// How long a worker waits for a device before failing the job.
+    pub lease_timeout: Duration,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            workers: 0,
+            queue_capacity: 64,
+            lease_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// The long-lived training farm: a queue, worker threads, and a device
+/// pool they lease from.
+pub struct Scheduler {
+    queue: Arc<JobQueue<QueuedJob>>,
+    workers: Vec<JoinHandle<()>>,
+    telemetry: Arc<Telemetry>,
+    next_id: AtomicU64,
+}
+
+impl Scheduler {
+    /// Spin up workers against `pool`.
+    pub fn new(
+        pool: Arc<DevicePool>,
+        telemetry: Arc<Telemetry>,
+        cfg: SchedulerConfig,
+    ) -> Scheduler {
+        let n_workers = if cfg.workers == 0 { pool.size().max(1) } else { cfg.workers };
+        let queue = Arc::new(JobQueue::bounded(cfg.queue_capacity));
+        let workers = (0..n_workers)
+            .map(|wid| {
+                let queue = queue.clone();
+                let pool = pool.clone();
+                let telemetry = telemetry.clone();
+                let lease_timeout = cfg.lease_timeout;
+                std::thread::Builder::new()
+                    .name(format!("fleet-worker-{wid}"))
+                    .spawn(move || {
+                        worker::run_worker(wid, &queue, &pool, &telemetry, lease_timeout)
+                    })
+                    .expect("spawning fleet worker thread")
+            })
+            .collect();
+        Scheduler { queue, workers, telemetry, next_id: AtomicU64::new(0) }
+    }
+
+    /// Submit a job; blocks while the queue is at capacity.
+    pub fn submit(&self, spec: JobSpec, run: DeviceJobFn) -> Result<JobHandle> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (done, rx) = mpsc::channel();
+        let name = spec.name.clone();
+        let priority = spec.priority;
+        self.queue.push(priority, QueuedJob { id, spec, run, done })?;
+        // Emitted only after the push lands: a failed or blocked push must
+        // not leave a phantom job in the telemetry stream.
+        self.telemetry.emit(Event::JobQueued {
+            job: id,
+            name: name.clone(),
+            queued: self.queue.len(),
+        });
+        Ok(JobHandle { id, name, rx })
+    }
+
+    /// Jobs waiting in the queue right now.
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Worker thread count.
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Graceful shutdown: queued jobs drain, then workers exit.
+    pub fn shutdown(mut self) -> Result<()> {
+        self.queue.close();
+        self.join_workers()
+    }
+
+    /// Hard shutdown: discard queued jobs (their handles error), wait only
+    /// for in-flight jobs.  Returns the number of jobs discarded.
+    pub fn abort(mut self) -> Result<usize> {
+        let dropped = self.queue.abort();
+        self.join_workers()?;
+        Ok(dropped)
+    }
+
+    fn join_workers(&mut self) -> Result<()> {
+        for w in self.workers.drain(..) {
+            w.join().map_err(|_| anyhow!("a fleet worker thread panicked"))?;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Scheduler {
+    fn drop(&mut self) {
+        // Drop runs on abnormal paths (an error propagating past the
+        // owner): discard queued jobs rather than training through the
+        // whole backlog before the error can surface.  Graceful draining
+        // is what `shutdown()` is for.
+        self.queue.abort();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Run a fixed batch of independent jobs on `workers` ephemeral threads,
+/// returning results in submission order.
+///
+/// Jobs flow through the same [`JobQueue`] the long-lived [`Scheduler`]
+/// uses (Normal priority, FIFO), but workers are scoped threads, so the
+/// closures may borrow from the caller — this is what lets
+/// [`crate::coordinator::replica_stats`] delegate here without boxing its
+/// replica closure into `'static`.
+pub fn run_batch<R, F>(workers: usize, jobs: Vec<F>) -> Vec<Result<R>>
+where
+    R: Send,
+    F: FnOnce() -> Result<R> + Send,
+{
+    let n = jobs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.max(1).min(n);
+    if workers == 1 {
+        // Sequential mode fails fast: after the first error the remaining
+        // jobs are not executed (restoring the seed's `replica_stats`
+        // short-circuit), but the output still has one entry per job so
+        // indices line up across both modes.
+        let mut out: Vec<Result<R>> = Vec::with_capacity(n);
+        let mut jobs = jobs.into_iter();
+        for job in jobs.by_ref() {
+            let result = job();
+            let failed = result.is_err();
+            out.push(result);
+            if failed {
+                break;
+            }
+        }
+        for _ in jobs {
+            out.push(Err(anyhow!("job skipped: an earlier job in the sequential batch failed")));
+        }
+        return out;
+    }
+    let queue: JobQueue<(usize, F)> = JobQueue::bounded(n);
+    for (i, job) in jobs.into_iter().enumerate() {
+        queue.push(Priority::Normal, (i, job)).expect("batch queue closed during fill");
+    }
+    // Close now: workers drain what is queued, then exit.
+    queue.close();
+    let mut out: Vec<Option<Result<R>>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
+    std::thread::scope(|scope| {
+        let queue = &queue;
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                scope.spawn(move || {
+                    let mut buf = Vec::new();
+                    while let Some((i, job)) = queue.pop() {
+                        buf.push((i, job()));
+                    }
+                    buf
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, r) in h.join().expect("batch worker panicked") {
+                out[i] = Some(r);
+            }
+        }
+    });
+    out.into_iter().map(|o| o.expect("job was never executed")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn priority_orders_pops() {
+        let q: JobQueue<&'static str> = JobQueue::bounded(8);
+        q.push(Priority::Low, "low").unwrap();
+        q.push(Priority::High, "high-1").unwrap();
+        q.push(Priority::Normal, "normal").unwrap();
+        q.push(Priority::High, "high-2").unwrap();
+        q.close();
+        assert_eq!(q.pop(), Some("high-1"));
+        assert_eq!(q.pop(), Some("high-2"));
+        assert_eq!(q.pop(), Some("normal"));
+        assert_eq!(q.pop(), Some("low"));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn fifo_within_a_priority() {
+        let q: JobQueue<u32> = JobQueue::bounded(16);
+        for i in 0..10 {
+            q.push(Priority::Normal, i).unwrap();
+        }
+        q.close();
+        let order: Vec<u32> = std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(order, (0..10).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn push_blocks_at_capacity_until_a_pop() {
+        let q = Arc::new(JobQueue::<u32>::bounded(1));
+        q.push(Priority::Normal, 1).unwrap();
+        let q2 = q.clone();
+        let pusher = std::thread::spawn(move || q2.push(Priority::Normal, 2).unwrap());
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(q.len(), 1, "second push must still be blocked");
+        assert_eq!(q.pop(), Some(1));
+        pusher.join().unwrap();
+        assert_eq!(q.pop(), Some(2));
+    }
+
+    #[test]
+    fn close_fails_new_pushes_but_drains_old() {
+        let q: JobQueue<u32> = JobQueue::bounded(4);
+        q.push(Priority::Normal, 7).unwrap();
+        q.close();
+        assert!(q.push(Priority::Normal, 8).is_err());
+        assert_eq!(q.pop(), Some(7));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn abort_discards_queued_jobs() {
+        let q: JobQueue<u32> = JobQueue::bounded(4);
+        q.push(Priority::Normal, 1).unwrap();
+        q.push(Priority::Normal, 2).unwrap();
+        assert_eq!(q.abort(), 2);
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn run_batch_preserves_order_and_errors() {
+        let jobs: Vec<_> = (0..50u64)
+            .map(|i| {
+                move || {
+                    if i == 13 {
+                        anyhow::bail!("unlucky");
+                    }
+                    Ok(i * 2)
+                }
+            })
+            .collect();
+        let results = run_batch(4, jobs);
+        assert_eq!(results.len(), 50);
+        for (i, r) in results.iter().enumerate() {
+            if i == 13 {
+                assert!(r.is_err());
+            } else {
+                assert_eq!(*r.as_ref().unwrap(), i as u64 * 2);
+            }
+        }
+    }
+
+    #[test]
+    fn run_batch_borrows_from_the_caller() {
+        let data: Vec<u64> = (0..20).collect();
+        let data_ref = &data;
+        let jobs: Vec<_> = (0..20usize).map(|i| move || Ok(data_ref[i] + 1)).collect();
+        let results = run_batch(3, jobs);
+        for (i, r) in results.into_iter().enumerate() {
+            assert_eq!(r.unwrap(), i as u64 + 1);
+        }
+    }
+
+    #[test]
+    fn run_batch_single_worker_is_sequential() {
+        let jobs: Vec<_> = (0..5u32).map(|i| move || Ok(i)).collect();
+        let results = run_batch(1, jobs);
+        let got: Vec<u32> = results.into_iter().map(|r| r.unwrap()).collect();
+        assert_eq!(got, vec![0, 1, 2, 3, 4]);
+    }
+}

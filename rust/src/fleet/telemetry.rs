@@ -1,0 +1,279 @@
+//! JSONL telemetry for the fleet: one event, one line, one JSON object.
+//!
+//! Every fleet component (pool, scheduler, workers, pooled server,
+//! data-parallel aggregator) reports through a shared [`Telemetry`] handle.
+//! Events serialize via the in-repo [`crate::json`] substrate, so the
+//! stream is plain JSON Lines — tail it, pipe it to `jq`, or load it into
+//! the Python layer; no extra dependency.
+//!
+//! A `Telemetry::null()` sink makes instrumentation free when nobody is
+//! listening (a single branch per event, no serialization).
+//!
+//! Ordering: each line is written atomically (one sink lock per event),
+//! but events race to the sink from many threads, so cross-thread order
+//! is best-effort — a `job_started` can land a hair before its
+//! `job_queued`.  Consumers should key lifecycles on the `job` id, not on
+//! line order.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use anyhow::{Context, Result};
+
+use crate::json::Json;
+
+/// A fleet lifecycle event.  Field names mirror the JSONL keys.
+#[derive(Debug, Clone)]
+pub enum Event {
+    /// A device pool came up.
+    PoolCreated { devices: usize, descriptions: Vec<String> },
+    /// A job entered the scheduler queue.
+    JobQueued { job: u64, name: String, queued: usize },
+    /// A worker picked the job up.
+    JobStarted { job: u64, name: String, worker: usize },
+    /// The job finished (ok or failed); `cost_evals` is the device-time
+    /// spent, the paper's hardware unit.
+    JobFinished {
+        job: u64,
+        name: String,
+        worker: usize,
+        ok: bool,
+        secs: f64,
+        cost_evals: u64,
+        error: Option<String>,
+    },
+    /// A TCP session was accepted by the pooled device server.
+    SessionOpened { session: u64, peer: String },
+    /// The TCP session ended.
+    SessionClosed { session: u64, requests: u64, ok: bool, error: Option<String> },
+    /// A data-parallel round synchronized parameters across the fleet.
+    RoundSynced { round: u64, replicas: usize, avg_param_norm: f64, secs: f64 },
+}
+
+impl Event {
+    /// Stable event-kind tag (the `event` key of each JSONL record).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Event::PoolCreated { .. } => "pool_created",
+            Event::JobQueued { .. } => "job_queued",
+            Event::JobStarted { .. } => "job_started",
+            Event::JobFinished { .. } => "job_finished",
+            Event::SessionOpened { .. } => "session_opened",
+            Event::SessionClosed { .. } => "session_closed",
+            Event::RoundSynced { .. } => "round_synced",
+        }
+    }
+
+    /// Serialize to a [`Json`] object (without the timestamp, which the
+    /// sink stamps at emit time).
+    pub fn to_json(&self) -> Json {
+        let mut m: BTreeMap<String, Json> = BTreeMap::new();
+        m.insert("event".into(), Json::Str(self.kind().into()));
+        match self {
+            Event::PoolCreated { devices, descriptions } => {
+                m.insert("devices".into(), Json::Num(*devices as f64));
+                m.insert(
+                    "descriptions".into(),
+                    Json::Arr(descriptions.iter().map(|d| Json::Str(d.clone())).collect()),
+                );
+            }
+            Event::JobQueued { job, name, queued } => {
+                m.insert("job".into(), Json::Num(*job as f64));
+                m.insert("name".into(), Json::Str(name.clone()));
+                m.insert("queued".into(), Json::Num(*queued as f64));
+            }
+            Event::JobStarted { job, name, worker } => {
+                m.insert("job".into(), Json::Num(*job as f64));
+                m.insert("name".into(), Json::Str(name.clone()));
+                m.insert("worker".into(), Json::Num(*worker as f64));
+            }
+            Event::JobFinished { job, name, worker, ok, secs, cost_evals, error } => {
+                m.insert("job".into(), Json::Num(*job as f64));
+                m.insert("name".into(), Json::Str(name.clone()));
+                m.insert("worker".into(), Json::Num(*worker as f64));
+                m.insert("ok".into(), Json::Bool(*ok));
+                m.insert("secs".into(), Json::Num(*secs));
+                m.insert("cost_evals".into(), Json::Num(*cost_evals as f64));
+                if let Some(e) = error {
+                    m.insert("error".into(), Json::Str(e.clone()));
+                }
+            }
+            Event::SessionOpened { session, peer } => {
+                m.insert("session".into(), Json::Num(*session as f64));
+                m.insert("peer".into(), Json::Str(peer.clone()));
+            }
+            Event::SessionClosed { session, requests, ok, error } => {
+                m.insert("session".into(), Json::Num(*session as f64));
+                m.insert("requests".into(), Json::Num(*requests as f64));
+                m.insert("ok".into(), Json::Bool(*ok));
+                if let Some(e) = error {
+                    m.insert("error".into(), Json::Str(e.clone()));
+                }
+            }
+            Event::RoundSynced { round, replicas, avg_param_norm, secs } => {
+                m.insert("round".into(), Json::Num(*round as f64));
+                m.insert("replicas".into(), Json::Num(*replicas as f64));
+                m.insert("avg_param_norm".into(), Json::Num(*avg_param_norm));
+                m.insert("secs".into(), Json::Num(*secs));
+            }
+        }
+        Json::Obj(m)
+    }
+}
+
+/// Shared JSONL event sink.  Cheap to clone (wrap in `Arc`), safe to emit
+/// from any fleet thread.
+pub struct Telemetry {
+    sink: Option<Mutex<Box<dyn Write + Send>>>,
+    emitted: AtomicU64,
+    dropped: AtomicU64,
+}
+
+impl Telemetry {
+    /// A sink that discards every event (the default for library callers).
+    pub fn null() -> Arc<Telemetry> {
+        Arc::new(Telemetry { sink: None, emitted: AtomicU64::new(0), dropped: AtomicU64::new(0) })
+    }
+
+    /// Stream JSONL to an arbitrary writer.
+    pub fn to_writer(w: Box<dyn Write + Send>) -> Arc<Telemetry> {
+        Arc::new(Telemetry {
+            sink: Some(Mutex::new(w)),
+            emitted: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+        })
+    }
+
+    /// Stream JSONL to stderr (keeps stdout clean for results).
+    pub fn stderr() -> Arc<Telemetry> {
+        Telemetry::to_writer(Box::new(std::io::stderr()))
+    }
+
+    /// Stream JSONL to a file (truncating any existing content).
+    pub fn file(path: &str) -> Result<Arc<Telemetry>> {
+        let f = std::fs::File::create(path)
+            .with_context(|| format!("creating telemetry file {path}"))?;
+        Ok(Telemetry::to_writer(Box::new(f)))
+    }
+
+    /// Emit one event.  Never fails: write errors are counted in
+    /// [`Telemetry::dropped`] and otherwise ignored (telemetry must not
+    /// take down training).
+    pub fn emit(&self, event: Event) {
+        let Some(sink) = &self.sink else { return };
+        let mut obj = match event.to_json() {
+            Json::Obj(m) => m,
+            other => {
+                // to_json always builds an object; keep the line valid anyway.
+                let mut m = BTreeMap::new();
+                m.insert("event".into(), other);
+                m
+            }
+        };
+        let ts = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_millis() as f64)
+            .unwrap_or(0.0);
+        obj.insert("ts_ms".into(), Json::Num(ts));
+        let line = Json::Obj(obj).dump();
+        let mut w = sink.lock().unwrap();
+        let ok = writeln!(w, "{line}").and_then(|_| w.flush()).is_ok();
+        drop(w);
+        if ok {
+            self.emitted.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Events successfully written so far.
+    pub fn emitted(&self) -> u64 {
+        self.emitted.load(Ordering::Relaxed)
+    }
+
+    /// Events lost to sink write errors.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A Vec<u8> sink shared with the test via Arc<Mutex<..>>.
+    struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+
+    impl Write for SharedBuf {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.0.lock().unwrap().extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn events_stream_as_parseable_jsonl() {
+        let buf = Arc::new(Mutex::new(Vec::new()));
+        let t = Telemetry::to_writer(Box::new(SharedBuf(buf.clone())));
+        t.emit(Event::JobQueued { job: 1, name: "xor".into(), queued: 0 });
+        t.emit(Event::JobFinished {
+            job: 1,
+            name: "xor".into(),
+            worker: 0,
+            ok: true,
+            secs: 0.25,
+            cost_evals: 123,
+            error: None,
+        });
+        assert_eq!(t.emitted(), 2);
+        let text = String::from_utf8(buf.lock().unwrap().clone()).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let first = Json::parse(lines[0]).unwrap();
+        assert_eq!(first.field("event").unwrap().as_str().unwrap(), "job_queued");
+        assert!(first.field("ts_ms").unwrap().as_f64().unwrap() >= 0.0);
+        let second = Json::parse(lines[1]).unwrap();
+        assert_eq!(second.field("cost_evals").unwrap().as_u64().unwrap(), 123);
+        assert!(second.field("ok").unwrap().as_bool().unwrap());
+    }
+
+    #[test]
+    fn null_sink_counts_nothing() {
+        let t = Telemetry::null();
+        t.emit(Event::SessionOpened { session: 1, peer: "p".into() });
+        assert_eq!(t.emitted(), 0);
+        assert_eq!(t.dropped(), 0);
+    }
+
+    #[test]
+    fn every_event_kind_serializes() {
+        let events = [
+            Event::PoolCreated { devices: 2, descriptions: vec!["a".into(), "b".into()] },
+            Event::JobQueued { job: 0, name: "n".into(), queued: 3 },
+            Event::JobStarted { job: 0, name: "n".into(), worker: 1 },
+            Event::JobFinished {
+                job: 0,
+                name: "n".into(),
+                worker: 1,
+                ok: false,
+                secs: 1.5,
+                cost_evals: 7,
+                error: Some("boom".into()),
+            },
+            Event::SessionOpened { session: 9, peer: "1.2.3.4:5".into() },
+            Event::SessionClosed { session: 9, requests: 4, ok: true, error: None },
+            Event::RoundSynced { round: 2, replicas: 4, avg_param_norm: 0.5, secs: 0.01 },
+        ];
+        for e in events {
+            let line = e.to_json().dump();
+            let parsed = Json::parse(&line).unwrap();
+            assert_eq!(parsed.field("event").unwrap().as_str().unwrap(), e.kind());
+        }
+    }
+}

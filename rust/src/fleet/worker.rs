@@ -1,0 +1,233 @@
+//! The fleet worker loop: pop a job, lease a device, train, report.
+//!
+//! One worker thread maps to one in-flight job; the pool decides which
+//! physical device backs it.  With `workers == devices` (the default) the
+//! fleet saturates the hardware; with `workers > devices` jobs overlap
+//! their queue wait with other jobs' device time — the lease, not the
+//! thread, is the scarce resource.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::anyhow;
+
+use crate::fleet::pool::DevicePool;
+use crate::fleet::scheduler::{JobOutcome, JobQueue, QueuedJob};
+use crate::fleet::telemetry::{Event, Telemetry};
+
+/// Worker body.  Runs until the queue is closed and drained.
+pub(crate) fn run_worker(
+    worker_id: usize,
+    queue: &JobQueue<QueuedJob>,
+    pool: &Arc<DevicePool>,
+    telemetry: &Telemetry,
+    lease_timeout: Duration,
+) {
+    'jobs: while let Some(job) = queue.pop() {
+        // Lease before starting the job.  A lease timeout is not a job
+        // failure when devices exist — the timeout bounds *one wait*, not
+        // the job's life (workers > devices is an advertised mode, and
+        // graceful shutdown promises queued jobs drain).  On timeout the
+        // job is requeued so higher-priority work gets in front; if the
+        // queue is closed or full (requeue is non-blocking — a worker
+        // must never block on its own queue), the worker holds the job
+        // and retries the lease.  Only an empty pool fails a job.
+        let mut pending = job;
+        let mut lease = loop {
+            match pool.lease(lease_timeout) {
+                Ok(lease) => break lease,
+                Err(e) => {
+                    if pool.size() == 0 {
+                        fail_job(worker_id, pending, e, telemetry);
+                        continue 'jobs;
+                    }
+                    match queue.try_push(pending.spec.priority, pending) {
+                        Ok(_) => continue 'jobs,
+                        Err(job_back) => pending = job_back,
+                    }
+                }
+            }
+        };
+        let QueuedJob { id, spec, run, done } = pending;
+        telemetry.emit(Event::JobStarted { job: id, name: spec.name.clone(), worker: worker_id });
+        let start = Instant::now();
+        let slot = lease.slot();
+        // A panicking job must not kill the worker: later queued jobs
+        // would hang in `JobHandle::wait` with no error.  The panic
+        // becomes this job's Err; the lease drop still returns the device
+        // (whatever mid-training state the panic left it in — jobs own
+        // re-initialization via set_params anyway).
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run(lease.device())
+        }))
+        .unwrap_or_else(|panic| Err(anyhow!("job panicked: {}", panic_message(&panic))));
+        drop(lease);
+        let wall = start.elapsed();
+        telemetry.emit(Event::JobFinished {
+            job: id,
+            name: spec.name.clone(),
+            worker: worker_id,
+            ok: result.is_ok(),
+            secs: wall.as_secs_f64(),
+            cost_evals: result.as_ref().map(|r| r.cost_evals).unwrap_or(0),
+            error: result.as_ref().err().map(|e| format!("{e:#}")),
+        });
+        // The submitter may have dropped its handle; that is not an error.
+        let _ = done.send(JobOutcome {
+            job_id: id,
+            name: spec.name,
+            worker: worker_id,
+            device_slot: Some(slot),
+            wall,
+            result,
+        });
+    }
+}
+
+/// Best-effort text of a caught panic payload.
+fn panic_message(panic: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = panic.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = panic.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Report a job that could not obtain a device at all.
+fn fail_job(worker_id: usize, job: QueuedJob, error: anyhow::Error, telemetry: &Telemetry) {
+    let QueuedJob { id, spec, run: _, done } = job;
+    telemetry.emit(Event::JobStarted { job: id, name: spec.name.clone(), worker: worker_id });
+    telemetry.emit(Event::JobFinished {
+        job: id,
+        name: spec.name.clone(),
+        worker: worker_id,
+        ok: false,
+        secs: 0.0,
+        cost_evals: 0,
+        error: Some(format!("{error:#}")),
+    });
+    let _ = done.send(JobOutcome {
+        job_id: id,
+        name: spec.name,
+        worker: worker_id,
+        device_slot: None,
+        wall: Duration::ZERO,
+        result: Err(error),
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{MgdConfig, MgdTrainer, ScheduleKind, TrainOptions};
+    use crate::datasets::xor;
+    use crate::device::{HardwareDevice, NativeDevice};
+    use crate::fleet::scheduler::{JobSpec, Priority, Scheduler, SchedulerConfig};
+    use crate::optim::init_params_uniform;
+    use crate::rng::Rng;
+    use std::sync::Arc;
+
+    fn xor_device(seed: u64) -> Box<dyn HardwareDevice> {
+        let mut dev = NativeDevice::new(&[2, 2, 1], 1);
+        let mut rng = Rng::new(seed);
+        let mut theta = vec![0f32; 9];
+        init_params_uniform(&mut rng, &mut theta, 1.0);
+        dev.set_params(&theta).unwrap();
+        Box::new(dev)
+    }
+
+    #[test]
+    fn farm_runs_jobs_against_pooled_devices() {
+        let pool = DevicePool::new(vec![xor_device(1), xor_device(2)]);
+        let scheduler = Scheduler::new(pool.clone(), Telemetry::null(), SchedulerConfig::default());
+        assert_eq!(scheduler.workers(), 2);
+        let data = Arc::new(xor());
+        let handles: Vec<_> = (0..4)
+            .map(|j| {
+                let data = data.clone();
+                let cfg = MgdConfig { eta: 1.0, amplitude: 0.05, seed: j, ..Default::default() };
+                let opts = TrainOptions { max_steps: 200, ..Default::default() };
+                scheduler
+                    .submit(
+                        JobSpec::named(format!("xor-{j}")),
+                        Box::new(move |dev| {
+                            let mut tr = MgdTrainer::new(dev, &data, cfg, ScheduleKind::Cyclic);
+                            tr.train(&opts, None)
+                        }),
+                    )
+                    .unwrap()
+            })
+            .collect();
+        for h in handles {
+            let outcome = h.wait_outcome().unwrap();
+            let res = outcome.result.unwrap();
+            assert_eq!(res.steps_run, 200);
+            assert!(res.cost_evals > 0);
+            assert!(outcome.device_slot.is_some());
+        }
+        scheduler.shutdown().unwrap();
+        assert_eq!(pool.available(), 2, "all devices must be back in the pool");
+        assert_eq!(pool.stats().leases_granted, 4);
+    }
+
+    #[test]
+    fn lease_failure_fails_the_job_not_the_worker() {
+        // Empty pool: every lease fails, but jobs still complete with Err
+        // and the scheduler shuts down cleanly.
+        let pool = DevicePool::new(Vec::new());
+        let scheduler = Scheduler::new(
+            pool,
+            Telemetry::null(),
+            SchedulerConfig {
+                workers: 1,
+                lease_timeout: Duration::from_millis(10),
+                ..Default::default()
+            },
+        );
+        let h = scheduler
+            .submit(JobSpec::named("doomed"), Box::new(|_dev| Ok(Default::default())))
+            .unwrap();
+        let outcome = h.wait_outcome().unwrap();
+        assert!(outcome.result.is_err());
+        assert!(outcome.device_slot.is_none());
+        scheduler.shutdown().unwrap();
+    }
+
+    #[test]
+    fn high_priority_jobs_jump_the_queue() {
+        // One worker, jobs queued while the worker is blocked on the first
+        // job; the High job must run before the earlier Normal job.
+        let pool = DevicePool::new(vec![xor_device(7)]);
+        let scheduler = Scheduler::new(
+            pool,
+            Telemetry::null(),
+            SchedulerConfig { workers: 1, ..Default::default() },
+        );
+        let order = Arc::new(std::sync::Mutex::new(Vec::<&'static str>::new()));
+        let submit = |name: &'static str, priority, sleep_ms: u64| {
+            let order = order.clone();
+            scheduler
+                .submit(
+                    JobSpec::named(name).with_priority(priority),
+                    Box::new(move |_dev| {
+                        std::thread::sleep(Duration::from_millis(sleep_ms));
+                        order.lock().unwrap().push(name);
+                        Ok(Default::default())
+                    }),
+                )
+                .unwrap()
+        };
+        // First job occupies the worker long enough for the rest to queue.
+        let h0 = submit("first", Priority::Normal, 100);
+        std::thread::sleep(Duration::from_millis(20));
+        let h1 = submit("normal", Priority::Normal, 0);
+        let h2 = submit("high", Priority::High, 0);
+        for h in [h0, h1, h2] {
+            h.wait().unwrap();
+        }
+        assert_eq!(*order.lock().unwrap(), vec!["first", "high", "normal"]);
+        scheduler.shutdown().unwrap();
+    }
+}

@@ -105,6 +105,74 @@ impl Json {
     pub fn as_f64_vec(&self) -> Result<Vec<f64>> {
         self.as_arr()?.iter().map(|v| v.as_f64()).collect()
     }
+
+    // ---- serialization ----------------------------------------------------
+
+    /// Serialize back to compact JSON text (one line; object keys in map
+    /// order).  Non-finite numbers serialize as `null` — JSON has no NaN.
+    /// This is the writer side of the fleet telemetry JSONL stream.
+    pub fn dump(&self) -> String {
+        let mut out = String::new();
+        self.dump_into(&mut out);
+        out
+    }
+
+    fn dump_into(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if n.is_finite() {
+                    // f64 Display is shortest-roundtrip and never emits a
+                    // trailing ".0", so it is already valid JSON.
+                    out.push_str(&format!("{n}"));
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => dump_str(s, out),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.dump_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(map) => {
+                out.push('{');
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    dump_str(k, out);
+                    out.push(':');
+                    v.dump_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn dump_str(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 impl fmt::Display for Json {
@@ -385,5 +453,25 @@ mod tests {
         let v = Json::parse("[3, 3, 16, 32]").unwrap();
         assert_eq!(v.as_usize_vec().unwrap(), vec![3, 3, 16, 32]);
         assert_eq!(Json::parse("[0.5, 1]").unwrap().as_f64_vec().unwrap(), vec![0.5, 1.0]);
+    }
+
+    #[test]
+    fn dump_roundtrips_through_parse() {
+        let src = r#"{"a": [1, 2.5, {"b": "c\nd"}], "e": null, "f": true, "g": "q\"uote"}"#;
+        let v = Json::parse(src).unwrap();
+        let line = v.dump();
+        assert!(!line.contains('\n'), "dump must be single-line for JSONL: {line}");
+        assert_eq!(Json::parse(&line).unwrap(), v);
+    }
+
+    #[test]
+    fn dump_scalars() {
+        assert_eq!(Json::Null.dump(), "null");
+        assert_eq!(Json::Bool(false).dump(), "false");
+        assert_eq!(Json::Num(42.0).dump(), "42");
+        assert_eq!(Json::Num(-1.5).dump(), "-1.5");
+        assert_eq!(Json::Num(f64::NAN).dump(), "null");
+        let tabbed = Json::Str("a\tb".into());
+        assert_eq!(tabbed, Json::parse(&tabbed.dump()).unwrap());
     }
 }

@@ -23,6 +23,13 @@
 //! - [`optim`] — MGD update rule plus baselines (backprop-SGD, RWC).
 //! - [`datasets`] — XOR / n-bit parity / NIST7x7 / synthetic image sets.
 //! - [`noise`], [`filters`] — §3.5 imperfection models, analog RC filters.
+//! - [`fleet`] — the orchestration layer above `coordinator` and
+//!   `device`: a concurrent device pool with leased access, a bounded
+//!   priority job scheduler with worker threads, data-parallel MGD with
+//!   periodic parameter averaging across replicas (§6's many-copies end
+//!   state), and a JSONL telemetry stream.  The pooled TCP server
+//!   ([`device::server::serve_pool`]) serves the same pool to remote
+//!   chip-in-the-loop trainers.
 //! - [`experiments`] — one harness per paper figure/table (DESIGN.md §5).
 
 pub mod bench;
@@ -35,6 +42,7 @@ pub mod datasets;
 pub mod device;
 pub mod experiments;
 pub mod filters;
+pub mod fleet;
 pub mod metrics;
 pub mod noise;
 pub mod optim;

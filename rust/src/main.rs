@@ -4,7 +4,9 @@
 //! mgd run <experiment>     regenerate a paper figure/table (fig2..fig10,
 //!                          table2, table3, all)
 //! mgd train [...]          train a model with MGD
-//! mgd serve [...]          expose a local device over TCP
+//! mgd fleet [...]          train across a pool of devices (data-parallel
+//!                          averaging or a job farm)
+//! mgd serve [...]          expose a local device (or device pool) over TCP
 //! mgd info                 list models + artifacts from the manifest
 //! ```
 //!
@@ -16,11 +18,17 @@ use std::path::PathBuf;
 
 use anyhow::{bail, Result};
 
+use std::sync::Arc;
+
 use mgd::cli::Args;
 use mgd::config::RunContext;
 use mgd::coordinator::{MgdConfig, MgdTrainer, OnChipTrainer, ScheduleKind, TrainOptions};
 use mgd::datasets::{self, Dataset};
 use mgd::device::{server, HardwareDevice, NativeDevice, PjrtDevice, RemoteDevice};
+use mgd::fleet::{
+    DataParallelConfig, Fleet, JobSpec, SchedulerConfig, Telemetry,
+};
+use mgd::noise::NeuronDefects;
 use mgd::optim::{init_params, init_params_uniform};
 use mgd::perturb::PerturbKind;
 use mgd::rng::Rng;
@@ -34,6 +42,7 @@ USAGE:
                          (fig2 fig3 fig4 fig5 fig6 fig7 fig8 fig9 fig10
                           table2 table3 | all)
   mgd train [opts]       train a model with MGD
+  mgd fleet [opts]       train across a pool of devices
   mgd serve [opts]       serve a device over TCP (chip-in-the-loop)
   mgd info               list models and artifacts
 
@@ -56,6 +65,20 @@ TRAIN OPTIONS:
   --sigma-cost F --sigma-update F                  noise injection (§3.5)
   --eval-every N    evaluation cadence             (default 1000)
 
+FLEET OPTIONS:
+  --devices N       pool size                      (default 4)
+  --model M         xor221 | parity441 | nist744 | fmnist_mlp (native MLPs)
+  --mode M          dp | farm                      (default dp)
+  --rounds N        dp: averaging rounds           (default 8)
+  --steps-per-round N  dp: MGD steps between syncs (default 1000)
+  --jobs N          farm: training jobs to enqueue (default 2 x devices)
+  --steps N         farm: MGD steps per job        (default 10000)
+  --defects F       per-device activation-defect strength σ_a (§3.5)
+  --batch B         device batch size              (default 1)
+  --samples N       synthetic dataset size (fmnist_mlp; default 2048)
+  --telemetry T     JSONL event stream ('-' = stderr, else a file path)
+  --eta F --amplitude F --tau-x N --tau-theta N --tau-p N --perturb P
+
 SERVE OPTIONS:
   --model M --device native|pjrt --addr HOST:PORT --max-sessions N
   --defects F       activation-defect strength (native device, Fig. 10)
@@ -73,7 +96,12 @@ fn main() -> Result<()> {
 
     let artifact_dir = match args.get("artifacts") {
         Some(dir) => PathBuf::from(dir),
-        None => mgd::find_artifact_dir()?,
+        None => match mgd::find_artifact_dir() {
+            Ok(dir) => dir,
+            // Artifact-free commands (native fleet/serve) must still work;
+            // artifact users fail later with a clear manifest error.
+            Err(_) => PathBuf::from(mgd::DEFAULT_ARTIFACT_DIR),
+        },
     };
     let mut ctx = RunContext::new(
         artifact_dir,
@@ -122,6 +150,26 @@ fn main() -> Result<()> {
                 cfg,
                 args.u64_or("eval-every", 1000)?,
             )
+        }
+        "fleet" => {
+            let mut known = GLOBAL_OPTS.to_vec();
+            known.extend([
+                "devices", "model", "mode", "rounds", "steps-per-round", "jobs", "steps",
+                "defects", "batch", "samples", "telemetry", "eta", "amplitude", "tau-x",
+                "tau-theta", "tau-p", "perturb",
+            ]);
+            args.check_known(&known)?;
+            let cfg = MgdConfig {
+                tau_x: args.u64_or("tau-x", 1)?,
+                tau_theta: args.u64_or("tau-theta", 1)?,
+                tau_p: args.u64_or("tau-p", 1)?,
+                eta: args.f32_or("eta", 1.0)?,
+                amplitude: args.f32_or("amplitude", 0.01)?,
+                kind: args.str_or("perturb", "rademacher").parse::<PerturbKind>()?,
+                noise: mgd::noise::NoiseConfig::none(),
+                seed: ctx.seed,
+            };
+            fleet_cmd(&ctx, &args, cfg)
         }
         "serve" => {
             let mut known = GLOBAL_OPTS.to_vec();
@@ -259,6 +307,168 @@ fn train(
             report(&res, &eval_set);
         }
         other => bail!("unknown mode {other:?} (onchip | loop | analog)"),
+    }
+    Ok(())
+}
+
+/// MLP layer widths for fleet (native-only) models.
+fn fleet_layers(model: &str) -> Result<Vec<usize>> {
+    if model == "fmnist_mlp" {
+        // Fashion-MNIST-shaped MLP over the synthetic 28x28x1 image set.
+        return Ok(vec![784, 32, 10]);
+    }
+    model_layers(model)
+}
+
+/// Train/eval datasets for a fleet model.
+fn fleet_dataset(model: &str, samples: usize, seed: u64) -> Result<(Dataset, Dataset)> {
+    if model == "fmnist_mlp" {
+        let n = samples.max(16);
+        return Ok(datasets::synthetic_fmnist(n, seed).split_test((n / 8).max(1)));
+    }
+    model_dataset(model, seed)
+}
+
+/// Build N native devices sharing one initialization, each with its own
+/// activation-defect table (device-to-device variation, §3.5).
+fn build_fleet_devices(
+    layers: &[usize],
+    n_devices: usize,
+    batch: usize,
+    defects: f32,
+    seed: u64,
+) -> Result<Vec<Box<dyn HardwareDevice>>> {
+    let n_neurons: usize = layers[1..].iter().sum();
+    let p: usize = layers.windows(2).map(|w| w[0] * w[1] + w[1]).sum();
+    let mut init_rng = Rng::new(seed ^ 0x494e_4954);
+    let mut theta = vec![0f32; p];
+    init_params_uniform(&mut init_rng, &mut theta, 1.0);
+    let mut devices: Vec<Box<dyn HardwareDevice>> = Vec::with_capacity(n_devices);
+    for i in 0..n_devices {
+        let mut defect_rng = Rng::new(seed.wrapping_add(0xD5F3_C7).wrapping_add(i as u64));
+        let table = if defects > 0.0 {
+            NeuronDefects::sample(n_neurons, defects, &mut defect_rng)
+        } else {
+            NeuronDefects::identity(n_neurons)
+        };
+        let mut dev = NativeDevice::with_defects(layers, batch, table);
+        dev.set_params(&theta)?;
+        devices.push(Box::new(dev));
+    }
+    Ok(devices)
+}
+
+/// `mgd fleet`: data-parallel training or a job farm over a device pool.
+fn fleet_cmd(ctx: &RunContext, args: &Args, cfg: MgdConfig) -> Result<()> {
+    let model = args.str_or("model", "nist744");
+    let mode = args.str_or("mode", "dp");
+    let n_devices = args.usize_or("devices", 4)?.max(1);
+    let batch = args.usize_or("batch", 1)?.max(1);
+    let defects = args.f32_or("defects", 0.0)?;
+    let samples = args.usize_or("samples", 2048)?;
+    let telemetry = match args.get("telemetry") {
+        None => Telemetry::null(),
+        Some("-") => Telemetry::stderr(),
+        Some(path) => Telemetry::file(path)?,
+    };
+
+    let layers = fleet_layers(&model)?;
+    let (train_set, eval_set) = fleet_dataset(&model, samples, ctx.seed)?;
+    let devices = build_fleet_devices(&layers, n_devices, batch, defects, ctx.seed)?;
+    println!(
+        "fleet: {n_devices} x native-mlp{layers:?} (batch {batch}, defects {defects}), \
+         model {model}"
+    );
+
+    match mode.as_str() {
+        "dp" => {
+            let dp = DataParallelConfig {
+                rounds: args.u64_or("rounds", 8)?.max(1),
+                steps_per_round: args.u64_or("steps-per-round", 1000)?.max(1),
+                ..Default::default()
+            };
+            let fleet = Fleet::new(devices, SchedulerConfig::default(), telemetry);
+            println!(
+                "data-parallel: {} rounds x {} steps/round, averaging across {n_devices} replicas",
+                dp.rounds, dp.steps_per_round
+            );
+            let res = fleet.train_data_parallel(&train_set, &eval_set, cfg, &dp)?;
+            println!("rounds run: {}", res.rounds_run);
+            println!("total device cost evaluations: {}", res.total_cost_evals);
+            println!(
+                "wall: {:.2}s ({:.0} cost-evals/sec across the fleet)",
+                res.wall_secs,
+                res.total_cost_evals as f64 / res.wall_secs.max(1e-9)
+            );
+            if let Some((cost, acc)) = res.eval {
+                println!(
+                    "synchronized model: eval cost {cost:.5}, accuracy {:.2}% over {} samples",
+                    acc * 100.0,
+                    eval_set.n
+                );
+            }
+            fleet.shutdown()?;
+        }
+        "farm" => {
+            let steps = args.u64_or("steps", 10_000)?;
+            let n_jobs = args.usize_or("jobs", 2 * n_devices)?.max(1);
+            let fleet = Fleet::new(devices, SchedulerConfig::default(), telemetry);
+            println!("farm: {n_jobs} jobs x {steps} steps over {n_devices} devices");
+            let train_arc = Arc::new(train_set);
+            let eval_arc = Arc::new(eval_set);
+            let t0 = std::time::Instant::now();
+            let handles: Result<Vec<_>> = (0..n_jobs)
+                .map(|j| {
+                    let mut job_cfg = cfg;
+                    job_cfg.seed = cfg.seed.wrapping_add(j as u64);
+                    let opts = TrainOptions {
+                        max_steps: steps,
+                        eval_every: (steps / 4).max(1),
+                        ..Default::default()
+                    };
+                    fleet.submit_training(
+                        JobSpec::named(format!("{model}-{j}")),
+                        train_arc.clone(),
+                        Some(eval_arc.clone()),
+                        job_cfg,
+                        opts,
+                    )
+                })
+                .collect();
+            let mut results = Vec::new();
+            for handle in handles? {
+                let outcome = handle.wait_outcome()?;
+                let result = outcome.result?;
+                println!(
+                    "  job {:<18} worker {} slot {:?} steps {:>8} cost-evals {:>9} acc {}",
+                    outcome.name,
+                    outcome.worker,
+                    outcome.device_slot,
+                    result.steps_run,
+                    result.cost_evals,
+                    result
+                        .final_accuracy()
+                        .map(|a| format!("{:.2}%", a * 100.0))
+                        .unwrap_or_else(|| "-".to_string()),
+                );
+                results.push(result);
+            }
+            let secs = t0.elapsed().as_secs_f64();
+            let evals = Fleet::total_cost_evals(&results);
+            println!(
+                "farm done: {n_jobs} jobs in {secs:.2}s ({:.2} jobs/sec, {:.0} cost-evals/sec)",
+                n_jobs as f64 / secs.max(1e-9),
+                evals as f64 / secs.max(1e-9)
+            );
+            let stats = fleet.shutdown()?;
+            println!(
+                "pool: {} leases granted, {} timeouts, {:.3}s total lease wait",
+                stats.leases_granted,
+                stats.lease_timeouts,
+                stats.total_wait.as_secs_f64()
+            );
+        }
+        other => bail!("unknown fleet mode {other:?} (dp | farm)"),
     }
     Ok(())
 }

@@ -1,13 +1,15 @@
 //! Scoped-thread parallel map — the in-repo substrate replacing rayon
 //! (offline build; see Cargo.toml).
 //!
-//! Replica statistics fan hundreds of independent NativeDevice trainings
-//! across cores.  This is a plain work-stealing-free chunked fan-out on
-//! `std::thread::scope`: items are handed out via an atomic cursor, so
-//! uneven run times still balance well.
+//! This is a plain work-stealing-free fan-out on `std::thread::scope`:
+//! items are handed out via an atomic cursor, so uneven run times still
+//! balance well.  Division of labor with the fleet: `parallel_map` is the
+//! order-preserving data-parallel primitive over a slice (`Fn` per item,
+//! no failure channel); *job-shaped* work — fallible, prioritized,
+//! queue-fed — goes through [`crate::fleet::run_batch`] or the long-lived
+//! [`crate::fleet::Scheduler`] instead.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
 
 /// Number of worker threads to use (available parallelism, capped).
 pub fn default_workers(n_items: usize) -> usize {
@@ -17,7 +19,12 @@ pub fn default_workers(n_items: usize) -> usize {
 
 /// Parallel map preserving input order: `out[i] = f(i, &items[i])`.
 ///
-/// `f` runs on worker threads; panics propagate (the scope join panics).
+/// `f` runs on worker threads; panics propagate (the worker join panics).
+///
+/// Results accumulate in per-worker buffers tagged with the item index and
+/// are scattered into the output after each worker joins — no per-item
+/// mutex (2 lock ops saved) and no per-item slot allocation on the replica
+/// hot path, just one buffer per worker.
 pub fn parallel_map<T, R, F>(items: &[T], f: F) -> Vec<R>
 where
     T: Sync,
@@ -33,23 +40,33 @@ where
         return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
     }
     let cursor = AtomicUsize::new(0);
-    let results: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    let mut out: Vec<Option<R>> = Vec::with_capacity(n);
+    out.resize_with(n, || None);
     std::thread::scope(|scope| {
-        for _ in 0..workers {
-            scope.spawn(|| loop {
-                let i = cursor.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let r = f(i, &items[i]);
-                *results[i].lock().unwrap() = Some(r);
-            });
+        let cursor = &cursor;
+        let f = &f;
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                scope.spawn(move || {
+                    let mut buf: Vec<(usize, R)> = Vec::new();
+                    loop {
+                        let i = cursor.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        buf.push((i, f(i, &items[i])));
+                    }
+                    buf
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, r) in h.join().expect("parallel_map worker panicked") {
+                out[i] = Some(r);
+            }
         }
     });
-    results
-        .into_iter()
-        .map(|m| m.into_inner().unwrap().expect("worker missed an item"))
-        .collect()
+    out.into_iter().map(|o| o.expect("worker missed an item")).collect()
 }
 
 /// Parallel map over `0..n` (convenience for seed fan-outs).

@@ -1,0 +1,184 @@
+//! Integration: the fleet subsystem end to end — pooled TCP serving with
+//! concurrent sessions, the scheduler farm, and data-parallel averaging.
+//!
+//! Everything here runs on `NativeDevice` (no artifacts, no PJRT), so
+//! these tests are environment-independent.
+
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::time::Duration;
+
+use mgd::coordinator::{MgdConfig, TrainOptions};
+use mgd::datasets::xor;
+use mgd::device::server::{serve_pool, ServeOptions};
+use mgd::device::{HardwareDevice, NativeDevice, RemoteDevice};
+use mgd::fleet::{
+    DataParallelConfig, DevicePool, Fleet, JobSpec, SchedulerConfig, Telemetry,
+};
+use mgd::optim::init_params_uniform;
+use mgd::rng::Rng;
+
+fn xor_device(seed: u64) -> Box<dyn HardwareDevice> {
+    let mut dev = NativeDevice::new(&[2, 2, 1], 1);
+    let mut rng = Rng::new(seed);
+    let mut theta = vec![0f32; 9];
+    init_params_uniform(&mut rng, &mut theta, 1.0);
+    dev.set_params(&theta).unwrap();
+    Box::new(dev)
+}
+
+/// The acceptance scenario: a pooled server with 2 native devices, 4
+/// concurrent `RemoteDevice` clients, every session completes with the
+/// correct `Hello` shapes and finite costs.
+#[test]
+fn pooled_server_serves_four_concurrent_clients_on_two_devices() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let pool = DevicePool::new(vec![xor_device(1), xor_device(2)]);
+    let server_pool = pool.clone();
+    let server = std::thread::spawn(move || {
+        serve_pool(
+            server_pool,
+            listener,
+            ServeOptions {
+                max_sessions: Some(4),
+                lease_timeout: Duration::from_secs(30),
+                telemetry: Telemetry::null(),
+            },
+        )
+        .unwrap();
+    });
+
+    let clients: Vec<_> = (0..4)
+        .map(|c| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut remote = RemoteDevice::connect(&addr).unwrap();
+                // Hello shape: the 2-2-1 MLP has 9 params, 2 inputs, 1 output.
+                assert_eq!(remote.n_params(), 9, "client {c}: wrong P");
+                assert_eq!(remote.batch_size(), 1, "client {c}: wrong B");
+                assert_eq!(remote.input_len(), 2, "client {c}: wrong input_len");
+                assert_eq!(remote.n_outputs(), 1, "client {c}: wrong n_outputs");
+                remote.set_params(&[0.2; 9]).unwrap();
+                remote.load_batch(&[1.0, 0.0], &[1.0]).unwrap();
+                let c0 = remote.cost(None).unwrap();
+                let c1 = remote.cost(Some(&[0.05; 9])).unwrap();
+                assert!(c0.is_finite() && c0 >= 0.0, "client {c}: bad baseline cost {c0}");
+                assert!(c1.is_finite(), "client {c}: bad perturbed cost {c1}");
+                assert_ne!(c0, c1, "client {c}: perturbation must change the cost");
+                let (cost, correct) =
+                    remote.evaluate(&[0.0, 0.0, 1.0, 1.0], &[0.0, 0.0], 2).unwrap();
+                assert!(cost.is_finite() && correct <= 2.0, "client {c}: bad evaluate");
+                remote.close();
+                c0
+            })
+        })
+        .collect();
+
+    for client in clients {
+        let c0 = client.join().expect("client session failed");
+        assert!(c0.is_finite());
+    }
+    server.join().unwrap();
+
+    // All leases returned; every session leased exactly once.
+    assert_eq!(pool.available(), 2);
+    assert_eq!(pool.stats().leases_granted, 4);
+    assert_eq!(pool.stats().lease_timeouts, 0);
+}
+
+/// Sessions beyond the pool size queue on the lease rather than failing,
+/// and a held device produces a clean timeout error on the client side.
+#[test]
+fn session_with_no_free_device_times_out_cleanly() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let pool = DevicePool::new(vec![xor_device(3)]);
+    let server = std::thread::spawn(move || {
+        serve_pool(
+            pool,
+            listener,
+            ServeOptions {
+                max_sessions: Some(2),
+                lease_timeout: Duration::from_millis(100),
+                telemetry: Telemetry::null(),
+            },
+        )
+        .unwrap();
+    });
+
+    // First client holds the only device (no Bye yet).
+    let mut holder = RemoteDevice::connect(&addr).unwrap();
+    assert_eq!(holder.n_params(), 9);
+    // Second client cannot lease within the timeout: its Hello gets an
+    // error response, which surfaces as a connect error.
+    let second = RemoteDevice::connect(&addr);
+    assert!(second.is_err(), "second session should fail while the device is held");
+    let msg = format!("{:#}", second.err().unwrap());
+    assert!(msg.contains("timed out"), "unexpected error: {msg}");
+    holder.close();
+    server.join().unwrap();
+}
+
+/// The farm path: jobs submitted through the fleet run to completion on
+/// pooled devices and report real training work.
+#[test]
+fn fleet_farm_trains_xor_jobs() {
+    let fleet = Fleet::new(
+        vec![xor_device(10), xor_device(11)],
+        SchedulerConfig::default(),
+        Telemetry::null(),
+    );
+    let data = Arc::new(xor());
+    let handles: Vec<_> = (0..4)
+        .map(|j| {
+            let cfg = MgdConfig {
+                eta: 2.0,
+                amplitude: 0.05,
+                seed: 100 + j,
+                ..Default::default()
+            };
+            let opts = TrainOptions { max_steps: 500, ..Default::default() };
+            fleet
+                .submit_training(
+                    JobSpec::named(format!("xor-{j}")),
+                    data.clone(),
+                    Some(data.clone()),
+                    cfg,
+                    opts,
+                )
+                .unwrap()
+        })
+        .collect();
+    for h in handles {
+        let res = h.wait().unwrap();
+        assert_eq!(res.steps_run, 500);
+        assert!(res.cost_evals >= 500);
+    }
+    let stats = fleet.shutdown().unwrap();
+    assert_eq!(stats.leases_granted, 4);
+}
+
+/// Data-parallel across the fleet: replicas synchronize and the final
+/// parameters land on every device.
+#[test]
+fn fleet_data_parallel_synchronizes_replicas() {
+    let fleet = Fleet::new(
+        vec![xor_device(20), xor_device(21), xor_device(22), xor_device(23)],
+        SchedulerConfig::default(),
+        Telemetry::null(),
+    );
+    let data = xor();
+    let cfg = MgdConfig { eta: 1.0, amplitude: 0.05, tau_theta: 5, seed: 7, ..Default::default() };
+    let dp = DataParallelConfig { rounds: 2, steps_per_round: 100, ..Default::default() };
+    let res = fleet.train_data_parallel(&data, &data, cfg, &dp).unwrap();
+    assert_eq!(res.replicas, 4);
+    assert_eq!(res.per_replica.len(), 4);
+    for r in &res.per_replica {
+        assert_eq!(r.steps_run, 200);
+    }
+    assert_eq!(res.final_params.len(), 9);
+    assert!(res.eval.is_some());
+    assert_eq!(fleet.pool().available(), 4);
+    fleet.shutdown().unwrap();
+}
