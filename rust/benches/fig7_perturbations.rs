@@ -15,7 +15,7 @@ use mgd::datasets::parity;
 use mgd::device::{HardwareDevice, NativeDevice};
 use mgd::metrics::Quartiles;
 use mgd::optim::{init_params_uniform, RwcTrainer};
-use mgd::perturb::{self, PerturbKind};
+use mgd::perturb::{self, Perturbation, PerturbKind};
 use mgd::rng::Rng;
 
 fn main() -> anyhow::Result<()> {

@@ -13,7 +13,7 @@ use mgd::coordinator::{MgdConfig, MgdTrainer, OnChipTrainer, ScheduleKind};
 use mgd::datasets::{nist7x7, parity};
 use mgd::device::{HardwareDevice, NativeDevice, PjrtDevice};
 use mgd::optim::init_params_uniform;
-use mgd::perturb::{self, PerturbKind};
+use mgd::perturb::{self, Perturbation, PerturbKind};
 use mgd::rng::Rng;
 use mgd::runtime::Runtime;
 

@@ -1,0 +1,151 @@
+//! Multi-probe cost engine: serial `cost()` vs batched `cost_many()`
+//! cost-evaluations/sec, swept over parameter count P.
+//!
+//! This is the hot path of all of training (ISSUE 2): every MGD timestep
+//! is one perturbed cost evaluation, so cost-evals/sec *is* the training
+//! speed.  The batched engine amortizes the unperturbed layer-0 walk
+//! across the K probes of a parameter-hold window, keeps every buffer in
+//! persistent scratch, and fans large sweeps across threads — the serial
+//! loop pays the full forward walk per probe.
+//!
+//! The second section measures the same lever where the paper says it
+//! matters most (§6: "the speed will most likely be limited by system
+//! I/O"): a `RemoteDevice` over loopback TCP, where `cost_many` ships one
+//! `CostMany` frame per K-probe window instead of K `Cost` round trips.
+//!
+//! ```text
+//! cargo bench --bench probe_throughput
+//! ```
+
+use std::net::TcpListener;
+use std::time::Instant;
+
+use mgd::device::{server, HardwareDevice, NativeDevice, RemoteDevice};
+use mgd::optim::init_params_uniform;
+use mgd::perturb::{self, Perturbation, PerturbKind};
+use mgd::rng::Rng;
+
+/// Probes per cost_many window (a typical τθ integration window).
+const K: usize = 64;
+
+/// Build a [98, h, 1] MLP with ≈ `p_target` parameters (P = 100·h + 1).
+fn device_with_params(p_target: usize) -> NativeDevice {
+    let h = (p_target.saturating_sub(1) / 100).max(1);
+    let mut dev = NativeDevice::new(&[98, h, 1], 1);
+    let mut rng = Rng::new(7);
+    let mut theta = vec![0f32; dev.n_params()];
+    init_params_uniform(&mut rng, &mut theta, 1.0);
+    dev.set_params(&theta).unwrap();
+    let mut x = vec![0f32; 98];
+    rng.fill_uniform(&mut x, 0.0, 1.0);
+    dev.load_batch(&x, &[1.0]).unwrap();
+    dev
+}
+
+/// One Rademacher probe stack of `k` probes for a P-parameter device.
+fn probe_stack(p: usize, k: usize) -> Vec<f32> {
+    let mut gen = perturb::make(PerturbKind::RademacherCode, p, 0.01, 1, 11);
+    let mut probes = vec![0f32; k * p];
+    for i in 0..k {
+        gen.fill(i as u64, &mut probes[i * p..(i + 1) * p]);
+    }
+    probes
+}
+
+fn bench_native() {
+    println!("native sweep: K = {K} probes/window, batch 1");
+    println!(
+        "{:<10} {:>8} {:>16} {:>16} {:>9}",
+        "P", "windows", "serial ev/s", "batched ev/s", "speedup"
+    );
+    for &p_target in &[1_000usize, 10_000, 100_000] {
+        let mut dev = device_with_params(p_target);
+        let p = dev.n_params();
+        let probes = probe_stack(p, K);
+        // Keep total work roughly constant across P.
+        let windows = (20_000_000 / (p * K)).clamp(2, 200);
+
+        // Warm up both paths (scratch growth happens here, not in timing).
+        let warm = dev.cost_many(&probes, K).unwrap();
+        assert_eq!(warm.len(), K);
+
+        let t0 = Instant::now();
+        let mut sink = 0f32;
+        for _ in 0..windows {
+            for i in 0..K {
+                sink += dev.cost(Some(&probes[i * p..(i + 1) * p])).unwrap();
+            }
+        }
+        let serial_secs = t0.elapsed().as_secs_f64();
+
+        let t0 = Instant::now();
+        for _ in 0..windows {
+            let costs = dev.cost_many(&probes, K).unwrap();
+            sink += costs[K - 1];
+        }
+        let batched_secs = t0.elapsed().as_secs_f64();
+
+        let evals = (windows * K) as f64;
+        println!(
+            "{:<10} {:>8} {:>16.0} {:>16.0} {:>8.2}x   (sink {sink:.3})",
+            p,
+            windows,
+            evals / serial_secs,
+            evals / batched_secs,
+            serial_secs / batched_secs,
+        );
+    }
+}
+
+fn bench_remote() -> anyhow::Result<()> {
+    println!();
+    println!("remote loopback: K = {K} probes/window, P ≈ 10k");
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?.to_string();
+    let server = std::thread::spawn(move || {
+        let dev: Box<dyn HardwareDevice> = Box::new(device_with_params(10_000));
+        server::serve_on(dev, listener, Some(1)).unwrap();
+    });
+    let mut remote = RemoteDevice::connect(&addr)?;
+    let p = remote.n_params();
+    let probes = probe_stack(p, K);
+    let windows = 20;
+
+    let warm = remote.cost_many(&probes, K)?;
+    assert_eq!(warm.len(), K);
+
+    let t0 = Instant::now();
+    let mut sink = 0f32;
+    for _ in 0..windows {
+        for i in 0..K {
+            sink += remote.cost(Some(&probes[i * p..(i + 1) * p]))?;
+        }
+    }
+    let serial_secs = t0.elapsed().as_secs_f64();
+
+    let t0 = Instant::now();
+    for _ in 0..windows {
+        let costs = remote.cost_many(&probes, K)?;
+        sink += costs[K - 1];
+    }
+    let batched_secs = t0.elapsed().as_secs_f64();
+    remote.close();
+    server.join().expect("server thread");
+
+    let evals = (windows * K) as f64;
+    println!(
+        "serial : {K} Cost frames/window   {:>12.0} ev/s",
+        evals / serial_secs
+    );
+    println!(
+        "batched:  1 CostMany frame/window {:>12.0} ev/s   ({:.2}x, sink {sink:.3})",
+        evals / batched_secs,
+        serial_secs / batched_secs
+    );
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    bench_native();
+    bench_remote()
+}

@@ -10,6 +10,12 @@
 //! Fig. 2/3 trace harnesses and the Fig. 5 infinite-integration mode) and
 //! a batch [`MgdTrainer::train`] loop with the stopping criteria the
 //! paper's experiments use.
+//!
+//! For I/O-limited devices (chip-in-the-loop over TCP, §6) the same
+//! semantics are available K timesteps at a time: [`MgdTrainer::step_window`]
+//! stacks a whole parameter-hold window of probes into one
+//! [`HardwareDevice::cost_many`] call, bit-identically to the serial loop,
+//! and [`MgdTrainer::train_batched`] is the corresponding training driver.
 
 use anyhow::Result;
 
@@ -45,6 +51,9 @@ pub struct MgdTrainer<'d> {
     g: Vec<f32>,
     /// Scratch perturbation vector.
     tt: Vec<f32>,
+    /// Scratch probe stack for [`MgdTrainer::step_window`] (K·P floats,
+    /// grown on demand — no per-window allocation).
+    probes: Vec<f32>,
     /// Scratch update vector (−ηG + noise).
     delta: Vec<f32>,
     /// Reusable batch buffers (hot loop, no per-step allocation).
@@ -79,6 +88,7 @@ impl<'d> MgdTrainer<'d> {
             dataset,
             g: vec![0.0; p],
             tt: vec![0.0; p],
+            probes: Vec::new(),
             delta: vec![0.0; p],
             xb: Vec::new(),
             yb: Vec::new(),
@@ -187,27 +197,152 @@ impl<'d> MgdTrainer<'d> {
         Ok(StepOutput { step: n, cost: c, c_tilde, updated })
     }
 
+    /// Execute up to `k` timesteps of Algorithm 1 through a **single**
+    /// [`HardwareDevice::cost_many`] probe batch.
+    ///
+    /// The window is clamped to the boundaries inside which batching is
+    /// invisible to the algorithm: θ and the loaded sample window must be
+    /// constant across every probe of one `cost_many` call, so the window
+    /// never crosses a τx sample change or a τθ update (an update *ending*
+    /// the window is fine — it fires after the last probe, exactly where
+    /// the serial loop fires it).  τp needs no clamp: probes within the
+    /// window simply repeat while the pattern holds.
+    ///
+    /// Within those bounds the result is **bit-identical** to calling
+    /// [`MgdTrainer::step`] `k` times: the same perturbation-generator
+    /// sequence, the same noise-RNG draw order (one baseline draw when C₀
+    /// is re-measured, then one draw per probe in step order, then the
+    /// update-noise draws), the same G accumulation order, and the same
+    /// `cost_evals` count.  The returned outputs may therefore be shorter
+    /// than `k`; callers just call again.
+    pub fn step_window(&mut self, k: usize) -> Result<Vec<StepOutput>> {
+        if k == 0 {
+            return Ok(Vec::new());
+        }
+        let n = self.step;
+        let tau_x = self.cfg.tau_x.max(1);
+        let mut k_eff = (k as u64).min(tau_x - (n % tau_x));
+        if self.cfg.tau_theta != u64::MAX {
+            let tau_t = self.cfg.tau_theta.max(1);
+            k_eff = k_eff.min(tau_t - (n % tau_t));
+        }
+        let k_eff = k_eff as usize;
+
+        // Lines 3–4: new training sample window (window start only — the
+        // clamp guarantees no τx boundary falls strictly inside).
+        if n % tau_x == 0 {
+            let idx = self.schedule.next_window();
+            self.dataset.gather_into(&idx, &mut self.xb, &mut self.yb);
+            self.dev.load_batch(&self.xb, &self.yb)?;
+            self.c0_valid = false;
+        }
+
+        // Lines 5–7: baseline C₀, at most once per window.
+        if !self.c0_valid {
+            self.c0 = self.dev.cost(None)? + self.cfg.noise.cost_noise(&mut self.rng);
+            self.cost_evals += 1;
+            self.c0_valid = true;
+        }
+
+        // Lines 8–9 for every step of the window: stack the probes.
+        let p = self.g.len();
+        if self.probes.len() < k_eff * p {
+            self.probes.resize(k_eff * p, 0.0);
+        }
+        for i in 0..k_eff {
+            self.pert.fill(n + i as u64, &mut self.probes[i * p..(i + 1) * p]);
+        }
+
+        // Lines 10–12, batched: K perturbed inferences, one device call.
+        let costs = self.dev.cost_many(&self.probes[..k_eff * p], k_eff)?;
+        if costs.len() != k_eff {
+            anyhow::bail!(
+                "cost_many returned {} costs for {k_eff} probes — device broke the \
+                 one-cost-per-probe contract",
+                costs.len()
+            );
+        }
+        self.cost_evals += k_eff as u64;
+
+        // Lines 13–17 replayed per step, in step order.
+        let inv_a2 = 1.0 / (self.cfg.amplitude * self.cfg.amplitude);
+        let mut outs = Vec::with_capacity(k_eff);
+        for (i, &raw) in costs.iter().enumerate().take(k_eff) {
+            let step = n + i as u64;
+            let c = raw + self.cfg.noise.cost_noise(&mut self.rng);
+            let c_tilde = c - self.c0;
+            let tt = &self.probes[i * p..(i + 1) * p];
+            for (g, &t) in self.g.iter_mut().zip(tt) {
+                *g += c_tilde * t * inv_a2;
+            }
+            let updated = self.cfg.tau_theta != u64::MAX
+                && (step + 1) % self.cfg.tau_theta.max(1) == 0;
+            if updated {
+                for (d, &g) in self.delta.iter_mut().zip(self.g.iter()) {
+                    *d = -self.cfg.eta * g;
+                }
+                self.cfg.noise.apply_update_noise(&mut self.rng, &mut self.delta);
+                self.dev.apply_update(&self.delta)?;
+                self.g.fill(0.0);
+                self.c0_valid = false;
+            }
+            outs.push(StepOutput { step, cost: c, c_tilde, updated });
+        }
+        self.step += k_eff as u64;
+        Ok(outs)
+    }
+
     /// Run the training loop with the given stopping/recording options.
     /// `eval_set` provides the accuracy probe (defaults to the training
     /// set for the paper's small problems).
+    ///
+    /// One device call per timestep — the single-probe case of
+    /// [`MgdTrainer::train_batched`], to which this delegates (a width-1
+    /// window is exactly one Algorithm 1 step, so there is only one loop
+    /// to keep correct).
     pub fn train(&mut self, opts: &TrainOptions, eval_set: Option<&Dataset>) -> Result<TrainResult> {
+        self.train_batched(opts, eval_set, 1)
+    }
+
+    /// [`MgdTrainer::train`] driven through [`MgdTrainer::step_window`]:
+    /// up to `probes_per_call` timesteps per device call.
+    ///
+    /// The trajectory — every θ, G, recorded cost, eval and stopping
+    /// decision — is identical to the serial loop for any
+    /// `probes_per_call` (1 reproduces `train` exactly); only the number
+    /// of device calls changes.  Windows are additionally clamped to the
+    /// eval cadence so accuracy probes land between windows, exactly
+    /// where the serial loop takes them.
+    pub fn train_batched(
+        &mut self,
+        opts: &TrainOptions,
+        eval_set: Option<&Dataset>,
+        probes_per_call: usize,
+    ) -> Result<TrainResult> {
+        let k_max = probes_per_call.max(1) as u64;
         let eval = eval_set.unwrap_or(self.dataset);
         let mut result = TrainResult::default();
-        while self.step < opts.max_steps {
-            let out = self.step()?;
-            if opts.record_cost_every > 0 && out.step % opts.record_cost_every == 0 {
-                result.cost_trace.push((out.step, out.cost));
+        'windows: while self.step < opts.max_steps {
+            let mut k = k_max.min(opts.max_steps - self.step);
+            if opts.eval_every > 0 {
+                k = k.min(opts.eval_every - (self.step % opts.eval_every));
             }
-            let check = opts.eval_every > 0 && (out.step + 1) % opts.eval_every == 0;
-            if check {
-                let (cost, correct) = self.dev.evaluate(&eval.x, &eval.y, eval.n)?;
-                let acc = correct / eval.n as f32;
-                result.eval_trace.push((out.step, cost, acc));
-                let cost_hit = opts.target_cost.is_some_and(|t| cost < t);
-                let acc_hit = opts.target_accuracy.is_some_and(|t| acc >= t);
-                if cost_hit || acc_hit {
-                    result.solved_at = Some(out.step);
-                    break;
+            let outs = self.step_window(k as usize)?;
+            for out in &outs {
+                if opts.record_cost_every > 0 && out.step % opts.record_cost_every == 0 {
+                    result.cost_trace.push((out.step, out.cost));
+                }
+                let check = opts.eval_every > 0 && (out.step + 1) % opts.eval_every == 0;
+                if check {
+                    let (cost, correct) = self.dev.evaluate(&eval.x, &eval.y, eval.n)?;
+                    let acc = correct / eval.n as f32;
+                    result.eval_trace.push((out.step, cost, acc));
+                    let cost_hit = opts.target_cost.is_some_and(|t| cost < t);
+                    let acc_hit = opts.target_accuracy.is_some_and(|t| acc >= t);
+                    if cost_hit || acc_hit {
+                        result.solved_at = Some(out.step);
+                        break 'windows;
+                    }
                 }
             }
         }
@@ -351,6 +486,73 @@ mod tests {
         assert!(cost.is_finite() && correct <= data.n as f32);
         // Training continues cleanly after the sync.
         tr.step().unwrap();
+    }
+
+    #[test]
+    fn step_window_clamps_to_tau_boundaries() {
+        let data = xor();
+        let mut dev = xor_device(8);
+        // τx = 3, τθ = 4: windows may never cross a sample change or an
+        // update, so a greedy k=10 request shrinks to the next boundary.
+        let cfg = MgdConfig { tau_x: 3, tau_theta: 4, seed: 8, ..Default::default() };
+        let mut tr = MgdTrainer::new(&mut dev, &data, cfg, ScheduleKind::Cyclic);
+        // step 0: boundaries at step 3 (τx) and after step 3 (τθ) → 3 steps.
+        assert_eq!(tr.step_window(10).unwrap().len(), 3);
+        // step 3: τθ boundary after step 3 → exactly 1 step, which updates.
+        let outs = tr.step_window(10).unwrap();
+        assert_eq!(outs.len(), 1);
+        assert!(outs[0].updated);
+        // step 4: next τx change at step 6 → 2 steps.
+        assert_eq!(tr.step_window(10).unwrap().len(), 2);
+        assert_eq!(tr.steps(), 6);
+        // k = 0 is a no-op.
+        assert!(tr.step_window(0).unwrap().is_empty());
+        assert_eq!(tr.steps(), 6);
+    }
+
+    #[test]
+    fn step_window_matches_serial_steps_bitwise() {
+        let data = xor();
+        let cfg = MgdConfig {
+            eta: 1.5,
+            amplitude: 0.05,
+            tau_x: 3,
+            tau_theta: 4,
+            seed: 12,
+            ..Default::default()
+        };
+        let mut dev_a = xor_device(12);
+        let mut dev_b = xor_device(12);
+        let mut serial = MgdTrainer::new(&mut dev_a, &data, cfg, ScheduleKind::Cyclic);
+        let mut windowed = MgdTrainer::new(&mut dev_b, &data, cfg, ScheduleKind::Cyclic);
+        let mut serial_outs = Vec::new();
+        for _ in 0..60 {
+            serial_outs.push(serial.step().unwrap());
+        }
+        let mut windowed_outs = Vec::new();
+        for k in [5usize, 1, 7, 2, 11].iter().cycle() {
+            if windowed.steps() >= 60 {
+                break;
+            }
+            let k = (*k).min(60 - windowed.steps() as usize);
+            windowed_outs.extend(windowed.step_window(k).unwrap());
+        }
+        assert_eq!(serial_outs.len(), windowed_outs.len());
+        for (s, w) in serial_outs.iter().zip(&windowed_outs) {
+            assert_eq!(s.step, w.step);
+            assert_eq!(s.cost.to_bits(), w.cost.to_bits(), "step {}", s.step);
+            assert_eq!(s.c_tilde.to_bits(), w.c_tilde.to_bits(), "step {}", s.step);
+            assert_eq!(s.updated, w.updated, "step {}", s.step);
+        }
+        assert_eq!(serial.cost_evals(), windowed.cost_evals());
+        let ga: Vec<u32> = serial.gradient().iter().map(|g| g.to_bits()).collect();
+        let gb: Vec<u32> = windowed.gradient().iter().map(|g| g.to_bits()).collect();
+        assert_eq!(ga, gb, "gradient integrators diverged");
+        let ta: Vec<u32> =
+            serial.device_params().unwrap().iter().map(|t| t.to_bits()).collect();
+        let tb: Vec<u32> =
+            windowed.device_params().unwrap().iter().map(|t| t.to_bits()).collect();
+        assert_eq!(ta, tb, "parameter memories diverged");
     }
 
     #[test]

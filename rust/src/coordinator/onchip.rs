@@ -13,6 +13,13 @@
 //! the PRNG seed and the per-window sample schedule per call — the
 //! host↔device traffic pattern a real autonomous trainer would have
 //! (EXPERIMENTS.md §Perf quantifies the win over per-step calls).
+//!
+//! On the probe-batching spectrum this driver is the far end: where
+//! [`crate::device::HardwareDevice::cost_many`] amortizes K probe costs
+//! into one device call while the coordinator still replays Algorithm 1
+//! host-side, the fused window runs the *whole* loop body — perturb,
+//! measure, integrate, update — on-device for
+//! [`OnChipTrainer::probes_per_call`] timesteps at a stretch.
 
 use std::sync::Arc;
 
@@ -103,6 +110,16 @@ impl<'r> OnChipTrainer<'r> {
 
     /// Steps per fused window (the artifact's T).
     pub fn window_steps(&self) -> usize {
+        self.window_steps
+    }
+
+    /// Perturbation probes evaluated per device call — the fused
+    /// analogue of a K-wide [`crate::device::HardwareDevice::cost_many`]
+    /// batch (here K is artifact-static and the update rule runs
+    /// device-side too).  Lets fleet dashboards report one
+    /// "probes/device-call" figure across loop-mode and on-chip
+    /// trainers.
+    pub fn probes_per_call(&self) -> usize {
         self.window_steps
     }
 

@@ -29,7 +29,7 @@ pub use native::NativeDevice;
 pub use pjrt::PjrtDevice;
 pub use remote::RemoteDevice;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 /// A trainable black-box inference device (the paper's Fig. 1a, minus the
 /// MGD circuitry — that lives in the coordinator).
@@ -71,6 +71,32 @@ pub trait HardwareDevice: Send {
     /// `None` = unperturbed baseline measurement (C₀).
     fn cost(&mut self, theta_tilde: Option<&[f32]>) -> Result<f32>;
 
+    /// Evaluate `k` stacked perturbation probes against the loaded batch
+    /// in one device call: `probes` holds `k` concatenated θ̃ vectors
+    /// (`probes.len() == k * n_params()`), and the reply is one cost per
+    /// probe, in probe order.  θ and the loaded sample window are held
+    /// fixed across the whole call — exactly the parameter-hold window
+    /// that Algorithm 1 sees between τθ/τx boundaries — so each returned
+    /// cost must equal what `cost(Some(&probes[i*P..(i+1)*P]))` would
+    /// have measured.
+    ///
+    /// This is the fleet's I/O-amortization lever (§6 warns the
+    /// chip-in-the-loop regime "will most likely be limited by system
+    /// I/O"): [`RemoteDevice`] ships all K probes in a single wire frame,
+    /// and [`NativeDevice`] evaluates them in one sweep that reuses the
+    /// shared input activations.  The default implementation loops
+    /// [`HardwareDevice::cost`], so exotic backends keep working
+    /// unchanged.
+    fn cost_many(&mut self, probes: &[f32], k: usize) -> Result<Vec<f32>> {
+        let p = self.n_params();
+        validate_probe_stack(p, probes, k)?;
+        let mut costs = Vec::with_capacity(k);
+        for i in 0..k {
+            costs.push(self.cost(Some(&probes[i * p..(i + 1) * p]))?);
+        }
+        Ok(costs)
+    }
+
     /// Evaluate (cost, #correct) over an arbitrary labelled set — the
     /// "accuracy probe" used between training windows.  Not part of the
     /// training hot path.
@@ -80,6 +106,21 @@ pub trait HardwareDevice: Send {
     fn describe(&self) -> String {
         format!("device(P={}, B={})", self.n_params(), self.batch_size())
     }
+}
+
+/// Shared shape check for a [`HardwareDevice::cost_many`] probe stack:
+/// `k` probes over `n_params` parameters need exactly `k · n_params`
+/// floats.  Implementations should call this first so every backend
+/// rejects malformed stacks with the same error.
+pub fn validate_probe_stack(n_params: usize, probes: &[f32], k: usize) -> Result<()> {
+    if probes.len() != k * n_params {
+        bail!(
+            "cost_many: {k} probes over {n_params} params need {} floats, got {}",
+            k * n_params,
+            probes.len()
+        );
+    }
+    Ok(())
 }
 
 /// Count of device cost-evaluations — the paper's unit of "hardware time"

@@ -13,11 +13,41 @@
 //!    hardware-simulation speeds.  Its numerics match the PJRT path
 //!    exactly for identity defects (integration-tested in
 //!    `rust/tests/pjrt_parity.rs`).
+//!
+//! # The multi-probe cost engine
+//!
+//! The forward pass is split into two halves so that K stacked
+//! perturbation probes ([`HardwareDevice::cost_many`]) share work:
+//!
+//! - [`compute_layer0_base`] — the *unperturbed* first-layer
+//!   pre-activations `z₀ = x·W₀ + b₀` depend only on θ and the loaded
+//!   batch, never on a probe, so they are computed **once per device
+//!   call** and reused by every probe (and by the baseline C₀ path).
+//! - [`forward_one`] — walks the remaining arithmetic for one probe
+//!   (layer-0 perturbation term `x·θ̃₀ + θ̃_b`, then the deeper layers).
+//!
+//! Every buffer involved is persistent scratch on the device: the hot
+//! path performs **no per-call allocation** (the old implementation
+//! cloned `y`, re-allocated `out`, and juggled `x` with `mem::take` on
+//! every single cost evaluation — the innermost call of all of training).
+//! For large probe batches the sweep fans probes across scoped threads;
+//! each probe writes only its own scratch block, so results are bitwise
+//! identical to the serial order.
+//!
+//! Floating-point contract: `cost(Some(tt))`, `cost(None)` and every
+//! probe of `cost_many` run the *same* arithmetic in the same order, so
+//! a probe cost is bit-identical to the serial cost of the same θ̃ —
+//! this is what makes [`crate::coordinator::MgdTrainer::step_window`]
+//! exactly reproduce the serial `step()` trajectory.
 
 use anyhow::{bail, Result};
 
 use super::HardwareDevice;
 use crate::noise::NeuronDefects;
+
+/// Fan probes across threads only past this many multiply-accumulates
+/// (k · P); below it the thread-spawn overhead dominates.
+const PARALLEL_FLOP_THRESHOLD: usize = 1 << 18;
 
 /// MLP layer widths + defect table.
 #[derive(Debug, Clone)]
@@ -29,9 +59,19 @@ pub struct NativeDevice {
     /// Currently-loaded sample window.
     x: Vec<f32>,
     y: Vec<f32>,
-    /// Scratch activations (avoid per-call allocation on the hot path).
+    /// Per-worker activation scratch (`workers · stride`, `stride =
+    /// widest · n`): a worker's probes reuse one block sequentially, so
+    /// peak memory is O(workers), never O(K) — a legal max-size
+    /// `CostMany` frame cannot balloon the server.
     scratch_a: Vec<f32>,
     scratch_b: Vec<f32>,
+    /// Shared unperturbed layer-0 pre-activations (`n · layers[1]`).
+    scratch_base: Vec<f32>,
+    /// Per-worker perturbation accumulator rows (`workers · widest`).
+    scratch_pert: Vec<f32>,
+    /// Per-worker outputs of the last forward (`workers · n · n_outputs`);
+    /// block 0 doubles as the baseline/eval output buffer.
+    scratch_out: Vec<f32>,
 }
 
 impl NativeDevice {
@@ -58,6 +98,9 @@ impl NativeDevice {
             y: Vec::new(),
             scratch_a: vec![0.0; widest * batch],
             scratch_b: vec![0.0; widest * batch],
+            scratch_base: vec![0.0; widest * batch],
+            scratch_pert: vec![0.0; widest],
+            scratch_out: Vec::new(),
         }
     }
 
@@ -69,62 +112,286 @@ impl NativeDevice {
         *self.layers.last().unwrap()
     }
 
-    /// Forward pass over `n` samples in `x`, writing outputs into `out`
-    /// (`n * n_outputs`).  `tilde` optionally rides on the parameters.
-    fn forward(&mut self, x: &[f32], n: usize, tilde: Option<&[f32]>, out: &mut [f32]) {
-        let n_in = self.layers[0];
-        debug_assert_eq!(x.len(), n * n_in);
-        debug_assert_eq!(out.len(), n * self.n_outputs());
+    /// Grow the scratch buffers for `n` samples and `workers` concurrent
+    /// sweep threads (1 for the serial paths).  Grows only — after the
+    /// first call at a given shape the hot path never allocates.
+    fn ensure_scratch(&mut self, n: usize, workers: usize) {
+        let widest = *self.layers.iter().max().unwrap();
+        let stride = widest * n;
+        if self.scratch_a.len() < workers * stride {
+            self.scratch_a.resize(workers * stride, 0.0);
+            self.scratch_b.resize(workers * stride, 0.0);
+        }
+        if self.scratch_base.len() < stride {
+            self.scratch_base.resize(stride, 0.0);
+        }
+        if self.scratch_pert.len() < workers * widest {
+            self.scratch_pert.resize(workers * widest, 0.0);
+        }
+        let out_len = workers * n * self.n_outputs();
+        if self.scratch_out.len() < out_len {
+            self.scratch_out.resize(out_len, 0.0);
+        }
+    }
 
-        // h := x (scratch_a holds the current layer's activations).
-        self.scratch_a[..x.len()].copy_from_slice(x);
-        let mut width = n_in;
-        let mut offset = 0usize; // into theta
-        let mut neuron_base = 0usize; // into defect table
+    /// Run one forward (baseline or a single probe) over the loaded
+    /// batch; outputs land in `scratch_out[..batch · n_outputs]`.
+    fn run_single(&mut self, tilde: Option<&[f32]>) {
+        let n = self.batch;
+        self.ensure_scratch(n, 1);
+        let widest = *self.layers.iter().max().unwrap();
+        let stride = widest * n;
+        let out_len = n * self.n_outputs();
+        // Split borrows: every field below is disjoint, so the shared
+        // inputs (layers/theta/defects/x) and the scratch blocks can be
+        // borrowed simultaneously.
+        let NativeDevice {
+            layers,
+            theta,
+            defects,
+            x,
+            scratch_a,
+            scratch_b,
+            scratch_base,
+            scratch_pert,
+            scratch_out,
+            ..
+        } = self;
+        let layers: &[usize] = layers;
+        let theta: &[f32] = theta;
+        compute_layer0_base(layers, theta, x, n, &mut scratch_base[..n * layers[1]]);
+        forward_one(
+            layers,
+            theta,
+            defects,
+            x,
+            n,
+            &scratch_base[..n * layers[1]],
+            tilde,
+            &mut scratch_a[..stride],
+            &mut scratch_b[..stride],
+            &mut scratch_pert[..widest],
+            &mut scratch_out[..out_len],
+        );
+    }
 
-        let n_layers = self.layers.len() - 1;
-        for li in 0..n_layers {
-            let n_out = self.layers[li + 1];
-            let w = &self.theta[offset..offset + width * n_out];
-            let b = &self.theta[offset + width * n_out..offset + width * n_out + n_out];
-            // z = h @ W + b, with optional perturbation on W and b.
-            for s in 0..n {
-                let h_row = &self.scratch_a[s * width..(s + 1) * width];
-                for j in 0..n_out {
-                    let mut z = b[j];
-                    if let Some(tt) = tilde {
-                        z += tt[offset + width * n_out + j];
-                        for (i, &hv) in h_row.iter().enumerate() {
-                            z += hv * (w[i * n_out + j] + tt[offset + i * n_out + j]);
-                        }
-                    } else {
-                        for (i, &hv) in h_row.iter().enumerate() {
-                            z += hv * w[i * n_out + j];
-                        }
+    /// The batched sweep behind [`HardwareDevice::cost_many`]: layer-0
+    /// base once, then every probe through a per-worker scratch block
+    /// (serially within a worker), with each probe's cost written
+    /// straight into `costs` — so memory stays O(workers) regardless of
+    /// K, and the arithmetic per probe is exactly [`Self::run_single`]'s.
+    fn sweep_costs(&mut self, probes: &[f32], k: usize, costs: &mut [f32]) {
+        let p = self.theta.len();
+        let n = self.batch;
+        let workers = if k >= 4 && k.saturating_mul(p) >= PARALLEL_FLOP_THRESHOLD {
+            crate::par::default_workers(k)
+        } else {
+            1
+        };
+        self.ensure_scratch(n, workers);
+        let widest = *self.layers.iter().max().unwrap();
+        let stride = widest * n;
+        let out_len = n * self.n_outputs();
+        let NativeDevice {
+            layers,
+            theta,
+            defects,
+            x,
+            y,
+            scratch_a,
+            scratch_b,
+            scratch_base,
+            scratch_pert,
+            scratch_out,
+            ..
+        } = self;
+        let layers: &[usize] = layers;
+        let theta: &[f32] = theta;
+        let defects: &NeuronDefects = defects;
+        let x: &[f32] = x;
+        let y: &[f32] = y;
+        compute_layer0_base(layers, theta, x, n, &mut scratch_base[..n * layers[1]]);
+        let base: &[f32] = &scratch_base[..n * layers[1]];
+        if workers <= 1 {
+            let acts_a = &mut scratch_a[..stride];
+            let acts_b = &mut scratch_b[..stride];
+            let out = &mut scratch_out[..out_len];
+            let pert = &mut scratch_pert[..widest];
+            for (tt, c) in probes.chunks(p).zip(costs.iter_mut()) {
+                forward_one(
+                    layers,
+                    theta,
+                    defects,
+                    x,
+                    n,
+                    base,
+                    Some(tt),
+                    &mut acts_a[..],
+                    &mut acts_b[..],
+                    &mut pert[..],
+                    &mut out[..],
+                );
+                *c = mse(&out[..], y);
+            }
+            return;
+        }
+        // Parallel sweep: contiguous probe ranges per worker, one scratch
+        // block per worker.  Each probe is computed exactly as in the
+        // serial path and writes only its own cost slot, so the result is
+        // bitwise independent of the thread schedule.
+        let per = k.div_ceil(workers);
+        let mut pp: &[f32] = &probes[..k * p];
+        let mut cc: &mut [f32] = costs;
+        let mut aa: &mut [f32] = &mut scratch_a[..workers * stride];
+        let mut bb: &mut [f32] = &mut scratch_b[..workers * stride];
+        let mut oo: &mut [f32] = &mut scratch_out[..workers * out_len];
+        let mut rr: &mut [f32] = &mut scratch_pert[..workers * widest];
+        std::thread::scope(|scope| {
+            let mut remaining = k;
+            while remaining > 0 {
+                let take = per.min(remaining);
+                remaining -= take;
+                let (p0, rest) = pp.split_at(take * p);
+                pp = rest;
+                let (c0, rest) = std::mem::take(&mut cc).split_at_mut(take);
+                cc = rest;
+                let (a0, rest) = std::mem::take(&mut aa).split_at_mut(stride);
+                aa = rest;
+                let (b0, rest) = std::mem::take(&mut bb).split_at_mut(stride);
+                bb = rest;
+                let (o0, rest) = std::mem::take(&mut oo).split_at_mut(out_len);
+                oo = rest;
+                let (r0, rest) = std::mem::take(&mut rr).split_at_mut(widest);
+                rr = rest;
+                scope.spawn(move || {
+                    for (tt, c) in p0.chunks(p).zip(c0.iter_mut()) {
+                        forward_one(
+                            layers,
+                            theta,
+                            defects,
+                            x,
+                            n,
+                            base,
+                            Some(tt),
+                            &mut a0[..],
+                            &mut b0[..],
+                            &mut r0[..],
+                            &mut o0[..],
+                        );
+                        *c = mse(&o0[..], y);
                     }
-                    self.scratch_b[s * n_out + j] = self.defects.activate(neuron_base + j, z);
+                });
+            }
+        });
+    }
+}
+
+/// Mean-squared error between a prediction block and its targets.
+fn mse(y_pred: &[f32], y_true: &[f32]) -> f32 {
+    debug_assert_eq!(y_pred.len(), y_true.len());
+    let sum: f32 = y_pred
+        .iter()
+        .zip(y_true)
+        .map(|(p, t)| {
+            let d = p - t;
+            d * d
+        })
+        .sum();
+    sum / y_pred.len() as f32
+}
+
+/// Unperturbed layer-0 pre-activations `z₀[s][j] = b₀[j] + Σᵢ x[s][i]·W₀[i][j]`
+/// — probe-independent, computed once per device call and shared by the
+/// baseline and every probe of a [`HardwareDevice::cost_many`] sweep.
+fn compute_layer0_base(layers: &[usize], theta: &[f32], x: &[f32], n: usize, base: &mut [f32]) {
+    let width = layers[0];
+    let n_out = layers[1];
+    let wlen = width * n_out;
+    let bias = &theta[wlen..wlen + n_out];
+    for s in 0..n {
+        let h = &x[s * width..(s + 1) * width];
+        let zrow = &mut base[s * n_out..(s + 1) * n_out];
+        zrow.copy_from_slice(bias);
+        for (i, &hv) in h.iter().enumerate() {
+            let wrow = &theta[i * n_out..(i + 1) * n_out];
+            for (z, &wv) in zrow.iter_mut().zip(wrow) {
+                *z += hv * wv;
+            }
+        }
+    }
+}
+
+/// Forward pass for one probe (or the baseline when `tilde` is `None`)
+/// over `n` samples, starting from the precomputed layer-0 `base`.
+///
+/// Weight rows are walked in their natural `[i][j]` (row-major) layout —
+/// contiguous axpy sweeps per input neuron — instead of the old
+/// column-strided gather, and the perturbation term accumulates in its
+/// own row so the shared `base` stays bitwise reusable across probes.
+#[allow(clippy::too_many_arguments)]
+fn forward_one(
+    layers: &[usize],
+    theta: &[f32],
+    defects: &NeuronDefects,
+    x: &[f32],
+    n: usize,
+    base: &[f32],
+    tilde: Option<&[f32]>,
+    acts_a: &mut [f32],
+    acts_b: &mut [f32],
+    pert_row: &mut [f32],
+    out: &mut [f32],
+) {
+    let n_layers = layers.len() - 1;
+    let mut acts_a = acts_a;
+    let mut acts_b = acts_b;
+    let mut width = layers[0];
+    let mut offset = 0usize; // into theta / tilde
+    let mut neuron_base = 0usize; // into the defect table
+    for li in 0..n_layers {
+        let n_out = layers[li + 1];
+        let wlen = width * n_out;
+        for s in 0..n {
+            let h: &[f32] = if li == 0 {
+                &x[s * width..(s + 1) * width]
+            } else {
+                &acts_a[s * width..(s + 1) * width]
+            };
+            let zrow = &mut acts_b[s * n_out..(s + 1) * n_out];
+            if li == 0 {
+                zrow.copy_from_slice(&base[s * n_out..(s + 1) * n_out]);
+            } else {
+                zrow.copy_from_slice(&theta[offset + wlen..offset + wlen + n_out]);
+                for (i, &hv) in h.iter().enumerate() {
+                    let wrow = &theta[offset + i * n_out..offset + (i + 1) * n_out];
+                    for (z, &wv) in zrow.iter_mut().zip(wrow) {
+                        *z += hv * wv;
+                    }
                 }
             }
-            std::mem::swap(&mut self.scratch_a, &mut self.scratch_b);
-            offset += width * n_out + n_out;
-            neuron_base += n_out;
-            width = n_out;
+            if let Some(tt) = tilde {
+                let prow = &mut pert_row[..n_out];
+                prow.copy_from_slice(&tt[offset + wlen..offset + wlen + n_out]);
+                for (i, &hv) in h.iter().enumerate() {
+                    let trow = &tt[offset + i * n_out..offset + (i + 1) * n_out];
+                    for (pz, &tv) in prow.iter_mut().zip(trow) {
+                        *pz += hv * tv;
+                    }
+                }
+                for (z, &pv) in zrow.iter_mut().zip(prow.iter()) {
+                    *z += pv;
+                }
+            }
+            for (j, z) in zrow.iter_mut().enumerate() {
+                *z = defects.activate(neuron_base + j, *z);
+            }
         }
-        out.copy_from_slice(&self.scratch_a[..n * width]);
+        std::mem::swap(&mut acts_a, &mut acts_b);
+        offset += wlen + n_out;
+        neuron_base += n_out;
+        width = n_out;
     }
-
-    fn mse(&self, y_pred: &[f32], y_true: &[f32]) -> f32 {
-        debug_assert_eq!(y_pred.len(), y_true.len());
-        let sum: f32 = y_pred
-            .iter()
-            .zip(y_true)
-            .map(|(p, t)| {
-                let d = p - t;
-                d * d
-            })
-            .sum();
-        sum / y_pred.len() as f32
-    }
+    out.copy_from_slice(&acts_a[..n * width]);
 }
 
 impl HardwareDevice for NativeDevice {
@@ -178,8 +445,10 @@ impl HardwareDevice for NativeDevice {
                 y.len()
             );
         }
-        self.x = x.to_vec();
-        self.y = y.to_vec();
+        self.x.clear();
+        self.x.extend_from_slice(x);
+        self.y.clear();
+        self.y.extend_from_slice(y);
         Ok(())
     }
 
@@ -193,12 +462,22 @@ impl HardwareDevice for NativeDevice {
             }
         }
         let n = self.batch;
-        let k = self.n_outputs();
-        let mut out = vec![0f32; n * k];
-        let x = std::mem::take(&mut self.x);
-        self.forward(&x, n, theta_tilde, &mut out);
-        self.x = x;
-        Ok(self.mse(&out, &self.y.clone()))
+        let k_out = self.n_outputs();
+        self.run_single(theta_tilde);
+        Ok(mse(&self.scratch_out[..n * k_out], &self.y))
+    }
+
+    fn cost_many(&mut self, probes: &[f32], k: usize) -> Result<Vec<f32>> {
+        super::validate_probe_stack(self.theta.len(), probes, k)?;
+        if k == 0 {
+            return Ok(Vec::new());
+        }
+        if self.x.is_empty() {
+            bail!("cost_many: no batch loaded");
+        }
+        let mut costs = vec![0f32; k];
+        self.sweep_costs(probes, k, &mut costs);
+        Ok(costs)
     }
 
     fn evaluate(&mut self, x: &[f32], y: &[f32], n: usize) -> Result<(f32, f32)> {
@@ -207,15 +486,35 @@ impl HardwareDevice for NativeDevice {
         if x.len() != n * n_in || y.len() != n * k {
             bail!("evaluate: shape mismatch");
         }
-        // Grow scratch if the eval set is larger than the training batch.
+        self.ensure_scratch(n, 1);
         let widest = *self.layers.iter().max().unwrap();
-        if self.scratch_a.len() < widest * n {
-            self.scratch_a.resize(widest * n, 0.0);
-            self.scratch_b.resize(widest * n, 0.0);
-        }
-        let mut out = vec![0f32; n * k];
-        self.forward(x, n, None, &mut out);
-        let cost = self.mse(&out, y);
+        let NativeDevice {
+            layers,
+            theta,
+            defects,
+            scratch_a,
+            scratch_b,
+            scratch_base,
+            scratch_pert,
+            scratch_out,
+            ..
+        } = self;
+        compute_layer0_base(layers, theta, x, n, &mut scratch_base[..n * layers[1]]);
+        forward_one(
+            layers,
+            theta,
+            defects,
+            x,
+            n,
+            &scratch_base[..n * layers[1]],
+            None,
+            &mut scratch_a[..widest * n],
+            &mut scratch_b[..widest * n],
+            &mut scratch_pert[..widest],
+            &mut scratch_out[..n * k],
+        );
+        let out = &self.scratch_out[..n * k];
+        let cost = mse(out, y);
         let mut correct = 0f32;
         for s in 0..n {
             let yp = &out[s * k..(s + 1) * k];
@@ -286,10 +585,8 @@ mod tests {
         let c = dev.cost(Some(&tt)).unwrap();
         let fd = (c - c0) / dtheta;
         // Analytic: dC/db1 = 2(y−t)·y·(1−y) for MSE with K=1.
-        let mut out = vec![0f32; 1];
-        let x = dev.x.clone();
-        dev.forward(&x, 1, None, &mut out);
-        let y = out[0];
+        dev.run_single(None);
+        let y = dev.scratch_out[0];
         let want = 2.0 * (y - 1.0) * y * (1.0 - y);
         assert!((fd - want).abs() < 1e-3, "fd {fd} vs analytic {want}");
     }
@@ -338,8 +635,85 @@ mod tests {
         assert!(dev.apply_update(&[0.0; 3]).is_err());
         assert!(dev.load_batch(&[0.0; 3], &[0.0]).is_err());
         assert!(dev.cost(None).is_err(), "cost before load_batch must fail");
+        assert!(dev.cost_many(&[0.0; 9], 1).is_err(), "cost_many before load_batch must fail");
         dev.set_params(&[0.0; 9]).unwrap();
         dev.load_batch(&[0.0, 0.0], &[0.0]).unwrap();
         assert!(dev.cost(Some(&[0.0; 4])).is_err());
+        assert!(dev.cost_many(&[0.0; 4], 1).is_err(), "short probe stack must be rejected");
+        assert!(dev.cost_many(&[0.0; 18], 1).is_err(), "long probe stack must be rejected");
+    }
+
+    #[test]
+    fn repeated_cost_is_bit_identical() {
+        // The scratch-buffer engine must be a pure function of (θ, batch,
+        // θ̃): interleaved baseline / perturbed / batched calls may not
+        // disturb each other through the reused buffers.
+        let mut dev = NativeDevice::new(&[3, 5, 2], 2);
+        let mut rng = Rng::new(17);
+        let mut theta = vec![0f32; dev.n_params()];
+        rng.fill_uniform(&mut theta, -1.0, 1.0);
+        dev.set_params(&theta).unwrap();
+        dev.load_batch(&[0.1, 0.2, 0.3, 0.4, 0.5, 0.6], &[1.0, 0.0, 0.0, 1.0]).unwrap();
+        let mut tt = vec![0f32; dev.n_params()];
+        rng.fill_uniform(&mut tt, -0.05, 0.05);
+        let c0 = dev.cost(None).unwrap();
+        let c1 = dev.cost(Some(&tt)).unwrap();
+        for _ in 0..5 {
+            assert_eq!(dev.cost(Some(&tt)).unwrap().to_bits(), c1.to_bits());
+            assert_eq!(dev.cost(None).unwrap().to_bits(), c0.to_bits());
+            let batched = dev.cost_many(&tt, 1).unwrap();
+            assert_eq!(batched[0].to_bits(), c1.to_bits());
+        }
+    }
+
+    #[test]
+    fn cost_many_matches_serial_costs_bitwise() {
+        let mut dev = NativeDevice::new(&[4, 6, 3], 2);
+        let p = dev.n_params();
+        let mut rng = Rng::new(23);
+        let mut theta = vec![0f32; p];
+        rng.fill_uniform(&mut theta, -1.0, 1.0);
+        dev.set_params(&theta).unwrap();
+        let mut x = vec![0f32; 8];
+        let mut y = vec![0f32; 6];
+        rng.fill_uniform(&mut x, 0.0, 1.0);
+        rng.fill_uniform(&mut y, 0.0, 1.0);
+        dev.load_batch(&x, &y).unwrap();
+        let k = 7;
+        let mut probes = vec![0f32; k * p];
+        rng.fill_uniform(&mut probes, -0.05, 0.05);
+        let batched = dev.cost_many(&probes, k).unwrap();
+        assert_eq!(batched.len(), k);
+        for (i, &c) in batched.iter().enumerate() {
+            let serial = dev.cost(Some(&probes[i * p..(i + 1) * p])).unwrap();
+            assert_eq!(c.to_bits(), serial.to_bits(), "probe {i}: {c} != {serial}");
+        }
+        assert!(dev.cost_many(&[], 0).unwrap().is_empty());
+    }
+
+    #[test]
+    fn parallel_sweep_matches_serial_sweep() {
+        // Big enough that k·P crosses PARALLEL_FLOP_THRESHOLD, so this
+        // exercises the scoped-thread path against per-probe serial costs.
+        let layers = [64, 512, 8];
+        let mut dev = NativeDevice::new(&layers, 1);
+        let p = dev.n_params();
+        assert!(8 * p >= super::PARALLEL_FLOP_THRESHOLD, "test must cross the threshold");
+        let mut rng = Rng::new(31);
+        let mut theta = vec![0f32; p];
+        rng.fill_uniform(&mut theta, -0.5, 0.5);
+        dev.set_params(&theta).unwrap();
+        let mut x = vec![0f32; 64];
+        rng.fill_uniform(&mut x, 0.0, 1.0);
+        let y = vec![0.5f32; 8];
+        dev.load_batch(&x, &y).unwrap();
+        let k = 8;
+        let mut probes = vec![0f32; k * p];
+        rng.fill_uniform(&mut probes, -0.01, 0.01);
+        let batched = dev.cost_many(&probes, k).unwrap();
+        for (i, &c) in batched.iter().enumerate() {
+            let serial = dev.cost(Some(&probes[i * p..(i + 1) * p])).unwrap();
+            assert_eq!(c.to_bits(), serial.to_bits(), "probe {i}");
+        }
     }
 }

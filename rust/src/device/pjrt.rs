@@ -143,6 +143,12 @@ impl HardwareDevice for PjrtDevice {
         out[0].to_scalar_f32()
     }
 
+    // `cost_many` deliberately stays on the trait default (K serial
+    // dispatches through `cost`): the `cost` artifact is compiled for a
+    // single θ̃ input, so there is nothing to batch yet.  A vmapped
+    // `{model}_cost_many` artifact (one PJRT call for all K probes) is
+    // the ROADMAP follow-on once real xla bindings land.
+
     fn evaluate(&mut self, x: &[f32], y: &[f32], n: usize) -> Result<(f32, f32)> {
         if x.len() != n * self.input_len || y.len() != n * self.n_outputs {
             bail!("evaluate: shape mismatch");

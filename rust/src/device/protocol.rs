@@ -19,6 +19,31 @@
 //! The protocol is deliberately minimal — it is the I/O bottleneck the
 //! paper warns about ("the speed will most likely be limited by system
 //! I/O"), and the Table 3 HW1 row models exactly this regime.
+//!
+//! # Multi-probe cost batching (`CostMany`)
+//!
+//! [`Op::CostMany`] amortizes that bottleneck: one request carries `K`
+//! stacked perturbation vectors and one response carries `K` costs, so a
+//! whole parameter-hold window of Algorithm 1 costs a single round trip
+//! instead of `K`.  Layout:
+//!
+//! ```text
+//! request payload  := k:u32  array(θ̃₀ ‖ θ̃₁ ‖ … ‖ θ̃ₖ₋₁)   (array count = k·P)
+//! response payload := array(C₀ … Cₖ₋₁)                      (count = k)
+//! ```
+//!
+//! **Contract**: the server holds θ and the loaded sample window fixed
+//! across the whole batch, and `Cᵢ` equals what a serial `Cost` request
+//! with `θ̃ᵢ` would have returned.  `k == 0` is legal and returns an
+//! empty array.
+//!
+//! **Chunking rule**: a `CostMany` payload is `8 + 4·k·P` bytes and must
+//! respect [`MAX_FRAME_BYTES`] like every other frame.  Clients must
+//! split larger batches into consecutive `CostMany` requests of at most
+//! [`max_probes_per_frame`]`(P)` probes each — the server never
+//! reassembles, it just answers each sub-batch (θ is untouched between
+//! them, so splitting cannot change any cost).  This mirrors the
+//! client-side chunking that `Evaluate` would need past ~16M floats.
 
 use std::io::{Read, Write};
 
@@ -54,6 +79,10 @@ pub enum Op {
     Evaluate = 0x07,
     /// Close the session. Reply: empty.
     Bye = 0x08,
+    /// Measure K probe costs in one round trip; payload:
+    /// `k:u32, array θ̃-stack` (see the module docs for the contract and
+    /// the chunking rule). Reply: `array` of K costs.
+    CostMany = 0x09,
 }
 
 impl Op {
@@ -67,9 +96,26 @@ impl Op {
             0x06 => Op::Cost,
             0x07 => Op::Evaluate,
             0x08 => Op::Bye,
+            0x09 => Op::CostMany,
             other => bail!("unknown opcode {other:#x}"),
         })
     }
+}
+
+/// Fixed bytes of a `CostMany` payload besides the probe floats:
+/// `k:u32` plus the probe array's `count:u32` prefix.
+pub const COST_MANY_OVERHEAD_BYTES: usize = 8;
+
+/// Maximum probes a single `CostMany` request frame can carry for a
+/// `P`-parameter device without exceeding [`MAX_FRAME_BYTES`].  Returns 0
+/// when even one probe cannot fit (`P` > ~16M parameters — such a device
+/// cannot be driven over this protocol at all, since `SetParams` has the
+/// same per-frame bound).
+pub const fn max_probes_per_frame(n_params: usize) -> usize {
+    if n_params == 0 {
+        return 0;
+    }
+    (MAX_FRAME_BYTES - COST_MANY_OVERHEAD_BYTES) / (4 * n_params)
 }
 
 /// Encode an f32 array into a payload buffer.
@@ -292,7 +338,97 @@ mod tests {
     fn opcode_range() {
         assert!(Op::from_u8(0x01).is_ok());
         assert!(Op::from_u8(0x08).is_ok());
-        assert!(Op::from_u8(0x09).is_err());
+        assert_eq!(Op::from_u8(0x09).unwrap(), Op::CostMany);
+        assert!(Op::from_u8(0x0A).is_err());
         assert!(Op::from_u8(0x00).is_err());
+    }
+
+    // ---- CostMany frames --------------------------------------------------
+
+    /// Build a CostMany payload for `k` probes of `p` params each.
+    fn cost_many_payload(probes: &[f32], k: usize) -> Vec<u8> {
+        let mut payload = Vec::new();
+        put_u32(&mut payload, k as u32);
+        put_array(&mut payload, probes);
+        payload
+    }
+
+    #[test]
+    fn cost_many_payload_roundtrip_k1() {
+        let probes = [0.5f32, -0.25, 1.5];
+        let payload = cost_many_payload(&probes, 1);
+        let mut wire = Vec::new();
+        write_request(&mut wire, Op::CostMany, &payload).unwrap();
+        let mut cursor = std::io::Cursor::new(wire);
+        let (op, got) = read_request(&mut cursor).unwrap();
+        assert_eq!(op, Op::CostMany);
+        let mut pos = 0;
+        assert_eq!(get_u32(&got, &mut pos).unwrap(), 1);
+        assert_eq!(get_array(&got, &mut pos).unwrap(), probes.to_vec());
+        assert_eq!(pos, got.len());
+    }
+
+    #[test]
+    fn cost_many_payload_roundtrip_k0() {
+        // k == 0 is a legal (if pointless) frame: empty probe stack,
+        // empty cost reply.
+        let payload = cost_many_payload(&[], 0);
+        assert_eq!(payload.len(), COST_MANY_OVERHEAD_BYTES);
+        let mut wire = Vec::new();
+        write_request(&mut wire, Op::CostMany, &payload).unwrap();
+        let mut cursor = std::io::Cursor::new(wire);
+        let (op, got) = read_request(&mut cursor).unwrap();
+        assert_eq!(op, Op::CostMany);
+        let mut pos = 0;
+        assert_eq!(get_u32(&got, &mut pos).unwrap(), 0);
+        assert!(get_array(&got, &mut pos).unwrap().is_empty());
+    }
+
+    #[test]
+    fn cost_many_truncated_probe_stack_errors() {
+        // Header claims 2 probes of 3 floats; only 4 floats arrive.
+        let mut payload = Vec::new();
+        put_u32(&mut payload, 2);
+        put_u32(&mut payload, 6); // array claims 6 floats…
+        for v in [1.0f32, 2.0, 3.0, 4.0] {
+            put_f32(&mut payload, v); // …but only 4 follow
+        }
+        let mut pos = 0;
+        assert_eq!(get_u32(&payload, &mut pos).unwrap(), 2);
+        assert!(get_array(&payload, &mut pos).is_err());
+    }
+
+    #[test]
+    fn cost_many_chunk_limit_sits_exactly_at_the_frame_cap() {
+        // The chunking rule must use every byte the cap allows: a payload
+        // of max_probes_per_frame(P) probes fits, one more probe does not.
+        for p in [1usize, 9, 220, 10_007, 1 << 20] {
+            let max_k = max_probes_per_frame(p);
+            assert!(max_k >= 1, "P={p} must admit at least one probe");
+            let fits = COST_MANY_OVERHEAD_BYTES + 4 * max_k * p;
+            let overflows = COST_MANY_OVERHEAD_BYTES + 4 * (max_k + 1) * p;
+            assert!(fits <= MAX_FRAME_BYTES, "P={p}: max_k={max_k} payload {fits} too big");
+            assert!(overflows > MAX_FRAME_BYTES, "P={p}: max_k={max_k} not maximal");
+        }
+    }
+
+    #[test]
+    fn cost_many_degenerate_param_counts() {
+        assert_eq!(max_probes_per_frame(0), 0);
+        // A device too big for one probe per frame reports 0 (the same
+        // device could never receive SetParams either).
+        assert_eq!(max_probes_per_frame(MAX_FRAME_BYTES), 0);
+    }
+
+    #[test]
+    fn cost_many_oversized_header_is_rejected_before_allocation() {
+        // Same cap check as every opcode, exercised on the new frame: a
+        // header claiming more than MAX_FRAME_BYTES dies on the length
+        // check, not on allocation.
+        let mut wire = vec![Op::CostMany as u8];
+        wire.extend_from_slice(&((MAX_FRAME_BYTES as u32) + 1).to_le_bytes());
+        let mut cursor = std::io::Cursor::new(wire);
+        let err = read_request(&mut cursor).unwrap_err();
+        assert!(err.to_string().contains("exceeds protocol maximum"), "{err:#}");
     }
 }

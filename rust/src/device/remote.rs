@@ -6,11 +6,17 @@
 //! be limited by system I/O").  The Table 3 HW1 row (chip-in-the-loop,
 //! τp = 1 ms) corresponds to this device; the `chip_in_the_loop` example
 //! trains through it end-to-end.
+//!
+//! The one deliberate exception is [`HardwareDevice::cost_many`]: a whole
+//! K-probe parameter-hold window travels as a *single* `CostMany` frame
+//! (chunked client-side at the protocol's frame cap), which is the lever
+//! that moves the I/O-limited regime from one round trip per probe to one
+//! per window.
 
 use std::io::BufReader;
 use std::net::TcpStream;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use super::protocol as p;
 use super::HardwareDevice;
@@ -58,6 +64,50 @@ impl RemoteDevice {
     /// Politely close the session.
     pub fn close(mut self) {
         let _ = self.roundtrip(p::Op::Bye, &[]);
+    }
+
+    /// [`HardwareDevice::cost_many`] with an explicit per-frame probe
+    /// limit (the public trait method passes the protocol maximum).
+    /// Exposed so tests can force multi-frame chunking without building
+    /// 64 MiB payloads.
+    pub fn cost_many_chunked(
+        &mut self,
+        probes: &[f32],
+        k: usize,
+        max_probes_per_frame: usize,
+    ) -> Result<Vec<f32>> {
+        let n_params = self.n_params;
+        super::validate_probe_stack(n_params, probes, k)?;
+        if k == 0 {
+            return Ok(Vec::new());
+        }
+        if max_probes_per_frame == 0 {
+            bail!(
+                "cost_many: a single {n_params}-parameter probe exceeds the \
+                 protocol frame limit ({} bytes)",
+                p::MAX_FRAME_BYTES
+            );
+        }
+        // Client-side chunking (see the protocol module docs): split the
+        // stack into consecutive CostMany frames of at most
+        // `max_probes_per_frame` probes; θ is untouched between frames so
+        // the split is invisible to the costs.
+        let mut costs = Vec::with_capacity(k);
+        for chunk in probes.chunks(max_probes_per_frame * n_params) {
+            let chunk_k = chunk.len() / n_params;
+            let mut payload =
+                Vec::with_capacity(p::COST_MANY_OVERHEAD_BYTES + 4 * chunk.len());
+            p::put_u32(&mut payload, chunk_k as u32);
+            p::put_array(&mut payload, chunk);
+            let reply = self.roundtrip(p::Op::CostMany, &payload)?;
+            let mut pos = 0;
+            let got = p::get_array(&reply, &mut pos)?;
+            if got.len() != chunk_k {
+                bail!("CostMany: sent {chunk_k} probes, device answered {} costs", got.len());
+            }
+            costs.extend_from_slice(&got);
+        }
+        Ok(costs)
     }
 }
 
@@ -118,6 +168,13 @@ impl HardwareDevice for RemoteDevice {
         let reply = self.roundtrip(p::Op::Cost, &payload)?;
         let mut pos = 0;
         p::get_f32(&reply, &mut pos)
+    }
+
+    /// One `CostMany` frame per window (instead of K `Cost` round trips),
+    /// chunked client-side at the [`p::MAX_FRAME_BYTES`] boundary.
+    fn cost_many(&mut self, probes: &[f32], k: usize) -> Result<Vec<f32>> {
+        let limit = p::max_probes_per_frame(self.n_params);
+        self.cost_many_chunked(probes, k, limit)
     }
 
     fn evaluate(&mut self, x: &[f32], y: &[f32], n: usize) -> Result<(f32, f32)> {

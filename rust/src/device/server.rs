@@ -284,6 +284,16 @@ fn handle_request(
             p::put_f32(&mut out, correct);
             out
         }
+        p::Op::CostMany => {
+            let k = p::get_u32(payload, &mut pos)? as usize;
+            let probes = p::get_array(payload, &mut pos)?;
+            // The device validates probes.len() == k * P and holds θ and
+            // the loaded batch fixed across the whole sub-batch.
+            let costs = dev.cost_many(&probes, k)?;
+            let mut out = Vec::with_capacity(4 + 4 * costs.len());
+            p::put_array(&mut out, &costs);
+            out
+        }
         p::Op::Bye => return Ok(None),
     };
     Ok(Some(reply))
@@ -333,6 +343,61 @@ mod tests {
         let mut pos = 0;
         let c = p::get_f32(&reply, &mut pos).unwrap();
         assert!(c.is_finite() && c >= 0.0);
+    }
+
+    #[test]
+    fn dispatch_cost_many_matches_serial_costs() {
+        let mut dev: Box<dyn HardwareDevice> = Box::new(NativeDevice::new(&[2, 2, 1], 1));
+        let mut payload = Vec::new();
+        p::put_array(&mut payload, &[0.1; 9]);
+        handle_request(&mut *dev, p::Op::SetParams, &payload).unwrap();
+        let mut batch = Vec::new();
+        p::put_array(&mut batch, &[1.0, 0.0]);
+        p::put_array(&mut batch, &[1.0]);
+        handle_request(&mut *dev, p::Op::LoadBatch, &batch).unwrap();
+        // Two probes through one CostMany frame…
+        let probes: Vec<f32> = (0..18).map(|i| 0.01 * i as f32).collect();
+        let mut req = Vec::new();
+        p::put_u32(&mut req, 2);
+        p::put_array(&mut req, &probes);
+        let reply = handle_request(&mut *dev, p::Op::CostMany, &req).unwrap().unwrap();
+        let mut pos = 0;
+        let costs = p::get_array(&reply, &mut pos).unwrap();
+        assert_eq!(costs.len(), 2);
+        // …must equal two serial Cost dispatches, bit for bit.
+        for (i, &c) in costs.iter().enumerate() {
+            let mut req = vec![1u8];
+            p::put_array(&mut req, &probes[i * 9..(i + 1) * 9]);
+            let reply = handle_request(&mut *dev, p::Op::Cost, &req).unwrap().unwrap();
+            let mut pos = 0;
+            let serial = p::get_f32(&reply, &mut pos).unwrap();
+            assert_eq!(c.to_bits(), serial.to_bits(), "probe {i}");
+        }
+    }
+
+    #[test]
+    fn dispatch_cost_many_rejects_mismatched_stack() {
+        let mut dev: Box<dyn HardwareDevice> = Box::new(NativeDevice::new(&[2, 2, 1], 1));
+        let mut payload = Vec::new();
+        p::put_array(&mut payload, &[0.1; 9]);
+        handle_request(&mut *dev, p::Op::SetParams, &payload).unwrap();
+        let mut batch = Vec::new();
+        p::put_array(&mut batch, &[1.0, 0.0]);
+        p::put_array(&mut batch, &[1.0]);
+        handle_request(&mut *dev, p::Op::LoadBatch, &batch).unwrap();
+        // k = 3 but only 2 probes' worth of floats: device-side error,
+        // not a panic, and the session would keep serving.
+        let mut req = Vec::new();
+        p::put_u32(&mut req, 3);
+        p::put_array(&mut req, &[0.0; 18]);
+        assert!(handle_request(&mut *dev, p::Op::CostMany, &req).is_err());
+        // k = 0: legal, empty reply array.
+        let mut req = Vec::new();
+        p::put_u32(&mut req, 0);
+        p::put_array(&mut req, &[]);
+        let reply = handle_request(&mut *dev, p::Op::CostMany, &req).unwrap().unwrap();
+        let mut pos = 0;
+        assert!(p::get_array(&reply, &mut pos).unwrap().is_empty());
     }
 
     #[test]

@@ -18,7 +18,7 @@ use crate::coordinator::analog::{AnalogConfig, AnalogTrainer};
 use crate::coordinator::{MgdConfig, MgdTrainer, ScheduleKind};
 use crate::datasets::xor;
 use crate::metrics::CsvWriter;
-use crate::perturb::PerturbKind;
+use crate::perturb::{Perturbation, PerturbKind};
 
 /// 3-parameter network: a single 2→1 sigmoid layer (2 weights + 1 bias).
 const LAYERS: [usize; 2] = [2, 1];

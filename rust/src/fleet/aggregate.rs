@@ -36,6 +36,13 @@ pub struct DataParallelConfig {
     /// MGD timesteps each replica runs between synchronizations.  Align
     /// to a multiple of τθ so every round ends on an update boundary.
     pub steps_per_round: u64,
+    /// Probes per device call
+    /// ([`crate::coordinator::MgdTrainer::step_window`] width): each
+    /// replica drives its device through K-probe `cost_many` batches
+    /// instead of per-step `cost` round trips.  1 = the serial path; the
+    /// training trajectory is bit-identical for any value, only the call
+    /// count (and, for remote devices, the wire-frame count) changes.
+    pub probes_per_call: usize,
     /// How long to wait when leasing the whole pool.
     pub lease_timeout: Duration,
 }
@@ -45,6 +52,7 @@ impl Default for DataParallelConfig {
         DataParallelConfig {
             rounds: 8,
             steps_per_round: 1000,
+            probes_per_call: 1,
             lease_timeout: Duration::from_secs(30),
         }
     }
@@ -206,10 +214,12 @@ pub fn train_data_parallel(
                                 target_cost: None,
                                 target_accuracy: None,
                             };
-                            match trainer.train(&opts, Some(eval_set)).and_then(|r| {
-                                let theta = trainer.device_params()?;
-                                Ok((r, theta))
-                            }) {
+                            match trainer
+                                .train_batched(&opts, Some(eval_set), dp.probes_per_call)
+                                .and_then(|r| {
+                                    let theta = trainer.device_params()?;
+                                    Ok((r, theta))
+                                }) {
                                 Ok((r, theta)) => {
                                     result = r;
                                     *thetas[ri].lock().unwrap() = theta;
@@ -374,6 +384,43 @@ mod tests {
         let tb = b.device().get_params().unwrap();
         assert_eq!(ta, tb, "devices must hold the synchronized parameters");
         assert_eq!(ta, res.final_params);
+    }
+
+    #[test]
+    fn probe_batching_does_not_change_the_trajectory() {
+        // probes_per_call is a pure I/O lever: the data-parallel result
+        // (final synchronized parameters, cost_evals) must be bit-stable
+        // across window widths.
+        let run = |probes_per_call: usize| {
+            let pool = DevicePool::new(vec![xor_device(30), xor_device(31)]);
+            let data = xor();
+            // τx = 6, τθ = 4: sample windows long enough that
+            // probes_per_call = 8 produces genuine multi-probe
+            // cost_many batches (k_eff up to 4), with interleaved
+            // clamp boundaries (lcm 12).  τx = 1 would clamp every
+            // window to a single probe and test nothing.
+            let cfg = MgdConfig {
+                eta: 1.0,
+                amplitude: 0.05,
+                tau_x: 6,
+                tau_theta: 4,
+                seed: 3,
+                ..Default::default()
+            };
+            let dp = DataParallelConfig {
+                rounds: 2,
+                steps_per_round: 60,
+                probes_per_call,
+                ..Default::default()
+            };
+            train_data_parallel(&pool, &data, &data, cfg, &dp, &Telemetry::null()).unwrap()
+        };
+        let serial = run(1);
+        let windowed = run(8);
+        let a: Vec<u32> = serial.final_params.iter().map(|v| v.to_bits()).collect();
+        let b: Vec<u32> = windowed.final_params.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(a, b, "probe batching changed the data-parallel trajectory");
+        assert_eq!(serial.total_cost_evals, windowed.total_cost_evals);
     }
 
     #[test]

@@ -117,7 +117,9 @@ impl Fleet {
     }
 
     /// Submit a standard MGD training job: an [`MgdTrainer`] loop over
-    /// `dataset` on whichever device the job leases.
+    /// `dataset` on whichever device the job leases.  The single-probe
+    /// case of [`Fleet::submit_training_windowed`], to which this
+    /// delegates (one job-closure builder to keep correct).
     pub fn submit_training(
         &self,
         spec: JobSpec,
@@ -126,11 +128,27 @@ impl Fleet {
         cfg: MgdConfig,
         opts: TrainOptions,
     ) -> Result<JobHandle> {
+        self.submit_training_windowed(spec, dataset, eval_set, cfg, opts, 1)
+    }
+
+    /// [`Fleet::submit_training`] driven through K-probe
+    /// [`crate::device::HardwareDevice::cost_many`] windows
+    /// ([`MgdTrainer::train_batched`]): same trajectory, 1 device call
+    /// per window instead of per step — the chip-in-the-loop I/O lever.
+    pub fn submit_training_windowed(
+        &self,
+        spec: JobSpec,
+        dataset: Arc<Dataset>,
+        eval_set: Option<Arc<Dataset>>,
+        cfg: MgdConfig,
+        opts: TrainOptions,
+        probes_per_call: usize,
+    ) -> Result<JobHandle> {
         self.submit(
             spec,
             Box::new(move |dev| {
                 let mut trainer = MgdTrainer::new(dev, &dataset, cfg, ScheduleKind::Cyclic);
-                trainer.train(&opts, eval_set.as_deref())
+                trainer.train_batched(&opts, eval_set.as_deref(), probes_per_call)
             }),
         )
     }

@@ -64,6 +64,10 @@ TRAIN OPTIONS:
   --perturb P       rademacher | walsh | sequential | sinusoidal
   --sigma-cost F --sigma-update F                  noise injection (§3.5)
   --eval-every N    evaluation cadence             (default 1000)
+  --probes K        loop mode: perturbation probes per device call
+                    (cost_many window; default 1 = serial; windows are
+                    clamped to min(tau-x, tau-theta), so raise those to
+                    actually batch K probes)
 
 FLEET OPTIONS:
   --devices N       pool size                      (default 4)
@@ -77,6 +81,8 @@ FLEET OPTIONS:
   --batch B         device batch size              (default 1)
   --samples N       synthetic dataset size (fmnist_mlp; default 2048)
   --telemetry T     JSONL event stream ('-' = stderr, else a file path)
+  --probes K        perturbation probes per device call (default 1;
+                    clamped to min(tau-x, tau-theta) per window)
   --eta F --amplitude F --tau-x N --tau-theta N --tau-p N --perturb P
 
 SERVE OPTIONS:
@@ -125,7 +131,7 @@ fn main() -> Result<()> {
             let mut known = GLOBAL_OPTS.to_vec();
             known.extend([
                 "model", "mode", "device", "steps", "eta", "amplitude", "tau-x", "tau-theta",
-                "tau-p", "perturb", "sigma-cost", "sigma-update", "eval-every",
+                "tau-p", "perturb", "sigma-cost", "sigma-update", "eval-every", "probes",
             ]);
             args.check_known(&known)?;
             let cfg = MgdConfig {
@@ -149,14 +155,15 @@ fn main() -> Result<()> {
                 args.u64_or("steps", 10_000)?,
                 cfg,
                 args.u64_or("eval-every", 1000)?,
+                args.usize_or("probes", 1)?.max(1),
             )
         }
         "fleet" => {
             let mut known = GLOBAL_OPTS.to_vec();
             known.extend([
                 "devices", "model", "mode", "rounds", "steps-per-round", "jobs", "steps",
-                "defects", "batch", "samples", "telemetry", "eta", "amplitude", "tau-x",
-                "tau-theta", "tau-p", "perturb",
+                "defects", "batch", "samples", "telemetry", "probes", "eta", "amplitude",
+                "tau-x", "tau-theta", "tau-p", "perturb",
             ]);
             args.check_known(&known)?;
             let cfg = MgdConfig {
@@ -184,6 +191,23 @@ fn main() -> Result<()> {
             server::serve(dev, &args.str_or("addr", "127.0.0.1:7171"), max)
         }
         other => bail!("unknown command {other:?}; see --help"),
+    }
+}
+
+/// Warn when `--probes` cannot be honored: a `cost_many` window never
+/// crosses a τx sample change or a τθ update
+/// ([`MgdTrainer::step_window`]'s exactness clamp), so more probes than
+/// min(τx, τθ) per call silently degrade to smaller batches.
+fn warn_if_probes_clamped(probes: usize, cfg: &MgdConfig) {
+    let mut cap = cfg.tau_x.max(1);
+    if cfg.tau_theta != u64::MAX {
+        cap = cap.min(cfg.tau_theta.max(1));
+    }
+    if probes as u64 > cap {
+        eprintln!(
+            "warning: --probes {probes} exceeds min(tau-x, tau-theta) = {cap}; windows are \
+             clamped to {cap} probe(s)/device call — raise --tau-x/--tau-theta to amortize more"
+        );
     }
 }
 
@@ -242,6 +266,7 @@ fn build_device(
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn train(
     ctx: &RunContext,
     model: &str,
@@ -250,6 +275,7 @@ fn train(
     steps: u64,
     cfg: MgdConfig,
     eval_every: u64,
+    probes: usize,
 ) -> Result<()> {
     let (train_set, eval_set) = model_dataset(model, ctx.seed)?;
     let opts = TrainOptions {
@@ -278,9 +304,13 @@ fn train(
         "loop" => {
             let rt = if device == "pjrt" { Some(Runtime::new(&ctx.artifact_dir)?) } else { None };
             let mut dev = build_device(ctx, rt.as_ref(), model, device)?;
-            println!("training {model} chip-in-the-loop on {}", dev.describe());
+            warn_if_probes_clamped(probes, &cfg);
+            println!(
+                "training {model} chip-in-the-loop on {} ({probes} probe(s)/device call)",
+                dev.describe()
+            );
             let mut tr = MgdTrainer::new(&mut *dev, &train_set, cfg, ScheduleKind::Cyclic);
-            let res = tr.train(&opts, Some(&eval_set))?;
+            let res = tr.train_batched(&opts, Some(&eval_set), probes)?;
             report(&res, &eval_set);
         }
         "analog" => {
@@ -372,12 +402,14 @@ fn fleet_cmd(ctx: &RunContext, args: &Args, cfg: MgdConfig) -> Result<()> {
         Some(path) => Telemetry::file(path)?,
     };
 
+    let probes = args.usize_or("probes", 1)?.max(1);
+    warn_if_probes_clamped(probes, &cfg);
     let layers = fleet_layers(&model)?;
     let (train_set, eval_set) = fleet_dataset(&model, samples, ctx.seed)?;
     let devices = build_fleet_devices(&layers, n_devices, batch, defects, ctx.seed)?;
     println!(
-        "fleet: {n_devices} x native-mlp{layers:?} (batch {batch}, defects {defects}), \
-         model {model}"
+        "fleet: {n_devices} x native-mlp{layers:?} (batch {batch}, defects {defects}, \
+         {probes} probe(s)/device call), model {model}"
     );
 
     match mode.as_str() {
@@ -385,6 +417,7 @@ fn fleet_cmd(ctx: &RunContext, args: &Args, cfg: MgdConfig) -> Result<()> {
             let dp = DataParallelConfig {
                 rounds: args.u64_or("rounds", 8)?.max(1),
                 steps_per_round: args.u64_or("steps-per-round", 1000)?.max(1),
+                probes_per_call: probes,
                 ..Default::default()
             };
             let fleet = Fleet::new(devices, SchedulerConfig::default(), telemetry);
@@ -426,12 +459,13 @@ fn fleet_cmd(ctx: &RunContext, args: &Args, cfg: MgdConfig) -> Result<()> {
                         eval_every: (steps / 4).max(1),
                         ..Default::default()
                     };
-                    fleet.submit_training(
+                    fleet.submit_training_windowed(
                         JobSpec::named(format!("{model}-{j}")),
                         train_arc.clone(),
                         Some(eval_arc.clone()),
                         job_cfg,
                         opts,
+                        probes,
                     )
                 })
                 .collect();

@@ -1,0 +1,325 @@
+//! Integration: the multi-probe cost engine end to end.
+//!
+//! The engine's contract is *exact equivalence*: batching K probes into
+//! one device call ([`HardwareDevice::cost_many`], the `CostMany` wire
+//! frame, [`MgdTrainer::step_window`]) must be invisible to the training
+//! algorithm — same θ, same G, same noise draws, same cost_evals — for
+//! every perturbation family.  Everything here runs on `NativeDevice`
+//! (no artifacts, no PJRT), so these tests are environment-independent.
+
+use std::io::Write;
+use std::net::TcpListener;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use mgd::coordinator::{MgdConfig, MgdTrainer, ScheduleKind, TrainOptions};
+use mgd::datasets::xor;
+use mgd::device::protocol;
+use mgd::device::server::{serve_on, serve_pool, ServeOptions};
+use mgd::device::{HardwareDevice, NativeDevice, RemoteDevice};
+use mgd::fleet::{DevicePool, Telemetry};
+use mgd::json::Json;
+use mgd::noise::NoiseConfig;
+use mgd::optim::init_params_uniform;
+use mgd::perturb::PerturbKind;
+use mgd::rng::Rng;
+
+fn xor_device(seed: u64) -> NativeDevice {
+    let mut dev = NativeDevice::new(&[2, 2, 1], 1);
+    let mut rng = Rng::new(seed);
+    let mut theta = vec![0f32; 9];
+    init_params_uniform(&mut rng, &mut theta, 1.0);
+    dev.set_params(&theta).unwrap();
+    dev
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// `step_window(k)` must replay `k` serial `step()` calls exactly — θ, G,
+/// per-step outputs, cost_evals — for every perturbation family, with
+/// cost noise active (the noise-RNG draw order is part of the contract)
+/// and with τx/τθ boundaries that force window clamping.
+#[test]
+fn step_window_is_bit_identical_for_every_perturbation_family() {
+    for kind in [
+        PerturbKind::Sinusoidal,
+        PerturbKind::SequentialFd,
+        PerturbKind::WalshCode,
+        PerturbKind::RademacherCode,
+    ] {
+        let data = xor();
+        let cfg = MgdConfig {
+            eta: 1.0,
+            amplitude: 0.05,
+            tau_x: 3,
+            tau_theta: 4,
+            tau_p: 2,
+            kind,
+            noise: NoiseConfig { sigma_cost: 0.01, sigma_update: 0.005 },
+            seed: 42,
+        };
+        let mut dev_a = xor_device(42);
+        let mut dev_b = xor_device(42);
+        let mut serial = MgdTrainer::new(&mut dev_a, &data, cfg, ScheduleKind::Cyclic);
+        let mut windowed = MgdTrainer::new(&mut dev_b, &data, cfg, ScheduleKind::Cyclic);
+
+        let total = 96u64;
+        let mut serial_outs = Vec::new();
+        for _ in 0..total {
+            serial_outs.push(serial.step().unwrap());
+        }
+        let mut windowed_outs = Vec::new();
+        for k in [6usize, 1, 9, 3, 2].iter().cycle() {
+            if windowed.steps() >= total {
+                break;
+            }
+            let k = (*k).min((total - windowed.steps()) as usize);
+            windowed_outs.extend(windowed.step_window(k).unwrap());
+        }
+
+        assert_eq!(serial_outs.len(), windowed_outs.len(), "{kind:?}");
+        for (s, w) in serial_outs.iter().zip(&windowed_outs) {
+            assert_eq!(s.step, w.step, "{kind:?}");
+            assert_eq!(s.cost.to_bits(), w.cost.to_bits(), "{kind:?} step {}", s.step);
+            assert_eq!(
+                s.c_tilde.to_bits(),
+                w.c_tilde.to_bits(),
+                "{kind:?} step {}",
+                s.step
+            );
+            assert_eq!(s.updated, w.updated, "{kind:?} step {}", s.step);
+        }
+        assert_eq!(serial.cost_evals(), windowed.cost_evals(), "{kind:?}");
+        assert_eq!(bits(serial.gradient()), bits(windowed.gradient()), "{kind:?}");
+        assert_eq!(
+            bits(&serial.device_params().unwrap()),
+            bits(&windowed.device_params().unwrap()),
+            "{kind:?}"
+        );
+    }
+}
+
+/// `train_batched` must produce the identical `TrainResult` to `train`
+/// (traces, eval decisions, solve step, cost_evals) for any window width.
+#[test]
+fn train_batched_reproduces_the_serial_train_result() {
+    let run = |probes_per_call: Option<usize>| {
+        let data = xor();
+        // τx = 30, τθ = 10: windows wide enough that k = 8 and k = 64
+        // genuinely batch (k_eff up to 10) instead of being clamped to
+        // single-probe calls by the τ boundaries.
+        let cfg = MgdConfig {
+            eta: 0.5,
+            amplitude: 0.05,
+            tau_x: 30,
+            tau_theta: 10,
+            seed: 5,
+            ..Default::default()
+        };
+        let mut dev = xor_device(5);
+        let mut tr = MgdTrainer::new(&mut dev, &data, cfg, ScheduleKind::Cyclic);
+        let opts = TrainOptions {
+            max_steps: 4_000,
+            record_cost_every: 7,
+            eval_every: 250,
+            target_cost: Some(0.05),
+            ..Default::default()
+        };
+        match probes_per_call {
+            None => tr.train(&opts, None).unwrap(),
+            Some(k) => tr.train_batched(&opts, None, k).unwrap(),
+        }
+    };
+    let serial = run(None);
+    for k in [1usize, 8, 64] {
+        let windowed = run(Some(k));
+        assert_eq!(serial.steps_run, windowed.steps_run, "k={k}");
+        assert_eq!(serial.cost_evals, windowed.cost_evals, "k={k}");
+        assert_eq!(serial.solved_at, windowed.solved_at, "k={k}");
+        assert_eq!(serial.cost_trace.len(), windowed.cost_trace.len(), "k={k}");
+        for (a, b) in serial.cost_trace.iter().zip(&windowed.cost_trace) {
+            assert_eq!(a.0, b.0, "k={k}");
+            assert_eq!(a.1.to_bits(), b.1.to_bits(), "k={k} step {}", a.0);
+        }
+        assert_eq!(serial.eval_trace.len(), windowed.eval_trace.len(), "k={k}");
+        for (a, b) in serial.eval_trace.iter().zip(&windowed.eval_trace) {
+            assert_eq!(a.0, b.0, "k={k}");
+            assert_eq!(a.1.to_bits(), b.1.to_bits(), "k={k}");
+            assert_eq!(a.2.to_bits(), b.2.to_bits(), "k={k}");
+        }
+    }
+}
+
+/// A backend that does NOT override `cost_many` (the default trait impl
+/// loops `cost`) must agree bitwise with `NativeDevice`'s fast engine.
+#[test]
+fn default_cost_many_impl_matches_the_fast_engine() {
+    /// Delegates everything except `cost_many`, so the trait default runs.
+    struct SerialOnly(NativeDevice);
+
+    impl HardwareDevice for SerialOnly {
+        fn n_params(&self) -> usize {
+            self.0.n_params()
+        }
+        fn batch_size(&self) -> usize {
+            self.0.batch_size()
+        }
+        fn input_len(&self) -> usize {
+            self.0.input_len()
+        }
+        fn n_outputs(&self) -> usize {
+            self.0.n_outputs()
+        }
+        fn set_params(&mut self, theta: &[f32]) -> anyhow::Result<()> {
+            self.0.set_params(theta)
+        }
+        fn get_params(&mut self) -> anyhow::Result<Vec<f32>> {
+            self.0.get_params()
+        }
+        fn apply_update(&mut self, delta: &[f32]) -> anyhow::Result<()> {
+            self.0.apply_update(delta)
+        }
+        fn load_batch(&mut self, x: &[f32], y: &[f32]) -> anyhow::Result<()> {
+            self.0.load_batch(x, y)
+        }
+        fn cost(&mut self, theta_tilde: Option<&[f32]>) -> anyhow::Result<f32> {
+            self.0.cost(theta_tilde)
+        }
+        fn evaluate(&mut self, x: &[f32], y: &[f32], n: usize) -> anyhow::Result<(f32, f32)> {
+            self.0.evaluate(x, y, n)
+        }
+    }
+
+    let mut fast = xor_device(9);
+    let mut slow = SerialOnly(xor_device(9));
+    fast.load_batch(&[1.0, 0.0], &[1.0]).unwrap();
+    slow.load_batch(&[1.0, 0.0], &[1.0]).unwrap();
+    let mut rng = Rng::new(99);
+    let k = 5;
+    let mut probes = vec![0f32; k * 9];
+    rng.fill_uniform(&mut probes, -0.05, 0.05);
+    let a = fast.cost_many(&probes, k).unwrap();
+    let b = slow.cost_many(&probes, k).unwrap();
+    assert_eq!(bits(&a), bits(&b));
+    assert!(slow.cost_many(&[], 0).unwrap().is_empty());
+    assert!(slow.cost_many(&probes[..7], 1).is_err());
+}
+
+/// CostMany over real TCP: batched remote costs equal serial remote costs
+/// equal local costs, and chunked multi-frame batches reassemble in order.
+#[test]
+fn remote_cost_many_matches_local_device_over_tcp() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let server = std::thread::spawn(move || {
+        let dev: Box<dyn HardwareDevice> = Box::new(NativeDevice::new(&[2, 2, 1], 1));
+        serve_on(dev, listener, Some(1)).unwrap();
+    });
+    let mut local = NativeDevice::new(&[2, 2, 1], 1);
+    let mut remote = RemoteDevice::connect(&addr).unwrap();
+    let theta = [0.25f32; 9];
+    local.set_params(&theta).unwrap();
+    remote.set_params(&theta).unwrap();
+    local.load_batch(&[1.0, 0.0], &[1.0]).unwrap();
+    remote.load_batch(&[1.0, 0.0], &[1.0]).unwrap();
+
+    let mut rng = Rng::new(4);
+    let k = 5;
+    let mut probes = vec![0f32; k * 9];
+    rng.fill_uniform(&mut probes, -0.1, 0.1);
+
+    let want = local.cost_many(&probes, k).unwrap();
+    // One frame for the whole batch…
+    let got = remote.cost_many(&probes, k).unwrap();
+    assert_eq!(bits(&want), bits(&got));
+    // …and the same answers when forced through 2-probe chunks (3 frames).
+    let chunked = remote.cost_many_chunked(&probes, k, 2).unwrap();
+    assert_eq!(bits(&want), bits(&chunked));
+    // Serial remote costs agree probe-for-probe too.
+    for (i, &w) in want.iter().enumerate() {
+        let c = remote.cost(Some(&probes[i * 9..(i + 1) * 9])).unwrap();
+        assert_eq!(w.to_bits(), c.to_bits(), "probe {i}");
+    }
+    assert!(remote.cost_many(&[], 0).unwrap().is_empty());
+    remote.close();
+    server.join().unwrap();
+}
+
+/// A Vec<u8> telemetry sink shared with the test.
+struct SharedBuf(Arc<Mutex<Vec<u8>>>);
+
+impl Write for SharedBuf {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.0.lock().unwrap().extend_from_slice(buf);
+        Ok(buf.len())
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+/// The acceptance criterion made observable: a K-probe window is ONE
+/// request frame, not K.  The pooled server's telemetry counts requests
+/// per session, so two otherwise-identical sessions — one serial, one
+/// batched — differ by exactly K−1 requests per window.
+#[test]
+fn cost_many_issues_one_frame_per_window() {
+    let k = 8;
+    let session_requests = |batched: bool| -> u64 {
+        let sink = Arc::new(Mutex::new(Vec::new()));
+        let telemetry = Telemetry::to_writer(Box::new(SharedBuf(sink.clone())));
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let pool = DevicePool::new(vec![
+            Box::new(NativeDevice::new(&[2, 2, 1], 1)) as Box<dyn HardwareDevice>
+        ]);
+        let server = std::thread::spawn(move || {
+            serve_pool(
+                pool,
+                listener,
+                ServeOptions {
+                    max_sessions: Some(1),
+                    lease_timeout: Duration::from_secs(10),
+                    telemetry,
+                },
+            )
+            .unwrap();
+        });
+        let mut remote = RemoteDevice::connect(&addr).unwrap();
+        remote.set_params(&[0.2; 9]).unwrap();
+        remote.load_batch(&[1.0, 0.0], &[1.0]).unwrap();
+        let probes = vec![0.01f32; k * 9];
+        if batched {
+            assert_eq!(remote.cost_many(&probes, k).unwrap().len(), k);
+        } else {
+            for i in 0..k {
+                remote.cost(Some(&probes[i * 9..(i + 1) * 9])).unwrap();
+            }
+        }
+        remote.close();
+        server.join().unwrap();
+        let text = String::from_utf8(sink.lock().unwrap().clone()).unwrap();
+        let closed = text
+            .lines()
+            .map(|l| Json::parse(l).unwrap())
+            .find(|j| j.field("event").unwrap().as_str().unwrap() == "session_closed")
+            .expect("no session_closed event");
+        closed.field("requests").unwrap().as_u64().unwrap()
+    };
+    // Hello + SetParams + LoadBatch + Bye = 4 bookkeeping requests.
+    let serial = session_requests(false);
+    let batched = session_requests(true);
+    assert_eq!(serial, 4 + k as u64, "serial path must cost one frame per probe");
+    assert_eq!(batched, 4 + 1, "batched path must cost one frame per window");
+}
+
+/// The chunk limit the real client uses is exactly the protocol bound.
+#[test]
+fn remote_chunk_limit_matches_protocol_bound() {
+    assert_eq!(
+        protocol::max_probes_per_frame(9),
+        (protocol::MAX_FRAME_BYTES - protocol::COST_MANY_OVERHEAD_BYTES) / 36
+    );
+}

@@ -8,7 +8,7 @@ use mgd::datasets::{nist7x7, parity, synthetic_fmnist, Dataset};
 use mgd::device::{HardwareDevice, NativeDevice};
 use mgd::json::Json;
 use mgd::metrics::{angle_degrees, quantile_sorted, Quartiles};
-use mgd::perturb::{self, PerturbKind};
+use mgd::perturb::{self, Perturbation, PerturbKind};
 use mgd::rng::Rng;
 
 // ---------------------------------------------------------------------------
@@ -67,6 +67,47 @@ fn native_device_cost_is_locally_linear() {
     }
 }
 
+/// `cost_many` is definitionally K stacked `cost` calls: on random
+/// networks, random parameters, random batches and random probe stacks
+/// the batched sweep must agree bit-for-bit with the serial loop.
+#[test]
+fn cost_many_agrees_with_serial_costs_on_random_networks() {
+    let mut meta_rng = Rng::new(0xc057);
+    for case in 0..20 {
+        let seed = meta_rng.next_u64();
+        let mut rng = Rng::new(seed);
+        let n_in = 1 + rng.below(8) as usize;
+        let n_hidden = 1 + rng.below(6) as usize;
+        let n_out = 1 + rng.below(3) as usize;
+        let batch = 1 + rng.below(3) as usize;
+        let layers = [n_in, n_hidden, n_out];
+        let p: usize = layers.windows(2).map(|w| w[0] * w[1] + w[1]).sum();
+
+        let mut dev = NativeDevice::new(&layers, batch);
+        let mut theta = vec![0f32; p];
+        rng.fill_uniform(&mut theta, -1.0, 1.0);
+        dev.set_params(&theta).unwrap();
+        let mut x = vec![0f32; batch * n_in];
+        let mut y = vec![0f32; batch * n_out];
+        rng.fill_uniform(&mut x, 0.0, 1.0);
+        rng.fill_uniform(&mut y, 0.0, 1.0);
+        dev.load_batch(&x, &y).unwrap();
+
+        let k = 1 + rng.below(6) as usize;
+        let mut probes = vec![0f32; k * p];
+        rng.fill_uniform(&mut probes, -0.1, 0.1);
+        let batched = dev.cost_many(&probes, k).unwrap();
+        for (i, &c) in batched.iter().enumerate() {
+            let serial = dev.cost(Some(&probes[i * p..(i + 1) * p])).unwrap();
+            assert_eq!(
+                c.to_bits(),
+                serial.to_bits(),
+                "case {case} (seed {seed:#x}) probe {i}: {c} != {serial}"
+            );
+        }
+    }
+}
+
 /// set_params/get_params/apply_update compose like plain vector algebra.
 #[test]
 fn device_parameter_memory_is_a_vector() {
@@ -118,6 +159,42 @@ fn walsh_orthogonality_holds_for_random_p() {
                     assert!((v - 1.0).abs() < 1e-9, "P={p} diag");
                 } else {
                     assert!(v.abs() < 1e-9, "P={p} off-diag [{i}][{j}] = {v}");
+                }
+            }
+        }
+    }
+}
+
+/// The "exact pairwise orthogonality over one period" claim, pinned at
+/// the non-power-of-two P values the ISSUE calls out (P = 9 → period 16,
+/// P = 33 → period 64), including held patterns (τp > 1, where one code
+/// period spans τp·period timesteps).  Walsh rows 1..=P of the order-L
+/// Hadamard matrix (L = next_pow2(P+1)) are exactly orthogonal over a
+/// full period for *any* P — verified here so a future change to the
+/// code-assignment/period logic cannot silently break non-pow2 widths.
+#[test]
+fn walsh_orthogonality_exact_for_non_power_of_two_p() {
+    for &(p, tau_p) in &[(9usize, 1u64), (9, 3), (33, 1), (33, 3)] {
+        let period = (p as u64 + 1).next_power_of_two();
+        let steps = tau_p * period; // one full code period in timesteps
+        let mut gen = perturb::make(PerturbKind::WalshCode, p, 1.0, tau_p, 0);
+        let mut acc = vec![0f64; p * p];
+        let mut buf = vec![0f32; p];
+        for t in 0..steps {
+            gen.fill(t, &mut buf);
+            for i in 0..p {
+                for j in 0..p {
+                    acc[i * p + j] += (buf[i] * buf[j]) as f64;
+                }
+            }
+        }
+        for i in 0..p {
+            for j in 0..p {
+                let v = acc[i * p + j] / steps as f64;
+                if i == j {
+                    assert!((v - 1.0).abs() < 1e-12, "P={p} τp={tau_p} diag [{i}] = {v}");
+                } else {
+                    assert!(v.abs() < 1e-12, "P={p} τp={tau_p} off-diag [{i}][{j}] = {v}");
                 }
             }
         }
