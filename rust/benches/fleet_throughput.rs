@@ -8,19 +8,22 @@
 //! ```text
 //! cargo bench --bench fleet_throughput
 //! ```
+//!
+//! Env toggles (the nightly CI bench job sets both):
+//! `MGD_BENCH_QUICK=1` shrinks the sweep; `MGD_BENCH_JSON=path` appends
+//! one JSONL record with every measured row.
 
 use std::sync::Arc;
 use std::time::Instant;
 
+use mgd::bench::{emit_bench_json, json_obj, quick_mode};
 use mgd::coordinator::{MgdConfig, TrainOptions};
 use mgd::datasets::parity;
 use mgd::device::{HardwareDevice, NativeDevice};
 use mgd::fleet::{Fleet, JobSpec, SchedulerConfig, Telemetry};
+use mgd::json::Json;
 use mgd::optim::init_params_uniform;
 use mgd::rng::Rng;
-
-const JOBS: usize = 16;
-const STEPS: u64 = 2_000;
 
 fn xor_device(seed: u64) -> Box<dyn HardwareDevice> {
     let mut dev = NativeDevice::new(&[2, 2, 1], 1);
@@ -32,19 +35,28 @@ fn xor_device(seed: u64) -> Box<dyn HardwareDevice> {
 }
 
 fn main() -> anyhow::Result<()> {
+    let quick = quick_mode();
+    let jobs: usize = if quick { 8 } else { 16 };
+    let steps: u64 = if quick { 500 } else { 2_000 };
+    let pool_sizes: &[usize] = if quick { &[1, 2, 4] } else { &[1, 2, 4, 8] };
+
     let data = Arc::new(parity(2));
-    println!("fleet_throughput: {JOBS} jobs x {STEPS} MGD steps (XOR, native devices)");
+    println!(
+        "fleet_throughput: {jobs} jobs x {steps} MGD steps (XOR, native devices{})",
+        if quick { ", quick mode" } else { "" }
+    );
     println!(
         "{:<8} {:>10} {:>12} {:>18} {:>10}",
         "devices", "wall (s)", "jobs/sec", "cost-evals/sec", "speedup"
     );
     let mut baseline = None;
-    for &pool_size in &[1usize, 2, 4, 8] {
+    let mut rows = Vec::new();
+    for &pool_size in pool_sizes {
         let devices: Vec<Box<dyn HardwareDevice>> =
             (0..pool_size).map(|i| xor_device(1000 + i as u64)).collect();
         let fleet = Fleet::new(devices, SchedulerConfig::default(), Telemetry::null());
         let t0 = Instant::now();
-        let handles: Vec<_> = (0..JOBS)
+        let handles: Vec<_> = (0..jobs)
             .map(|j| {
                 let cfg = MgdConfig {
                     eta: 1.0,
@@ -52,7 +64,7 @@ fn main() -> anyhow::Result<()> {
                     seed: j as u64,
                     ..Default::default()
                 };
-                let opts = TrainOptions { max_steps: STEPS, ..Default::default() };
+                let opts = TrainOptions { max_steps: steps, ..Default::default() };
                 fleet
                     .submit_training(
                         JobSpec::named(format!("xor-{j}")),
@@ -70,7 +82,8 @@ fn main() -> anyhow::Result<()> {
         }
         let secs = t0.elapsed().as_secs_f64();
         fleet.shutdown()?;
-        let jobs_per_sec = JOBS as f64 / secs;
+        let jobs_per_sec = jobs as f64 / secs;
+        let evals_per_sec = total_evals as f64 / secs;
         let speedup = match baseline {
             None => {
                 baseline = Some(secs);
@@ -80,12 +93,22 @@ fn main() -> anyhow::Result<()> {
         };
         println!(
             "{:<8} {:>10.3} {:>12.2} {:>18.0} {:>9.2}x",
-            pool_size,
-            secs,
-            jobs_per_sec,
-            total_evals as f64 / secs,
-            speedup
+            pool_size, secs, jobs_per_sec, evals_per_sec, speedup
         );
+        rows.push(json_obj(vec![
+            ("devices", Json::Num(pool_size as f64)),
+            ("wall_secs", Json::Num(secs)),
+            ("jobs_per_sec", Json::Num(jobs_per_sec)),
+            ("cost_evals_per_sec", Json::Num(evals_per_sec)),
+            ("speedup", Json::Num(speedup)),
+        ]));
     }
+    emit_bench_json(&json_obj(vec![
+        ("bench", Json::Str("fleet_throughput".into())),
+        ("quick", Json::Bool(quick)),
+        ("jobs", Json::Num(jobs as f64)),
+        ("steps_per_job", Json::Num(steps as f64)),
+        ("rows", Json::Arr(rows)),
+    ]));
     Ok(())
 }

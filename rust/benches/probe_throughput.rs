@@ -16,11 +16,17 @@
 //! ```text
 //! cargo bench --bench probe_throughput
 //! ```
+//!
+//! Env toggles (the nightly CI bench job sets both):
+//! `MGD_BENCH_QUICK=1` shrinks the sweep; `MGD_BENCH_JSON=path` appends
+//! one JSONL record with the per-P batched-vs-serial ratios.
 
 use std::net::TcpListener;
 use std::time::Instant;
 
+use mgd::bench::{emit_bench_json, json_obj, quick_mode};
 use mgd::device::{server, HardwareDevice, NativeDevice, RemoteDevice};
+use mgd::json::Json;
 use mgd::optim::init_params_uniform;
 use mgd::perturb::{self, Perturbation, PerturbKind};
 use mgd::rng::Rng;
@@ -52,18 +58,22 @@ fn probe_stack(p: usize, k: usize) -> Vec<f32> {
     probes
 }
 
-fn bench_native() {
+fn bench_native(quick: bool) -> Vec<Json> {
     println!("native sweep: K = {K} probes/window, batch 1");
     println!(
         "{:<10} {:>8} {:>16} {:>16} {:>9}",
         "P", "windows", "serial ev/s", "batched ev/s", "speedup"
     );
-    for &p_target in &[1_000usize, 10_000, 100_000] {
+    let p_targets: &[usize] =
+        if quick { &[1_000, 10_000] } else { &[1_000, 10_000, 100_000] };
+    let work_budget: usize = if quick { 4_000_000 } else { 20_000_000 };
+    let mut rows = Vec::new();
+    for &p_target in p_targets {
         let mut dev = device_with_params(p_target);
         let p = dev.n_params();
         let probes = probe_stack(p, K);
         // Keep total work roughly constant across P.
-        let windows = (20_000_000 / (p * K)).clamp(2, 200);
+        let windows = (work_budget / (p * K)).clamp(2, 200);
 
         // Warm up both paths (scratch growth happens here, not in timing).
         let warm = dev.cost_many(&probes, K).unwrap();
@@ -94,10 +104,18 @@ fn bench_native() {
             evals / batched_secs,
             serial_secs / batched_secs,
         );
+        rows.push(json_obj(vec![
+            ("p", Json::Num(p as f64)),
+            ("windows", Json::Num(windows as f64)),
+            ("serial_evals_per_sec", Json::Num(evals / serial_secs)),
+            ("batched_evals_per_sec", Json::Num(evals / batched_secs)),
+            ("batched_over_serial", Json::Num(serial_secs / batched_secs)),
+        ]));
     }
+    rows
 }
 
-fn bench_remote() -> anyhow::Result<()> {
+fn bench_remote(quick: bool) -> anyhow::Result<Json> {
     println!();
     println!("remote loopback: K = {K} probes/window, P ≈ 10k");
     let listener = TcpListener::bind("127.0.0.1:0")?;
@@ -109,7 +127,7 @@ fn bench_remote() -> anyhow::Result<()> {
     let mut remote = RemoteDevice::connect(&addr)?;
     let p = remote.n_params();
     let probes = probe_stack(p, K);
-    let windows = 20;
+    let windows = if quick { 5 } else { 20 };
 
     let warm = remote.cost_many(&probes, K)?;
     assert_eq!(warm.len(), K);
@@ -142,10 +160,28 @@ fn bench_remote() -> anyhow::Result<()> {
         evals / batched_secs,
         serial_secs / batched_secs
     );
-    Ok(())
+    Ok(json_obj(vec![
+        ("p", Json::Num(p as f64)),
+        ("windows", Json::Num(windows as f64)),
+        ("serial_evals_per_sec", Json::Num(evals / serial_secs)),
+        ("batched_evals_per_sec", Json::Num(evals / batched_secs)),
+        ("batched_over_serial", Json::Num(serial_secs / batched_secs)),
+    ]))
 }
 
 fn main() -> anyhow::Result<()> {
-    bench_native();
-    bench_remote()
+    let quick = quick_mode();
+    if quick {
+        println!("probe_throughput (quick mode)");
+    }
+    let native = bench_native(quick);
+    let remote = bench_remote(quick)?;
+    emit_bench_json(&json_obj(vec![
+        ("bench", Json::Str("probe_throughput".into())),
+        ("quick", Json::Bool(quick)),
+        ("probes_per_window", Json::Num(K as f64)),
+        ("native", Json::Arr(native)),
+        ("remote", remote),
+    ]));
+    Ok(())
 }

@@ -45,6 +45,42 @@ impl Measurement {
     }
 }
 
+/// True when the quick-mode env toggle is set (`MGD_BENCH_QUICK=1`):
+/// benches shrink their sweeps so the nightly CI bench job finishes in
+/// minutes while still producing every metric.
+pub fn quick_mode() -> bool {
+    std::env::var("MGD_BENCH_QUICK").map(|v| !v.is_empty() && v != "0").unwrap_or(false)
+}
+
+/// Build a JSON object from key/value pairs (bench-record helper).
+pub fn json_obj(pairs: Vec<(&str, crate::json::Json)>) -> crate::json::Json {
+    let mut m = std::collections::BTreeMap::new();
+    for (k, v) in pairs {
+        m.insert(k.to_string(), v);
+    }
+    crate::json::Json::Obj(m)
+}
+
+/// Append one bench record as a JSONL line to the file named by
+/// `MGD_BENCH_JSON` (no-op when unset; the CI bench workflow merges the
+/// lines into `BENCH_fleet.json`).  Never fails the bench: a broken sink
+/// is reported to stderr and ignored.
+pub fn emit_bench_json(record: &crate::json::Json) {
+    let Ok(path) = std::env::var("MGD_BENCH_JSON") else { return };
+    if path.is_empty() {
+        return;
+    }
+    use std::io::Write;
+    let appended = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(&path)
+        .and_then(|mut f| writeln!(f, "{}", record.dump()));
+    if let Err(e) = appended {
+        eprintln!("warning: could not append bench record to {path}: {e}");
+    }
+}
+
 /// Render seconds/iteration in a readable unit.
 pub fn fmt_time(secs: f64) -> String {
     if secs < 1e-6 {

@@ -1,0 +1,732 @@
+//! Deterministic checkpoint/resume for the discrete MGD trainer.
+//!
+//! A long CIFAR-scale chip-in-the-loop run — the regime the scaling
+//! follow-up (Oripov et al., 2025) identifies as where perturbative
+//! training pays off — dies with its process unless its state survives on
+//! disk.  This module serializes an [`MgdTrainer`]'s complete state to a
+//! **versioned JSON checkpoint** via the in-repo [`crate::json`]
+//! substrate, and drives chunked training with periodic checkpoints and
+//! checkpoint-on-failure.
+//!
+//! # Bit-exactness
+//!
+//! The resume contract is the strongest one MGD admits: crash at step *k*
+//! + restore replays **bit-identically** to an uninterrupted run — same
+//! θ, same G, same noise-draw order, same `cost_evals` (the contract
+//! `step_window` established for probe batching, extended across process
+//! boundaries).  JSON's only numeric type is f64, which cannot hold every
+//! `u64` (53-bit mantissa) and would round-trip floats through decimal
+//! formatting, so the encoding never relies on it for exactness:
+//!
+//! - `f32` values are stored as their **bit pattern** (`u32`, exact in
+//!   f64) — NaN/∞-safe, no decimal round trip.
+//! - `f64` values (the sinusoidal phasor state) are stored as their bit
+//!   pattern in a **decimal string**.
+//! - `u64` counters and RNG words are stored as **decimal strings**.
+//!
+//! # What a checkpoint captures — and what it does not
+//!
+//! Captured: the trainer config (echoed and validated on restore), θ
+//! (read from the device), G, the cached baseline C₀ and its validity,
+//! the loaded sample window, step/cost-eval counters, the full noise-RNG
+//! state, the sample-schedule state and the perturbation-generator state
+//! (including the Rademacher pattern + RNG and the sinusoidal phasors,
+//! whose recurrence would otherwise drift from a direct re-evaluation).
+//!
+//! Not captured: device *internals* (activation-defect tables, remote
+//! addresses) — devices are rebuilt by the caller exactly as they were
+//! built originally — and accumulated cost/eval traces, which restart at
+//! resume (the paper's figures are traces; the training state is θ/G).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::datasets::Dataset;
+use crate::json::Json;
+use crate::perturb::{PerturbKind, PerturbState};
+use crate::rng::RngState;
+
+use super::discrete::MgdTrainer;
+use super::schedule::ScheduleState;
+use super::{MgdConfig, TrainOptions, TrainResult};
+
+use std::collections::BTreeMap;
+
+/// Format tag of a trainer checkpoint file.
+pub const CHECKPOINT_FORMAT: &str = "mgd-trainer-checkpoint";
+/// Current checkpoint schema version.  Bump on any schema change; old
+/// versions are rejected with a clear error rather than misread.
+pub const CHECKPOINT_VERSION: u64 = 1;
+/// Format tag of a data-parallel run's meta file.
+pub const DP_META_FORMAT: &str = "mgd-dp-checkpoint";
+
+/// The complete serializable state of an [`MgdTrainer`] (see
+/// [`MgdTrainer::checkpoint`] / [`MgdTrainer::restore`]).
+#[derive(Debug, Clone)]
+pub struct TrainerSnapshot {
+    /// Config echo, validated field-by-field on restore.
+    pub config: MgdConfig,
+    pub n_params: usize,
+    /// Device parameter memory at snapshot time.
+    pub theta: Vec<f32>,
+    /// Gradient integrator G.
+    pub g: Vec<f32>,
+    /// Currently loaded sample window (empty before the first step).
+    pub xb: Vec<f32>,
+    pub yb: Vec<f32>,
+    /// Cached baseline cost C₀ and its validity.
+    pub c0: f32,
+    pub c0_valid: bool,
+    /// First step at/after which a sample-window load is due (the
+    /// crash-consistency watermark for the sample schedule).
+    pub next_load_step: u64,
+    pub step: u64,
+    pub cost_evals: u64,
+    /// Noise/update RNG, mid-stream.
+    pub rng: RngState,
+    /// Sample-schedule cursor + RNG.
+    pub schedule: ScheduleState,
+    /// Perturbation-generator state.
+    pub pert: PerturbState,
+}
+
+// ---------------------------------------------------------------------------
+// Exact JSON encodings
+// ---------------------------------------------------------------------------
+
+fn ju64(v: u64) -> Json {
+    Json::Str(v.to_string())
+}
+
+fn pu64(j: &Json) -> Result<u64> {
+    j.as_str()
+        .context("expected a decimal-string u64")?
+        .parse::<u64>()
+        .context("malformed u64 string")
+}
+
+fn jopt_u64(v: Option<u64>) -> Json {
+    match v {
+        Some(v) => ju64(v),
+        None => Json::Null,
+    }
+}
+
+fn popt_u64(j: &Json) -> Result<Option<u64>> {
+    match j {
+        Json::Null => Ok(None),
+        other => Ok(Some(pu64(other)?)),
+    }
+}
+
+fn jf32(v: f32) -> Json {
+    Json::Num(v.to_bits() as f64)
+}
+
+fn pf32(j: &Json) -> Result<f32> {
+    let bits = j.as_f64()?;
+    if bits < 0.0 || bits.fract() != 0.0 || bits > u32::MAX as f64 {
+        bail!("f32 bit pattern out of range: {bits}");
+    }
+    Ok(f32::from_bits(bits as u32))
+}
+
+fn jf32_arr(xs: &[f32]) -> Json {
+    Json::Arr(xs.iter().map(|&v| jf32(v)).collect())
+}
+
+fn pf32_arr(j: &Json) -> Result<Vec<f32>> {
+    j.as_arr()?.iter().map(pf32).collect()
+}
+
+fn jf64(v: f64) -> Json {
+    ju64(v.to_bits())
+}
+
+fn pf64(j: &Json) -> Result<f64> {
+    Ok(f64::from_bits(pu64(j)?))
+}
+
+fn jf64_arr(xs: &[f64]) -> Json {
+    Json::Arr(xs.iter().map(|&v| jf64(v)).collect())
+}
+
+fn pf64_arr(j: &Json) -> Result<Vec<f64>> {
+    j.as_arr()?.iter().map(pf64).collect()
+}
+
+fn rng_to_json(state: &RngState) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("s".to_string(), Json::Arr(state.s.iter().map(|&w| ju64(w)).collect()));
+    m.insert(
+        "gauss_spare".to_string(),
+        match state.gauss_spare {
+            Some(v) => jf64(v),
+            None => Json::Null,
+        },
+    );
+    Json::Obj(m)
+}
+
+fn rng_from_json(j: &Json) -> Result<RngState> {
+    let words = j.field("s")?.as_arr()?;
+    if words.len() != 4 {
+        bail!("RNG state needs 4 words, got {}", words.len());
+    }
+    let mut s = [0u64; 4];
+    for (dst, w) in s.iter_mut().zip(words) {
+        *dst = pu64(w)?;
+    }
+    let gauss_spare = match j.field("gauss_spare")? {
+        Json::Null => None,
+        other => Some(pf64(other)?),
+    };
+    Ok(RngState { s, gauss_spare })
+}
+
+fn config_to_json(cfg: &MgdConfig) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("tau_x".to_string(), ju64(cfg.tau_x));
+    m.insert("tau_theta".to_string(), ju64(cfg.tau_theta));
+    m.insert("tau_p".to_string(), ju64(cfg.tau_p));
+    m.insert("eta".to_string(), jf32(cfg.eta));
+    m.insert("amplitude".to_string(), jf32(cfg.amplitude));
+    m.insert("kind".to_string(), Json::Str(cfg.kind.as_str().to_string()));
+    m.insert("sigma_cost".to_string(), jf32(cfg.noise.sigma_cost));
+    m.insert("sigma_update".to_string(), jf32(cfg.noise.sigma_update));
+    m.insert("seed".to_string(), ju64(cfg.seed));
+    Json::Obj(m)
+}
+
+fn config_from_json(j: &Json) -> Result<MgdConfig> {
+    Ok(MgdConfig {
+        tau_x: pu64(j.field("tau_x")?)?,
+        tau_theta: pu64(j.field("tau_theta")?)?,
+        tau_p: pu64(j.field("tau_p")?)?,
+        eta: pf32(j.field("eta")?)?,
+        amplitude: pf32(j.field("amplitude")?)?,
+        kind: j.field("kind")?.as_str()?.parse::<PerturbKind>()?,
+        noise: crate::noise::NoiseConfig {
+            sigma_cost: pf32(j.field("sigma_cost")?)?,
+            sigma_update: pf32(j.field("sigma_update")?)?,
+        },
+        seed: pu64(j.field("seed")?)?,
+    })
+}
+
+fn pert_to_json(state: &PerturbState) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert(
+        "rng".to_string(),
+        match &state.rng {
+            Some(rng) => rng_to_json(rng),
+            None => Json::Null,
+        },
+    );
+    m.insert("current".to_string(), jf32_arr(&state.current));
+    m.insert("current_window".to_string(), jopt_u64(state.current_window));
+    m.insert("sin".to_string(), jf64_arr(&state.sin));
+    m.insert("cos".to_string(), jf64_arr(&state.cos));
+    m.insert("state_t".to_string(), jopt_u64(state.state_t));
+    Json::Obj(m)
+}
+
+fn pert_from_json(j: &Json) -> Result<PerturbState> {
+    Ok(PerturbState {
+        rng: match j.field("rng")? {
+            Json::Null => None,
+            other => Some(rng_from_json(other)?),
+        },
+        current: pf32_arr(j.field("current")?)?,
+        current_window: popt_u64(j.field("current_window")?)?,
+        sin: pf64_arr(j.field("sin")?)?,
+        cos: pf64_arr(j.field("cos")?)?,
+        state_t: popt_u64(j.field("state_t")?)?,
+    })
+}
+
+/// Field-by-field config equality (f32 fields compared by bit pattern),
+/// with the first mismatching field named in the error — restoring a
+/// checkpoint into a differently-configured trainer would not crash, it
+/// would silently train a different trajectory, which is worse.
+pub fn ensure_config_matches(live: &MgdConfig, saved: &MgdConfig) -> Result<()> {
+    let mismatch = |field: &str, live: String, saved: String| -> Result<()> {
+        bail!("checkpoint config mismatch on {field}: trainer has {live}, checkpoint has {saved}")
+    };
+    if live.tau_x != saved.tau_x {
+        return mismatch("tau_x", live.tau_x.to_string(), saved.tau_x.to_string());
+    }
+    if live.tau_theta != saved.tau_theta {
+        return mismatch("tau_theta", live.tau_theta.to_string(), saved.tau_theta.to_string());
+    }
+    if live.tau_p != saved.tau_p {
+        return mismatch("tau_p", live.tau_p.to_string(), saved.tau_p.to_string());
+    }
+    if live.eta.to_bits() != saved.eta.to_bits() {
+        return mismatch("eta", live.eta.to_string(), saved.eta.to_string());
+    }
+    if live.amplitude.to_bits() != saved.amplitude.to_bits() {
+        return mismatch("amplitude", live.amplitude.to_string(), saved.amplitude.to_string());
+    }
+    if live.kind != saved.kind {
+        return mismatch("kind", live.kind.as_str().into(), saved.kind.as_str().into());
+    }
+    if live.noise.sigma_cost.to_bits() != saved.noise.sigma_cost.to_bits() {
+        return mismatch(
+            "sigma_cost",
+            live.noise.sigma_cost.to_string(),
+            saved.noise.sigma_cost.to_string(),
+        );
+    }
+    if live.noise.sigma_update.to_bits() != saved.noise.sigma_update.to_bits() {
+        return mismatch(
+            "sigma_update",
+            live.noise.sigma_update.to_string(),
+            saved.noise.sigma_update.to_string(),
+        );
+    }
+    if live.seed != saved.seed {
+        return mismatch("seed", live.seed.to_string(), saved.seed.to_string());
+    }
+    Ok(())
+}
+
+impl TrainerSnapshot {
+    /// Serialize to the versioned checkpoint document.
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("format".to_string(), Json::Str(CHECKPOINT_FORMAT.to_string()));
+        m.insert("version".to_string(), Json::Num(CHECKPOINT_VERSION as f64));
+        m.insert("config".to_string(), config_to_json(&self.config));
+        m.insert("n_params".to_string(), Json::Num(self.n_params as f64));
+        m.insert("step".to_string(), ju64(self.step));
+        m.insert("cost_evals".to_string(), ju64(self.cost_evals));
+        m.insert("next_load_step".to_string(), ju64(self.next_load_step));
+        m.insert("c0".to_string(), jf32(self.c0));
+        m.insert("c0_valid".to_string(), Json::Bool(self.c0_valid));
+        m.insert("theta".to_string(), jf32_arr(&self.theta));
+        m.insert("g".to_string(), jf32_arr(&self.g));
+        m.insert("xb".to_string(), jf32_arr(&self.xb));
+        m.insert("yb".to_string(), jf32_arr(&self.yb));
+        m.insert("rng".to_string(), rng_to_json(&self.rng));
+        let mut sched = BTreeMap::new();
+        sched.insert("cursor".to_string(), Json::Num(self.schedule.cursor as f64));
+        sched.insert("rng".to_string(), rng_to_json(&self.schedule.rng));
+        m.insert("schedule".to_string(), Json::Obj(sched));
+        m.insert("pert".to_string(), pert_to_json(&self.pert));
+        Json::Obj(m)
+    }
+
+    /// Parse a versioned checkpoint document.
+    pub fn from_json(j: &Json) -> Result<TrainerSnapshot> {
+        let format = j.field("format")?.as_str()?;
+        if format != CHECKPOINT_FORMAT {
+            bail!("not a trainer checkpoint (format {format:?})");
+        }
+        let version = j.field("version")?.as_u64()?;
+        if version != CHECKPOINT_VERSION {
+            bail!(
+                "checkpoint version {version} is not supported (this build reads \
+                 version {CHECKPOINT_VERSION})"
+            );
+        }
+        let sched = j.field("schedule")?;
+        Ok(TrainerSnapshot {
+            config: config_from_json(j.field("config")?)?,
+            n_params: j.field("n_params")?.as_usize()?,
+            theta: pf32_arr(j.field("theta")?)?,
+            g: pf32_arr(j.field("g")?)?,
+            xb: pf32_arr(j.field("xb")?)?,
+            yb: pf32_arr(j.field("yb")?)?,
+            c0: pf32(j.field("c0")?)?,
+            c0_valid: j.field("c0_valid")?.as_bool()?,
+            next_load_step: pu64(j.field("next_load_step")?)?,
+            step: pu64(j.field("step")?)?,
+            cost_evals: pu64(j.field("cost_evals")?)?,
+            rng: rng_from_json(j.field("rng")?)?,
+            schedule: ScheduleState {
+                cursor: sched.field("cursor")?.as_usize()?,
+                rng: rng_from_json(sched.field("rng")?)?,
+            },
+            pert: pert_from_json(j.field("pert")?)?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Files
+// ---------------------------------------------------------------------------
+
+/// Write a JSON document atomically: temp file in the same directory,
+/// then rename.  A crash mid-write leaves the previous checkpoint
+/// intact — a torn checkpoint is worse than a stale one.
+fn write_json_atomic(path: &Path, doc: &Json) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating checkpoint dir {}", parent.display()))?;
+        }
+    }
+    let mut tmp = path.as_os_str().to_os_string();
+    tmp.push(".tmp");
+    let tmp = PathBuf::from(tmp);
+    std::fs::write(&tmp, format!("{}\n", doc.dump()))
+        .with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} into place", tmp.display()))?;
+    Ok(())
+}
+
+fn read_json_file(path: &Path) -> Result<Json> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading checkpoint {}", path.display()))?;
+    Json::parse(&text).with_context(|| format!("parsing checkpoint {}", path.display()))
+}
+
+/// Canonical checkpoint file inside a checkpoint directory.
+pub fn checkpoint_path(dir: &Path) -> PathBuf {
+    dir.join("checkpoint.json")
+}
+
+/// Save a snapshot to `path` (atomically).
+pub fn save_snapshot(path: &Path, snap: &TrainerSnapshot) -> Result<()> {
+    write_json_atomic(path, &snap.to_json())
+}
+
+/// Load a snapshot from `path`.
+pub fn load_snapshot(path: &Path) -> Result<TrainerSnapshot> {
+    TrainerSnapshot::from_json(&read_json_file(path)?)
+        .with_context(|| format!("decoding checkpoint {}", path.display()))
+}
+
+/// Meta file recording a data-parallel run's completed-round watermark.
+pub fn dp_meta_path(dir: &Path) -> PathBuf {
+    dir.join("dp-meta.json")
+}
+
+/// Per-replica snapshot file of a data-parallel run, one per completed
+/// round.  Round-stamped names are what make the meta commit safe: a
+/// crash *between* the replica saves for round r+1 and the meta commit
+/// leaves the round-r files (the meta's resume point) untouched —
+/// overwriting in place would destroy the only consistent snapshot set.
+/// Files older than the committed round are garbage-collected after
+/// each commit; files newer than the meta are simply ignored on resume.
+pub fn dp_replica_path(dir: &Path, replica: usize, rounds_done: u64) -> PathBuf {
+    dir.join(format!("dp-replica-{replica}-round-{rounds_done}.json"))
+}
+
+/// Record that every replica checkpoint for `rounds_done` completed
+/// rounds is on disk.  Written *after* the replica files (a meta
+/// pointing at missing replica files would be a lie).
+pub fn save_dp_meta(dir: &Path, rounds_done: u64, replicas: usize) -> Result<()> {
+    let mut m = BTreeMap::new();
+    m.insert("format".to_string(), Json::Str(DP_META_FORMAT.to_string()));
+    m.insert("version".to_string(), Json::Num(CHECKPOINT_VERSION as f64));
+    m.insert("rounds_done".to_string(), ju64(rounds_done));
+    m.insert("replicas".to_string(), Json::Num(replicas as f64));
+    write_json_atomic(&dp_meta_path(dir), &Json::Obj(m))
+}
+
+/// Read a data-parallel meta file: `Ok(None)` if absent (fresh run),
+/// `Ok(Some((rounds_done, replicas)))` if present.
+pub fn load_dp_meta(dir: &Path) -> Result<Option<(u64, usize)>> {
+    let path = dp_meta_path(dir);
+    if !path.exists() {
+        return Ok(None);
+    }
+    let j = read_json_file(&path)?;
+    let format = j.field("format")?.as_str()?;
+    if format != DP_META_FORMAT {
+        bail!("{} is not a data-parallel meta file (format {format:?})", path.display());
+    }
+    let version = j.field("version")?.as_u64()?;
+    if version != CHECKPOINT_VERSION {
+        bail!("dp meta version {version} unsupported (this build reads {CHECKPOINT_VERSION})");
+    }
+    Ok(Some((pu64(j.field("rounds_done")?)?, j.field("replicas")?.as_usize()?)))
+}
+
+// ---------------------------------------------------------------------------
+// Chunked training driver
+// ---------------------------------------------------------------------------
+
+/// Checkpointing knobs for [`train_checkpointed`].
+#[derive(Debug, Clone)]
+pub struct CheckpointConfig {
+    /// Directory holding `checkpoint.json`.
+    pub dir: PathBuf,
+    /// Checkpoint every this many steps (0 = only at completion/failure).
+    pub every_steps: u64,
+    /// Restore from an existing checkpoint before training (absence is
+    /// not an error — a fresh run simply starts at step 0).
+    pub resume: bool,
+}
+
+/// [`MgdTrainer::train_batched`] in checkpointed chunks.
+///
+/// The trajectory is bit-identical to a single uninterrupted
+/// `train_batched` call for *any* chunking (chunk boundaries are just
+/// `step_window` boundaries, which the PR 2 contract makes invisible),
+/// so crash-anywhere + `resume` lands on the same θ/G/cost_evals.  On a
+/// training error the current state is checkpointed best-effort before
+/// the error propagates, so a crashed farm job resumes from the failure
+/// point instead of step 0 — and a retried job on another device picks
+/// that checkpoint up automatically.
+///
+/// Traces (`cost_trace`, `eval_trace`) cover this invocation only;
+/// counters (`steps_run`, `cost_evals`) are cumulative across resumes.
+pub fn train_checkpointed(
+    trainer: &mut MgdTrainer,
+    opts: &TrainOptions,
+    eval_set: Option<&Dataset>,
+    probes_per_call: usize,
+    ck: &CheckpointConfig,
+) -> Result<TrainResult> {
+    let path = checkpoint_path(&ck.dir);
+    if ck.resume && path.exists() {
+        let snap = load_snapshot(&path)?;
+        trainer
+            .restore(&snap)
+            .with_context(|| format!("restoring checkpoint {}", path.display()))?;
+    }
+    let mut merged = TrainResult::default();
+    let mut saved_at: Option<u64> = None;
+    while trainer.steps() < opts.max_steps {
+        let steps = trainer.steps();
+        let target = if ck.every_steps == 0 {
+            opts.max_steps
+        } else {
+            ((steps / ck.every_steps + 1) * ck.every_steps).min(opts.max_steps)
+        };
+        let chunk_opts = TrainOptions { max_steps: target, ..opts.clone() };
+        match trainer.train_batched(&chunk_opts, eval_set, probes_per_call) {
+            Ok(r) => {
+                merged.cost_trace.extend(r.cost_trace);
+                merged.eval_trace.extend(r.eval_trace);
+                let snap = trainer.checkpoint()?;
+                save_snapshot(&path, &snap)?;
+                saved_at = Some(trainer.steps());
+                if r.solved_at.is_some() {
+                    merged.solved_at = r.solved_at;
+                    break;
+                }
+            }
+            Err(e) => {
+                // Checkpoint-on-failure: salvage the exact pre-error
+                // state (consistent — a failed window mutates nothing
+                // past the last completed algorithm event).  Best
+                // effort: the original error is what must surface.
+                if let Err(save_err) =
+                    trainer.checkpoint().and_then(|snap| save_snapshot(&path, &snap))
+                {
+                    eprintln!(
+                        "warning: checkpoint-on-failure could not save {}: {save_err:#}",
+                        path.display()
+                    );
+                }
+                return Err(e);
+            }
+        }
+    }
+    // Cover the edge cases where the loop body never saved (an
+    // already-complete resume, max_steps == 0) — but do not re-write a
+    // final state that is already on disk: a spurious I/O error here
+    // would turn a fully-completed, fully-checkpointed run into Err.
+    if saved_at != Some(trainer.steps()) {
+        let snap = trainer.checkpoint()?;
+        save_snapshot(&path, &snap)?;
+    }
+    merged.steps_run = trainer.steps();
+    merged.cost_evals = trainer.cost_evals();
+    Ok(merged)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ScheduleKind;
+    use crate::datasets::xor;
+    use crate::device::NativeDevice;
+    use crate::optim::init_params_uniform;
+    use crate::rng::Rng;
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "mgd-ckpt-test-{tag}-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn xor_device(seed: u64) -> NativeDevice {
+        let mut dev = NativeDevice::new(&[2, 2, 1], 1);
+        let mut rng = Rng::new(seed);
+        let mut theta = vec![0f32; 9];
+        init_params_uniform(&mut rng, &mut theta, 1.0);
+        dev.set_params(&theta).unwrap();
+        dev
+    }
+
+    #[test]
+    fn scalar_encodings_are_exact() {
+        for v in [0u64, 1, 53, (1 << 53) + 1, u64::MAX] {
+            assert_eq!(pu64(&ju64(v)).unwrap(), v, "u64 {v}");
+        }
+        for v in [0.0f32, -0.0, 1.5e-38, f32::NAN, f32::INFINITY, -3.25] {
+            assert_eq!(pf32(&jf32(v)).unwrap().to_bits(), v.to_bits(), "f32 {v}");
+        }
+        for v in [0.0f64, -1.0e-300, std::f64::consts::PI, f64::NAN] {
+            assert_eq!(pf64(&jf64(v)).unwrap().to_bits(), v.to_bits(), "f64 {v}");
+        }
+        assert!(pf32(&Json::Num(-1.0)).is_err());
+        assert!(pf32(&Json::Num(0.5)).is_err());
+        assert!(pf32(&Json::Num(u32::MAX as f64 + 1.0)).is_err());
+        assert!(pu64(&Json::Num(3.0)).is_err(), "u64 must be a string");
+        assert_eq!(popt_u64(&Json::Null).unwrap(), None);
+        assert_eq!(popt_u64(&jopt_u64(Some(9))).unwrap(), Some(9));
+    }
+
+    #[test]
+    fn snapshot_json_roundtrip_preserves_every_field() {
+        let data = xor();
+        let cfg = MgdConfig {
+            tau_x: 3,
+            tau_theta: 4,
+            tau_p: 2,
+            eta: 0.7,
+            amplitude: 0.05,
+            kind: PerturbKind::RademacherCode,
+            noise: crate::noise::NoiseConfig { sigma_cost: 0.01, sigma_update: 0.002 },
+            seed: 11,
+        };
+        let mut dev = xor_device(11);
+        let mut tr = MgdTrainer::new(&mut dev, &data, cfg, ScheduleKind::Cyclic);
+        for _ in 0..17 {
+            tr.step().unwrap();
+        }
+        let snap = tr.checkpoint().unwrap();
+        let doc = snap.to_json();
+        // The document survives a serialize → parse → decode round trip
+        // through the JSONL writer, bit for bit.
+        let back = TrainerSnapshot::from_json(&Json::parse(&doc.dump()).unwrap()).unwrap();
+        assert_eq!(back.n_params, snap.n_params);
+        assert_eq!(back.step, snap.step);
+        assert_eq!(back.cost_evals, snap.cost_evals);
+        assert_eq!(back.c0.to_bits(), snap.c0.to_bits());
+        assert_eq!(back.c0_valid, snap.c0_valid);
+        assert_eq!(back.next_load_step, snap.next_load_step);
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&back.theta), bits(&snap.theta));
+        assert_eq!(bits(&back.g), bits(&snap.g));
+        assert_eq!(bits(&back.xb), bits(&snap.xb));
+        assert_eq!(bits(&back.yb), bits(&snap.yb));
+        assert_eq!(back.rng, snap.rng);
+        assert_eq!(back.schedule, snap.schedule);
+        assert_eq!(back.pert, snap.pert);
+        assert!(ensure_config_matches(&cfg, &back.config).is_ok());
+    }
+
+    #[test]
+    fn file_roundtrip_and_version_gate() {
+        let dir = temp_dir("file");
+        let data = xor();
+        let cfg = MgdConfig { seed: 5, ..Default::default() };
+        let mut dev = xor_device(5);
+        let mut tr = MgdTrainer::new(&mut dev, &data, cfg, ScheduleKind::Cyclic);
+        for _ in 0..5 {
+            tr.step().unwrap();
+        }
+        let snap = tr.checkpoint().unwrap();
+        let path = checkpoint_path(&dir);
+        save_snapshot(&path, &snap).unwrap();
+        let back = load_snapshot(&path).unwrap();
+        assert_eq!(back.step, 5);
+        // A future version is rejected, not misread.
+        let mut doc = match snap.to_json() {
+            Json::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        doc.insert("version".to_string(), Json::Num(99.0));
+        write_json_atomic(&path, &Json::Obj(doc)).unwrap();
+        let err = load_snapshot(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("version 99"), "{err:#}");
+        // Garbage is a parse error, not a panic.
+        std::fs::write(&path, "{not json").unwrap();
+        assert!(load_snapshot(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn restore_rejects_config_and_shape_mismatches() {
+        let data = xor();
+        let cfg = MgdConfig { seed: 2, ..Default::default() };
+        let mut dev = xor_device(2);
+        let mut tr = MgdTrainer::new(&mut dev, &data, cfg, ScheduleKind::Cyclic);
+        for _ in 0..3 {
+            tr.step().unwrap();
+        }
+        let snap = tr.checkpoint().unwrap();
+        // Different eta → named mismatch.
+        let mut dev2 = xor_device(2);
+        let cfg2 = MgdConfig { eta: 2.5, seed: 2, ..Default::default() };
+        let mut tr2 = MgdTrainer::new(&mut dev2, &data, cfg2, ScheduleKind::Cyclic);
+        let err = tr2.restore(&snap).unwrap_err();
+        assert!(format!("{err:#}").contains("eta"), "{err:#}");
+        // Different model shape → parameter-count error.
+        let mut dev3 = NativeDevice::new(&[4, 4, 1], 1);
+        dev3.set_params(&[0.1; 25]).unwrap();
+        let par = crate::datasets::parity(4);
+        let mut tr3 = MgdTrainer::new(&mut dev3, &par, cfg, ScheduleKind::Cyclic);
+        let err = tr3.restore(&snap).unwrap_err();
+        assert!(format!("{err:#}").contains("parameter"), "{err:#}");
+    }
+
+    #[test]
+    fn train_checkpointed_chunks_match_one_shot_training() {
+        let data = xor();
+        let cfg = MgdConfig {
+            tau_x: 2,
+            tau_theta: 4,
+            eta: 0.8,
+            amplitude: 0.05,
+            seed: 31,
+            ..Default::default()
+        };
+        let opts = TrainOptions { max_steps: 120, eval_every: 40, ..Default::default() };
+        // One-shot reference.
+        let mut dev_a = xor_device(31);
+        let mut tr_a = MgdTrainer::new(&mut dev_a, &data, cfg, ScheduleKind::Cyclic);
+        let res_a = tr_a.train_batched(&opts, None, 3).unwrap();
+        let theta_a = tr_a.device_params().unwrap();
+        // Checkpointed in 7-step chunks (boundaries land mid-window, mid
+        // τθ — everywhere).
+        let dir = temp_dir("chunks");
+        let ck = CheckpointConfig { dir: dir.clone(), every_steps: 7, resume: false };
+        let mut dev_b = xor_device(31);
+        let mut tr_b = MgdTrainer::new(&mut dev_b, &data, cfg, ScheduleKind::Cyclic);
+        let res_b = train_checkpointed(&mut tr_b, &opts, None, 3, &ck).unwrap();
+        assert_eq!(res_a.steps_run, res_b.steps_run);
+        assert_eq!(res_a.cost_evals, res_b.cost_evals);
+        assert_eq!(res_a.eval_trace.len(), res_b.eval_trace.len());
+        let theta_b = tr_b.device_params().unwrap();
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&theta_a), bits(&theta_b));
+        // The on-disk checkpoint holds the final state.
+        let snap = load_snapshot(&checkpoint_path(&dir)).unwrap();
+        assert_eq!(snap.step, 120);
+        assert_eq!(bits(&snap.theta), bits(&theta_a));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn dp_meta_roundtrip() {
+        let dir = temp_dir("dpmeta");
+        assert_eq!(load_dp_meta(&dir).unwrap(), None);
+        save_dp_meta(&dir, 3, 4).unwrap();
+        assert_eq!(load_dp_meta(&dir).unwrap(), Some((3, 4)));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

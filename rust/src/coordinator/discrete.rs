@@ -17,8 +17,9 @@
 //! [`HardwareDevice::cost_many`] call, bit-identically to the serial loop,
 //! and [`MgdTrainer::train_batched`] is the corresponding training driver.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
+use super::checkpoint::{ensure_config_matches, TrainerSnapshot};
 use super::schedule::{SampleSchedule, ScheduleKind};
 use super::{MgdConfig, TrainOptions, TrainResult};
 use crate::datasets::Dataset;
@@ -62,6 +63,13 @@ pub struct MgdTrainer<'d> {
     /// Cached baseline cost C₀ and its validity.
     c0: f32,
     c0_valid: bool,
+    /// First step at or after which a new sample window must be loaded.
+    /// Equivalent to the `n % τx == 0` check for a sequential run, but
+    /// crash-consistent: once the schedule has been consumed for step n,
+    /// this advances, so a checkpoint taken after a mid-step failure
+    /// never re-consumes the schedule on resume (which would silently
+    /// train a different trajectory).
+    next_load_step: u64,
     step: u64,
     rng: Rng,
     cost_evals: u64,
@@ -94,6 +102,7 @@ impl<'d> MgdTrainer<'d> {
             yb: Vec::new(),
             c0: 0.0,
             c0_valid: false,
+            next_load_step: 0,
             step: 0,
             rng: Rng::new(cfg.seed ^ 0x4d47_4431), // "MGD1"
             cost_evals: 0,
@@ -144,17 +153,104 @@ impl<'d> MgdTrainer<'d> {
         self.dev.evaluate(&set.x, &set.y, set.n)
     }
 
+    /// Capture the complete training state as a serializable snapshot —
+    /// θ (read back from the device), the gradient integrator G, the
+    /// cached baseline C₀, the loaded sample window, step/cost-eval
+    /// counters, and the *full* internal state of the noise RNG, the
+    /// sample schedule and the perturbation generator.
+    ///
+    /// Restoring the snapshot into a freshly built trainer
+    /// ([`MgdTrainer::restore`]) continues the run **bit-identically**:
+    /// the same θ/G trajectory, the same noise-draw order, the same
+    /// `cost_evals` count as if training had never stopped — the same
+    /// contract [`MgdTrainer::step_window`] keeps for batching.  Device
+    /// *internals* (e.g. a [`crate::noise::NeuronDefects`] table) are
+    /// not captured: the caller owns rebuilding the device identically,
+    /// exactly as it owned building it in the first place.
+    pub fn checkpoint(&mut self) -> Result<TrainerSnapshot> {
+        Ok(TrainerSnapshot {
+            config: self.cfg,
+            n_params: self.g.len(),
+            theta: self.dev.get_params()?,
+            g: self.g.clone(),
+            xb: self.xb.clone(),
+            yb: self.yb.clone(),
+            c0: self.c0,
+            c0_valid: self.c0_valid,
+            next_load_step: self.next_load_step,
+            step: self.step,
+            cost_evals: self.cost_evals,
+            rng: self.rng.state(),
+            schedule: self.schedule.export_state(),
+            pert: self.pert.export_state(),
+        })
+    }
+
+    /// Restore a snapshot taken by [`MgdTrainer::checkpoint`] into this
+    /// trainer.  The trainer must have been built with the *same*
+    /// configuration, dataset shape and device shape; mismatches are
+    /// rejected rather than silently diverging.
+    pub fn restore(&mut self, snap: &TrainerSnapshot) -> Result<()> {
+        ensure_config_matches(&self.cfg, &snap.config)?;
+        let p = self.g.len();
+        if snap.n_params != p || snap.theta.len() != p || snap.g.len() != p {
+            bail!(
+                "checkpoint is for a {}-parameter model (θ {}, G {}), trainer has {p}",
+                snap.n_params,
+                snap.theta.len(),
+                snap.g.len()
+            );
+        }
+        if snap.xb.is_empty() != snap.yb.is_empty() {
+            bail!("corrupt checkpoint: sample window x/y presence disagrees");
+        }
+        self.dev.set_params(&snap.theta)?;
+        self.xb.clear();
+        self.xb.extend_from_slice(&snap.xb);
+        self.yb.clear();
+        self.yb.extend_from_slice(&snap.yb);
+        // The loaded sample window is device-side state: replay it so a
+        // snapshot taken mid-τx-window resumes against the same samples.
+        if !self.xb.is_empty() {
+            self.dev.load_batch(&self.xb, &self.yb)?;
+        }
+        self.g.copy_from_slice(&snap.g);
+        self.c0 = snap.c0;
+        self.c0_valid = snap.c0_valid;
+        self.next_load_step = snap.next_load_step;
+        self.step = snap.step;
+        self.cost_evals = snap.cost_evals;
+        self.rng.set_state(snap.rng);
+        self.schedule.import_state(&snap.schedule)?;
+        self.pert.import_state(&snap.pert)?;
+        Ok(())
+    }
+
+    /// Lines 3–4 of Algorithm 1: consume the schedule and load a new
+    /// sample window when one is due at step `n`.  Crash-consistent: the
+    /// schedule advance and the `next_load_step` watermark commit
+    /// *before* the fallible device call, and `xb`/`yb` hold the new
+    /// window, so a checkpoint taken after a failure here resumes by
+    /// replaying `load_batch` from `xb` instead of re-consuming the
+    /// schedule.
+    fn load_window_if_due(&mut self, n: u64) -> Result<()> {
+        if n < self.next_load_step {
+            return Ok(());
+        }
+        let idx = self.schedule.next_window();
+        self.dataset.gather_into(&idx, &mut self.xb, &mut self.yb);
+        self.next_load_step = n + self.cfg.tau_x.max(1);
+        self.c0_valid = false;
+        self.dev.load_batch(&self.xb, &self.yb)?;
+        Ok(())
+    }
+
     /// Execute one MGD timestep (Algorithm 1 loop body).
     pub fn step(&mut self) -> Result<StepOutput> {
         let n = self.step;
 
         // Lines 3–4: new training sample window every τx.
-        if n % self.cfg.tau_x.max(1) == 0 {
-            let idx = self.schedule.next_window();
-            self.dataset.gather_into(&idx, &mut self.xb, &mut self.yb);
-            self.dev.load_batch(&self.xb, &self.yb)?;
-            self.c0_valid = false;
-        }
+        self.load_window_if_due(n)?;
 
         // Lines 5–7: re-measure the baseline cost C₀ (θ̃ = 0) when the
         // sample window or the parameters changed.
@@ -230,12 +326,7 @@ impl<'d> MgdTrainer<'d> {
 
         // Lines 3–4: new training sample window (window start only — the
         // clamp guarantees no τx boundary falls strictly inside).
-        if n % tau_x == 0 {
-            let idx = self.schedule.next_window();
-            self.dataset.gather_into(&idx, &mut self.xb, &mut self.yb);
-            self.dev.load_batch(&self.xb, &self.yb)?;
-            self.c0_valid = false;
-        }
+        self.load_window_if_due(n)?;
 
         // Lines 5–7: baseline C₀, at most once per window.
         if !self.c0_valid {
@@ -244,7 +335,14 @@ impl<'d> MgdTrainer<'d> {
             self.c0_valid = true;
         }
 
-        // Lines 8–9 for every step of the window: stack the probes.
+        // Lines 8–9 for every step of the window: stack the probes.  A
+        // multi-probe fill advances the generator past step n, so if the
+        // device call below fails the generator must rewind — otherwise
+        // a checkpoint-on-failure would resume with probes drawn beyond
+        // the replay point and diverge from the uninterrupted run.  A
+        // single-probe fill is idempotent (re-filling the same step
+        // re-reads the held pattern), so the serial path pays nothing.
+        let pert_rewind = if k_eff > 1 { Some(self.pert.export_state()) } else { None };
         let p = self.g.len();
         if self.probes.len() < k_eff * p {
             self.probes.resize(k_eff * p, 0.0);
@@ -254,7 +352,18 @@ impl<'d> MgdTrainer<'d> {
         }
 
         // Lines 10–12, batched: K perturbed inferences, one device call.
-        let costs = self.dev.cost_many(&self.probes[..k_eff * p], k_eff)?;
+        let costs = match self.dev.cost_many(&self.probes[..k_eff * p], k_eff) {
+            Ok(costs) => costs,
+            Err(e) => {
+                if let Some(state) = &pert_rewind {
+                    // Same generator, same shape: cannot fail.
+                    self.pert
+                        .import_state(state)
+                        .expect("rewinding perturbation state after device failure");
+                }
+                return Err(e);
+            }
+        };
         if costs.len() != k_eff {
             anyhow::bail!(
                 "cost_many returned {} costs for {k_eff} probes — device broke the \
@@ -553,6 +662,66 @@ mod tests {
         let tb: Vec<u32> =
             windowed.device_params().unwrap().iter().map(|t| t.to_bits()).collect();
         assert_eq!(ta, tb, "parameter memories diverged");
+    }
+
+    #[test]
+    fn failed_window_salvage_resumes_bit_identically() {
+        // A multi-probe window that dies in the device call must leave a
+        // checkpointable state that resumes onto the uninterrupted
+        // trajectory: the schedule must not be re-consumed and the
+        // perturbation generator must rewind the probes it pre-drew for
+        // steps that never ran.  Exercise both stateful generators.
+        use crate::device::{FlakyConfig, FlakyDevice};
+        for kind in [PerturbKind::RademacherCode, PerturbKind::Sinusoidal] {
+            let data = xor();
+            let cfg = MgdConfig {
+                tau_x: 6,
+                tau_theta: 6,
+                tau_p: 2,
+                eta: 0.5,
+                amplitude: 0.05,
+                kind,
+                noise: crate::noise::NoiseConfig { sigma_cost: 0.01, sigma_update: 0.002 },
+                seed: 21,
+            };
+            let opts = TrainOptions { max_steps: 60, ..Default::default() };
+
+            // Reference: uninterrupted run, 6-probe windows.
+            let mut dev_ref = xor_device(9);
+            let mut tr_ref = MgdTrainer::new(&mut dev_ref, &data, cfg, ScheduleKind::Cyclic);
+            tr_ref.train_batched(&opts, None, 6).unwrap();
+
+            // Interrupted: per window the device sees C₀ + one CostMany,
+            // so the 4th cost measurement is window 2's probe batch —
+            // it fails mid-window, after C₀ and the probe fill.
+            let mut flaky = FlakyDevice::new(
+                Box::new(xor_device(9)),
+                FlakyConfig { fail_after: Some(3), ..Default::default() },
+            );
+            let snap = {
+                let mut tr = MgdTrainer::new(&mut flaky, &data, cfg, ScheduleKind::Cyclic);
+                let err = tr.train_batched(&opts, None, 6).unwrap_err();
+                assert!(err.to_string().contains("injected fault"), "{err:#}");
+                assert_eq!(tr.steps(), 6, "{kind:?}: failure lands inside window 2");
+                tr.checkpoint().unwrap()
+            };
+            assert_eq!(flaky.cost_calls(), 4);
+
+            // "New process": fresh device, fresh trainer, restore, finish.
+            let mut dev_b = xor_device(9);
+            let mut tr_b = MgdTrainer::new(&mut dev_b, &data, cfg, ScheduleKind::Cyclic);
+            tr_b.restore(&snap).unwrap();
+            tr_b.train_batched(&opts, None, 6).unwrap();
+
+            assert_eq!(tr_ref.cost_evals(), tr_b.cost_evals(), "{kind:?} cost_evals");
+            let gb = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(gb(tr_ref.gradient()), gb(tr_b.gradient()), "{kind:?} G diverged");
+            assert_eq!(
+                gb(&tr_ref.device_params().unwrap()),
+                gb(&tr_b.device_params().unwrap()),
+                "{kind:?} θ diverged after failed-window salvage"
+            );
+        }
     }
 
     #[test]

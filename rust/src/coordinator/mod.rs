@@ -16,19 +16,25 @@
 //!
 //! [`schedule`] owns the τx clock (when samples change) and batch
 //! assembly; [`replica`] fans a training run across many random
-//! initializations for the paper's statistics.
+//! initializations for the paper's statistics; [`checkpoint`] serializes
+//! the discrete trainer's complete state to versioned on-disk snapshots
+//! with a bit-identical resume guarantee (long runs survive crashes).
 
 pub mod analog;
+pub mod checkpoint;
 pub mod discrete;
 pub mod onchip;
 pub mod replica;
 pub mod schedule;
 
 pub use analog::AnalogTrainer;
+pub use checkpoint::{
+    load_snapshot, save_snapshot, train_checkpointed, CheckpointConfig, TrainerSnapshot,
+};
 pub use discrete::{MgdTrainer, StepOutput};
 pub use onchip::OnChipTrainer;
 pub use replica::{converged_fraction, replica_stats, solve_times, ReplicaOutcome};
-pub use schedule::{SampleSchedule, ScheduleKind};
+pub use schedule::{SampleSchedule, ScheduleKind, ScheduleState};
 
 use crate::noise::NoiseConfig;
 use crate::perturb::PerturbKind;

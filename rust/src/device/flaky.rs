@@ -1,0 +1,211 @@
+//! Fault injection: a [`HardwareDevice`] wrapper that fails or stalls on
+//! schedule.
+//!
+//! The paper's robustness claims (§3.5) are about *noisy* hardware; the
+//! fleet's fault-tolerance claims are about *broken* hardware — devices
+//! that error, hang, or die mid-run.  [`FlakyDevice`] turns any inner
+//! device into that kind of hardware deterministically, so quarantine,
+//! job retry, barrier degradation and checkpoint-on-failure can be
+//! integration-tested without real lab flakiness.
+//!
+//! Failure schedules compose (any matching rule fires):
+//!
+//! - [`FlakyConfig::fail_first`] — the first N cost measurements fail,
+//!   then the device recovers (exercises suspect → healthy recovery and
+//!   retry-then-succeed).
+//! - [`FlakyConfig::fail_after`] — cost measurements succeed until N have
+//!   completed, then every later one fails (exercises mid-run replica
+//!   loss and checkpoint-on-failure).
+//! - [`FlakyConfig::fail_every`] — every Nth cost measurement fails
+//!   (exercises intermittent flakiness below the quarantine threshold).
+//! - [`FlakyConfig::fail_healthcheck`] — healthchecks fail (exercises
+//!   heartbeat-driven quarantine with no training traffic at all).
+//! - [`FlakyConfig::stall`] — a failing call sleeps first (simulated
+//!   hang; keep it short in tests — the sleep blocks the calling worker
+//!   exactly like real stuck hardware would).
+//!
+//! Only cost measurements (`cost` / `cost_many`) count toward the
+//! schedules: they are the hot path, and counting them alone keeps the
+//! failure step deterministic regardless of how callers interleave
+//! parameter and batch traffic.
+
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use super::HardwareDevice;
+
+/// Deterministic failure schedule for a [`FlakyDevice`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FlakyConfig {
+    /// Fail the first N cost measurements, then recover (0 = off).
+    pub fail_first: u64,
+    /// Fail every cost measurement after the first N succeeded
+    /// (`None` = off; `Some(0)` = fail from the first call).
+    pub fail_after: Option<u64>,
+    /// Fail every Nth cost measurement (0 = off; 1 = every call).
+    pub fail_every: u64,
+    /// Fail healthchecks instead of passing them through.
+    pub fail_healthcheck: bool,
+    /// Sleep this long before returning each injected failure
+    /// (simulated hang).
+    pub stall: Option<Duration>,
+}
+
+/// A [`HardwareDevice`] that injects failures per [`FlakyConfig`].
+pub struct FlakyDevice {
+    inner: Box<dyn HardwareDevice>,
+    cfg: FlakyConfig,
+    /// Cost measurements attempted so far (1-based at check time).
+    cost_calls: u64,
+}
+
+impl FlakyDevice {
+    pub fn new(inner: Box<dyn HardwareDevice>, cfg: FlakyConfig) -> FlakyDevice {
+        FlakyDevice { inner, cfg, cost_calls: 0 }
+    }
+
+    /// Cost measurements attempted so far (injected failures included).
+    pub fn cost_calls(&self) -> u64 {
+        self.cost_calls
+    }
+
+    /// Record one cost measurement and fail it if the schedule says so.
+    fn tick(&mut self) -> Result<()> {
+        self.cost_calls += 1;
+        let n = self.cost_calls;
+        let fail = (self.cfg.fail_first > 0 && n <= self.cfg.fail_first)
+            || self.cfg.fail_after.is_some_and(|after| n > after)
+            || (self.cfg.fail_every > 0 && n % self.cfg.fail_every == 0);
+        if fail {
+            if let Some(stall) = self.cfg.stall {
+                std::thread::sleep(stall);
+            }
+            bail!("injected fault: cost measurement {n} failed by schedule");
+        }
+        Ok(())
+    }
+}
+
+impl HardwareDevice for FlakyDevice {
+    fn n_params(&self) -> usize {
+        self.inner.n_params()
+    }
+
+    fn batch_size(&self) -> usize {
+        self.inner.batch_size()
+    }
+
+    fn input_len(&self) -> usize {
+        self.inner.input_len()
+    }
+
+    fn n_outputs(&self) -> usize {
+        self.inner.n_outputs()
+    }
+
+    fn set_params(&mut self, theta: &[f32]) -> Result<()> {
+        self.inner.set_params(theta)
+    }
+
+    fn get_params(&mut self) -> Result<Vec<f32>> {
+        self.inner.get_params()
+    }
+
+    fn apply_update(&mut self, delta: &[f32]) -> Result<()> {
+        self.inner.apply_update(delta)
+    }
+
+    fn load_batch(&mut self, x: &[f32], y: &[f32]) -> Result<()> {
+        self.inner.load_batch(x, y)
+    }
+
+    fn cost(&mut self, theta_tilde: Option<&[f32]>) -> Result<f32> {
+        self.tick()?;
+        self.inner.cost(theta_tilde)
+    }
+
+    /// One schedule tick per *call* (not per probe): a whole window lives
+    /// or dies together, exactly like one wire frame to a flaky chip.
+    fn cost_many(&mut self, probes: &[f32], k: usize) -> Result<Vec<f32>> {
+        self.tick()?;
+        self.inner.cost_many(probes, k)
+    }
+
+    fn evaluate(&mut self, x: &[f32], y: &[f32], n: usize) -> Result<(f32, f32)> {
+        self.inner.evaluate(x, y, n)
+    }
+
+    fn describe(&self) -> String {
+        format!("flaky({})", self.inner.describe())
+    }
+
+    fn healthcheck(&mut self) -> Result<()> {
+        if self.cfg.fail_healthcheck {
+            if let Some(stall) = self.cfg.stall {
+                std::thread::sleep(stall);
+            }
+            bail!("injected fault: healthcheck failed by schedule");
+        }
+        self.inner.healthcheck()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::NativeDevice;
+
+    fn flaky(cfg: FlakyConfig) -> FlakyDevice {
+        let mut dev = NativeDevice::new(&[2, 2, 1], 1);
+        dev.set_params(&[0.1; 9]).unwrap();
+        dev.load_batch(&[1.0, 0.0], &[1.0]).unwrap();
+        FlakyDevice::new(Box::new(dev), cfg)
+    }
+
+    #[test]
+    fn fail_first_recovers_after_n_calls() {
+        let mut dev = flaky(FlakyConfig { fail_first: 2, ..Default::default() });
+        assert!(dev.cost(None).is_err());
+        assert!(dev.cost(None).is_err());
+        assert!(dev.cost(None).is_ok());
+        assert_eq!(dev.cost_calls(), 3);
+    }
+
+    #[test]
+    fn fail_after_kills_later_calls() {
+        let mut dev = flaky(FlakyConfig { fail_after: Some(2), ..Default::default() });
+        assert!(dev.cost(None).is_ok());
+        assert!(dev.cost_many(&[0.0; 9], 1).is_ok());
+        assert!(dev.cost(None).is_err());
+        assert!(dev.cost_many(&[0.0; 9], 1).is_err());
+    }
+
+    #[test]
+    fn fail_every_is_periodic() {
+        let mut dev = flaky(FlakyConfig { fail_every: 3, ..Default::default() });
+        let outcomes: Vec<bool> = (0..6).map(|_| dev.cost(None).is_ok()).collect();
+        assert_eq!(outcomes, vec![true, true, false, true, true, false]);
+    }
+
+    #[test]
+    fn healthcheck_schedule_is_independent_of_cost_traffic() {
+        let mut dev = flaky(FlakyConfig { fail_healthcheck: true, ..Default::default() });
+        assert!(dev.healthcheck().is_err());
+        assert!(dev.cost(None).is_ok(), "cost path must be unaffected");
+        let mut ok = flaky(FlakyConfig::default());
+        assert!(ok.healthcheck().is_ok());
+    }
+
+    #[test]
+    fn non_cost_traffic_does_not_advance_the_schedule() {
+        let mut dev = flaky(FlakyConfig { fail_after: Some(1), ..Default::default() });
+        dev.set_params(&[0.2; 9]).unwrap();
+        dev.load_batch(&[0.0, 1.0], &[1.0]).unwrap();
+        dev.get_params().unwrap();
+        dev.evaluate(&[1.0, 0.0], &[1.0], 1).unwrap();
+        assert_eq!(dev.cost_calls(), 0);
+        assert!(dev.cost(None).is_ok(), "first cost call is within budget");
+        assert!(dev.cost(None).is_err());
+    }
+}

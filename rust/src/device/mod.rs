@@ -19,12 +19,14 @@
 //!   the chip-in-the-loop setup of §4/§6 where an external computer
 //!   drives perturbations over lab I/O.
 
+pub mod flaky;
 pub mod native;
 pub mod pjrt;
 pub mod protocol;
 pub mod remote;
 pub mod server;
 
+pub use flaky::{FlakyConfig, FlakyDevice};
 pub use native::NativeDevice;
 pub use pjrt::PjrtDevice;
 pub use remote::RemoteDevice;
@@ -105,6 +107,16 @@ pub trait HardwareDevice: Send {
     /// Human-readable device description (for logs / metrics).
     fn describe(&self) -> String {
         format!("device(P={}, B={})", self.n_params(), self.batch_size())
+    }
+
+    /// Cheap liveness probe used by the fleet's heartbeat monitor
+    /// ([`crate::fleet::health`]); must not disturb training state (θ,
+    /// the loaded batch).  In-process devices are alive by construction,
+    /// so the default succeeds; [`RemoteDevice`] overrides this with a
+    /// `Ping` round trip so a dead TCP session or wedged server is
+    /// detected without consuming a training request.
+    fn healthcheck(&mut self) -> Result<()> {
+        Ok(())
     }
 }
 

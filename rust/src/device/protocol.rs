@@ -83,6 +83,12 @@ pub enum Op {
     /// `k:u32, array θ̃-stack` (see the module docs for the contract and
     /// the chunking rule). Reply: `array` of K costs.
     CostMany = 0x09,
+    /// Liveness probe: the server echoes the payload verbatim without
+    /// touching the device.  The heartbeat monitor
+    /// ([`crate::fleet::health`]) sends a `u32` nonce and checks the
+    /// echo, so a wedged session (or a proxy answering for a dead chip)
+    /// cannot fake a healthy round trip with a canned reply.
+    Ping = 0x0A,
 }
 
 impl Op {
@@ -97,6 +103,7 @@ impl Op {
             0x07 => Op::Evaluate,
             0x08 => Op::Bye,
             0x09 => Op::CostMany,
+            0x0A => Op::Ping,
             other => bail!("unknown opcode {other:#x}"),
         })
     }
@@ -339,8 +346,21 @@ mod tests {
         assert!(Op::from_u8(0x01).is_ok());
         assert!(Op::from_u8(0x08).is_ok());
         assert_eq!(Op::from_u8(0x09).unwrap(), Op::CostMany);
-        assert!(Op::from_u8(0x0A).is_err());
+        assert_eq!(Op::from_u8(0x0A).unwrap(), Op::Ping);
+        assert!(Op::from_u8(0x0B).is_err());
         assert!(Op::from_u8(0x00).is_err());
+    }
+
+    #[test]
+    fn ping_frame_roundtrip() {
+        let mut payload = Vec::new();
+        put_u32(&mut payload, 0xDEAD_BEEF);
+        let mut wire = Vec::new();
+        write_request(&mut wire, Op::Ping, &payload).unwrap();
+        let mut cursor = std::io::Cursor::new(wire);
+        let (op, got) = read_request(&mut cursor).unwrap();
+        assert_eq!(op, Op::Ping);
+        assert_eq!(got, payload);
     }
 
     // ---- CostMany frames --------------------------------------------------

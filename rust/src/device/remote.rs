@@ -15,6 +15,7 @@
 
 use std::io::BufReader;
 use std::net::TcpStream;
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
@@ -30,6 +31,8 @@ pub struct RemoteDevice {
     input_len: usize,
     n_outputs: usize,
     addr: String,
+    /// Nonce for [`RemoteDevice::ping`] (echo-checked per probe).
+    ping_nonce: u32,
 }
 
 impl RemoteDevice {
@@ -46,6 +49,7 @@ impl RemoteDevice {
             input_len: 0,
             n_outputs: 0,
             addr: addr.to_string(),
+            ping_nonce: 0,
         };
         let reply = dev.roundtrip(p::Op::Hello, &[])?;
         let mut pos = 0;
@@ -64,6 +68,34 @@ impl RemoteDevice {
     /// Politely close the session.
     pub fn close(mut self) {
         let _ = self.roundtrip(p::Op::Bye, &[]);
+    }
+
+    /// Bound every request/response on this session with an I/O deadline
+    /// (`None` removes it).  Without a deadline a wedged server parks the
+    /// caller in a blocking read forever — the failure mode that lease
+    /// revocation ([`crate::fleet::pool::DevicePool::revoke_stale`]) can
+    /// flag but not interrupt.  With one, the call errors and the normal
+    /// job-retry path takes over.
+    pub fn set_io_timeout(&mut self, timeout: Option<Duration>) -> Result<()> {
+        self.reader.get_ref().set_read_timeout(timeout)?;
+        self.writer.set_write_timeout(timeout)?;
+        Ok(())
+    }
+
+    /// Liveness probe: one `Ping` round trip carrying a nonce that the
+    /// server must echo.  Does not touch θ or the loaded batch.
+    pub fn ping(&mut self) -> Result<()> {
+        self.ping_nonce = self.ping_nonce.wrapping_add(1);
+        let nonce = self.ping_nonce;
+        let mut payload = Vec::with_capacity(4);
+        p::put_u32(&mut payload, nonce);
+        let reply = self.roundtrip(p::Op::Ping, &payload)?;
+        let mut pos = 0;
+        let echoed = p::get_u32(&reply, &mut pos)?;
+        if echoed != nonce {
+            bail!("ping echo mismatch: sent nonce {nonce}, got {echoed}");
+        }
+        Ok(())
     }
 
     /// [`HardwareDevice::cost_many`] with an explicit per-frame probe
@@ -191,5 +223,11 @@ impl HardwareDevice for RemoteDevice {
 
     fn describe(&self) -> String {
         format!("remote@{}(P={}, B={})", self.addr, self.n_params, self.batch)
+    }
+
+    /// A `Ping` round trip: detects dead sessions / wedged servers
+    /// without consuming a training request.
+    fn healthcheck(&mut self) -> Result<()> {
+        self.ping()
     }
 }

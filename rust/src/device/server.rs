@@ -294,6 +294,12 @@ fn handle_request(
             p::put_array(&mut out, &costs);
             out
         }
+        p::Op::Ping => {
+            // Echo the payload verbatim (the client checks its nonce);
+            // the device itself is not touched — Ping answers "is the
+            // session alive", healthchecks answer "is the device sane".
+            payload.to_vec()
+        }
         p::Op::Bye => return Ok(None),
     };
     Ok(Some(reply))
@@ -398,6 +404,18 @@ mod tests {
         let reply = handle_request(&mut *dev, p::Op::CostMany, &req).unwrap().unwrap();
         let mut pos = 0;
         assert!(p::get_array(&reply, &mut pos).unwrap().is_empty());
+    }
+
+    #[test]
+    fn dispatch_ping_echoes_payload() {
+        let mut dev: Box<dyn HardwareDevice> = Box::new(NativeDevice::new(&[2, 2, 1], 1));
+        let mut payload = Vec::new();
+        p::put_u32(&mut payload, 1234);
+        let reply = handle_request(&mut *dev, p::Op::Ping, &payload).unwrap().unwrap();
+        assert_eq!(reply, payload);
+        // Empty payload echoes empty.
+        let reply = handle_request(&mut *dev, p::Op::Ping, &[]).unwrap().unwrap();
+        assert!(reply.is_empty());
     }
 
     #[test]

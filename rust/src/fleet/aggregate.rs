@@ -1,5 +1,5 @@
 //! Data-parallel MGD across the fleet: N replicas, periodic parameter
-//! averaging.
+//! averaging — with failure degradation and checkpoint/resume.
 //!
 //! The paper's §3.5 story — MGD tolerates device-to-device variation — is
 //! replayed at fleet scale: every pooled device trains its own MGD replica
@@ -12,17 +12,40 @@
 //! the regime the scaling follow-up (Oripov et al., 2025) identifies as
 //! where perturbative training pays off.
 //!
-//! Synchronization is barrier-based and deadlock-safe: a replica that
-//! fails keeps participating in barriers (doing no work) so the remaining
-//! replicas never hang, and the first error is reported after the scope
-//! joins.
+//! # Fault model
+//!
+//! Synchronization is barrier-based and deadlock-safe, and a failure
+//! **degrades** the fleet instead of killing the run: a replica whose
+//! device errors drops out (its slot is quarantined, a `replica_failed`
+//! event is emitted), keeps honoring the barriers with no work, and the
+//! leader averages over the remaining live replicas — N → N−1, not
+//! N → 0.  Only the loss of *every* replica fails the run.  Quarantined
+//! devices are excluded up front: the run plans for
+//! [`DevicePool::in_rotation`] replicas, so a pool carrying a known-bad
+//! device completes on the healthy ones instead of wedging in
+//! `lease_many`.
+//!
+//! # Checkpoint/resume
+//!
+//! With [`DataParallelConfig::checkpoint_dir`] set, every replica writes
+//! its trainer snapshot at each round boundary (after the broadcast, so
+//! all snapshots hold the synchronized θ), and the barrier leader then
+//! commits a meta file recording the completed round.  Resume restores
+//! each replica bit-identically and continues from the recorded round.
+//! Checkpointing pauses permanently once the fleet degrades: a mixed-age
+//! set of snapshots cannot resume consistently, so the last all-alive
+//! round stays the resume point.
 
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Barrier, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
+use crate::coordinator::checkpoint::{
+    dp_replica_path, load_dp_meta, load_snapshot, save_dp_meta, save_snapshot,
+};
 use crate::coordinator::{MgdConfig, MgdTrainer, ScheduleKind, TrainOptions, TrainResult};
 use crate::datasets::Dataset;
 use crate::fleet::pool::DevicePool;
@@ -45,6 +68,12 @@ pub struct DataParallelConfig {
     pub probes_per_call: usize,
     /// How long to wait when leasing the whole pool.
     pub lease_timeout: Duration,
+    /// Write per-replica snapshots + a round meta file here at every
+    /// round boundary (`None` = no checkpointing).
+    pub checkpoint_dir: Option<PathBuf>,
+    /// Resume from `checkpoint_dir` if it holds a completed-round meta
+    /// (absence is not an error — the run simply starts fresh).
+    pub resume: bool,
 }
 
 impl Default for DataParallelConfig {
@@ -54,6 +83,8 @@ impl Default for DataParallelConfig {
             steps_per_round: 1000,
             probes_per_call: 1,
             lease_timeout: Duration::from_secs(30),
+            checkpoint_dir: None,
+            resume: false,
         }
     }
 }
@@ -61,16 +92,20 @@ impl Default for DataParallelConfig {
 /// Outcome of a data-parallel run.
 #[derive(Debug, Clone, Default)]
 pub struct DataParallelResult {
-    /// Replicas trained (== pool size).
+    /// Replicas started (== devices in rotation at launch).
     pub replicas: usize,
-    /// Rounds completed.
+    /// Rounds completed by this invocation (excludes rounds restored
+    /// from a checkpoint).
     pub rounds_run: u64,
-    /// Each replica's cumulative training result.
+    /// Each replica's cumulative training result (default-initialized
+    /// for replicas that failed).
     pub per_replica: Vec<TrainResult>,
+    /// Replicas that dropped out, with their error messages.
+    pub failed_replicas: Vec<(usize, String)>,
     /// The synchronized parameter vector after the last round.
     pub final_params: Vec<f32>,
     /// `(cost, accuracy)` of the synchronized parameters on the eval set,
-    /// measured on replica 0's device.
+    /// measured on the first surviving replica's device.
     pub eval: Option<(f32, f32)>,
     /// Total device cost-evaluations across the fleet.
     pub total_cost_evals: u64,
@@ -80,15 +115,17 @@ pub struct DataParallelResult {
 
 /// Keeps a replica honoring the round barriers no matter how it exits.
 ///
-/// Each replica owes the barrier exactly `2 * rounds` waits.  If a thread
-/// unwinds (a panicking device, an internal unwrap) — or ever returns
-/// early — without this, the sibling replicas block in `Barrier::wait`
-/// forever and the whole run hangs instead of reporting the failure.  The
-/// guard pays the outstanding waits on drop, flagging the run as failed so
-/// no leader averages half-baked state.
+/// Each replica owes the barrier exactly `3 * rounds` waits (work /
+/// average / broadcast+checkpoint).  If a thread unwinds (a panicking
+/// device, an internal unwrap) — or ever returns early — without this,
+/// the sibling replicas block in `Barrier::wait` forever and the whole
+/// run hangs instead of reporting the failure.  The guard pays the
+/// outstanding waits on drop and marks its replica dead so the leader
+/// stops averaging its slot.
 struct RoundBarrier<'a> {
     barrier: &'a Barrier,
-    failed: &'a AtomicBool,
+    my_alive: &'a AtomicBool,
+    degraded: &'a AtomicBool,
     waits_owed: u64,
 }
 
@@ -104,7 +141,8 @@ impl Drop for RoundBarrier<'_> {
         if self.waits_owed == 0 {
             return;
         }
-        self.failed.store(true, Ordering::Release);
+        self.my_alive.store(false, Ordering::Release);
+        self.degraded.store(true, Ordering::Release);
         for _ in 0..self.waits_owed {
             self.barrier.wait();
         }
@@ -132,11 +170,12 @@ pub fn average_params(params: &[Vec<f32>]) -> Result<Vec<f32>> {
     Ok(acc.into_iter().map(|a| (a * inv) as f32).collect())
 }
 
-/// Train one MGD replica per pooled device with periodic parameter
-/// averaging.  Replica `i` runs with `cfg.seed + i` (independent
-/// perturbation/schedule streams — averaging identical replicas would be a
-/// no-op).  All replicas start from the mean of the devices' current
-/// parameters.
+/// Train one MGD replica per in-rotation pooled device with periodic
+/// parameter averaging.  Replica `i` runs with `cfg.seed + i`
+/// (independent perturbation/schedule streams — averaging identical
+/// replicas would be a no-op).  All replicas start from the mean of the
+/// devices' current parameters (or from their restored snapshots when
+/// resuming).
 pub fn train_data_parallel(
     pool: &Arc<DevicePool>,
     dataset: &Dataset,
@@ -145,17 +184,50 @@ pub fn train_data_parallel(
     dp: &DataParallelConfig,
     telemetry: &Telemetry,
 ) -> Result<DataParallelResult> {
-    let n = pool.size();
+    let n = pool.in_rotation();
     if n == 0 {
-        bail!("data-parallel training needs a non-empty device pool");
+        bail!(
+            "data-parallel training needs a non-empty device pool in rotation \
+             ({} of {} devices quarantined)",
+            pool.size() - n,
+            pool.size()
+        );
     }
     if dp.rounds == 0 || dp.steps_per_round == 0 {
         bail!("data-parallel training needs rounds > 0 and steps_per_round > 0");
     }
+
+    // Resume point: the meta file records how many rounds have complete,
+    // consistent per-replica snapshots on disk.
+    let start_round = match (&dp.checkpoint_dir, dp.resume) {
+        (Some(dir), true) => match load_dp_meta(dir)? {
+            Some((rounds_done, replicas)) => {
+                if replicas != n {
+                    bail!(
+                        "cannot resume: checkpoint in {} holds {replicas} replicas but the \
+                         pool has {n} devices in rotation",
+                        dir.display()
+                    );
+                }
+                if rounds_done > dp.rounds {
+                    bail!(
+                        "cannot resume: checkpoint already at round {rounds_done}, run asks \
+                         for {} rounds",
+                        dp.rounds
+                    );
+                }
+                rounds_done
+            }
+            None => 0,
+        },
+        _ => 0,
+    };
+    let resuming = start_round > 0;
+
     let mut leases = pool.lease_many(n, dp.lease_timeout).context("leasing the fleet")?;
 
     // Fleet-shape check + synchronized start from the mean of the current
-    // parameter memories.
+    // parameter memories (restored snapshots own θ when resuming).
     let p = leases[0].n_params();
     for lease in &leases {
         if lease.n_params() != p {
@@ -167,12 +239,17 @@ pub fn train_data_parallel(
             );
         }
     }
-    let initial: Vec<Vec<f32>> =
-        leases.iter_mut().map(|l| l.device().get_params()).collect::<Result<_>>()?;
-    let theta0 = average_params(&initial)?;
-    for lease in leases.iter_mut() {
-        lease.device().set_params(&theta0)?;
-    }
+    let theta0 = if resuming {
+        Vec::new()
+    } else {
+        let initial: Vec<Vec<f32>> =
+            leases.iter_mut().map(|l| l.device().get_params()).collect::<Result<_>>()?;
+        let theta0 = average_params(&initial)?;
+        for lease in leases.iter_mut() {
+            lease.device().set_params(&theta0)?;
+        }
+        theta0
+    };
 
     let start = Instant::now();
     let barrier = Barrier::new(n);
@@ -181,7 +258,11 @@ pub fn train_data_parallel(
     // order would make seeded runs non-bit-reproducible.
     let thetas: Vec<Mutex<Vec<f32>>> = (0..n).map(|_| Mutex::new(Vec::new())).collect();
     let avg: Mutex<Vec<f32>> = Mutex::new(theta0);
-    let failed = AtomicBool::new(false);
+    let alive: Vec<AtomicBool> = (0..n).map(|_| AtomicBool::new(true)).collect();
+    // Set once any replica dies: pauses checkpointing (a mixed-age
+    // snapshot set cannot resume) and lets survivors skip dead slots.
+    let degraded = AtomicBool::new(false);
+    let all_dead = AtomicBool::new(false);
 
     type ReplicaReturn = Result<(TrainResult, Vec<f32>, Option<(f32, f32)>)>;
     let outcomes: Vec<ReplicaReturn> = std::thread::scope(|scope| {
@@ -192,21 +273,69 @@ pub fn train_data_parallel(
                 let barrier = &barrier;
                 let thetas = &thetas;
                 let avg = &avg;
-                let failed = &failed;
+                let alive = &alive;
+                let degraded = &degraded;
+                let all_dead = &all_dead;
+                let pool = pool.clone();
                 scope.spawn(move || -> ReplicaReturn {
                     // Armed before anything that can panic (trainer
                     // construction included) so siblings never deadlock.
-                    let mut rb =
-                        RoundBarrier { barrier, failed, waits_owed: 2 * dp.rounds };
+                    let mut rb = RoundBarrier {
+                        barrier,
+                        my_alive: &alive[ri],
+                        degraded,
+                        waits_owed: 3 * (dp.rounds - start_round),
+                    };
+                    let slot = lease.slot();
                     let mut rcfg = cfg;
                     rcfg.seed = cfg.seed.wrapping_add(ri as u64);
                     let mut trainer =
                         MgdTrainer::new(lease.device(), dataset, rcfg, ScheduleKind::Cyclic);
                     let mut thread_err: Option<anyhow::Error> = None;
                     let mut result = TrainResult::default();
-                    for round in 0..dp.rounds {
-                        // Work phase (skipped once anything failed).
-                        if thread_err.is_none() && !failed.load(Ordering::Acquire) {
+                    // A replica marks itself dead exactly once; the slot
+                    // is quarantined so retries/leases route around it.
+                    let die = |err: anyhow::Error, thread_err: &mut Option<anyhow::Error>| {
+                        alive[ri].store(false, Ordering::Release);
+                        degraded.store(true, Ordering::Release);
+                        pool.quarantine(slot, &format!("replica {ri} failed: {err:#}")).ok();
+                        telemetry.emit(Event::ReplicaFailed {
+                            replica: ri,
+                            slot,
+                            error: format!("{err:#}"),
+                        });
+                        *thread_err = Some(err);
+                    };
+                    if resuming {
+                        let dir = dp.checkpoint_dir.as_ref().expect("resume implies dir");
+                        let path = dp_replica_path(dir, ri, start_round);
+                        let expect_step = start_round * dp.steps_per_round;
+                        let restored = load_snapshot(&path)
+                            .and_then(|snap| trainer.restore(&snap))
+                            .and_then(|()| {
+                                // A snapshot newer or older than the meta
+                                // watermark (e.g. from a degraded run)
+                                // must fail loudly, not silently diverge.
+                                if trainer.steps() != expect_step {
+                                    bail!(
+                                        "snapshot is at step {} but the meta watermark \
+                                         implies step {expect_step}",
+                                        trainer.steps()
+                                    );
+                                }
+                                Ok(())
+                            });
+                        if let Err(e) = restored {
+                            die(
+                                e.context(format!("restoring replica {ri} snapshot")),
+                                &mut thread_err,
+                            );
+                        }
+                    }
+                    for round in start_round..dp.rounds {
+                        // Work phase (skipped once this replica died or
+                        // the whole fleet is gone).
+                        if thread_err.is_none() && !all_dead.load(Ordering::Acquire) {
                             let opts = TrainOptions {
                                 max_steps: (round + 1) * dp.steps_per_round,
                                 record_cost_every: 0,
@@ -224,60 +353,133 @@ pub fn train_data_parallel(
                                     result = r;
                                     *thetas[ri].lock().unwrap() = theta;
                                 }
-                                Err(e) => {
-                                    failed.store(true, Ordering::Release);
-                                    thread_err = Some(e);
-                                }
+                                Err(e) => die(e, &mut thread_err),
                             }
                         }
-                        // Sync phase: every replica reaches both barriers
-                        // even after a failure, so nobody deadlocks.
+                        // Sync phase 1: work done everywhere; the leader
+                        // averages the live replicas (leader duties read
+                        // only shared state, so even a dead replica can
+                        // execute them).
                         let wait = rb.wait();
-                        if wait.is_leader() && !failed.load(Ordering::Acquire) {
-                            let round_thetas: Vec<Vec<f32>> = thetas
-                                .iter()
-                                .map(|slot| slot.lock().unwrap().clone())
+                        if wait.is_leader() && !all_dead.load(Ordering::Acquire) {
+                            let round_thetas: Vec<Vec<f32>> = (0..n)
+                                .filter(|&i| alive[i].load(Ordering::Acquire))
+                                .map(|i| thetas[i].lock().unwrap().clone())
                                 .collect();
-                            match average_params(&round_thetas) {
-                                Ok(mean) => {
-                                    let norm = mean
-                                        .iter()
-                                        .map(|&v| (v as f64) * (v as f64))
-                                        .sum::<f64>()
-                                        .sqrt();
-                                    *avg.lock().unwrap() = mean;
-                                    telemetry.emit(Event::RoundSynced {
-                                        round,
-                                        replicas: n,
-                                        avg_param_norm: norm,
-                                        secs: start.elapsed().as_secs_f64(),
-                                    });
-                                }
-                                Err(e) => {
-                                    failed.store(true, Ordering::Release);
-                                    thread_err = Some(e);
+                            if round_thetas.is_empty() {
+                                all_dead.store(true, Ordering::Release);
+                            } else {
+                                match average_params(&round_thetas) {
+                                    Ok(mean) => {
+                                        let norm = mean
+                                            .iter()
+                                            .map(|&v| (v as f64) * (v as f64))
+                                            .sum::<f64>()
+                                            .sqrt();
+                                        let live = round_thetas.len();
+                                        *avg.lock().unwrap() = mean;
+                                        telemetry.emit(Event::RoundSynced {
+                                            round,
+                                            replicas: live,
+                                            avg_param_norm: norm,
+                                            secs: start.elapsed().as_secs_f64(),
+                                        });
+                                    }
+                                    Err(e) => {
+                                        // Shape corruption — unrecoverable.
+                                        all_dead.store(true, Ordering::Release);
+                                        if thread_err.is_none() {
+                                            thread_err = Some(e);
+                                        }
+                                    }
                                 }
                             }
                         }
+                        // Sync phase 2: the mean is ready; live replicas
+                        // broadcast it into their devices and checkpoint.
                         rb.wait();
-                        if thread_err.is_none() && !failed.load(Ordering::Acquire) {
+                        if thread_err.is_none() && !all_dead.load(Ordering::Acquire) {
                             // Clone out of the lock so the fleet-wide
                             // broadcast (n device writes, possibly remote)
                             // runs in parallel, not serialized on `avg`.
                             let mean = avg.lock().unwrap().clone();
                             if let Err(e) = trainer.sync_params(&mean) {
-                                failed.store(true, Ordering::Release);
-                                thread_err = Some(e);
+                                die(e, &mut thread_err);
+                            } else if let Some(dir) = &dp.checkpoint_dir {
+                                if !degraded.load(Ordering::Acquire) {
+                                    let path = dp_replica_path(dir, ri, round + 1);
+                                    match trainer
+                                        .checkpoint()
+                                        .and_then(|snap| save_snapshot(&path, &snap))
+                                    {
+                                        Ok(()) => telemetry.emit(Event::CheckpointSaved {
+                                            path: path.display().to_string(),
+                                            step: trainer.steps(),
+                                        }),
+                                        Err(e) => die(
+                                            e.context("writing replica checkpoint"),
+                                            &mut thread_err,
+                                        ),
+                                    }
+                                }
+                            }
+                        }
+                        // Sync phase 3: every live replica's snapshot is
+                        // on disk; the leader commits the round meta and
+                        // then garbage-collects the superseded round (a
+                        // crash anywhere leaves the committed round's
+                        // files intact — commit before collect).
+                        let wait = rb.wait();
+                        if wait.is_leader()
+                            && !all_dead.load(Ordering::Acquire)
+                            && !degraded.load(Ordering::Acquire)
+                        {
+                            if let Some(dir) = &dp.checkpoint_dir {
+                                match save_dp_meta(dir, round + 1, n) {
+                                    Ok(()) => {
+                                        for i in 0..n {
+                                            std::fs::remove_file(dp_replica_path(
+                                                dir, i, round,
+                                            ))
+                                            .ok();
+                                        }
+                                    }
+                                    Err(e) => eprintln!(
+                                        "warning: data-parallel meta write failed: {e:#}"
+                                    ),
+                                }
                             }
                         }
                     }
                     if let Some(e) = thread_err {
                         return Err(e);
                     }
-                    let final_theta = trainer.device_params()?;
-                    let eval = if ri == 0 {
-                        let (cost, correct) = trainer.evaluate_on(eval_set)?;
-                        Some((cost, correct / eval_set.n.max(1) as f32))
+                    // Late failures (after the last barrier) still go
+                    // through die() so the alive flags, quarantine and
+                    // telemetry stay honest; a sibling that already ran
+                    // its reporter election may miss the update (no
+                    // barrier remains to order it), costing at worst an
+                    // absent eval — never a wrong one.
+                    let final_theta = match trainer.device_params() {
+                        Ok(theta) => theta,
+                        Err(e) => {
+                            die(e, &mut thread_err);
+                            return Err(thread_err.take().expect("die records the error"));
+                        }
+                    };
+                    // The first live replica measures the synchronized
+                    // parameters (replica 0's job unless it died).
+                    let reporter = (0..n).find(|&i| alive[i].load(Ordering::Acquire));
+                    let eval = if reporter == Some(ri) {
+                        match trainer.evaluate_on(eval_set) {
+                            Ok((cost, correct)) => {
+                                Some((cost, correct / eval_set.n.max(1) as f32))
+                            }
+                            Err(e) => {
+                                die(e, &mut thread_err);
+                                return Err(thread_err.take().expect("die records the error"));
+                            }
+                        }
                     } else {
                         None
                     };
@@ -295,22 +497,36 @@ pub fn train_data_parallel(
     });
 
     let mut per_replica = Vec::with_capacity(n);
+    let mut failed_replicas = Vec::new();
     let mut final_params = Vec::new();
     let mut eval = None;
     for (ri, outcome) in outcomes.into_iter().enumerate() {
-        let (result, theta, replica_eval) =
-            outcome.with_context(|| format!("data-parallel replica {ri}"))?;
-        if ri == 0 {
-            final_params = theta;
-            eval = replica_eval;
+        match outcome {
+            Ok((result, theta, replica_eval)) => {
+                if final_params.is_empty() {
+                    final_params = theta;
+                }
+                if replica_eval.is_some() {
+                    eval = replica_eval;
+                }
+                per_replica.push(result);
+            }
+            Err(e) => {
+                failed_replicas.push((ri, format!("{e:#}")));
+                per_replica.push(TrainResult::default());
+            }
         }
-        per_replica.push(result);
+    }
+    if failed_replicas.len() == n {
+        let (ri, msg) = &failed_replicas[0];
+        bail!("all {n} data-parallel replicas failed; replica {ri}: {msg}");
     }
     let total_cost_evals = per_replica.iter().map(|r| r.cost_evals).sum();
     Ok(DataParallelResult {
         replicas: n,
-        rounds_run: dp.rounds,
+        rounds_run: dp.rounds - start_round,
         per_replica,
+        failed_replicas,
         final_params,
         eval,
         total_cost_evals,
@@ -322,7 +538,7 @@ pub fn train_data_parallel(
 mod tests {
     use super::*;
     use crate::datasets::xor;
-    use crate::device::{HardwareDevice, NativeDevice};
+    use crate::device::{FlakyConfig, FlakyDevice, HardwareDevice, NativeDevice};
     use crate::optim::init_params_uniform;
     use crate::rng::Rng;
 
@@ -356,6 +572,7 @@ mod tests {
         assert_eq!(res.replicas, 3);
         assert_eq!(res.rounds_run, 3);
         assert_eq!(res.per_replica.len(), 3);
+        assert!(res.failed_replicas.is_empty());
         for r in &res.per_replica {
             assert_eq!(r.steps_run, 300);
             assert!(r.cost_evals > 0);
@@ -437,5 +654,94 @@ mod tests {
         )
         .unwrap_err();
         assert!(err.to_string().contains("non-empty"), "{err:#}");
+    }
+
+    #[test]
+    fn quarantined_device_is_planned_around() {
+        // A pool carrying a known-bad device completes on the healthy
+        // ones: the run plans for in_rotation() replicas, so lease_many
+        // never waits on the quarantined slot.
+        let pool = DevicePool::new(vec![xor_device(6), xor_device(7), xor_device(8)]);
+        pool.quarantine(1, "known bad").unwrap();
+        let data = xor();
+        let cfg = MgdConfig { eta: 0.5, amplitude: 0.05, seed: 2, ..Default::default() };
+        let dp = DataParallelConfig {
+            rounds: 2,
+            steps_per_round: 40,
+            lease_timeout: Duration::from_secs(5),
+            ..Default::default()
+        };
+        let res =
+            train_data_parallel(&pool, &data, &data, cfg, &dp, &Telemetry::null()).unwrap();
+        assert_eq!(res.replicas, 2, "must plan for the in-rotation fleet only");
+        assert!(res.failed_replicas.is_empty());
+        assert!(res.eval.is_some());
+        // The quarantined slot was never leased.
+        assert_eq!(pool.lease_counts()[1], 0);
+    }
+
+    #[test]
+    fn midrun_replica_failure_degrades_instead_of_deadlocking() {
+        // Replica 1's device dies mid-round (its 151st cost measurement
+        // fails, ~step 75 of round 1); the other two replicas finish all
+        // 3 rounds and the failed slot ends quarantined.
+        let broken = {
+            let mut dev = NativeDevice::new(&[2, 2, 1], 1);
+            let mut rng = Rng::new(40);
+            let mut theta = vec![0f32; 9];
+            init_params_uniform(&mut rng, &mut theta, 1.0);
+            dev.set_params(&theta).unwrap();
+            Box::new(FlakyDevice::new(Box::new(dev), FlakyConfig {
+                fail_after: Some(150),
+                ..Default::default()
+            })) as Box<dyn HardwareDevice>
+        };
+        let pool = DevicePool::new(vec![xor_device(41), broken, xor_device(42)]);
+        let data = xor();
+        let cfg = MgdConfig { eta: 0.5, amplitude: 0.05, seed: 4, ..Default::default() };
+        let dp = DataParallelConfig { rounds: 3, steps_per_round: 100, ..Default::default() };
+        let res =
+            train_data_parallel(&pool, &data, &data, cfg, &dp, &Telemetry::null()).unwrap();
+        assert_eq!(res.replicas, 3);
+        assert_eq!(res.failed_replicas.len(), 1);
+        assert_eq!(res.failed_replicas[0].0, 1);
+        assert!(res.failed_replicas[0].1.contains("injected fault"));
+        // Survivors trained to completion.
+        assert_eq!(res.per_replica[0].steps_run, 300);
+        assert_eq!(res.per_replica[2].steps_run, 300);
+        assert!(res.eval.is_some());
+        use crate::fleet::pool::HealthState;
+        assert_eq!(pool.health_of(1).unwrap(), HealthState::Quarantined);
+        // All devices (including the broken one) returned to their slots.
+        assert_eq!(pool.size(), 3);
+        assert_eq!(pool.in_rotation(), 2);
+    }
+
+    #[test]
+    fn all_replicas_failing_is_an_error_not_a_hang() {
+        let broken = |seed: u64| {
+            let mut dev = NativeDevice::new(&[2, 2, 1], 1);
+            let mut rng = Rng::new(seed);
+            let mut theta = vec![0f32; 9];
+            init_params_uniform(&mut rng, &mut theta, 1.0);
+            dev.set_params(&theta).unwrap();
+            Box::new(FlakyDevice::new(Box::new(dev), FlakyConfig {
+                fail_after: Some(0),
+                ..Default::default()
+            })) as Box<dyn HardwareDevice>
+        };
+        let pool = DevicePool::new(vec![broken(1), broken(2)]);
+        let data = xor();
+        let dp = DataParallelConfig { rounds: 2, steps_per_round: 20, ..Default::default() };
+        let err = train_data_parallel(
+            &pool,
+            &data,
+            &data,
+            MgdConfig::default(),
+            &dp,
+            &Telemetry::null(),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("all 2"), "{err:#}");
     }
 }

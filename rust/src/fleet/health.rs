@@ -1,0 +1,216 @@
+//! Heartbeat monitor: a background thread that keeps the pool's health
+//! state honest.
+//!
+//! The pool's health model ([`crate::fleet::pool`]) is passive — it only
+//! learns about a device when a job happens to run there.  A flaky remote
+//! chip that nobody is currently training on, or a session wedged in a
+//! device call, goes unnoticed until it wedges a `lease_many` barrier.
+//! The monitor closes that gap with two active checks per tick:
+//!
+//! 1. **Idle-slot probes** — every free slot is leased for one
+//!    [`HardwareDevice::healthcheck`] (a `Ping` round trip for
+//!    [`crate::device::RemoteDevice`], a no-op for in-process devices).
+//!    Failures feed [`DevicePool::report_failure`] (suspect →
+//!    quarantine); successes feed [`DevicePool::report_success`], which
+//!    also auto-reinstates a quarantined device after
+//!    [`crate::fleet::pool::HealthPolicy::reinstate_after`] consecutive
+//!    healthy probes — quarantine is a cooldown, not a death sentence.
+//! 2. **Stale-lease revocation** — leases held past
+//!    [`HealthConfig::max_lease_age`] are revoked
+//!    ([`DevicePool::revoke_stale`]): the slot leaves rotation now, and
+//!    the device stays quarantined when the stuck holder finally lets
+//!    go.  Combine with
+//!    [`crate::device::RemoteDevice::set_io_timeout`] so the stuck call
+//!    itself terminates.
+//!
+//! The monitor never touches a busy, healthy slot: `try_lease_slot` is
+//! non-blocking, so heartbeats steal no device time from training.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::device::HardwareDevice;
+use crate::fleet::pool::DevicePool;
+
+/// Heartbeat-monitor knobs.
+#[derive(Debug, Clone)]
+pub struct HealthConfig {
+    /// Time between heartbeat sweeps.
+    pub interval: Duration,
+    /// Revoke leases held longer than this (`None` = never revoke —
+    /// jobs of unbounded length are legitimate in a farm that sizes its
+    /// own work).
+    pub max_lease_age: Option<Duration>,
+}
+
+impl Default for HealthConfig {
+    fn default() -> Self {
+        HealthConfig { interval: Duration::from_secs(5), max_lease_age: None }
+    }
+}
+
+/// Handle to a running heartbeat monitor; stops (and joins) on
+/// [`HealthMonitor::stop`] or drop.
+pub struct HealthMonitor {
+    stop: Arc<AtomicBool>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl HealthMonitor {
+    /// Spawn the monitor thread over `pool`.
+    pub fn start(pool: Arc<DevicePool>, cfg: HealthConfig) -> HealthMonitor {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_flag = stop.clone();
+        let thread = std::thread::Builder::new()
+            .name("fleet-health".to_string())
+            .spawn(move || run_monitor(&pool, &cfg, &stop_flag))
+            .expect("spawning fleet health monitor thread");
+        HealthMonitor { stop, thread: Some(thread) }
+    }
+
+    /// Signal the monitor to exit and wait for it.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(thread) = self.thread.take() {
+            let _ = thread.join();
+        }
+    }
+}
+
+impl Drop for HealthMonitor {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn run_monitor(pool: &Arc<DevicePool>, cfg: &HealthConfig, stop: &AtomicBool) {
+    while !stop.load(Ordering::Acquire) {
+        sweep(pool, cfg);
+        // Sleep in short slices so stop() returns promptly even with a
+        // long interval.
+        let mut remaining = cfg.interval;
+        while remaining > Duration::ZERO && !stop.load(Ordering::Acquire) {
+            let slice = remaining.min(Duration::from_millis(20));
+            std::thread::sleep(slice);
+            remaining = remaining.saturating_sub(slice);
+        }
+    }
+}
+
+/// One heartbeat pass over every slot.
+fn sweep(pool: &Arc<DevicePool>, cfg: &HealthConfig) {
+    if let Some(max_age) = cfg.max_lease_age {
+        pool.revoke_stale(max_age);
+    }
+    for slot in 0..pool.size() {
+        // Free slot (healthy or quarantined): probe it.  Busy slot: the
+        // revocation check above already covered it.
+        let Some(mut lease) = pool.try_lease_slot(slot) else { continue };
+        match lease.device().healthcheck() {
+            Ok(()) => {
+                drop(lease);
+                pool.report_success(slot);
+            }
+            Err(e) => {
+                drop(lease);
+                pool.report_failure(slot, &format!("healthcheck: {e:#}"));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{FlakyConfig, FlakyDevice, NativeDevice};
+    use crate::fleet::pool::{HealthPolicy, HealthState};
+    use crate::fleet::telemetry::Telemetry;
+    use std::time::Instant;
+
+    fn wait_for(pool: &Arc<DevicePool>, slot: usize, want: HealthState) {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            if pool.health_of(slot).unwrap() == want {
+                return;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "slot {slot} never reached {want:?} (now {:?})",
+                pool.health_of(slot).unwrap()
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    #[test]
+    fn heartbeat_quarantines_a_device_that_fails_healthchecks() {
+        let flaky: Box<dyn HardwareDevice> = Box::new(FlakyDevice::new(
+            Box::new(NativeDevice::new(&[2, 2, 1], 1)),
+            FlakyConfig { fail_healthcheck: true, ..Default::default() },
+        ));
+        let healthy: Box<dyn HardwareDevice> = Box::new(NativeDevice::new(&[2, 2, 1], 1));
+        let pool = DevicePool::with_policy(
+            vec![flaky, healthy],
+            HealthPolicy { quarantine_after: 2, reinstate_after: 0 },
+            Telemetry::null(),
+        );
+        let monitor = HealthMonitor::start(
+            pool.clone(),
+            HealthConfig { interval: Duration::from_millis(5), max_lease_age: None },
+        );
+        wait_for(&pool, 0, HealthState::Quarantined);
+        assert_eq!(pool.health_of(1).unwrap(), HealthState::Healthy);
+        // Rotation leases now skip the quarantined device entirely.
+        let lease = pool.try_lease().unwrap();
+        assert_eq!(lease.slot(), 1);
+        drop(lease);
+        monitor.stop();
+    }
+
+    #[test]
+    fn heartbeat_reinstates_a_recovered_device() {
+        // Healthchecks pass; a manually quarantined device earns its way
+        // back after `reinstate_after` consecutive good probes.
+        let dev: Box<dyn HardwareDevice> = Box::new(NativeDevice::new(&[2, 2, 1], 1));
+        let pool = DevicePool::with_policy(
+            vec![dev],
+            HealthPolicy { quarantine_after: 3, reinstate_after: 2 },
+            Telemetry::null(),
+        );
+        pool.quarantine(0, "operator pulled it").unwrap();
+        let monitor = HealthMonitor::start(
+            pool.clone(),
+            HealthConfig { interval: Duration::from_millis(5), max_lease_age: None },
+        );
+        wait_for(&pool, 0, HealthState::Healthy);
+        monitor.stop();
+    }
+
+    #[test]
+    fn stale_leases_are_revoked_by_the_monitor() {
+        let dev: Box<dyn HardwareDevice> = Box::new(NativeDevice::new(&[2, 2, 1], 1));
+        let pool = DevicePool::new(vec![dev]);
+        let held = pool.lease(Duration::from_secs(1)).unwrap();
+        let monitor = HealthMonitor::start(
+            pool.clone(),
+            HealthConfig {
+                interval: Duration::from_millis(5),
+                max_lease_age: Some(Duration::from_millis(10)),
+            },
+        );
+        wait_for(&pool, 0, HealthState::Quarantined);
+        assert!(pool.stats().revocations >= 1);
+        // Stop the monitor before releasing: its healthy probes would
+        // legitimately auto-reinstate the device (default policy), and
+        // this test is about the revocation itself.
+        monitor.stop();
+        drop(held);
+        assert_eq!(pool.in_rotation(), 0, "revoked device stays out of rotation");
+    }
+}

@@ -16,6 +16,9 @@
 //! - [`aggregate`] — data-parallel MGD: one replica per device, periodic
 //!   parameter averaging across the fleet (§3.5's device-variation story
 //!   at fleet scale).
+//! - [`health`] — the heartbeat monitor: idle-slot healthchecks (`Ping`
+//!   for remote devices), quarantine/reinstate transitions, stale-lease
+//!   revocation.
 //! - [`telemetry`] — a JSONL event stream over the in-repo
 //!   [`crate::json`] substrate.
 //!
@@ -50,6 +53,7 @@
 //! so local jobs and remote sessions share one hardware arbiter.
 
 pub mod aggregate;
+pub mod health;
 pub mod pool;
 pub mod scheduler;
 pub mod telemetry;
@@ -58,17 +62,20 @@ pub mod worker;
 pub use aggregate::{
     average_params, train_data_parallel, DataParallelConfig, DataParallelResult,
 };
-pub use pool::{DeviceLease, DevicePool, PoolStats};
+pub use health::{HealthConfig, HealthMonitor};
+pub use pool::{DeviceLease, DevicePool, HealthPolicy, HealthState, PoolStats};
 pub use scheduler::{
     run_batch, DeviceJobFn, JobHandle, JobOutcome, JobQueue, JobSpec, Priority, Scheduler,
     SchedulerConfig,
 };
 pub use telemetry::{Event, Telemetry};
 
+use std::path::PathBuf;
 use std::sync::Arc;
 
 use anyhow::Result;
 
+use crate::coordinator::checkpoint::{train_checkpointed, CheckpointConfig};
 use crate::coordinator::{MgdConfig, MgdTrainer, ScheduleKind, TrainOptions, TrainResult};
 use crate::datasets::Dataset;
 use crate::device::HardwareDevice;
@@ -87,13 +94,23 @@ impl Fleet {
         cfg: SchedulerConfig,
         telemetry: Arc<Telemetry>,
     ) -> Fleet {
-        let pool = DevicePool::new(devices);
+        // The pool shares the fleet's telemetry so health transitions
+        // (quarantine, reinstatement, revocation) land in the same JSONL
+        // stream as job lifecycles.
+        let pool = DevicePool::with_policy(devices, HealthPolicy::default(), telemetry.clone());
         telemetry.emit(Event::PoolCreated {
             devices: pool.size(),
             descriptions: pool.descriptions(),
         });
         let scheduler = Scheduler::new(pool.clone(), telemetry.clone(), cfg);
         Fleet { pool, scheduler, telemetry }
+    }
+
+    /// Start a heartbeat monitor over this fleet's pool (see
+    /// [`health::HealthMonitor`]).  Keep the handle alive for the
+    /// duration of the run; it stops on drop.
+    pub fn start_health_monitor(&self, cfg: HealthConfig) -> HealthMonitor {
+        HealthMonitor::start(self.pool.clone(), cfg)
     }
 
     /// The underlying device pool (shareable with the TCP server).
@@ -149,6 +166,45 @@ impl Fleet {
             Box::new(move |dev| {
                 let mut trainer = MgdTrainer::new(dev, &dataset, cfg, ScheduleKind::Cyclic);
                 trainer.train_batched(&opts, eval_set.as_deref(), probes_per_call)
+            }),
+        )
+    }
+
+    /// [`Fleet::submit_training_windowed`] with on-disk checkpoints: the
+    /// job checkpoints every `checkpoint_every` steps into `dir` and
+    /// checkpoints-on-failure, and — because the job closure re-runs on
+    /// retry ([`JobSpec::max_retries`]) — a retried job *resumes from
+    /// the failure checkpoint on its new device* instead of restarting
+    /// at step 0.  Set `resume` to also pick up a checkpoint left by an
+    /// earlier process (kill-and-resume).
+    #[allow(clippy::too_many_arguments)]
+    pub fn submit_training_checkpointed(
+        &self,
+        spec: JobSpec,
+        dataset: Arc<Dataset>,
+        eval_set: Option<Arc<Dataset>>,
+        cfg: MgdConfig,
+        opts: TrainOptions,
+        probes_per_call: usize,
+        dir: PathBuf,
+        checkpoint_every: u64,
+        resume: bool,
+    ) -> Result<JobHandle> {
+        let mut first_attempt = true;
+        self.submit(
+            spec,
+            Box::new(move |dev| {
+                // Later attempts always resume: the checkpoint written by
+                // the failed attempt (checkpoint-on-failure) is this
+                // job's own state, not a stale foreign file.
+                let ck = CheckpointConfig {
+                    dir: dir.clone(),
+                    every_steps: checkpoint_every,
+                    resume: resume || !first_attempt,
+                };
+                first_attempt = false;
+                let mut trainer = MgdTrainer::new(dev, &dataset, cfg, ScheduleKind::Cyclic);
+                train_checkpointed(&mut trainer, &opts, eval_set.as_deref(), probes_per_call, &ck)
             }),
         )
     }

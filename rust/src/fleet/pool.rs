@@ -1,4 +1,5 @@
-//! A concurrent pool of [`HardwareDevice`]s with leased, exclusive access.
+//! A concurrent pool of [`HardwareDevice`]s with leased, exclusive access
+//! and per-slot health monitoring.
 //!
 //! Hardware is a serially-shared resource (the paper's chip sits on one lab
 //! bench), but a *fleet* of chips is not: §6 ends with many hardware copies
@@ -12,6 +13,27 @@
 //! worker threads can own them.  Leasing blocks with a timeout, so a stuck
 //! session cannot deadlock the fleet silently — the waiter gets a clean
 //! error instead.
+//!
+//! # Health model
+//!
+//! Real hardware flakes: §3.5's premise is that MGD trains through
+//! imperfect devices, but a device that *hangs* or errors on every call
+//! must leave rotation or it wedges every `lease_many` barrier.  Each slot
+//! carries a [`HealthState`]:
+//!
+//! - **Healthy** — in rotation.
+//! - **Suspect** — recently failed ([`DevicePool::report_failure`]), still
+//!   in rotation; recovers to Healthy on the next success.
+//! - **Quarantined** — out of rotation: skipped by `lease`, `try_lease`
+//!   and `lease_many`.  Entered explicitly ([`DevicePool::quarantine`]),
+//!   automatically after [`HealthPolicy::quarantine_after`] consecutive
+//!   failures, or via lease revocation ([`DevicePool::revoke_stale`]).
+//!   Left via [`DevicePool::reinstate`] — manually, or automatically by
+//!   the heartbeat monitor ([`crate::fleet::health`]) after
+//!   [`HealthPolicy::reinstate_after`] consecutive healthcheck successes.
+//!
+//! Every transition is emitted on the pool's telemetry stream as a
+//! `device_health` JSONL event.
 
 use std::ops::{Deref, DerefMut};
 use std::sync::{Arc, Condvar, Mutex};
@@ -20,6 +42,45 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Result};
 
 use crate::device::HardwareDevice;
+use crate::fleet::telemetry::{Event, Telemetry};
+
+/// Per-slot health state (see the module docs for the transitions).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HealthState {
+    Healthy,
+    Suspect,
+    Quarantined,
+}
+
+impl HealthState {
+    /// Stable token used in telemetry events and logs.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            HealthState::Healthy => "healthy",
+            HealthState::Suspect => "suspect",
+            HealthState::Quarantined => "quarantined",
+        }
+    }
+}
+
+/// Automatic health-transition thresholds.
+#[derive(Debug, Clone, Copy)]
+pub struct HealthPolicy {
+    /// Consecutive reported failures before a slot is auto-quarantined
+    /// (`0` = never auto-quarantine; explicit calls still work).
+    pub quarantine_after: u32,
+    /// Consecutive reported successes while quarantined before a slot is
+    /// auto-reinstated (`0` = reinstate manually only).  Only the
+    /// heartbeat monitor reaches quarantined devices, so this is the
+    /// "flaky device recovered" path.
+    pub reinstate_after: u32,
+}
+
+impl Default for HealthPolicy {
+    fn default() -> Self {
+        HealthPolicy { quarantine_after: 3, reinstate_after: 2 }
+    }
+}
 
 /// Aggregate pool counters (monotonic since pool creation).
 #[derive(Debug, Default, Clone, Copy)]
@@ -30,6 +91,10 @@ pub struct PoolStats {
     pub lease_timeouts: u64,
     /// Total time lease callers spent waiting for a free device.
     pub total_wait: Duration,
+    /// Slots quarantined (auto or explicit; re-entries count).
+    pub quarantines: u64,
+    /// Leases revoked for exceeding the revocation deadline.
+    pub revocations: u64,
 }
 
 struct Slot {
@@ -39,6 +104,13 @@ struct Slot {
     description: String,
     /// Leases granted against this slot.
     leases: u64,
+    health: HealthState,
+    consecutive_failures: u32,
+    consecutive_successes: u32,
+    /// When the current lease was granted (`None` while free).
+    leased_at: Option<Instant>,
+    /// The current lease has been revoked; cleared when it returns.
+    revoked: bool,
 }
 
 /// The state every handle and lease shares.
@@ -46,6 +118,8 @@ struct PoolShared {
     slots: Mutex<Vec<Slot>>,
     available: Condvar,
     stats: Mutex<PoolStats>,
+    policy: HealthPolicy,
+    telemetry: Arc<Telemetry>,
 }
 
 impl PoolShared {
@@ -60,8 +134,32 @@ impl PoolShared {
         let mut slots = self.slots.lock().unwrap();
         debug_assert!(slots[slot].device.is_none(), "double release of slot {slot}");
         slots[slot].device = Some(device);
+        slots[slot].leased_at = None;
+        slots[slot].revoked = false;
         drop(slots);
         self.available.notify_one();
+    }
+
+    /// Set a slot's health with the lock held; returns the event to emit
+    /// once the lock is dropped (`None` if the state did not change).
+    fn set_health(
+        slots: &mut [Slot],
+        stats: &Mutex<PoolStats>,
+        slot: usize,
+        to: HealthState,
+        reason: Option<String>,
+    ) -> Option<Event> {
+        if slots[slot].health == to {
+            return None;
+        }
+        slots[slot].health = to;
+        if to == HealthState::Quarantined {
+            stats.lock().unwrap().quarantines += 1;
+        }
+        if to != HealthState::Quarantined {
+            slots[slot].consecutive_successes = 0;
+        }
+        Some(Event::DeviceHealth { slot, state: to.as_str(), reason })
     }
 }
 
@@ -74,13 +172,33 @@ pub struct DevicePool {
 }
 
 impl DevicePool {
-    /// Build a pool owning the given devices.
+    /// Build a pool owning the given devices (default health policy, no
+    /// telemetry).
     pub fn new(devices: Vec<Box<dyn HardwareDevice>>) -> Arc<DevicePool> {
+        DevicePool::with_policy(devices, HealthPolicy::default(), Telemetry::null())
+    }
+
+    /// Build a pool with explicit health thresholds and a telemetry sink
+    /// for `device_health` / `lease_revoked` events.
+    pub fn with_policy(
+        devices: Vec<Box<dyn HardwareDevice>>,
+        policy: HealthPolicy,
+        telemetry: Arc<Telemetry>,
+    ) -> Arc<DevicePool> {
         let slots = devices
             .into_iter()
             .map(|d| {
                 let description = d.describe();
-                Slot { device: Some(d), description, leases: 0 }
+                Slot {
+                    device: Some(d),
+                    description,
+                    leases: 0,
+                    health: HealthState::Healthy,
+                    consecutive_failures: 0,
+                    consecutive_successes: 0,
+                    leased_at: None,
+                    revoked: false,
+                }
             })
             .collect();
         Arc::new(DevicePool {
@@ -88,18 +206,52 @@ impl DevicePool {
                 slots: Mutex::new(slots),
                 available: Condvar::new(),
                 stats: Mutex::new(PoolStats::default()),
+                policy,
+                telemetry,
             }),
         })
     }
 
-    /// Number of devices the pool owns (leased or not).
+    /// Number of devices the pool owns (leased or not, any health).
     pub fn size(&self) -> usize {
         self.shared.slots.lock().unwrap().len()
     }
 
-    /// Devices currently available for lease.
+    /// Devices currently available for lease (free *and* in rotation).
     pub fn available(&self) -> usize {
-        self.shared.slots.lock().unwrap().iter().filter(|s| s.device.is_some()).count()
+        self.shared
+            .slots
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|s| s.device.is_some() && s.health != HealthState::Quarantined)
+            .count()
+    }
+
+    /// Devices in rotation (not quarantined), leased or free.  This is
+    /// the fleet size a data-parallel run should plan for.
+    pub fn in_rotation(&self) -> usize {
+        self.shared
+            .slots
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|s| s.health != HealthState::Quarantined)
+            .count()
+    }
+
+    /// Slots in rotation and not in `excluded` (a job's retry exclusion
+    /// list).  `0` means a lease with that exclusion list can never be
+    /// granted.
+    pub fn eligible_count(&self, excluded: &[usize]) -> usize {
+        self.shared
+            .slots
+            .lock()
+            .unwrap()
+            .iter()
+            .enumerate()
+            .filter(|(i, s)| s.health != HealthState::Quarantined && !excluded.contains(i))
+            .count()
     }
 
     /// Cached per-device descriptions.
@@ -112,36 +264,97 @@ impl DevicePool {
         self.shared.slots.lock().unwrap().iter().map(|s| s.leases).collect()
     }
 
+    /// Per-slot health states (index-aligned with descriptions).
+    pub fn health(&self) -> Vec<HealthState> {
+        self.shared.slots.lock().unwrap().iter().map(|s| s.health).collect()
+    }
+
+    /// One slot's health state.
+    pub fn health_of(&self, slot: usize) -> Result<HealthState> {
+        let slots = self.shared.slots.lock().unwrap();
+        match slots.get(slot) {
+            Some(s) => Ok(s.health),
+            None => bail!("slot {slot} out of range (pool of {})", slots.len()),
+        }
+    }
+
+    /// How long the slot's current lease has been out (`None` if free).
+    pub fn lease_age(&self, slot: usize) -> Option<Duration> {
+        self.shared.slots.lock().unwrap().get(slot)?.leased_at.map(|t| t.elapsed())
+    }
+
     /// Snapshot of the aggregate counters.
     pub fn stats(&self) -> PoolStats {
         *self.shared.stats.lock().unwrap()
     }
 
-    /// Lease a device if one is free right now.
-    pub fn try_lease(&self) -> Option<DeviceLease> {
-        let mut slots = self.shared.slots.lock().unwrap();
-        let idx = slots.iter().position(|s| s.device.is_some())?;
+    fn grant(&self, slots: &mut [Slot], idx: usize, waited: Duration) -> DeviceLease {
         let device = slots[idx].device.take();
         slots[idx].leases += 1;
-        drop(slots);
-        self.shared.record_grant(Duration::ZERO);
-        Some(DeviceLease { shared: self.shared.clone(), slot: idx, device })
+        slots[idx].leased_at = Some(Instant::now());
+        self.shared.record_grant(waited);
+        DeviceLease { shared: self.shared.clone(), slot: idx, device }
+    }
+
+    /// Lease a device if one is free and in rotation right now.
+    pub fn try_lease(&self) -> Option<DeviceLease> {
+        let mut slots = self.shared.slots.lock().unwrap();
+        let idx = slots
+            .iter()
+            .position(|s| s.device.is_some() && s.health != HealthState::Quarantined)?;
+        Some(self.grant(&mut slots, idx, Duration::ZERO))
+    }
+
+    /// Lease a *specific* slot if it is free right now — health state
+    /// ignored.  This is the heartbeat monitor's probe path: quarantined
+    /// devices must stay reachable so a recovered device can be observed
+    /// and reinstated.
+    pub fn try_lease_slot(&self, slot: usize) -> Option<DeviceLease> {
+        let mut slots = self.shared.slots.lock().unwrap();
+        if slot >= slots.len() || slots[slot].device.is_none() {
+            return None;
+        }
+        Some(self.grant(&mut slots, slot, Duration::ZERO))
     }
 
     /// Lease a device, waiting up to `timeout` for one to free up.
     pub fn lease(&self, timeout: Duration) -> Result<DeviceLease> {
+        self.lease_excluding(&[], timeout)
+    }
+
+    /// [`DevicePool::lease`] that additionally skips the slots in
+    /// `excluded` (a retried job must not land back on the device that
+    /// just failed it).  Fails fast — without consuming the timeout —
+    /// when no eligible slot exists at all.
+    pub fn lease_excluding(&self, excluded: &[usize], timeout: Duration) -> Result<DeviceLease> {
         let start = Instant::now();
         let mut slots = self.shared.slots.lock().unwrap();
         loop {
-            if let Some(idx) = slots.iter().position(|s| s.device.is_some()) {
-                let device = slots[idx].device.take();
-                slots[idx].leases += 1;
-                drop(slots);
-                self.shared.record_grant(start.elapsed());
-                return Ok(DeviceLease { shared: self.shared.clone(), slot: idx, device });
+            if let Some(idx) = slots.iter().enumerate().position(|(i, s)| {
+                s.device.is_some()
+                    && s.health != HealthState::Quarantined
+                    && !excluded.contains(&i)
+            }) {
+                let lease = self.grant(&mut slots, idx, start.elapsed());
+                return Ok(lease);
             }
             if slots.is_empty() {
                 bail!("device pool is empty — nothing to lease");
+            }
+            let eligible = slots
+                .iter()
+                .enumerate()
+                .filter(|(i, s)| s.health != HealthState::Quarantined && !excluded.contains(i))
+                .count();
+            if eligible == 0 {
+                let n = slots.len();
+                let quarantined =
+                    slots.iter().filter(|s| s.health == HealthState::Quarantined).count();
+                bail!(
+                    "no eligible device in rotation (pool of {n}: {quarantined} quarantined, \
+                     {} excluded)",
+                    excluded.len()
+                );
             }
             let waited = start.elapsed();
             if waited >= timeout {
@@ -149,7 +362,8 @@ impl DevicePool {
                 drop(slots);
                 self.shared.stats.lock().unwrap().lease_timeouts += 1;
                 bail!(
-                    "device lease timed out after {:.1}s ({n} devices, all leased out)",
+                    "device lease timed out after {:.1}s ({n} devices, all eligible ones \
+                     leased out)",
                     timeout.as_secs_f64()
                 );
             }
@@ -159,17 +373,206 @@ impl DevicePool {
         }
     }
 
-    /// Lease `n` devices at once (the data-parallel entry point).  Waits up
-    /// to `timeout` overall; on failure, already-acquired leases are
-    /// released by drop.
+    /// Lease `n` devices at once (the data-parallel entry point),
+    /// skipping quarantined slots.  Waits up to `timeout` overall; on
+    /// failure every already-acquired lease is released *before* the
+    /// error returns, so a partial acquisition never starves concurrent
+    /// callers for the lifetime of an error value.
     pub fn lease_many(&self, n: usize, timeout: Duration) -> Result<Vec<DeviceLease>> {
         let start = Instant::now();
         let mut leases = Vec::with_capacity(n);
         for _ in 0..n {
             let remaining = timeout.saturating_sub(start.elapsed());
-            leases.push(self.lease(remaining)?);
+            match self.lease(remaining) {
+                Ok(lease) => leases.push(lease),
+                Err(e) => {
+                    // Explicit partial-acquisition cleanup: return every
+                    // held device to the pool now, then wake all waiters
+                    // (each drop notifies one; a barriered caller may
+                    // need several).
+                    let held = leases.len();
+                    drop(leases);
+                    self.shared.available.notify_all();
+                    return Err(e.context(format!(
+                        "lease_many: acquired {held} of {n} devices, then failed \
+                         (partial leases released)"
+                    )));
+                }
+            }
         }
         Ok(leases)
+    }
+
+    /// Pull a slot out of rotation.  Legal while the device is leased
+    /// out: the lease finishes its work, but the device is skipped by
+    /// every subsequent rotation lease until reinstated.
+    pub fn quarantine(&self, slot: usize, reason: &str) -> Result<()> {
+        let mut slots = self.shared.slots.lock().unwrap();
+        if slot >= slots.len() {
+            bail!("slot {slot} out of range (pool of {})", slots.len());
+        }
+        let event = PoolShared::set_health(
+            &mut slots,
+            &self.shared.stats,
+            slot,
+            HealthState::Quarantined,
+            Some(reason.to_string()),
+        );
+        drop(slots);
+        if let Some(e) = event {
+            self.shared.telemetry.emit(e);
+        }
+        Ok(())
+    }
+
+    /// Return a quarantined slot to rotation (health → Healthy, counters
+    /// cleared) and wake waiters that may now be served.
+    pub fn reinstate(&self, slot: usize) -> Result<()> {
+        let mut slots = self.shared.slots.lock().unwrap();
+        if slot >= slots.len() {
+            bail!("slot {slot} out of range (pool of {})", slots.len());
+        }
+        slots[slot].consecutive_failures = 0;
+        slots[slot].consecutive_successes = 0;
+        let event = PoolShared::set_health(
+            &mut slots,
+            &self.shared.stats,
+            slot,
+            HealthState::Healthy,
+            None,
+        );
+        drop(slots);
+        if let Some(e) = event {
+            self.shared.telemetry.emit(e);
+        }
+        self.shared.available.notify_all();
+        Ok(())
+    }
+
+    /// Record a failure observed on a slot's device (a failed job, a
+    /// failed healthcheck).  Transitions Healthy → Suspect immediately
+    /// and Suspect → Quarantined after
+    /// [`HealthPolicy::quarantine_after`] consecutive failures.
+    pub fn report_failure(&self, slot: usize, reason: &str) {
+        let mut slots = self.shared.slots.lock().unwrap();
+        if slot >= slots.len() {
+            return;
+        }
+        slots[slot].consecutive_failures += 1;
+        slots[slot].consecutive_successes = 0;
+        let failures = slots[slot].consecutive_failures;
+        let to = if self.shared.policy.quarantine_after > 0
+            && failures >= self.shared.policy.quarantine_after
+        {
+            HealthState::Quarantined
+        } else {
+            HealthState::Suspect
+        };
+        // Never *promote* a quarantined slot back to Suspect on failure.
+        let event = if slots[slot].health == HealthState::Quarantined {
+            None
+        } else {
+            PoolShared::set_health(
+                &mut slots,
+                &self.shared.stats,
+                slot,
+                to,
+                Some(format!("{failures} consecutive failure(s): {reason}")),
+            )
+        };
+        drop(slots);
+        if let Some(e) = event {
+            self.shared.telemetry.emit(e);
+        }
+    }
+
+    /// Record a success observed on a slot's device.  Suspect slots
+    /// recover to Healthy; quarantined slots count toward automatic
+    /// reinstatement ([`HealthPolicy::reinstate_after`]).
+    pub fn report_success(&self, slot: usize) {
+        let mut slots = self.shared.slots.lock().unwrap();
+        if slot >= slots.len() {
+            return;
+        }
+        slots[slot].consecutive_failures = 0;
+        let mut reinstated = false;
+        let event = match slots[slot].health {
+            HealthState::Suspect => PoolShared::set_health(
+                &mut slots,
+                &self.shared.stats,
+                slot,
+                HealthState::Healthy,
+                None,
+            ),
+            HealthState::Quarantined if self.shared.policy.reinstate_after > 0 => {
+                slots[slot].consecutive_successes += 1;
+                if slots[slot].consecutive_successes >= self.shared.policy.reinstate_after {
+                    reinstated = true;
+                    PoolShared::set_health(
+                        &mut slots,
+                        &self.shared.stats,
+                        slot,
+                        HealthState::Healthy,
+                        None,
+                    )
+                } else {
+                    None
+                }
+            }
+            _ => None,
+        };
+        drop(slots);
+        if let Some(e) = event {
+            self.shared.telemetry.emit(e);
+        }
+        if reinstated {
+            self.shared.available.notify_all();
+        }
+    }
+
+    /// Revoke every lease held longer than `max_age`: the slot is
+    /// quarantined on the spot (so barriers and rotation leases stop
+    /// counting on it) and the device stays out of rotation when the
+    /// stuck holder eventually returns it.  Returns the revoked slots.
+    ///
+    /// Revocation cannot interrupt the holder's in-flight device call —
+    /// safe Rust cannot cancel a blocking call from outside — but for
+    /// remote devices an I/O deadline
+    /// ([`crate::device::RemoteDevice::set_io_timeout`]) bounds the call
+    /// itself, and the revocation here bounds the *fleet's* exposure.
+    pub fn revoke_stale(&self, max_age: Duration) -> Vec<usize> {
+        let mut slots = self.shared.slots.lock().unwrap();
+        let mut revoked = Vec::new();
+        let mut events = Vec::new();
+        for (i, slot) in slots.iter_mut().enumerate() {
+            let Some(leased_at) = slot.leased_at else { continue };
+            let held = leased_at.elapsed();
+            if held <= max_age || slot.revoked {
+                continue;
+            }
+            slot.revoked = true;
+            revoked.push(i);
+            events.push(Event::LeaseRevoked { slot: i, held_secs: held.as_secs_f64() });
+        }
+        for &i in &revoked {
+            if let Some(e) = PoolShared::set_health(
+                &mut slots,
+                &self.shared.stats,
+                i,
+                HealthState::Quarantined,
+                Some("lease revoked (held past deadline)".to_string()),
+            ) {
+                events.push(e);
+            }
+        }
+        if !revoked.is_empty() {
+            self.shared.stats.lock().unwrap().revocations += revoked.len() as u64;
+        }
+        drop(slots);
+        for e in events {
+            self.shared.telemetry.emit(e);
+        }
+        revoked
     }
 }
 
@@ -299,5 +702,101 @@ mod tests {
         drop(leases);
         assert_eq!(pool.available(), 3);
         assert!(pool.lease_many(4, Duration::from_millis(30)).is_err());
+    }
+
+    #[test]
+    fn lease_many_releases_partial_acquisition_on_timeout() {
+        let pool = pool_of(3);
+        let held = pool.lease(Duration::from_secs(1)).unwrap();
+        // Wants 3, can get 2: must time out AND return both immediately.
+        let err = pool.lease_many(3, Duration::from_millis(40)).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("acquired 2 of 3"), "{msg}");
+        assert_eq!(pool.available(), 2, "partial leases must be released on failure");
+        // A fresh lease succeeds without waiting on anything.
+        let again = pool.lease(Duration::from_millis(10)).unwrap();
+        drop(again);
+        drop(held);
+        assert_eq!(pool.available(), 3);
+    }
+
+    #[test]
+    fn quarantined_slot_is_skipped_by_rotation_leases() {
+        let pool = pool_of(2);
+        pool.quarantine(0, "test").unwrap();
+        assert_eq!(pool.in_rotation(), 1);
+        assert_eq!(pool.available(), 1);
+        let lease = pool.try_lease().unwrap();
+        assert_eq!(lease.slot(), 1, "rotation lease must skip the quarantined slot");
+        drop(lease);
+        // With every in-rotation slot excluded/quarantined, lease fails
+        // fast with a distinctive error (no timeout consumed).
+        pool.quarantine(1, "test").unwrap();
+        let t0 = Instant::now();
+        let err = pool.lease(Duration::from_secs(30)).unwrap_err();
+        assert!(t0.elapsed() < Duration::from_secs(5), "must fail fast");
+        assert!(err.to_string().contains("no eligible device"), "{err:#}");
+        // The specific-slot probe path still reaches the device.
+        assert!(pool.try_lease_slot(0).is_some());
+        // Reinstatement returns it to rotation.
+        pool.reinstate(0).unwrap();
+        assert_eq!(pool.health_of(0).unwrap(), HealthState::Healthy);
+        assert!(pool.try_lease().is_some());
+    }
+
+    #[test]
+    fn lease_excluding_skips_excluded_slots() {
+        let pool = pool_of(3);
+        let lease = pool.lease_excluding(&[0, 1], Duration::from_secs(1)).unwrap();
+        assert_eq!(lease.slot(), 2);
+        assert_eq!(pool.eligible_count(&[0, 1]), 1);
+        assert_eq!(pool.eligible_count(&[0, 1, 2]), 0);
+        let err = pool.lease_excluding(&[0, 1, 2], Duration::from_secs(30)).unwrap_err();
+        assert!(err.to_string().contains("no eligible device"), "{err:#}");
+    }
+
+    #[test]
+    fn failure_reports_drive_suspect_then_quarantine() {
+        let pool = pool_of(1); // default policy: quarantine after 3
+        pool.report_failure(0, "boom");
+        assert_eq!(pool.health_of(0).unwrap(), HealthState::Suspect);
+        pool.report_success(0);
+        assert_eq!(pool.health_of(0).unwrap(), HealthState::Healthy);
+        // Success reset the streak: three MORE failures are needed.
+        pool.report_failure(0, "boom");
+        pool.report_failure(0, "boom");
+        assert_eq!(pool.health_of(0).unwrap(), HealthState::Suspect);
+        pool.report_failure(0, "boom");
+        assert_eq!(pool.health_of(0).unwrap(), HealthState::Quarantined);
+        assert_eq!(pool.stats().quarantines, 1);
+        // Default policy auto-reinstates after 2 successes (heartbeat path).
+        pool.report_success(0);
+        assert_eq!(pool.health_of(0).unwrap(), HealthState::Quarantined);
+        pool.report_success(0);
+        assert_eq!(pool.health_of(0).unwrap(), HealthState::Healthy);
+    }
+
+    #[test]
+    fn revoke_stale_quarantines_the_held_slot() {
+        let pool = pool_of(2);
+        let held = pool.lease(Duration::from_secs(1)).unwrap();
+        let slot = held.slot();
+        std::thread::sleep(Duration::from_millis(20));
+        let revoked = pool.revoke_stale(Duration::from_millis(1));
+        assert_eq!(revoked, vec![slot]);
+        assert_eq!(pool.health_of(slot).unwrap(), HealthState::Quarantined);
+        assert_eq!(pool.stats().revocations, 1);
+        // Idempotent while the same lease is still out.
+        assert!(pool.revoke_stale(Duration::from_millis(1)).is_empty());
+        // The device returns to its slot on drop but stays out of rotation.
+        drop(held);
+        assert_eq!(pool.in_rotation(), 1);
+        let lease = pool.try_lease().unwrap();
+        assert_ne!(lease.slot(), slot);
+        // Fresh leases are not retroactively revoked.
+        drop(lease);
+        pool.reinstate(slot).unwrap();
+        let _fresh = pool.lease(Duration::from_secs(1)).unwrap();
+        assert!(pool.revoke_stale(Duration::from_secs(3600)).is_empty());
     }
 }

@@ -183,8 +183,14 @@ impl<J> JobQueue<J> {
 }
 
 /// What a submitted job runs against its leased device.
+///
+/// `FnMut`, not `FnOnce`: a job with a retry budget may run more than
+/// once (on a different device each time), so the closure must be
+/// re-callable.  Training closures satisfy this naturally — each call
+/// builds a fresh trainer from owned config — and closures that resume
+/// from a checkpoint get retry-as-resume for free.
 pub type DeviceJobFn =
-    Box<dyn FnOnce(&mut dyn HardwareDevice) -> Result<TrainResult> + Send + 'static>;
+    Box<dyn FnMut(&mut dyn HardwareDevice) -> Result<TrainResult> + Send + 'static>;
 
 /// Submission metadata for a fleet job.
 #[derive(Debug, Clone)]
@@ -193,15 +199,25 @@ pub struct JobSpec {
     pub name: String,
     /// Scheduling priority.
     pub priority: Priority,
+    /// How many times a *failed* run may be retried on another device
+    /// (0 = fail on the first error, the pre-fault-tolerance behavior).
+    /// Each failed attempt excludes its device, so a retried job never
+    /// lands back on the slot that just failed it.
+    pub max_retries: u32,
 }
 
 impl JobSpec {
     pub fn named(name: impl Into<String>) -> JobSpec {
-        JobSpec { name: name.into(), priority: Priority::Normal }
+        JobSpec { name: name.into(), priority: Priority::Normal, max_retries: 0 }
     }
 
     pub fn with_priority(mut self, priority: Priority) -> JobSpec {
         self.priority = priority;
+        self
+    }
+
+    pub fn with_retries(mut self, max_retries: u32) -> JobSpec {
+        self.max_retries = max_retries;
         self
     }
 }
@@ -212,6 +228,10 @@ pub(crate) struct QueuedJob {
     pub(crate) spec: JobSpec,
     pub(crate) run: DeviceJobFn,
     pub(crate) done: mpsc::Sender<JobOutcome>,
+    /// Completed executions of the job body (0 until it first runs).
+    pub(crate) attempt: u32,
+    /// Slots this job failed on (skipped by retry leases).
+    pub(crate) excluded: Vec<usize>,
 }
 
 /// Everything known about a finished job.
@@ -219,12 +239,17 @@ pub(crate) struct QueuedJob {
 pub struct JobOutcome {
     pub job_id: u64,
     pub name: String,
-    /// Worker thread index that ran the job.
+    /// Worker thread index that ran (or gave up on) the job last.
     pub worker: usize,
-    /// Pool slot of the leased device (`None` if the lease itself failed).
+    /// Pool slot of the last real attempt's device (`None` if no device
+    /// was ever obtained).
     pub device_slot: Option<usize>,
-    /// Wall-clock the job spent running on its device (lease wait
-    /// excluded; a job that never got a device reports zero).
+    /// Times the job body actually executed (1 for a first-try success,
+    /// more after retries, 0 if no device was ever obtained).
+    pub attempts: u32,
+    /// Wall-clock the job spent running on its device for the *final*
+    /// attempt (lease wait excluded; a job that never got a device
+    /// reports zero).
     pub wall: Duration,
     /// The training outcome.
     pub result: Result<TrainResult>,
@@ -342,7 +367,10 @@ impl Scheduler {
         let (done, rx) = mpsc::channel();
         let name = spec.name.clone();
         let priority = spec.priority;
-        self.queue.push(priority, QueuedJob { id, spec, run, done })?;
+        self.queue.push(
+            priority,
+            QueuedJob { id, spec, run, done, attempt: 0, excluded: Vec::new() },
+        )?;
         // Emitted only after the push lands: a failed or blocked push must
         // not leave a phantom job in the telemetry stream.
         self.telemetry.emit(Event::JobQueued {

@@ -50,7 +50,21 @@ pub enum Event {
     /// The TCP session ended.
     SessionClosed { session: u64, requests: u64, ok: bool, error: Option<String> },
     /// A data-parallel round synchronized parameters across the fleet.
+    /// `replicas` counts the *live* replicas averaged this round (it
+    /// shrinks when the fleet degrades).
     RoundSynced { round: u64, replicas: usize, avg_param_norm: f64, secs: f64 },
+    /// A pool slot changed health state (healthy / suspect / quarantined).
+    DeviceHealth { slot: usize, state: &'static str, reason: Option<String> },
+    /// A lease held past the revocation deadline was revoked: the device
+    /// leaves rotation (quarantined) the moment it returns to the pool.
+    LeaseRevoked { slot: usize, held_secs: f64 },
+    /// A failed job re-entered the queue with its failing slot excluded.
+    JobRetried { job: u64, name: String, attempt: u32, excluded_slot: usize },
+    /// A data-parallel replica dropped out mid-run; the remaining
+    /// replicas continue at the barrier (N → N−1 degradation).
+    ReplicaFailed { replica: usize, slot: usize, error: String },
+    /// A training checkpoint landed on disk.
+    CheckpointSaved { path: String, step: u64 },
 }
 
 impl Event {
@@ -64,6 +78,11 @@ impl Event {
             Event::SessionOpened { .. } => "session_opened",
             Event::SessionClosed { .. } => "session_closed",
             Event::RoundSynced { .. } => "round_synced",
+            Event::DeviceHealth { .. } => "device_health",
+            Event::LeaseRevoked { .. } => "lease_revoked",
+            Event::JobRetried { .. } => "job_retried",
+            Event::ReplicaFailed { .. } => "replica_failed",
+            Event::CheckpointSaved { .. } => "checkpoint_saved",
         }
     }
 
@@ -118,6 +137,32 @@ impl Event {
                 m.insert("replicas".into(), Json::Num(*replicas as f64));
                 m.insert("avg_param_norm".into(), Json::Num(*avg_param_norm));
                 m.insert("secs".into(), Json::Num(*secs));
+            }
+            Event::DeviceHealth { slot, state, reason } => {
+                m.insert("slot".into(), Json::Num(*slot as f64));
+                m.insert("state".into(), Json::Str((*state).into()));
+                if let Some(r) = reason {
+                    m.insert("reason".into(), Json::Str(r.clone()));
+                }
+            }
+            Event::LeaseRevoked { slot, held_secs } => {
+                m.insert("slot".into(), Json::Num(*slot as f64));
+                m.insert("held_secs".into(), Json::Num(*held_secs));
+            }
+            Event::JobRetried { job, name, attempt, excluded_slot } => {
+                m.insert("job".into(), Json::Num(*job as f64));
+                m.insert("name".into(), Json::Str(name.clone()));
+                m.insert("attempt".into(), Json::Num(*attempt as f64));
+                m.insert("excluded_slot".into(), Json::Num(*excluded_slot as f64));
+            }
+            Event::ReplicaFailed { replica, slot, error } => {
+                m.insert("replica".into(), Json::Num(*replica as f64));
+                m.insert("slot".into(), Json::Num(*slot as f64));
+                m.insert("error".into(), Json::Str(error.clone()));
+            }
+            Event::CheckpointSaved { path, step } => {
+                m.insert("path".into(), Json::Str(path.clone()));
+                m.insert("step".into(), Json::Num(*step as f64));
             }
         }
         Json::Obj(m)
@@ -269,6 +314,11 @@ mod tests {
             Event::SessionOpened { session: 9, peer: "1.2.3.4:5".into() },
             Event::SessionClosed { session: 9, requests: 4, ok: true, error: None },
             Event::RoundSynced { round: 2, replicas: 4, avg_param_norm: 0.5, secs: 0.01 },
+            Event::DeviceHealth { slot: 1, state: "quarantined", reason: Some("timeout".into()) },
+            Event::LeaseRevoked { slot: 0, held_secs: 12.5 },
+            Event::JobRetried { job: 3, name: "n".into(), attempt: 1, excluded_slot: 2 },
+            Event::ReplicaFailed { replica: 2, slot: 2, error: "boom".into() },
+            Event::CheckpointSaved { path: "ck/replica-0.json".into(), step: 4000 },
         ];
         for e in events {
             let line = e.to_json().dump();

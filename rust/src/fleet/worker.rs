@@ -1,10 +1,21 @@
-//! The fleet worker loop: pop a job, lease a device, train, report.
+//! The fleet worker loop: pop a job, lease a device, train, report —
+//! and retry failed jobs on a different device.
 //!
 //! One worker thread maps to one in-flight job; the pool decides which
 //! physical device backs it.  With `workers == devices` (the default) the
 //! fleet saturates the hardware; with `workers > devices` jobs overlap
 //! their queue wait with other jobs' device time — the lease, not the
 //! thread, is the scarce resource.
+//!
+//! # Fault handling
+//!
+//! Every job outcome feeds the pool's health model: a success clears a
+//! slot's failure streak, a failure counts toward quarantine.  A failed
+//! job with retry budget left
+//! ([`crate::fleet::scheduler::JobSpec::max_retries`]) re-enters the
+//! queue with the failing slot on its exclusion list, so the retry lands
+//! on different hardware; a job whose exclusion list covers every
+//! in-rotation slot fails cleanly instead of cycling forever.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -24,63 +35,87 @@ pub(crate) fn run_worker(
     lease_timeout: Duration,
 ) {
     'jobs: while let Some(job) = queue.pop() {
-        // Lease before starting the job.  A lease timeout is not a job
-        // failure when devices exist — the timeout bounds *one wait*, not
-        // the job's life (workers > devices is an advertised mode, and
-        // graceful shutdown promises queued jobs drain).  On timeout the
-        // job is requeued so higher-priority work gets in front; if the
-        // queue is closed or full (requeue is non-blocking — a worker
-        // must never block on its own queue), the worker holds the job
-        // and retries the lease.  Only an empty pool fails a job.
         let mut pending = job;
-        let mut lease = loop {
-            match pool.lease(lease_timeout) {
-                Ok(lease) => break lease,
-                Err(e) => {
-                    if pool.size() == 0 {
-                        fail_job(worker_id, pending, e, telemetry);
-                        continue 'jobs;
-                    }
-                    match queue.try_push(pending.spec.priority, pending) {
+        // A job may run several times on this worker: retries whose
+        // requeue fails (queue closed or full — a worker must never
+        // block on its own queue) are executed in place.
+        'attempts: loop {
+            // Lease before starting the job.  A lease timeout is not a
+            // job failure while eligible devices exist — the timeout
+            // bounds *one wait*, not the job's life (workers > devices
+            // is an advertised mode, and graceful shutdown promises
+            // queued jobs drain).  On timeout the job is requeued so
+            // higher-priority work gets in front; if the requeue is
+            // refused, the worker holds the job and retries the lease.
+            // Only an exhausted eligible set fails a job outright.
+            let mut lease = loop {
+                if pool.eligible_count(&pending.excluded) == 0 {
+                    let error = anyhow!(
+                        "no eligible device for job: pool of {}, {} in rotation, {} excluded \
+                         after failures",
+                        pool.size(),
+                        pool.in_rotation(),
+                        pending.excluded.len()
+                    );
+                    fail_job(worker_id, pending, error, telemetry);
+                    continue 'jobs;
+                }
+                match pool.lease_excluding(&pending.excluded, lease_timeout) {
+                    Ok(lease) => break lease,
+                    Err(_timeout) => match queue.try_push(pending.spec.priority, pending) {
                         Ok(_) => continue 'jobs,
                         Err(job_back) => pending = job_back,
+                    },
+                }
+            };
+            telemetry.emit(Event::JobStarted {
+                job: pending.id,
+                name: pending.spec.name.clone(),
+                worker: worker_id,
+            });
+            let start = Instant::now();
+            let slot = lease.slot();
+            // A panicking job must not kill the worker: later queued jobs
+            // would hang in `JobHandle::wait` with no error.  The panic
+            // becomes this attempt's Err; the lease drop still returns
+            // the device (whatever mid-training state the panic left it
+            // in — jobs own re-initialization via set_params anyway).
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                (pending.run)(lease.device())
+            }))
+            .unwrap_or_else(|panic| Err(anyhow!("job panicked: {}", panic_message(&panic))));
+            drop(lease);
+            pending.attempt += 1;
+            let wall = start.elapsed();
+            match result {
+                Ok(result) => {
+                    pool.report_success(slot);
+                    finish_job(worker_id, pending, Some(slot), wall, Ok(result), telemetry);
+                    continue 'jobs;
+                }
+                Err(error) => {
+                    pool.report_failure(slot, &format!("{error:#}"));
+                    if pending.attempt <= pending.spec.max_retries {
+                        pending.excluded.push(slot);
+                        telemetry.emit(Event::JobRetried {
+                            job: pending.id,
+                            name: pending.spec.name.clone(),
+                            attempt: pending.attempt,
+                            excluded_slot: slot,
+                        });
+                        match queue.try_push(pending.spec.priority, pending) {
+                            Ok(_) => continue 'jobs,
+                            Err(job_back) => {
+                                pending = job_back;
+                                continue 'attempts;
+                            }
+                        }
                     }
+                    finish_job(worker_id, pending, Some(slot), wall, Err(error), telemetry);
+                    continue 'jobs;
                 }
             }
-        };
-        let QueuedJob { id, spec, run, done } = pending;
-        telemetry.emit(Event::JobStarted { job: id, name: spec.name.clone(), worker: worker_id });
-        let start = Instant::now();
-        let slot = lease.slot();
-        // A panicking job must not kill the worker: later queued jobs
-        // would hang in `JobHandle::wait` with no error.  The panic
-        // becomes this job's Err; the lease drop still returns the device
-        // (whatever mid-training state the panic left it in — jobs own
-        // re-initialization via set_params anyway).
-        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            run(lease.device())
-        }))
-        .unwrap_or_else(|panic| Err(anyhow!("job panicked: {}", panic_message(&panic))));
-        drop(lease);
-        let wall = start.elapsed();
-        telemetry.emit(Event::JobFinished {
-            job: id,
-            name: spec.name.clone(),
-            worker: worker_id,
-            ok: result.is_ok(),
-            secs: wall.as_secs_f64(),
-            cost_evals: result.as_ref().map(|r| r.cost_evals).unwrap_or(0),
-            error: result.as_ref().err().map(|e| format!("{e:#}")),
-        });
-        // The submitter may have dropped its handle; that is not an error.
-        let _ = done.send(JobOutcome {
-            job_id: id,
-            name: spec.name,
-            worker: worker_id,
-            device_slot: Some(slot),
-            wall,
-            result,
-        });
+        }
     }
 }
 
@@ -95,27 +130,52 @@ fn panic_message(panic: &(dyn std::any::Any + Send)) -> String {
     }
 }
 
-/// Report a job that could not obtain a device at all.
-fn fail_job(worker_id: usize, job: QueuedJob, error: anyhow::Error, telemetry: &Telemetry) {
-    let QueuedJob { id, spec, run: _, done } = job;
-    telemetry.emit(Event::JobStarted { job: id, name: spec.name.clone(), worker: worker_id });
+/// Deliver a job's terminal outcome (one `job_finished` event per job,
+/// however many attempts it took).
+fn finish_job(
+    worker_id: usize,
+    job: QueuedJob,
+    device_slot: Option<usize>,
+    wall: Duration,
+    result: anyhow::Result<crate::coordinator::TrainResult>,
+    telemetry: &Telemetry,
+) {
+    let QueuedJob { id, spec, run: _, done, attempt, excluded: _ } = job;
     telemetry.emit(Event::JobFinished {
         job: id,
         name: spec.name.clone(),
         worker: worker_id,
-        ok: false,
-        secs: 0.0,
-        cost_evals: 0,
-        error: Some(format!("{error:#}")),
+        ok: result.is_ok(),
+        secs: wall.as_secs_f64(),
+        cost_evals: result.as_ref().map(|r| r.cost_evals).unwrap_or(0),
+        error: result.as_ref().err().map(|e| format!("{e:#}")),
     });
+    // The submitter may have dropped its handle; that is not an error.
     let _ = done.send(JobOutcome {
         job_id: id,
         name: spec.name,
         worker: worker_id,
-        device_slot: None,
-        wall: Duration::ZERO,
-        result: Err(error),
+        device_slot,
+        attempts: attempt,
+        wall,
+        result,
     });
+}
+
+/// Report a job that could not obtain a (further) device.  For a job
+/// that never ran, emit the `job_started` its `job_finished` pairs
+/// with; a retried job already emitted one per attempt, and its outcome
+/// keeps the slot of the last real attempt.
+fn fail_job(worker_id: usize, job: QueuedJob, error: anyhow::Error, telemetry: &Telemetry) {
+    if job.attempt == 0 {
+        telemetry.emit(Event::JobStarted {
+            job: job.id,
+            name: job.spec.name.clone(),
+            worker: worker_id,
+        });
+    }
+    let last_slot = job.excluded.last().copied();
+    finish_job(worker_id, job, last_slot, Duration::ZERO, Err(error), telemetry);
 }
 
 #[cfg(test)]
@@ -123,7 +183,7 @@ mod tests {
     use super::*;
     use crate::coordinator::{MgdConfig, MgdTrainer, ScheduleKind, TrainOptions};
     use crate::datasets::xor;
-    use crate::device::{HardwareDevice, NativeDevice};
+    use crate::device::{FlakyConfig, FlakyDevice, HardwareDevice, NativeDevice};
     use crate::fleet::scheduler::{JobSpec, Priority, Scheduler, SchedulerConfig};
     use crate::optim::init_params_uniform;
     use crate::rng::Rng;
@@ -136,6 +196,15 @@ mod tests {
         init_params_uniform(&mut rng, &mut theta, 1.0);
         dev.set_params(&theta).unwrap();
         Box::new(dev)
+    }
+
+    fn broken_device() -> Box<dyn HardwareDevice> {
+        let mut dev = NativeDevice::new(&[2, 2, 1], 1);
+        dev.set_params(&[0.1; 9]).unwrap();
+        Box::new(FlakyDevice::new(Box::new(dev), FlakyConfig {
+            fail_after: Some(0),
+            ..Default::default()
+        }))
     }
 
     #[test]
@@ -166,6 +235,7 @@ mod tests {
             assert_eq!(res.steps_run, 200);
             assert!(res.cost_evals > 0);
             assert!(outcome.device_slot.is_some());
+            assert_eq!(outcome.attempts, 1);
         }
         scheduler.shutdown().unwrap();
         assert_eq!(pool.available(), 2, "all devices must be back in the pool");
@@ -192,6 +262,71 @@ mod tests {
         let outcome = h.wait_outcome().unwrap();
         assert!(outcome.result.is_err());
         assert!(outcome.device_slot.is_none());
+        assert_eq!(outcome.attempts, 0);
+        scheduler.shutdown().unwrap();
+    }
+
+    #[test]
+    fn failed_job_retries_on_another_device() {
+        // Slot 0 fails every cost call; slot 1 is healthy.  One worker, so
+        // the first lease deterministically lands on slot 0.
+        let pool = DevicePool::new(vec![broken_device(), xor_device(5)]);
+        let scheduler = Scheduler::new(
+            pool.clone(),
+            Telemetry::null(),
+            SchedulerConfig { workers: 1, ..Default::default() },
+        );
+        let data = Arc::new(xor());
+        let cfg = MgdConfig { eta: 1.0, amplitude: 0.05, seed: 3, ..Default::default() };
+        let opts = TrainOptions { max_steps: 50, ..Default::default() };
+        let h = scheduler
+            .submit(
+                JobSpec::named("survivor").with_retries(1),
+                Box::new(move |dev| {
+                    let mut tr = MgdTrainer::new(dev, &data, cfg, ScheduleKind::Cyclic);
+                    tr.train(&opts, None)
+                }),
+            )
+            .unwrap();
+        let outcome = h.wait_outcome().unwrap();
+        assert_eq!(outcome.attempts, 2, "first attempt fails on the broken slot");
+        assert_eq!(outcome.device_slot, Some(1));
+        assert_eq!(outcome.result.unwrap().steps_run, 50);
+        scheduler.shutdown().unwrap();
+        // The broken slot carries a failure mark; the healthy one is clean.
+        use crate::fleet::pool::HealthState;
+        assert_eq!(pool.health_of(0).unwrap(), HealthState::Suspect);
+        assert_eq!(pool.health_of(1).unwrap(), HealthState::Healthy);
+    }
+
+    #[test]
+    fn retry_budget_exhausts_into_a_clean_error() {
+        // Only one device and it is broken: the retry excludes it, the
+        // exclusion list then covers the whole pool, and the job fails
+        // with the "no eligible device" diagnosis instead of cycling.
+        let pool = DevicePool::new(vec![broken_device()]);
+        let scheduler = Scheduler::new(
+            pool,
+            Telemetry::null(),
+            SchedulerConfig { workers: 1, ..Default::default() },
+        );
+        let data = Arc::new(xor());
+        let cfg = MgdConfig::default();
+        let opts = TrainOptions { max_steps: 10, ..Default::default() };
+        let h = scheduler
+            .submit(
+                JobSpec::named("doomed").with_retries(3),
+                Box::new(move |dev| {
+                    let mut tr = MgdTrainer::new(dev, &data, cfg, ScheduleKind::Cyclic);
+                    tr.train(&opts, None)
+                }),
+            )
+            .unwrap();
+        let outcome = h.wait_outcome().unwrap();
+        let err = outcome.result.unwrap_err();
+        assert!(err.to_string().contains("no eligible device"), "{err:#}");
+        assert_eq!(outcome.attempts, 1, "one real attempt before the pool was exhausted");
+        assert_eq!(outcome.device_slot, Some(0), "the last real attempt's slot is kept");
         scheduler.shutdown().unwrap();
     }
 

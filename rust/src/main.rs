@@ -68,6 +68,10 @@ TRAIN OPTIONS:
                     (cost_many window; default 1 = serial; windows are
                     clamped to min(tau-x, tau-theta), so raise those to
                     actually batch K probes)
+  --checkpoint-dir D  loop mode: write checkpoint.json here (versioned,
+                    bit-exact resume; see README "Checkpoint format")
+  --checkpoint-every N  steps between checkpoints (default steps/10)
+  --resume          restore from --checkpoint-dir before training
 
 FLEET OPTIONS:
   --devices N       pool size                      (default 4)
@@ -83,6 +87,13 @@ FLEET OPTIONS:
   --telemetry T     JSONL event stream ('-' = stderr, else a file path)
   --probes K        perturbation probes per device call (default 1;
                     clamped to min(tau-x, tau-theta) per window)
+  --retries N       farm: per-job retry budget on other devices (default 2)
+  --checkpoint-dir D  dp: per-replica snapshots + round meta; farm:
+                    per-job checkpoint subdirectories
+  --checkpoint-every N  farm: steps between job checkpoints
+                    (default steps/10)
+  --resume          resume dp from the round meta / farm jobs from their
+                    checkpoints
   --eta F --amplitude F --tau-x N --tau-theta N --tau-p N --perturb P
 
 SERVE OPTIONS:
@@ -94,7 +105,7 @@ const GLOBAL_OPTS: &[&str] = &["artifacts", "results", "configs", "scale", "seed
 
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    let args = Args::parse(argv, &["help"])?;
+    let args = Args::parse(argv, &["help", "resume"])?;
     if args.has_flag("help") || args.positional().is_empty() {
         print!("{USAGE}");
         return Ok(());
@@ -132,6 +143,7 @@ fn main() -> Result<()> {
             known.extend([
                 "model", "mode", "device", "steps", "eta", "amplitude", "tau-x", "tau-theta",
                 "tau-p", "perturb", "sigma-cost", "sigma-update", "eval-every", "probes",
+                "checkpoint-dir", "checkpoint-every", "resume",
             ]);
             args.check_known(&known)?;
             let cfg = MgdConfig {
@@ -147,15 +159,30 @@ fn main() -> Result<()> {
                 },
                 seed: ctx.seed,
             };
+            let steps = args.u64_or("steps", 10_000)?;
+            let checkpoint = match args.get("checkpoint-dir") {
+                Some(dir) => Some(mgd::coordinator::CheckpointConfig {
+                    dir: PathBuf::from(dir),
+                    every_steps: args.u64_or("checkpoint-every", (steps / 10).max(1))?,
+                    resume: args.has_flag("resume"),
+                }),
+                None => {
+                    if args.has_flag("resume") {
+                        bail!("--resume needs --checkpoint-dir");
+                    }
+                    None
+                }
+            };
             train(
                 &ctx,
                 &args.str_or("model", "xor221"),
                 &args.str_or("mode", "onchip"),
                 &args.str_or("device", "pjrt"),
-                args.u64_or("steps", 10_000)?,
+                steps,
                 cfg,
                 args.u64_or("eval-every", 1000)?,
                 args.usize_or("probes", 1)?.max(1),
+                checkpoint,
             )
         }
         "fleet" => {
@@ -163,7 +190,8 @@ fn main() -> Result<()> {
             known.extend([
                 "devices", "model", "mode", "rounds", "steps-per-round", "jobs", "steps",
                 "defects", "batch", "samples", "telemetry", "probes", "eta", "amplitude",
-                "tau-x", "tau-theta", "tau-p", "perturb",
+                "tau-x", "tau-theta", "tau-p", "perturb", "retries", "checkpoint-dir",
+                "checkpoint-every", "resume",
             ]);
             args.check_known(&known)?;
             let cfg = MgdConfig {
@@ -276,7 +304,11 @@ fn train(
     cfg: MgdConfig,
     eval_every: u64,
     probes: usize,
+    checkpoint: Option<mgd::coordinator::CheckpointConfig>,
 ) -> Result<()> {
+    if checkpoint.is_some() && mode != "loop" {
+        bail!("--checkpoint-dir supports --mode loop (the discrete trainer owns the state)");
+    }
     let (train_set, eval_set) = model_dataset(model, ctx.seed)?;
     let opts = TrainOptions {
         max_steps: steps,
@@ -310,7 +342,24 @@ fn train(
                 dev.describe()
             );
             let mut tr = MgdTrainer::new(&mut *dev, &train_set, cfg, ScheduleKind::Cyclic);
-            let res = tr.train_batched(&opts, Some(&eval_set), probes)?;
+            let res = match &checkpoint {
+                Some(ck) => {
+                    println!(
+                        "checkpointing to {} every {} steps (resume: {})",
+                        ck.dir.display(),
+                        ck.every_steps,
+                        ck.resume
+                    );
+                    mgd::coordinator::train_checkpointed(
+                        &mut tr,
+                        &opts,
+                        Some(&eval_set),
+                        probes,
+                        ck,
+                    )?
+                }
+                None => tr.train_batched(&opts, Some(&eval_set), probes)?,
+            };
             report(&res, &eval_set);
         }
         "analog" => {
@@ -418,15 +467,30 @@ fn fleet_cmd(ctx: &RunContext, args: &Args, cfg: MgdConfig) -> Result<()> {
                 rounds: args.u64_or("rounds", 8)?.max(1),
                 steps_per_round: args.u64_or("steps-per-round", 1000)?.max(1),
                 probes_per_call: probes,
+                checkpoint_dir: args.get("checkpoint-dir").map(PathBuf::from),
+                resume: args.has_flag("resume"),
                 ..Default::default()
             };
+            if dp.resume && dp.checkpoint_dir.is_none() {
+                bail!("--resume needs --checkpoint-dir");
+            }
             let fleet = Fleet::new(devices, SchedulerConfig::default(), telemetry);
             println!(
                 "data-parallel: {} rounds x {} steps/round, averaging across {n_devices} replicas",
                 dp.rounds, dp.steps_per_round
             );
+            if let Some(dir) = &dp.checkpoint_dir {
+                println!(
+                    "checkpointing replicas to {} at every round (resume: {})",
+                    dir.display(),
+                    dp.resume
+                );
+            }
             let res = fleet.train_data_parallel(&train_set, &eval_set, cfg, &dp)?;
             println!("rounds run: {}", res.rounds_run);
+            for (ri, err) in &res.failed_replicas {
+                println!("replica {ri} FAILED (fleet degraded): {err}");
+            }
             println!("total device cost evaluations: {}", res.total_cost_evals);
             println!(
                 "wall: {:.2}s ({:.0} cost-evals/sec across the fleet)",
@@ -445,8 +509,18 @@ fn fleet_cmd(ctx: &RunContext, args: &Args, cfg: MgdConfig) -> Result<()> {
         "farm" => {
             let steps = args.u64_or("steps", 10_000)?;
             let n_jobs = args.usize_or("jobs", 2 * n_devices)?.max(1);
+            let retries = args.u64_or("retries", 2)? as u32;
+            let ckpt_dir = args.get("checkpoint-dir").map(PathBuf::from);
+            let ckpt_every = args.u64_or("checkpoint-every", (steps / 10).max(1))?;
+            let resume = args.has_flag("resume");
+            if resume && ckpt_dir.is_none() {
+                bail!("--resume needs --checkpoint-dir");
+            }
             let fleet = Fleet::new(devices, SchedulerConfig::default(), telemetry);
-            println!("farm: {n_jobs} jobs x {steps} steps over {n_devices} devices");
+            println!(
+                "farm: {n_jobs} jobs x {steps} steps over {n_devices} devices \
+                 ({retries} retries/job)"
+            );
             let train_arc = Arc::new(train_set);
             let eval_arc = Arc::new(eval_set);
             let t0 = std::time::Instant::now();
@@ -459,14 +533,29 @@ fn fleet_cmd(ctx: &RunContext, args: &Args, cfg: MgdConfig) -> Result<()> {
                         eval_every: (steps / 4).max(1),
                         ..Default::default()
                     };
-                    fleet.submit_training_windowed(
-                        JobSpec::named(format!("{model}-{j}")),
-                        train_arc.clone(),
-                        Some(eval_arc.clone()),
-                        job_cfg,
-                        opts,
-                        probes,
-                    )
+                    let name = format!("{model}-{j}");
+                    let spec = JobSpec::named(&name).with_retries(retries);
+                    match &ckpt_dir {
+                        Some(dir) => fleet.submit_training_checkpointed(
+                            spec,
+                            train_arc.clone(),
+                            Some(eval_arc.clone()),
+                            job_cfg,
+                            opts,
+                            probes,
+                            dir.join(format!("job-{name}")),
+                            ckpt_every,
+                            resume,
+                        ),
+                        None => fleet.submit_training_windowed(
+                            spec,
+                            train_arc.clone(),
+                            Some(eval_arc.clone()),
+                            job_cfg,
+                            opts,
+                            probes,
+                        ),
+                    }
                 })
                 .collect();
             let mut results = Vec::new();
@@ -474,10 +563,12 @@ fn fleet_cmd(ctx: &RunContext, args: &Args, cfg: MgdConfig) -> Result<()> {
                 let outcome = handle.wait_outcome()?;
                 let result = outcome.result?;
                 println!(
-                    "  job {:<18} worker {} slot {:?} steps {:>8} cost-evals {:>9} acc {}",
+                    "  job {:<18} worker {} slot {:?} attempts {} steps {:>8} \
+                     cost-evals {:>9} acc {}",
                     outcome.name,
                     outcome.worker,
                     outcome.device_slot,
+                    outcome.attempts,
                     result.steps_run,
                     result.cost_evals,
                     result

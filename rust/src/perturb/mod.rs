@@ -16,7 +16,9 @@
 //! perturbation pattern advances (Algorithm 1 line 8: perturbations update
 //! only when `t % τp == 0`); between updates the vector is held.
 
-use crate::rng::Rng;
+use anyhow::{bail, Result};
+
+use crate::rng::{Rng, RngState};
 
 /// Which perturbation family to use (mirrors Fig. 1c / Fig. 7).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -30,6 +32,19 @@ pub enum PerturbKind {
     /// Locally-generated random ±Δθ codes, statistically orthogonal
     /// (SPSA-style; the paper's preferred hardware-friendly choice).
     RademacherCode,
+}
+
+impl PerturbKind {
+    /// Canonical token (accepted by [`FromStr`](std::str::FromStr); used
+    /// by checkpoints and logs).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PerturbKind::Sinusoidal => "sinusoidal",
+            PerturbKind::SequentialFd => "sequential_fd",
+            PerturbKind::WalshCode => "walsh_code",
+            PerturbKind::RademacherCode => "rademacher_code",
+        }
+    }
 }
 
 impl std::str::FromStr for PerturbKind {
@@ -46,6 +61,31 @@ impl std::str::FromStr for PerturbKind {
     }
 }
 
+/// Serializable mutable state of a perturbation generator — the
+/// checkpoint/resume substrate.
+///
+/// A single union-style struct covers all four families (stateless
+/// families export the default).  Exactness matters: the Sinusoidal
+/// phasor recurrence accumulates floating-point state that a direct
+/// re-evaluation at step `t` would *not* reproduce bit-for-bit, and the
+/// Rademacher generator holds a drawn pattern plus an RNG mid-stream —
+/// both must survive a checkpoint for resume to be bit-identical.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PerturbState {
+    /// Rademacher: generator RNG mid-stream.
+    pub rng: Option<RngState>,
+    /// Rademacher: the held ±Δθ pattern of the current τp window.
+    pub current: Vec<f32>,
+    /// Rademacher: which τp window `current` belongs to.
+    pub current_window: Option<u64>,
+    /// Sinusoidal: phasor sine components per parameter.
+    pub sin: Vec<f64>,
+    /// Sinusoidal: phasor cosine components per parameter.
+    pub cos: Vec<f64>,
+    /// Sinusoidal: timestep the phasor state corresponds to.
+    pub state_t: Option<u64>,
+}
+
 /// A perturbation generator: fills `θ̃` for timestep `t`.
 ///
 /// Implementations must be deterministic in `(seed, t)` history so that
@@ -59,6 +99,22 @@ pub trait Perturbation: Send {
 
     /// The family, for logging.
     fn kind(&self) -> PerturbKind;
+
+    /// Export the mutable state (checkpointing).  Stateless families
+    /// (pure functions of `t`) return the default.
+    fn export_state(&self) -> PerturbState {
+        PerturbState::default()
+    }
+
+    /// Restore an exported state into a freshly constructed generator of
+    /// the same family and shape.  The default accepts only the default
+    /// (stateless) state.
+    fn import_state(&mut self, state: &PerturbState) -> Result<()> {
+        if *state != PerturbState::default() {
+            bail!("{:?} is stateless but the checkpoint carries generator state", self.kind());
+        }
+        Ok(())
+    }
 }
 
 /// Build a generator of the given family.
@@ -165,6 +221,30 @@ impl Perturbation for Sinusoidal {
 
     fn kind(&self) -> PerturbKind {
         PerturbKind::Sinusoidal
+    }
+
+    fn export_state(&self) -> PerturbState {
+        PerturbState {
+            sin: self.sin.clone(),
+            cos: self.cos.clone(),
+            state_t: self.state_t,
+            ..PerturbState::default()
+        }
+    }
+
+    fn import_state(&mut self, state: &PerturbState) -> Result<()> {
+        let p = self.freqs.len();
+        if state.sin.len() != p || state.cos.len() != p {
+            bail!(
+                "sinusoidal state has {}/{} phasor components, generator has {p} parameters",
+                state.sin.len(),
+                state.cos.len()
+            );
+        }
+        self.sin.copy_from_slice(&state.sin);
+        self.cos.copy_from_slice(&state.cos);
+        self.state_t = state.state_t;
+        Ok(())
     }
 }
 
@@ -321,6 +401,32 @@ impl Perturbation for RademacherCode {
     fn kind(&self) -> PerturbKind {
         PerturbKind::RademacherCode
     }
+
+    fn export_state(&self) -> PerturbState {
+        PerturbState {
+            rng: Some(self.rng.state()),
+            current: self.current.clone(),
+            current_window: self.current_window,
+            ..PerturbState::default()
+        }
+    }
+
+    fn import_state(&mut self, state: &PerturbState) -> Result<()> {
+        let Some(rng) = state.rng else {
+            bail!("rademacher state is missing the generator RNG");
+        };
+        if state.current.len() != self.current.len() {
+            bail!(
+                "rademacher state holds {} pattern values, generator has {} parameters",
+                state.current.len(),
+                self.current.len()
+            );
+        }
+        self.rng.set_state(rng);
+        self.current.copy_from_slice(&state.current);
+        self.current_window = state.current_window;
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -450,6 +556,53 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn state_roundtrip_is_bit_identical_for_every_kind() {
+        for kind in [
+            PerturbKind::Sinusoidal,
+            PerturbKind::SequentialFd,
+            PerturbKind::WalshCode,
+            PerturbKind::RademacherCode,
+        ] {
+            let p = 7;
+            let mut a = make(kind, p, 0.05, 3, 21);
+            let mut buf = vec![0f32; p];
+            // Advance mid-window (t = 10 with τp = 3) so held state and
+            // phasor recurrences are genuinely mid-stream.
+            for t in 0..11u64 {
+                a.fill(t, &mut buf);
+            }
+            let state = a.export_state();
+            let mut b = make(kind, p, 0.05, 3, 21);
+            b.import_state(&state).unwrap();
+            let mut wa = vec![0f32; p];
+            let mut wb = vec![0f32; p];
+            for t in 11..64u64 {
+                a.fill(t, &mut wa);
+                b.fill(t, &mut wb);
+                let bits_a: Vec<u32> = wa.iter().map(|v| v.to_bits()).collect();
+                let bits_b: Vec<u32> = wb.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(bits_a, bits_b, "{kind:?} diverged at t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn state_shape_mismatches_are_rejected() {
+        let mut gen = make(PerturbKind::RademacherCode, 4, 1.0, 1, 0);
+        let mut buf = vec![0f32; 4];
+        gen.fill(0, &mut buf);
+        let state = gen.export_state();
+        let mut wrong = make(PerturbKind::RademacherCode, 5, 1.0, 1, 0);
+        assert!(wrong.import_state(&state).is_err());
+        // A stateless family rejects foreign state…
+        let mut walsh = make(PerturbKind::WalshCode, 4, 1.0, 1, 0);
+        assert!(walsh.import_state(&state).is_err());
+        // …but accepts its own (default) export.
+        let own = walsh.export_state();
+        assert!(walsh.import_state(&own).is_ok());
     }
 
     #[test]

@@ -1,0 +1,316 @@
+//! Integration: fault tolerance and deterministic checkpoint/resume.
+//!
+//! The fleet's promises under failure, exercised end to end on
+//! `NativeDevice` (+ the `FlakyDevice` fault injector) — no artifacts, no
+//! PJRT, environment-independent:
+//!
+//! - crash-at-step-k + restore replays **bit-identically** to an
+//!   uninterrupted run, for all four perturbation families, with noise;
+//! - a data-parallel run resumes from its round meta bit-identically;
+//! - a checkpointed farm job that dies mid-run retries on another device
+//!   and *resumes* (not restarts), landing on the uninterrupted
+//!   trajectory;
+//! - the heartbeat monitor quarantines a failing device behind a live
+//!   TCP session while `Ping` keeps a healthy remote in rotation.
+
+use std::net::TcpListener;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use mgd::coordinator::{checkpoint, MgdConfig, MgdTrainer, ScheduleKind, TrainOptions};
+use mgd::datasets::xor;
+use mgd::device::server::{serve_pool, ServeOptions};
+use mgd::device::{
+    FlakyConfig, FlakyDevice, HardwareDevice, NativeDevice, RemoteDevice,
+};
+use mgd::fleet::{
+    train_data_parallel, DataParallelConfig, DevicePool, Fleet, HealthConfig, HealthMonitor,
+    HealthState, JobSpec, SchedulerConfig, Telemetry,
+};
+use mgd::noise::NoiseConfig;
+use mgd::optim::init_params_uniform;
+use mgd::perturb::PerturbKind;
+use mgd::rng::Rng;
+
+fn temp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "mgd-fault-test-{tag}-{}-{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    if dir.exists() {
+        std::fs::remove_dir_all(&dir).ok();
+    }
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A deterministically-initialized XOR device; every call with the same
+/// seed builds a bit-identical device (the checkpoint contract: devices
+/// are *reconstructed*, not serialized).
+fn xor_device(seed: u64) -> NativeDevice {
+    let mut dev = NativeDevice::new(&[2, 2, 1], 1);
+    let mut rng = Rng::new(seed);
+    let mut theta = vec![0f32; 9];
+    init_params_uniform(&mut rng, &mut theta, 1.0);
+    dev.set_params(&theta).unwrap();
+    dev
+}
+
+fn boxed_xor(seed: u64) -> Box<dyn HardwareDevice> {
+    Box::new(xor_device(seed))
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Crash-at-step-k + restore-into-a-fresh-process replays bit-identically
+/// to an uninterrupted run: same θ, same G, same cost_evals, and the
+/// post-resume steps keep producing bit-identical costs.  All four
+/// perturbation families, with cost and update noise active so the RNG
+/// stream is genuinely exercised.
+#[test]
+fn kill_and_resume_is_bit_identical_for_all_perturb_kinds() {
+    for (i, kind) in [
+        PerturbKind::RademacherCode,
+        PerturbKind::WalshCode,
+        PerturbKind::SequentialFd,
+        PerturbKind::Sinusoidal,
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let data = xor();
+        let cfg = MgdConfig {
+            tau_x: 3,
+            tau_theta: 4,
+            tau_p: 2,
+            eta: 0.5,
+            amplitude: 0.05,
+            kind,
+            noise: NoiseConfig { sigma_cost: 0.01, sigma_update: 0.005 },
+            seed: 100 + i as u64,
+        };
+        let dev_seed = 200 + i as u64;
+        let opts = TrainOptions { max_steps: 120, ..Default::default() };
+
+        // Uninterrupted reference.
+        let mut dev_ref = xor_device(dev_seed);
+        let mut tr_ref = MgdTrainer::new(&mut dev_ref, &data, cfg, ScheduleKind::Cyclic);
+        tr_ref.train_batched(&opts, None, 5).unwrap();
+
+        // Interrupted run: train to step 53 (mid-τx, mid-τθ), snapshot
+        // to disk, then "crash" — drop the trainer AND the device — and
+        // rebuild both from scratch before restoring.
+        let dir = temp_dir(&format!("kind-{i}"));
+        let path = checkpoint::checkpoint_path(&dir);
+        {
+            let mut dev_a = xor_device(dev_seed);
+            let mut tr_a = MgdTrainer::new(&mut dev_a, &data, cfg, ScheduleKind::Cyclic);
+            let chunk = TrainOptions { max_steps: 53, ..Default::default() };
+            tr_a.train_batched(&chunk, None, 5).unwrap();
+            let snap = tr_a.checkpoint().unwrap();
+            checkpoint::save_snapshot(&path, &snap).unwrap();
+        }
+        let mut dev_b = xor_device(dev_seed);
+        let mut tr_b = MgdTrainer::new(&mut dev_b, &data, cfg, ScheduleKind::Cyclic);
+        let snap = checkpoint::load_snapshot(&path).unwrap();
+        tr_b.restore(&snap).unwrap();
+        assert_eq!(tr_b.steps(), 53, "{kind:?}");
+        tr_b.train_batched(&opts, None, 5).unwrap();
+
+        assert_eq!(tr_ref.cost_evals(), tr_b.cost_evals(), "{kind:?} cost_evals diverged");
+        assert_eq!(
+            bits(tr_ref.gradient()),
+            bits(tr_b.gradient()),
+            "{kind:?} gradient integrator diverged"
+        );
+        assert_eq!(
+            bits(&tr_ref.device_params().unwrap()),
+            bits(&tr_b.device_params().unwrap()),
+            "{kind:?} θ diverged"
+        );
+        // The streams stay locked past the resume horizon.
+        for _ in 0..3 {
+            let a = tr_ref.step_window(7).unwrap();
+            let b = tr_b.step_window(7).unwrap();
+            assert_eq!(a.len(), b.len());
+            for (sa, sb) in a.iter().zip(&b) {
+                assert_eq!(sa.cost.to_bits(), sb.cost.to_bits(), "{kind:?} post-resume cost");
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+/// A data-parallel run interrupted at its round meta resumes
+/// bit-identically: 2 rounds + resume for 2 more == 4 uninterrupted
+/// rounds (checkpointing itself is a pure observer of the trajectory).
+#[test]
+fn data_parallel_resume_matches_uninterrupted_run() {
+    let data = xor();
+    let cfg = MgdConfig {
+        eta: 0.8,
+        amplitude: 0.05,
+        tau_theta: 4,
+        tau_x: 2,
+        seed: 77,
+        ..Default::default()
+    };
+    let pool_devices = || vec![boxed_xor(300), boxed_xor(301)];
+
+    // Uninterrupted 4-round reference (no checkpointing).
+    let reference = {
+        let pool = DevicePool::new(pool_devices());
+        let dp = DataParallelConfig { rounds: 4, steps_per_round: 48, ..Default::default() };
+        train_data_parallel(&pool, &data, &data, cfg, &dp, &Telemetry::null()).unwrap()
+    };
+
+    // Interrupted run: 2 rounds with checkpointing, then a *fresh pool*
+    // (new devices, as after a crash) resumes to 4.
+    let dir = temp_dir("dp-resume");
+    {
+        let pool = DevicePool::new(pool_devices());
+        let dp = DataParallelConfig {
+            rounds: 2,
+            steps_per_round: 48,
+            checkpoint_dir: Some(dir.clone()),
+            ..Default::default()
+        };
+        train_data_parallel(&pool, &data, &data, cfg, &dp, &Telemetry::null()).unwrap();
+    }
+    assert_eq!(checkpoint::load_dp_meta(&dir).unwrap(), Some((2, 2)));
+    let resumed = {
+        let pool = DevicePool::new(pool_devices());
+        let dp = DataParallelConfig {
+            rounds: 4,
+            steps_per_round: 48,
+            checkpoint_dir: Some(dir.clone()),
+            resume: true,
+            ..Default::default()
+        };
+        train_data_parallel(&pool, &data, &data, cfg, &dp, &Telemetry::null()).unwrap()
+    };
+    assert_eq!(resumed.rounds_run, 2, "resume must run only the missing rounds");
+    assert!(resumed.failed_replicas.is_empty());
+    assert_eq!(
+        bits(&reference.final_params),
+        bits(&resumed.final_params),
+        "resumed data-parallel trajectory diverged from the uninterrupted run"
+    );
+    assert_eq!(checkpoint::load_dp_meta(&dir).unwrap(), Some((4, 2)));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A checkpointed farm job whose device dies mid-run retries on another
+/// device and RESUMES from its checkpoint-on-failure — final θ lands
+/// bit-identically on the uninterrupted single-device trajectory.
+#[test]
+fn farm_job_retry_resumes_from_failure_checkpoint() {
+    let data = Arc::new(xor());
+    let cfg = MgdConfig { eta: 0.5, amplitude: 0.05, seed: 9, ..Default::default() };
+    let opts = TrainOptions { max_steps: 200, ..Default::default() };
+    let dev_seed = 400;
+
+    // Uninterrupted reference on a healthy device.
+    let mut dev_ref = xor_device(dev_seed);
+    let mut tr_ref = MgdTrainer::new(&mut dev_ref, &data, cfg, ScheduleKind::Cyclic);
+    let res_ref = tr_ref.train_batched(&opts, None, 1).unwrap();
+    let theta_ref = tr_ref.device_params().unwrap();
+
+    // Fleet: slot 0 is the same device but dies after its 121st cost
+    // measurement (~step 60, past the step-50 checkpoint); slot 1 is
+    // healthy.  One worker keeps the first lease deterministic.
+    let flaky: Box<dyn HardwareDevice> = Box::new(FlakyDevice::new(
+        Box::new(xor_device(dev_seed)),
+        FlakyConfig { fail_after: Some(120), ..Default::default() },
+    ));
+    let dir = temp_dir("farm-resume");
+    let fleet = Fleet::new(
+        vec![flaky, boxed_xor(dev_seed)],
+        SchedulerConfig { workers: 1, ..Default::default() },
+        Telemetry::null(),
+    );
+    let h = fleet
+        .submit_training_checkpointed(
+            JobSpec::named("phoenix").with_retries(1),
+            data.clone(),
+            None,
+            cfg,
+            opts,
+            1,
+            dir.clone(),
+            50,
+            false,
+        )
+        .unwrap();
+    let outcome = h.wait_outcome().unwrap();
+    assert_eq!(outcome.attempts, 2, "must have died once and retried");
+    assert_eq!(outcome.device_slot, Some(1), "retry must land on the healthy slot");
+    let result = outcome.result.unwrap();
+    assert_eq!(result.steps_run, 200);
+    assert_eq!(result.cost_evals, res_ref.cost_evals, "resume double-counted device work");
+    // The final on-disk checkpoint holds the reference trajectory's θ.
+    let snap = checkpoint::load_snapshot(&checkpoint::checkpoint_path(&dir)).unwrap();
+    assert_eq!(snap.step, 200);
+    assert_eq!(
+        bits(&snap.theta),
+        bits(&theta_ref),
+        "retried job did not resume the uninterrupted trajectory"
+    );
+    fleet.shutdown().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Heartbeat over a real TCP session: the `Ping` opcode keeps a healthy
+/// remote device in rotation while a device that fails healthchecks is
+/// quarantined — with no training traffic at all.
+#[test]
+fn health_monitor_quarantines_over_live_tcp_session() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let server = std::thread::spawn(move || {
+        let dev: Box<dyn HardwareDevice> = Box::new(xor_device(500));
+        let pool = DevicePool::new(vec![dev]);
+        serve_pool(
+            pool,
+            listener,
+            ServeOptions { max_sessions: Some(1), ..Default::default() },
+        )
+        .unwrap();
+    });
+
+    let mut remote = RemoteDevice::connect(&addr).unwrap();
+    remote.ping().expect("direct ping must succeed");
+    remote.set_io_timeout(Some(Duration::from_secs(5))).unwrap();
+    let sick: Box<dyn HardwareDevice> = Box::new(FlakyDevice::new(
+        Box::new(NativeDevice::new(&[2, 2, 1], 1)),
+        FlakyConfig { fail_healthcheck: true, ..Default::default() },
+    ));
+    let pool = DevicePool::new(vec![Box::new(remote) as Box<dyn HardwareDevice>, sick]);
+    let monitor = HealthMonitor::start(
+        pool.clone(),
+        HealthConfig { interval: Duration::from_millis(10), max_lease_age: None },
+    );
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while pool.health_of(1).unwrap() != HealthState::Quarantined {
+        assert!(Instant::now() < deadline, "sick device never quarantined");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    // The remote survived at least as many heartbeats as it took to
+    // quarantine its sibling.
+    assert_eq!(pool.health_of(0).unwrap(), HealthState::Healthy);
+    monitor.stop();
+    // The pinged session is still a working device session.
+    let mut lease = pool.try_lease().expect("remote must be leasable");
+    assert_eq!(lease.slot(), 0);
+    lease.device().set_params(&[0.25; 9]).unwrap();
+    lease.device().load_batch(&[1.0, 0.0], &[1.0]).unwrap();
+    assert!(lease.device().cost(None).unwrap().is_finite());
+    drop(lease);
+    // Dropping the pool hangs up the TCP session; the server returns.
+    drop(pool);
+    server.join().unwrap();
+}
