@@ -1,0 +1,123 @@
+//! `ModelSpec` executor: cost-evaluations/sec vs network depth at fixed
+//! P ≈ 10k, serial `cost()` vs batched `cost_many()`.
+//!
+//! The scaling follow-up (Oripov et al., 2025) puts the interesting
+//! perturbative-training regime at growing depth/width; this bench tracks
+//! what the generic layer-stack executor pays for depth at constant
+//! parameter count — the layer-0 base amortization only covers the first
+//! layer, so deeper stacks shift work into the per-probe sweep and the
+//! batched-over-serial ratio is the health metric to watch.
+//!
+//! ```text
+//! cargo bench --bench model_depth
+//! ```
+//!
+//! Env toggles (the nightly CI bench job sets both):
+//! `MGD_BENCH_QUICK=1` shrinks the sweep; `MGD_BENCH_JSON=path` appends
+//! one JSONL record that the workflow merges into `BENCH_model.json`.
+
+use std::time::Instant;
+
+use mgd::bench::{emit_bench_json, json_obj, quick_mode};
+use mgd::device::{HardwareDevice, NativeDevice};
+use mgd::json::Json;
+use mgd::model::ModelSpec;
+use mgd::optim::init_params_uniform;
+use mgd::perturb::{self, PerturbKind, Perturbation};
+use mgd::rng::Rng;
+
+/// Probes per cost_many window (a typical τθ integration window).
+const K: usize = 64;
+
+/// Depth sweep at P ≈ 10k (exact P printed per row).
+const SPECS: &[&str] = &[
+    "98x100x1",                        // depth 2 (the legacy shape)
+    "98x80x40x1",                      // depth 3
+    "98x64x48x32x1",                   // depth 4
+    "98x64x48x32x1:relu,relu,tanh,sigmoid", // depth 4, mixed activations
+];
+
+fn device_for(spec: &ModelSpec) -> NativeDevice {
+    let mut dev = NativeDevice::from_spec(spec.clone(), 1).unwrap();
+    let mut rng = Rng::new(7);
+    let mut theta = vec![0f32; dev.n_params()];
+    init_params_uniform(&mut rng, &mut theta, 1.0);
+    dev.set_params(&theta).unwrap();
+    let mut x = vec![0f32; spec.n_inputs()];
+    rng.fill_uniform(&mut x, 0.0, 1.0);
+    let y = vec![1.0f32; spec.n_outputs()];
+    dev.load_batch(&x, &y).unwrap();
+    dev
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = quick_mode();
+    if quick {
+        println!("model_depth (quick mode)");
+    }
+    println!("depth sweep: K = {K} probes/window, P ≈ 10k, batch 1");
+    println!(
+        "{:<42} {:>6} {:>7} {:>15} {:>15} {:>9}",
+        "spec", "P", "windows", "serial ev/s", "batched ev/s", "speedup"
+    );
+    let work_budget: usize = if quick { 4_000_000 } else { 20_000_000 };
+    let mut rows = Vec::new();
+    for s in SPECS {
+        let spec: ModelSpec = s.parse().unwrap();
+        let mut dev = device_for(&spec);
+        let p = dev.n_params();
+        let mut gen = perturb::make(PerturbKind::RademacherCode, p, 0.01, 1, 11);
+        let mut probes = vec![0f32; K * p];
+        for i in 0..K {
+            gen.fill(i as u64, &mut probes[i * p..(i + 1) * p]);
+        }
+        let windows = (work_budget / (p * K)).clamp(2, 200);
+
+        // Warm up both paths (scratch growth happens here, not in timing).
+        let warm = dev.cost_many(&probes, K).unwrap();
+        assert_eq!(warm.len(), K);
+
+        let t0 = Instant::now();
+        let mut sink = 0f32;
+        for _ in 0..windows {
+            for i in 0..K {
+                sink += dev.cost(Some(&probes[i * p..(i + 1) * p])).unwrap();
+            }
+        }
+        let serial_secs = t0.elapsed().as_secs_f64();
+
+        let t0 = Instant::now();
+        for _ in 0..windows {
+            let costs = dev.cost_many(&probes, K).unwrap();
+            sink += costs[K - 1];
+        }
+        let batched_secs = t0.elapsed().as_secs_f64();
+
+        let evals = (windows * K) as f64;
+        println!(
+            "{:<42} {:>6} {:>7} {:>15.0} {:>15.0} {:>8.2}x   (sink {sink:.3})",
+            s,
+            p,
+            windows,
+            evals / serial_secs,
+            evals / batched_secs,
+            serial_secs / batched_secs,
+        );
+        rows.push(json_obj(vec![
+            ("spec", Json::Str((*s).into())),
+            ("depth", Json::Num(spec.depth() as f64)),
+            ("p", Json::Num(p as f64)),
+            ("windows", Json::Num(windows as f64)),
+            ("serial_evals_per_sec", Json::Num(evals / serial_secs)),
+            ("batched_evals_per_sec", Json::Num(evals / batched_secs)),
+            ("batched_over_serial", Json::Num(serial_secs / batched_secs)),
+        ]));
+    }
+    emit_bench_json(&json_obj(vec![
+        ("bench", Json::Str("model_depth".into())),
+        ("quick", Json::Bool(quick)),
+        ("probes_per_window", Json::Num(K as f64)),
+        ("depths", Json::Arr(rows)),
+    ]));
+    Ok(())
+}

@@ -15,6 +15,7 @@ use anyhow::{bail, Result};
 
 use mgd::cli::Args;
 use mgd::device::{server, HardwareDevice, NativeDevice, PjrtDevice};
+use mgd::model::ModelSpec;
 use mgd::noise::NeuronDefects;
 use mgd::optim::{init_params, init_params_uniform};
 use mgd::rng::Rng;
@@ -24,22 +25,15 @@ const USAGE: &str = "\
 mgd-device-server — serve a hardware device over TCP
 
 OPTIONS:
-  --model M         xor221 | parity441 | nist744 | fmnist_cnn | cifar_cnn
+  --model M         legacy id (xor221 parity441 nist744 fmnist_mlp
+                    fmnist_cnn cifar_cnn) or a spec like
+                    784x128x64x10:relu,relu,softmax
   --device D        native | pjrt                  (default native)
   --defects F       activation-defect strength σ_a (native only, Fig. 10)
   --addr A          listen address                 (default 127.0.0.1:7171)
   --max-sessions N  exit after N sessions          (default: serve forever)
   --seed N          init + defect seed             (default 42)
 ";
-
-fn mlp_layers(model: &str) -> Result<Vec<usize>> {
-    Ok(match model {
-        "xor221" => vec![2, 2, 1],
-        "parity441" => vec![4, 4, 1],
-        "nist744" => vec![49, 4, 4],
-        other => bail!("model {other:?} has no native MLP form; use --device pjrt"),
-    })
-}
 
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1), &["help"])?;
@@ -54,15 +48,17 @@ fn main() -> Result<()> {
 
     let dev: Box<dyn HardwareDevice> = match args.str_or("device", "native").as_str() {
         "native" => {
-            let layers = mlp_layers(&model)?;
-            let n_neurons: usize = layers[1..].iter().sum();
+            // The shared resolver keeps this binary and `mgd` agreeing
+            // on what every model id means.
+            let spec = ModelSpec::from_model_id(&model)?;
+            let n_neurons = spec.n_neurons();
             let mut rng = Rng::new(seed);
             let table = if defects > 0.0 {
                 NeuronDefects::sample(n_neurons, defects, &mut rng)
             } else {
                 NeuronDefects::identity(n_neurons)
             };
-            let mut dev = NativeDevice::with_defects(&layers, 1, table);
+            let mut dev = NativeDevice::from_spec(spec.with_defects(table)?, 1)?;
             let mut theta = vec![0f32; dev.n_params()];
             init_params_uniform(&mut rng, &mut theta, 1.0);
             dev.set_params(&theta)?;

@@ -96,6 +96,23 @@ impl Overrides {
         self.get(key).map_or(Ok(default.to_string()), |v| Ok(v.as_str()?.to_string()))
     }
 
+    /// Typed model-spec override (`"model": "784x128x64x10:relu,relu,softmax"`),
+    /// parsed through the [`crate::model::ModelSpec`] grammar so an
+    /// experiment's network shape is overridable like any other knob.
+    pub fn model_spec(
+        &self,
+        key: &str,
+        default: &crate::model::ModelSpec,
+    ) -> Result<crate::model::ModelSpec> {
+        match self.get(key) {
+            None => Ok(default.clone()),
+            Some(v) => v
+                .as_str()?
+                .parse()
+                .with_context(|| format!("config key {key:?} is not a valid model spec")),
+        }
+    }
+
     pub fn u64_vec(&self, key: &str, default: &[u64]) -> Result<Vec<u64>> {
         match self.get(key) {
             None => Ok(default.to_vec()),
@@ -141,6 +158,23 @@ mod tests {
         assert_eq!(o.u64_vec("taus", &[]).unwrap(), vec![1, 10]);
         assert_eq!(o.usize("missing", 3).unwrap(), 3);
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn model_spec_override_parses_the_grammar() {
+        let path = temp_file("spec.json", r#"{"model": "4x8x2:relu,softmax"}"#);
+        let o = Overrides::load(&path).unwrap();
+        let default: crate::model::ModelSpec = "2x2x1".parse().unwrap();
+        assert_eq!(
+            o.model_spec("model", &default).unwrap().to_string(),
+            "4x8x2:relu,softmax"
+        );
+        assert_eq!(o.model_spec("missing", &default).unwrap(), default);
+        std::fs::remove_file(&path).ok();
+        let bad = temp_file("badspec.json", r#"{"model": "4xtwo"}"#);
+        let o = Overrides::load(&bad).unwrap();
+        assert!(o.model_spec("model", &default).is_err());
+        std::fs::remove_file(&bad).ok();
     }
 
     #[test]

@@ -55,9 +55,25 @@ use std::collections::BTreeMap;
 
 /// Format tag of a trainer checkpoint file.
 pub const CHECKPOINT_FORMAT: &str = "mgd-trainer-checkpoint";
-/// Current checkpoint schema version.  Bump on any schema change; old
-/// versions are rejected with a clear error rather than misread.
-pub const CHECKPOINT_VERSION: u64 = 1;
+/// Current checkpoint schema version.  Bump on any schema change;
+/// versions newer than this build are rejected with a clear error rather
+/// than misread, and versions back to [`CHECKPOINT_MIN_VERSION`] load
+/// under a documented compat rule.
+///
+/// **v2** (this build) embeds the model identity: `model` (the canonical
+/// [`crate::model::ModelSpec`] string) and `spec_hash` (its stable
+/// [`crate::model::ModelSpec::spec_hash`]), both `null` when the device
+/// is a spec-less black box.
+///
+/// **v1 compat rule**: v1 checkpoints predate spec identity — they load
+/// with `model`/`spec_hash` as `None`, and restore skips the spec-hash
+/// gate (the parameter-count check remains the only shape gate, exactly
+/// the v1 guarantee).  A v1 file can therefore restore into a *wrong*
+/// same-P model; re-checkpointing immediately rewrites it as v2 with the
+/// identity embedded.
+pub const CHECKPOINT_VERSION: u64 = 2;
+/// Oldest checkpoint schema this build still reads.
+pub const CHECKPOINT_MIN_VERSION: u64 = 1;
 /// Format tag of a data-parallel run's meta file.
 pub const DP_META_FORMAT: &str = "mgd-dp-checkpoint";
 
@@ -89,6 +105,12 @@ pub struct TrainerSnapshot {
     pub schedule: ScheduleState,
     /// Perturbation-generator state.
     pub pert: PerturbState,
+    /// Canonical model-spec string of the device at snapshot time
+    /// (`None`: spec-less device, or a v1 checkpoint).
+    pub model: Option<String>,
+    /// Stable spec hash matching `model` — what restore validates
+    /// against the live device's spec.
+    pub spec_hash: Option<u64>,
 }
 
 // ---------------------------------------------------------------------------
@@ -315,22 +337,42 @@ impl TrainerSnapshot {
         sched.insert("rng".to_string(), rng_to_json(&self.schedule.rng));
         m.insert("schedule".to_string(), Json::Obj(sched));
         m.insert("pert".to_string(), pert_to_json(&self.pert));
+        m.insert(
+            "model".to_string(),
+            match &self.model {
+                Some(s) => Json::Str(s.clone()),
+                None => Json::Null,
+            },
+        );
+        m.insert("spec_hash".to_string(), jopt_u64(self.spec_hash));
         Json::Obj(m)
     }
 
-    /// Parse a versioned checkpoint document.
+    /// Parse a versioned checkpoint document (v1 or v2; see
+    /// [`CHECKPOINT_VERSION`] for the v1 compat rule).
     pub fn from_json(j: &Json) -> Result<TrainerSnapshot> {
         let format = j.field("format")?.as_str()?;
         if format != CHECKPOINT_FORMAT {
             bail!("not a trainer checkpoint (format {format:?})");
         }
         let version = j.field("version")?.as_u64()?;
-        if version != CHECKPOINT_VERSION {
+        if !(CHECKPOINT_MIN_VERSION..=CHECKPOINT_VERSION).contains(&version) {
             bail!(
                 "checkpoint version {version} is not supported (this build reads \
-                 version {CHECKPOINT_VERSION})"
+                 versions {CHECKPOINT_MIN_VERSION}..={CHECKPOINT_VERSION})"
             );
         }
+        // v1 compat: the spec-identity fields do not exist; load them as
+        // None so restore skips the spec gate.
+        let (model, spec_hash) = if version >= 2 {
+            let model = match j.field("model")? {
+                Json::Null => None,
+                other => Some(other.as_str()?.to_string()),
+            };
+            (model, popt_u64(j.field("spec_hash")?)?)
+        } else {
+            (None, None)
+        };
         let sched = j.field("schedule")?;
         Ok(TrainerSnapshot {
             config: config_from_json(j.field("config")?)?,
@@ -350,6 +392,8 @@ impl TrainerSnapshot {
                 rng: rng_from_json(sched.field("rng")?)?,
             },
             pert: pert_from_json(j.field("pert")?)?,
+            model,
+            spec_hash,
         })
     }
 }
@@ -441,10 +485,48 @@ pub fn load_dp_meta(dir: &Path) -> Result<Option<(u64, usize)>> {
         bail!("{} is not a data-parallel meta file (format {format:?})", path.display());
     }
     let version = j.field("version")?.as_u64()?;
-    if version != CHECKPOINT_VERSION {
-        bail!("dp meta version {version} unsupported (this build reads {CHECKPOINT_VERSION})");
+    if !(CHECKPOINT_MIN_VERSION..=CHECKPOINT_VERSION).contains(&version) {
+        bail!(
+            "dp meta version {version} unsupported (this build reads \
+             {CHECKPOINT_MIN_VERSION}..={CHECKPOINT_VERSION})"
+        );
     }
     Ok(Some((pu64(j.field("rounds_done")?)?, j.field("replicas")?.as_usize()?)))
+}
+
+/// Garbage-collect superseded round-stamped replica snapshots, keeping
+/// the most recent `keep` committed rounds (`keep` ≥ 1; the committed
+/// round itself is never deleted).  Returns the number of files removed.
+///
+/// Crash safety: this runs only **after** the round meta commits, and it
+/// works from a directory listing rather than a remembered round number —
+/// so a crash *during* a previous GC (which leaves a partial set of
+/// stale files) is healed by the next call, and a crash during *this*
+/// call deletes only files already outside the keep window.  The meta's
+/// resume point is untouched at every instant.
+pub fn prune_dp_rounds(dir: &Path, committed_round: u64, keep: u64) -> Result<usize> {
+    let keep = keep.max(1);
+    // Rounds strictly below this are garbage.
+    let floor = committed_round.saturating_sub(keep - 1);
+    let mut removed = 0usize;
+    let entries = std::fs::read_dir(dir)
+        .with_context(|| format!("listing checkpoint dir {}", dir.display()))?;
+    for entry in entries {
+        let entry = entry?;
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        // dp-replica-{i}-round-{r}.json
+        let Some(rest) = name.strip_prefix("dp-replica-") else { continue };
+        let Some(rest) = rest.strip_suffix(".json") else { continue };
+        let Some((_, round)) = rest.split_once("-round-") else { continue };
+        let Ok(round) = round.parse::<u64>() else { continue };
+        if round < floor {
+            std::fs::remove_file(entry.path())
+                .with_context(|| format!("pruning {}", entry.path().display()))?;
+            removed += 1;
+        }
+    }
+    Ok(removed)
 }
 
 // ---------------------------------------------------------------------------
@@ -627,6 +709,115 @@ mod tests {
         assert_eq!(back.schedule, snap.schedule);
         assert_eq!(back.pert, snap.pert);
         assert!(ensure_config_matches(&cfg, &back.config).is_ok());
+        // v2 fields: the NativeDevice's spec identity rides along.
+        assert_eq!(back.model.as_deref(), Some("2x2x1:sigmoid,sigmoid"));
+        let spec: crate::model::ModelSpec = "2x2x1".parse().unwrap();
+        assert_eq!(back.spec_hash, Some(spec.spec_hash()));
+    }
+
+    #[test]
+    fn v1_checkpoints_load_under_the_compat_rule() {
+        let data = xor();
+        let cfg = MgdConfig { seed: 7, ..Default::default() };
+        let mut dev = xor_device(7);
+        let mut tr = MgdTrainer::new(&mut dev, &data, cfg, ScheduleKind::Cyclic);
+        for _ in 0..4 {
+            tr.step().unwrap();
+        }
+        let snap = tr.checkpoint().unwrap();
+        // Rewrite the document as a v1 file: version 1, no spec fields —
+        // exactly what a pre-v2 build produced.
+        let mut doc = match snap.to_json() {
+            Json::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        doc.insert("version".to_string(), Json::Num(1.0));
+        doc.remove("model");
+        doc.remove("spec_hash");
+        let v1 = TrainerSnapshot::from_json(&Json::Obj(doc.clone())).unwrap();
+        assert_eq!(v1.model, None);
+        assert_eq!(v1.spec_hash, None);
+        assert_eq!(v1.step, snap.step);
+        // The compat rule: a v1 snapshot restores with the spec gate
+        // skipped (P is the only shape check), bit-identically.
+        let mut dev2 = xor_device(7);
+        let mut tr2 = MgdTrainer::new(&mut dev2, &data, cfg, ScheduleKind::Cyclic);
+        tr2.restore(&v1).unwrap();
+        assert_eq!(tr2.steps(), snap.step);
+        // A v2 document must carry the spec fields (missing → error, so
+        // a truncated v2 file cannot masquerade as spec-less).
+        let mut bad = doc;
+        bad.insert("version".to_string(), Json::Num(2.0));
+        assert!(TrainerSnapshot::from_json(&Json::Obj(bad)).is_err());
+    }
+
+    #[test]
+    fn restore_rejects_spec_mismatch_at_equal_param_count() {
+        // 2x2x1 sigmoid and 2x2x1 relu,relu have identical P = 9: the
+        // v1 parameter gate cannot tell them apart, the v2 spec gate
+        // must.
+        let data = xor();
+        let cfg = MgdConfig { seed: 3, ..Default::default() };
+        let mut dev = xor_device(3);
+        let mut tr = MgdTrainer::new(&mut dev, &data, cfg, ScheduleKind::Cyclic);
+        for _ in 0..2 {
+            tr.step().unwrap();
+        }
+        let snap = tr.checkpoint().unwrap();
+        let mut relu_dev =
+            NativeDevice::from_spec("2x2x1:relu,relu".parse().unwrap(), 1).unwrap();
+        relu_dev.set_params(&[0.1; 9]).unwrap();
+        let mut tr2 = MgdTrainer::new(&mut relu_dev, &data, cfg, ScheduleKind::Cyclic);
+        let err = tr2.restore(&snap).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("2x2x1:sigmoid,sigmoid"), "{msg}");
+        assert!(msg.contains("2x2x1:relu,relu"), "{msg}");
+    }
+
+    #[test]
+    fn prune_keeps_newest_rounds_and_heals_partial_gc() {
+        let dir = temp_dir("prune");
+        let touch = |r: u64, i: usize| {
+            std::fs::write(dp_replica_path(&dir, i, r), "{}").unwrap();
+        };
+        for r in 1..=5u64 {
+            for i in 0..2 {
+                touch(r, i);
+            }
+        }
+        // Unrelated files must never be collected.
+        std::fs::write(dir.join("dp-meta.json"), "{}").unwrap();
+        std::fs::write(dir.join("notes.txt"), "keep me").unwrap();
+        save_dp_meta(&dir, 5, 2).unwrap();
+        // keep=2 → rounds 4 and 5 stay, rounds 1..3 go (3 rounds × 2
+        // replicas).
+        assert_eq!(prune_dp_rounds(&dir, 5, 2).unwrap(), 6);
+        for r in 1..=3u64 {
+            for i in 0..2 {
+                assert!(!dp_replica_path(&dir, i, r).exists(), "round {r} must be gone");
+            }
+        }
+        for r in 4..=5u64 {
+            for i in 0..2 {
+                assert!(dp_replica_path(&dir, i, r).exists(), "round {r} must survive");
+            }
+        }
+        assert!(dir.join("notes.txt").exists());
+        assert_eq!(load_dp_meta(&dir).unwrap(), Some((5, 2)));
+        // keep=0 is clamped to 1: the committed round always survives.
+        assert_eq!(prune_dp_rounds(&dir, 5, 0).unwrap(), 2);
+        assert!(dp_replica_path(&dir, 0, 5).exists());
+        assert!(dp_replica_path(&dir, 1, 5).exists());
+        // Kill-during-GC: recreate an old round and delete only half of
+        // it — the partial state a crash mid-prune leaves behind.  The
+        // next prune (next round's commit) heals the stragglers and the
+        // committed round's snapshot set is intact throughout.
+        touch(2, 0); // straggler: replica 0 of round 2 survived a torn GC
+        assert_eq!(prune_dp_rounds(&dir, 5, 1).unwrap(), 1);
+        assert!(!dp_replica_path(&dir, 0, 2).exists());
+        assert!(dp_replica_path(&dir, 0, 5).exists());
+        assert_eq!(load_dp_meta(&dir).unwrap(), Some((5, 2)));
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

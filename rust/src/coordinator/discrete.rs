@@ -168,9 +168,12 @@ impl<'d> MgdTrainer<'d> {
     /// not captured: the caller owns rebuilding the device identically,
     /// exactly as it owned building it in the first place.
     pub fn checkpoint(&mut self) -> Result<TrainerSnapshot> {
+        let spec = self.dev.model_spec();
         Ok(TrainerSnapshot {
             config: self.cfg,
             n_params: self.g.len(),
+            model: spec.as_ref().map(|s| s.to_string()),
+            spec_hash: spec.as_ref().map(|s| s.spec_hash()),
             theta: self.dev.get_params()?,
             g: self.g.clone(),
             xb: self.xb.clone(),
@@ -192,6 +195,19 @@ impl<'d> MgdTrainer<'d> {
     /// rejected rather than silently diverging.
     pub fn restore(&mut self, snap: &TrainerSnapshot) -> Result<()> {
         ensure_config_matches(&self.cfg, &snap.config)?;
+        // Spec identity gate (checkpoint format v2): a snapshot taken on
+        // one model must not restore into a different one, even when
+        // their parameter counts collide.  v1 snapshots and spec-less
+        // devices carry no identity — they stay on the P-only check (the
+        // documented compat rule).
+        if let (Some(saved), Some(live)) = (snap.spec_hash, self.dev.model_spec()) {
+            if saved != live.spec_hash() {
+                bail!(
+                    "checkpoint was taken on model {} but the trainer's device runs {live}",
+                    snap.model.as_deref().unwrap_or("<unknown>"),
+                );
+            }
+        }
         let p = self.g.len();
         if snap.n_params != p || snap.theta.len() != p || snap.g.len() != p {
             bail!(

@@ -29,7 +29,8 @@ pub mod schedule;
 
 pub use analog::AnalogTrainer;
 pub use checkpoint::{
-    load_snapshot, save_snapshot, train_checkpointed, CheckpointConfig, TrainerSnapshot,
+    checkpoint_path, load_snapshot, prune_dp_rounds, save_snapshot, train_checkpointed,
+    CheckpointConfig, TrainerSnapshot,
 };
 pub use discrete::{MgdTrainer, StepOutput};
 pub use onchip::OnChipTrainer;

@@ -104,6 +104,10 @@ impl HardwareDevice for FlakyDevice {
         self.inner.n_outputs()
     }
 
+    fn model_spec(&self) -> Option<crate::model::ModelSpec> {
+        self.inner.model_spec()
+    }
+
     fn set_params(&mut self, theta: &[f32]) -> Result<()> {
         self.inner.set_params(theta)
     }

@@ -50,6 +50,16 @@ pub trait HardwareDevice: Send {
     /// Outputs per sample (the width of the inference port).
     fn n_outputs(&self) -> usize;
 
+    /// The typed model description this device executes, when it has one
+    /// ([`crate::model::ModelSpec`]): the layer stack, activations and
+    /// canonical parameter layout.  `None` means the device is a true
+    /// black box (the paper's premise needs nothing more than P/B/in/out)
+    /// — spec-aware layers (wire negotiation, checkpoints, fleet replica
+    /// agreement) then skip their shape checks rather than inventing one.
+    fn model_spec(&self) -> Option<crate::model::ModelSpec> {
+        None
+    }
+
     /// Program the parameter memory to `theta` (len P).
     fn set_params(&mut self, theta: &[f32]) -> Result<()>;
 

@@ -1,5 +1,5 @@
-//! Pure-Rust analog-hardware simulator: a sigmoid MLP with per-neuron
-//! activation defects.
+//! Pure-Rust analog-hardware simulator: a generic [`ModelSpec`] executor
+//! with per-neuron activation defects.
 //!
 //! This device exists for two reasons:
 //!
@@ -14,6 +14,22 @@
 //!    exactly for identity defects (integration-tested in
 //!    `rust/tests/pjrt_parity.rs`).
 //!
+//! The executor is generic over the [`ModelSpec`] layer stack: arbitrary
+//! depth, per-layer [`Activation`]s (sigmoid / relu / tanh / identity /
+//! row-softmax).  The legacy constructors ([`NativeDevice::new`] /
+//! [`NativeDevice::with_defects`]) build the paper's all-sigmoid stack and
+//! run the **identical arithmetic in the identical order** as the
+//! pre-refactor fixed-shape engine — `cost`, `cost_many` and every
+//! training trajectory through them are bit-for-bit unchanged
+//! (regression-pinned in `rust/tests/integration_model.rs`).
+//!
+//! Every layer's activation routes through the defect table (identity
+//! defects for an ideal device): elementwise activations compute
+//! `α_k · act(β_k (a − a_k)) + b_k` — for sigmoid this is exactly the
+//! generalized logistic above — and softmax warps the pre-activations
+//! with β/a before the row normalization, then applies α/b to the
+//! probabilities.
+//!
 //! # The multi-probe cost engine
 //!
 //! The forward pass is split into two halves so that K stacked
@@ -27,12 +43,10 @@
 //!   (layer-0 perturbation term `x·θ̃₀ + θ̃_b`, then the deeper layers).
 //!
 //! Every buffer involved is persistent scratch on the device: the hot
-//! path performs **no per-call allocation** (the old implementation
-//! cloned `y`, re-allocated `out`, and juggled `x` with `mem::take` on
-//! every single cost evaluation — the innermost call of all of training).
-//! For large probe batches the sweep fans probes across scoped threads;
-//! each probe writes only its own scratch block, so results are bitwise
-//! identical to the serial order.
+//! path performs **no per-call allocation**.  For large probe batches the
+//! sweep fans probes across scoped threads; each probe writes only its
+//! own scratch block, so results are bitwise identical to the serial
+//! order.
 //!
 //! Floating-point contract: `cost(Some(tt))`, `cost(None)` and every
 //! probe of `cost_many` run the *same* arithmetic in the same order, so
@@ -43,16 +57,19 @@
 use anyhow::{bail, Result};
 
 use super::HardwareDevice;
+use crate::model::{Activation, Dense, ModelSpec};
 use crate::noise::NeuronDefects;
 
 /// Fan probes across threads only past this many multiply-accumulates
 /// (k · P); below it the thread-spawn overhead dominates.
 const PARALLEL_FLOP_THRESHOLD: usize = 1 << 18;
 
-/// MLP layer widths + defect table.
+/// A [`ModelSpec`] executor with a defect table.
 #[derive(Debug, Clone)]
 pub struct NativeDevice {
-    layers: Vec<usize>,
+    spec: ModelSpec,
+    /// Cached `spec.widths()` (scratch sizing, shape checks).
+    widths: Vec<usize>,
     theta: Vec<f32>,
     defects: NeuronDefects,
     batch: usize,
@@ -65,7 +82,7 @@ pub struct NativeDevice {
     /// `CostMany` frame cannot balloon the server.
     scratch_a: Vec<f32>,
     scratch_b: Vec<f32>,
-    /// Shared unperturbed layer-0 pre-activations (`n · layers[1]`).
+    /// Shared unperturbed layer-0 pre-activations (`n · layers[0].outputs`).
     scratch_base: Vec<f32>,
     /// Per-worker perturbation accumulator rows (`workers · widest`).
     scratch_pert: Vec<f32>,
@@ -75,22 +92,48 @@ pub struct NativeDevice {
 }
 
 impl NativeDevice {
-    /// Build a device with ideal (identity) activations.
+    /// Build the paper's all-sigmoid MLP with ideal (identity)
+    /// activations — the legacy constructor, bit-identical to the
+    /// pre-[`ModelSpec`] device.
     pub fn new(layers: &[usize], batch: usize) -> Self {
-        let n_neurons: usize = layers[1..].iter().sum();
-        Self::with_defects(layers, batch, NeuronDefects::identity(n_neurons))
+        assert!(layers.len() >= 2, "need at least input and output layers");
+        Self::from_spec(ModelSpec::sigmoid_mlp(layers), batch)
+            .expect("sigmoid MLP spec is always executable")
     }
 
-    /// Build a device with the given per-neuron defect table.  The table
-    /// covers all non-input neurons, layer by layer.
+    /// Legacy constructor with a defect table (all-sigmoid stack; the
+    /// table covers all non-input neurons, layer by layer).
     pub fn with_defects(layers: &[usize], batch: usize, defects: NeuronDefects) -> Self {
         assert!(layers.len() >= 2, "need at least input and output layers");
-        let n_neurons: usize = layers[1..].iter().sum();
-        assert_eq!(defects.n_neurons(), n_neurons, "defect table size mismatch");
-        let p: usize = layers.windows(2).map(|w| w[0] * w[1] + w[1]).sum();
-        let widest = *layers.iter().max().unwrap();
-        NativeDevice {
-            layers: layers.to_vec(),
+        let spec = ModelSpec::sigmoid_mlp(layers)
+            .with_defects(defects)
+            .expect("defect table size mismatch");
+        Self::from_spec(spec, batch).expect("sigmoid MLP spec is always executable")
+    }
+
+    /// Build a device executing an arbitrary [`ModelSpec`] (any depth,
+    /// per-layer activations, optional attached defects).
+    pub fn from_spec(spec: ModelSpec, batch: usize) -> Result<Self> {
+        if batch == 0 {
+            bail!("batch size must be at least 1");
+        }
+        let widths = spec.widths();
+        let n_neurons = spec.n_neurons();
+        let defects = match &spec.defects {
+            Some(d) => d.clone(),
+            None => NeuronDefects::identity(n_neurons),
+        };
+        if defects.n_neurons() != n_neurons {
+            bail!(
+                "defect table covers {} neurons, spec {spec} has {n_neurons}",
+                defects.n_neurons()
+            );
+        }
+        let p = spec.param_count();
+        let widest = spec.widest();
+        Ok(NativeDevice {
+            spec,
+            widths,
             theta: vec![0.0; p],
             defects,
             batch,
@@ -101,22 +144,32 @@ impl NativeDevice {
             scratch_base: vec![0.0; widest * batch],
             scratch_pert: vec![0.0; widest],
             scratch_out: Vec::new(),
-        }
+        })
     }
 
+    /// The model this device executes.
+    pub fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    /// Layer widths, input first (legacy accessor).
     pub fn layers(&self) -> &[usize] {
-        &self.layers
+        &self.widths
     }
 
     fn n_outputs(&self) -> usize {
-        *self.layers.last().unwrap()
+        *self.widths.last().unwrap()
+    }
+
+    fn widest(&self) -> usize {
+        *self.widths.iter().max().unwrap()
     }
 
     /// Grow the scratch buffers for `n` samples and `workers` concurrent
     /// sweep threads (1 for the serial paths).  Grows only — after the
     /// first call at a given shape the hot path never allocates.
     fn ensure_scratch(&mut self, n: usize, workers: usize) {
-        let widest = *self.layers.iter().max().unwrap();
+        let widest = self.widest();
         let stride = widest * n;
         if self.scratch_a.len() < workers * stride {
             self.scratch_a.resize(workers * stride, 0.0);
@@ -139,14 +192,14 @@ impl NativeDevice {
     fn run_single(&mut self, tilde: Option<&[f32]>) {
         let n = self.batch;
         self.ensure_scratch(n, 1);
-        let widest = *self.layers.iter().max().unwrap();
+        let widest = self.widest();
         let stride = widest * n;
         let out_len = n * self.n_outputs();
         // Split borrows: every field below is disjoint, so the shared
-        // inputs (layers/theta/defects/x) and the scratch blocks can be
+        // inputs (spec/theta/defects/x) and the scratch blocks can be
         // borrowed simultaneously.
         let NativeDevice {
-            layers,
+            spec,
             theta,
             defects,
             x,
@@ -157,16 +210,17 @@ impl NativeDevice {
             scratch_out,
             ..
         } = self;
-        let layers: &[usize] = layers;
+        let layers: &[Dense] = spec.layers();
         let theta: &[f32] = theta;
-        compute_layer0_base(layers, theta, x, n, &mut scratch_base[..n * layers[1]]);
+        let base_len = n * layers[0].outputs;
+        compute_layer0_base(layers, theta, x, n, &mut scratch_base[..base_len]);
         forward_one(
             layers,
             theta,
             defects,
             x,
             n,
-            &scratch_base[..n * layers[1]],
+            &scratch_base[..base_len],
             tilde,
             &mut scratch_a[..stride],
             &mut scratch_b[..stride],
@@ -189,11 +243,11 @@ impl NativeDevice {
             1
         };
         self.ensure_scratch(n, workers);
-        let widest = *self.layers.iter().max().unwrap();
+        let widest = self.widest();
         let stride = widest * n;
         let out_len = n * self.n_outputs();
         let NativeDevice {
-            layers,
+            spec,
             theta,
             defects,
             x,
@@ -205,13 +259,14 @@ impl NativeDevice {
             scratch_out,
             ..
         } = self;
-        let layers: &[usize] = layers;
+        let layers: &[Dense] = spec.layers();
         let theta: &[f32] = theta;
         let defects: &NeuronDefects = defects;
         let x: &[f32] = x;
         let y: &[f32] = y;
-        compute_layer0_base(layers, theta, x, n, &mut scratch_base[..n * layers[1]]);
-        let base: &[f32] = &scratch_base[..n * layers[1]];
+        let base_len = n * layers[0].outputs;
+        compute_layer0_base(layers, theta, x, n, &mut scratch_base[..base_len]);
+        let base: &[f32] = &scratch_base[..base_len];
         if workers <= 1 {
             let acts_a = &mut scratch_a[..stride];
             let acts_b = &mut scratch_b[..stride];
@@ -300,12 +355,72 @@ fn mse(y_pred: &[f32], y_true: &[f32]) -> f32 {
     sum / y_pred.len() as f32
 }
 
+/// Apply one layer's activation to a sample's post-GEMM row, routing
+/// through the defect table (`neuron_base` indexes the layer's first
+/// neuron).
+///
+/// Sigmoid takes the [`NeuronDefects::activate`] generalized-logistic
+/// path **verbatim** — with identity defects this is the plain sigmoid
+/// the pre-refactor engine computed, bit for bit.  The other elementwise
+/// activations use the same defect shape, `α·act(β(a − a₀)) + b`, and
+/// softmax warps the pre-activations with β/a₀ before the (max-shifted,
+/// numerically stable) row normalization, then scales the probabilities
+/// with α/b.
+#[inline]
+fn activate_row(act: Activation, defects: &NeuronDefects, neuron_base: usize, zrow: &mut [f32]) {
+    match act {
+        Activation::Sigmoid => {
+            for (j, z) in zrow.iter_mut().enumerate() {
+                *z = defects.activate(neuron_base + j, *z);
+            }
+        }
+        Activation::Relu | Activation::Tanh | Activation::Identity => {
+            for (j, z) in zrow.iter_mut().enumerate() {
+                let k = neuron_base + j;
+                let a = defects.beta[k] * (*z - defects.offset_a[k]);
+                let v = match act {
+                    Activation::Relu => {
+                        if a > 0.0 {
+                            a
+                        } else {
+                            0.0
+                        }
+                    }
+                    Activation::Tanh => a.tanh(),
+                    _ => a,
+                };
+                *z = defects.alpha[k] * v + defects.offset_b[k];
+            }
+        }
+        Activation::Softmax => {
+            let mut mx = f32::NEG_INFINITY;
+            for (j, z) in zrow.iter_mut().enumerate() {
+                let k = neuron_base + j;
+                *z = defects.beta[k] * (*z - defects.offset_a[k]);
+                if *z > mx {
+                    mx = *z;
+                }
+            }
+            let mut sum = 0f32;
+            for z in zrow.iter_mut() {
+                *z = (*z - mx).exp();
+                sum += *z;
+            }
+            let inv = 1.0 / sum;
+            for (j, z) in zrow.iter_mut().enumerate() {
+                let k = neuron_base + j;
+                *z = defects.alpha[k] * (*z * inv) + defects.offset_b[k];
+            }
+        }
+    }
+}
+
 /// Unperturbed layer-0 pre-activations `z₀[s][j] = b₀[j] + Σᵢ x[s][i]·W₀[i][j]`
 /// — probe-independent, computed once per device call and shared by the
 /// baseline and every probe of a [`HardwareDevice::cost_many`] sweep.
-fn compute_layer0_base(layers: &[usize], theta: &[f32], x: &[f32], n: usize, base: &mut [f32]) {
-    let width = layers[0];
-    let n_out = layers[1];
+fn compute_layer0_base(layers: &[Dense], theta: &[f32], x: &[f32], n: usize, base: &mut [f32]) {
+    let width = layers[0].inputs;
+    let n_out = layers[0].outputs;
     let wlen = width * n_out;
     let bias = &theta[wlen..wlen + n_out];
     for s in 0..n {
@@ -325,12 +440,13 @@ fn compute_layer0_base(layers: &[usize], theta: &[f32], x: &[f32], n: usize, bas
 /// over `n` samples, starting from the precomputed layer-0 `base`.
 ///
 /// Weight rows are walked in their natural `[i][j]` (row-major) layout —
-/// contiguous axpy sweeps per input neuron — instead of the old
-/// column-strided gather, and the perturbation term accumulates in its
-/// own row so the shared `base` stays bitwise reusable across probes.
+/// contiguous axpy sweeps per input neuron — and the perturbation term
+/// accumulates in its own row so the shared `base` stays bitwise
+/// reusable across probes.  The per-layer θ offsets follow
+/// [`ModelSpec::param_layout`] (weights then biases, layer by layer).
 #[allow(clippy::too_many_arguments)]
 fn forward_one(
-    layers: &[usize],
+    layers: &[Dense],
     theta: &[f32],
     defects: &NeuronDefects,
     x: &[f32],
@@ -342,14 +458,13 @@ fn forward_one(
     pert_row: &mut [f32],
     out: &mut [f32],
 ) {
-    let n_layers = layers.len() - 1;
     let mut acts_a = acts_a;
     let mut acts_b = acts_b;
-    let mut width = layers[0];
     let mut offset = 0usize; // into theta / tilde
     let mut neuron_base = 0usize; // into the defect table
-    for li in 0..n_layers {
-        let n_out = layers[li + 1];
+    for (li, layer) in layers.iter().enumerate() {
+        let width = layer.inputs;
+        let n_out = layer.outputs;
         let wlen = width * n_out;
         for s in 0..n {
             let h: &[f32] = if li == 0 {
@@ -382,16 +497,14 @@ fn forward_one(
                     *z += pv;
                 }
             }
-            for (j, z) in zrow.iter_mut().enumerate() {
-                *z = defects.activate(neuron_base + j, *z);
-            }
+            activate_row(layer.activation, defects, neuron_base, zrow);
         }
         std::mem::swap(&mut acts_a, &mut acts_b);
         offset += wlen + n_out;
         neuron_base += n_out;
-        width = n_out;
     }
-    out.copy_from_slice(&acts_a[..n * width]);
+    let n_out = layers.last().unwrap().outputs;
+    out.copy_from_slice(&acts_a[..n * n_out]);
 }
 
 impl HardwareDevice for NativeDevice {
@@ -404,11 +517,15 @@ impl HardwareDevice for NativeDevice {
     }
 
     fn input_len(&self) -> usize {
-        self.layers[0]
+        self.widths[0]
     }
 
     fn n_outputs(&self) -> usize {
-        *self.layers.last().unwrap()
+        *self.widths.last().unwrap()
+    }
+
+    fn model_spec(&self) -> Option<ModelSpec> {
+        Some(self.spec.clone())
     }
 
     fn set_params(&mut self, theta: &[f32]) -> Result<()> {
@@ -434,7 +551,7 @@ impl HardwareDevice for NativeDevice {
     }
 
     fn load_batch(&mut self, x: &[f32], y: &[f32]) -> Result<()> {
-        let n_in = self.layers[0];
+        let n_in = self.widths[0];
         let k = self.n_outputs();
         if x.len() != self.batch * n_in || y.len() != self.batch * k {
             bail!(
@@ -481,15 +598,15 @@ impl HardwareDevice for NativeDevice {
     }
 
     fn evaluate(&mut self, x: &[f32], y: &[f32], n: usize) -> Result<(f32, f32)> {
-        let n_in = self.layers[0];
+        let n_in = self.widths[0];
         let k = self.n_outputs();
         if x.len() != n * n_in || y.len() != n * k {
             bail!("evaluate: shape mismatch");
         }
         self.ensure_scratch(n, 1);
-        let widest = *self.layers.iter().max().unwrap();
+        let widest = self.widest();
         let NativeDevice {
-            layers,
+            spec,
             theta,
             defects,
             scratch_a,
@@ -499,14 +616,16 @@ impl HardwareDevice for NativeDevice {
             scratch_out,
             ..
         } = self;
-        compute_layer0_base(layers, theta, x, n, &mut scratch_base[..n * layers[1]]);
+        let layers: &[Dense] = spec.layers();
+        let base_len = n * layers[0].outputs;
+        compute_layer0_base(layers, theta, x, n, &mut scratch_base[..base_len]);
         forward_one(
             layers,
             theta,
             defects,
             x,
             n,
-            &scratch_base[..n * layers[1]],
+            &scratch_base[..base_len],
             None,
             &mut scratch_a[..widest * n],
             &mut scratch_b[..widest * n],
@@ -539,7 +658,7 @@ impl HardwareDevice for NativeDevice {
     }
 
     fn describe(&self) -> String {
-        format!("native-mlp{:?}(P={}, B={})", self.layers, self.theta.len(), self.batch)
+        format!("native-mlp{:?}(P={}, B={})", self.widths, self.theta.len(), self.batch)
     }
 }
 
@@ -566,6 +685,56 @@ mod tests {
         let want = y * y; // MSE against target 0
         let got = dev.cost(None).unwrap();
         assert!((got - want).abs() < 1e-6, "got {got}, want {want}");
+    }
+
+    #[test]
+    fn mixed_activation_forward_matches_hand_computation() {
+        // 2-2-2 relu → softmax with known weights.
+        let spec: ModelSpec = "2x2x2:relu,softmax".parse().unwrap();
+        let mut dev = NativeDevice::from_spec(spec, 1).unwrap();
+        // layer0: w=[[1,-1],[2,0.5]], b=[0.25, -0.25];
+        // layer1: w=[[1,0],[0,1]], b=[0,0].
+        let theta = vec![1.0, -1.0, 2.0, 0.5, 0.25, -0.25, 1.0, 0.0, 0.0, 1.0, 0.0, 0.0];
+        dev.set_params(&theta).unwrap();
+        dev.load_batch(&[1.0, 1.0], &[1.0, 0.0]).unwrap();
+        let z0 = [1.0 + 2.0 + 0.25, -1.0 + 0.5 - 0.25];
+        let h = [z0[0].max(0.0), z0[1].max(0.0)];
+        let z1 = [h[0], h[1]];
+        let mx = z1[0].max(z1[1]);
+        let e = [(z1[0] - mx).exp(), (z1[1] - mx).exp()];
+        let p = [e[0] / (e[0] + e[1]), e[1] / (e[0] + e[1])];
+        let want = ((p[0] - 1.0).powi(2) + p[1].powi(2)) / 2.0;
+        let got = dev.cost(None).unwrap();
+        assert!((got - want).abs() < 1e-6, "got {got}, want {want}");
+        // Softmax outputs are a probability row.
+        assert!((p[0] + p[1] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn depth4_cost_many_matches_serial_costs_bitwise() {
+        // The two-phase multi-probe engine must hold its bit-identity
+        // contract for deep, mixed-activation stacks, not just the
+        // legacy shape.
+        let spec: ModelSpec = "6x8x5x3:relu,tanh,softmax".parse().unwrap();
+        let mut dev = NativeDevice::from_spec(spec, 2).unwrap();
+        let p = dev.n_params();
+        let mut rng = Rng::new(77);
+        let mut theta = vec![0f32; p];
+        rng.fill_uniform(&mut theta, -1.0, 1.0);
+        dev.set_params(&theta).unwrap();
+        let mut x = vec![0f32; 12];
+        let mut y = vec![0f32; 6];
+        rng.fill_uniform(&mut x, 0.0, 1.0);
+        rng.fill_uniform(&mut y, 0.0, 1.0);
+        dev.load_batch(&x, &y).unwrap();
+        let k = 9;
+        let mut probes = vec![0f32; k * p];
+        rng.fill_uniform(&mut probes, -0.05, 0.05);
+        let batched = dev.cost_many(&probes, k).unwrap();
+        for (i, &c) in batched.iter().enumerate() {
+            let serial = dev.cost(Some(&probes[i * p..(i + 1) * p])).unwrap();
+            assert_eq!(c.to_bits(), serial.to_bits(), "probe {i}");
+        }
     }
 
     #[test]
@@ -617,6 +786,24 @@ mod tests {
     }
 
     #[test]
+    fn defects_apply_to_non_sigmoid_layers() {
+        let mut rng = Rng::new(2);
+        let spec: ModelSpec = "2x3x2:relu,softmax".parse().unwrap();
+        let defects = NeuronDefects::sample(5, 0.5, &mut rng);
+        let mut ideal = NativeDevice::from_spec(spec.clone(), 1).unwrap();
+        let mut broken =
+            NativeDevice::from_spec(spec.with_defects(defects).unwrap(), 1).unwrap();
+        let theta = vec![0.3; ideal.n_params()];
+        ideal.set_params(&theta).unwrap();
+        broken.set_params(&theta).unwrap();
+        ideal.load_batch(&[1.0, 1.0], &[1.0, 0.0]).unwrap();
+        broken.load_batch(&[1.0, 1.0], &[1.0, 0.0]).unwrap();
+        let ci = ideal.cost(None).unwrap();
+        let cb = broken.cost(None).unwrap();
+        assert!((ci - cb).abs() > 1e-5, "defects had no effect: {ci} vs {cb}");
+    }
+
+    #[test]
     fn evaluate_counts_correct() {
         let mut dev = NativeDevice::new(&[2, 2, 1], 1);
         dev.set_params(&[0.0; 9]).unwrap();
@@ -641,6 +828,7 @@ mod tests {
         assert!(dev.cost(Some(&[0.0; 4])).is_err());
         assert!(dev.cost_many(&[0.0; 4], 1).is_err(), "short probe stack must be rejected");
         assert!(dev.cost_many(&[0.0; 18], 1).is_err(), "long probe stack must be rejected");
+        assert!(NativeDevice::from_spec("2x2x1".parse().unwrap(), 0).is_err(), "batch 0");
     }
 
     #[test]
@@ -715,5 +903,13 @@ mod tests {
             let serial = dev.cost(Some(&probes[i * p..(i + 1) * p])).unwrap();
             assert_eq!(c.to_bits(), serial.to_bits(), "probe {i}");
         }
+    }
+
+    #[test]
+    fn spec_is_exposed_through_the_trait() {
+        let dev = NativeDevice::new(&[49, 4, 4], 1);
+        let spec = dev.model_spec().expect("native device always has a spec");
+        assert_eq!(spec.to_string(), "49x4x4:sigmoid,sigmoid");
+        assert_eq!(spec.param_count(), dev.n_params());
     }
 }

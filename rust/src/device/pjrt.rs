@@ -8,12 +8,16 @@
 use anyhow::{bail, Context, Result};
 
 use super::HardwareDevice;
+use crate::model::{Activation, ModelSpec};
 use crate::runtime::{Executable, Runtime, Value};
 use std::sync::Arc;
 
 /// A model instance on the PJRT CPU client.
 pub struct PjrtDevice {
     model: String,
+    /// Typed spec reconstructed from the manifest (`None` for models the
+    /// manifest cannot describe as a dense stack, e.g. CNNs).
+    spec: Option<ModelSpec>,
     cost_exe: Arc<Executable>,
     eval_exe: Arc<Executable>,
     theta: Vec<f32>,
@@ -47,6 +51,7 @@ impl PjrtDevice {
         eval_x_shape.extend_from_slice(&meta.input_shape);
         Ok(PjrtDevice {
             model: model.to_string(),
+            spec: spec_from_meta(&meta),
             cost_exe,
             eval_exe,
             theta: vec![0.0; p],
@@ -66,6 +71,45 @@ impl PjrtDevice {
     pub fn model(&self) -> &str {
         &self.model
     }
+
+    /// Instantiate a device for a typed [`ModelSpec`]: the manifest is
+    /// searched for a model whose dense stack matches the spec (by
+    /// [`ModelSpec::spec_hash`]), falling back to a model registered
+    /// under the spec's canonical [`ModelSpec::artifact_stem`] name.
+    /// Either way the `{name}_cost` / `{name}_eval` artifact pair is
+    /// what loads — the spec, not a stringly-typed model id, decides the
+    /// artifacts.
+    pub fn for_spec(rt: &Runtime, spec: &ModelSpec) -> Result<Self> {
+        let want = spec.spec_hash();
+        let mut names: Vec<&String> = rt.manifest.models.keys().collect();
+        names.sort(); // deterministic pick if several models share a stack
+        for name in names {
+            let meta = rt.manifest.model(name)?;
+            if spec_from_meta(meta).is_some_and(|s| s.spec_hash() == want) {
+                return Self::new(rt, name);
+            }
+        }
+        let stem = spec.artifact_stem();
+        if rt.manifest.models.contains_key(&stem) {
+            return Self::new(rt, &stem);
+        }
+        bail!(
+            "no AOT artifacts for model spec {spec}: the manifest has no model with \
+             that dense stack; compile one (python/compile/aot.py) under the canonical \
+             name {stem:?} ({stem}_cost / {stem}_eval)"
+        )
+    }
+}
+
+/// Reconstruct the typed spec a manifest MLP entry describes (`layers`
+/// widths + a broadcast `activation`, defaulting to the paper's sigmoid).
+fn spec_from_meta(meta: &crate::runtime::ModelMeta) -> Option<ModelSpec> {
+    let widths = meta.layers.as_deref()?;
+    let act = match &meta.activation {
+        Some(name) => name.parse::<Activation>().ok()?,
+        None => Activation::Sigmoid,
+    };
+    ModelSpec::mlp(widths, &[act]).ok()
 }
 
 impl HardwareDevice for PjrtDevice {
@@ -83,6 +127,10 @@ impl HardwareDevice for PjrtDevice {
 
     fn n_outputs(&self) -> usize {
         self.n_outputs
+    }
+
+    fn model_spec(&self) -> Option<ModelSpec> {
+        self.spec.clone()
     }
 
     fn set_params(&mut self, theta: &[f32]) -> Result<()> {

@@ -44,6 +44,29 @@
 //! reassembles, it just answers each sub-batch (θ is untouched between
 //! them, so splitting cannot change any cost).  This mirrors the
 //! client-side chunking that `Evaluate` would need past ~16M floats.
+//!
+//! # Model-spec negotiation (`ModelSpec`)
+//!
+//! `Hello` reports only the I/O silhouette (P, B, input, outputs) — two
+//! *different* networks can share all four numbers (e.g. permuted hidden
+//! widths), and a client driving the wrong one corrupts silently.
+//! [`Op::ModelSpec`] closes that hole at connect time:
+//!
+//! ```text
+//! request payload  := has_spec:u8 [, spec]     (spec: see ModelSpec::encode_wire)
+//! response payload := has_spec:u8 [, spec]
+//! ```
+//!
+//! The client may attach the spec it *expects* (`has_spec = 1`); a
+//! spec-aware server compares [`crate::model::ModelSpec::spec_hash`]es
+//! and answers a mismatch with a **typed error response** naming both
+//! specs — the client fails at connect instead of training the wrong
+//! network.  The reply always carries the device's own spec when the
+//! device exposes one (`has_spec = 0` for true black boxes, and the
+//! comparison is skipped).  Spec frames share [`MAX_FRAME_BYTES`] and
+//! additionally cap the declared layer count/widths *before* any
+//! allocation ([`crate::model::MAX_WIRE_LAYERS`] /
+//! [`crate::model::MAX_WIRE_WIDTH`]).
 
 use std::io::{Read, Write};
 
@@ -89,6 +112,11 @@ pub enum Op {
     /// echo, so a wedged session (or a proxy answering for a dead chip)
     /// cannot fake a healthy round trip with a canned reply.
     Ping = 0x0A,
+    /// Model-spec negotiation; payload: `has_spec:u8 [, spec]` (the spec
+    /// the client expects).  Reply: `has_spec:u8 [, spec]` (the device's
+    /// spec).  A spec-aware server rejects a hash mismatch with a typed
+    /// error (see the module docs).
+    ModelSpec = 0x0B,
 }
 
 impl Op {
@@ -104,6 +132,7 @@ impl Op {
             0x08 => Op::Bye,
             0x09 => Op::CostMany,
             0x0A => Op::Ping,
+            0x0B => Op::ModelSpec,
             other => bail!("unknown opcode {other:#x}"),
         })
     }
@@ -171,6 +200,37 @@ pub fn get_f32(payload: &[u8], pos: &mut usize) -> Result<f32> {
     let v = f32::from_le_bytes(payload[*pos..*pos + 4].try_into().unwrap());
     *pos += 4;
     Ok(v)
+}
+
+/// Encode an optional model spec as `has_spec:u8 [, spec]` (both the
+/// `ModelSpec` request and response payloads use this shape).
+pub fn put_opt_spec(buf: &mut Vec<u8>, spec: Option<&crate::model::ModelSpec>) {
+    match spec {
+        Some(spec) => {
+            buf.push(1u8);
+            spec.encode_wire(buf);
+        }
+        None => buf.push(0u8),
+    }
+}
+
+/// Decode an optional model spec, advancing `pos`.  The flag byte is
+/// strict (`0` or `1`) so a corrupt frame fails loudly instead of being
+/// misread as "no spec".
+pub fn get_opt_spec(
+    payload: &[u8],
+    pos: &mut usize,
+) -> Result<Option<crate::model::ModelSpec>> {
+    if payload.len() < *pos + 1 {
+        bail!("payload truncated: model-spec flag byte");
+    }
+    let flag = payload[*pos];
+    *pos += 1;
+    match flag {
+        0 => Ok(None),
+        1 => Ok(Some(crate::model::ModelSpec::decode_wire(payload, pos)?)),
+        other => bail!("malformed model-spec frame: flag byte {other:#x}"),
+    }
 }
 
 /// Write one framed request.
@@ -347,7 +407,8 @@ mod tests {
         assert!(Op::from_u8(0x08).is_ok());
         assert_eq!(Op::from_u8(0x09).unwrap(), Op::CostMany);
         assert_eq!(Op::from_u8(0x0A).unwrap(), Op::Ping);
-        assert!(Op::from_u8(0x0B).is_err());
+        assert_eq!(Op::from_u8(0x0B).unwrap(), Op::ModelSpec);
+        assert!(Op::from_u8(0x0C).is_err());
         assert!(Op::from_u8(0x00).is_err());
     }
 
@@ -438,6 +499,65 @@ mod tests {
         // A device too big for one probe per frame reports 0 (the same
         // device could never receive SetParams either).
         assert_eq!(max_probes_per_frame(MAX_FRAME_BYTES), 0);
+    }
+
+    // ---- ModelSpec frames -------------------------------------------------
+
+    #[test]
+    fn model_spec_payload_roundtrip() {
+        use crate::model::ModelSpec;
+        let spec: ModelSpec = "784x128x64x10:relu,relu,softmax".parse().unwrap();
+        let mut payload = Vec::new();
+        put_opt_spec(&mut payload, Some(&spec));
+        let mut wire = Vec::new();
+        write_request(&mut wire, Op::ModelSpec, &payload).unwrap();
+        let mut cursor = std::io::Cursor::new(wire);
+        let (op, got) = read_request(&mut cursor).unwrap();
+        assert_eq!(op, Op::ModelSpec);
+        let mut pos = 0;
+        let back = get_opt_spec(&got, &mut pos).unwrap().unwrap();
+        assert_eq!(pos, got.len());
+        assert_eq!(back, spec);
+        // Query form: no spec attached.
+        let mut payload = Vec::new();
+        put_opt_spec(&mut payload, None);
+        let mut pos = 0;
+        assert!(get_opt_spec(&payload, &mut pos).unwrap().is_none());
+        assert_eq!(pos, payload.len());
+    }
+
+    #[test]
+    fn model_spec_malformed_frames_are_typed_errors() {
+        // Empty payload: missing flag byte.
+        let mut pos = 0;
+        assert!(get_opt_spec(&[], &mut pos).is_err());
+        // Bad flag byte is rejected, not misread as "no spec".
+        let mut pos = 0;
+        let err = get_opt_spec(&[7u8], &mut pos).unwrap_err();
+        assert!(err.to_string().contains("flag byte"), "{err:#}");
+        // Flag promises a spec, none follows.
+        let mut pos = 0;
+        assert!(get_opt_spec(&[1u8], &mut pos).is_err());
+        // Truncated mid-spec: every prefix of a valid frame fails.
+        use crate::model::ModelSpec;
+        let spec: ModelSpec = "49x4x4".parse().unwrap();
+        let mut payload = Vec::new();
+        put_opt_spec(&mut payload, Some(&spec));
+        for cut in 1..payload.len() {
+            let mut pos = 0;
+            assert!(get_opt_spec(&payload[..cut], &mut pos).is_err(), "cut {cut}");
+        }
+    }
+
+    #[test]
+    fn model_spec_oversized_layer_count_dies_before_allocation() {
+        // A hostile frame declaring u32::MAX layers must die on the
+        // layer-count cap, not allocate.
+        let mut payload = vec![1u8];
+        payload.extend_from_slice(&u32::MAX.to_le_bytes());
+        let mut pos = 0;
+        let err = get_opt_spec(&payload, &mut pos).unwrap_err();
+        assert!(err.to_string().contains("max"), "{err:#}");
     }
 
     #[test]

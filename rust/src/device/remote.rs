@@ -21,6 +21,7 @@ use anyhow::{bail, Context, Result};
 
 use super::protocol as p;
 use super::HardwareDevice;
+use crate::model::ModelSpec;
 
 /// TCP proxy to a remote device served by [`super::server::serve`].
 pub struct RemoteDevice {
@@ -30,14 +31,29 @@ pub struct RemoteDevice {
     batch: usize,
     input_len: usize,
     n_outputs: usize,
+    /// The server device's model spec, negotiated at connect time
+    /// (`None` when the served device is a true black box).
+    spec: Option<ModelSpec>,
     addr: String,
     /// Nonce for [`RemoteDevice::ping`] (echo-checked per probe).
     ping_nonce: u32,
 }
 
 impl RemoteDevice {
-    /// Connect and handshake.
+    /// Connect and handshake (shape via `Hello`, then spec negotiation —
+    /// accepting whatever model the server runs).  Use
+    /// [`RemoteDevice::connect_with_spec`] to *demand* a model instead.
     pub fn connect(addr: &str) -> Result<Self> {
+        Self::connect_with_spec(addr, None)
+    }
+
+    /// Connect, handshake, and negotiate the model spec.  With
+    /// `Some(spec)`, the connection **fails at connect time** (with the
+    /// server's typed mismatch error naming both specs) unless the served
+    /// device runs exactly that layer stack — closing the silent-
+    /// corruption hole where two different networks share the same
+    /// P/B/in/out `Hello` silhouette.
+    pub fn connect_with_spec(addr: &str, expect: Option<&ModelSpec>) -> Result<Self> {
         let stream = TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
         stream.set_nodelay(true).ok();
         let writer = stream.try_clone()?;
@@ -48,6 +64,7 @@ impl RemoteDevice {
             batch: 0,
             input_len: 0,
             n_outputs: 0,
+            spec: None,
             addr: addr.to_string(),
             ping_nonce: 0,
         };
@@ -57,6 +74,34 @@ impl RemoteDevice {
         dev.batch = p::get_u32(&reply, &mut pos)? as usize;
         dev.input_len = p::get_u32(&reply, &mut pos)? as usize;
         dev.n_outputs = p::get_u32(&reply, &mut pos)? as usize;
+        // Spec negotiation: ship the expected spec (if any); the server
+        // answers a mismatch with an error that surfaces here as
+        // "device error: model spec mismatch: ...".
+        let mut payload = Vec::new();
+        p::put_opt_spec(&mut payload, expect);
+        let reply = dev
+            .roundtrip(p::Op::ModelSpec, &payload)
+            .with_context(|| format!("negotiating model spec with {addr}"))?;
+        let mut pos = 0;
+        dev.spec = p::get_opt_spec(&reply, &mut pos)?;
+        if let Some(want) = expect {
+            // Belt and braces: a well-behaved server already rejected a
+            // mismatch; never trust it to have.  And a demanded spec
+            // that the server *cannot confirm* (spec-less black box) is
+            // a failure too — "unverifiable" must not pass for
+            // "verified".
+            match &dev.spec {
+                Some(have) if want.spec_hash() == have.spec_hash() => {}
+                Some(have) => bail!(
+                    "model spec mismatch: expected {want}, server at {addr} runs {have}"
+                ),
+                None => bail!(
+                    "model spec unverifiable: expected {want}, but the device served at \
+                     {addr} exposes no spec (black box); connect without a spec to \
+                     accept it on the P/B/in/out handshake alone"
+                ),
+            }
+        }
         Ok(dev)
     }
 
@@ -158,6 +203,11 @@ impl HardwareDevice for RemoteDevice {
 
     fn n_outputs(&self) -> usize {
         self.n_outputs
+    }
+
+    /// The spec negotiated at connect time (the *server* device's model).
+    fn model_spec(&self) -> Option<ModelSpec> {
+        self.spec.clone()
     }
 
     fn set_params(&mut self, theta: &[f32]) -> Result<()> {

@@ -300,6 +300,29 @@ fn handle_request(
             // session alive", healthchecks answer "is the device sane".
             payload.to_vec()
         }
+        p::Op::ModelSpec => {
+            // Spec negotiation (see the protocol module docs): if the
+            // client attached the spec it expects and this device exposes
+            // one, a hash mismatch is a typed error — the client fails at
+            // connect time instead of silently training the wrong
+            // network.  The reply always carries the device's spec when
+            // it has one.
+            let client_spec = p::get_opt_spec(payload, &mut pos)?;
+            let device_spec = dev.model_spec();
+            if let (Some(want), Some(have)) = (&client_spec, &device_spec) {
+                if want.spec_hash() != have.spec_hash() {
+                    anyhow::bail!(
+                        "model spec mismatch: client expects {want} (hash \
+                         {:#018x}), device runs {have} (hash {:#018x})",
+                        want.spec_hash(),
+                        have.spec_hash()
+                    );
+                }
+            }
+            let mut out = Vec::new();
+            p::put_opt_spec(&mut out, device_spec.as_ref());
+            out
+        }
         p::Op::Bye => return Ok(None),
     };
     Ok(Some(reply))
@@ -419,6 +442,39 @@ mod tests {
     }
 
     #[test]
+    fn dispatch_model_spec_negotiates_and_rejects_mismatch() {
+        use crate::model::ModelSpec;
+        let mut dev: Box<dyn HardwareDevice> = Box::new(NativeDevice::new(&[49, 4, 4], 1));
+        // Query (no client spec) returns the device's spec.
+        let mut req = Vec::new();
+        p::put_opt_spec(&mut req, None);
+        let reply = handle_request(&mut *dev, p::Op::ModelSpec, &req).unwrap().unwrap();
+        let mut pos = 0;
+        let got = p::get_opt_spec(&reply, &mut pos).unwrap().unwrap();
+        assert_eq!(got.to_string(), "49x4x4:sigmoid,sigmoid");
+        // Matching client spec is accepted.
+        let spec: ModelSpec = "49x4x4".parse().unwrap();
+        let mut req = Vec::new();
+        p::put_opt_spec(&mut req, Some(&spec));
+        assert!(handle_request(&mut *dev, p::Op::ModelSpec, &req).is_ok());
+        // Same P/B/in/out silhouette, different stack → typed error.  A
+        // 49x4x4 relu net is indistinguishable from the sigmoid one
+        // through Hello alone; the spec frame is what catches it.
+        let wrong: ModelSpec = "49x4x4:relu,relu".parse().unwrap();
+        let mut req = Vec::new();
+        p::put_opt_spec(&mut req, Some(&wrong));
+        let err = handle_request(&mut *dev, p::Op::ModelSpec, &req).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("model spec mismatch"), "{msg}");
+        assert!(msg.contains("49x4x4:relu,relu"), "{msg}");
+        assert!(msg.contains("49x4x4:sigmoid,sigmoid"), "{msg}");
+        // Malformed spec frame → error, not a panic (the session keeps
+        // serving — errors are answered, see handle_session).
+        assert!(handle_request(&mut *dev, p::Op::ModelSpec, &[9u8]).is_err());
+        assert!(handle_request(&mut *dev, p::Op::ModelSpec, &[]).is_err());
+    }
+
+    #[test]
     fn dispatch_bye_ends_session() {
         let mut dev: Box<dyn HardwareDevice> = Box::new(NativeDevice::new(&[2, 2, 1], 1));
         assert!(handle_request(&mut *dev, p::Op::Bye, &[]).unwrap().is_none());
@@ -447,6 +503,10 @@ mod tests {
         let mut remote = RemoteDevice::connect(&addr).unwrap();
         assert_eq!(remote.n_params(), 9);
         assert_eq!(remote.input_len(), 2);
+        assert_eq!(
+            remote.model_spec().expect("spec negotiated at connect").to_string(),
+            "2x2x1:sigmoid,sigmoid"
+        );
         remote.set_params(&[0.25; 9]).unwrap();
         remote.load_batch(&[1.0, 0.0], &[1.0]).unwrap();
         let c0 = remote.cost(None).unwrap();
@@ -456,6 +516,95 @@ mod tests {
         remote.apply_update(&[0.1; 9]).unwrap();
         let (cost, correct) = remote.evaluate(&[1.0, 0.0, 0.0, 0.0], &[1.0, 0.0], 2).unwrap();
         assert!(cost.is_finite() && correct <= 2.0);
+        remote.close();
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn demanded_spec_against_a_black_box_server_fails_as_unverifiable() {
+        use crate::device::RemoteDevice;
+        use crate::model::ModelSpec;
+        /// A device that hides its model (the trait default): the
+        /// paper's true black box.
+        struct BlackBox(NativeDevice);
+        impl HardwareDevice for BlackBox {
+            fn n_params(&self) -> usize {
+                self.0.n_params()
+            }
+            fn batch_size(&self) -> usize {
+                self.0.batch_size()
+            }
+            fn input_len(&self) -> usize {
+                self.0.input_len()
+            }
+            fn n_outputs(&self) -> usize {
+                self.0.n_outputs()
+            }
+            fn set_params(&mut self, theta: &[f32]) -> Result<()> {
+                self.0.set_params(theta)
+            }
+            fn get_params(&mut self) -> Result<Vec<f32>> {
+                self.0.get_params()
+            }
+            fn apply_update(&mut self, delta: &[f32]) -> Result<()> {
+                self.0.apply_update(delta)
+            }
+            fn load_batch(&mut self, x: &[f32], y: &[f32]) -> Result<()> {
+                self.0.load_batch(x, y)
+            }
+            fn cost(&mut self, tt: Option<&[f32]>) -> Result<f32> {
+                self.0.cost(tt)
+            }
+            fn evaluate(&mut self, x: &[f32], y: &[f32], n: usize) -> Result<(f32, f32)> {
+                self.0.evaluate(x, y, n)
+            }
+        }
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let dev: Box<dyn HardwareDevice> =
+                Box::new(BlackBox(NativeDevice::new(&[2, 2, 1], 1)));
+            serve_on(dev, listener, Some(2)).unwrap();
+        });
+        // Demanding a spec the server cannot confirm must fail —
+        // "unverifiable" is not "verified".
+        let want: ModelSpec = "2x2x1".parse().unwrap();
+        let err = RemoteDevice::connect_with_spec(&addr, Some(&want)).unwrap_err();
+        assert!(format!("{err:#}").contains("unverifiable"), "{err:#}");
+        // A spec-less connect accepts the black box on the Hello
+        // handshake alone, exactly as before the negotiation existed.
+        let remote = RemoteDevice::connect(&addr).unwrap();
+        assert!(remote.model_spec().is_none());
+        assert_eq!(remote.n_params(), 9);
+        remote.close();
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn spec_mismatch_over_tcp_fails_at_connect_not_mid_training() {
+        use crate::device::RemoteDevice;
+        use crate::model::ModelSpec;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let dev: Box<dyn HardwareDevice> = Box::new(NativeDevice::new(&[2, 2, 1], 1));
+            serve_on(dev, listener, Some(2)).unwrap();
+        });
+        // Wrong stack, same parameter count is irrelevant — the client
+        // never even reaches SetParams: connect itself returns the typed
+        // mismatch error (no hang, no silent corruption).
+        let wrong: ModelSpec = "2x2x1:relu,relu".parse().unwrap();
+        let err = RemoteDevice::connect_with_spec(&addr, Some(&wrong)).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("model spec mismatch"), "{msg}");
+        assert!(msg.contains("2x2x1:relu,relu"), "{msg}");
+        // The server survives the rejection: a correct client connects
+        // and trains on the next session.
+        let right: ModelSpec = "2x2x1".parse().unwrap();
+        let mut remote = RemoteDevice::connect_with_spec(&addr, Some(&right)).unwrap();
+        remote.set_params(&[0.25; 9]).unwrap();
+        remote.load_batch(&[1.0, 0.0], &[1.0]).unwrap();
+        assert!(remote.cost(None).unwrap().is_finite());
         remote.close();
         server.join().unwrap();
     }

@@ -3,6 +3,7 @@
 use anyhow::Result;
 
 use crate::device::NativeDevice;
+use crate::model::ModelSpec;
 use crate::noise::NeuronDefects;
 use crate::optim::init_params_uniform;
 use crate::rng::Rng;
@@ -20,11 +21,18 @@ pub fn native_mlp_with_defects(
     seed: u64,
     defects: Option<NeuronDefects>,
 ) -> Result<NativeDevice> {
+    let mut spec = ModelSpec::sigmoid_mlp(layers);
+    if let Some(d) = defects {
+        spec = spec.with_defects(d)?;
+    }
+    native_from_spec(spec, batch, seed)
+}
+
+/// Build a device for an arbitrary [`ModelSpec`] with the paper's
+/// uniform(−1, 1) initialization (defects ride on the spec).
+pub fn native_from_spec(spec: ModelSpec, batch: usize, seed: u64) -> Result<NativeDevice> {
     use crate::device::HardwareDevice;
-    let mut dev = match defects {
-        Some(d) => NativeDevice::with_defects(layers, batch, d),
-        None => NativeDevice::new(layers, batch),
-    };
+    let mut dev = NativeDevice::from_spec(spec, batch)?;
     let mut rng = Rng::new(seed ^ 0x494e_4954); // "INIT"
     let mut theta = vec![0f32; dev.n_params()];
     init_params_uniform(&mut rng, &mut theta, 1.0);

@@ -15,12 +15,13 @@
 
 use anyhow::Result;
 
-use super::common::{log_checkpoints, native_mlp};
+use super::common::{log_checkpoints, native_from_spec};
 use crate::config::RunContext;
 use crate::coordinator::{MgdConfig, MgdTrainer, ScheduleKind};
 use crate::datasets::{nist7x7, parity, Dataset};
 use crate::device::HardwareDevice;
 use crate::metrics::{angle_degrees, CsvWriter, Quartiles};
+use crate::model::ModelSpec;
 use crate::perturb::PerturbKind;
 use crate::runtime::{Runtime, Value};
 
@@ -40,7 +41,7 @@ impl Default for Fig5Config {
 
 struct Problem {
     name: &'static str,
-    layers: Vec<usize>,
+    spec: ModelSpec,
     dataset: Dataset,
     grad_artifact: &'static str,
     replicas: usize,
@@ -68,21 +69,21 @@ pub fn run(ctx: &RunContext) -> Result<()> {
     let problems = vec![
         Problem {
             name: "parity2",
-            layers: vec![2, 2, 1],
+            spec: ModelSpec::sigmoid_mlp(&[2, 2, 1]),
             dataset: parity(2),
             grad_artifact: "xor221_grad",
             replicas: ctx.scaled(cfg.replicas_parity as u64, 4) as usize,
         },
         Problem {
             name: "parity4",
-            layers: vec![4, 4, 1],
+            spec: ModelSpec::sigmoid_mlp(&[4, 4, 1]),
             dataset: parity(4),
             grad_artifact: "parity441_grad",
             replicas: ctx.scaled(cfg.replicas_parity as u64, 4) as usize,
         },
         Problem {
             name: "nist7x7",
-            layers: vec![49, 4, 4],
+            spec: ModelSpec::sigmoid_mlp(&[49, 4, 4]),
             // Sized to the grad artifact's eval batch so the "true
             // gradient" covers exactly the samples MGD cycles through.
             dataset: nist7x7(512, ctx.seed),
@@ -98,7 +99,7 @@ pub fn run(ctx: &RunContext) -> Result<()> {
 
     for prob in &problems {
         let grad_exe = rt.executable(prob.grad_artifact)?;
-        let p: usize = prob.layers.windows(2).map(|w| w[0] * w[1] + w[1]).sum();
+        let p = prob.spec.param_count();
         let b = grad_exe.meta.inputs[1].shape[0];
         anyhow::ensure!(
             b == prob.dataset.n,
@@ -111,7 +112,7 @@ pub fn run(ctx: &RunContext) -> Result<()> {
         let mut angles = vec![vec![f64::NAN; checkpoints.len()]; prob.replicas];
         for (r, row) in angles.iter_mut().enumerate() {
             let seed = ctx.seed + r as u64;
-            let mut dev = native_mlp(&prob.layers, 1, seed)?;
+            let mut dev = native_from_spec(prob.spec.clone(), 1, seed)?;
             let theta = dev.get_params()?;
             // True gradient over the full dataset (constant: τθ = ∞).
             let mut shape = vec![b];

@@ -44,7 +44,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::checkpoint::{
-    dp_replica_path, load_dp_meta, load_snapshot, save_dp_meta, save_snapshot,
+    dp_replica_path, load_dp_meta, load_snapshot, prune_dp_rounds, save_dp_meta, save_snapshot,
 };
 use crate::coordinator::{MgdConfig, MgdTrainer, ScheduleKind, TrainOptions, TrainResult};
 use crate::datasets::Dataset;
@@ -74,6 +74,13 @@ pub struct DataParallelConfig {
     /// Resume from `checkpoint_dir` if it holds a completed-round meta
     /// (absence is not an error — the run simply starts fresh).
     pub resume: bool,
+    /// How many committed rounds of replica snapshots to retain
+    /// (`mgd fleet --checkpoint-keep N`; minimum and default 1 — just
+    /// the resume point).  Multi-day runs raise this to keep a rollback
+    /// window without unbounded disk growth; superseded rounds are
+    /// garbage-collected by the barrier leader *after* each meta commit
+    /// ([`prune_dp_rounds`] — crash-safe at every instant).
+    pub checkpoint_keep: u64,
 }
 
 impl Default for DataParallelConfig {
@@ -85,6 +92,7 @@ impl Default for DataParallelConfig {
             lease_timeout: Duration::from_secs(30),
             checkpoint_dir: None,
             resume: false,
+            checkpoint_keep: 1,
         }
     }
 }
@@ -228,7 +236,13 @@ pub fn train_data_parallel(
 
     // Fleet-shape check + synchronized start from the mean of the current
     // parameter memories (restored snapshots own θ when resuming).
+    // Replica agreement is spec-first: averaging parameter memories is
+    // only meaningful when every replica runs the *same model*, and two
+    // different stacks can collide on P — devices that expose a
+    // `ModelSpec` must agree on its hash, and the P check remains as the
+    // fallback gate for spec-less black boxes.
     let p = leases[0].n_params();
+    let spec0 = leases[0].model_spec();
     for lease in &leases {
         if lease.n_params() != p {
             bail!(
@@ -237,6 +251,16 @@ pub fn train_data_parallel(
                 lease.n_params(),
                 leases[0].describe()
             );
+        }
+        if let (Some(a), Some(b)) = (&spec0, lease.model_spec()) {
+            if a.spec_hash() != b.spec_hash() {
+                bail!(
+                    "data-parallel fleet disagrees on the model: {} runs {b}, {} runs {a} \
+                     — parameter averaging across different models is meaningless",
+                    lease.describe(),
+                    leases[0].describe()
+                );
+            }
         }
     }
     let theta0 = if resuming {
@@ -437,11 +461,19 @@ pub fn train_data_parallel(
                             if let Some(dir) = &dp.checkpoint_dir {
                                 match save_dp_meta(dir, round + 1, n) {
                                     Ok(()) => {
-                                        for i in 0..n {
-                                            std::fs::remove_file(dp_replica_path(
-                                                dir, i, round,
-                                            ))
-                                            .ok();
+                                        // Rotation: keep the newest
+                                        // `checkpoint_keep` committed
+                                        // rounds; the listing-based prune
+                                        // also heals leftovers of a GC a
+                                        // crash interrupted.
+                                        if let Err(e) = prune_dp_rounds(
+                                            dir,
+                                            round + 1,
+                                            dp.checkpoint_keep,
+                                        ) {
+                                            eprintln!(
+                                                "warning: checkpoint GC failed: {e:#}"
+                                            );
                                         }
                                     }
                                     Err(e) => eprintln!(
@@ -638,6 +670,66 @@ mod tests {
         let b: Vec<u32> = windowed.final_params.iter().map(|v| v.to_bits()).collect();
         assert_eq!(a, b, "probe batching changed the data-parallel trajectory");
         assert_eq!(serial.total_cost_evals, windowed.total_cost_evals);
+    }
+
+    #[test]
+    fn fleet_model_disagreement_is_a_typed_error() {
+        // Same P (9), different stacks: the P check cannot catch this;
+        // the spec-hash agreement gate must, before any training starts.
+        let relu = {
+            let mut dev = NativeDevice::from_spec(
+                "2x2x1:relu,relu".parse().unwrap(),
+                1,
+            )
+            .unwrap();
+            dev.set_params(&[0.1; 9]).unwrap();
+            Box::new(dev) as Box<dyn HardwareDevice>
+        };
+        let pool = DevicePool::new(vec![xor_device(1), relu]);
+        let data = xor();
+        let dp = DataParallelConfig { rounds: 1, steps_per_round: 10, ..Default::default() };
+        let err = train_data_parallel(
+            &pool,
+            &data,
+            &data,
+            MgdConfig::default(),
+            &dp,
+            &Telemetry::null(),
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("disagrees on the model"), "{err:#}");
+        // The leases were released on the error path.
+        assert_eq!(pool.available(), 2);
+    }
+
+    #[test]
+    fn checkpoint_keep_rotates_round_snapshots() {
+        use crate::coordinator::checkpoint::{dp_replica_path, load_dp_meta};
+        let dir = std::env::temp_dir().join(format!(
+            "mgd-dp-rotate-{}-{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        let pool = DevicePool::new(vec![xor_device(61), xor_device(62)]);
+        let data = xor();
+        let cfg = MgdConfig { eta: 0.5, amplitude: 0.05, seed: 5, ..Default::default() };
+        let dp = DataParallelConfig {
+            rounds: 4,
+            steps_per_round: 20,
+            checkpoint_dir: Some(dir.clone()),
+            checkpoint_keep: 2,
+            ..Default::default()
+        };
+        train_data_parallel(&pool, &data, &data, cfg, &dp, &Telemetry::null()).unwrap();
+        assert_eq!(load_dp_meta(&dir).unwrap(), Some((4, 2)));
+        for i in 0..2 {
+            assert!(dp_replica_path(&dir, i, 4).exists(), "resume point must survive");
+            assert!(dp_replica_path(&dir, i, 3).exists(), "keep window must survive");
+            assert!(!dp_replica_path(&dir, i, 2).exists(), "round 2 must be rotated out");
+            assert!(!dp_replica_path(&dir, i, 1).exists(), "round 1 must be rotated out");
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -17,6 +17,10 @@
 //! - [`device`] — the black-box hardware abstraction ([`device::HardwareDevice`]):
 //!   PJRT-backed, pure-Rust native (with per-neuron defects, §3.5), or
 //!   remote-over-TCP (chip-in-the-loop, §4/§6).
+//! - [`model`] — the typed [`model::ModelSpec`] (dense-layer stack,
+//!   per-layer activations, canonical parameter layout, stable
+//!   `spec_hash`) shared by devices, the wire protocol, checkpoints,
+//!   the CLI and the experiment harnesses.
 //! - [`perturb`] — the four perturbation families of §3.4 / Fig. 1c.
 //! - [`coordinator`] — Algorithm 1 (discrete), Algorithm 2 (analog), and
 //!   the fused on-chip window driver; time constants τp, τθ, τx.
@@ -44,6 +48,7 @@ pub mod experiments;
 pub mod filters;
 pub mod fleet;
 pub mod metrics;
+pub mod model;
 pub mod noise;
 pub mod optim;
 pub mod perturb;

@@ -16,7 +16,7 @@
 
 use std::path::PathBuf;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use std::sync::Arc;
 
@@ -28,6 +28,7 @@ use mgd::device::{server, HardwareDevice, NativeDevice, PjrtDevice, RemoteDevice
 use mgd::fleet::{
     DataParallelConfig, Fleet, JobSpec, SchedulerConfig, Telemetry,
 };
+use mgd::model::ModelSpec;
 use mgd::noise::NeuronDefects;
 use mgd::optim::{init_params, init_params_uniform};
 use mgd::perturb::PerturbKind;
@@ -53,10 +54,22 @@ GLOBAL OPTIONS:
   --scale F         budget scale, e.g. 0.1 for a fast smoke run (default 1)
   --seed N          base seed (default 42)
 
+MODELS:
+  --model accepts a legacy id (xor221 parity441 nist744 fmnist_mlp
+  fmnist_cnn cifar_cnn) or a typed spec:  WIDTHSxWIDTHS...[:ACT,ACT,...]
+  e.g. 784x128x64x10:relu,relu,softmax — widths input-first, one
+  activation per layer (sigmoid | relu | tanh | identity | softmax; one
+  entry broadcasts, omitted = all sigmoid).  Spec models pick their
+  dataset by I/O ports: 784→10 synthetic F-MNIST, 3072→10 synthetic
+  CIFAR, 49→4 NIST7x7, n≤10→1 n-bit parity.
+
 TRAIN OPTIONS:
-  --model M         xor221 | parity441 | nist744 | fmnist_cnn | cifar_cnn
+  --model M         legacy id or spec (see MODELS)
   --mode M          onchip | loop | analog        (default onchip)
   --device D        native | pjrt | remote:ADDR   (default pjrt; loop/analog)
+  --samples N       generated dataset size for spec models (defaults:
+                    2048 synthetic images, 44136 NIST7x7; parity ports
+                    are enumerated exactly and reject it)
   --steps N         total MGD timesteps            (default 10000)
   --eta F           learning rate                  (default 1.0)
   --amplitude F     perturbation amplitude Δθ      (default 0.01)
@@ -75,7 +88,7 @@ TRAIN OPTIONS:
 
 FLEET OPTIONS:
   --devices N       pool size                      (default 4)
-  --model M         xor221 | parity441 | nist744 | fmnist_mlp (native MLPs)
+  --model M         legacy id or spec (see MODELS; native MLPs)
   --mode M          dp | farm                      (default dp)
   --rounds N        dp: averaging rounds           (default 8)
   --steps-per-round N  dp: MGD steps between syncs (default 1000)
@@ -83,7 +96,8 @@ FLEET OPTIONS:
   --steps N         farm: MGD steps per job        (default 10000)
   --defects F       per-device activation-defect strength σ_a (§3.5)
   --batch B         device batch size              (default 1)
-  --samples N       synthetic dataset size (fmnist_mlp; default 2048)
+  --samples N       generated dataset size for spec models (see MODELS;
+                    defaults: 2048 synthetic, 44136 NIST7x7)
   --telemetry T     JSONL event stream ('-' = stderr, else a file path)
   --probes K        perturbation probes per device call (default 1;
                     clamped to min(tau-x, tau-theta) per window)
@@ -92,6 +106,8 @@ FLEET OPTIONS:
                     per-job checkpoint subdirectories
   --checkpoint-every N  farm: steps between job checkpoints
                     (default steps/10)
+  --checkpoint-keep N  dp: committed rounds of snapshots to retain
+                    (default 1; older rounds are GC'd after each commit)
   --resume          resume dp from the round meta / farm jobs from their
                     checkpoints
   --eta F --amplitude F --tau-x N --tau-theta N --tau-p N --perturb P
@@ -143,7 +159,7 @@ fn main() -> Result<()> {
             known.extend([
                 "model", "mode", "device", "steps", "eta", "amplitude", "tau-x", "tau-theta",
                 "tau-p", "perturb", "sigma-cost", "sigma-update", "eval-every", "probes",
-                "checkpoint-dir", "checkpoint-every", "resume",
+                "checkpoint-dir", "checkpoint-every", "resume", "samples",
             ]);
             args.check_known(&known)?;
             let cfg = MgdConfig {
@@ -182,6 +198,10 @@ fn main() -> Result<()> {
                 cfg,
                 args.u64_or("eval-every", 1000)?,
                 args.usize_or("probes", 1)?.max(1),
+                match args.get("samples") {
+                    Some(_) => Some(args.usize_or("samples", 0)?),
+                    None => None,
+                },
                 checkpoint,
             )
         }
@@ -191,7 +211,7 @@ fn main() -> Result<()> {
                 "devices", "model", "mode", "rounds", "steps-per-round", "jobs", "steps",
                 "defects", "batch", "samples", "telemetry", "probes", "eta", "amplitude",
                 "tau-x", "tau-theta", "tau-p", "perturb", "retries", "checkpoint-dir",
-                "checkpoint-every", "resume",
+                "checkpoint-every", "checkpoint-keep", "resume",
             ]);
             args.check_known(&known)?;
             let cfg = MgdConfig {
@@ -239,25 +259,75 @@ fn warn_if_probes_clamped(probes: usize, cfg: &MgdConfig) {
     }
 }
 
-/// Dataset for a model id (training, eval).
-fn model_dataset(model: &str, seed: u64) -> Result<(Dataset, Dataset)> {
+/// Resolve `--model` through the shared resolver
+/// ([`ModelSpec::from_model_id`]): a legacy id or the spec grammar.
+fn resolve_model_spec(model: &str) -> Result<ModelSpec> {
+    ModelSpec::from_model_id(model)
+}
+
+/// Dataset for a model id (training, eval).  Legacy ids keep the paper's
+/// datasets; spec-grammar models pick by their I/O ports
+/// ([`spec_dataset`]).  `samples` is the explicit `--samples` value when
+/// the user passed one.
+fn model_dataset(
+    model: &str,
+    samples: Option<usize>,
+    seed: u64,
+) -> Result<(Dataset, Dataset)> {
     Ok(match model {
         "xor221" => (datasets::parity(2), datasets::parity(2)),
         "parity441" => (datasets::parity(4), datasets::parity(4)),
         "nist744" => (datasets::nist7x7(44_136, seed), datasets::nist7x7(2048, seed + 999)),
         "fmnist_cnn" => datasets::synthetic_fmnist(8192, seed).split_test(1024),
         "cifar_cnn" => datasets::synthetic_cifar(4096, seed).split_test(512),
-        other => bail!("no dataset mapping for model {other:?}"),
+        other => {
+            let spec = resolve_model_spec(other)
+                .with_context(|| format!("no dataset mapping for model {other:?}"))?;
+            spec_dataset(&spec, samples, seed)?
+        }
     })
 }
 
-/// MLP layer widths for native devices.
-fn model_layers(model: &str) -> Result<Vec<usize>> {
-    Ok(match model {
-        "xor221" => vec![2, 2, 1],
-        "parity441" => vec![4, 4, 1],
-        "nist744" => vec![49, 4, 4],
-        other => bail!("model {other:?} has no native (pure-Rust MLP) form; use --device pjrt"),
+/// Pick a dataset by a spec's I/O shape (the spec grammar carries no
+/// dataset name, so the ports decide).  `samples` sizes the generated
+/// training set when given (synthetic image sets default to 2048, the
+/// NIST7x7 port to the paper's 44 136); parity sets are enumerated
+/// exactly, so an explicit `--samples` there is rejected rather than
+/// silently ignored.
+fn spec_dataset(
+    spec: &ModelSpec,
+    samples: Option<usize>,
+    seed: u64,
+) -> Result<(Dataset, Dataset)> {
+    let d = spec.n_inputs();
+    let k = spec.n_outputs();
+    Ok(match (d, k) {
+        (784, 10) => {
+            let n = samples.unwrap_or(2048).max(16);
+            datasets::synthetic_fmnist(n, seed).split_test((n / 8).max(1))
+        }
+        (3072, 10) => {
+            let n = samples.unwrap_or(2048).max(16);
+            datasets::synthetic_cifar(n, seed).split_test((n / 8).max(1))
+        }
+        (49, 4) => {
+            let n = samples.unwrap_or(44_136).max(64);
+            (datasets::nist7x7(n, seed), datasets::nist7x7(2048, seed + 999))
+        }
+        (bits, 1) if bits <= 10 => {
+            if let Some(n) = samples {
+                bail!(
+                    "--samples {n} is meaningless for the {bits}-bit parity port: the \
+                     set is enumerated exactly (2^{bits} samples)"
+                );
+            }
+            (datasets::parity(bits), datasets::parity(bits))
+        }
+        _ => bail!(
+            "no dataset matches a {d}-input/{k}-output model {spec}; supported ports: \
+             784→10 (synthetic Fashion-MNIST), 3072→10 (synthetic CIFAR), 49→4 (NIST7x7), \
+             n≤10→1 (n-bit parity)"
+        ),
     })
 }
 
@@ -268,12 +338,17 @@ fn build_device(
     device: &str,
 ) -> Result<Box<dyn HardwareDevice>> {
     if let Some(addr) = device.strip_prefix("remote:") {
-        return Ok(Box::new(RemoteDevice::connect(addr)?));
+        // Negotiate the model when it has a spec form: the connection
+        // fails at connect time (typed mismatch error) if the server's
+        // device runs a different network.  CNN ids have no spec — for
+        // them the legacy P/B/in/out handshake is all there is.
+        let spec = resolve_model_spec(model).ok();
+        return Ok(Box::new(RemoteDevice::connect_with_spec(addr, spec.as_ref())?));
     }
     match device {
         "native" => {
-            let layers = model_layers(model)?;
-            let mut dev = NativeDevice::new(&layers, 1);
+            let spec = resolve_model_spec(model)?;
+            let mut dev = NativeDevice::from_spec(spec, 1)?;
             let mut rng = Rng::new(ctx.seed ^ 0x494e_4954);
             let mut theta = vec![0f32; dev.n_params()];
             init_params_uniform(&mut rng, &mut theta, 1.0);
@@ -282,8 +357,14 @@ fn build_device(
         }
         "pjrt" => {
             let rt = rt.ok_or_else(|| anyhow::anyhow!("pjrt device needs a runtime"))?;
-            let meta = rt.manifest.model(model)?.clone();
-            let mut dev = PjrtDevice::new(rt, model)?;
+            // Manifest ids load directly; spec-grammar models resolve
+            // their artifact names through the spec.
+            let mut dev = if rt.manifest.models.contains_key(model) {
+                PjrtDevice::new(rt, model)?
+            } else {
+                PjrtDevice::for_spec(rt, &resolve_model_spec(model)?)?
+            };
+            let meta = rt.manifest.model(dev.model())?.clone();
             let mut rng = Rng::new(ctx.seed ^ 0x494e_4954);
             let mut theta = vec![0f32; meta.param_count];
             init_params(&mut rng, &meta.tensors, &mut theta);
@@ -304,12 +385,13 @@ fn train(
     cfg: MgdConfig,
     eval_every: u64,
     probes: usize,
+    samples: Option<usize>,
     checkpoint: Option<mgd::coordinator::CheckpointConfig>,
 ) -> Result<()> {
     if checkpoint.is_some() && mode != "loop" {
         bail!("--checkpoint-dir supports --mode loop (the discrete trainer owns the state)");
     }
-    let (train_set, eval_set) = model_dataset(model, ctx.seed)?;
+    let (train_set, eval_set) = model_dataset(model, samples, ctx.seed)?;
     let opts = TrainOptions {
         max_steps: steps,
         eval_every,
@@ -390,37 +472,18 @@ fn train(
     Ok(())
 }
 
-/// MLP layer widths for fleet (native-only) models.
-fn fleet_layers(model: &str) -> Result<Vec<usize>> {
-    if model == "fmnist_mlp" {
-        // Fashion-MNIST-shaped MLP over the synthetic 28x28x1 image set.
-        return Ok(vec![784, 32, 10]);
-    }
-    model_layers(model)
-}
-
-/// Train/eval datasets for a fleet model.
-fn fleet_dataset(model: &str, samples: usize, seed: u64) -> Result<(Dataset, Dataset)> {
-    if model == "fmnist_mlp" {
-        let n = samples.max(16);
-        return Ok(datasets::synthetic_fmnist(n, seed).split_test((n / 8).max(1)));
-    }
-    model_dataset(model, seed)
-}
-
 /// Build N native devices sharing one initialization, each with its own
 /// activation-defect table (device-to-device variation, §3.5).
 fn build_fleet_devices(
-    layers: &[usize],
+    spec: &ModelSpec,
     n_devices: usize,
     batch: usize,
     defects: f32,
     seed: u64,
 ) -> Result<Vec<Box<dyn HardwareDevice>>> {
-    let n_neurons: usize = layers[1..].iter().sum();
-    let p: usize = layers.windows(2).map(|w| w[0] * w[1] + w[1]).sum();
+    let n_neurons = spec.n_neurons();
     let mut init_rng = Rng::new(seed ^ 0x494e_4954);
-    let mut theta = vec![0f32; p];
+    let mut theta = vec![0f32; spec.param_count()];
     init_params_uniform(&mut init_rng, &mut theta, 1.0);
     let mut devices: Vec<Box<dyn HardwareDevice>> = Vec::with_capacity(n_devices);
     for i in 0..n_devices {
@@ -430,7 +493,7 @@ fn build_fleet_devices(
         } else {
             NeuronDefects::identity(n_neurons)
         };
-        let mut dev = NativeDevice::with_defects(layers, batch, table);
+        let mut dev = NativeDevice::from_spec(spec.clone().with_defects(table)?, batch)?;
         dev.set_params(&theta)?;
         devices.push(Box::new(dev));
     }
@@ -444,7 +507,10 @@ fn fleet_cmd(ctx: &RunContext, args: &Args, cfg: MgdConfig) -> Result<()> {
     let n_devices = args.usize_or("devices", 4)?.max(1);
     let batch = args.usize_or("batch", 1)?.max(1);
     let defects = args.f32_or("defects", 0.0)?;
-    let samples = args.usize_or("samples", 2048)?;
+    let samples = match args.get("samples") {
+        Some(_) => Some(args.usize_or("samples", 0)?),
+        None => None,
+    };
     let telemetry = match args.get("telemetry") {
         None => Telemetry::null(),
         Some("-") => Telemetry::stderr(),
@@ -453,11 +519,11 @@ fn fleet_cmd(ctx: &RunContext, args: &Args, cfg: MgdConfig) -> Result<()> {
 
     let probes = args.usize_or("probes", 1)?.max(1);
     warn_if_probes_clamped(probes, &cfg);
-    let layers = fleet_layers(&model)?;
-    let (train_set, eval_set) = fleet_dataset(&model, samples, ctx.seed)?;
-    let devices = build_fleet_devices(&layers, n_devices, batch, defects, ctx.seed)?;
+    let spec = resolve_model_spec(&model)?;
+    let (train_set, eval_set) = model_dataset(&model, samples, ctx.seed)?;
+    let devices = build_fleet_devices(&spec, n_devices, batch, defects, ctx.seed)?;
     println!(
-        "fleet: {n_devices} x native-mlp{layers:?} (batch {batch}, defects {defects}, \
+        "fleet: {n_devices} x native[{spec}] (batch {batch}, defects {defects}, \
          {probes} probe(s)/device call), model {model}"
     );
 
@@ -469,6 +535,7 @@ fn fleet_cmd(ctx: &RunContext, args: &Args, cfg: MgdConfig) -> Result<()> {
                 probes_per_call: probes,
                 checkpoint_dir: args.get("checkpoint-dir").map(PathBuf::from),
                 resume: args.has_flag("resume"),
+                checkpoint_keep: args.u64_or("checkpoint-keep", 1)?.max(1),
                 ..Default::default()
             };
             if dp.resume && dp.checkpoint_dir.is_none() {

@@ -1,0 +1,640 @@
+//! Typed model descriptions — one `ModelSpec` threaded through every
+//! layer of the system.
+//!
+//! The paper trains multi-layer networks of varying depth/width
+//! (Fashion-MNIST, CIFAR-10), and the scaling follow-up (Oripov et al.,
+//! 2025) shows depth/width scaling is exactly where perturbative training
+//! gets interesting.  Before this module the "model" was a convention: a
+//! bare `Vec<usize>` inside [`crate::device::NativeDevice`], with the
+//! parameter layout silently re-derived in the wire protocol, the
+//! checkpoint format, the PJRT artifact naming, the CLI and the
+//! experiment harnesses.  [`ModelSpec`] turns that convention into a
+//! **value**: an ordered stack of [`Dense`] layers with per-layer
+//! [`Activation`]s, an optional per-neuron defect attachment (§3.5 /
+//! Fig. 10), a canonical [`ModelSpec::param_layout`], and a stable
+//! [`ModelSpec::spec_hash`] that devices, checkpoints and the wire
+//! protocol all agree on.
+//!
+//! # Spec grammar
+//!
+//! `mgd train --model` (and `mgd fleet --model`) accept specs of the form
+//!
+//! ```text
+//! 784x128x64x10:relu,relu,softmax
+//! ```
+//!
+//! i.e. `x`-separated layer widths (input first), then an optional `:`
+//! followed by one activation name per non-input layer.  A single
+//! activation broadcasts to every layer; omitting the suffix means
+//! all-sigmoid (the paper's networks).  [`ModelSpec`]'s `Display` form is
+//! the canonical spelling (full per-layer activation list), and
+//! [`ModelSpec::spec_hash`] is an FNV-1a hash of exactly that string —
+//! stable across platforms and processes, unlike `std`'s `DefaultHasher`.
+//!
+//! # What the hash covers
+//!
+//! The hash (and the wire/`Display` forms) cover the layer stack only —
+//! the *interface shape* of the device.  Defect tables are physical
+//! device state (every fleet replica has different ones); they are
+//! deliberately excluded, exactly as checkpoints exclude them.
+
+use std::fmt;
+
+use anyhow::{bail, Context, Result};
+
+use crate::noise::NeuronDefects;
+
+/// Per-neuron (elementwise) or per-row activation of a [`Dense`] layer.
+///
+/// | token      | f(a)                      | notes                         |
+/// |------------|---------------------------|-------------------------------|
+/// | `sigmoid`  | 1/(1+e^−a)                | the paper's networks; defects |
+/// |            |                           | give the generalized logistic |
+/// | `relu`     | max(a, 0)                 |                               |
+/// | `tanh`     | tanh(a)                   |                               |
+/// | `identity` | a                         | linear layer                  |
+/// | `softmax`  | e^a / Σ e^a (per sample)  | row-wise, numerically stable  |
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum Activation {
+    Sigmoid = 1,
+    Relu = 2,
+    Tanh = 3,
+    Identity = 4,
+    Softmax = 5,
+}
+
+impl Activation {
+    /// Canonical token (accepted by `FromStr`, produced by `Display`).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Activation::Sigmoid => "sigmoid",
+            Activation::Relu => "relu",
+            Activation::Tanh => "tanh",
+            Activation::Identity => "identity",
+            Activation::Softmax => "softmax",
+        }
+    }
+
+    /// Decode the wire byte (the stable `#[repr(u8)]` discriminant).
+    pub fn from_wire(v: u8) -> Result<Activation> {
+        Ok(match v {
+            1 => Activation::Sigmoid,
+            2 => Activation::Relu,
+            3 => Activation::Tanh,
+            4 => Activation::Identity,
+            5 => Activation::Softmax,
+            other => bail!("unknown activation byte {other:#x} in model-spec frame"),
+        })
+    }
+}
+
+impl std::str::FromStr for Activation {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Activation> {
+        Ok(match s {
+            "sigmoid" | "sig" => Activation::Sigmoid,
+            "relu" => Activation::Relu,
+            "tanh" => Activation::Tanh,
+            "identity" | "id" | "linear" => Activation::Identity,
+            "softmax" => Activation::Softmax,
+            other => bail!(
+                "unknown activation {other:?} (sigmoid | relu | tanh | identity | softmax)"
+            ),
+        })
+    }
+}
+
+impl fmt::Display for Activation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// One fully-connected layer: `inputs × outputs` weights (row-major by
+/// input neuron, the device's native axpy-sweep order) followed by
+/// `outputs` biases, then the activation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Dense {
+    pub inputs: usize,
+    pub outputs: usize,
+    pub activation: Activation,
+}
+
+impl Dense {
+    /// Parameters this layer owns (`inputs·outputs` weights + `outputs`
+    /// biases).
+    pub fn param_count(&self) -> usize {
+        self.inputs * self.outputs + self.outputs
+    }
+}
+
+/// Where one layer's parameters live inside the flat θ vector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerLayout {
+    /// First index of this layer's block in θ.
+    pub offset: usize,
+    /// Total block length (weights + biases).
+    pub len: usize,
+    /// Weight sub-block length (`inputs · outputs`; biases follow it).
+    pub weight_len: usize,
+}
+
+impl LayerLayout {
+    /// First index of the bias sub-block.
+    pub fn bias_offset(&self) -> usize {
+        self.offset + self.weight_len
+    }
+}
+
+/// A typed model description: an ordered dense-layer stack plus an
+/// optional per-neuron defect table.
+///
+/// Invariants (enforced by every constructor):
+/// - at least one layer, every width ≥ 1,
+/// - consecutive layers chain (`layers[i].outputs == layers[i+1].inputs`),
+/// - an attached defect table covers exactly [`ModelSpec::n_neurons`]
+///   neurons.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    layers: Vec<Dense>,
+    /// Optional per-neuron activation defects (§3.5 / Fig. 10), covering
+    /// all non-input neurons layer by layer.  Device-internal state:
+    /// excluded from `Display`, the wire form and [`ModelSpec::spec_hash`].
+    pub defects: Option<NeuronDefects>,
+}
+
+/// Upper bound on layers in a wire-encoded spec: large enough for any
+/// plausible network, small enough that a hostile length prefix cannot
+/// trigger a meaningful allocation.
+pub const MAX_WIRE_LAYERS: usize = 512;
+/// Upper bound on a single layer width in a wire-encoded spec (16M — the
+/// same order as the protocol's per-frame float capacity).
+pub const MAX_WIRE_WIDTH: usize = 1 << 24;
+
+impl ModelSpec {
+    /// Build from an explicit layer stack, validating the invariants.
+    pub fn new(layers: Vec<Dense>) -> Result<ModelSpec> {
+        if layers.is_empty() {
+            bail!("a model needs at least one layer");
+        }
+        for (i, l) in layers.iter().enumerate() {
+            if l.inputs == 0 || l.outputs == 0 {
+                bail!("layer {i} has a zero width ({}x{})", l.inputs, l.outputs);
+            }
+        }
+        for (i, w) in layers.windows(2).enumerate() {
+            if w[0].outputs != w[1].inputs {
+                bail!(
+                    "layer {i} produces {} outputs but layer {} expects {} inputs",
+                    w[0].outputs,
+                    i + 1,
+                    w[1].inputs
+                );
+            }
+        }
+        Ok(ModelSpec { layers, defects: None })
+    }
+
+    /// The paper's networks: `x`-separated widths, sigmoid everywhere —
+    /// the exact shape the pre-refactor `NativeDevice` hard-coded.
+    pub fn sigmoid_mlp(widths: &[usize]) -> ModelSpec {
+        Self::mlp(widths, &[Activation::Sigmoid]).expect("invalid sigmoid MLP widths")
+    }
+
+    /// The shared `--model` resolver: a legacy id (`xor221`, `parity441`,
+    /// `nist744`, `fmnist_mlp`) or the spec grammar.  This is the single
+    /// source of truth for what a model string means — every binary
+    /// (`mgd`, `mgd-device-server`) resolves through it, so two processes
+    /// built from the same tree can never disagree on an id.  CNN ids
+    /// have no dense form and return an error naming the PJRT path.
+    pub fn from_model_id(model: &str) -> Result<ModelSpec> {
+        Ok(match model {
+            "xor221" => ModelSpec::sigmoid_mlp(&[2, 2, 1]),
+            "parity441" => ModelSpec::sigmoid_mlp(&[4, 4, 1]),
+            "nist744" => ModelSpec::sigmoid_mlp(&[49, 4, 4]),
+            "fmnist_mlp" => ModelSpec::sigmoid_mlp(&[784, 32, 10]),
+            "fmnist_cnn" | "cifar_cnn" => bail!(
+                "model {model:?} is a CNN: it has no dense ModelSpec form; run it with \
+                 --device pjrt / --mode onchip, which load its AOT artifacts directly"
+            ),
+            spec => spec.parse::<ModelSpec>().with_context(|| {
+                format!("--model {model:?} is neither a known id nor a spec")
+            })?,
+        })
+    }
+
+    /// Build an MLP from widths + activations.  `acts` holds one entry
+    /// per non-input layer, or a single entry that broadcasts.
+    pub fn mlp(widths: &[usize], acts: &[Activation]) -> Result<ModelSpec> {
+        if widths.len() < 2 {
+            bail!("an MLP needs at least input and output widths, got {widths:?}");
+        }
+        let n_layers = widths.len() - 1;
+        if acts.len() != 1 && acts.len() != n_layers {
+            bail!(
+                "got {} activations for {n_layers} layers (give one per layer, or one \
+                 for all)",
+                acts.len()
+            );
+        }
+        let layers = widths
+            .windows(2)
+            .enumerate()
+            .map(|(i, w)| Dense {
+                inputs: w[0],
+                outputs: w[1],
+                activation: if acts.len() == 1 { acts[0] } else { acts[i] },
+            })
+            .collect();
+        Self::new(layers)
+    }
+
+    /// Attach a per-neuron defect table (must cover
+    /// [`ModelSpec::n_neurons`] neurons).
+    pub fn with_defects(mut self, defects: NeuronDefects) -> Result<ModelSpec> {
+        if defects.n_neurons() != self.n_neurons() {
+            bail!(
+                "defect table covers {} neurons, model has {}",
+                defects.n_neurons(),
+                self.n_neurons()
+            );
+        }
+        self.defects = Some(defects);
+        Ok(self)
+    }
+
+    /// The layer stack.
+    pub fn layers(&self) -> &[Dense] {
+        &self.layers
+    }
+
+    /// Layer widths, input first (`[784, 128, 64, 10]`).
+    pub fn widths(&self) -> Vec<usize> {
+        let mut w = Vec::with_capacity(self.layers.len() + 1);
+        w.push(self.layers[0].inputs);
+        w.extend(self.layers.iter().map(|l| l.outputs));
+        w
+    }
+
+    /// Number of weight layers (network depth).
+    pub fn depth(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Input features per sample.
+    pub fn n_inputs(&self) -> usize {
+        self.layers[0].inputs
+    }
+
+    /// Outputs per sample.
+    pub fn n_outputs(&self) -> usize {
+        self.layers.last().unwrap().outputs
+    }
+
+    /// Non-input neurons (the defect-table length).
+    pub fn n_neurons(&self) -> usize {
+        self.layers.iter().map(|l| l.outputs).sum()
+    }
+
+    /// Widest layer (scratch-buffer sizing).
+    pub fn widest(&self) -> usize {
+        self.widths().into_iter().max().unwrap()
+    }
+
+    /// Total trainable parameters P.
+    pub fn param_count(&self) -> usize {
+        self.layers.iter().map(|l| l.param_count()).sum()
+    }
+
+    /// The canonical decomposition of the flat θ vector: one
+    /// offset/len block per layer, in layer order, weights before
+    /// biases inside each block.  Every consumer of "where does layer i
+    /// live in θ" must go through this — it is the single source of
+    /// truth the pre-refactor code re-derived in five places.
+    pub fn param_layout(&self) -> Vec<LayerLayout> {
+        let mut out = Vec::with_capacity(self.layers.len());
+        let mut offset = 0usize;
+        for l in &self.layers {
+            let weight_len = l.inputs * l.outputs;
+            let len = weight_len + l.outputs;
+            out.push(LayerLayout { offset, len, weight_len });
+            offset += len;
+        }
+        out
+    }
+
+    /// Stable 64-bit identity of the layer stack (FNV-1a over the
+    /// canonical `Display` string).  Equal specs hash equal on every
+    /// platform, process and build — this is what checkpoints embed and
+    /// what the wire handshake compares.
+    pub fn spec_hash(&self) -> u64 {
+        const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = FNV_OFFSET;
+        for b in self.to_string().bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+        h
+    }
+
+    /// Deterministic artifact base name for the AOT/PJRT path
+    /// (`mlp_784x128x64x10_relu-relu-softmax`): the `{stem}_cost` /
+    /// `{stem}_eval` executables are what `python/compile/aot.py` emits
+    /// for this spec.
+    pub fn artifact_stem(&self) -> String {
+        let widths: Vec<String> = self.widths().iter().map(|w| w.to_string()).collect();
+        let acts: Vec<&str> = self.layers.iter().map(|l| l.activation.as_str()).collect();
+        format!("mlp_{}_{}", widths.join("x"), acts.join("-"))
+    }
+
+    // ---- wire form --------------------------------------------------------
+
+    /// Append the wire encoding: `n_layers:u32`, then per layer
+    /// `inputs:u32 outputs:u32 activation:u8`.  Defects are not encoded
+    /// (device-internal, see the module docs).
+    pub fn encode_wire(&self, buf: &mut Vec<u8>) {
+        buf.extend_from_slice(&(self.layers.len() as u32).to_le_bytes());
+        for l in &self.layers {
+            buf.extend_from_slice(&(l.inputs as u32).to_le_bytes());
+            buf.extend_from_slice(&(l.outputs as u32).to_le_bytes());
+            buf.push(l.activation as u8);
+        }
+    }
+
+    /// Decode the wire encoding, advancing `pos`.  Rejects oversized
+    /// layer counts / widths *before* allocating, truncated frames, and
+    /// non-chaining stacks — a hostile or corrupt frame becomes a typed
+    /// error, never a huge allocation or a nonsense spec.
+    pub fn decode_wire(payload: &[u8], pos: &mut usize) -> Result<ModelSpec> {
+        let take_u32 = |payload: &[u8], pos: &mut usize| -> Result<u32> {
+            if payload.len() < *pos + 4 {
+                bail!("model-spec frame truncated");
+            }
+            let v = u32::from_le_bytes(payload[*pos..*pos + 4].try_into().unwrap());
+            *pos += 4;
+            Ok(v)
+        };
+        let n_layers = take_u32(payload, pos)? as usize;
+        if n_layers == 0 {
+            bail!("model-spec frame declares zero layers");
+        }
+        if n_layers > MAX_WIRE_LAYERS {
+            bail!("model-spec frame declares {n_layers} layers (max {MAX_WIRE_LAYERS})");
+        }
+        let mut layers = Vec::with_capacity(n_layers);
+        for i in 0..n_layers {
+            let inputs = take_u32(payload, pos)? as usize;
+            let outputs = take_u32(payload, pos)? as usize;
+            if payload.len() < *pos + 1 {
+                bail!("model-spec frame truncated in layer {i}");
+            }
+            let act = Activation::from_wire(payload[*pos])?;
+            *pos += 1;
+            if inputs > MAX_WIRE_WIDTH || outputs > MAX_WIRE_WIDTH {
+                bail!(
+                    "model-spec layer {i} width {inputs}x{outputs} exceeds the wire \
+                     maximum {MAX_WIRE_WIDTH}"
+                );
+            }
+            layers.push(Dense { inputs, outputs, activation: act });
+        }
+        ModelSpec::new(layers).context("model-spec frame decodes to an invalid stack")
+    }
+}
+
+impl fmt::Display for ModelSpec {
+    /// Canonical spec string: widths joined by `x`, then `:` and the full
+    /// per-layer activation list.  `parse(to_string())` round-trips.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let widths: Vec<String> = self.widths().iter().map(|w| w.to_string()).collect();
+        let acts: Vec<&str> = self.layers.iter().map(|l| l.activation.as_str()).collect();
+        write!(f, "{}:{}", widths.join("x"), acts.join(","))
+    }
+}
+
+impl std::str::FromStr for ModelSpec {
+    type Err = anyhow::Error;
+
+    /// Parse the spec grammar (`784x128x64x10[:relu,relu,softmax]`).
+    fn from_str(s: &str) -> Result<ModelSpec> {
+        let (widths_part, acts_part) = match s.split_once(':') {
+            Some((w, a)) => (w, Some(a)),
+            None => (s, None),
+        };
+        let widths: Vec<usize> = widths_part
+            .split('x')
+            .map(|t| {
+                t.parse::<usize>()
+                    .with_context(|| format!("bad layer width {t:?} in model spec {s:?}"))
+            })
+            .collect::<Result<_>>()?;
+        let acts: Vec<Activation> = match acts_part {
+            None | Some("") => vec![Activation::Sigmoid],
+            Some(a) => a
+                .split(',')
+                .map(|t| t.trim().parse::<Activation>())
+                .collect::<Result<_>>()
+                .with_context(|| format!("in model spec {s:?}"))?,
+        };
+        Self::mlp(&widths, &acts).with_context(|| format!("invalid model spec {s:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn legacy_shapes_reproduce_the_old_param_math() {
+        // The pre-refactor NativeDevice computed
+        // P = Σ layers.windows(2).map(|w| w[0]*w[1] + w[1]).
+        for widths in [vec![2, 2, 1], vec![4, 4, 1], vec![49, 4, 4], vec![784, 32, 10]] {
+            let spec = ModelSpec::sigmoid_mlp(&widths);
+            let p: usize = widths.windows(2).map(|w| w[0] * w[1] + w[1]).sum();
+            assert_eq!(spec.param_count(), p, "{widths:?}");
+            assert_eq!(spec.widths(), widths);
+            assert_eq!(spec.n_neurons(), widths[1..].iter().sum::<usize>());
+            assert!(spec.layers().iter().all(|l| l.activation == Activation::Sigmoid));
+        }
+    }
+
+    #[test]
+    fn param_layout_tiles_theta_exactly() {
+        let spec: ModelSpec = "784x128x64x10:relu,relu,softmax".parse().unwrap();
+        let layout = spec.param_layout();
+        assert_eq!(layout.len(), 3);
+        let mut expect = 0usize;
+        for (l, lay) in spec.layers().iter().zip(&layout) {
+            assert_eq!(lay.offset, expect);
+            assert_eq!(lay.weight_len, l.inputs * l.outputs);
+            assert_eq!(lay.len, l.param_count());
+            assert_eq!(lay.bias_offset(), lay.offset + lay.weight_len);
+            expect += lay.len;
+        }
+        assert_eq!(expect, spec.param_count());
+    }
+
+    #[test]
+    fn grammar_roundtrip_and_defaults() {
+        // No suffix → all sigmoid (the legacy shape).
+        let spec: ModelSpec = "49x4x4".parse().unwrap();
+        assert_eq!(spec.to_string(), "49x4x4:sigmoid,sigmoid");
+        // Single activation broadcasts.
+        let spec: ModelSpec = "8x8x8x2:relu".parse().unwrap();
+        assert_eq!(spec.to_string(), "8x8x8x2:relu,relu,relu");
+        // Canonical strings round-trip.
+        let spec: ModelSpec = "784x128x64x10:relu,relu,softmax".parse().unwrap();
+        let back: ModelSpec = spec.to_string().parse().unwrap();
+        assert_eq!(spec, back);
+        assert_eq!(spec.depth(), 3);
+        assert_eq!(spec.n_inputs(), 784);
+        assert_eq!(spec.n_outputs(), 10);
+        assert_eq!(spec.widest(), 784);
+    }
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        assert!("".parse::<ModelSpec>().is_err());
+        assert!("784".parse::<ModelSpec>().is_err(), "single width is not a network");
+        assert!("4x0x2".parse::<ModelSpec>().is_err(), "zero width");
+        assert!("4xtwox2".parse::<ModelSpec>().is_err(), "non-numeric width");
+        assert!("4x4x2:relu,relu,relu".parse::<ModelSpec>().is_err(), "too many acts");
+        assert!("4x4x2:swish".parse::<ModelSpec>().is_err(), "unknown activation");
+        // Non-chaining explicit stacks.
+        let bad = ModelSpec::new(vec![
+            Dense { inputs: 2, outputs: 3, activation: Activation::Relu },
+            Dense { inputs: 4, outputs: 1, activation: Activation::Sigmoid },
+        ]);
+        assert!(bad.is_err());
+    }
+
+    #[test]
+    fn spec_hash_is_stable_and_shape_sensitive() {
+        let a: ModelSpec = "49x4x4".parse().unwrap();
+        let b = ModelSpec::sigmoid_mlp(&[49, 4, 4]);
+        assert_eq!(a.spec_hash(), b.spec_hash(), "same stack, same hash");
+        // Defects never change the hash (device-internal state).
+        let with = b
+            .clone()
+            .with_defects(NeuronDefects::identity(8))
+            .unwrap();
+        assert_eq!(with.spec_hash(), b.spec_hash());
+        // Any shape or activation change does.
+        let c: ModelSpec = "49x4x5".parse().unwrap();
+        let d: ModelSpec = "49x4x4:relu,relu".parse().unwrap();
+        assert_ne!(a.spec_hash(), c.spec_hash());
+        assert_ne!(a.spec_hash(), d.spec_hash());
+        // Pinned value: the hash is part of the checkpoint format — it
+        // must never drift across refactors of this module.
+        let canonical = "49x4x4:sigmoid,sigmoid";
+        assert_eq!(a.to_string(), canonical);
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for byte in canonical.bytes() {
+            h ^= byte as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        assert_eq!(a.spec_hash(), h);
+    }
+
+    #[test]
+    fn defect_attachment_validates_coverage() {
+        let spec: ModelSpec = "2x2x1".parse().unwrap();
+        assert!(spec.clone().with_defects(NeuronDefects::identity(3)).is_ok());
+        assert!(spec.with_defects(NeuronDefects::identity(4)).is_err());
+    }
+
+    #[test]
+    fn wire_roundtrip() {
+        for s in ["2x2x1", "784x128x64x10:relu,relu,softmax", "8x8x2:tanh,identity"] {
+            let spec: ModelSpec = s.parse().unwrap();
+            let mut buf = Vec::new();
+            spec.encode_wire(&mut buf);
+            let mut pos = 0;
+            let back = ModelSpec::decode_wire(&buf, &mut pos).unwrap();
+            assert_eq!(pos, buf.len());
+            assert_eq!(spec, back, "{s}");
+            assert_eq!(spec.spec_hash(), back.spec_hash());
+        }
+    }
+
+    #[test]
+    fn wire_rejects_malformed_frames() {
+        let spec: ModelSpec = "2x2x1".parse().unwrap();
+        let mut good = Vec::new();
+        spec.encode_wire(&mut good);
+        // Truncated anywhere.
+        for cut in 0..good.len() {
+            let mut pos = 0;
+            assert!(
+                ModelSpec::decode_wire(&good[..cut], &mut pos).is_err(),
+                "cut at {cut} must fail"
+            );
+        }
+        // Unknown activation byte.
+        let mut bad = good.clone();
+        *bad.last_mut().unwrap() = 0xEE;
+        let mut pos = 0;
+        let err = ModelSpec::decode_wire(&bad, &mut pos).unwrap_err();
+        assert!(err.to_string().contains("unknown activation"), "{err:#}");
+        // Oversized layer count dies on the cap, before allocating.
+        let mut huge = Vec::new();
+        huge.extend_from_slice(&u32::MAX.to_le_bytes());
+        let mut pos = 0;
+        let err = ModelSpec::decode_wire(&huge, &mut pos).unwrap_err();
+        assert!(err.to_string().contains("max"), "{err:#}");
+        // Oversized width.
+        let mut wide = Vec::new();
+        wide.extend_from_slice(&1u32.to_le_bytes());
+        wide.extend_from_slice(&((MAX_WIRE_WIDTH as u32) + 1).to_le_bytes());
+        wide.extend_from_slice(&1u32.to_le_bytes());
+        wide.push(Activation::Sigmoid as u8);
+        let mut pos = 0;
+        let err = ModelSpec::decode_wire(&wide, &mut pos).unwrap_err();
+        assert!(err.to_string().contains("wire"), "{err:#}");
+        // Zero layers.
+        let mut zero = Vec::new();
+        zero.extend_from_slice(&0u32.to_le_bytes());
+        let mut pos = 0;
+        assert!(ModelSpec::decode_wire(&zero, &mut pos).is_err());
+        // Non-chaining stack decodes to a typed error.
+        let mut chain = Vec::new();
+        chain.extend_from_slice(&2u32.to_le_bytes());
+        for (i, o) in [(2u32, 3u32), (4, 1)] {
+            chain.extend_from_slice(&i.to_le_bytes());
+            chain.extend_from_slice(&o.to_le_bytes());
+            chain.push(Activation::Sigmoid as u8);
+        }
+        let mut pos = 0;
+        let err = ModelSpec::decode_wire(&chain, &mut pos).unwrap_err();
+        assert!(format!("{err:#}").contains("invalid stack"), "{err:#}");
+    }
+
+    #[test]
+    fn model_id_resolver_covers_legacy_ids_and_the_grammar() {
+        assert_eq!(ModelSpec::from_model_id("xor221").unwrap().widths(), vec![2, 2, 1]);
+        assert_eq!(ModelSpec::from_model_id("parity441").unwrap().widths(), vec![4, 4, 1]);
+        assert_eq!(ModelSpec::from_model_id("nist744").unwrap().widths(), vec![49, 4, 4]);
+        assert_eq!(
+            ModelSpec::from_model_id("fmnist_mlp").unwrap().widths(),
+            vec![784, 32, 10]
+        );
+        assert_eq!(
+            ModelSpec::from_model_id("8x4x2:relu,softmax").unwrap().to_string(),
+            "8x4x2:relu,softmax"
+        );
+        let err = ModelSpec::from_model_id("fmnist_cnn").unwrap_err();
+        assert!(err.to_string().contains("CNN"), "{err:#}");
+        assert!(ModelSpec::from_model_id("not-a-model").is_err());
+    }
+
+    #[test]
+    fn artifact_stem_is_deterministic() {
+        let spec: ModelSpec = "49x4x4".parse().unwrap();
+        assert_eq!(spec.artifact_stem(), "mlp_49x4x4_sigmoid-sigmoid");
+        let spec: ModelSpec = "784x128x64x10:relu,relu,softmax".parse().unwrap();
+        assert_eq!(spec.artifact_stem(), "mlp_784x128x64x10_relu-relu-softmax");
+    }
+}

@@ -60,7 +60,14 @@ impl NoiseConfig {
 /// Static per-neuron generalized-logistic defects (Fig. 10).
 ///
 /// `f_k(a) = α_k / (1 + e^{−β_k (a − a_k)}) + b_k`
-#[derive(Debug, Clone)]
+///
+/// The table covers all non-input neurons, layer by layer.  How a defect
+/// transforms a non-sigmoid activation is defined by
+/// [`crate::device::NativeDevice`]'s executor: `f_k(a) = α_k · act(β_k (a
+/// − a_k)) + b_k` elementwise (for sigmoid this *is* the formula above),
+/// and for softmax the β/a pair warps the pre-activations while α/b
+/// scale-and-offset the resulting probabilities.
+#[derive(Debug, Clone, PartialEq)]
 pub struct NeuronDefects {
     pub alpha: Vec<f32>,
     pub beta: Vec<f32>,

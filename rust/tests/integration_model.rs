@@ -1,0 +1,396 @@
+//! The `ModelSpec` refactor seam, pinned.
+//!
+//! PR 4 rebuilt `NativeDevice` from a fixed-shape sigmoid engine into a
+//! generic [`mgd::model::ModelSpec`] executor.  The refactor's contract
+//! is **bit-identity**: for the legacy `[in, h, out]` all-sigmoid shape,
+//! `cost` / `cost_many` must reproduce the pre-refactor arithmetic bit
+//! for bit — so every seeded experiment, checkpoint and trajectory in
+//! the repository's history stays reproducible.  This suite keeps a
+//! verbatim copy of the *pre-refactor* forward pass as the reference and
+//! checks the live device against it across all four perturbation
+//! families, then exercises the new capability (depth-4, mixed
+//! activations) end to end: `step_window` bit-identity against the
+//! serial loop, and checkpoint round-trips that carry the spec identity.
+
+use mgd::coordinator::{
+    checkpoint_path, load_snapshot, train_checkpointed, CheckpointConfig, MgdConfig,
+    MgdTrainer, ScheduleKind, TrainOptions,
+};
+use mgd::datasets::nist7x7;
+use mgd::device::{HardwareDevice, NativeDevice};
+use mgd::model::ModelSpec;
+use mgd::noise::NeuronDefects;
+use mgd::optim::init_params_uniform;
+use mgd::perturb::{self, PerturbKind, Perturbation};
+use mgd::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// Pre-refactor reference engine (verbatim arithmetic of the PR 2/3
+// fixed-shape NativeDevice: layer-0 base + per-probe forward, sigmoid
+// through the defect table on every layer).
+// ---------------------------------------------------------------------------
+
+fn ref_mse(y_pred: &[f32], y_true: &[f32]) -> f32 {
+    let sum: f32 = y_pred
+        .iter()
+        .zip(y_true)
+        .map(|(p, t)| {
+            let d = p - t;
+            d * d
+        })
+        .sum();
+    sum / y_pred.len() as f32
+}
+
+fn ref_layer0_base(layers: &[usize], theta: &[f32], x: &[f32], n: usize, base: &mut [f32]) {
+    let width = layers[0];
+    let n_out = layers[1];
+    let wlen = width * n_out;
+    let bias = &theta[wlen..wlen + n_out];
+    for s in 0..n {
+        let h = &x[s * width..(s + 1) * width];
+        let zrow = &mut base[s * n_out..(s + 1) * n_out];
+        zrow.copy_from_slice(bias);
+        for (i, &hv) in h.iter().enumerate() {
+            let wrow = &theta[i * n_out..(i + 1) * n_out];
+            for (z, &wv) in zrow.iter_mut().zip(wrow) {
+                *z += hv * wv;
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn ref_forward_one(
+    layers: &[usize],
+    theta: &[f32],
+    defects: &NeuronDefects,
+    x: &[f32],
+    n: usize,
+    base: &[f32],
+    tilde: Option<&[f32]>,
+    acts_a: &mut [f32],
+    acts_b: &mut [f32],
+    pert_row: &mut [f32],
+    out: &mut [f32],
+) {
+    let n_layers = layers.len() - 1;
+    let mut acts_a = acts_a;
+    let mut acts_b = acts_b;
+    let mut width = layers[0];
+    let mut offset = 0usize;
+    let mut neuron_base = 0usize;
+    for li in 0..n_layers {
+        let n_out = layers[li + 1];
+        let wlen = width * n_out;
+        for s in 0..n {
+            let h: &[f32] = if li == 0 {
+                &x[s * width..(s + 1) * width]
+            } else {
+                &acts_a[s * width..(s + 1) * width]
+            };
+            let zrow = &mut acts_b[s * n_out..(s + 1) * n_out];
+            if li == 0 {
+                zrow.copy_from_slice(&base[s * n_out..(s + 1) * n_out]);
+            } else {
+                zrow.copy_from_slice(&theta[offset + wlen..offset + wlen + n_out]);
+                for (i, &hv) in h.iter().enumerate() {
+                    let wrow = &theta[offset + i * n_out..offset + (i + 1) * n_out];
+                    for (z, &wv) in zrow.iter_mut().zip(wrow) {
+                        *z += hv * wv;
+                    }
+                }
+            }
+            if let Some(tt) = tilde {
+                let prow = &mut pert_row[..n_out];
+                prow.copy_from_slice(&tt[offset + wlen..offset + wlen + n_out]);
+                for (i, &hv) in h.iter().enumerate() {
+                    let trow = &tt[offset + i * n_out..offset + (i + 1) * n_out];
+                    for (pz, &tv) in prow.iter_mut().zip(trow) {
+                        *pz += hv * tv;
+                    }
+                }
+                for (z, &pv) in zrow.iter_mut().zip(prow.iter()) {
+                    *z += pv;
+                }
+            }
+            for (j, z) in zrow.iter_mut().enumerate() {
+                *z = defects.activate(neuron_base + j, *z);
+            }
+        }
+        std::mem::swap(&mut acts_a, &mut acts_b);
+        offset += wlen + n_out;
+        neuron_base += n_out;
+        width = n_out;
+    }
+    out.copy_from_slice(&acts_a[..n * width]);
+}
+
+/// Pre-refactor `cost(Some(tilde))` / `cost(None)` for the legacy shape.
+fn ref_cost(
+    layers: &[usize],
+    theta: &[f32],
+    defects: &NeuronDefects,
+    x: &[f32],
+    y: &[f32],
+    n: usize,
+    tilde: Option<&[f32]>,
+) -> f32 {
+    let widest = *layers.iter().max().unwrap();
+    let n_out = *layers.last().unwrap();
+    let mut base = vec![0f32; n * layers[1]];
+    let mut acts_a = vec![0f32; widest * n];
+    let mut acts_b = vec![0f32; widest * n];
+    let mut pert = vec![0f32; widest];
+    let mut out = vec![0f32; n * n_out];
+    ref_layer0_base(layers, theta, x, n, &mut base);
+    ref_forward_one(
+        layers, theta, defects, x, n, &base, tilde, &mut acts_a, &mut acts_b, &mut pert,
+        &mut out,
+    );
+    ref_mse(&out, y)
+}
+
+// ---------------------------------------------------------------------------
+
+/// Deterministic test fixtures for a legacy shape: θ, batch, defects.
+struct Fixture {
+    layers: Vec<usize>,
+    theta: Vec<f32>,
+    defects: NeuronDefects,
+    x: Vec<f32>,
+    y: Vec<f32>,
+    n: usize,
+}
+
+fn fixture(layers: &[usize], n: usize, seed: u64, defect_sigma: f32) -> Fixture {
+    let spec = ModelSpec::sigmoid_mlp(layers);
+    let mut rng = Rng::new(seed);
+    let mut theta = vec![0f32; spec.param_count()];
+    rng.fill_uniform(&mut theta, -1.0, 1.0);
+    let defects = if defect_sigma > 0.0 {
+        NeuronDefects::sample(spec.n_neurons(), defect_sigma, &mut rng)
+    } else {
+        NeuronDefects::identity(spec.n_neurons())
+    };
+    let mut x = vec![0f32; n * layers[0]];
+    let mut y = vec![0f32; n * layers[layers.len() - 1]];
+    rng.fill_uniform(&mut x, 0.0, 1.0);
+    rng.fill_uniform(&mut y, 0.0, 1.0);
+    Fixture { layers: layers.to_vec(), theta, defects, x, y, n }
+}
+
+#[test]
+fn legacy_shape_cost_matches_pre_refactor_engine_bitwise() {
+    for (layers, n, sigma) in [
+        (vec![2, 2, 1], 1, 0.0),
+        (vec![4, 4, 1], 2, 0.0),
+        (vec![49, 4, 4], 1, 0.5),
+        (vec![49, 4, 4], 3, 0.0),
+    ] {
+        let f = fixture(&layers, n, 101 + n as u64, sigma);
+        let mut dev =
+            NativeDevice::with_defects(&f.layers, f.n, f.defects.clone());
+        dev.set_params(&f.theta).unwrap();
+        dev.load_batch(&f.x, &f.y).unwrap();
+        let want = ref_cost(&f.layers, &f.theta, &f.defects, &f.x, &f.y, f.n, None);
+        let got = dev.cost(None).unwrap();
+        assert_eq!(
+            got.to_bits(),
+            want.to_bits(),
+            "{layers:?} n={n} σ={sigma}: baseline cost drifted across the refactor"
+        );
+    }
+}
+
+#[test]
+fn legacy_shape_cost_many_matches_pre_refactor_engine_for_all_perturb_kinds() {
+    // Probe stacks drawn from each of the paper's four perturbation
+    // families (the exact vectors training would send), evaluated both
+    // through the live ModelSpec executor and the pre-refactor
+    // reference: every cost must agree bit for bit, serial and batched.
+    let kinds = [
+        PerturbKind::RademacherCode,
+        PerturbKind::WalshCode,
+        PerturbKind::Sequential,
+        PerturbKind::Sinusoidal,
+    ];
+    let layers = vec![49usize, 4, 4];
+    let f = fixture(&layers, 2, 202, 0.3);
+    let p: usize = ModelSpec::sigmoid_mlp(&layers).param_count();
+    let mut dev = NativeDevice::with_defects(&f.layers, f.n, f.defects.clone());
+    dev.set_params(&f.theta).unwrap();
+    dev.load_batch(&f.x, &f.y).unwrap();
+    for kind in kinds {
+        let mut gen = perturb::make(kind, p, 0.01, 2, 17);
+        let k = 6;
+        let mut probes = vec![0f32; k * p];
+        for i in 0..k {
+            gen.fill(i as u64, &mut probes[i * p..(i + 1) * p]);
+        }
+        let batched = dev.cost_many(&probes, k).unwrap();
+        for (i, &c) in batched.iter().enumerate() {
+            let tt = &probes[i * p..(i + 1) * p];
+            let want = ref_cost(&f.layers, &f.theta, &f.defects, &f.x, &f.y, f.n, Some(tt));
+            assert_eq!(
+                c.to_bits(),
+                want.to_bits(),
+                "{kind:?} probe {i}: batched cost drifted across the refactor"
+            );
+            let serial = dev.cost(Some(tt)).unwrap();
+            assert_eq!(serial.to_bits(), want.to_bits(), "{kind:?} probe {i}: serial");
+        }
+    }
+}
+
+fn depth4_device(seed: u64) -> NativeDevice {
+    let spec: ModelSpec = "49x12x8x4:relu,tanh,softmax".parse().unwrap();
+    let mut dev = NativeDevice::from_spec(spec, 1).unwrap();
+    let mut rng = Rng::new(seed);
+    let mut theta = vec![0f32; dev.n_params()];
+    init_params_uniform(&mut rng, &mut theta, 1.0);
+    dev.set_params(&theta).unwrap();
+    dev
+}
+
+#[test]
+fn depth4_step_window_matches_serial_steps_bitwise() {
+    // The PR 2 exactness contract — step_window ≡ K serial steps — must
+    // survive arbitrary depth and mixed activations, for both stateful
+    // generator families.
+    let data = nist7x7(64, 5);
+    for kind in [PerturbKind::RademacherCode, PerturbKind::Sinusoidal] {
+        let cfg = MgdConfig {
+            eta: 0.5,
+            amplitude: 0.05,
+            tau_x: 3,
+            tau_theta: 4,
+            kind,
+            seed: 9,
+            ..Default::default()
+        };
+        let mut dev_a = depth4_device(33);
+        let mut dev_b = depth4_device(33);
+        let mut serial = MgdTrainer::new(&mut dev_a, &data, cfg, ScheduleKind::Cyclic);
+        let mut windowed = MgdTrainer::new(&mut dev_b, &data, cfg, ScheduleKind::Cyclic);
+        let mut serial_outs = Vec::new();
+        for _ in 0..48 {
+            serial_outs.push(serial.step().unwrap());
+        }
+        let mut windowed_outs = Vec::new();
+        for k in [5usize, 1, 7, 2, 11].iter().cycle() {
+            if windowed.steps() >= 48 {
+                break;
+            }
+            let k = (*k).min(48 - windowed.steps() as usize);
+            windowed_outs.extend(windowed.step_window(k).unwrap());
+        }
+        assert_eq!(serial_outs.len(), windowed_outs.len());
+        for (s, w) in serial_outs.iter().zip(&windowed_outs) {
+            assert_eq!(s.cost.to_bits(), w.cost.to_bits(), "{kind:?} step {}", s.step);
+            assert_eq!(s.updated, w.updated, "{kind:?} step {}", s.step);
+        }
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(serial.gradient()), bits(windowed.gradient()), "{kind:?} G");
+        assert_eq!(
+            bits(&serial.device_params().unwrap()),
+            bits(&windowed.device_params().unwrap()),
+            "{kind:?} θ"
+        );
+        assert_eq!(serial.cost_evals(), windowed.cost_evals(), "{kind:?}");
+    }
+}
+
+#[test]
+fn depth4_checkpoint_roundtrips_with_spec_identity() {
+    let dir = std::env::temp_dir().join(format!(
+        "mgd-model-ckpt-{}-{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    std::fs::remove_dir_all(&dir).ok();
+    let data = nist7x7(64, 6);
+    let spec: ModelSpec = "49x12x8x4:relu,tanh,softmax".parse().unwrap();
+    let cfg = MgdConfig {
+        eta: 0.5,
+        amplitude: 0.05,
+        tau_x: 2,
+        tau_theta: 4,
+        seed: 13,
+        ..Default::default()
+    };
+    let opts = TrainOptions { max_steps: 60, eval_every: 20, ..Default::default() };
+
+    // Uninterrupted reference.
+    let mut dev_a = depth4_device(44);
+    let mut tr_a = MgdTrainer::new(&mut dev_a, &data, cfg, ScheduleKind::Cyclic);
+    tr_a.train_batched(&opts, None, 3).unwrap();
+
+    // Checkpointed every 7 steps, then "crash" at step 28 and resume in
+    // a fresh process-alike (new device, new trainer, restore).
+    let ck = CheckpointConfig { dir: dir.clone(), every_steps: 7, resume: false };
+    let mut dev_b = depth4_device(44);
+    let mut tr_b = MgdTrainer::new(&mut dev_b, &data, cfg, ScheduleKind::Cyclic);
+    let mid = TrainOptions { max_steps: 28, ..opts.clone() };
+    train_checkpointed(&mut tr_b, &mid, None, 3, &ck).unwrap();
+    drop(tr_b);
+
+    let snap = load_snapshot(&checkpoint_path(&dir)).unwrap();
+    assert_eq!(snap.model.as_deref(), Some("49x12x8x4:relu,tanh,softmax"));
+    assert_eq!(snap.spec_hash, Some(spec.spec_hash()));
+    assert_eq!(snap.step, 28);
+
+    let mut dev_c = depth4_device(44);
+    let mut tr_c = MgdTrainer::new(&mut dev_c, &data, cfg, ScheduleKind::Cyclic);
+    let ck_resume = CheckpointConfig { dir: dir.clone(), every_steps: 7, resume: true };
+    train_checkpointed(&mut tr_c, &opts, None, 3, &ck_resume).unwrap();
+
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+    assert_eq!(tr_a.steps(), tr_c.steps());
+    assert_eq!(tr_a.cost_evals(), tr_c.cost_evals());
+    assert_eq!(bits(tr_a.gradient()), bits(tr_c.gradient()), "G diverged across resume");
+    assert_eq!(
+        bits(&tr_a.device_params().unwrap()),
+        bits(&tr_c.device_params().unwrap()),
+        "θ diverged across resume"
+    );
+
+    // A same-P different-model device refuses the snapshot (spec gate).
+    let mut wrong = NativeDevice::from_spec(
+        "49x12x8x4:sigmoid,sigmoid,sigmoid".parse().unwrap(),
+        1,
+    )
+    .unwrap();
+    let flat = vec![0.1f32; wrong.n_params()];
+    wrong.set_params(&flat).unwrap();
+    let mut tr_w = MgdTrainer::new(&mut wrong, &data, cfg, ScheduleKind::Cyclic);
+    let err = tr_w.restore(&snap).unwrap_err();
+    assert!(format!("{err:#}").contains("49x12x8x4:relu,tanh,softmax"), "{err:#}");
+
+    // Saving the restored state reproduces the on-disk checkpoint's θ.
+    let resnap = load_snapshot(&checkpoint_path(&dir)).unwrap();
+    assert_eq!(resnap.step, 60);
+    assert_eq!(bits(&resnap.theta), bits(&tr_a.device_params().unwrap()));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn spec_parse_reaches_the_device_with_the_right_layout() {
+    // End-to-end through the public grammar: parse → device → train a
+    // few windows — the wiring the CLI uses, minus argv.
+    let spec: ModelSpec = "49x6x4:relu,softmax".parse().unwrap();
+    let mut dev = NativeDevice::from_spec(spec.clone(), 1).unwrap();
+    assert_eq!(dev.n_params(), spec.param_count());
+    let mut rng = Rng::new(3);
+    let mut theta = vec![0f32; dev.n_params()];
+    init_params_uniform(&mut rng, &mut theta, 1.0);
+    dev.set_params(&theta).unwrap();
+    let data = nist7x7(32, 8);
+    let cfg = MgdConfig { eta: 0.5, amplitude: 0.05, tau_theta: 4, seed: 2, ..Default::default() };
+    let mut tr = MgdTrainer::new(&mut dev, &data, cfg, ScheduleKind::Cyclic);
+    let opts = TrainOptions { max_steps: 40, eval_every: 20, ..Default::default() };
+    let res = tr.train_batched(&opts, None, 4).unwrap();
+    assert_eq!(res.steps_run, 40);
+    assert!(res.cost_evals > 0);
+    assert!(tr.device_params().unwrap().iter().all(|v| v.is_finite()));
+}

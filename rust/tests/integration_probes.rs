@@ -308,11 +308,12 @@ fn cost_many_issues_one_frame_per_window() {
             .expect("no session_closed event");
         closed.field("requests").unwrap().as_u64().unwrap()
     };
-    // Hello + SetParams + LoadBatch + Bye = 4 bookkeeping requests.
+    // Hello + ModelSpec negotiation + SetParams + LoadBatch + Bye = 5
+    // bookkeeping requests per session.
     let serial = session_requests(false);
     let batched = session_requests(true);
-    assert_eq!(serial, 4 + k as u64, "serial path must cost one frame per probe");
-    assert_eq!(batched, 4 + 1, "batched path must cost one frame per window");
+    assert_eq!(serial, 5 + k as u64, "serial path must cost one frame per probe");
+    assert_eq!(batched, 5 + 1, "batched path must cost one frame per window");
 }
 
 /// The chunk limit the real client uses is exactly the protocol bound.
