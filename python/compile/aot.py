@@ -68,6 +68,39 @@ ARTIFACT_DIMS: dict[str, tuple[int, int, int, ScanDims]] = {
     "cifar_cnn": (100, 256, 100, ScanDims(n_steps=50, batch=100, dataset_n=4096)),
 }
 
+# Grammar-spec models (arbitrary ``784x128x64x10:relu,relu,softmax``
+# stacks) have no per-model dim table; they get the chip-in-the-loop
+# defaults (cost batch 1 = one sample at a time, a 256-row eval batch,
+# and a generic resident-dataset scan window).
+DEFAULT_SPEC_DIMS: tuple[int, int, int, ScanDims] = (
+    1,
+    256,
+    1,
+    ScanDims(n_steps=1000, batch=1, dataset_n=2048),
+)
+
+
+def dims_for(spec: M.MlpSpec | M.CnnSpec) -> tuple[int, int, int, ScanDims]:
+    """Artifact dims for a model: the curated table for the paper's
+    models, :data:`DEFAULT_SPEC_DIMS` for grammar-spec stacks."""
+    return ARTIFACT_DIMS.get(spec.name, DEFAULT_SPEC_DIMS)
+
+
+def resolve_model(name: str) -> M.MlpSpec | M.CnnSpec:
+    """A build target: a curated model id, or a spec-grammar string that
+    registers under its canonical ``mlp_<widths>_<acts>`` stem — the
+    name ``PjrtDevice::for_spec`` falls back to, so any ``--model`` spec
+    the Rust CLI accepts can be compiled here verbatim."""
+    if name in M.MODELS:
+        return M.MODELS[name]
+    try:
+        return M.parse_spec(name)
+    except ValueError as e:
+        raise ValueError(
+            f"unknown model {name!r}: not a curated id ({list(M.MODELS)}) and not a "
+            f"model spec ({e})"
+        ) from None
+
 F32 = jnp.float32
 
 
@@ -98,7 +131,7 @@ def artifact_specs(spec: M.MlpSpec | M.CnnSpec) -> dict[str, tuple[Callable, lis
     p = spec.param_count
     in_shape = spec.input_shape
     k = spec.n_outputs
-    b_cost, b_eval, b_train, scan = ARTIFACT_DIMS[spec.name]
+    b_cost, b_eval, b_train, scan = dims_for(spec)
 
     def xin(b):
         return (b, *in_shape)
@@ -181,7 +214,7 @@ def lower_artifact(fn: Callable, inputs: list[tuple[str, tuple, str]]) -> tuple[
 
 def model_manifest_entry(spec: M.MlpSpec | M.CnnSpec) -> dict:
     """Everything Rust needs to own the parameter bus for this model."""
-    b_cost, b_eval, b_train, scan = ARTIFACT_DIMS[spec.name]
+    b_cost, b_eval, b_train, scan = dims_for(spec)
     entry = {
         "param_count": spec.param_count,
         "input_shape": list(spec.input_shape),
@@ -200,7 +233,11 @@ def model_manifest_entry(spec: M.MlpSpec | M.CnnSpec) -> dict:
     }
     if isinstance(spec, M.MlpSpec):
         entry["layers"] = list(spec.layers)
-        entry["activation"] = spec.activation
+        # Uniform stacks keep the legacy single-token form; mixed stacks
+        # write the full per-layer comma list (the Rust manifest reader
+        # parses both into the same typed ModelSpec).
+        acts = spec.layer_activations
+        entry["activation"] = acts[0] if len(set(acts)) == 1 else ",".join(acts)
     return entry
 
 
@@ -224,7 +261,10 @@ def build(out_dir: str, models: list[str], kinds: list[str] | None) -> None:
 
     existing = {a["name"]: a for a in manifest["artifacts"]}
     for name in models:
-        spec = M.MODELS[name]
+        # Grammar specs register under their canonical stem, so
+        # `spec.name` (not the raw argument) keys everything below.
+        spec = resolve_model(name)
+        name = spec.name
         manifest["models"][name] = model_manifest_entry(spec)
         for kind, (fn, inputs) in artifact_specs(spec).items():
             if kinds and kind not in kinds:
@@ -260,7 +300,12 @@ def main() -> None:
     ap.add_argument(
         "--models",
         default=",".join(M.MODELS),
-        help=f"comma-separated subset of: {','.join(M.MODELS)}",
+        help=(
+            f"comma-separated mix of curated ids ({','.join(M.MODELS)}) and/or "
+            "model specs like 784x128x64x10:relu;relu;softmax — spec activations "
+            "may be separated with ';' here (',' splits the model list) and "
+            "artifacts land under the canonical mlp_<widths>_<acts> stem"
+        ),
     )
     ap.add_argument(
         "--kinds",
@@ -268,10 +313,14 @@ def main() -> None:
         help="comma-separated subset of artifact kinds (default: all)",
     )
     args = ap.parse_args()
-    models = [m.strip() for m in args.models.split(",") if m.strip()]
+    # ',' splits the model list, so spec activations use ';' on the CLI
+    # (`49x4x4:relu;relu`); normalize to the grammar's ',' per item.
+    models = [m.strip().replace(";", ",") for m in args.models.split(",") if m.strip()]
     for m in models:
-        if m not in M.MODELS:
-            raise SystemExit(f"unknown model {m!r}; known: {list(M.MODELS)}")
+        try:
+            resolve_model(m)
+        except ValueError as e:
+            raise SystemExit(str(e)) from None
     kinds = [k.strip() for k in args.kinds.split(",") if k.strip()] or None
     build(args.out_dir, models, kinds)
 

@@ -18,16 +18,30 @@ import jax.numpy as jnp
 def activate(z: jnp.ndarray, activation: str) -> jnp.ndarray:
     """Apply a named activation function.
 
-    Supported names mirror what the paper's networks use:
-    ``sigmoid`` (XOR / parity / NIST7x7 MLPs), ``relu`` (CNN conv stacks)
-    and ``linear`` (final fully-connected layers, no softmax - section 3.6).
+    The paper's networks use ``sigmoid`` (XOR / parity / NIST7x7 MLPs),
+    ``relu`` (CNN conv stacks) and ``linear`` (final fully-connected
+    layers, no softmax - section 3.6).  The remaining names mirror the
+    Rust ``ModelSpec`` activation table (``tanh``, ``identity`` — an
+    alias of ``linear`` — and row-wise, max-shifted ``softmax``) so a
+    ``--model`` spec lowers to the same function the native executor
+    runs.
+
+    ``softmax`` normalizes over the **last axis** and therefore needs the
+    whole output row; apply it outside any output-tiled kernel (see
+    ``model.mlp_forward``).
     """
     if activation == "sigmoid":
         return 1.0 / (1.0 + jnp.exp(-z))
     if activation == "relu":
         return jnp.maximum(z, 0.0)
-    if activation == "linear":
+    if activation in ("linear", "identity"):
         return z
+    if activation == "tanh":
+        return jnp.tanh(z)
+    if activation == "softmax":
+        shifted = z - jnp.max(z, axis=-1, keepdims=True)
+        e = jnp.exp(shifted)
+        return e / jnp.sum(e, axis=-1, keepdims=True)
     raise ValueError(f"unknown activation: {activation!r}")
 
 

@@ -67,11 +67,25 @@ class TensorSpec:
 
 @dataclasses.dataclass(frozen=True)
 class MlpSpec:
-    """Fully-connected sigmoid network (paper's XOR / parity / NIST7x7 nets)."""
+    """Fully-connected network (paper's XOR / parity / NIST7x7 nets).
+
+    ``activation`` broadcasts to every layer (the paper's all-sigmoid
+    shape); ``activations`` — when non-empty — gives one name per weight
+    layer and takes precedence, mirroring the Rust ``ModelSpec`` grammar
+    (``784x128x64x10:relu,relu,softmax``).
+    """
 
     name: str
     layers: tuple[int, ...]  # e.g. (49, 4, 4)
     activation: str = "sigmoid"
+    activations: tuple[str, ...] = ()
+
+    def __post_init__(self):
+        if self.activations and len(self.activations) != len(self.layers) - 1:
+            raise ValueError(
+                f"{self.name}: {len(self.activations)} activations for "
+                f"{len(self.layers) - 1} layers"
+            )
 
     @property
     def input_shape(self) -> tuple[int, ...]:
@@ -80,6 +94,13 @@ class MlpSpec:
     @property
     def n_outputs(self) -> int:
         return self.layers[-1]
+
+    @property
+    def layer_activations(self) -> tuple[str, ...]:
+        """One activation name per weight layer (broadcast resolved)."""
+        if self.activations:
+            return self.activations
+        return (self.activation,) * (len(self.layers) - 1)
 
     def tensors(self) -> list[TensorSpec]:
         specs = []
@@ -91,6 +112,63 @@ class MlpSpec:
     @property
     def param_count(self) -> int:
         return sum(t.size for t in self.tensors())
+
+
+# Accepted activation spellings -> canonical token (the Rust
+# ``Activation::as_str`` names, which the canonical artifact stem embeds).
+_ACT_ALIASES = {
+    "sigmoid": "sigmoid",
+    "sig": "sigmoid",
+    "relu": "relu",
+    "tanh": "tanh",
+    "identity": "identity",
+    "id": "identity",
+    "linear": "identity",
+    "softmax": "softmax",
+}
+
+
+def canonical_stem(layers: tuple[int, ...], acts: tuple[str, ...]) -> str:
+    """The canonical artifact stem for a dense stack:
+    ``mlp_<widths 'x'-joined>_<acts '-'-joined>`` — byte-identical to the
+    Rust side's ``ModelSpec::artifact_stem`` for the same spec, which is
+    what lets ``PjrtDevice::for_spec`` fall back to a stem lookup."""
+    return f"mlp_{'x'.join(str(w) for w in layers)}_{'-'.join(acts)}"
+
+
+def parse_spec(text: str) -> MlpSpec:
+    """Parse the ``--model`` spec grammar into an :class:`MlpSpec`.
+
+    Same grammar as the Rust ``ModelSpec::from_str``:
+    ``WxWx...W[:act,act,...]`` — widths input-first, one activation per
+    weight layer (a single activation broadcasts; no suffix means all
+    sigmoid).  The resulting spec is named by :func:`canonical_stem`.
+    """
+    widths_part, _, acts_part = text.partition(":")
+    try:
+        layers = tuple(int(w) for w in widths_part.split("x"))
+    except ValueError as e:
+        raise ValueError(f"bad layer width in model spec {text!r}: {e}") from None
+    if len(layers) < 2 or any(w < 1 for w in layers):
+        raise ValueError(f"invalid model spec {text!r}: need >= 2 positive widths")
+    n_layers = len(layers) - 1
+    if acts_part:
+        try:
+            acts = tuple(_ACT_ALIASES[a.strip()] for a in acts_part.split(","))
+        except KeyError as e:
+            raise ValueError(
+                f"unknown activation {e.args[0]!r} in model spec {text!r} "
+                f"(known: {sorted(set(_ACT_ALIASES))})"
+            ) from None
+        if len(acts) == 1:
+            acts = acts * n_layers
+        if len(acts) != n_layers:
+            raise ValueError(
+                f"model spec {text!r}: {len(acts)} activations for {n_layers} layers"
+            )
+    else:
+        acts = ("sigmoid",) * n_layers
+    return MlpSpec(canonical_stem(layers, acts), layers, activations=acts)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -213,13 +291,21 @@ def mlp_forward(
     )
     h = x
     n_layers = len(spec.layers) - 1
+    acts = spec.layer_activations
     for li in range(n_layers):
         w, b = tensors[2 * li], tensors[2 * li + 1]
         wt, bt = tilde[2 * li], tilde[2 * li + 1]
+        act = acts[li]
+        # Softmax normalizes over the whole output row, so it cannot run
+        # inside the output-tiled Pallas kernel: compute the linear part
+        # in the kernel, normalize outside (the reference path matches).
+        tile_act = "linear" if act == "softmax" else act
         if use_pallas:
-            h = dense.dense_forward(h, w, b, wt, bt, spec.activation)
+            h = dense.dense_forward(h, w, b, wt, bt, tile_act)
         else:
-            h = ref.dense_forward_ref(h, w, b, wt, bt, spec.activation)
+            h = ref.dense_forward_ref(h, w, b, wt, bt, tile_act)
+        if act == "softmax":
+            h = ref.activate(h, "softmax")
     return h
 
 

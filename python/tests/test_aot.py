@@ -87,6 +87,42 @@ def test_sha256_matches_file(built):
     assert hashlib.sha256(text.encode()).hexdigest() == art["sha256"]
 
 
+def test_spec_model_builds_under_the_canonical_stem(built):
+    """A grammar spec compiles to artifacts named by its canonical
+    ``mlp_<widths>_<acts>`` stem — exactly what ``PjrtDevice::for_spec``
+    looks up — with the per-layer activation list in the manifest."""
+    aot.build(str(built), ["4x3x2:relu,softmax"], kinds=["cost", "eval"])
+    with open(built / "manifest.json") as f:
+        manifest = json.load(f)
+    stem = "mlp_4x3x2_relu-softmax"
+    assert stem in manifest["models"]
+    model = manifest["models"][stem]
+    assert model["layers"] == [4, 3, 2]
+    assert model["activation"] == "relu,softmax"
+    assert model["param_count"] == 4 * 3 + 3 + 3 * 2 + 2
+    names = {a["name"] for a in manifest["artifacts"]}
+    assert f"{stem}_cost" in names
+    assert f"{stem}_eval" in names
+    for art in manifest["artifacts"]:
+        if art["model"] == stem:
+            assert os.path.exists(built / art["file"]), art["file"]
+    # Uniform stacks keep the legacy single-token activation form.
+    aot.build(str(built), ["3x3x1:relu"], kinds=["cost"])
+    with open(built / "manifest.json") as f:
+        manifest = json.load(f)
+    assert manifest["models"]["mlp_3x3x1_relu-relu"]["activation"] == "relu"
+
+
+def test_resolve_model_accepts_ids_and_specs():
+    assert aot.resolve_model("xor221") is M.MODELS["xor221"]
+    spec = aot.resolve_model("49x4x4:relu,relu")
+    assert spec.name == "mlp_49x4x4_relu-relu"
+    assert aot.dims_for(spec) == aot.DEFAULT_SPEC_DIMS
+    assert aot.dims_for(M.MODELS["xor221"]) == aot.ARTIFACT_DIMS["xor221"]
+    with pytest.raises(ValueError):
+        aot.resolve_model("not-a-model")
+
+
 def test_artifact_dims_consistent_with_models():
     for name, (b_cost, b_eval, b_train, scan) in aot.ARTIFACT_DIMS.items():
         spec = M.MODELS[name]

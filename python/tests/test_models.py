@@ -71,6 +71,38 @@ def test_mlp_output_shape_and_range():
     assert np.all((np.asarray(y) >= 0) & (np.asarray(y) <= 1)), "sigmoid range"
 
 
+def test_spec_grammar_parses_to_canonical_stems():
+    spec = M.parse_spec("784x128x64x10:relu,relu,softmax")
+    assert spec.name == "mlp_784x128x64x10_relu-relu-softmax"
+    assert spec.layers == (784, 128, 64, 10)
+    assert spec.layer_activations == ("relu", "relu", "softmax")
+    # No suffix -> all sigmoid; a single activation broadcasts; aliases
+    # normalize to the canonical (Rust Activation::as_str) tokens.
+    assert M.parse_spec("49x4x4").name == "mlp_49x4x4_sigmoid-sigmoid"
+    assert M.parse_spec("8x8x8x2:relu").layer_activations == ("relu",) * 3
+    assert M.parse_spec("4x4x1:sig,linear").layer_activations == ("sigmoid", "identity")
+    assert M.parse_spec("4x4x1:sig,linear").name == "mlp_4x4x1_sigmoid-identity"
+    for bad in ["", "784", "4x0x2", "4xtwox2", "4x4x2:swish", "4x4x2:relu,relu,relu"]:
+        with pytest.raises(ValueError):
+            M.parse_spec(bad)
+
+
+@settings(**COMMON)
+@given(seed=st.integers(0, 2**31 - 1), batch=st.integers(1, 8))
+def test_mixed_activation_pallas_equals_ref_path(seed, batch):
+    """Per-layer activations (incl. the outside-the-kernel softmax) agree
+    between the Pallas and jnp paths, and softmax rows normalize."""
+    spec = M.parse_spec("6x8x5x3:relu,tanh,softmax")
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    theta = jax.random.normal(ks[0], (spec.param_count,), jnp.float32)
+    tt = 0.01 * jax.random.rademacher(ks[1], (spec.param_count,), jnp.float32)
+    x = jax.random.uniform(ks[2], (batch, 6), jnp.float32)
+    a = M.mlp_forward(spec, theta, x, tt, use_pallas=True)
+    b = M.mlp_forward(spec, theta, x, tt, use_pallas=False)
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(a).sum(axis=-1), np.ones(batch), rtol=1e-5)
+
+
 @pytest.mark.parametrize("name", ["fmnist_cnn", "cifar_cnn"])
 def test_cnn_forward_shapes(name):
     spec = M.MODELS[name]

@@ -1,0 +1,185 @@
+//! Inference serving throughput: requests/sec, inferences (rows)/sec and
+//! latency percentiles vs the rows-per-request batch size.
+//!
+//! Two sections:
+//!
+//! 1. **engine-direct** — the forward executor alone, no wire: rows/sec
+//!    at batch 1/8/64 (the pure amortization of the per-forward fixed
+//!    cost over the rows of a batch).
+//! 2. **served (loopback TCP)** — a full `serve_infer` endpoint queried
+//!    by an `InferenceClient` at batch 1/8/64, measuring req/s, rows/s
+//!    and p50/p99 request latency.  The acceptance bar for the serving
+//!    subsystem is rows/sec at batch 64 ≥ 4× rows/sec at batch 1 on the
+//!    same engine — the same per-dispatch batching discipline that the
+//!    `CostMany` probe engine proved on the training side.
+//!
+//! ```text
+//! cargo bench --bench infer_throughput
+//! ```
+//!
+//! Env toggles (the nightly CI bench job sets both):
+//! `MGD_BENCH_QUICK=1` shrinks the sweep; `MGD_BENCH_JSON=path` appends
+//! one JSONL record (merged into `BENCH_infer.json` by the workflow).
+
+use std::net::TcpListener;
+use std::time::Instant;
+
+use mgd::bench::{emit_bench_json, json_obj, quick_mode};
+use mgd::device::exec::ForwardScratch;
+use mgd::json::Json;
+use mgd::model::ModelSpec;
+use mgd::rng::Rng;
+use mgd::serve::{
+    batcher::percentile_ms, serve_infer, BatchPolicy, InferenceClient, InferenceEngine,
+    ServeInferOptions,
+};
+
+/// Rows-per-request sweep (the acceptance criterion compares the ends).
+const BATCH_SIZES: &[usize] = &[1, 8, 64];
+
+/// A mid-size spec-model engine (NIST7x7-port shape scaled up).
+fn bench_engine() -> InferenceEngine {
+    let spec: ModelSpec = "49x64x32x4:relu,tanh,softmax".parse().unwrap();
+    let mut rng = Rng::new(13);
+    let mut theta = vec![0f32; spec.param_count()];
+    rng.fill_uniform(&mut theta, -1.0, 1.0);
+    InferenceEngine::new(spec, theta).unwrap()
+}
+
+fn input_rows(n: usize, input_len: usize) -> Vec<f32> {
+    let mut rng = Rng::new(29);
+    let mut x = vec![0f32; n * input_len];
+    rng.fill_uniform(&mut x, 0.0, 1.0);
+    x
+}
+
+fn bench_engine_direct(quick: bool) -> Vec<Json> {
+    let engine = bench_engine();
+    let d = engine.input_len();
+    let total_rows: usize = if quick { 20_000 } else { 200_000 };
+    println!("engine-direct: {} (P={})", engine.spec(), engine.n_params());
+    println!("{:<8} {:>10} {:>16}", "batch", "passes", "rows/sec");
+    let mut rows_json = Vec::new();
+    let mut scratch = ForwardScratch::new();
+    let mut out = Vec::new();
+    for &b in BATCH_SIZES {
+        let x = input_rows(b, d);
+        let passes = (total_rows / b).max(1);
+        // Warmup grows the scratch outside the timing.
+        engine.infer_into(&x, b, &mut scratch, &mut out).unwrap();
+        let t0 = Instant::now();
+        let mut sink = 0f32;
+        for _ in 0..passes {
+            engine.infer_into(&x, b, &mut scratch, &mut out).unwrap();
+            sink += out[0];
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        let rows_per_sec = (passes * b) as f64 / secs;
+        println!("{b:<8} {passes:>10} {rows_per_sec:>16.0}   (sink {sink:.3})");
+        rows_json.push(json_obj(vec![
+            ("batch_rows", Json::Num(b as f64)),
+            ("rows_per_sec", Json::Num(rows_per_sec)),
+        ]));
+    }
+    rows_json
+}
+
+fn bench_served(quick: bool) -> anyhow::Result<(Vec<Json>, f64)> {
+    let engine = bench_engine();
+    let d = engine.input_len();
+    println!();
+    println!("served (loopback TCP): {}", engine.spec());
+    println!(
+        "{:<8} {:>8} {:>12} {:>14} {:>10} {:>10}",
+        "batch", "reqs", "req/s", "rows/sec", "p50 ms", "p99 ms"
+    );
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?.to_string();
+    let server = std::thread::spawn(move || {
+        serve_infer(
+            engine,
+            listener,
+            ServeInferOptions {
+                max_sessions: Some(1),
+                policy: BatchPolicy {
+                    max_batch_rows: 64,
+                    // Zero assembly delay: this bench drives ONE
+                    // sequential client, so any positive max_delay is a
+                    // pure stall floor on every request (nothing else
+                    // can arrive) that would inflate the batch-64 /
+                    // batch-1 ratio artificially.  With zero delay the
+                    // ratio measures exactly what the acceptance bar is
+                    // about: wire + dispatch overhead amortizing across
+                    // the rows of a request.
+                    max_delay: std::time::Duration::ZERO,
+                },
+                ..Default::default()
+            },
+        )
+        .unwrap()
+    });
+    let mut client = InferenceClient::connect(&addr)?;
+    let total_rows: usize = if quick { 4_000 } else { 40_000 };
+    let mut rows_json = Vec::new();
+    let mut rows_per_sec_by_batch = Vec::new();
+    for &b in BATCH_SIZES {
+        let x = input_rows(b, d);
+        let reqs = (total_rows / b).max(16);
+        // Warmup.
+        client.infer(&x, b)?;
+        let mut lat_ms = Vec::with_capacity(reqs);
+        let mut sink = 0f32;
+        let t0 = Instant::now();
+        for _ in 0..reqs {
+            let tr = Instant::now();
+            let (logits, _) = client.infer(&x, b)?;
+            lat_ms.push(tr.elapsed().as_secs_f64() * 1e3);
+            sink += logits[0];
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        let req_per_sec = reqs as f64 / secs;
+        let rows_per_sec = (reqs * b) as f64 / secs;
+        let p50 = percentile_ms(&lat_ms, 0.50);
+        let p99 = percentile_ms(&lat_ms, 0.99);
+        println!(
+            "{b:<8} {reqs:>8} {req_per_sec:>12.0} {rows_per_sec:>14.0} {p50:>10.3} \
+             {p99:>10.3}   (sink {sink:.3})"
+        );
+        rows_per_sec_by_batch.push(rows_per_sec);
+        rows_json.push(json_obj(vec![
+            ("batch_rows", Json::Num(b as f64)),
+            ("requests", Json::Num(reqs as f64)),
+            ("req_per_sec", Json::Num(req_per_sec)),
+            ("rows_per_sec", Json::Num(rows_per_sec)),
+            ("p50_ms", Json::Num(p50)),
+            ("p99_ms", Json::Num(p99)),
+        ]));
+    }
+    client.close();
+    server.join().expect("server thread");
+    let speedup = rows_per_sec_by_batch[BATCH_SIZES.len() - 1] / rows_per_sec_by_batch[0];
+    println!();
+    println!(
+        "batch-{} serving delivers {speedup:.2}x the inferences/sec of batch-1 \
+         (acceptance bar: >= 4x)",
+        BATCH_SIZES[BATCH_SIZES.len() - 1]
+    );
+    Ok((rows_json, speedup))
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = quick_mode();
+    if quick {
+        println!("infer_throughput (quick mode)");
+    }
+    let direct = bench_engine_direct(quick);
+    let (served, speedup) = bench_served(quick)?;
+    emit_bench_json(&json_obj(vec![
+        ("bench", Json::Str("infer_throughput".into())),
+        ("quick", Json::Bool(quick)),
+        ("engine_direct", Json::Arr(direct)),
+        ("served", Json::Arr(served)),
+        ("batch64_over_batch1_rows_per_sec", Json::Num(speedup)),
+    ]));
+    Ok(())
+}

@@ -149,6 +149,17 @@ impl<'d> MgdTrainer<'d> {
     /// Evaluate the device on a labelled set (the accuracy probe, exposed
     /// so fleet drivers can measure synchronized parameters without
     /// reaching around the trainer).  Returns `(cost, #correct)`.
+    ///
+    /// This is the **single** eval entry point of the trainer — the
+    /// in-loop accuracy checks of [`MgdTrainer::train_batched`] route
+    /// through it too, one batched `evaluate` device call per probe (no
+    /// per-sample loop anywhere).  For spec-carrying local devices the
+    /// call lands on the shared batched forward executor
+    /// ([`crate::device::exec`]) and its [`crate::device::exec::score_batch`]
+    /// head — the same kernels and the same prediction rule the serving
+    /// path ([`crate::serve::InferenceEngine`]) runs, so a train-time
+    /// accuracy and the served accuracy of the same checkpoint are
+    /// bit-comparable (pinned in `rust/tests/integration_serve.rs`).
     pub fn evaluate_on(&mut self, set: &Dataset) -> Result<(f32, f32)> {
         self.dev.evaluate(&set.x, &set.y, set.n)
     }
@@ -459,7 +470,7 @@ impl<'d> MgdTrainer<'d> {
                 }
                 let check = opts.eval_every > 0 && (out.step + 1) % opts.eval_every == 0;
                 if check {
-                    let (cost, correct) = self.dev.evaluate(&eval.x, &eval.y, eval.n)?;
+                    let (cost, correct) = self.evaluate_on(eval)?;
                     let acc = correct / eval.n as f32;
                     result.eval_trace.push((out.step, cost, acc));
                     let cost_hit = opts.target_cost.is_some_and(|t| cost < t);

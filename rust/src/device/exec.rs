@@ -1,0 +1,391 @@
+//! The shared layer-sweep executor: one set of forward kernels for the
+//! training and inference paths.
+//!
+//! Before the serving subsystem existed these functions lived inside
+//! [`super::NativeDevice`].  Serving needs the *same arithmetic* — a
+//! checkpoint trained on the device must answer queries with exactly the
+//! activations the trainer measured, or an accuracy number printed at
+//! train time silently disagrees with the accuracy the served model
+//! delivers.  Factoring the kernels here makes that a property of the
+//! code shape instead of a test assertion: [`super::NativeDevice`] (the
+//! training path) and [`crate::serve::InferenceEngine`] (the forward-only
+//! serving path) call the **identical functions**, so their outputs are
+//! bit-identical for the same θ by construction.  The regression pin
+//! lives in `rust/tests/integration_serve.rs`.
+//!
+//! The split mirrors the multi-probe cost engine's two phases:
+//!
+//! - [`compute_layer0_base`] — the unperturbed first-layer
+//!   pre-activations, probe-independent, computed once per device call;
+//! - [`forward_one`] — the remaining walk for one probe (or the
+//!   baseline / an inference pass when `tilde` is `None`).
+//!
+//! [`score_batch`] is the shared cost/accuracy head: the MSE cost plus
+//! the prediction rule (`>0.5` for single-output networks, row argmax
+//! otherwise) that [`super::HardwareDevice::evaluate`], the trainer's
+//! accuracy probe and the serving path must all agree on — including the
+//! tie-breaking of [`argmax_row`], which follows `Iterator::max_by`
+//! (last maximum wins on exact ties).
+
+use crate::model::{Activation, Dense};
+use crate::noise::NeuronDefects;
+
+/// Mean-squared error between a prediction block and its targets.
+pub fn mse(y_pred: &[f32], y_true: &[f32]) -> f32 {
+    debug_assert_eq!(y_pred.len(), y_true.len());
+    let sum: f32 = y_pred
+        .iter()
+        .zip(y_true)
+        .map(|(p, t)| {
+            let d = p - t;
+            d * d
+        })
+        .sum();
+    sum / y_pred.len() as f32
+}
+
+/// Apply one layer's activation to a sample's post-GEMM row, routing
+/// through the defect table (`neuron_base` indexes the layer's first
+/// neuron).
+///
+/// Sigmoid takes the [`NeuronDefects::activate`] generalized-logistic
+/// path **verbatim** — with identity defects this is the plain sigmoid
+/// the pre-refactor engine computed, bit for bit.  The other elementwise
+/// activations use the same defect shape, `α·act(β(a − a₀)) + b`, and
+/// softmax warps the pre-activations with β/a₀ before the (max-shifted,
+/// numerically stable) row normalization, then scales the probabilities
+/// with α/b.
+#[inline]
+pub fn activate_row(
+    act: Activation,
+    defects: &NeuronDefects,
+    neuron_base: usize,
+    zrow: &mut [f32],
+) {
+    match act {
+        Activation::Sigmoid => {
+            for (j, z) in zrow.iter_mut().enumerate() {
+                *z = defects.activate(neuron_base + j, *z);
+            }
+        }
+        Activation::Relu | Activation::Tanh | Activation::Identity => {
+            for (j, z) in zrow.iter_mut().enumerate() {
+                let k = neuron_base + j;
+                let a = defects.beta[k] * (*z - defects.offset_a[k]);
+                let v = match act {
+                    Activation::Relu => {
+                        if a > 0.0 {
+                            a
+                        } else {
+                            0.0
+                        }
+                    }
+                    Activation::Tanh => a.tanh(),
+                    _ => a,
+                };
+                *z = defects.alpha[k] * v + defects.offset_b[k];
+            }
+        }
+        Activation::Softmax => {
+            let mut mx = f32::NEG_INFINITY;
+            for (j, z) in zrow.iter_mut().enumerate() {
+                let k = neuron_base + j;
+                *z = defects.beta[k] * (*z - defects.offset_a[k]);
+                if *z > mx {
+                    mx = *z;
+                }
+            }
+            let mut sum = 0f32;
+            for z in zrow.iter_mut() {
+                *z = (*z - mx).exp();
+                sum += *z;
+            }
+            let inv = 1.0 / sum;
+            for (j, z) in zrow.iter_mut().enumerate() {
+                let k = neuron_base + j;
+                *z = defects.alpha[k] * (*z * inv) + defects.offset_b[k];
+            }
+        }
+    }
+}
+
+/// Unperturbed layer-0 pre-activations `z₀[s][j] = b₀[j] + Σᵢ x[s][i]·W₀[i][j]`
+/// — probe-independent, computed once per device call and shared by the
+/// baseline and every probe of a [`super::HardwareDevice::cost_many`]
+/// sweep (and reused unchanged by the forward-only serving path).
+pub fn compute_layer0_base(layers: &[Dense], theta: &[f32], x: &[f32], n: usize, base: &mut [f32]) {
+    let width = layers[0].inputs;
+    let n_out = layers[0].outputs;
+    let wlen = width * n_out;
+    let bias = &theta[wlen..wlen + n_out];
+    for s in 0..n {
+        let h = &x[s * width..(s + 1) * width];
+        let zrow = &mut base[s * n_out..(s + 1) * n_out];
+        zrow.copy_from_slice(bias);
+        for (i, &hv) in h.iter().enumerate() {
+            let wrow = &theta[i * n_out..(i + 1) * n_out];
+            for (z, &wv) in zrow.iter_mut().zip(wrow) {
+                *z += hv * wv;
+            }
+        }
+    }
+}
+
+/// Forward pass for one probe (or the baseline / a served inference when
+/// `tilde` is `None`) over `n` samples, starting from the precomputed
+/// layer-0 `base`.
+///
+/// Weight rows are walked in their natural `[i][j]` (row-major) layout —
+/// contiguous axpy sweeps per input neuron — and the perturbation term
+/// accumulates in its own row so the shared `base` stays bitwise
+/// reusable across probes.  The per-layer θ offsets follow
+/// [`crate::model::ModelSpec::param_layout`] (weights then biases, layer
+/// by layer).
+#[allow(clippy::too_many_arguments)]
+pub fn forward_one(
+    layers: &[Dense],
+    theta: &[f32],
+    defects: &NeuronDefects,
+    x: &[f32],
+    n: usize,
+    base: &[f32],
+    tilde: Option<&[f32]>,
+    acts_a: &mut [f32],
+    acts_b: &mut [f32],
+    pert_row: &mut [f32],
+    out: &mut [f32],
+) {
+    let mut acts_a = acts_a;
+    let mut acts_b = acts_b;
+    let mut offset = 0usize; // into theta / tilde
+    let mut neuron_base = 0usize; // into the defect table
+    for (li, layer) in layers.iter().enumerate() {
+        let width = layer.inputs;
+        let n_out = layer.outputs;
+        let wlen = width * n_out;
+        for s in 0..n {
+            let h: &[f32] = if li == 0 {
+                &x[s * width..(s + 1) * width]
+            } else {
+                &acts_a[s * width..(s + 1) * width]
+            };
+            let zrow = &mut acts_b[s * n_out..(s + 1) * n_out];
+            if li == 0 {
+                zrow.copy_from_slice(&base[s * n_out..(s + 1) * n_out]);
+            } else {
+                zrow.copy_from_slice(&theta[offset + wlen..offset + wlen + n_out]);
+                for (i, &hv) in h.iter().enumerate() {
+                    let wrow = &theta[offset + i * n_out..offset + (i + 1) * n_out];
+                    for (z, &wv) in zrow.iter_mut().zip(wrow) {
+                        *z += hv * wv;
+                    }
+                }
+            }
+            if let Some(tt) = tilde {
+                let prow = &mut pert_row[..n_out];
+                prow.copy_from_slice(&tt[offset + wlen..offset + wlen + n_out]);
+                for (i, &hv) in h.iter().enumerate() {
+                    let trow = &tt[offset + i * n_out..offset + (i + 1) * n_out];
+                    for (pz, &tv) in prow.iter_mut().zip(trow) {
+                        *pz += hv * tv;
+                    }
+                }
+                for (z, &pv) in zrow.iter_mut().zip(prow.iter()) {
+                    *z += pv;
+                }
+            }
+            activate_row(layer.activation, defects, neuron_base, zrow);
+        }
+        std::mem::swap(&mut acts_a, &mut acts_b);
+        offset += wlen + n_out;
+        neuron_base += n_out;
+    }
+    let n_out = layers.last().unwrap().outputs;
+    out.copy_from_slice(&acts_a[..n * n_out]);
+}
+
+/// Index of the row maximum with `Iterator::max_by` tie-breaking (the
+/// **last** maximum wins on exact float equality) — the prediction rule
+/// [`score_batch`] and the serving path's argmax reply both use.  One
+/// function, one tie-break, everywhere.
+///
+/// Total on every input: the serving wire hands this untrusted floats,
+/// and a `partial_cmp().unwrap()` here would let one NaN logit panic
+/// the shared batcher thread (killing every session's requests) — or a
+/// hostile `Evaluate` frame panic a training session.  NaN never beats
+/// a finite value; an all-NaN row deterministically answers its last
+/// index.  For NaN-free rows the result is identical to the `max_by`
+/// rule, bit for bit.
+pub fn argmax_row(v: &[f32]) -> usize {
+    assert!(!v.is_empty(), "argmax of an empty row");
+    let mut best = 0usize;
+    for (i, &x) in v.iter().enumerate().skip(1) {
+        if x >= v[best] || v[best].is_nan() {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Whether a prediction row matches its target row: `>0.5` threshold for
+/// single-output networks, argmax agreement otherwise.
+pub fn row_is_correct(yp: &[f32], yt: &[f32]) -> bool {
+    if yp.len() == 1 {
+        (yp[0] > 0.5) == (yt[0] > 0.5)
+    } else {
+        argmax_row(yp) == argmax_row(yt)
+    }
+}
+
+/// The shared cost/accuracy head over a forward output block: MSE cost
+/// plus the number of correctly-classified samples.  Every consumer of
+/// "(cost, #correct)" — [`super::NativeDevice`]'s `evaluate`, the
+/// trainer's accuracy probe, the serving client's scoring — goes through
+/// this one function so train-time and serve-time accuracy can never
+/// disagree on the rule.
+pub fn score_batch(out: &[f32], y: &[f32], n: usize, k: usize) -> (f32, f32) {
+    let cost = mse(out, y);
+    let mut correct = 0f32;
+    for s in 0..n {
+        if row_is_correct(&out[s * k..(s + 1) * k], &y[s * k..(s + 1) * k]) {
+            correct += 1.0;
+        }
+    }
+    (cost, correct)
+}
+
+/// Persistent scratch for forward-only callers (the serving path and any
+/// batched eval): activation ping-pong blocks, the layer-0 base, and the
+/// (unused-when-unperturbed, but signature-required) perturbation row.
+/// Grows only — after the first call at a given shape the forward path
+/// never allocates.
+#[derive(Debug, Default)]
+pub struct ForwardScratch {
+    a: Vec<f32>,
+    b: Vec<f32>,
+    base: Vec<f32>,
+    pert: Vec<f32>,
+}
+
+impl ForwardScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Grow the buffers for `n` samples of a stack whose widest layer is
+    /// `widest` neurons.
+    fn ensure(&mut self, widest: usize, n: usize) {
+        let stride = widest * n;
+        if self.a.len() < stride {
+            self.a.resize(stride, 0.0);
+            self.b.resize(stride, 0.0);
+            self.base.resize(stride, 0.0);
+        }
+        if self.pert.len() < widest {
+            self.pert.resize(widest, 0.0);
+        }
+    }
+
+    /// Unperturbed batched forward over `n` samples: `out` must hold
+    /// exactly `n · layers.last().outputs` floats on return (it is
+    /// resized here).  Identical arithmetic, in identical order, to the
+    /// training path's baseline measurement for the same θ.
+    pub fn forward(
+        &mut self,
+        layers: &[Dense],
+        widest: usize,
+        theta: &[f32],
+        defects: &NeuronDefects,
+        x: &[f32],
+        n: usize,
+        out: &mut Vec<f32>,
+    ) {
+        self.ensure(widest, n);
+        let stride = widest * n;
+        let k = layers.last().unwrap().outputs;
+        out.resize(n * k, 0.0);
+        let base_len = n * layers[0].outputs;
+        compute_layer0_base(layers, theta, x, n, &mut self.base[..base_len]);
+        forward_one(
+            layers,
+            theta,
+            defects,
+            x,
+            n,
+            &self.base[..base_len],
+            None,
+            &mut self.a[..stride],
+            &mut self.b[..stride],
+            &mut self.pert[..widest],
+            &mut out[..n * k],
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_breaks_ties_like_max_by() {
+        // Iterator::max_by returns the LAST maximal element; the shared
+        // argmax must match it exactly or served predictions drift from
+        // evaluate() on tied logits.
+        assert_eq!(argmax_row(&[0.5, 0.5]), 1);
+        assert_eq!(argmax_row(&[1.0, 0.5, 1.0, 0.2]), 2);
+        assert_eq!(argmax_row(&[3.0]), 0);
+    }
+
+    #[test]
+    fn argmax_is_total_on_hostile_floats() {
+        // Untrusted wire input: NaN must neither panic nor outrank a
+        // finite logit (a panic here used to be a one-request DoS on the
+        // shared batcher thread).
+        assert_eq!(argmax_row(&[f32::NAN, 1.0, 0.5]), 1);
+        assert_eq!(argmax_row(&[0.5, f32::NAN, 1.0]), 2);
+        assert_eq!(argmax_row(&[1.0, f32::NAN]), 0);
+        assert_eq!(argmax_row(&[f32::NAN, f32::NAN]), 1, "all-NaN row answers deterministically");
+        assert_eq!(argmax_row(&[f32::NEG_INFINITY, f32::INFINITY]), 1);
+    }
+
+    #[test]
+    fn score_batch_rules() {
+        // Single-output: >0.5 threshold on both sides.
+        let (cost, correct) = score_batch(&[0.6, 0.4], &[1.0, 1.0], 2, 1);
+        assert!(cost > 0.0);
+        assert_eq!(correct, 1.0);
+        // Multi-output: argmax agreement.
+        let out = [0.1, 0.9, 0.8, 0.2];
+        let y = [0.0, 1.0, 0.0, 1.0];
+        let (_, correct) = score_batch(&out, &y, 2, 2);
+        assert_eq!(correct, 1.0);
+    }
+
+    #[test]
+    fn forward_scratch_matches_hand_sigmoid() {
+        use crate::model::ModelSpec;
+        let spec: ModelSpec = "2x2x1".parse().unwrap();
+        let theta = [1.0f32, 2.0, 3.0, 4.0, 0.5, -0.5, 1.0, -1.0, 0.25];
+        let defects = NeuronDefects::identity(spec.n_neurons());
+        let mut scratch = ForwardScratch::new();
+        let mut out = Vec::new();
+        scratch.forward(spec.layers(), spec.widest(), &theta, &defects, &[1.0, 0.5], 1, &mut out);
+        let sig = |z: f32| 1.0 / (1.0 + (-z).exp());
+        let h0 = sig(1.0 + 0.5 * 3.0 + 0.5);
+        let h1 = sig(2.0 + 0.5 * 4.0 - 0.5);
+        let want = sig(h0 - h1 + 0.25);
+        assert!((out[0] - want).abs() < 1e-6, "got {}, want {want}", out[0]);
+    }
+
+    #[test]
+    fn zero_sample_forward_is_a_no_op() {
+        use crate::model::ModelSpec;
+        let spec: ModelSpec = "3x2x2:relu,softmax".parse().unwrap();
+        let theta = vec![0.1f32; spec.param_count()];
+        let defects = NeuronDefects::identity(spec.n_neurons());
+        let mut scratch = ForwardScratch::new();
+        let mut out = vec![9.0f32; 4];
+        scratch.forward(spec.layers(), spec.widest(), &theta, &defects, &[], 0, &mut out);
+        assert!(out.is_empty(), "n = 0 must produce an empty output block");
+    }
+}

@@ -19,6 +19,7 @@
 //!   the chip-in-the-loop setup of §4/§6 where an external computer
 //!   drives perturbations over lab I/O.
 
+pub mod exec;
 pub mod flaky;
 pub mod native;
 pub mod pjrt;

@@ -15,7 +15,7 @@
 //!    `rust/tests/pjrt_parity.rs`).
 //!
 //! The executor is generic over the [`ModelSpec`] layer stack: arbitrary
-//! depth, per-layer [`Activation`]s (sigmoid / relu / tanh / identity /
+//! depth, per-layer [`crate::model::Activation`]s (sigmoid / relu / tanh / identity /
 //! row-softmax).  The legacy constructors ([`NativeDevice::new`] /
 //! [`NativeDevice::with_defects`]) build the paper's all-sigmoid stack and
 //! run the **identical arithmetic in the identical order** as the
@@ -32,15 +32,21 @@
 //!
 //! # The multi-probe cost engine
 //!
-//! The forward pass is split into two halves so that K stacked
-//! perturbation probes ([`HardwareDevice::cost_many`]) share work:
+//! The layer-sweep kernels themselves live in the shared executor module
+//! ([`super::exec`]) so the forward-only serving path
+//! ([`crate::serve::InferenceEngine`]) runs the identical arithmetic;
+//! this device owns the *batching* around them.  The forward pass is
+//! split into two halves so that K stacked perturbation probes
+//! ([`HardwareDevice::cost_many`]) share work:
 //!
-//! - [`compute_layer0_base`] — the *unperturbed* first-layer
-//!   pre-activations `z₀ = x·W₀ + b₀` depend only on θ and the loaded
-//!   batch, never on a probe, so they are computed **once per device
-//!   call** and reused by every probe (and by the baseline C₀ path).
-//! - [`forward_one`] — walks the remaining arithmetic for one probe
-//!   (layer-0 perturbation term `x·θ̃₀ + θ̃_b`, then the deeper layers).
+//! - [`super::exec::compute_layer0_base`] — the *unperturbed*
+//!   first-layer pre-activations `z₀ = x·W₀ + b₀` depend only on θ and
+//!   the loaded batch, never on a probe, so they are computed **once per
+//!   device call** and reused by every probe (and by the baseline C₀
+//!   path).
+//! - [`super::exec::forward_one`] — walks the remaining arithmetic for
+//!   one probe (layer-0 perturbation term `x·θ̃₀ + θ̃_b`, then the
+//!   deeper layers).
 //!
 //! Every buffer involved is persistent scratch on the device: the hot
 //! path performs **no per-call allocation**.  For large probe batches the
@@ -56,8 +62,9 @@
 
 use anyhow::{bail, Result};
 
+use super::exec::{compute_layer0_base, forward_one, mse, score_batch};
 use super::HardwareDevice;
-use crate::model::{Activation, Dense, ModelSpec};
+use crate::model::{Dense, ModelSpec};
 use crate::noise::NeuronDefects;
 
 /// Fan probes across threads only past this many multiply-accumulates
@@ -341,172 +348,6 @@ impl NativeDevice {
     }
 }
 
-/// Mean-squared error between a prediction block and its targets.
-fn mse(y_pred: &[f32], y_true: &[f32]) -> f32 {
-    debug_assert_eq!(y_pred.len(), y_true.len());
-    let sum: f32 = y_pred
-        .iter()
-        .zip(y_true)
-        .map(|(p, t)| {
-            let d = p - t;
-            d * d
-        })
-        .sum();
-    sum / y_pred.len() as f32
-}
-
-/// Apply one layer's activation to a sample's post-GEMM row, routing
-/// through the defect table (`neuron_base` indexes the layer's first
-/// neuron).
-///
-/// Sigmoid takes the [`NeuronDefects::activate`] generalized-logistic
-/// path **verbatim** — with identity defects this is the plain sigmoid
-/// the pre-refactor engine computed, bit for bit.  The other elementwise
-/// activations use the same defect shape, `α·act(β(a − a₀)) + b`, and
-/// softmax warps the pre-activations with β/a₀ before the (max-shifted,
-/// numerically stable) row normalization, then scales the probabilities
-/// with α/b.
-#[inline]
-fn activate_row(act: Activation, defects: &NeuronDefects, neuron_base: usize, zrow: &mut [f32]) {
-    match act {
-        Activation::Sigmoid => {
-            for (j, z) in zrow.iter_mut().enumerate() {
-                *z = defects.activate(neuron_base + j, *z);
-            }
-        }
-        Activation::Relu | Activation::Tanh | Activation::Identity => {
-            for (j, z) in zrow.iter_mut().enumerate() {
-                let k = neuron_base + j;
-                let a = defects.beta[k] * (*z - defects.offset_a[k]);
-                let v = match act {
-                    Activation::Relu => {
-                        if a > 0.0 {
-                            a
-                        } else {
-                            0.0
-                        }
-                    }
-                    Activation::Tanh => a.tanh(),
-                    _ => a,
-                };
-                *z = defects.alpha[k] * v + defects.offset_b[k];
-            }
-        }
-        Activation::Softmax => {
-            let mut mx = f32::NEG_INFINITY;
-            for (j, z) in zrow.iter_mut().enumerate() {
-                let k = neuron_base + j;
-                *z = defects.beta[k] * (*z - defects.offset_a[k]);
-                if *z > mx {
-                    mx = *z;
-                }
-            }
-            let mut sum = 0f32;
-            for z in zrow.iter_mut() {
-                *z = (*z - mx).exp();
-                sum += *z;
-            }
-            let inv = 1.0 / sum;
-            for (j, z) in zrow.iter_mut().enumerate() {
-                let k = neuron_base + j;
-                *z = defects.alpha[k] * (*z * inv) + defects.offset_b[k];
-            }
-        }
-    }
-}
-
-/// Unperturbed layer-0 pre-activations `z₀[s][j] = b₀[j] + Σᵢ x[s][i]·W₀[i][j]`
-/// — probe-independent, computed once per device call and shared by the
-/// baseline and every probe of a [`HardwareDevice::cost_many`] sweep.
-fn compute_layer0_base(layers: &[Dense], theta: &[f32], x: &[f32], n: usize, base: &mut [f32]) {
-    let width = layers[0].inputs;
-    let n_out = layers[0].outputs;
-    let wlen = width * n_out;
-    let bias = &theta[wlen..wlen + n_out];
-    for s in 0..n {
-        let h = &x[s * width..(s + 1) * width];
-        let zrow = &mut base[s * n_out..(s + 1) * n_out];
-        zrow.copy_from_slice(bias);
-        for (i, &hv) in h.iter().enumerate() {
-            let wrow = &theta[i * n_out..(i + 1) * n_out];
-            for (z, &wv) in zrow.iter_mut().zip(wrow) {
-                *z += hv * wv;
-            }
-        }
-    }
-}
-
-/// Forward pass for one probe (or the baseline when `tilde` is `None`)
-/// over `n` samples, starting from the precomputed layer-0 `base`.
-///
-/// Weight rows are walked in their natural `[i][j]` (row-major) layout —
-/// contiguous axpy sweeps per input neuron — and the perturbation term
-/// accumulates in its own row so the shared `base` stays bitwise
-/// reusable across probes.  The per-layer θ offsets follow
-/// [`ModelSpec::param_layout`] (weights then biases, layer by layer).
-#[allow(clippy::too_many_arguments)]
-fn forward_one(
-    layers: &[Dense],
-    theta: &[f32],
-    defects: &NeuronDefects,
-    x: &[f32],
-    n: usize,
-    base: &[f32],
-    tilde: Option<&[f32]>,
-    acts_a: &mut [f32],
-    acts_b: &mut [f32],
-    pert_row: &mut [f32],
-    out: &mut [f32],
-) {
-    let mut acts_a = acts_a;
-    let mut acts_b = acts_b;
-    let mut offset = 0usize; // into theta / tilde
-    let mut neuron_base = 0usize; // into the defect table
-    for (li, layer) in layers.iter().enumerate() {
-        let width = layer.inputs;
-        let n_out = layer.outputs;
-        let wlen = width * n_out;
-        for s in 0..n {
-            let h: &[f32] = if li == 0 {
-                &x[s * width..(s + 1) * width]
-            } else {
-                &acts_a[s * width..(s + 1) * width]
-            };
-            let zrow = &mut acts_b[s * n_out..(s + 1) * n_out];
-            if li == 0 {
-                zrow.copy_from_slice(&base[s * n_out..(s + 1) * n_out]);
-            } else {
-                zrow.copy_from_slice(&theta[offset + wlen..offset + wlen + n_out]);
-                for (i, &hv) in h.iter().enumerate() {
-                    let wrow = &theta[offset + i * n_out..offset + (i + 1) * n_out];
-                    for (z, &wv) in zrow.iter_mut().zip(wrow) {
-                        *z += hv * wv;
-                    }
-                }
-            }
-            if let Some(tt) = tilde {
-                let prow = &mut pert_row[..n_out];
-                prow.copy_from_slice(&tt[offset + wlen..offset + wlen + n_out]);
-                for (i, &hv) in h.iter().enumerate() {
-                    let trow = &tt[offset + i * n_out..offset + (i + 1) * n_out];
-                    for (pz, &tv) in prow.iter_mut().zip(trow) {
-                        *pz += hv * tv;
-                    }
-                }
-                for (z, &pv) in zrow.iter_mut().zip(prow.iter()) {
-                    *z += pv;
-                }
-            }
-            activate_row(layer.activation, defects, neuron_base, zrow);
-        }
-        std::mem::swap(&mut acts_a, &mut acts_b);
-        offset += wlen + n_out;
-        neuron_base += n_out;
-    }
-    let n_out = layers.last().unwrap().outputs;
-    out.copy_from_slice(&acts_a[..n * n_out]);
-}
-
 impl HardwareDevice for NativeDevice {
     fn n_params(&self) -> usize {
         self.theta.len()
@@ -632,29 +473,10 @@ impl HardwareDevice for NativeDevice {
             &mut scratch_pert[..widest],
             &mut scratch_out[..n * k],
         );
-        let out = &self.scratch_out[..n * k];
-        let cost = mse(out, y);
-        let mut correct = 0f32;
-        for s in 0..n {
-            let yp = &out[s * k..(s + 1) * k];
-            let yt = &y[s * k..(s + 1) * k];
-            let ok = if k == 1 {
-                (yp[0] > 0.5) == (yt[0] > 0.5)
-            } else {
-                let am = |v: &[f32]| {
-                    v.iter()
-                        .enumerate()
-                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                        .map(|(i, _)| i)
-                        .unwrap()
-                };
-                am(yp) == am(yt)
-            };
-            if ok {
-                correct += 1.0;
-            }
-        }
-        Ok((cost, correct))
+        // Shared cost/accuracy head: the same scoring the serving path
+        // ([`crate::serve::InferenceEngine`]) applies to its outputs, so
+        // train-time and serve-time accuracy use one prediction rule.
+        Ok(score_batch(&self.scratch_out[..n * k], y, n, k))
     }
 
     fn describe(&self) -> String {

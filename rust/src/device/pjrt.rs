@@ -101,15 +101,22 @@ impl PjrtDevice {
     }
 }
 
-/// Reconstruct the typed spec a manifest MLP entry describes (`layers`
-/// widths + a broadcast `activation`, defaulting to the paper's sigmoid).
+/// Reconstruct the typed spec a manifest MLP entry describes: `layers`
+/// widths plus `activation` — either a single broadcast token (the
+/// legacy form, defaulting to the paper's sigmoid) or a comma-separated
+/// per-layer list, which is how `python/compile/aot.py` records
+/// mixed-activation grammar specs.
 fn spec_from_meta(meta: &crate::runtime::ModelMeta) -> Option<ModelSpec> {
     let widths = meta.layers.as_deref()?;
-    let act = match &meta.activation {
-        Some(name) => name.parse::<Activation>().ok()?,
-        None => Activation::Sigmoid,
+    let acts: Vec<Activation> = match &meta.activation {
+        Some(names) => names
+            .split(',')
+            .map(|t| t.trim().parse::<Activation>())
+            .collect::<anyhow::Result<_>>()
+            .ok()?,
+        None => vec![Activation::Sigmoid],
     };
-    ModelSpec::mlp(widths, &[act]).ok()
+    ModelSpec::mlp(widths, &acts).ok()
 }
 
 impl HardwareDevice for PjrtDevice {

@@ -67,6 +67,30 @@
 //! additionally cap the declared layer count/widths *before* any
 //! allocation ([`crate::model::MAX_WIRE_LAYERS`] /
 //! [`crate::model::MAX_WIRE_WIDTH`]).
+//!
+//! # Inference serving (`Infer`)
+//!
+//! [`Op::Infer`] is the serving side of the same wire: a batch of input
+//! rows in, per-row logits and argmax out.  It is answered by the
+//! forward-only inference server ([`crate::serve::serve_infer`]); the
+//! *training* device server rejects it with a typed error (a training
+//! session has no logits port — [`crate::device::HardwareDevice`]
+//! exposes costs, not outputs).
+//!
+//! ```text
+//! request payload  := n_rows:u32  array(x row-major)     (count = n_rows·input_len)
+//! response payload := array(logits row-major)            (count = n_rows·K)
+//!                     u32-array(argmax)                  (count = n_rows)
+//! ```
+//!
+//! `n_rows == 0` is legal and answers empty arrays (mirroring
+//! `CostMany`'s `k == 0`).  A row-count/array-length disagreement, an
+//! input-width mismatch, or a batch whose *reply* would overflow
+//! [`MAX_FRAME_BYTES`] are typed errors; the session keeps serving.
+//! Clients chunk large batches at [`max_infer_rows_per_frame`] — the
+//! engine's parameters are immutable between requests (hot reload swaps
+//! atomically *between* batches), so splitting is invisible to the
+//! logits, exactly as `CostMany` chunking is invisible to the costs.
 
 use std::io::{Read, Write};
 
@@ -117,6 +141,11 @@ pub enum Op {
     /// spec).  A spec-aware server rejects a hash mismatch with a typed
     /// error (see the module docs).
     ModelSpec = 0x0B,
+    /// Forward-only inference over a batch of input rows; payload:
+    /// `n_rows:u32, array x`.  Reply: `array logits, u32-array argmax`
+    /// (see the module docs).  Served by `mgd serve-infer`; the training
+    /// device server answers it with a typed error.
+    Infer = 0x0C,
 }
 
 impl Op {
@@ -133,6 +162,7 @@ impl Op {
             0x09 => Op::CostMany,
             0x0A => Op::Ping,
             0x0B => Op::ModelSpec,
+            0x0C => Op::Infer,
             other => bail!("unknown opcode {other:#x}"),
         })
     }
@@ -154,6 +184,29 @@ pub const fn max_probes_per_frame(n_params: usize) -> usize {
     (MAX_FRAME_BYTES - COST_MANY_OVERHEAD_BYTES) / (4 * n_params)
 }
 
+/// Fixed bytes of an `Infer` payload besides the row floats: `n_rows:u32`
+/// plus the input array's `count:u32` prefix (the reply carries the same
+/// 8 bytes of array prefixes).
+pub const INFER_OVERHEAD_BYTES: usize = 8;
+
+/// Maximum input rows a single `Infer` request can carry for an
+/// `input_len`-feature / `n_outputs`-logit engine without either the
+/// request or the reply (`n_rows·K` logits + `n_rows` argmax words)
+/// exceeding [`MAX_FRAME_BYTES`].  Returns 0 for degenerate shapes.
+pub const fn max_infer_rows_per_frame(input_len: usize, n_outputs: usize) -> usize {
+    if input_len == 0 || n_outputs == 0 {
+        return 0;
+    }
+    let budget = MAX_FRAME_BYTES - INFER_OVERHEAD_BYTES;
+    let by_request = budget / (4 * input_len);
+    let by_reply = budget / (4 * (n_outputs + 1));
+    if by_request < by_reply {
+        by_request
+    } else {
+        by_reply
+    }
+}
+
 /// Encode an f32 array into a payload buffer.
 pub fn put_array(buf: &mut Vec<u8>, xs: &[f32]) {
     buf.extend_from_slice(&(xs.len() as u32).to_le_bytes());
@@ -171,6 +224,29 @@ pub fn get_array(payload: &[u8], pos: &mut usize) -> Result<Vec<f32>> {
     let mut out = Vec::with_capacity(n);
     for _ in 0..n {
         out.push(f32::from_le_bytes(payload[*pos..*pos + 4].try_into().unwrap()));
+        *pos += 4;
+    }
+    Ok(out)
+}
+
+/// Encode a u32 array (`count:u32, u32*count`) — the `Infer` argmax
+/// reply block.
+pub fn put_u32_array(buf: &mut Vec<u8>, xs: &[u32]) {
+    buf.extend_from_slice(&(xs.len() as u32).to_le_bytes());
+    for x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Decode a u32 array, advancing `pos`.
+pub fn get_u32_array(payload: &[u8], pos: &mut usize) -> Result<Vec<u32>> {
+    let n = get_u32(payload, pos)? as usize;
+    if payload.len() < *pos + 4 * n {
+        bail!("payload truncated: array of {n} u32s");
+    }
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(u32::from_le_bytes(payload[*pos..*pos + 4].try_into().unwrap()));
         *pos += 4;
     }
     Ok(out)
@@ -408,7 +484,8 @@ mod tests {
         assert_eq!(Op::from_u8(0x09).unwrap(), Op::CostMany);
         assert_eq!(Op::from_u8(0x0A).unwrap(), Op::Ping);
         assert_eq!(Op::from_u8(0x0B).unwrap(), Op::ModelSpec);
-        assert!(Op::from_u8(0x0C).is_err());
+        assert_eq!(Op::from_u8(0x0C).unwrap(), Op::Infer);
+        assert!(Op::from_u8(0x0D).is_err());
         assert!(Op::from_u8(0x00).is_err());
     }
 
@@ -558,6 +635,87 @@ mod tests {
         let mut pos = 0;
         let err = get_opt_spec(&payload, &mut pos).unwrap_err();
         assert!(err.to_string().contains("max"), "{err:#}");
+    }
+
+    // ---- Infer frames -----------------------------------------------------
+
+    #[test]
+    fn u32_array_roundtrip_and_truncation() {
+        let mut buf = Vec::new();
+        put_u32_array(&mut buf, &[0, 7, u32::MAX]);
+        let mut pos = 0;
+        assert_eq!(get_u32_array(&buf, &mut pos).unwrap(), vec![0, 7, u32::MAX]);
+        assert_eq!(pos, buf.len());
+        // Claims 5 words, provides none: dies on the bound check, before
+        // any allocation.
+        let bad = 5u32.to_le_bytes().to_vec();
+        let mut pos = 0;
+        assert!(get_u32_array(&bad, &mut pos).is_err());
+        // Empty array is legal.
+        let mut buf = Vec::new();
+        put_u32_array(&mut buf, &[]);
+        let mut pos = 0;
+        assert!(get_u32_array(&buf, &mut pos).unwrap().is_empty());
+    }
+
+    #[test]
+    fn infer_request_roundtrip() {
+        // 2 rows of 3 features.
+        let rows = [0.5f32, -1.0, 2.0, 0.0, 1.0, -2.5];
+        let mut payload = Vec::new();
+        put_u32(&mut payload, 2);
+        put_array(&mut payload, &rows);
+        let mut wire = Vec::new();
+        write_request(&mut wire, Op::Infer, &payload).unwrap();
+        let mut cursor = std::io::Cursor::new(wire);
+        let (op, got) = read_request(&mut cursor).unwrap();
+        assert_eq!(op, Op::Infer);
+        let mut pos = 0;
+        assert_eq!(get_u32(&got, &mut pos).unwrap(), 2);
+        assert_eq!(get_array(&got, &mut pos).unwrap(), rows.to_vec());
+        assert_eq!(pos, got.len());
+    }
+
+    #[test]
+    fn infer_reply_roundtrip() {
+        // 2 rows, 3 logits each, plus argmax words.
+        let logits = [0.1f32, 0.7, 0.2, 0.9, 0.05, 0.05];
+        let argmax = [1u32, 0];
+        let mut reply = Vec::new();
+        put_array(&mut reply, &logits);
+        put_u32_array(&mut reply, &argmax);
+        let mut pos = 0;
+        assert_eq!(get_array(&reply, &mut pos).unwrap(), logits.to_vec());
+        assert_eq!(get_u32_array(&reply, &mut pos).unwrap(), argmax.to_vec());
+        assert_eq!(pos, reply.len());
+        // Zero-row reply: both arrays empty, 8 bytes total.
+        let mut reply = Vec::new();
+        put_array(&mut reply, &[]);
+        put_u32_array(&mut reply, &[]);
+        assert_eq!(reply.len(), INFER_OVERHEAD_BYTES);
+    }
+
+    #[test]
+    fn infer_row_limit_respects_both_frame_directions() {
+        // The chunk limit must bound whichever side of the exchange is
+        // fatter: wide inputs bound the request, wide outputs bound the
+        // reply (K logits + 1 argmax word per row).
+        for (input_len, k) in [(1usize, 1usize), (49, 4), (784, 10), (3, 10_000), (10_000, 3)] {
+            let rows = max_infer_rows_per_frame(input_len, k);
+            assert!(rows >= 1, "{input_len}x{k} must admit at least one row");
+            let req = INFER_OVERHEAD_BYTES + 4 * rows * input_len;
+            let reply = INFER_OVERHEAD_BYTES + 4 * rows * (k + 1);
+            assert!(req <= MAX_FRAME_BYTES, "{input_len}x{k}: request {req} too big");
+            assert!(reply <= MAX_FRAME_BYTES, "{input_len}x{k}: reply {reply} too big");
+            let req1 = INFER_OVERHEAD_BYTES + 4 * (rows + 1) * input_len;
+            let reply1 = INFER_OVERHEAD_BYTES + 4 * (rows + 1) * (k + 1);
+            assert!(
+                req1 > MAX_FRAME_BYTES || reply1 > MAX_FRAME_BYTES,
+                "{input_len}x{k}: limit {rows} not maximal"
+            );
+        }
+        assert_eq!(max_infer_rows_per_frame(0, 4), 0);
+        assert_eq!(max_infer_rows_per_frame(4, 0), 0);
     }
 
     #[test]

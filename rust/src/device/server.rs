@@ -323,6 +323,15 @@ fn handle_request(
             p::put_opt_spec(&mut out, device_spec.as_ref());
             out
         }
+        p::Op::Infer => {
+            // Serving opcode on a training server: a HardwareDevice
+            // exposes costs, not logits — answer with a typed error (the
+            // session keeps serving) instead of pretending.
+            anyhow::bail!(
+                "Infer (0x0C) is an inference-serving opcode; this is a training \
+                 device server — query an `mgd serve-infer` endpoint instead"
+            );
+        }
         p::Op::Bye => return Ok(None),
     };
     Ok(Some(reply))
@@ -472,6 +481,20 @@ mod tests {
         // serving — errors are answered, see handle_session).
         assert!(handle_request(&mut *dev, p::Op::ModelSpec, &[9u8]).is_err());
         assert!(handle_request(&mut *dev, p::Op::ModelSpec, &[]).is_err());
+    }
+
+    #[test]
+    fn dispatch_infer_is_a_typed_error_on_a_training_server() {
+        let mut dev: Box<dyn HardwareDevice> = Box::new(NativeDevice::new(&[2, 2, 1], 1));
+        let mut payload = Vec::new();
+        p::put_u32(&mut payload, 1);
+        p::put_array(&mut payload, &[0.5, 0.5]);
+        let err = handle_request(&mut *dev, p::Op::Infer, &payload).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("serve-infer"), "{msg}");
+        // The session survives: a training request still works after.
+        let reply = handle_request(&mut *dev, p::Op::Hello, &[]).unwrap().unwrap();
+        assert!(!reply.is_empty());
     }
 
     #[test]

@@ -65,6 +65,15 @@ pub enum Event {
     ReplicaFailed { replica: usize, slot: usize, error: String },
     /// A training checkpoint landed on disk.
     CheckpointSaved { path: String, step: u64 },
+    /// The inference batcher ran one coalesced micro-batch.
+    InferBatch { requests: usize, rows: usize, queue_ms: f64, infer_ms: f64 },
+    /// Aggregate serving statistics (emitted when `serve_infer` returns).
+    InferSummary { requests: u64, rows: u64, batches: u64, p50_ms: f64, p99_ms: f64 },
+    /// The serving engine hot-swapped to a fresh checkpoint.
+    EngineReloaded { path: String, step: u64, model: String },
+    /// A candidate checkpoint failed the reload gate (unreadable, wrong
+    /// spec hash, wrong parameter count); the old engine keeps serving.
+    ReloadRejected { path: String, error: String },
 }
 
 impl Event {
@@ -83,6 +92,10 @@ impl Event {
             Event::JobRetried { .. } => "job_retried",
             Event::ReplicaFailed { .. } => "replica_failed",
             Event::CheckpointSaved { .. } => "checkpoint_saved",
+            Event::InferBatch { .. } => "infer_batch",
+            Event::InferSummary { .. } => "infer_summary",
+            Event::EngineReloaded { .. } => "engine_reloaded",
+            Event::ReloadRejected { .. } => "reload_rejected",
         }
     }
 
@@ -163,6 +176,28 @@ impl Event {
             Event::CheckpointSaved { path, step } => {
                 m.insert("path".into(), Json::Str(path.clone()));
                 m.insert("step".into(), Json::Num(*step as f64));
+            }
+            Event::InferBatch { requests, rows, queue_ms, infer_ms } => {
+                m.insert("requests".into(), Json::Num(*requests as f64));
+                m.insert("rows".into(), Json::Num(*rows as f64));
+                m.insert("queue_ms".into(), Json::Num(*queue_ms));
+                m.insert("infer_ms".into(), Json::Num(*infer_ms));
+            }
+            Event::InferSummary { requests, rows, batches, p50_ms, p99_ms } => {
+                m.insert("requests".into(), Json::Num(*requests as f64));
+                m.insert("rows".into(), Json::Num(*rows as f64));
+                m.insert("batches".into(), Json::Num(*batches as f64));
+                m.insert("p50_ms".into(), Json::Num(*p50_ms));
+                m.insert("p99_ms".into(), Json::Num(*p99_ms));
+            }
+            Event::EngineReloaded { path, step, model } => {
+                m.insert("path".into(), Json::Str(path.clone()));
+                m.insert("step".into(), Json::Num(*step as f64));
+                m.insert("model".into(), Json::Str(model.clone()));
+            }
+            Event::ReloadRejected { path, error } => {
+                m.insert("path".into(), Json::Str(path.clone()));
+                m.insert("error".into(), Json::Str(error.clone()));
             }
         }
         Json::Obj(m)
@@ -319,6 +354,14 @@ mod tests {
             Event::JobRetried { job: 3, name: "n".into(), attempt: 1, excluded_slot: 2 },
             Event::ReplicaFailed { replica: 2, slot: 2, error: "boom".into() },
             Event::CheckpointSaved { path: "ck/replica-0.json".into(), step: 4000 },
+            Event::InferBatch { requests: 3, rows: 64, queue_ms: 1.5, infer_ms: 0.4 },
+            Event::InferSummary { requests: 10, rows: 640, batches: 4, p50_ms: 2.0, p99_ms: 9.5 },
+            Event::EngineReloaded {
+                path: "ck/checkpoint.json".into(),
+                step: 9000,
+                model: "49x4x4:sigmoid,sigmoid".into(),
+            },
+            Event::ReloadRejected { path: "ck/checkpoint.json".into(), error: "hash".into() },
         ];
         for e in events {
             let line = e.to_json().dump();

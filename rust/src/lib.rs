@@ -34,6 +34,12 @@
 //!   state), and a JSONL telemetry stream.  The pooled TCP server
 //!   ([`device::server::serve_pool`]) serves the same pool to remote
 //!   chip-in-the-loop trainers.
+//! - [`serve`] — the serving side of the north star: a forward-only
+//!   [`serve::InferenceEngine`] loaded from a checkpoint (running the
+//!   training path's own kernels, [`device::exec`]), dynamic
+//!   micro-batching of concurrent requests, a multi-session TCP server
+//!   (`mgd serve-infer`, wire opcode `Infer = 0x0C`), and hot checkpoint
+//!   reload gated on the model's spec hash.
 //! - [`experiments`] — one harness per paper figure/table (DESIGN.md §5).
 
 pub mod bench;
@@ -54,6 +60,7 @@ pub mod optim;
 pub mod perturb;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 
 /// Default artifact directory (relative to the repo root).
 pub const DEFAULT_ARTIFACT_DIR: &str = "artifacts";

@@ -7,6 +7,8 @@
 //! mgd fleet [...]          train across a pool of devices (data-parallel
 //!                          averaging or a job farm)
 //! mgd serve [...]          expose a local device (or device pool) over TCP
+//! mgd serve-infer [...]    serve a trained checkpoint for inference
+//! mgd infer [...]          query an inference endpoint
 //! mgd info                 list models + artifacts from the manifest
 //! ```
 //!
@@ -45,6 +47,8 @@ USAGE:
   mgd train [opts]       train a model with MGD
   mgd fleet [opts]       train across a pool of devices
   mgd serve [opts]       serve a device over TCP (chip-in-the-loop)
+  mgd serve-infer [opts] serve a trained checkpoint for inference
+  mgd infer [opts]       query an inference endpoint
   mgd info               list models and artifacts
 
 GLOBAL OPTIONS:
@@ -115,6 +119,28 @@ FLEET OPTIONS:
 SERVE OPTIONS:
   --model M --device native|pjrt --addr HOST:PORT --max-sessions N
   --defects F       activation-defect strength (native device, Fig. 10)
+
+SERVE-INFER OPTIONS:
+  --checkpoint-dir D  serve D/checkpoint.json and hot-reload it when the
+                    trainer writes a fresh snapshot (spec-hash gated:
+                    a reload can move θ, never change the model)
+  --checkpoint F    serve a specific checkpoint file (no watching)
+  --addr A          listen address                 (default 127.0.0.1:7272)
+  --max-batch N     micro-batch row budget         (default 64)
+  --max-delay-ms F  micro-batch assembly deadline  (default 2)
+  --poll-ms N       checkpoint-dir poll cadence    (default 500)
+  --max-sessions N  exit after N sessions          (default: serve forever)
+  --telemetry T     JSONL events ('-' = stderr, else a file path)
+
+INFER OPTIONS:
+  --addr A          endpoint                       (default 127.0.0.1:7272)
+  --model M         demand this model at connect (spec grammar / legacy id)
+  --input f,f,...   one input row: print logits + argmax and exit
+  --rows N          eval mode: rows per request    (default 64)
+  --samples N       eval mode: generated dataset size (see MODELS)
+  With no --input, the eval set matching the served model's I/O ports is
+  scored through the endpoint and the accuracy is printed in the same
+  format `mgd train` reports.
 ";
 
 const GLOBAL_OPTS: &[&str] = &["artifacts", "results", "configs", "scale", "seed", "help"];
@@ -237,6 +263,21 @@ fn main() -> Result<()> {
             let max_sessions = args.usize_or("max-sessions", 0)?;
             let max = if max_sessions == 0 { None } else { Some(max_sessions) };
             server::serve(dev, &args.str_or("addr", "127.0.0.1:7171"), max)
+        }
+        "serve-infer" => {
+            let mut known = GLOBAL_OPTS.to_vec();
+            known.extend([
+                "checkpoint-dir", "checkpoint", "addr", "max-batch", "max-delay-ms",
+                "poll-ms", "max-sessions", "telemetry",
+            ]);
+            args.check_known(&known)?;
+            serve_infer_cmd(&args)
+        }
+        "infer" => {
+            let mut known = GLOBAL_OPTS.to_vec();
+            known.extend(["addr", "model", "input", "rows", "samples"]);
+            args.check_known(&known)?;
+            infer_cmd(&ctx, &args)
         }
         other => bail!("unknown command {other:?}; see --help"),
     }
@@ -662,6 +703,117 @@ fn fleet_cmd(ctx: &RunContext, args: &Args, cfg: MgdConfig) -> Result<()> {
         }
         other => bail!("unknown fleet mode {other:?} (dp | farm)"),
     }
+    Ok(())
+}
+
+/// `mgd serve-infer`: host a trained checkpoint behind the `Infer` wire
+/// opcode, with dynamic micro-batching and (for `--checkpoint-dir`) hot
+/// reload of fresh snapshots.
+fn serve_infer_cmd(args: &Args) -> Result<()> {
+    use mgd::serve::{serve_infer, BatchPolicy, InferenceEngine, ReloadConfig, ServeInferOptions};
+    let (engine, reload) = match (args.get("checkpoint-dir"), args.get("checkpoint")) {
+        (Some(_), Some(_)) => bail!("--checkpoint-dir and --checkpoint are mutually exclusive"),
+        (Some(dir), None) => {
+            let dir = PathBuf::from(dir);
+            let engine = InferenceEngine::from_checkpoint_dir(&dir)?;
+            let poll = std::time::Duration::from_millis(args.u64_or("poll-ms", 500)?.max(10));
+            (engine, Some(ReloadConfig { dir, poll }))
+        }
+        (None, Some(file)) => {
+            let snap = mgd::coordinator::load_snapshot(std::path::Path::new(file))?;
+            (InferenceEngine::from_snapshot(&snap)?, None)
+        }
+        (None, None) => bail!("serve-infer needs --checkpoint-dir DIR or --checkpoint FILE"),
+    };
+    let telemetry = match args.get("telemetry") {
+        None => Telemetry::null(),
+        Some("-") => Telemetry::stderr(),
+        Some(path) => Telemetry::file(path)?,
+    };
+    let max_sessions = args.usize_or("max-sessions", 0)?;
+    let policy = BatchPolicy {
+        max_batch_rows: args.usize_or("max-batch", 64)?.max(1),
+        max_delay: std::time::Duration::from_secs_f64(
+            (args.f64_or("max-delay-ms", 2.0)? / 1e3).max(0.0),
+        ),
+    };
+    let listener = std::net::TcpListener::bind(args.str_or("addr", "127.0.0.1:7272"))?;
+    let summary = serve_infer(
+        engine,
+        listener,
+        ServeInferOptions {
+            max_sessions: if max_sessions == 0 { None } else { Some(max_sessions) },
+            policy,
+            telemetry,
+            reload,
+        },
+    )?;
+    println!(
+        "served {} requests / {} inferences in {} batches (p50 {:.2} ms, p99 {:.2} ms)",
+        summary.requests, summary.rows, summary.batches, summary.p50_ms, summary.p99_ms
+    );
+    Ok(())
+}
+
+/// `mgd infer`: query an inference endpoint — one row (`--input`), or
+/// score the eval set matching the served model's I/O ports.
+fn infer_cmd(ctx: &RunContext, args: &Args) -> Result<()> {
+    use mgd::serve::InferenceClient;
+    let addr = args.str_or("addr", "127.0.0.1:7272");
+    let expect = match args.get("model") {
+        Some(model) => Some(resolve_model_spec(model)?),
+        None => None,
+    };
+    let mut client = InferenceClient::connect_with_spec(&addr, expect.as_ref())?;
+    println!("connected to {}", client.describe());
+    if let Some(row) = args.get("input") {
+        let rows: Vec<f32> = row
+            .split(',')
+            .map(|t| {
+                t.trim()
+                    .parse::<f32>()
+                    .with_context(|| format!("bad --input element {t:?}"))
+            })
+            .collect::<Result<_>>()?;
+        if rows.len() != client.input_len() {
+            bail!(
+                "--input has {} features, the served model takes {}",
+                rows.len(),
+                client.input_len()
+            );
+        }
+        let (logits, argmax) = client.infer(&rows, 1)?;
+        println!("logits: {logits:?}");
+        println!("argmax: {}", argmax[0]);
+        client.close();
+        return Ok(());
+    }
+    // Eval mode: the served spec picks the dataset by its I/O ports,
+    // exactly as `mgd train` picks it — same generator, same seed, so
+    // the accuracy printed here is directly comparable to the final
+    // accuracy `mgd train` reported before checkpointing.
+    let samples = match args.get("samples") {
+        Some(_) => Some(args.usize_or("samples", 0)?),
+        None => None,
+    };
+    let spec = client.spec().clone();
+    let (_, eval_set) = spec_dataset(&spec, samples, ctx.seed)?;
+    let rows = args.usize_or("rows", 64)?.max(1);
+    let t0 = std::time::Instant::now();
+    let (cost, correct) = client.evaluate(&eval_set.x, &eval_set.y, eval_set.n, rows)?;
+    let secs = t0.elapsed().as_secs_f64();
+    let acc = correct / eval_set.n as f32;
+    println!("served eval cost {cost:.5}");
+    println!(
+        "final accuracy: {:.2}% over {} eval samples",
+        acc * 100.0,
+        eval_set.n
+    );
+    println!(
+        "wall: {secs:.2}s ({:.0} inferences/sec over the wire at {rows} rows/request)",
+        eval_set.n as f64 / secs.max(1e-9)
+    );
+    client.close();
     Ok(())
 }
 

@@ -1,0 +1,386 @@
+//! Dynamic micro-batching: coalesce concurrent inference requests into
+//! one forward pass.
+//!
+//! The scaling follow-up (Oripov et al., 2025) makes throughput *per
+//! dispatch* the figure of merit, and PR 2 proved the lever on the
+//! training side: K probes per `cost_many` call.  Serving has the same
+//! shape — the per-forward fixed cost (layer-0 setup, scratch walk,
+//! cache warmup) amortizes over every row in the batch — but the rows
+//! arrive from independent clients at independent times, so the batch
+//! must be *assembled*: the [`Batcher`] thread takes the first pending
+//! request, then keeps draining the queue until either
+//! [`BatchPolicy::max_batch_rows`] rows are aboard or
+//! [`BatchPolicy::max_delay`] has elapsed since the batch opened,
+//! whichever comes first.  One forward runs the coalesced rows; each
+//! request gets exactly its own slice of the outputs back.
+//!
+//! The engine is read **once per batch** from the [`EngineSlot`], so a
+//! hot reload lands between batches, never inside one — every row of a
+//! batch is answered by a single θ.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use super::engine::EngineSlot;
+use crate::device::exec::ForwardScratch;
+use crate::fleet::telemetry::{Event, Telemetry};
+
+/// Micro-batch assembly knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Close the batch once this many rows are aboard.
+    pub max_batch_rows: usize,
+    /// Close the batch this long after its first request arrived, full
+    /// or not (the tail-latency bound a lone request pays).
+    pub max_delay: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch_rows: 64, max_delay: Duration::from_millis(2) }
+    }
+}
+
+/// One answered request: per-row logits plus the argmax of each row.
+#[derive(Debug, Clone)]
+pub struct InferOutput {
+    pub logits: Vec<f32>,
+    pub argmax: Vec<u32>,
+}
+
+struct Job {
+    rows: Vec<f32>,
+    n_rows: usize,
+    reply: mpsc::Sender<Result<InferOutput>>,
+    enqueued: Instant,
+}
+
+/// Latency reservoir capacity: enough for stable p99 estimates, bounded
+/// so a serve-forever process cannot grow without limit (the ring
+/// overwrites oldest-first past the cap).
+const LATENCY_RING: usize = 8192;
+
+/// Shared serving counters + request-latency reservoir.
+#[derive(Default)]
+pub struct ServeStats {
+    requests: AtomicU64,
+    rows: AtomicU64,
+    batches: AtomicU64,
+    /// Total latency samples ever written (ring-overwrite cursor).
+    lat_cursor: AtomicU64,
+    latencies_ms: Mutex<Vec<f64>>,
+}
+
+/// Aggregate serving numbers (the `infer_summary` telemetry payload).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServeSummary {
+    pub requests: u64,
+    pub rows: u64,
+    pub batches: u64,
+    /// Median request latency, enqueue → reply ready, in ms.
+    pub p50_ms: f64,
+    /// 99th-percentile request latency in ms.
+    pub p99_ms: f64,
+}
+
+/// Nearest-rank percentile of an unsorted sample set (`q` in [0, 1]).
+pub fn percentile_ms(samples: &[f64], q: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+    sorted[rank - 1]
+}
+
+impl ServeStats {
+    pub fn new() -> Arc<ServeStats> {
+        Arc::new(ServeStats::default())
+    }
+
+    fn record_batch(&self, requests: usize, rows: usize, latencies: &[f64]) {
+        self.requests.fetch_add(requests as u64, Ordering::Relaxed);
+        self.rows.fetch_add(rows as u64, Ordering::Relaxed);
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        let mut ring = self.latencies_ms.lock().unwrap();
+        for &l in latencies {
+            let i = self.lat_cursor.fetch_add(1, Ordering::Relaxed) as usize;
+            if ring.len() < LATENCY_RING {
+                ring.push(l);
+            } else {
+                ring[i % LATENCY_RING] = l;
+            }
+        }
+    }
+
+    /// Current aggregate numbers (p50/p99 over the latency reservoir).
+    pub fn summary(&self) -> ServeSummary {
+        let ring = self.latencies_ms.lock().unwrap();
+        ServeSummary {
+            requests: self.requests.load(Ordering::Relaxed),
+            rows: self.rows.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            p50_ms: percentile_ms(&ring, 0.50),
+            p99_ms: percentile_ms(&ring, 0.99),
+        }
+    }
+}
+
+/// A cloneable handle sessions submit requests through.
+#[derive(Clone)]
+pub struct BatcherClient {
+    tx: mpsc::Sender<Job>,
+}
+
+impl BatcherClient {
+    /// Submit `n_rows` input rows and block until the batcher answers.
+    /// Row width is the engine's `input_len` (validated by the caller
+    /// against the wire frame; the batcher trusts its sessions).
+    pub fn submit(&self, rows: Vec<f32>, n_rows: usize) -> Result<InferOutput> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(Job { rows, n_rows, reply: reply_tx, enqueued: Instant::now() })
+            .map_err(|_| anyhow!("inference batcher is gone (server shutting down)"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("inference batcher dropped the request (server shutting down)"))?
+    }
+}
+
+/// The batching worker: owns the scratch, the assembly loop, and the
+/// stats feed.
+pub struct Batcher {
+    tx: Option<mpsc::Sender<Job>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Batcher {
+    /// Spawn the batching thread.  It exits when every
+    /// [`BatcherClient`] (and the `Batcher` itself) has been dropped.
+    pub fn spawn(
+        slot: Arc<EngineSlot>,
+        policy: BatchPolicy,
+        telemetry: Arc<Telemetry>,
+        stats: Arc<ServeStats>,
+    ) -> Batcher {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let handle = std::thread::Builder::new()
+            .name("mgd-infer-batcher".to_string())
+            .spawn(move || batch_loop(rx, slot, policy, telemetry, stats))
+            .expect("spawning inference batcher thread");
+        Batcher { tx: Some(tx), handle: Some(handle) }
+    }
+
+    /// A submission handle for a session thread.
+    pub fn client(&self) -> BatcherClient {
+        BatcherClient { tx: self.tx.as_ref().expect("batcher already shut down").clone() }
+    }
+
+    /// Drop the submission side and join the worker.  The channel only
+    /// disconnects once every session's [`BatcherClient`] is gone too,
+    /// and pending requests are still answered first.
+    pub fn shutdown(mut self) {
+        self.tx.take();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn batch_loop(
+    rx: mpsc::Receiver<Job>,
+    slot: Arc<EngineSlot>,
+    policy: BatchPolicy,
+    telemetry: Arc<Telemetry>,
+    stats: Arc<ServeStats>,
+) {
+    let max_rows = policy.max_batch_rows.max(1);
+    let mut scratch = ForwardScratch::new();
+    let mut xbuf: Vec<f32> = Vec::new();
+    let mut outbuf: Vec<f32> = Vec::new();
+    let mut latencies: Vec<f64> = Vec::new();
+    loop {
+        // Block for the batch-opening request; channel closed = shutdown.
+        let first = match rx.recv() {
+            Ok(job) => job,
+            Err(_) => return,
+        };
+        let opened = Instant::now();
+        let deadline = opened + policy.max_delay;
+        let mut jobs = vec![first];
+        let mut rows_total = jobs[0].n_rows;
+        let mut disconnected = false;
+        while rows_total < max_rows {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(job) => {
+                    rows_total += job.n_rows;
+                    jobs.push(job);
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    disconnected = true;
+                    break;
+                }
+            }
+        }
+
+        // One engine per batch: a reload lands between batches.
+        let engine = slot.current();
+        let k = engine.n_outputs();
+        xbuf.clear();
+        for job in &jobs {
+            xbuf.extend_from_slice(&job.rows);
+        }
+        let t_infer = Instant::now();
+        let result = engine.infer_into(&xbuf, rows_total, &mut scratch, &mut outbuf);
+        let infer_ms = t_infer.elapsed().as_secs_f64() * 1e3;
+
+        latencies.clear();
+        match result {
+            Ok(()) => {
+                let mut offset = 0usize;
+                let done = Instant::now();
+                for job in jobs {
+                    let block = &outbuf[offset * k..(offset + job.n_rows) * k];
+                    offset += job.n_rows;
+                    let out =
+                        InferOutput { logits: block.to_vec(), argmax: engine.argmax(block) };
+                    latencies.push(done.duration_since(job.enqueued).as_secs_f64() * 1e3);
+                    // A client that gave up mid-wait is not an error.
+                    let _ = job.reply.send(Ok(out));
+                }
+            }
+            Err(e) => {
+                // A coalesced batch can only fail as a whole (the shapes
+                // were validated per session); every rider gets the
+                // reason.
+                let done = Instant::now();
+                let msg = format!("{e:#}");
+                for job in jobs {
+                    latencies.push(done.duration_since(job.enqueued).as_secs_f64() * 1e3);
+                    let _ = job.reply.send(Err(anyhow!("batched inference failed: {msg}")));
+                }
+            }
+        }
+        let n_requests = latencies.len();
+        stats.record_batch(n_requests, rows_total, &latencies);
+        telemetry.emit(Event::InferBatch {
+            requests: n_requests,
+            rows: rows_total,
+            queue_ms: opened.elapsed().as_secs_f64() * 1e3 - infer_ms,
+            infer_ms,
+        });
+        if disconnected {
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelSpec;
+    use crate::serve::engine::InferenceEngine;
+
+    fn test_slot() -> Arc<EngineSlot> {
+        let spec: ModelSpec = "2x3x2:relu,softmax".parse().unwrap();
+        let mut theta = vec![0f32; spec.param_count()];
+        let mut rng = crate::rng::Rng::new(5);
+        rng.fill_uniform(&mut theta, -1.0, 1.0);
+        EngineSlot::new(InferenceEngine::new(spec, theta).unwrap())
+    }
+
+    #[test]
+    fn single_request_roundtrip() {
+        let slot = test_slot();
+        let engine = slot.current();
+        let batcher = Batcher::spawn(
+            slot,
+            BatchPolicy { max_batch_rows: 8, max_delay: Duration::from_millis(1) },
+            Telemetry::null(),
+            ServeStats::new(),
+        );
+        let client = batcher.client();
+        let x = vec![0.25f32, -0.5, 1.0, 0.75];
+        let out = client.submit(x.clone(), 2).unwrap();
+        assert_eq!(out.logits.len(), 4);
+        assert_eq!(out.argmax.len(), 2);
+        // Bit-identical to a direct engine forward of the same rows.
+        let direct = engine.infer(&x, 2).unwrap();
+        let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&out.logits), bits(&direct));
+        drop(client);
+        batcher.shutdown();
+    }
+
+    #[test]
+    fn concurrent_requests_coalesce_and_come_back_in_the_right_slices() {
+        let slot = test_slot();
+        let engine = slot.current();
+        let stats = ServeStats::new();
+        let batcher = Batcher::spawn(
+            slot,
+            // Generous delay so the 8 threads land in few batches.
+            BatchPolicy { max_batch_rows: 64, max_delay: Duration::from_millis(100) },
+            Telemetry::null(),
+            stats.clone(),
+        );
+        let mut threads = Vec::new();
+        for t in 0..8u32 {
+            let client = batcher.client();
+            threads.push(std::thread::spawn(move || {
+                // Every thread sends a *different* row; the reply must be
+                // that row's logits, not a neighbor's.
+                let x = vec![t as f32 * 0.1, 1.0 - t as f32 * 0.1];
+                let out = client.submit(x.clone(), 1).unwrap();
+                (x, out)
+            }));
+        }
+        for th in threads {
+            let (x, out) = th.join().unwrap();
+            let direct = engine.infer(&x, 1).unwrap();
+            let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&out.logits), bits(&direct), "row {x:?} got someone else's logits");
+        }
+        batcher.shutdown();
+        let s = stats.summary();
+        assert_eq!(s.requests, 8);
+        assert_eq!(s.rows, 8);
+        assert!(s.batches < 8, "requests never coalesced: {} batches", s.batches);
+        assert!(s.p99_ms >= s.p50_ms);
+    }
+
+    #[test]
+    fn zero_row_request_is_answered_empty() {
+        let batcher = Batcher::spawn(
+            test_slot(),
+            BatchPolicy { max_batch_rows: 4, max_delay: Duration::from_millis(1) },
+            Telemetry::null(),
+            ServeStats::new(),
+        );
+        let out = batcher.client().submit(Vec::new(), 0).unwrap();
+        assert!(out.logits.is_empty());
+        assert!(out.argmax.is_empty());
+        batcher.shutdown();
+    }
+
+    #[test]
+    fn percentiles_nearest_rank() {
+        let samples: Vec<f64> = (1..=100).map(|v| v as f64).collect();
+        assert_eq!(percentile_ms(&samples, 0.50), 50.0);
+        assert_eq!(percentile_ms(&samples, 0.99), 99.0);
+        assert_eq!(percentile_ms(&samples, 1.0), 100.0);
+        assert_eq!(percentile_ms(&[], 0.5), 0.0);
+        assert_eq!(percentile_ms(&[7.0], 0.99), 7.0);
+    }
+}

@@ -1,0 +1,194 @@
+//! The query side of the serving wire: a thin TCP client for
+//! [`super::serve_infer`] endpoints.
+//!
+//! Mirrors [`crate::device::RemoteDevice`]'s connect-time handshake
+//! (`Hello` silhouette + `ModelSpec` negotiation) and its chunking
+//! discipline: a batch larger than one `Infer` frame admits is split at
+//! [`p::max_infer_rows_per_frame`] — invisible to the logits, since the
+//! served parameters are immutable between requests (hot reload swaps
+//! whole engines atomically between micro-batches, so each chunk is
+//! answered by *some* complete θ; a client that needs all rows from one
+//! θ keeps its batch within a single frame).
+
+use std::io::BufReader;
+use std::net::TcpStream;
+
+use anyhow::{bail, Context, Result};
+
+use crate::device::exec;
+use crate::device::protocol as p;
+use crate::model::ModelSpec;
+
+/// TCP client for an inference-serving endpoint.
+pub struct InferenceClient {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    n_params: usize,
+    input_len: usize,
+    n_outputs: usize,
+    /// The served model, from connect-time negotiation.
+    spec: ModelSpec,
+    addr: String,
+}
+
+impl InferenceClient {
+    /// Connect and handshake, accepting whatever model the server
+    /// serves.
+    pub fn connect(addr: &str) -> Result<Self> {
+        Self::connect_with_spec(addr, None)
+    }
+
+    /// Connect, handshake, and (optionally) demand a model: with
+    /// `Some(spec)` the connection fails at connect time unless the
+    /// endpoint serves exactly that layer stack.
+    pub fn connect_with_spec(addr: &str, expect: Option<&ModelSpec>) -> Result<Self> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+        stream.set_nodelay(true).ok();
+        let mut writer = stream.try_clone()?;
+        let mut reader = BufReader::new(stream);
+        let mut roundtrip = |op, payload: &[u8], writer: &mut TcpStream| -> Result<Vec<u8>> {
+            p::write_request(writer, op, payload)?;
+            p::read_response(&mut reader)
+        };
+        let reply = roundtrip(p::Op::Hello, &[], &mut writer)?;
+        let mut pos = 0;
+        let n_params = p::get_u32(&reply, &mut pos)? as usize;
+        let _batch = p::get_u32(&reply, &mut pos)?;
+        let input_len = p::get_u32(&reply, &mut pos)? as usize;
+        let n_outputs = p::get_u32(&reply, &mut pos)? as usize;
+        let mut payload = Vec::new();
+        p::put_opt_spec(&mut payload, expect);
+        let reply = roundtrip(p::Op::ModelSpec, &payload, &mut writer)
+            .with_context(|| format!("negotiating model spec with {addr}"))?;
+        let mut pos = 0;
+        let Some(spec) = p::get_opt_spec(&reply, &mut pos)? else {
+            bail!("endpoint at {addr} answered the spec query without a spec: not an mgd \
+                   inference server");
+        };
+        if let Some(want) = expect {
+            // Belt and braces, as in RemoteDevice: never trust the
+            // server to have enforced its own gate.
+            if want.spec_hash() != spec.spec_hash() {
+                bail!("model spec mismatch: expected {want}, endpoint at {addr} serves {spec}");
+            }
+        }
+        Ok(InferenceClient { reader, writer, n_params, input_len, n_outputs, spec, addr })
+    }
+
+    pub fn input_len(&self) -> usize {
+        self.input_len
+    }
+
+    pub fn n_outputs(&self) -> usize {
+        self.n_outputs
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.n_params
+    }
+
+    /// The served model (always present — an engine always has a spec).
+    pub fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    pub fn describe(&self) -> String {
+        format!("infer@{}({}, P={})", self.addr, self.spec, self.n_params)
+    }
+
+    fn roundtrip(&mut self, op: p::Op, payload: &[u8]) -> Result<Vec<u8>> {
+        p::write_request(&mut self.writer, op, payload)?;
+        p::read_response(&mut self.reader)
+    }
+
+    /// Politely close the session.
+    pub fn close(mut self) {
+        let _ = self.roundtrip(p::Op::Bye, &[]);
+    }
+
+    /// Run `n_rows` input rows (row-major, `n_rows · input_len` floats)
+    /// through the served model; returns `(logits, argmax)` with
+    /// `n_rows · n_outputs` logits and one argmax word per row.
+    /// Batches beyond the frame cap are chunked client-side.
+    pub fn infer(&mut self, rows: &[f32], n_rows: usize) -> Result<(Vec<f32>, Vec<u32>)> {
+        let limit = p::max_infer_rows_per_frame(self.input_len, self.n_outputs);
+        self.infer_chunked(rows, n_rows, limit)
+    }
+
+    /// [`InferenceClient::infer`] with an explicit per-frame row limit
+    /// (exposed so tests can force multi-frame chunking cheaply).
+    pub fn infer_chunked(
+        &mut self,
+        rows: &[f32],
+        n_rows: usize,
+        max_rows_per_frame: usize,
+    ) -> Result<(Vec<f32>, Vec<u32>)> {
+        if rows.len() != n_rows * self.input_len {
+            bail!(
+                "infer: {n_rows} rows of {} features need {} floats, got {}",
+                self.input_len,
+                n_rows * self.input_len,
+                rows.len()
+            );
+        }
+        if max_rows_per_frame == 0 {
+            bail!("infer: a single row exceeds the protocol frame limit");
+        }
+        if n_rows == 0 {
+            return Ok((Vec::new(), Vec::new()));
+        }
+        let mut logits = Vec::with_capacity(n_rows * self.n_outputs);
+        let mut argmax = Vec::with_capacity(n_rows);
+        for chunk in rows.chunks(max_rows_per_frame * self.input_len) {
+            let chunk_rows = chunk.len() / self.input_len;
+            let mut payload =
+                Vec::with_capacity(p::INFER_OVERHEAD_BYTES + 4 * chunk.len());
+            p::put_u32(&mut payload, chunk_rows as u32);
+            p::put_array(&mut payload, chunk);
+            let reply = self.roundtrip(p::Op::Infer, &payload)?;
+            let mut pos = 0;
+            let got_logits = p::get_array(&reply, &mut pos)?;
+            let got_argmax = p::get_u32_array(&reply, &mut pos)?;
+            if got_logits.len() != chunk_rows * self.n_outputs || got_argmax.len() != chunk_rows {
+                bail!(
+                    "Infer: sent {chunk_rows} rows, endpoint answered {} logits / {} argmax",
+                    got_logits.len(),
+                    got_argmax.len()
+                );
+            }
+            logits.extend_from_slice(&got_logits);
+            argmax.extend_from_slice(&got_argmax);
+        }
+        Ok((logits, argmax))
+    }
+
+    /// Score a labelled set through the endpoint: `(cost, #correct)`
+    /// with the shared rule ([`exec::score_batch`]) — the same numbers
+    /// [`crate::device::HardwareDevice::evaluate`] reports for the same
+    /// θ, measured over the wire.  `rows_per_request` sizes the query
+    /// batches (clamped to the frame cap).
+    pub fn evaluate(
+        &mut self,
+        x: &[f32],
+        y: &[f32],
+        n: usize,
+        rows_per_request: usize,
+    ) -> Result<(f32, f32)> {
+        if x.len() != n * self.input_len || y.len() != n * self.n_outputs {
+            bail!("evaluate: shape mismatch");
+        }
+        let per = rows_per_request
+            .max(1)
+            .min(p::max_infer_rows_per_frame(self.input_len, self.n_outputs).max(1));
+        let mut logits = Vec::with_capacity(n * self.n_outputs);
+        let mut done = 0usize;
+        while done < n {
+            let take = (n - done).min(per);
+            let chunk = &x[done * self.input_len..(done + take) * self.input_len];
+            let (out, _) = self.infer(chunk, take)?;
+            logits.extend_from_slice(&out);
+            done += take;
+        }
+        Ok(exec::score_batch(&logits, y, n, self.n_outputs))
+    }
+}

@@ -1,0 +1,365 @@
+//! The immutable forward-only inference engine, and the atomically
+//! swappable slot that serving threads read it through.
+//!
+//! An [`InferenceEngine`] is a `(ModelSpec, θ)` pair frozen at
+//! construction: no interior mutability, `Send + Sync`, shareable behind
+//! an `Arc` across every session thread.  All mutable state (the
+//! activation scratch) lives in a caller-owned [`super::batcher`]
+//! scratch, so a reload can swap the `Arc` without synchronizing with
+//! in-flight forwards — a batch that started on the old engine finishes
+//! on the old engine, bit-stable.
+//!
+//! The arithmetic is the shared executor's
+//! ([`crate::device::exec`]), i.e. **the training path's own kernels**:
+//! for the same θ, the engine's logits are bit-identical to the
+//! activations [`crate::device::NativeDevice`] measures, and its
+//! `(cost, #correct)` scoring is the same [`exec::score_batch`] the
+//! trainer's accuracy probe uses.  Defect tables are physical device
+//! state and are not captured by checkpoints, so an engine built from a
+//! checkpoint executes the *ideal* spec — identical to the defect-free
+//! device the checkpoint was trained on.
+
+use std::path::Path;
+use std::sync::{Arc, RwLock};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::checkpoint::{checkpoint_path, load_snapshot, TrainerSnapshot};
+use crate::device::exec;
+use crate::model::ModelSpec;
+use crate::noise::NeuronDefects;
+
+/// An immutable `(spec, θ)` forward-only executor.
+#[derive(Debug, Clone)]
+pub struct InferenceEngine {
+    spec: ModelSpec,
+    spec_hash: u64,
+    widest: usize,
+    input_len: usize,
+    n_outputs: usize,
+    theta: Vec<f32>,
+    defects: NeuronDefects,
+    /// Training step the parameters were checkpointed at (0 for an
+    /// engine built directly from a θ vector) — telemetry only.
+    step: u64,
+}
+
+impl InferenceEngine {
+    /// Freeze a spec + parameter vector into an engine.  Defects attached
+    /// to the spec are honored (a locally-built engine can mirror a
+    /// defective [`crate::device::NativeDevice`] exactly); a bare spec
+    /// executes ideal neurons.
+    pub fn new(spec: ModelSpec, theta: Vec<f32>) -> Result<Self> {
+        if theta.len() != spec.param_count() {
+            bail!(
+                "engine parameters: spec {spec} needs {} floats, got {}",
+                spec.param_count(),
+                theta.len()
+            );
+        }
+        let n_neurons = spec.n_neurons();
+        let defects = match &spec.defects {
+            Some(d) => d.clone(),
+            None => NeuronDefects::identity(n_neurons),
+        };
+        if defects.n_neurons() != n_neurons {
+            bail!(
+                "defect table covers {} neurons, spec {spec} has {n_neurons}",
+                defects.n_neurons()
+            );
+        }
+        Ok(InferenceEngine {
+            spec_hash: spec.spec_hash(),
+            widest: spec.widest(),
+            input_len: spec.n_inputs(),
+            n_outputs: spec.n_outputs(),
+            theta,
+            defects,
+            step: 0,
+            spec,
+        })
+    }
+
+    /// Build an engine from a trainer snapshot (checkpoint format v2).
+    ///
+    /// The snapshot must embed its model identity: a v1 / spec-less
+    /// checkpoint records θ but not what network θ parameterizes, and an
+    /// inference server must never guess — the error names the fix
+    /// (re-checkpoint with a spec-aware device).
+    pub fn from_snapshot(snap: &TrainerSnapshot) -> Result<Self> {
+        let Some(model) = snap.model.as_deref() else {
+            bail!(
+                "checkpoint carries no model identity (v1 file or spec-less device): \
+                 serving needs the layer stack, not just {} raw parameters — \
+                 re-checkpoint on a spec-aware device (checkpoint format v2)",
+                snap.theta.len()
+            );
+        };
+        let spec: ModelSpec = model
+            .parse()
+            .with_context(|| format!("checkpoint model string {model:?} does not parse"))?;
+        if let Some(hash) = snap.spec_hash {
+            if hash != spec.spec_hash() {
+                bail!(
+                    "corrupt checkpoint: model string {model:?} hashes to {:#018x}, \
+                     file records {hash:#018x}",
+                    spec.spec_hash()
+                );
+            }
+        }
+        let mut engine = Self::new(spec, snap.theta.clone())?;
+        engine.step = snap.step;
+        Ok(engine)
+    }
+
+    /// Build an engine from `<dir>/checkpoint.json`.
+    pub fn from_checkpoint_dir(dir: &Path) -> Result<Self> {
+        let path = checkpoint_path(dir);
+        let snap = load_snapshot(&path)?;
+        Self::from_snapshot(&snap)
+            .with_context(|| format!("building inference engine from {}", path.display()))
+    }
+
+    pub fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    pub fn spec_hash(&self) -> u64 {
+        self.spec_hash
+    }
+
+    pub fn input_len(&self) -> usize {
+        self.input_len
+    }
+
+    pub fn n_outputs(&self) -> usize {
+        self.n_outputs
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.theta.len()
+    }
+
+    /// Training step the served parameters were checkpointed at.
+    pub fn step(&self) -> u64 {
+        self.step
+    }
+
+    /// The served parameter vector (the reload watcher compares
+    /// candidates against this to tell a genuinely new snapshot from
+    /// the baseline already being served).
+    pub fn params(&self) -> &[f32] {
+        &self.theta
+    }
+
+    /// Batched forward over `n` input rows into `out` (resized to
+    /// `n · n_outputs`).  Scratch is caller-owned so `&self` engines can
+    /// be shared across threads; the arithmetic is
+    /// [`exec::ForwardScratch::forward`] — the training path's kernels.
+    pub fn infer_into(
+        &self,
+        x: &[f32],
+        n: usize,
+        scratch: &mut exec::ForwardScratch,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        if x.len() != n * self.input_len {
+            bail!(
+                "infer: {n} rows of {} features need {} floats, got {}",
+                self.input_len,
+                n * self.input_len,
+                x.len()
+            );
+        }
+        scratch.forward(self.spec.layers(), self.widest, &self.theta, &self.defects, x, n, out);
+        Ok(())
+    }
+
+    /// Convenience single-shot forward (allocates scratch; the serving
+    /// hot path uses [`InferenceEngine::infer_into`]).
+    pub fn infer(&self, x: &[f32], n: usize) -> Result<Vec<f32>> {
+        let mut scratch = exec::ForwardScratch::new();
+        let mut out = Vec::new();
+        self.infer_into(x, n, &mut scratch, &mut out)?;
+        Ok(out)
+    }
+
+    /// Per-row argmax of a logit block (the `Infer` reply's second
+    /// array), with [`exec::argmax_row`]'s tie-breaking — identical to
+    /// the evaluate path's prediction rule.
+    pub fn argmax(&self, logits: &[f32]) -> Vec<u32> {
+        logits
+            .chunks(self.n_outputs)
+            .map(|row| exec::argmax_row(row) as u32)
+            .collect()
+    }
+
+    /// `(cost, #correct)` over a labelled set — the same scoring as
+    /// [`crate::device::HardwareDevice::evaluate`], bit for bit
+    /// ([`exec::score_batch`]).
+    pub fn evaluate(&self, x: &[f32], y: &[f32], n: usize) -> Result<(f32, f32)> {
+        if y.len() != n * self.n_outputs {
+            bail!("evaluate: {n} rows need {} targets, got {}", n * self.n_outputs, y.len());
+        }
+        let mut scratch = exec::ForwardScratch::new();
+        let mut out = Vec::new();
+        self.infer_into(x, n, &mut scratch, &mut out)?;
+        Ok(exec::score_batch(&out, y, n, self.n_outputs))
+    }
+}
+
+/// The atomically swappable engine slot: every serving thread reads the
+/// current engine through one `RwLock<Arc<_>>`, and hot reload replaces
+/// the `Arc` in a single write — in-flight batches keep their old `Arc`
+/// and finish on the engine they started with.
+///
+/// The slot pins the **spec hash of the first engine**: a swap to a
+/// different layer stack (or parameter count) is rejected, so a reload
+/// can never change what model an endpoint serves — only how well it
+/// serves it.
+pub struct EngineSlot {
+    current: RwLock<Arc<InferenceEngine>>,
+    spec_hash: u64,
+    n_params: usize,
+}
+
+impl EngineSlot {
+    pub fn new(engine: InferenceEngine) -> Arc<EngineSlot> {
+        let spec_hash = engine.spec_hash();
+        let n_params = engine.n_params();
+        Arc::new(EngineSlot { current: RwLock::new(Arc::new(engine)), spec_hash, n_params })
+    }
+
+    /// The engine to run the next batch on (cheap: one `Arc` clone under
+    /// a read lock).
+    pub fn current(&self) -> Arc<InferenceEngine> {
+        self.current.read().expect("engine slot lock poisoned").clone()
+    }
+
+    /// The spec hash this slot is pinned to.
+    pub fn spec_hash(&self) -> u64 {
+        self.spec_hash
+    }
+
+    /// Atomically swap in a fresh engine.  Gated: the newcomer must run
+    /// the *same* spec (hash and parameter count) as the engine the slot
+    /// was created with — a reload may move θ, never the model.
+    pub fn swap(&self, engine: InferenceEngine) -> Result<()> {
+        if engine.spec_hash() != self.spec_hash {
+            bail!(
+                "reload rejected: serving spec hash {:#018x}, candidate runs {} \
+                 (hash {:#018x}) — an endpoint never changes model mid-flight",
+                self.spec_hash,
+                engine.spec(),
+                engine.spec_hash()
+            );
+        }
+        if engine.n_params() != self.n_params {
+            bail!(
+                "reload rejected: parameter count changed ({} -> {}) under an \
+                 unchanged spec hash — refusing a corrupt candidate",
+                self.n_params,
+                engine.n_params()
+            );
+        }
+        *self.current.write().expect("engine slot lock poisoned") = Arc::new(engine);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{MgdConfig, MgdTrainer, ScheduleKind};
+    use crate::datasets::xor;
+    use crate::device::{HardwareDevice, NativeDevice};
+
+    fn snapshot_after(steps: usize, seed: u64) -> TrainerSnapshot {
+        let data = xor();
+        let mut dev = NativeDevice::new(&[2, 2, 1], 1);
+        let mut rng = crate::rng::Rng::new(seed);
+        let mut theta = vec![0f32; 9];
+        crate::optim::init_params_uniform(&mut rng, &mut theta, 1.0);
+        dev.set_params(&theta).unwrap();
+        let cfg = MgdConfig { seed, ..Default::default() };
+        let mut tr = MgdTrainer::new(&mut dev, &data, cfg, ScheduleKind::Cyclic);
+        for _ in 0..steps {
+            tr.step().unwrap();
+        }
+        tr.checkpoint().unwrap()
+    }
+
+    #[test]
+    fn engine_from_snapshot_matches_device_cost_bitwise() {
+        let snap = snapshot_after(13, 3);
+        let engine = InferenceEngine::from_snapshot(&snap).unwrap();
+        assert_eq!(engine.step(), 13);
+        assert_eq!(engine.input_len(), 2);
+        assert_eq!(engine.n_outputs(), 1);
+        // Rebuild the device at the checkpointed θ; the engine's forward
+        // must reproduce its cost measurement bit for bit.
+        let mut dev = NativeDevice::new(&[2, 2, 1], 4);
+        dev.set_params(&snap.theta).unwrap();
+        let data = xor();
+        dev.load_batch(&data.x, &data.y).unwrap();
+        let dev_cost = dev.cost(None).unwrap();
+        let logits = engine.infer(&data.x, 4).unwrap();
+        let engine_cost = exec::mse(&logits, &data.y);
+        assert_eq!(engine_cost.to_bits(), dev_cost.to_bits());
+        // And the evaluate head agrees exactly.
+        let (ec, ecorr) = engine.evaluate(&data.x, &data.y, 4).unwrap();
+        let (dc, dcorr) = dev.evaluate(&data.x, &data.y, 4).unwrap();
+        assert_eq!(ec.to_bits(), dc.to_bits());
+        assert_eq!(ecorr, dcorr);
+    }
+
+    #[test]
+    fn engine_rejects_spec_less_and_mismatched_state() {
+        let mut snap = snapshot_after(2, 5);
+        // v1-style snapshot: no model identity.
+        let mut v1 = snap.clone();
+        v1.model = None;
+        v1.spec_hash = None;
+        let err = InferenceEngine::from_snapshot(&v1).unwrap_err();
+        assert!(format!("{err:#}").contains("model identity"), "{err:#}");
+        // Corrupt: model string and recorded hash disagree.
+        snap.model = Some("2x2x1:relu,relu".to_string());
+        let err = InferenceEngine::from_snapshot(&snap).unwrap_err();
+        assert!(format!("{err:#}").contains("corrupt checkpoint"), "{err:#}");
+        // Shape mismatch between spec and θ.
+        let spec: ModelSpec = "4x4x1".parse().unwrap();
+        assert!(InferenceEngine::new(spec, vec![0.0; 9]).is_err());
+    }
+
+    #[test]
+    fn slot_swaps_same_spec_and_rejects_different_spec() {
+        let spec: ModelSpec = "2x2x1".parse().unwrap();
+        let slot = EngineSlot::new(InferenceEngine::new(spec.clone(), vec![0.0; 9]).unwrap());
+        let before = slot.current();
+        // Same spec, new θ: accepted, visible to the next reader.
+        slot.swap(InferenceEngine::new(spec.clone(), vec![1.0; 9]).unwrap()).unwrap();
+        let after = slot.current();
+        assert_eq!(after.infer(&[1.0, 1.0], 1).unwrap().len(), 1);
+        assert_ne!(
+            before.infer(&[1.0, 1.0], 1).unwrap()[0].to_bits(),
+            after.infer(&[1.0, 1.0], 1).unwrap()[0].to_bits(),
+            "new θ must change the answer"
+        );
+        // Same P (9), different stack: the hash gate holds.
+        let wrong: ModelSpec = "2x2x1:relu,relu".parse().unwrap();
+        let err = slot.swap(InferenceEngine::new(wrong, vec![0.0; 9]).unwrap()).unwrap_err();
+        assert!(format!("{err:#}").contains("reload rejected"), "{err:#}");
+        // The rejected swap left the good engine in place.
+        assert_eq!(slot.current().spec().to_string(), "2x2x1:sigmoid,sigmoid");
+    }
+
+    #[test]
+    fn argmax_uses_the_shared_tie_break() {
+        let spec: ModelSpec = "2x2x3:relu,identity".parse().unwrap();
+        let engine = InferenceEngine::new(spec.clone(), vec![0.0; spec.param_count()]).unwrap();
+        // All-zero θ → identical logits per row: the tie must resolve to
+        // the LAST index, like Iterator::max_by in evaluate().
+        let am = engine.argmax(&[0.0, 0.0, 0.0, 1.0, 2.0, 2.0]);
+        assert_eq!(am, vec![2, 2]);
+    }
+}

@@ -1,0 +1,411 @@
+//! The inference serving subsystem: batched forward engine, dynamic
+//! micro-batching, hot checkpoint reload.
+//!
+//! The paper's end state is a *trained* hardware network answering
+//! queries online (§6); everything before this module only trained.
+//! Serving closes the loop:
+//!
+//! - [`engine`] — [`InferenceEngine`]: an immutable `(ModelSpec, θ)`
+//!   executor loaded from a checkpoint-v2 file, running the **training
+//!   path's own kernels** ([`crate::device::exec`]) so served logits are
+//!   bit-identical to the device activations the trainer measured; and
+//!   [`EngineSlot`], the atomically swappable cell serving threads read
+//!   it through.
+//! - [`batcher`] — dynamic micro-batching under a max-batch / max-delay
+//!   policy: concurrent requests coalesce into one forward pass, the
+//!   serving side of the throughput-per-dispatch lever PR 2 built for
+//!   training probes.
+//! - [`reload`] — hot checkpoint reload: a watcher polls
+//!   `--checkpoint-dir`, and a fresh snapshot swaps in atomically —
+//!   gated on the spec hash, so a reload can move θ but never change
+//!   which model the endpoint serves.
+//! - [`client`] — [`InferenceClient`], the query-side counterpart
+//!   (chunks big batches at the protocol frame cap).
+//! - [`serve_infer`] — the multi-session TCP server speaking
+//!   [`crate::device::protocol::Op::Infer`] (`0x0C`), with fleet-style
+//!   JSONL telemetry (per-batch sizes, p50/p99 request latency).
+//!
+//! Surfaced as `mgd serve-infer` (host a checkpoint) and `mgd infer`
+//! (query one); `benches/infer_throughput.rs` measures req/s and latency
+//! percentiles against batch size.
+
+pub mod batcher;
+pub mod client;
+pub mod engine;
+pub mod reload;
+
+pub use batcher::{BatchPolicy, Batcher, ServeStats, ServeSummary};
+pub use client::InferenceClient;
+pub use engine::{EngineSlot, InferenceEngine};
+pub use reload::ReloadConfig;
+
+use std::io::{BufReader, BufWriter};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::device::protocol as p;
+use crate::fleet::telemetry::{Event, Telemetry};
+
+use batcher::BatcherClient;
+
+/// Inference-server knobs.
+pub struct ServeInferOptions {
+    /// Stop accepting after this many sessions (`None` = serve forever).
+    pub max_sessions: Option<usize>,
+    /// Micro-batch assembly policy.
+    pub policy: BatchPolicy,
+    /// JSONL event stream (batches, reloads, the exit summary).
+    pub telemetry: Arc<Telemetry>,
+    /// Watch a checkpoint directory and hot-reload fresh snapshots.
+    pub reload: Option<ReloadConfig>,
+}
+
+impl Default for ServeInferOptions {
+    fn default() -> Self {
+        ServeInferOptions {
+            max_sessions: None,
+            policy: BatchPolicy::default(),
+            telemetry: Telemetry::null(),
+            reload: None,
+        }
+    }
+}
+
+/// Serve `engine` on an already-bound listener: one accept loop, one
+/// thread per client session, every session submitting into one shared
+/// [`Batcher`].  Returns the aggregate [`ServeSummary`] once the session
+/// budget is exhausted (and emits it as an `infer_summary` event).
+pub fn serve_infer(
+    engine: InferenceEngine,
+    listener: TcpListener,
+    opts: ServeInferOptions,
+) -> Result<ServeSummary> {
+    let slot = EngineSlot::new(engine);
+    let stats = ServeStats::new();
+    let batcher = Batcher::spawn(slot.clone(), opts.policy, opts.telemetry.clone(), stats.clone());
+    let stop = Arc::new(AtomicBool::new(false));
+    let watcher = opts.reload.clone().map(|cfg| {
+        reload::spawn_watcher(slot.clone(), cfg, opts.telemetry.clone(), stop.clone())
+    });
+    {
+        let engine = slot.current();
+        eprintln!(
+            "[serve-infer] serving {} (P={}, step {}) on {} — batch ≤{} rows / ≤{:.1} ms",
+            engine.spec(),
+            engine.n_params(),
+            engine.step(),
+            listener.local_addr()?,
+            opts.policy.max_batch_rows,
+            opts.policy.max_delay.as_secs_f64() * 1e3,
+        );
+    }
+
+    let mut handles = Vec::new();
+    let mut accepted = 0usize;
+    let mut accept_err: Option<anyhow::Error> = None;
+    for stream in listener.incoming() {
+        let stream = match stream {
+            Ok(stream) => stream,
+            Err(e) => {
+                accept_err = Some(e.into());
+                break;
+            }
+        };
+        accepted += 1;
+        let session = accepted as u64;
+        let peer = stream
+            .peer_addr()
+            .map(|a| a.to_string())
+            .unwrap_or_else(|_| "unknown".to_string());
+        opts.telemetry.emit(Event::SessionOpened { session, peer });
+        let slot = slot.clone();
+        let client = batcher.client();
+        let telemetry = opts.telemetry.clone();
+        let handle = std::thread::Builder::new()
+            .name(format!("mgd-infer-session-{session}"))
+            .spawn(move || {
+                let mut requests = 0u64;
+                match handle_session(stream, &slot, &client, &mut requests) {
+                    Ok(()) => telemetry.emit(Event::SessionClosed {
+                        session,
+                        requests,
+                        ok: true,
+                        error: None,
+                    }),
+                    Err(e) => {
+                        eprintln!("[serve-infer] session {session} ended: {e:#}");
+                        telemetry.emit(Event::SessionClosed {
+                            session,
+                            requests,
+                            ok: false,
+                            error: Some(format!("{e:#}")),
+                        });
+                    }
+                }
+            })
+            .expect("spawning inference session thread");
+        handles.push(handle);
+        handles.retain(|h| !h.is_finished());
+        if let Some(max) = opts.max_sessions {
+            if accepted >= max {
+                break;
+            }
+        }
+    }
+    for handle in handles {
+        let _ = handle.join();
+    }
+    // Sessions are gone; release the batcher and the watcher.
+    batcher.shutdown();
+    stop.store(true, Ordering::Relaxed);
+    if let Some(w) = watcher {
+        let _ = w.join();
+    }
+    let summary = stats.summary();
+    opts.telemetry.emit(Event::InferSummary {
+        requests: summary.requests,
+        rows: summary.rows,
+        batches: summary.batches,
+        p50_ms: summary.p50_ms,
+        p99_ms: summary.p99_ms,
+    });
+    eprintln!(
+        "[serve-infer] served {} requests / {} rows in {} batches (p50 {:.2} ms, p99 {:.2} ms)",
+        summary.requests, summary.rows, summary.batches, summary.p50_ms, summary.p99_ms
+    );
+    match accept_err {
+        Some(e) => Err(e),
+        None => Ok(summary),
+    }
+}
+
+/// One client session.  Counts served requests into `requests`.
+fn handle_session(
+    stream: TcpStream,
+    slot: &Arc<EngineSlot>,
+    batcher: &BatcherClient,
+    requests: &mut u64,
+) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    loop {
+        let (op, payload) = match p::read_request(&mut reader) {
+            Ok(req) => req,
+            Err(e) => {
+                // Client hung up without Bye (fine), or sent an
+                // oversized/garbage frame (tell it why, then close).
+                let _ = p::write_err(&mut writer, &format!("{e:#}"));
+                return Ok(());
+            }
+        };
+        *requests += 1;
+        match handle_request(slot, batcher, op, &payload) {
+            Ok(Some(reply)) => p::write_ok(&mut writer, &reply)?,
+            Ok(None) => {
+                p::write_ok(&mut writer, &[])?;
+                return Ok(()); // Bye
+            }
+            Err(e) => p::write_err(&mut writer, &format!("{e:#}"))?,
+        }
+    }
+}
+
+/// Dispatch one request. `Ok(None)` signals session end (Bye).
+fn handle_request(
+    slot: &Arc<EngineSlot>,
+    batcher: &BatcherClient,
+    op: p::Op,
+    payload: &[u8],
+) -> Result<Option<Vec<u8>>> {
+    let mut pos = 0usize;
+    let reply = match op {
+        p::Op::Hello => {
+            // Same silhouette shape as the training server.  B is 0: an
+            // inference endpoint has no training batch, and request
+            // sizing comes from the frame-cap rule
+            // (`max_infer_rows_per_frame`), not the handshake.
+            let engine = slot.current();
+            let mut out = Vec::with_capacity(16);
+            p::put_u32(&mut out, engine.n_params() as u32);
+            p::put_u32(&mut out, 0);
+            p::put_u32(&mut out, engine.input_len() as u32);
+            p::put_u32(&mut out, engine.n_outputs() as u32);
+            out
+        }
+        p::Op::ModelSpec => {
+            // Same negotiation as the training wire: a client that
+            // demands a spec fails loudly on a mismatch; the reply
+            // always carries the served spec (an engine always has one).
+            let client_spec = p::get_opt_spec(payload, &mut pos)?;
+            let engine = slot.current();
+            if let Some(want) = &client_spec {
+                if want.spec_hash() != engine.spec_hash() {
+                    bail!(
+                        "model spec mismatch: client expects {want} (hash {:#018x}), \
+                         server serves {} (hash {:#018x})",
+                        want.spec_hash(),
+                        engine.spec(),
+                        engine.spec_hash()
+                    );
+                }
+            }
+            let mut out = Vec::new();
+            p::put_opt_spec(&mut out, Some(engine.spec()));
+            out
+        }
+        p::Op::Ping => payload.to_vec(),
+        p::Op::Infer => {
+            let n_rows = p::get_u32(payload, &mut pos)? as usize;
+            let rows = p::get_array(payload, &mut pos)?;
+            let engine = slot.current();
+            let in_len = engine.input_len();
+            let k = engine.n_outputs();
+            let expect = n_rows.checked_mul(in_len).ok_or_else(|| {
+                anyhow::anyhow!("Infer: row count {n_rows} overflows the input size")
+            })?;
+            if rows.len() != expect {
+                bail!(
+                    "Infer: {n_rows} rows of {in_len} features need {expect} floats, \
+                     got {} — input width mismatch",
+                    rows.len()
+                );
+            }
+            let max_rows = p::max_infer_rows_per_frame(in_len, k);
+            if n_rows > max_rows {
+                bail!(
+                    "Infer: {n_rows} rows would overflow the reply frame \
+                     ({k} logits + argmax per row); chunk requests at {max_rows} rows"
+                );
+            }
+            let out = batcher.submit(rows, n_rows)?;
+            let mut reply =
+                Vec::with_capacity(p::INFER_OVERHEAD_BYTES + 4 * (out.logits.len() + n_rows));
+            p::put_array(&mut reply, &out.logits);
+            p::put_u32_array(&mut reply, &out.argmax);
+            reply
+        }
+        p::Op::Bye => return Ok(None),
+        other => {
+            bail!(
+                "opcode {other:?} is a training-protocol request; this endpoint is a \
+                 read-only inference server (Hello, ModelSpec, Ping, Infer, Bye)"
+            );
+        }
+    };
+    Ok(Some(reply))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelSpec;
+
+    fn test_engine() -> InferenceEngine {
+        let spec: ModelSpec = "3x4x2:relu,softmax".parse().unwrap();
+        let mut theta = vec![0f32; spec.param_count()];
+        let mut rng = crate::rng::Rng::new(9);
+        rng.fill_uniform(&mut theta, -1.0, 1.0);
+        InferenceEngine::new(spec, theta).unwrap()
+    }
+
+    fn test_parts() -> (Arc<EngineSlot>, Batcher) {
+        let slot = EngineSlot::new(test_engine());
+        let batcher = Batcher::spawn(
+            slot.clone(),
+            BatchPolicy { max_batch_rows: 8, max_delay: std::time::Duration::from_millis(1) },
+            Telemetry::null(),
+            ServeStats::new(),
+        );
+        (slot, batcher)
+    }
+
+    #[test]
+    fn dispatch_hello_and_spec() {
+        let (slot, batcher) = test_parts();
+        let client = batcher.client();
+        let reply = handle_request(&slot, &client, p::Op::Hello, &[]).unwrap().unwrap();
+        let mut pos = 0;
+        let p_count = p::get_u32(&reply, &mut pos).unwrap();
+        assert_eq!(p_count as usize, slot.current().n_params());
+        assert_eq!(p::get_u32(&reply, &mut pos).unwrap(), 0);
+        assert_eq!(p::get_u32(&reply, &mut pos).unwrap(), 3);
+        assert_eq!(p::get_u32(&reply, &mut pos).unwrap(), 2);
+        // Spec query returns the served spec; a wrong demand errors.
+        let mut req = Vec::new();
+        p::put_opt_spec(&mut req, None);
+        let reply = handle_request(&slot, &client, p::Op::ModelSpec, &req).unwrap().unwrap();
+        let mut pos = 0;
+        let got = p::get_opt_spec(&reply, &mut pos).unwrap().unwrap();
+        assert_eq!(got.to_string(), "3x4x2:relu,softmax");
+        let wrong: ModelSpec = "3x4x2".parse().unwrap();
+        let mut req = Vec::new();
+        p::put_opt_spec(&mut req, Some(&wrong));
+        let err = handle_request(&slot, &client, p::Op::ModelSpec, &req).unwrap_err();
+        assert!(format!("{err:#}").contains("model spec mismatch"), "{err:#}");
+        drop(client);
+        batcher.shutdown();
+    }
+
+    #[test]
+    fn dispatch_infer_matches_direct_engine_forward() {
+        let (slot, batcher) = test_parts();
+        let client = batcher.client();
+        let x = [0.5f32, -0.25, 1.0, 0.0, 0.75, -1.0];
+        let mut req = Vec::new();
+        p::put_u32(&mut req, 2);
+        p::put_array(&mut req, &x);
+        let reply = handle_request(&slot, &client, p::Op::Infer, &req).unwrap().unwrap();
+        let mut pos = 0;
+        let logits = p::get_array(&reply, &mut pos).unwrap();
+        let argmax = p::get_u32_array(&reply, &mut pos).unwrap();
+        assert_eq!(pos, reply.len());
+        assert_eq!(argmax.len(), 2);
+        let direct = slot.current().infer(&x, 2).unwrap();
+        let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&logits), bits(&direct));
+        drop(client);
+        batcher.shutdown();
+    }
+
+    #[test]
+    fn dispatch_infer_rejects_malformed_requests_and_keeps_dispatching() {
+        let (slot, batcher) = test_parts();
+        let client = batcher.client();
+        // Width mismatch: 2 rows claimed, floats for 1.5 rows provided.
+        let mut req = Vec::new();
+        p::put_u32(&mut req, 2);
+        p::put_array(&mut req, &[0.0; 4]);
+        let err = handle_request(&slot, &client, p::Op::Infer, &req).unwrap_err();
+        assert!(format!("{err:#}").contains("width mismatch"), "{err:#}");
+        // Truncated payload.
+        let mut req = Vec::new();
+        p::put_u32(&mut req, 1);
+        assert!(handle_request(&slot, &client, p::Op::Infer, &req).is_err());
+        // Row count that would overflow the reply frame.
+        let mut req = Vec::new();
+        p::put_u32(&mut req, u32::MAX);
+        p::put_array(&mut req, &[]);
+        let err = handle_request(&slot, &client, p::Op::Infer, &req).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("chunk requests") || msg.contains("mismatch"), "{msg}");
+        // Zero rows: legal, empty reply.
+        let mut req = Vec::new();
+        p::put_u32(&mut req, 0);
+        p::put_array(&mut req, &[]);
+        let reply = handle_request(&slot, &client, p::Op::Infer, &req).unwrap().unwrap();
+        let mut pos = 0;
+        assert!(p::get_array(&reply, &mut pos).unwrap().is_empty());
+        assert!(p::get_u32_array(&reply, &mut pos).unwrap().is_empty());
+        // Training opcodes are typed errors, not hangs or panics.
+        let err = handle_request(&slot, &client, p::Op::SetParams, &[]).unwrap_err();
+        assert!(format!("{err:#}").contains("read-only inference server"), "{err:#}");
+        // The dispatcher still works after every rejection.
+        assert!(handle_request(&slot, &client, p::Op::Hello, &[]).is_ok());
+        drop(client);
+        batcher.shutdown();
+    }
+}

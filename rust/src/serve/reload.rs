@@ -1,0 +1,125 @@
+//! Hot checkpoint reload: watch a checkpoint directory and atomically
+//! swap fresh parameters into the serving [`EngineSlot`].
+//!
+//! The training side writes `checkpoint.json` atomically (temp file +
+//! rename, see [`crate::coordinator::checkpoint`]), so the watcher can
+//! never observe a torn file: either the old snapshot or the new one.
+//! The watcher polls the file's `(mtime, len)` signature — no inotify in
+//! an offline std-only build — and on change loads the snapshot, builds
+//! a candidate [`InferenceEngine`], and offers it to the slot.  The
+//! slot's spec-hash gate decides: same layer stack → served traffic
+//! moves to the new θ at the next micro-batch; anything else (different
+//! model, corrupt file, v1 snapshot) → the reload is rejected, the
+//! incident is telemetered, and the old engine keeps serving.  A broken
+//! write can degrade freshness, never availability — and never what
+//! model the endpoint speaks.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, SystemTime};
+
+use super::engine::{EngineSlot, InferenceEngine};
+use crate::coordinator::checkpoint::{checkpoint_path, load_snapshot};
+use crate::fleet::telemetry::{Event, Telemetry};
+
+/// Watcher knobs.
+#[derive(Debug, Clone)]
+pub struct ReloadConfig {
+    /// Directory holding `checkpoint.json` (the same layout
+    /// `mgd train --checkpoint-dir` writes).
+    pub dir: PathBuf,
+    /// Poll cadence for the file signature.
+    pub poll: Duration,
+}
+
+/// File-change signature: modification time + length.  The writer
+/// renames a fully-written temp file into place, so any signature change
+/// is a complete new snapshot.
+fn signature(path: &std::path::Path) -> Option<(SystemTime, u64)> {
+    let meta = std::fs::metadata(path).ok()?;
+    Some((meta.modified().ok()?, meta.len()))
+}
+
+/// Spawn the watcher thread.  It polls until `stop` flips true; the
+/// returned handle joins promptly after that (poll sleeps are chopped
+/// into ≤50 ms slices).
+pub fn spawn_watcher(
+    slot: Arc<EngineSlot>,
+    cfg: ReloadConfig,
+    telemetry: Arc<Telemetry>,
+    stop: Arc<AtomicBool>,
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("mgd-infer-reload".to_string())
+        .spawn(move || {
+            let path = checkpoint_path(&cfg.dir);
+            // Deliberately NOT seeded from a fresh stat: the engine was
+            // loaded by the caller some time before this thread started,
+            // and a snapshot renamed into place inside that window would
+            // then be adopted as the baseline and never served.  The
+            // first poll instead loads the file once and compares it
+            // against the engine actually being served (below) — a
+            // genuinely-new snapshot swaps in, the true baseline is
+            // skipped silently.
+            let mut last: Option<(SystemTime, u64)> = None;
+            while !stop.load(Ordering::Relaxed) {
+                let mut slept = Duration::ZERO;
+                while slept < cfg.poll && !stop.load(Ordering::Relaxed) {
+                    let slice = (cfg.poll - slept).min(Duration::from_millis(50));
+                    std::thread::sleep(slice);
+                    slept += slice;
+                }
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                let sig = signature(&path);
+                if sig.is_none() || sig == last {
+                    continue;
+                }
+                last = sig;
+                let candidate = load_snapshot(&path);
+                if let Ok(snap) = &candidate {
+                    // The snapshot this endpoint booted from (same step,
+                    // same θ as the served engine) is not a reload.
+                    let cur = slot.current();
+                    if snap.step == cur.step() && snap.theta.as_slice() == cur.params() {
+                        continue;
+                    }
+                }
+                match candidate
+                    .and_then(|snap| InferenceEngine::from_snapshot(&snap))
+                    .and_then(|engine| {
+                        let step = engine.step();
+                        let model = engine.spec().to_string();
+                        slot.swap(engine)?;
+                        Ok((step, model))
+                    }) {
+                    Ok((step, model)) => {
+                        eprintln!(
+                            "[serve-infer] reloaded {} (step {step}, model {model})",
+                            path.display()
+                        );
+                        telemetry.emit(Event::EngineReloaded {
+                            path: path.display().to_string(),
+                            step,
+                            model,
+                        });
+                    }
+                    Err(e) => {
+                        eprintln!(
+                            "[serve-infer] reload of {} rejected: {e:#} — previous engine \
+                             keeps serving",
+                            path.display()
+                        );
+                        telemetry.emit(Event::ReloadRejected {
+                            path: path.display().to_string(),
+                            error: format!("{e:#}"),
+                        });
+                    }
+                }
+            }
+        })
+        .expect("spawning checkpoint-reload watcher thread")
+}

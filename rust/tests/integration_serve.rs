@@ -1,0 +1,444 @@
+//! Integration tests for the inference serving subsystem (`mgd::serve`):
+//! engine/trainer bit-identity, dynamic micro-batching over live TCP,
+//! `Infer` frame hardening, and hot checkpoint reload with the spec-hash
+//! gate.
+
+use std::net::TcpListener;
+use std::time::Duration;
+
+use mgd::coordinator::{
+    checkpoint_path, load_snapshot, save_snapshot, train_checkpointed, CheckpointConfig,
+    MgdConfig, MgdTrainer, ScheduleKind, TrainOptions,
+};
+use mgd::datasets;
+use mgd::device::protocol as p;
+use mgd::device::{HardwareDevice, NativeDevice};
+use mgd::fleet::Telemetry;
+use mgd::json::Json;
+use mgd::model::ModelSpec;
+use mgd::noise::NeuronDefects;
+use mgd::optim::init_params_uniform;
+use mgd::rng::Rng;
+use mgd::serve::{
+    serve_infer, BatchPolicy, InferenceClient, InferenceEngine, ReloadConfig, ServeInferOptions,
+};
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!(
+        "mgd-serve-test-{tag}-{}-{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|f| f.to_bits()).collect()
+}
+
+/// Random device + matching engine at the same θ for a spec string.
+fn device_and_engine(spec: &str, batch: usize, seed: u64) -> (NativeDevice, InferenceEngine) {
+    let spec: ModelSpec = spec.parse().unwrap();
+    let mut dev = NativeDevice::from_spec(spec.clone(), batch).unwrap();
+    let mut rng = Rng::new(seed);
+    let mut theta = vec![0f32; dev.n_params()];
+    init_params_uniform(&mut rng, &mut theta, 1.0);
+    dev.set_params(&theta).unwrap();
+    let engine = InferenceEngine::new(spec, theta).unwrap();
+    (dev, engine)
+}
+
+#[test]
+fn engine_forward_is_bit_identical_to_the_training_device() {
+    // The acceptance pin: across depth-4 mixed-activation specs, the
+    // forward-only engine and the training device (which shares the
+    // executor kernels) must produce bit-identical costs and identical
+    // (cost, #correct) evaluations for the same θ.
+    for (si, spec) in [
+        "6x8x5x3:relu,tanh,softmax",
+        "5x7x6x2:tanh,sigmoid,softmax",
+        "4x9x4x4:relu,identity,sigmoid",
+        "7x5x8x2:sigmoid,relu,tanh",
+    ]
+    .iter()
+    .enumerate()
+    {
+        let n = 6usize;
+        let (mut dev, engine) = device_and_engine(spec, n, 100 + si as u64);
+        let k = dev.n_outputs();
+        let d = dev.input_len();
+        let mut rng = Rng::new(7 + si as u64);
+        let mut x = vec![0f32; n * d];
+        let mut y = vec![0f32; n * k];
+        rng.fill_uniform(&mut x, -1.0, 1.0);
+        rng.fill_uniform(&mut y, 0.0, 1.0);
+        // Cost path: engine logits scored with the shared MSE equal the
+        // device's cost measurement, bit for bit.
+        dev.load_batch(&x, &y).unwrap();
+        let dev_cost = dev.cost(None).unwrap();
+        let logits = engine.infer(&x, n).unwrap();
+        let engine_cost = mgd::device::exec::mse(&logits, &y);
+        assert_eq!(engine_cost.to_bits(), dev_cost.to_bits(), "{spec}: cost diverged");
+        // Evaluate path: same cost bits, same correct count.
+        let (dc, dcorr) = dev.evaluate(&x, &y, n).unwrap();
+        let (ec, ecorr) = engine.evaluate(&x, &y, n).unwrap();
+        assert_eq!(ec.to_bits(), dc.to_bits(), "{spec}: eval cost diverged");
+        assert_eq!(ecorr, dcorr, "{spec}: correct count diverged");
+    }
+}
+
+#[test]
+fn engine_honors_spec_attached_defects() {
+    // A locally-built engine for a defective device spec must reproduce
+    // the defective activations exactly — the defect table rides on the
+    // ModelSpec, and both paths route it through the same executor.
+    let spec: ModelSpec = "3x5x4x2:relu,tanh,softmax".parse().unwrap();
+    let mut rng = Rng::new(42);
+    let table = NeuronDefects::sample(spec.n_neurons(), 0.4, &mut rng);
+    let spec = spec.with_defects(table).unwrap();
+    let mut theta = vec![0f32; spec.param_count()];
+    init_params_uniform(&mut rng, &mut theta, 1.0);
+    let mut dev = NativeDevice::from_spec(spec.clone(), 3).unwrap();
+    dev.set_params(&theta).unwrap();
+    let engine = InferenceEngine::new(spec, theta).unwrap();
+    let mut x = vec![0f32; 9];
+    let y = vec![0.5f32; 6];
+    rng.fill_uniform(&mut x, -1.0, 1.0);
+    dev.load_batch(&x, &y).unwrap();
+    let logits = engine.infer(&x, 3).unwrap();
+    let engine_cost = mgd::device::exec::mse(&logits, &y);
+    assert_eq!(engine_cost.to_bits(), dev.cost(None).unwrap().to_bits());
+}
+
+#[test]
+fn served_checkpoint_reproduces_the_trainers_own_eval() {
+    // train → checkpoint → serve → query: the accuracy a client measures
+    // over the wire equals MgdTrainer::evaluate_on for the same θ, bit
+    // for bit — engine/trainer parity in production code.
+    let dir = temp_dir("roundtrip");
+    let spec: ModelSpec = "4x6x5x1:relu,tanh,sigmoid".parse().unwrap();
+    let data = datasets::parity(4);
+    let mut dev = NativeDevice::from_spec(spec.clone(), 1).unwrap();
+    let mut rng = Rng::new(11);
+    let mut theta = vec![0f32; dev.n_params()];
+    init_params_uniform(&mut rng, &mut theta, 1.0);
+    dev.set_params(&theta).unwrap();
+    let cfg = MgdConfig { tau_x: 2, tau_theta: 4, eta: 0.5, seed: 11, ..Default::default() };
+    let mut tr = MgdTrainer::new(&mut dev, &data, cfg, ScheduleKind::Cyclic);
+    let opts = TrainOptions { max_steps: 200, ..Default::default() };
+    let ck = CheckpointConfig { dir: dir.clone(), every_steps: 0, resume: false };
+    train_checkpointed(&mut tr, &opts, None, 4, &ck).unwrap();
+    let (want_cost, want_correct) = tr.evaluate_on(&data).unwrap();
+
+    let engine = InferenceEngine::from_checkpoint_dir(&dir).unwrap();
+    assert_eq!(engine.step(), 200);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let server = std::thread::spawn(move || {
+        serve_infer(
+            engine,
+            listener,
+            ServeInferOptions { max_sessions: Some(1), ..Default::default() },
+        )
+        .unwrap()
+    });
+    // Demand the exact model: the spec gate must accept it.
+    let mut client = InferenceClient::connect_with_spec(&addr, Some(&spec)).unwrap();
+    assert_eq!(client.n_params(), spec.param_count());
+    // Odd rows-per-request forces uneven chunks across the eval set.
+    let (cost, correct) = client.evaluate(&data.x, &data.y, data.n, 5).unwrap();
+    client.close();
+    let summary = server.join().unwrap();
+    assert_eq!(cost.to_bits(), want_cost.to_bits(), "served cost != trainer eval cost");
+    assert_eq!(correct, want_correct, "served accuracy != trainer eval accuracy");
+    assert!(summary.requests >= 1 && summary.rows >= data.n as u64);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn concurrent_sessions_coalesce_and_each_gets_its_own_rows_back() {
+    let (_, engine) = device_and_engine("3x8x4:relu,softmax", 1, 77);
+    let reference = engine.clone();
+    let telemetry_path = temp_dir("batch-telemetry").join("serve.jsonl");
+    let telemetry = Telemetry::file(telemetry_path.to_str().unwrap()).unwrap();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let sessions = 6usize;
+    let server = {
+        let telemetry = telemetry.clone();
+        std::thread::spawn(move || {
+            serve_infer(
+                engine,
+                listener,
+                ServeInferOptions {
+                    max_sessions: Some(sessions),
+                    // Wide assembly window so the concurrent clients are
+                    // coalesced rather than answered one by one.
+                    policy: BatchPolicy {
+                        max_batch_rows: 64,
+                        max_delay: Duration::from_millis(150),
+                    },
+                    telemetry,
+                    reload: None,
+                },
+            )
+            .unwrap()
+        })
+    };
+    let mut clients = Vec::new();
+    for t in 0..sessions {
+        let addr = addr.clone();
+        let reference = reference.clone();
+        clients.push(std::thread::spawn(move || {
+            let mut client = InferenceClient::connect(&addr).unwrap();
+            // Distinct rows per session; 2 rows each.
+            let x: Vec<f32> =
+                (0..6).map(|i| (t as f32) * 0.3 + (i as f32) * 0.05 - 1.0).collect();
+            let (logits, argmax) = client.infer(&x, 2).unwrap();
+            client.close();
+            let want = reference.infer(&x, 2).unwrap();
+            assert_eq!(bits(&logits), bits(&want), "session {t} got someone else's logits");
+            assert_eq!(argmax, reference.argmax(&want), "session {t} argmax");
+        }));
+    }
+    for c in clients {
+        c.join().unwrap();
+    }
+    let summary = server.join().unwrap();
+    assert_eq!(summary.requests, sessions as u64);
+    assert_eq!(summary.rows, 2 * sessions as u64);
+    assert!(
+        summary.batches < sessions as u64,
+        "requests never coalesced: {} batches for {sessions} requests",
+        summary.batches
+    );
+    assert!(summary.p99_ms >= summary.p50_ms);
+    // The telemetry stream recorded multi-request batches and the final
+    // summary.
+    let text = std::fs::read_to_string(&telemetry_path).unwrap();
+    let mut saw_multi_request_batch = false;
+    let mut saw_summary = false;
+    for line in text.lines() {
+        let j = Json::parse(line).unwrap();
+        match j.field("event").unwrap().as_str().unwrap() {
+            "infer_batch" => {
+                if j.field("requests").unwrap().as_u64().unwrap() > 1 {
+                    saw_multi_request_batch = true;
+                }
+            }
+            "infer_summary" => {
+                saw_summary = true;
+                assert_eq!(j.field("requests").unwrap().as_u64().unwrap(), sessions as u64);
+            }
+            _ => {}
+        }
+    }
+    assert!(saw_multi_request_batch, "no coalesced batch in telemetry:\n{text}");
+    assert!(saw_summary, "no infer_summary event:\n{text}");
+    std::fs::remove_dir_all(telemetry_path.parent().unwrap()).ok();
+}
+
+#[test]
+fn infer_frame_hardening_over_live_tcp() {
+    let (_, engine) = device_and_engine("4x5x3:relu,softmax", 1, 33);
+    let reference = engine.clone();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let server = std::thread::spawn(move || {
+        serve_infer(
+            engine,
+            listener,
+            ServeInferOptions { max_sessions: Some(2), ..Default::default() },
+        )
+        .unwrap()
+    });
+
+    let mut client = InferenceClient::connect(&addr).unwrap();
+    // Zero-row batch: legal, empty reply.
+    let (logits, argmax) = client.infer(&[], 0).unwrap();
+    assert!(logits.is_empty() && argmax.is_empty());
+    // Client-side shape guard.
+    assert!(client.infer(&[0.0; 3], 1).is_err(), "short row must be rejected client-side");
+    // Forced multi-frame chunking equals one direct forward.
+    let mut rng = Rng::new(1);
+    let mut x = vec![0f32; 7 * 4];
+    rng.fill_uniform(&mut x, -1.0, 1.0);
+    let (chunked, _) = client.infer_chunked(&x, 7, 2).unwrap();
+    let direct = reference.infer(&x, 7).unwrap();
+    assert_eq!(bits(&chunked), bits(&direct), "chunking changed the logits");
+    client.close();
+
+    // Raw-wire session: malformed frames are typed errors and the
+    // session keeps serving afterwards.
+    use std::io::{Read, Write};
+    let mut raw = std::net::TcpStream::connect(&addr).unwrap();
+    // (a) Width mismatch: claim 2 rows, send floats for 1.
+    let mut payload = Vec::new();
+    p::put_u32(&mut payload, 2);
+    p::put_array(&mut payload, &[0.0; 4]);
+    p::write_request(&mut raw, p::Op::Infer, &payload).unwrap();
+    let mut reader = std::io::BufReader::new(raw.try_clone().unwrap());
+    let err = p::read_response(&mut reader).unwrap_err();
+    assert!(format!("{err:#}").contains("width mismatch"), "{err:#}");
+    // (b) Truncated payload: row count only, no array.
+    let mut payload = Vec::new();
+    p::put_u32(&mut payload, 1);
+    p::write_request(&mut raw, p::Op::Infer, &payload).unwrap();
+    assert!(p::read_response(&mut reader).is_err());
+    // (c) Oversized row count: the typed error names the chunk limit.
+    let mut payload = Vec::new();
+    p::put_u32(&mut payload, u32::MAX);
+    p::put_array(&mut payload, &[]);
+    p::write_request(&mut raw, p::Op::Infer, &payload).unwrap();
+    assert!(p::read_response(&mut reader).is_err());
+    // (d) The same session still answers a well-formed request.
+    let mut payload = Vec::new();
+    p::put_u32(&mut payload, 1);
+    p::put_array(&mut payload, &[0.1, 0.2, 0.3, 0.4]);
+    p::write_request(&mut raw, p::Op::Infer, &payload).unwrap();
+    let reply = p::read_response(&mut reader).unwrap();
+    let mut pos = 0;
+    assert_eq!(p::get_array(&reply, &mut pos).unwrap().len(), 3);
+    assert_eq!(p::get_u32_array(&reply, &mut pos).unwrap().len(), 1);
+    // (e) A frame header past MAX_FRAME_BYTES ends the session with an
+    // error response, not a hang or a giant allocation.
+    let mut wire = vec![p::Op::Infer as u8];
+    wire.extend_from_slice(&u32::MAX.to_le_bytes());
+    raw.write_all(&wire).unwrap();
+    raw.flush().unwrap();
+    let err = p::read_response(&mut reader).unwrap_err();
+    assert!(format!("{err:#}").contains("exceeds protocol maximum"), "{err:#}");
+    // Server closed the connection after the protocol violation.
+    let mut buf = [0u8; 1];
+    let n = reader.read(&mut buf).unwrap_or(0);
+    assert_eq!(n, 0, "session must close after an unreadable frame");
+    drop(raw);
+    server.join().unwrap();
+}
+
+/// Every truncation of a valid Infer payload is a decode error — the
+/// payload-level counterpart of the TCP test above.
+#[test]
+fn infer_payload_truncated_at_every_offset_is_an_error() {
+    let rows = [0.5f32, 1.5, -0.5, 0.25, 0.75, -1.0];
+    let mut payload = Vec::new();
+    p::put_u32(&mut payload, 2);
+    p::put_array(&mut payload, &rows);
+    for cut in 0..payload.len() {
+        let slice = &payload[..cut];
+        let mut pos = 0;
+        let parsed = p::get_u32(slice, &mut pos)
+            .and_then(|n_rows| Ok((n_rows, p::get_array(slice, &mut pos)?)))
+            .and_then(|(n_rows, got)| {
+                // The server-side length check (rows·width == array len).
+                if got.len() != n_rows as usize * 3 {
+                    anyhow::bail!("length mismatch");
+                }
+                Ok(())
+            });
+        assert!(parsed.is_err(), "cut at {cut} must fail");
+    }
+}
+
+#[test]
+fn hot_reload_swaps_theta_and_the_spec_hash_gate_holds() {
+    let dir = temp_dir("reload");
+    let spec: ModelSpec = "4x6x5x1:relu,tanh,sigmoid".parse().unwrap();
+    let data = datasets::parity(4);
+    // Short training run writes checkpoint v2 into dir.
+    let cfg = MgdConfig { tau_x: 2, tau_theta: 4, eta: 0.5, seed: 19, ..Default::default() };
+    {
+        let mut dev = NativeDevice::from_spec(spec.clone(), 1).unwrap();
+        let mut rng = Rng::new(19);
+        let mut theta = vec![0f32; dev.n_params()];
+        init_params_uniform(&mut rng, &mut theta, 1.0);
+        dev.set_params(&theta).unwrap();
+        let mut tr = MgdTrainer::new(&mut dev, &data, cfg, ScheduleKind::Cyclic);
+        let opts = TrainOptions { max_steps: 40, ..Default::default() };
+        let ck = CheckpointConfig { dir: dir.clone(), every_steps: 0, resume: false };
+        train_checkpointed(&mut tr, &opts, None, 4, &ck).unwrap();
+    }
+    let telemetry_path = dir.join("serve.jsonl");
+    let telemetry = Telemetry::file(telemetry_path.to_str().unwrap()).unwrap();
+    let engine = InferenceEngine::from_checkpoint_dir(&dir).unwrap();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let server = {
+        let dir = dir.clone();
+        let telemetry = telemetry.clone();
+        std::thread::spawn(move || {
+            serve_infer(
+                engine,
+                listener,
+                ServeInferOptions {
+                    max_sessions: Some(1),
+                    policy: BatchPolicy::default(),
+                    telemetry,
+                    reload: Some(ReloadConfig { dir, poll: Duration::from_millis(40) }),
+                },
+            )
+            .unwrap()
+        })
+    };
+    // One persistent session across both reload attempts: a session is
+    // not interrupted by a swap — only its answers change.
+    let mut client = InferenceClient::connect(&addr).unwrap();
+    let mut probe = |client: &mut InferenceClient| -> Vec<f32> {
+        client.infer(&data.x[..4], 1).unwrap().0
+    };
+    let before = probe(&mut client);
+
+    // A fresh snapshot with visibly different θ, same spec: the watcher
+    // must swap it in.
+    let mut snap = load_snapshot(&checkpoint_path(&dir)).unwrap();
+    for t in snap.theta.iter_mut() {
+        *t += 0.5;
+    }
+    snap.step += 1000;
+    save_snapshot(&checkpoint_path(&dir), &snap).unwrap();
+    let mut after = before.clone();
+    for _ in 0..100 {
+        std::thread::sleep(Duration::from_millis(50));
+        after = probe(&mut client);
+        if bits(&after) != bits(&before) {
+            break;
+        }
+    }
+    assert_ne!(bits(&after), bits(&before), "reload never swapped the engine");
+    // The swapped engine answers exactly what a local engine at the new
+    // θ answers.
+    let local = InferenceEngine::from_snapshot(&snap).unwrap();
+    assert_eq!(bits(&after), bits(&local.infer(&data.x[..4], 1).unwrap()));
+
+    // A same-P different-spec snapshot must be rejected by the hash
+    // gate: the endpoint keeps serving the old model.
+    let wrong_spec: ModelSpec = "4x6x5x1:sigmoid,sigmoid,sigmoid".parse().unwrap();
+    let mut wrong = snap.clone();
+    wrong.model = Some(wrong_spec.to_string());
+    wrong.spec_hash = Some(wrong_spec.spec_hash());
+    for t in wrong.theta.iter_mut() {
+        *t = 0.0;
+    }
+    wrong.step += 1;
+    save_snapshot(&checkpoint_path(&dir), &wrong).unwrap();
+    // Wait for the watcher to see it (reload_rejected in telemetry).
+    let mut rejected = false;
+    for _ in 0..100 {
+        std::thread::sleep(Duration::from_millis(50));
+        let text = std::fs::read_to_string(&telemetry_path).unwrap_or_default();
+        if text.contains("\"event\":\"reload_rejected\"") {
+            rejected = true;
+            break;
+        }
+    }
+    assert!(rejected, "spec-hash gate never fired");
+    let still = probe(&mut client);
+    assert_eq!(bits(&still), bits(&after), "rejected reload must not change answers");
+    client.close();
+    server.join().unwrap();
+    // Telemetry recorded the successful reload too.
+    let text = std::fs::read_to_string(&telemetry_path).unwrap();
+    assert!(text.contains("\"event\":\"engine_reloaded\""), "{text}");
+    std::fs::remove_dir_all(&dir).ok();
+}
