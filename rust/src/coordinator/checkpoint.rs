@@ -435,7 +435,10 @@ pub fn checkpoint_path(dir: &Path) -> PathBuf {
 
 /// Save a snapshot to `path` (atomically).
 pub fn save_snapshot(path: &Path, snap: &TrainerSnapshot) -> Result<()> {
-    write_json_atomic(path, &snap.to_json())
+    let _t = crate::obs::span("mgd_checkpoint_save_seconds");
+    write_json_atomic(path, &snap.to_json())?;
+    crate::obs::counter("mgd_checkpoints_total").inc();
+    Ok(())
 }
 
 /// Load a snapshot from `path`.

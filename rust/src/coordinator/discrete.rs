@@ -17,6 +17,8 @@
 //! [`HardwareDevice::cost_many`] call, bit-identically to the serial loop,
 //! and [`MgdTrainer::train_batched`] is the corresponding training driver.
 
+use std::sync::OnceLock;
+
 use anyhow::{bail, Result};
 
 use super::checkpoint::{ensure_config_matches, TrainerSnapshot};
@@ -24,6 +26,7 @@ use super::schedule::{SampleSchedule, ScheduleKind};
 use super::{MgdConfig, TrainOptions, TrainResult};
 use crate::datasets::Dataset;
 use crate::device::HardwareDevice;
+use crate::obs;
 use crate::perturb::{self, Perturbation};
 use crate::rng::Rng;
 
@@ -38,6 +41,40 @@ pub struct StepOutput {
     pub c_tilde: f32,
     /// Whether a parameter update fired at the end of this step.
     pub updated: bool,
+}
+
+/// Cached handles to the trainer's registered [`obs`] series (resolved
+/// once; every update afterwards is a relaxed atomic).
+struct TrainerMetrics {
+    steps: obs::Counter,
+    cost_evals: obs::Counter,
+    cost: obs::Gauge,
+    eval_cost: obs::Gauge,
+    eval_accuracy: obs::Gauge,
+    g_norm: obs::Gauge,
+    probe_window: obs::Gauge,
+}
+
+fn trainer_metrics() -> &'static TrainerMetrics {
+    static M: OnceLock<TrainerMetrics> = OnceLock::new();
+    M.get_or_init(|| TrainerMetrics {
+        steps: obs::counter("mgd_trainer_steps_total"),
+        cost_evals: obs::counter("mgd_trainer_cost_evals_total"),
+        cost: obs::gauge("mgd_trainer_cost"),
+        eval_cost: obs::gauge("mgd_trainer_eval_cost"),
+        eval_accuracy: obs::gauge("mgd_trainer_eval_accuracy"),
+        g_norm: obs::gauge("mgd_trainer_g_norm"),
+        probe_window: obs::gauge("mgd_trainer_probe_window"),
+    })
+}
+
+/// Publish ‖G‖₂ — computed in f64 over a read-only view of the f32
+/// integrator, so the training arithmetic itself stays bit-identical.
+fn record_g_norm(g: &[f32]) {
+    if obs::enabled() {
+        let sq: f64 = g.iter().map(|&v| v as f64 * v as f64).sum();
+        trainer_metrics().g_norm.set(sq.sqrt());
+    }
 }
 
 /// The discrete MGD trainer (Algorithm 1) over a black-box device.
@@ -161,7 +198,11 @@ impl<'d> MgdTrainer<'d> {
     /// accuracy and the served accuracy of the same checkpoint are
     /// bit-comparable (pinned in `rust/tests/integration_serve.rs`).
     pub fn evaluate_on(&mut self, set: &Dataset) -> Result<(f32, f32)> {
-        self.dev.evaluate(&set.x, &set.y, set.n)
+        let (cost, correct) = self.dev.evaluate(&set.x, &set.y, set.n)?;
+        let m = trainer_metrics();
+        m.eval_cost.set(cost as f64);
+        m.eval_accuracy.set(correct as f64 / set.n.max(1) as f64);
+        Ok((cost, correct))
     }
 
     /// Capture the complete training state as a serializable snapshot —
@@ -281,9 +322,11 @@ impl<'d> MgdTrainer<'d> {
 
         // Lines 5–7: re-measure the baseline cost C₀ (θ̃ = 0) when the
         // sample window or the parameters changed.
+        let m = trainer_metrics();
         if !self.c0_valid {
             self.c0 = self.dev.cost(None)? + self.cfg.noise.cost_noise(&mut self.rng);
             self.cost_evals += 1;
+            m.cost_evals.inc();
             self.c0_valid = true;
         }
 
@@ -294,6 +337,8 @@ impl<'d> MgdTrainer<'d> {
         // Lines 10–12: perturbed inference, cost, modulation.
         let c = self.dev.cost(Some(&self.tt))? + self.cfg.noise.cost_noise(&mut self.rng);
         self.cost_evals += 1;
+        m.cost_evals.inc();
+        m.cost.set(c as f64);
         let c_tilde = c - self.c0;
 
         // Lines 13–14: homodyne error signal, accumulated into G.
@@ -306,6 +351,7 @@ impl<'d> MgdTrainer<'d> {
         let updated = self.cfg.tau_theta != u64::MAX
             && (n + 1) % self.cfg.tau_theta.max(1) == 0;
         if updated {
+            record_g_norm(&self.g);
             for (d, &g) in self.delta.iter_mut().zip(self.g.iter()) {
                 *d = -self.cfg.eta * g;
             }
@@ -317,6 +363,7 @@ impl<'d> MgdTrainer<'d> {
         }
 
         self.step += 1;
+        m.steps.inc();
         Ok(StepOutput { step: n, cost: c, c_tilde, updated })
     }
 
@@ -356,9 +403,11 @@ impl<'d> MgdTrainer<'d> {
         self.load_window_if_due(n)?;
 
         // Lines 5–7: baseline C₀, at most once per window.
+        let m = trainer_metrics();
         if !self.c0_valid {
             self.c0 = self.dev.cost(None)? + self.cfg.noise.cost_noise(&mut self.rng);
             self.cost_evals += 1;
+            m.cost_evals.inc();
             self.c0_valid = true;
         }
 
@@ -399,6 +448,8 @@ impl<'d> MgdTrainer<'d> {
             );
         }
         self.cost_evals += k_eff as u64;
+        m.cost_evals.add(k_eff as u64);
+        m.probe_window.set(k_eff as f64);
 
         // Lines 13–17 replayed per step, in step order.
         let inv_a2 = 1.0 / (self.cfg.amplitude * self.cfg.amplitude);
@@ -406,6 +457,7 @@ impl<'d> MgdTrainer<'d> {
         for (i, &raw) in costs.iter().enumerate().take(k_eff) {
             let step = n + i as u64;
             let c = raw + self.cfg.noise.cost_noise(&mut self.rng);
+            m.cost.set(c as f64);
             let c_tilde = c - self.c0;
             let tt = &self.probes[i * p..(i + 1) * p];
             for (g, &t) in self.g.iter_mut().zip(tt) {
@@ -414,6 +466,7 @@ impl<'d> MgdTrainer<'d> {
             let updated = self.cfg.tau_theta != u64::MAX
                 && (step + 1) % self.cfg.tau_theta.max(1) == 0;
             if updated {
+                record_g_norm(&self.g);
                 for (d, &g) in self.delta.iter_mut().zip(self.g.iter()) {
                     *d = -self.cfg.eta * g;
                 }
@@ -425,6 +478,7 @@ impl<'d> MgdTrainer<'d> {
             outs.push(StepOutput { step, cost: c, c_tilde, updated });
         }
         self.step += k_eff as u64;
+        m.steps.add(k_eff as u64);
         Ok(outs)
     }
 
@@ -768,5 +822,25 @@ mod tests {
         }
         // 20 perturbed + 2 baselines (steps 0 and 10).
         assert_eq!(tr.cost_evals(), 22);
+    }
+
+    #[test]
+    fn trainer_metrics_advance_with_steps() {
+        // The registry is process-global and other tests train too, so
+        // only ≥-deltas on the counters are stable assertions.
+        let steps_before = crate::obs::counter("mgd_trainer_steps_total").get();
+        let evals_before = crate::obs::counter("mgd_trainer_cost_evals_total").get();
+        let data = xor();
+        let mut dev = xor_device(5);
+        let cfg = MgdConfig { seed: 5, ..Default::default() };
+        let mut tr = MgdTrainer::new(&mut dev, &data, cfg, ScheduleKind::Cyclic);
+        for _ in 0..8 {
+            tr.step().unwrap();
+        }
+        tr.evaluate_on(&data).unwrap();
+        assert!(crate::obs::counter("mgd_trainer_steps_total").get() >= steps_before + 8);
+        assert!(crate::obs::counter("mgd_trainer_cost_evals_total").get() >= evals_before + 8);
+        let acc = crate::obs::gauge("mgd_trainer_eval_accuracy").get();
+        assert!((0.0..=1.0).contains(&acc), "accuracy gauge out of range: {acc}");
     }
 }

@@ -29,6 +29,14 @@
 
 use crate::model::{Activation, Dense};
 use crate::noise::NeuronDefects;
+use crate::obs;
+
+/// Rows pushed through [`ForwardScratch::forward`], counted once per
+/// batched call (never inside the layer kernels themselves).
+fn rows_total() -> &'static obs::Counter {
+    static M: std::sync::OnceLock<obs::Counter> = std::sync::OnceLock::new();
+    M.get_or_init(|| obs::counter("mgd_exec_rows_total"))
+}
 
 /// Mean-squared error between a prediction block and its targets.
 pub fn mse(y_pred: &[f32], y_true: &[f32]) -> f32 {
@@ -301,6 +309,7 @@ impl ForwardScratch {
         out: &mut Vec<f32>,
     ) {
         self.ensure(widest, n);
+        rows_total().add(n as u64);
         let stride = widest * n;
         let k = layers.last().unwrap().outputs;
         out.resize(n * k, 0.0);

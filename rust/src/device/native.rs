@@ -60,12 +60,30 @@
 //! this is what makes [`crate::coordinator::MgdTrainer::step_window`]
 //! exactly reproduce the serial `step()` trajectory.
 
+use std::sync::OnceLock;
+
 use anyhow::{bail, Result};
 
 use super::exec::{compute_layer0_base, forward_one, mse, score_batch};
 use super::HardwareDevice;
 use crate::model::{Dense, ModelSpec};
 use crate::noise::NeuronDefects;
+use crate::obs;
+
+/// Cached handles for the probe-sweep series (one `cost_many` device
+/// call = one sweep observation, never per-probe inner-kernel work).
+struct SweepMetrics {
+    probes: obs::Counter,
+    sweep: obs::Histogram,
+}
+
+fn sweep_metrics() -> &'static SweepMetrics {
+    static M: OnceLock<SweepMetrics> = OnceLock::new();
+    M.get_or_init(|| SweepMetrics {
+        probes: obs::counter("mgd_exec_probes_total"),
+        sweep: obs::histogram("mgd_exec_sweep_seconds"),
+    })
+}
 
 /// Fan probes across threads only past this many multiply-accumulates
 /// (k · P); below it the thread-spawn overhead dominates.
@@ -433,6 +451,9 @@ impl HardwareDevice for NativeDevice {
         if self.x.is_empty() {
             bail!("cost_many: no batch loaded");
         }
+        let m = sweep_metrics();
+        m.probes.add(k as u64);
+        let _sweep = m.sweep.start_timer();
         let mut costs = vec![0f32; k];
         self.sweep_costs(probes, k, &mut costs);
         Ok(costs)

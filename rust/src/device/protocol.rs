@@ -91,6 +91,18 @@
 //! engine's parameters are immutable between requests (hot reload swaps
 //! atomically *between* batches), so splitting is invisible to the
 //! logits, exactly as `CostMany` chunking is invisible to the costs.
+//!
+//! # Registry snapshot (`Stats`)
+//!
+//! [`Op::Stats`] is the live-observability read: the request payload is
+//! empty (and ignored), the reply payload is the process-global
+//! [`crate::obs`] registry rendered as one JSON document
+//! ([`crate::obs::Snapshot::to_json`]) — counters, gauges, and
+//! histograms with precomputed p50/p90/p99.  Both servers answer it:
+//! `mgd serve-infer` from its dispatcher, and the *training* pool server
+//! **without leasing a device**, so a dashboard polling `Stats` (`mgd
+//! top`) never starves trainers of hardware.  The reply is bounded by
+//! the registry size (a few KiB), far under [`MAX_FRAME_BYTES`].
 
 use std::io::{Read, Write};
 
@@ -146,6 +158,11 @@ pub enum Op {
     /// (see the module docs).  Served by `mgd serve-infer`; the training
     /// device server answers it with a typed error.
     Infer = 0x0C,
+    /// Live metrics snapshot; payload: empty (ignored).  Reply: the
+    /// [`crate::obs`] registry as a JSON document (see the module docs).
+    /// Served by both the training pool server (lease-free) and
+    /// `mgd serve-infer`; polled by `mgd top`.
+    Stats = 0x0D,
 }
 
 impl Op {
@@ -163,6 +180,7 @@ impl Op {
             0x0A => Op::Ping,
             0x0B => Op::ModelSpec,
             0x0C => Op::Infer,
+            0x0D => Op::Stats,
             other => bail!("unknown opcode {other:#x}"),
         })
     }
@@ -485,7 +503,8 @@ mod tests {
         assert_eq!(Op::from_u8(0x0A).unwrap(), Op::Ping);
         assert_eq!(Op::from_u8(0x0B).unwrap(), Op::ModelSpec);
         assert_eq!(Op::from_u8(0x0C).unwrap(), Op::Infer);
-        assert!(Op::from_u8(0x0D).is_err());
+        assert_eq!(Op::from_u8(0x0D).unwrap(), Op::Stats);
+        assert!(Op::from_u8(0x0E).is_err());
         assert!(Op::from_u8(0x00).is_err());
     }
 
@@ -725,6 +744,42 @@ mod tests {
         // check, not on allocation.
         let mut wire = vec![Op::CostMany as u8];
         wire.extend_from_slice(&((MAX_FRAME_BYTES as u32) + 1).to_le_bytes());
+        let mut cursor = std::io::Cursor::new(wire);
+        let err = read_request(&mut cursor).unwrap_err();
+        assert!(err.to_string().contains("exceeds protocol maximum"), "{err:#}");
+    }
+
+    // ---- Stats frames -----------------------------------------------------
+
+    #[test]
+    fn stats_request_roundtrip_is_empty_payload() {
+        let mut wire = Vec::new();
+        write_request(&mut wire, Op::Stats, &[]).unwrap();
+        let mut cursor = std::io::Cursor::new(wire);
+        let (op, got) = read_request(&mut cursor).unwrap();
+        assert_eq!(op, Op::Stats);
+        assert!(got.is_empty());
+    }
+
+    #[test]
+    fn stats_frame_truncated_at_every_offset_is_an_error() {
+        // A Stats request is the 5-byte header alone; every strict prefix
+        // must fail with a clean error, never hang or panic.
+        let mut wire = Vec::new();
+        write_request(&mut wire, Op::Stats, &[]).unwrap();
+        assert_eq!(wire.len(), 5);
+        for cut in 0..wire.len() {
+            let mut cursor = std::io::Cursor::new(&wire[..cut]);
+            assert!(read_request(&mut cursor).is_err(), "cut {cut}");
+        }
+    }
+
+    #[test]
+    fn stats_oversized_header_is_rejected_before_allocation() {
+        // Stats takes no payload, but a hostile length prefix must die on
+        // the cap check like every other opcode.
+        let mut wire = vec![Op::Stats as u8];
+        wire.extend_from_slice(&u32::MAX.to_le_bytes());
         let mut cursor = std::io::Cursor::new(wire);
         let err = read_request(&mut cursor).unwrap_err();
         assert!(err.to_string().contains("exceeds protocol maximum"), "{err:#}");

@@ -13,6 +13,11 @@
 //! Plain `std::net` blocking I/O (this offline build has no async
 //! runtime; the protocol is strictly request/response so blocking I/O is
 //! exact).
+//!
+//! `Stats = 0x0D` is the one stateless exception: it is answered from
+//! the process-global [`crate::obs`] registry *before* (and without)
+//! taking a device lease, so a metrics poller (`mgd top`) neither
+//! consumes hardware nor waits behind a training session.
 
 use std::io::{BufReader, BufWriter};
 use std::net::{TcpListener, TcpStream};
@@ -180,33 +185,61 @@ fn handle_session(
     stream.set_nodelay(true).ok();
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = BufWriter::new(stream);
-    // Lease for the whole session: the protocol is stateful, so every
-    // request of a session must land on the same device.
+    // Stats (and a bare Bye) are answered before — and without — a
+    // device lease: a metrics poller must never consume hardware or wait
+    // behind a training session.  The first stateful request below
+    // triggers the lease for the rest of the session.
+    let (first_op, first_payload) = loop {
+        let (op, payload) = match p::read_request(&mut reader) {
+            Ok(req) => req,
+            Err(e) => {
+                // Hangup before any device work (a pure Stats poller
+                // closing without Bye lands here) — or a live connection
+                // that sent garbage; tell the latter why before closing.
+                let _ = p::write_err(&mut writer, &format!("{e:#}"));
+                return Ok(());
+            }
+        };
+        match op {
+            p::Op::Stats => {
+                *requests += 1;
+                p::write_ok(&mut writer, &stats_reply())?;
+            }
+            p::Op::Bye => {
+                *requests += 1;
+                p::write_ok(&mut writer, &[])?;
+                return Ok(());
+            }
+            other => break (other, payload),
+        }
+    };
+    // Lease for the rest of the session: the protocol is stateful, so
+    // every device request of a session must land on the same device.
     let mut lease = match pool.lease(lease_timeout) {
         Ok(lease) => lease,
         Err(e) => {
             // Answer the client's pending first request (Hello, for
-            // RemoteDevice) with the reason before hanging up.  Bound the
-            // read so a silent-but-open connection cannot pin this thread
-            // forever.
-            reader.get_ref().set_read_timeout(Some(Duration::from_secs(5))).ok();
-            if p::read_request(&mut reader).is_ok() {
-                let _ = p::write_err(&mut writer, &format!("{e:#}"));
-            }
+            // RemoteDevice) with the reason before hanging up.
+            let _ = p::write_err(&mut writer, &format!("{e:#}"));
             return Err(e);
         }
     };
+    let mut next = Some((first_op, first_payload));
     loop {
-        let (op, payload) = match p::read_request(&mut reader) {
-            Ok(req) => req,
-            Err(e) => {
-                // Usually the client hung up without Bye — fine.  If the
-                // connection is actually alive (e.g. an oversized frame
-                // tripped MAX_FRAME_BYTES), tell it why before closing
-                // instead of a silent EOF; a real hangup ignores this.
-                let _ = p::write_err(&mut writer, &format!("{e:#}"));
-                return Ok(());
-            }
+        let (op, payload) = match next.take() {
+            Some(req) => req,
+            None => match p::read_request(&mut reader) {
+                Ok(req) => req,
+                Err(e) => {
+                    // Usually the client hung up without Bye — fine.  If
+                    // the connection is actually alive (e.g. an oversized
+                    // frame tripped MAX_FRAME_BYTES), tell it why before
+                    // closing instead of a silent EOF; a real hangup
+                    // ignores this.
+                    let _ = p::write_err(&mut writer, &format!("{e:#}"));
+                    return Ok(());
+                }
+            },
         };
         *requests += 1;
         match handle_request(lease.device(), op, &payload) {
@@ -218,6 +251,12 @@ fn handle_session(
             Err(e) => p::write_err(&mut writer, &format!("{e:#}"))?,
         }
     }
+}
+
+/// Render the `Stats` reply payload: the process-global [`crate::obs`]
+/// registry as one JSON document.
+fn stats_reply() -> Vec<u8> {
+    crate::obs::snapshot().to_json().dump().into_bytes()
 }
 
 /// Dispatch one request. `Ok(None)` signals session end (Bye).
@@ -331,6 +370,11 @@ fn handle_request(
                 "Infer (0x0C) is an inference-serving opcode; this is a training \
                  device server — query an `mgd serve-infer` endpoint instead"
             );
+        }
+        p::Op::Stats => {
+            // Live metrics snapshot; answered lease-free in
+            // handle_session, but a leased session may poll it too.
+            stats_reply()
         }
         p::Op::Bye => return Ok(None),
     };
@@ -495,6 +539,84 @@ mod tests {
         // The session survives: a training request still works after.
         let reply = handle_request(&mut *dev, p::Op::Hello, &[]).unwrap().unwrap();
         assert!(!reply.is_empty());
+    }
+
+    #[test]
+    fn dispatch_stats_returns_registry_snapshot() {
+        crate::obs::counter("test_server_stats_total").inc();
+        let mut dev: Box<dyn HardwareDevice> = Box::new(NativeDevice::new(&[2, 2, 1], 1));
+        let reply = handle_request(&mut *dev, p::Op::Stats, &[]).unwrap().unwrap();
+        let doc = crate::json::Json::parse(std::str::from_utf8(&reply).unwrap()).unwrap();
+        let counters = doc.field("counters").unwrap();
+        assert!(counters.field("test_server_stats_total").unwrap().as_u64().unwrap() >= 1);
+        assert!(doc.get("gauges").is_some());
+        assert!(doc.get("histograms").is_some());
+        // The session survives a Stats poll.
+        assert!(handle_request(&mut *dev, p::Op::Hello, &[]).is_ok());
+    }
+
+    #[test]
+    fn stats_is_answered_lease_free_while_the_only_device_is_busy() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let pool = DevicePool::new(vec![Box::new(NativeDevice::new(&[2, 2, 1], 1)) as _]);
+        let server = {
+            let pool = pool.clone();
+            std::thread::spawn(move || {
+                serve_pool(
+                    pool,
+                    listener,
+                    ServeOptions {
+                        max_sessions: Some(2),
+                        // Short: if the Stats session wrongly tried to
+                        // lease, it would fail here instead of hanging.
+                        lease_timeout: Duration::from_millis(200),
+                        telemetry: Telemetry::null(),
+                    },
+                )
+                .unwrap();
+            })
+        };
+        // Session 1 leases the pool's only device and stays open.
+        let mut training = crate::device::RemoteDevice::connect(&addr).unwrap();
+        assert_eq!(training.n_params(), 9);
+        // Session 2 polls Stats — it must be answered even though every
+        // device is out on a lease.
+        let stream = TcpStream::connect(&addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = BufWriter::new(stream);
+        p::write_request(&mut writer, p::Op::Stats, &[]).unwrap();
+        let reply = p::read_response(&mut reader).unwrap();
+        let doc = crate::json::Json::parse(std::str::from_utf8(&reply).unwrap()).unwrap();
+        assert!(doc.get("counters").is_some());
+        p::write_request(&mut writer, p::Op::Bye, &[]).unwrap();
+        p::read_response(&mut reader).unwrap();
+        training.close();
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn unknown_opcode_over_tcp_is_an_error_response() {
+        use std::io::{Read as _, Write as _};
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            let dev: Box<dyn HardwareDevice> = Box::new(NativeDevice::new(&[2, 2, 1], 1));
+            serve_on(dev, listener, Some(1)).unwrap();
+        });
+        let mut stream = TcpStream::connect(&addr).unwrap();
+        // Opcode 0x0E is one past Stats: the server must answer a typed
+        // error (same as the serve-infer endpoint) and close, not hang.
+        stream.write_all(&[0x0Eu8, 0, 0, 0, 0]).unwrap();
+        stream.flush().unwrap();
+        let mut reader = BufReader::new(stream);
+        let err = p::read_response(&mut reader).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown opcode"), "{err:#}");
+        // The session closed after the error.
+        let mut rest = Vec::new();
+        reader.read_to_end(&mut rest).unwrap();
+        assert!(rest.is_empty());
+        server.join().unwrap();
     }
 
     #[test]

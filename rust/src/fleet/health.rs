@@ -105,6 +105,7 @@ fn run_monitor(pool: &Arc<DevicePool>, cfg: &HealthConfig, stop: &AtomicBool) {
 
 /// One heartbeat pass over every slot.
 fn sweep(pool: &Arc<DevicePool>, cfg: &HealthConfig) {
+    let _t = crate::obs::histogram("mgd_fleet_heartbeat_seconds").start_timer();
     if let Some(max_age) = cfg.max_lease_age {
         pool.revoke_stale(max_age);
     }

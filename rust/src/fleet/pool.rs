@@ -36,13 +36,58 @@
 //! `device_health` JSONL event.
 
 use std::ops::{Deref, DerefMut};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
 use crate::device::HardwareDevice;
 use crate::fleet::telemetry::{Event, Telemetry};
+use crate::obs;
+
+/// Cached handles for the pool's registered [`obs`] series.
+struct FleetMetrics {
+    leases: obs::Counter,
+    lease_wait: obs::Histogram,
+    quarantines: obs::Counter,
+    healthy: obs::Gauge,
+    suspect: obs::Gauge,
+    quarantined: obs::Gauge,
+}
+
+fn fleet_metrics() -> &'static FleetMetrics {
+    static M: OnceLock<FleetMetrics> = OnceLock::new();
+    M.get_or_init(|| FleetMetrics {
+        leases: obs::counter("mgd_fleet_leases_total"),
+        lease_wait: obs::histogram("mgd_fleet_lease_wait_seconds"),
+        quarantines: obs::counter("mgd_fleet_quarantines_total"),
+        healthy: obs::gauge_with("mgd_fleet_devices", &[("state", "healthy")]),
+        suspect: obs::gauge_with("mgd_fleet_devices", &[("state", "suspect")]),
+        quarantined: obs::gauge_with("mgd_fleet_devices", &[("state", "quarantined")]),
+    })
+}
+
+/// Publish the per-state device counts (`mgd_fleet_devices{state=…}`).
+/// The gauges are process-global: with several pools in one process the
+/// last pool to transition wins, which is the intended reading for the
+/// one-pool-per-server deployments the fleet runs.
+fn publish_health_gauges(slots: &[Slot]) {
+    if !obs::enabled() {
+        return;
+    }
+    let (mut healthy, mut suspect, mut quarantined) = (0u64, 0u64, 0u64);
+    for slot in slots {
+        match slot.health {
+            HealthState::Healthy => healthy += 1,
+            HealthState::Suspect => suspect += 1,
+            HealthState::Quarantined => quarantined += 1,
+        }
+    }
+    let m = fleet_metrics();
+    m.healthy.set(healthy as f64);
+    m.suspect.set(suspect as f64);
+    m.quarantined.set(quarantined as f64);
+}
 
 /// Per-slot health state (see the module docs for the transitions).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -127,6 +172,10 @@ impl PoolShared {
         let mut st = self.stats.lock().unwrap();
         st.leases_granted += 1;
         st.total_wait += waited;
+        drop(st);
+        let m = fleet_metrics();
+        m.leases.inc();
+        m.lease_wait.observe(waited.as_secs_f64());
     }
 
     /// Called by [`DeviceLease::drop`].
@@ -155,10 +204,12 @@ impl PoolShared {
         slots[slot].health = to;
         if to == HealthState::Quarantined {
             stats.lock().unwrap().quarantines += 1;
+            fleet_metrics().quarantines.inc();
         }
         if to != HealthState::Quarantined {
             slots[slot].consecutive_successes = 0;
         }
+        publish_health_gauges(slots);
         Some(Event::DeviceHealth { slot, state: to.as_str(), reason })
     }
 }
@@ -200,7 +251,10 @@ impl DevicePool {
                     revoked: false,
                 }
             })
-            .collect();
+            .collect::<Vec<Slot>>();
+        // A fresh training server exposes its fleet gauges immediately,
+        // before any lease or health transition happens.
+        publish_health_gauges(&slots);
         Arc::new(DevicePool {
             shared: Arc::new(PoolShared {
                 slots: Mutex::new(slots),

@@ -19,7 +19,7 @@
 use std::cmp::Ordering as CmpOrdering;
 use std::collections::BinaryHeap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
@@ -30,6 +30,14 @@ use crate::device::HardwareDevice;
 use crate::fleet::pool::DevicePool;
 use crate::fleet::telemetry::{Event, Telemetry};
 use crate::fleet::worker;
+use crate::obs;
+
+/// `mgd_fleet_queue_depth` — updated under the queue lock at every push,
+/// pop and abort, so the gauge tracks the heap exactly.
+fn queue_depth() -> &'static obs::Gauge {
+    static M: OnceLock<obs::Gauge> = OnceLock::new();
+    M.get_or_init(|| obs::gauge("mgd_fleet_queue_depth"))
+}
 
 /// Job priority; higher runs sooner.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq, PartialOrd, Ord)]
@@ -112,6 +120,7 @@ impl<J> JobQueue<J> {
         let seq = st.next_seq;
         st.next_seq += 1;
         st.heap.push(Entry { priority, seq, job });
+        queue_depth().set(st.heap.len() as f64);
         drop(st);
         self.not_empty.notify_one();
         Ok(seq)
@@ -128,6 +137,7 @@ impl<J> JobQueue<J> {
         let seq = st.next_seq;
         st.next_seq += 1;
         st.heap.push(Entry { priority, seq, job });
+        queue_depth().set(st.heap.len() as f64);
         drop(st);
         self.not_empty.notify_one();
         Ok(seq)
@@ -139,6 +149,7 @@ impl<J> JobQueue<J> {
         let mut st = self.state.lock().unwrap();
         loop {
             if let Some(entry) = st.heap.pop() {
+                queue_depth().set(st.heap.len() as f64);
                 drop(st);
                 self.not_full.notify_one();
                 return Some(entry.job);
@@ -165,6 +176,7 @@ impl<J> JobQueue<J> {
         st.closed = true;
         let dropped = st.heap.len();
         st.heap.clear();
+        queue_depth().set(0.0);
         drop(st);
         self.not_empty.notify_all();
         self.not_full.notify_all();

@@ -9,11 +9,14 @@
 //! A `Telemetry::null()` sink makes instrumentation free when nobody is
 //! listening (a single branch per event, no serialization).
 //!
-//! Ordering: each line is written atomically (one sink lock per event),
-//! but events race to the sink from many threads, so cross-thread order
-//! is best-effort — a `job_started` can land a hair before its
-//! `job_queued`.  Consumers should key lifecycles on the `job` id, not on
-//! line order.
+//! Ordering: each line is written atomically (one sink lock per event)
+//! and carries a monotonic `seq` field stamped under that same lock, so
+//! the stream has a total order: file order *is* seq order, gap-free
+//! except for lines lost to write errors (each gap matches a count in
+//! [`Telemetry::dropped`]).  The wall-clock `ts_ms` field is stamped
+//! outside the lock and may be slightly out of order across threads —
+//! consumers that need ordering should sort on `seq` and key lifecycles
+//! on the `job` id.
 
 use std::collections::BTreeMap;
 use std::io::Write;
@@ -204,10 +207,17 @@ impl Event {
     }
 }
 
+/// The locked half of a sink: the writer plus the `seq` stamp.  Keeping
+/// the counter inside the lock is what makes seq order equal file order.
+struct SinkState {
+    w: Box<dyn Write + Send>,
+    seq: u64,
+}
+
 /// Shared JSONL event sink.  Cheap to clone (wrap in `Arc`), safe to emit
 /// from any fleet thread.
 pub struct Telemetry {
-    sink: Option<Mutex<Box<dyn Write + Send>>>,
+    sink: Option<Mutex<SinkState>>,
     emitted: AtomicU64,
     dropped: AtomicU64,
 }
@@ -221,7 +231,7 @@ impl Telemetry {
     /// Stream JSONL to an arbitrary writer.
     pub fn to_writer(w: Box<dyn Write + Send>) -> Arc<Telemetry> {
         Arc::new(Telemetry {
-            sink: Some(Mutex::new(w)),
+            sink: Some(Mutex::new(SinkState { w, seq: 0 })),
             emitted: AtomicU64::new(0),
             dropped: AtomicU64::new(0),
         })
@@ -258,10 +268,15 @@ impl Telemetry {
             .map(|d| d.as_millis() as f64)
             .unwrap_or(0.0);
         obj.insert("ts_ms".into(), Json::Num(ts));
+        let mut st = sink.lock().unwrap();
+        // seq is stamped and the line written under one lock hold, so
+        // the stream's file order is the seq order.  A failed write
+        // still consumes its number: a gap in the file marks a drop.
+        obj.insert("seq".into(), Json::Num(st.seq as f64));
+        st.seq += 1;
         let line = Json::Obj(obj).dump();
-        let mut w = sink.lock().unwrap();
-        let ok = writeln!(w, "{line}").and_then(|_| w.flush()).is_ok();
-        drop(w);
+        let ok = writeln!(st.w, "{line}").and_then(|_| st.w.flush()).is_ok();
+        drop(st);
         if ok {
             self.emitted.fetch_add(1, Ordering::Relaxed);
         } else {
@@ -321,6 +336,36 @@ mod tests {
         let second = Json::parse(lines[1]).unwrap();
         assert_eq!(second.field("cost_evals").unwrap().as_u64().unwrap(), 123);
         assert!(second.field("ok").unwrap().as_bool().unwrap());
+        assert_eq!(first.field("seq").unwrap().as_u64().unwrap(), 0);
+        assert_eq!(second.field("seq").unwrap().as_u64().unwrap(), 1);
+    }
+
+    #[test]
+    fn seq_is_a_gap_free_total_order_across_threads() {
+        let buf = Arc::new(Mutex::new(Vec::new()));
+        let t = Telemetry::to_writer(Box::new(SharedBuf(buf.clone())));
+        std::thread::scope(|s| {
+            for w in 0..4u64 {
+                let t = &t;
+                s.spawn(move || {
+                    for i in 0..25 {
+                        t.emit(Event::SessionOpened {
+                            session: w * 25 + i,
+                            peer: "p".into(),
+                        });
+                    }
+                });
+            }
+        });
+        assert_eq!(t.emitted(), 100);
+        let text = String::from_utf8(buf.lock().unwrap().clone()).unwrap();
+        let seqs: Vec<u64> = text
+            .lines()
+            .map(|l| Json::parse(l).unwrap().field("seq").unwrap().as_u64().unwrap())
+            .collect();
+        // Stamped and written under one lock hold: the file order is the
+        // sequence order, with no duplicates and no gaps.
+        assert_eq!(seqs, (0..100).collect::<Vec<u64>>());
     }
 
     #[test]

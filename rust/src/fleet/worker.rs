@@ -97,6 +97,7 @@ pub(crate) fn run_worker(
                     pool.report_failure(slot, &format!("{error:#}"));
                     if pending.attempt <= pending.spec.max_retries {
                         pending.excluded.push(slot);
+                        crate::obs::counter("mgd_fleet_retries_total").inc();
                         telemetry.emit(Event::JobRetried {
                             job: pending.id,
                             name: pending.spec.name.clone(),

@@ -40,6 +40,11 @@
 //!   micro-batching of concurrent requests, a multi-session TCP server
 //!   (`mgd serve-infer`, wire opcode `Infer = 0x0C`), and hot checkpoint
 //!   reload gated on the model's spec hash.
+//! - [`obs`] — live observability: a process-global lock-free metrics
+//!   registry (counters, gauges, log-scale histograms, span timers)
+//!   instrumenting trainer, exec, fleet and serving layers, exposed via
+//!   the wire opcode `Stats = 0x0D`, a Prometheus-text `/metrics` HTTP
+//!   listener, and the `mgd top` live dashboard.
 //! - [`experiments`] — one harness per paper figure/table (DESIGN.md §5).
 
 pub mod bench;
@@ -56,6 +61,7 @@ pub mod fleet;
 pub mod metrics;
 pub mod model;
 pub mod noise;
+pub mod obs;
 pub mod optim;
 pub mod perturb;
 pub mod rng;

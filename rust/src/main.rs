@@ -9,6 +9,7 @@
 //! mgd serve [...]          expose a local device (or device pool) over TCP
 //! mgd serve-infer [...]    serve a trained checkpoint for inference
 //! mgd infer [...]          query an inference endpoint
+//! mgd top [...]            live metrics dashboard for a running endpoint
 //! mgd info                 list models + artifacts from the manifest
 //! ```
 //!
@@ -49,6 +50,7 @@ USAGE:
   mgd serve [opts]       serve a device over TCP (chip-in-the-loop)
   mgd serve-infer [opts] serve a trained checkpoint for inference
   mgd infer [opts]       query an inference endpoint
+  mgd top [opts]         live metrics dashboard for a running endpoint
   mgd info               list models and artifacts
 
 GLOBAL OPTIONS:
@@ -119,6 +121,8 @@ FLEET OPTIONS:
 SERVE OPTIONS:
   --model M --device native|pjrt --addr HOST:PORT --max-sessions N
   --defects F       activation-defect strength (native device, Fig. 10)
+  --metrics-addr A  also serve Prometheus-text /metrics + /healthz over
+                    HTTP at A (e.g. 127.0.0.1:9464)
 
 SERVE-INFER OPTIONS:
   --checkpoint-dir D  serve D/checkpoint.json and hot-reload it when the
@@ -131,6 +135,8 @@ SERVE-INFER OPTIONS:
   --poll-ms N       checkpoint-dir poll cadence    (default 500)
   --max-sessions N  exit after N sessions          (default: serve forever)
   --telemetry T     JSONL events ('-' = stderr, else a file path)
+  --metrics-addr A  also serve Prometheus-text /metrics + /healthz over
+                    HTTP at A (e.g. 127.0.0.1:9464)
 
 INFER OPTIONS:
   --addr A          endpoint                       (default 127.0.0.1:7272)
@@ -141,6 +147,13 @@ INFER OPTIONS:
   With no --input, the eval set matching the served model's I/O ports is
   scored through the endpoint and the accuracy is printed in the same
   format `mgd train` reports.
+
+TOP OPTIONS:
+  --addr A          endpoint to poll (any mgd TCP server; it answers the
+                    Stats opcode)                  (default 127.0.0.1:7272)
+  --interval-ms N   refresh cadence                (default 1000)
+  --iterations N    frames to render, 0 = forever  (default 0; with 1 the
+                    screen is not cleared — useful for scripts/CI)
 ";
 
 const GLOBAL_OPTS: &[&str] = &["artifacts", "results", "configs", "scale", "seed", "help"];
@@ -254,7 +267,7 @@ fn main() -> Result<()> {
         }
         "serve" => {
             let mut known = GLOBAL_OPTS.to_vec();
-            known.extend(["model", "device", "addr", "max-sessions", "defects"]);
+            known.extend(["model", "device", "addr", "max-sessions", "defects", "metrics-addr"]);
             args.check_known(&known)?;
             let model = args.str_or("model", "xor221");
             let device = args.str_or("device", "native");
@@ -262,16 +275,23 @@ fn main() -> Result<()> {
             let dev = build_device(&ctx, rt.as_ref(), &model, &device)?;
             let max_sessions = args.usize_or("max-sessions", 0)?;
             let max = if max_sessions == 0 { None } else { Some(max_sessions) };
+            spawn_metrics_http(&args)?;
             server::serve(dev, &args.str_or("addr", "127.0.0.1:7171"), max)
         }
         "serve-infer" => {
             let mut known = GLOBAL_OPTS.to_vec();
             known.extend([
                 "checkpoint-dir", "checkpoint", "addr", "max-batch", "max-delay-ms",
-                "poll-ms", "max-sessions", "telemetry",
+                "poll-ms", "max-sessions", "telemetry", "metrics-addr",
             ]);
             args.check_known(&known)?;
             serve_infer_cmd(&args)
+        }
+        "top" => {
+            let mut known = GLOBAL_OPTS.to_vec();
+            known.extend(["addr", "interval-ms", "iterations"]);
+            args.check_known(&known)?;
+            top_cmd(&args)
         }
         "infer" => {
             let mut known = GLOBAL_OPTS.to_vec();
@@ -737,6 +757,7 @@ fn serve_infer_cmd(args: &Args) -> Result<()> {
             (args.f64_or("max-delay-ms", 2.0)? / 1e3).max(0.0),
         ),
     };
+    spawn_metrics_http(args)?;
     let listener = std::net::TcpListener::bind(args.str_or("addr", "127.0.0.1:7272"))?;
     let summary = serve_infer(
         engine,
@@ -815,6 +836,226 @@ fn infer_cmd(ctx: &RunContext, args: &Args) -> Result<()> {
     );
     client.close();
     Ok(())
+}
+
+/// Start the optional `--metrics-addr` HTTP listener (`/metrics` in
+/// Prometheus text format plus `/healthz`).  No-op without the flag.
+fn spawn_metrics_http(args: &Args) -> Result<()> {
+    if let Some(addr) = args.get("metrics-addr") {
+        let bound = mgd::obs::http::spawn(addr)?;
+        println!("metrics: http://{bound}/metrics");
+    }
+    Ok(())
+}
+
+/// Fetch one registry snapshot from an mgd TCP endpoint via the `Stats`
+/// wire opcode (both `mgd serve` and `mgd serve-infer` answer it).
+fn fetch_stats(addr: &str) -> Result<mgd::json::Json> {
+    use mgd::device::protocol as p;
+    use std::io::{BufReader, BufWriter};
+    let stream = std::net::TcpStream::connect(addr)
+        .with_context(|| format!("connecting to {addr}"))?;
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(5)))?;
+    stream.set_write_timeout(Some(std::time::Duration::from_secs(5)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    p::write_request(&mut writer, p::Op::Stats, &[])?;
+    let reply = p::read_response(&mut reader)?;
+    // Best-effort goodbye; the snapshot is already in hand.
+    if p::write_request(&mut writer, p::Op::Bye, &[]).is_ok() {
+        let _ = p::read_response(&mut reader);
+    }
+    let text = std::str::from_utf8(&reply).context("stats reply is not UTF-8")?;
+    mgd::json::Json::parse(text).context("parsing stats reply")
+}
+
+/// Flatten a JSON object of numbers into a name → value map.
+fn num_map(j: &mgd::json::Json) -> Result<std::collections::BTreeMap<String, f64>> {
+    j.as_obj()?.iter().map(|(k, v)| Ok((k.clone(), v.as_f64()?))).collect()
+}
+
+/// `123`, `45.6k`, `7.89M` — compact counts for the dashboard.
+fn fmt_count(v: f64) -> String {
+    if v >= 1e9 {
+        format!("{:.2}G", v / 1e9)
+    } else if v >= 1e6 {
+        format!("{:.2}M", v / 1e6)
+    } else if v >= 1e4 {
+        format!("{:.1}k", v / 1e3)
+    } else {
+        format!("{v:.0}")
+    }
+}
+
+/// ` (+N/s)` suffix for a counter with a measured positive rate.
+fn fmt_rate(rate: Option<f64>) -> String {
+    match rate {
+        Some(r) if r > 0.0 => format!(" (+{}/s)", fmt_count(r)),
+        _ => String::new(),
+    }
+}
+
+/// `-` for an absent gauge, otherwise the value with `digits` decimals.
+fn fmt_gauge(v: Option<f64>, digits: usize) -> String {
+    v.map(|v| format!("{v:.digits$}")).unwrap_or_else(|| "-".to_string())
+}
+
+/// One-line histogram summary (`n=… p50 …ms p99 …ms`) from the Stats
+/// JSON, or `-` when the series is absent or empty.
+fn hist_summary(hists: &mgd::json::Json, name: &str) -> String {
+    let Some(h) = hists.get(name) else { return "-".to_string() };
+    let q = |k: &str| h.get(k).and_then(|v| v.as_f64().ok()).unwrap_or(0.0);
+    if q("count") == 0.0 {
+        return "n=0".to_string();
+    }
+    format!(
+        "n={} p50 {:.2}ms p99 {:.2}ms",
+        fmt_count(q("count")),
+        q("p50") * 1e3,
+        q("p99") * 1e3
+    )
+}
+
+/// Unicode sparkline of the last 32 samples, scaled to [0, 1].
+fn sparkline(history: &[f64]) -> String {
+    const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let skip = history.len().saturating_sub(32);
+    history[skip..]
+        .iter()
+        .map(|&v| BARS[((v.clamp(0.0, 1.0) * 7.0).round() as usize).min(7)])
+        .collect()
+}
+
+/// `mgd top`: poll the endpoint's `Stats` opcode and render a refreshing
+/// terminal dashboard (rates are computed from counter deltas between
+/// consecutive polls, so the first frame shows totals only).
+fn top_cmd(args: &Args) -> Result<()> {
+    use std::collections::BTreeMap;
+    use std::time::Instant;
+    let addr = args.str_or("addr", "127.0.0.1:7272");
+    let interval = std::time::Duration::from_millis(args.u64_or("interval-ms", 1000)?.max(50));
+    let iterations = args.u64_or("iterations", 0)?;
+    let mut prev: Option<(Instant, BTreeMap<String, f64>)> = None;
+    let mut acc_history: Vec<f64> = Vec::new();
+    let mut frames = 0u64;
+    loop {
+        let snap = fetch_stats(&addr)?;
+        let now = Instant::now();
+        let counters = num_map(snap.field("counters")?)?;
+        let gauges = num_map(snap.field("gauges")?)?;
+        let hists = snap.field("histograms")?;
+        let rates: BTreeMap<String, f64> = match &prev {
+            Some((t0, old)) => {
+                let dt = now.duration_since(*t0).as_secs_f64().max(1e-9);
+                counters
+                    .iter()
+                    .map(|(k, v)| {
+                        (k.clone(), (v - old.get(k).copied().unwrap_or(0.0)).max(0.0) / dt)
+                    })
+                    .collect()
+            }
+            None => BTreeMap::new(),
+        };
+        let c = |name: &str| counters.get(name).copied();
+        let g = |name: &str| gauges.get(name).copied();
+        let r = |name: &str| rates.get(name).copied();
+        if let Some(acc) = g("mgd_trainer_eval_accuracy") {
+            acc_history.push(acc);
+        }
+
+        let mut out = String::new();
+        out.push_str(&format!(
+            "mgd top — {addr} — refresh {} ms — frame {}\n\n",
+            interval.as_millis(),
+            frames + 1
+        ));
+        if let Some(steps) = c("mgd_trainer_steps_total") {
+            out.push_str(&format!(
+                "TRAINER  steps {}{}   cost-evals {}{}   cost {}   |G| {}   window {}\n",
+                fmt_count(steps),
+                fmt_rate(r("mgd_trainer_steps_total")),
+                fmt_gauge(c("mgd_trainer_cost_evals_total"), 0),
+                fmt_rate(r("mgd_trainer_cost_evals_total")),
+                fmt_gauge(g("mgd_trainer_cost"), 5),
+                fmt_gauge(g("mgd_trainer_g_norm"), 3),
+                fmt_gauge(g("mgd_trainer_probe_window"), 0),
+            ));
+        }
+        if let Some(acc) = g("mgd_trainer_eval_accuracy") {
+            out.push_str(&format!(
+                "EVAL     cost {}   accuracy {:.2}%   {}\n",
+                fmt_gauge(g("mgd_trainer_eval_cost"), 5),
+                acc * 100.0,
+                sparkline(&acc_history),
+            ));
+        }
+        if c("mgd_exec_rows_total").is_some() || c("mgd_exec_probes_total").is_some() {
+            out.push_str(&format!(
+                "EXEC     rows {}{}   probes {}{}   sweep {}\n",
+                fmt_gauge(c("mgd_exec_rows_total"), 0),
+                fmt_rate(r("mgd_exec_rows_total")),
+                fmt_gauge(c("mgd_exec_probes_total"), 0),
+                fmt_rate(r("mgd_exec_probes_total")),
+                hist_summary(hists, "mgd_exec_sweep_seconds"),
+            ));
+        }
+        let healthy = g("mgd_fleet_devices{state=\"healthy\"}");
+        if healthy.is_some() || c("mgd_fleet_leases_total").is_some() {
+            out.push_str(&format!(
+                "FLEET    devices {}h/{}s/{}q   queue {}   leases {}{}   retries {}   wait {}\n",
+                fmt_gauge(healthy, 0),
+                fmt_gauge(g("mgd_fleet_devices{state=\"suspect\"}"), 0),
+                fmt_gauge(g("mgd_fleet_devices{state=\"quarantined\"}"), 0),
+                fmt_gauge(g("mgd_fleet_queue_depth"), 0),
+                fmt_gauge(c("mgd_fleet_leases_total"), 0),
+                fmt_rate(r("mgd_fleet_leases_total")),
+                fmt_gauge(c("mgd_fleet_retries_total"), 0),
+                hist_summary(hists, "mgd_fleet_lease_wait_seconds"),
+            ));
+        }
+        if c("mgd_serve_requests_total").is_some() {
+            out.push_str(&format!(
+                "SERVE    requests {}{}   rows {}{}   batches {}   fill {}   latency {}   \
+                 reloads ok {} / rejected {}\n",
+                fmt_gauge(c("mgd_serve_requests_total"), 0),
+                fmt_rate(r("mgd_serve_requests_total")),
+                fmt_gauge(c("mgd_serve_rows_total"), 0),
+                fmt_rate(r("mgd_serve_rows_total")),
+                fmt_gauge(c("mgd_serve_batches_total"), 0),
+                fmt_gauge(g("mgd_serve_batch_fill"), 2),
+                hist_summary(hists, "mgd_serve_request_latency_seconds"),
+                fmt_gauge(c("mgd_serve_reloads_total{outcome=\"ok\"}").or(Some(0.0)), 0),
+                fmt_gauge(c("mgd_serve_reloads_total{outcome=\"rejected\"}").or(Some(0.0)), 0),
+            ));
+        }
+        if let Some(saves) = c("mgd_checkpoints_total") {
+            out.push_str(&format!(
+                "CKPT     saves {}   save {}\n",
+                fmt_count(saves),
+                hist_summary(hists, "mgd_checkpoint_save_seconds"),
+            ));
+        }
+        if out.ends_with("\n\n") {
+            out.push_str("(no mgd_* series yet — is the endpoint doing any work?)\n");
+        }
+
+        // A single-frame run (scripts, CI greps) keeps plain output;
+        // interactive runs repaint in place.
+        if iterations == 1 {
+            print!("{out}");
+        } else {
+            print!("\x1b[2J\x1b[H{out}");
+        }
+        use std::io::Write as _;
+        std::io::stdout().flush()?;
+
+        prev = Some((now, counters));
+        frames += 1;
+        if iterations != 0 && frames >= iterations {
+            return Ok(());
+        }
+        std::thread::sleep(interval);
+    }
 }
 
 fn report(res: &mgd::coordinator::TrainResult, eval_set: &Dataset) {

@@ -1,0 +1,178 @@
+//! Minimal hand-rolled HTTP/1.1 exporter for the metrics registry — the
+//! in-repo substrate replacing hyper/axum (offline build; see
+//! Cargo.toml).
+//!
+//! Two routes, both `GET`:
+//!
+//! - `/metrics` — the global [`crate::obs`] registry rendered in the
+//!   Prometheus text exposition format (version 0.0.4), and
+//! - `/healthz` — liveness (`200 ok`).
+//!
+//! The server is deliberately small: it parses only the request line,
+//! answers with `Connection: close`, and serves requests serially on one
+//! daemon thread — a scrape endpoint sees one poller every few seconds,
+//! not traffic.  Anything beyond `GET /metrics` and `GET /healthz` gets
+//! a 404/405; malformed or oversized requests get a 400.  This listener
+//! is also the seed of the planned HTTP gateway (ROADMAP direction 1).
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+/// Cap on request bytes read (request line + headers).
+const MAX_REQUEST_BYTES: usize = 8192;
+
+/// Per-connection socket timeout.
+const IO_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Bind `addr` and serve `/metrics` + `/healthz` on a background daemon
+/// thread forever.  Returns the bound address (useful with port 0).
+pub fn spawn(addr: &str) -> Result<SocketAddr> {
+    let listener =
+        TcpListener::bind(addr).with_context(|| format!("binding metrics listener on {addr}"))?;
+    let local = listener.local_addr().context("resolving metrics listener address")?;
+    std::thread::Builder::new()
+        .name("mgd-metrics-http".to_string())
+        .spawn(move || serve(listener, None))
+        .context("spawning metrics listener thread")?;
+    Ok(local)
+}
+
+/// Accept-and-respond loop.  `max_requests` bounds the number of
+/// connections served (tests); `None` serves forever.  Per-connection
+/// errors are logged and never kill the loop.
+pub fn serve(listener: TcpListener, max_requests: Option<usize>) {
+    let mut served = 0usize;
+    for stream in listener.incoming() {
+        match stream {
+            Ok(stream) => {
+                if let Err(e) = handle(stream) {
+                    eprintln!("[metrics] request failed: {e:#}");
+                }
+            }
+            Err(e) => eprintln!("[metrics] accept failed: {e}"),
+        }
+        served += 1;
+        if max_requests.is_some_and(|max| served >= max) {
+            return;
+        }
+    }
+}
+
+fn handle(mut stream: TcpStream) -> Result<()> {
+    stream.set_read_timeout(Some(IO_TIMEOUT)).context("setting read timeout")?;
+    stream.set_write_timeout(Some(IO_TIMEOUT)).context("setting write timeout")?;
+
+    let mut buf = Vec::new();
+    let mut chunk = [0u8; 1024];
+    // Read until the header terminator; request bodies are ignored (no
+    // route takes one).
+    while !buf.windows(4).any(|w| w == b"\r\n\r\n") {
+        if buf.len() >= MAX_REQUEST_BYTES {
+            return respond(&mut stream, "400 Bad Request", "request too large\n");
+        }
+        let n = stream.read(&mut chunk).context("reading request")?;
+        if n == 0 {
+            break;
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    }
+
+    let text = String::from_utf8_lossy(&buf);
+    let request_line = text.lines().next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let (method, path) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
+
+    if method != "GET" {
+        return respond(&mut stream, "405 Method Not Allowed", "only GET is supported\n");
+    }
+    match path {
+        "/metrics" => {
+            let body = crate::obs::snapshot().to_prometheus();
+            respond_typed(
+                &mut stream,
+                "200 OK",
+                "text/plain; version=0.0.4; charset=utf-8",
+                &body,
+            )
+        }
+        "/healthz" => respond(&mut stream, "200 OK", "ok\n"),
+        "" => respond(&mut stream, "400 Bad Request", "malformed request line\n"),
+        other => {
+            let body = format!("no route {other}; try /metrics or /healthz\n");
+            respond(&mut stream, "404 Not Found", &body)
+        }
+    }
+}
+
+fn respond(stream: &mut TcpStream, status: &str, body: &str) -> Result<()> {
+    respond_typed(stream, status, "text/plain; charset=utf-8", body)
+}
+
+fn respond_typed(stream: &mut TcpStream, status: &str, ctype: &str, body: &str) -> Result<()> {
+    write!(
+        stream,
+        "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n{body}",
+        body.len()
+    )
+    .context("writing response")?;
+    stream.flush().context("flushing response")?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Serve `n` requests on an ephemeral port, on a scoped thread.
+    fn with_server<R>(n: usize, f: impl FnOnce(SocketAddr) -> R) -> R {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::scope(|s| {
+            s.spawn(move || serve(listener, Some(n)));
+            f(addr)
+        })
+    }
+
+    fn get(addr: SocketAddr, request: &str) -> String {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.write_all(request.as_bytes()).unwrap();
+        let mut out = String::new();
+        stream.read_to_string(&mut out).unwrap();
+        out
+    }
+
+    #[test]
+    fn healthz_and_metrics_respond() {
+        crate::obs::counter("test_obs_http_total").inc();
+        with_server(2, |addr| {
+            let health = get(addr, "GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n");
+            assert!(health.starts_with("HTTP/1.1 200 OK"), "{health}");
+            assert!(health.ends_with("ok\n"), "{health}");
+
+            let metrics = get(addr, "GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n");
+            assert!(metrics.starts_with("HTTP/1.1 200 OK"), "{metrics}");
+            assert!(metrics.contains("# TYPE test_obs_http_total counter"), "{metrics}");
+        });
+    }
+
+    #[test]
+    fn unknown_route_and_method_are_rejected() {
+        with_server(2, |addr| {
+            let resp = get(addr, "GET /nope HTTP/1.1\r\nHost: x\r\n\r\n");
+            assert!(resp.starts_with("HTTP/1.1 404"), "{resp}");
+            let resp = get(addr, "POST /metrics HTTP/1.1\r\nHost: x\r\n\r\n");
+            assert!(resp.starts_with("HTTP/1.1 405"), "{resp}");
+        });
+    }
+
+    #[test]
+    fn spawn_returns_a_live_bound_address() {
+        let addr = spawn("127.0.0.1:0").unwrap();
+        let resp = get(addr, "GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert!(resp.starts_with("HTTP/1.1 200 OK"), "{resp}");
+    }
+}

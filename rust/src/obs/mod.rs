@@ -1,0 +1,745 @@
+//! Live metrics: a process-global, dependency-free registry with
+//! lock-free hot-path instruments.
+//!
+//! The fleet telemetry stream ([`crate::fleet::telemetry`]) is a
+//! write-only JSONL event log — great for post-hoc analysis, useless for
+//! watching a live run.  This module is the queryable side: every layer
+//! (trainer, device exec, fleet, serving) updates named metrics through
+//! three instrument types, and two read surfaces expose a consistent
+//! snapshot while the run is hot:
+//!
+//! - the wire opcode `Stats = 0x0D` (JSON snapshot over the existing TCP
+//!   protocol, served by both the training pool server and `serve-infer`,
+//!   rendered live by `mgd top`), and
+//! - an optional hand-rolled HTTP/1.1 listener ([`http`]) exposing
+//!   Prometheus text-format `/metrics` plus `/healthz`.
+//!
+//! # Instruments
+//!
+//! - [`Counter`] — monotonic `u64`; one relaxed atomic add per update.
+//! - [`Gauge`] — an `f64` stored as bits in an `AtomicU64`; `set` is a
+//!   store, `add` a CAS loop.
+//! - [`Histogram`] — fixed geometric (log-scale) buckets, four per
+//!   decade from ~1.8 µs to 10⁴ s, plus an overflow bucket.  `observe`
+//!   is three relaxed atomic ops; quantiles are computed on read by
+//!   linear interpolation inside the covering bucket, so they carry a
+//!   bounded relative error of at most one bucket ratio (10^¼ ≈ 1.78×,
+//!   in practice a few percent).
+//!
+//! Handles are cheap clones over `Arc`s.  Acquiring a handle
+//! ([`counter`], [`gauge`], [`histogram`], and their `_with` labeled
+//! variants) takes the registry mutex; *updating* one never does.  Hot
+//! paths cache handles in a `OnceLock` so the registry lock is paid once
+//! per process, not per event.
+//!
+//! # Enable switch
+//!
+//! Every update is gated on one relaxed [`AtomicBool`] load and a
+//! branch.  [`set_enabled`]`(false)` turns the whole layer into that
+//! single branch — this is how `benches/hotpath.rs` measures the
+//! instrumentation overhead (asserted ≤ 2% on the full MGD step).
+//! Spans skip the `Instant::now()` call entirely when disabled.
+//!
+//! # Spans
+//!
+//! [`span`]`("name")` returns a guard that observes its elapsed wall
+//! time into the histogram `name` when dropped.  For per-call hot paths
+//! prefer a cached [`Histogram`] plus [`Histogram::start_timer`], which
+//! skips the registry lookup.
+//!
+//! # Metric names
+//!
+//! The registry does not enforce a schema, but the repo's instrumented
+//! series follow Prometheus conventions (`mgd_<layer>_<what>[_total]`,
+//! base units: seconds).  The full catalogue lives in the README's
+//! "Observability" section.
+
+pub mod http;
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::json::Json;
+
+// ---------------------------------------------------------------------------
+// Enable switch
+// ---------------------------------------------------------------------------
+
+static ENABLED: AtomicBool = AtomicBool::new(true);
+
+/// Turn metric updates on or off process-wide (default: on).  Reads
+/// (snapshots, quantiles) are unaffected.  Intended for overhead
+/// benchmarking; leave enabled in production.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Whether metric updates are currently enabled.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+// ---------------------------------------------------------------------------
+// Instruments
+// ---------------------------------------------------------------------------
+
+/// Monotonic counter.  Cloning shares the underlying value.
+#[derive(Clone)]
+pub struct Counter {
+    value: Arc<AtomicU64>,
+}
+
+impl Counter {
+    /// A fresh, unregistered counter (use [`counter`] for the global
+    /// registry).
+    pub fn new() -> Counter {
+        Counter { value: Arc::new(AtomicU64::new(0)) }
+    }
+
+    /// Add 1.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Add `n`.
+    pub fn add(&self, n: u64) {
+        if enabled() {
+            self.value.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Instantaneous value (an `f64` in atomic bits).  Cloning shares the
+/// underlying value.
+#[derive(Clone)]
+pub struct Gauge {
+    bits: Arc<AtomicU64>,
+}
+
+impl Gauge {
+    /// A fresh, unregistered gauge (use [`gauge`] for the global
+    /// registry).
+    pub fn new() -> Gauge {
+        Gauge { bits: Arc::new(AtomicU64::new(0f64.to_bits())) }
+    }
+
+    /// Set the value.
+    pub fn set(&self, v: f64) {
+        if enabled() {
+            self.bits.store(v.to_bits(), Ordering::Relaxed);
+        }
+    }
+
+    /// Add a (possibly negative) delta via a CAS loop.
+    pub fn add(&self, delta: f64) {
+        if enabled() {
+            atomic_f64_add(&self.bits, delta);
+        }
+    }
+
+    /// Current value.
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+}
+
+fn atomic_f64_add(bits: &AtomicU64, delta: f64) {
+    let mut cur = bits.load(Ordering::Relaxed);
+    loop {
+        let next = (f64::from_bits(cur) + delta).to_bits();
+        match bits.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(now) => cur = now,
+        }
+    }
+}
+
+/// Geometric bucket layout: `BOUND(i) = 1e-6 * 10^((i+1)/4)` for
+/// `i in 0..N_BOUNDS`, i.e. four buckets per decade from ~1.78 µs up to
+/// 10⁴ s, plus one overflow bucket above the top bound.
+const LOWEST: f64 = 1e-6;
+const PER_DECADE: f64 = 4.0;
+const N_BOUNDS: usize = 40;
+
+fn bound(i: usize) -> f64 {
+    LOWEST * 10f64.powf((i as f64 + 1.0) / PER_DECADE)
+}
+
+fn bucket_index(v: f64) -> usize {
+    if v.is_nan() || v <= 0.0 {
+        return 0;
+    }
+    let pos = PER_DECADE * (v / LOWEST).log10() - 1.0;
+    if pos <= 0.0 {
+        0
+    } else {
+        (pos.ceil() as usize).min(N_BOUNDS)
+    }
+}
+
+/// Fixed-bucket log-scale histogram.  `observe` is lock-free (three
+/// relaxed atomic ops); quantiles interpolate inside the covering
+/// bucket.  Cloning shares the underlying buckets.
+#[derive(Clone)]
+pub struct Histogram {
+    inner: Arc<HistogramInner>,
+}
+
+struct HistogramInner {
+    /// `buckets[i]` counts observations `v` with `v <= BOUND(i)`
+    /// (non-cumulative); the final slot is the overflow bucket.
+    buckets: [AtomicU64; N_BOUNDS + 1],
+    count: AtomicU64,
+    sum_bits: AtomicU64,
+}
+
+impl Histogram {
+    /// A fresh, unregistered histogram (use [`histogram`] for the global
+    /// registry).  Unregistered histograms suit per-instance stats that
+    /// must not be shared across instances (e.g. one server's latency
+    /// ring) — feed a registered sibling in parallel for the global view.
+    pub fn new() -> Histogram {
+        Histogram {
+            inner: Arc::new(HistogramInner {
+                buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+                count: AtomicU64::new(0),
+                sum_bits: AtomicU64::new(0f64.to_bits()),
+            }),
+        }
+    }
+
+    /// Record one observation (negative/NaN values land in the lowest
+    /// bucket; the sum is still exact).
+    pub fn observe(&self, v: f64) {
+        if !enabled() {
+            return;
+        }
+        self.inner.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.inner.count.fetch_add(1, Ordering::Relaxed);
+        atomic_f64_add(&self.inner.sum_bits, v);
+    }
+
+    /// Observations recorded so far.
+    pub fn count(&self) -> u64 {
+        self.inner.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all observed values.
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.inner.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// Approximate `q`-quantile (`0.0..=1.0`) by linear interpolation
+    /// inside the covering bucket.  Returns `0.0` on an empty histogram;
+    /// quantiles in the overflow bucket clamp to the top bound.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let counts: Vec<u64> =
+            self.inner.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let rank = q.clamp(0.0, 1.0) * total as f64;
+        let mut cum = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let next = cum + c;
+            if next as f64 >= rank {
+                let lower = if i == 0 { 0.0 } else { bound(i - 1) };
+                let upper = bound(i.min(N_BOUNDS - 1));
+                let frac = ((rank - cum as f64) / c as f64).clamp(0.0, 1.0);
+                return lower + (upper - lower) * frac;
+            }
+            cum = next;
+        }
+        bound(N_BOUNDS - 1)
+    }
+
+    /// Start a wall-clock timer that observes its elapsed seconds into
+    /// this histogram when dropped.  When metrics are disabled the guard
+    /// is inert (no `Instant::now()` call).
+    pub fn start_timer(&self) -> Span {
+        if !enabled() {
+            return Span(None);
+        }
+        Span(Some((self.clone(), Instant::now())))
+    }
+
+    /// Consistent point-in-time copy for rendering.
+    fn snap(&self) -> HistogramSnapshot {
+        let counts: Vec<u64> =
+            self.inner.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        let mut buckets = Vec::with_capacity(N_BOUNDS);
+        let mut cum = 0u64;
+        for (i, &c) in counts.iter().take(N_BOUNDS).enumerate() {
+            cum += c;
+            buckets.push((bound(i), cum));
+        }
+        HistogramSnapshot {
+            count: self.count(),
+            sum: self.sum(),
+            p50: self.quantile(0.50),
+            p90: self.quantile(0.90),
+            p99: self.quantile(0.99),
+            buckets,
+        }
+    }
+}
+
+impl Default for Counter {
+    fn default() -> Self {
+        Counter::new()
+    }
+}
+
+impl Default for Gauge {
+    fn default() -> Self {
+        Gauge::new()
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+/// Timer guard returned by [`span`] / [`Histogram::start_timer`];
+/// observes elapsed wall time (seconds) on drop.
+pub struct Span(Option<(Histogram, Instant)>);
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some((h, start)) = self.0.take() {
+            h.observe(start.elapsed().as_secs_f64());
+        }
+    }
+}
+
+/// Time a region into the registered histogram `name`: the returned
+/// guard observes elapsed seconds when dropped.  Costs one registry
+/// lookup per call — a single branch when metrics are disabled; on
+/// per-row hot paths prefer a cached handle plus
+/// [`Histogram::start_timer`].
+pub fn span(name: &str) -> Span {
+    if !enabled() {
+        return Span(None);
+    }
+    histogram(name).start_timer()
+}
+
+// ---------------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------------
+
+#[derive(Clone)]
+enum Metric {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(Histogram),
+}
+
+impl Metric {
+    fn kind(&self) -> &'static str {
+        match self {
+            Metric::Counter(_) => "counter",
+            Metric::Gauge(_) => "gauge",
+            Metric::Histogram(_) => "histogram",
+        }
+    }
+}
+
+type SeriesKey = (String, Vec<(String, String)>);
+
+static REGISTRY: Mutex<BTreeMap<SeriesKey, Metric>> = Mutex::new(BTreeMap::new());
+
+fn lookup(name: &str, labels: &[(&str, &str)], make: impl FnOnce() -> Metric) -> Metric {
+    let mut sorted: Vec<(String, String)> =
+        labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+    sorted.sort();
+    let key = (name.to_string(), sorted);
+    let mut reg = REGISTRY.lock().unwrap();
+    reg.entry(key).or_insert_with(make).clone()
+}
+
+/// Get or register the global counter `name` (no labels).
+pub fn counter(name: &str) -> Counter {
+    counter_with(name, &[])
+}
+
+/// Get or register the global counter `name` with the given label set.
+///
+/// # Panics
+/// If `name` with these labels is already registered as a different
+/// instrument type (a programming error).
+pub fn counter_with(name: &str, labels: &[(&str, &str)]) -> Counter {
+    match lookup(name, labels, || Metric::Counter(Counter::new())) {
+        Metric::Counter(c) => c,
+        other => panic!("metric {name} is registered as a {}, not a counter", other.kind()),
+    }
+}
+
+/// Get or register the global gauge `name` (no labels).
+pub fn gauge(name: &str) -> Gauge {
+    gauge_with(name, &[])
+}
+
+/// Get or register the global gauge `name` with the given label set.
+///
+/// # Panics
+/// If `name` with these labels is already registered as a different
+/// instrument type (a programming error).
+pub fn gauge_with(name: &str, labels: &[(&str, &str)]) -> Gauge {
+    match lookup(name, labels, || Metric::Gauge(Gauge::new())) {
+        Metric::Gauge(g) => g,
+        other => panic!("metric {name} is registered as a {}, not a gauge", other.kind()),
+    }
+}
+
+/// Get or register the global histogram `name` (no labels).
+pub fn histogram(name: &str) -> Histogram {
+    histogram_with(name, &[])
+}
+
+/// Get or register the global histogram `name` with the given label set.
+///
+/// # Panics
+/// If `name` with these labels is already registered as a different
+/// instrument type (a programming error).
+pub fn histogram_with(name: &str, labels: &[(&str, &str)]) -> Histogram {
+    match lookup(name, labels, || Metric::Histogram(Histogram::new())) {
+        Metric::Histogram(h) => h,
+        other => panic!("metric {name} is registered as a {}, not a histogram", other.kind()),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Snapshot
+// ---------------------------------------------------------------------------
+
+/// Point-in-time copy of one histogram.
+#[derive(Debug, Clone)]
+pub struct HistogramSnapshot {
+    /// Observations recorded.
+    pub count: u64,
+    /// Sum of observed values.
+    pub sum: f64,
+    /// Interpolated 50th percentile.
+    pub p50: f64,
+    /// Interpolated 90th percentile.
+    pub p90: f64,
+    /// Interpolated 99th percentile.
+    pub p99: f64,
+    /// `(upper_bound, cumulative_count)` per finite bucket; overflow
+    /// observations appear only in [`HistogramSnapshot::count`] (the
+    /// `+Inf` bucket).
+    pub buckets: Vec<(f64, u64)>,
+}
+
+/// One registered series in a [`Snapshot`].
+#[derive(Debug, Clone)]
+pub struct SnapshotEntry {
+    /// Metric name (e.g. `mgd_trainer_steps_total`).
+    pub name: String,
+    /// Sorted label pairs (empty for unlabeled series).
+    pub labels: Vec<(String, String)>,
+    /// The series' value at snapshot time.
+    pub value: SnapshotValue,
+}
+
+/// Value of one series at snapshot time.
+#[derive(Debug, Clone)]
+pub enum SnapshotValue {
+    /// Counter value.
+    Counter(u64),
+    /// Gauge value.
+    Gauge(f64),
+    /// Histogram copy with precomputed quantiles.
+    Histogram(HistogramSnapshot),
+}
+
+/// Consistent-enough point-in-time copy of every registered series,
+/// sorted by `(name, labels)`.  Individual atomics are read without a
+/// global pause, so a snapshot taken mid-update may be one event ahead
+/// on some series — fine for monitoring.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    /// All registered series.
+    pub entries: Vec<SnapshotEntry>,
+}
+
+/// Snapshot every series in the global registry.
+pub fn snapshot() -> Snapshot {
+    let reg = REGISTRY.lock().unwrap();
+    let entries = reg
+        .iter()
+        .map(|((name, labels), metric)| SnapshotEntry {
+            name: name.clone(),
+            labels: labels.clone(),
+            value: match metric {
+                Metric::Counter(c) => SnapshotValue::Counter(c.get()),
+                Metric::Gauge(g) => SnapshotValue::Gauge(g.get()),
+                Metric::Histogram(h) => SnapshotValue::Histogram(h.snap()),
+            },
+        })
+        .collect();
+    Snapshot { entries }
+}
+
+fn series_name(name: &str, labels: &[(String, String)]) -> String {
+    if labels.is_empty() {
+        return name.to_string();
+    }
+    let inner: Vec<String> = labels.iter().map(|(k, v)| format!("{k}={v:?}")).collect();
+    format!("{name}{{{}}}", inner.join(","))
+}
+
+impl Snapshot {
+    /// Render as the `Stats = 0x0D` JSON document:
+    /// `{"counters": {series: n}, "gauges": {series: x}, "histograms":
+    /// {series: {"count", "sum", "p50", "p90", "p99"}}}` where `series`
+    /// is `name` or `name{k="v",…}`.
+    pub fn to_json(&self) -> Json {
+        let mut counters = BTreeMap::new();
+        let mut gauges = BTreeMap::new();
+        let mut hists = BTreeMap::new();
+        for e in &self.entries {
+            let series = series_name(&e.name, &e.labels);
+            match &e.value {
+                SnapshotValue::Counter(v) => {
+                    counters.insert(series, Json::Num(*v as f64));
+                }
+                SnapshotValue::Gauge(v) => {
+                    gauges.insert(series, Json::Num(*v));
+                }
+                SnapshotValue::Histogram(h) => {
+                    let mut m = BTreeMap::new();
+                    m.insert("count".to_string(), Json::Num(h.count as f64));
+                    m.insert("sum".to_string(), Json::Num(h.sum));
+                    m.insert("p50".to_string(), Json::Num(h.p50));
+                    m.insert("p90".to_string(), Json::Num(h.p90));
+                    m.insert("p99".to_string(), Json::Num(h.p99));
+                    hists.insert(series, Json::Obj(m));
+                }
+            }
+        }
+        let mut top = BTreeMap::new();
+        top.insert("counters".to_string(), Json::Obj(counters));
+        top.insert("gauges".to_string(), Json::Obj(gauges));
+        top.insert("histograms".to_string(), Json::Obj(hists));
+        Json::Obj(top)
+    }
+
+    /// Render in the Prometheus text exposition format (version 0.0.4):
+    /// one `# TYPE` line per metric name, cumulative `_bucket{le=…}`
+    /// series plus `_sum`/`_count` for histograms.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut last_name: Option<&str> = None;
+        for e in &self.entries {
+            let kind = match &e.value {
+                SnapshotValue::Counter(_) => "counter",
+                SnapshotValue::Gauge(_) => "gauge",
+                SnapshotValue::Histogram(_) => "histogram",
+            };
+            if last_name != Some(e.name.as_str()) {
+                out.push_str(&format!("# TYPE {} {kind}\n", e.name));
+                last_name = Some(e.name.as_str());
+            }
+            match &e.value {
+                SnapshotValue::Counter(v) => {
+                    out.push_str(&format!("{} {v}\n", series_name(&e.name, &e.labels)));
+                }
+                SnapshotValue::Gauge(v) => {
+                    out.push_str(&format!("{} {v}\n", series_name(&e.name, &e.labels)));
+                }
+                SnapshotValue::Histogram(h) => {
+                    for &(le, cum) in &h.buckets {
+                        let mut labels = e.labels.clone();
+                        labels.push(("le".to_string(), format!("{le:e}")));
+                        out.push_str(&format!(
+                            "{}_bucket{} {cum}\n",
+                            e.name,
+                            series_name("", &labels)
+                        ));
+                    }
+                    let mut labels = e.labels.clone();
+                    labels.push(("le".to_string(), "+Inf".to_string()));
+                    out.push_str(&format!(
+                        "{}_bucket{} {}\n",
+                        e.name,
+                        series_name("", &labels),
+                        h.count
+                    ));
+                    let (n, l) = (&e.name, series_name("", &e.labels));
+                    out.push_str(&format!("{n}_sum{l} {}\n", h.sum));
+                    out.push_str(&format!("{n}_count{l} {}\n", h.count));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let c = counter("test_obs_counter_basic_total");
+        let before = c.get();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), before + 5);
+        // A second lookup returns the same underlying value.
+        assert_eq!(counter("test_obs_counter_basic_total").get(), before + 5);
+
+        let g = gauge("test_obs_gauge_basic");
+        g.set(2.5);
+        assert_eq!(g.get(), 2.5);
+        g.add(-1.0);
+        assert_eq!(g.get(), 1.5);
+    }
+
+    #[test]
+    fn labels_create_distinct_series() {
+        let ok = counter_with("test_obs_labeled_total", &[("outcome", "ok")]);
+        let bad = counter_with("test_obs_labeled_total", &[("outcome", "rejected")]);
+        ok.add(3);
+        bad.inc();
+        assert_eq!(ok.get(), 3);
+        assert_eq!(bad.get(), 1);
+        // Label order does not matter.
+        let same = counter_with("test_obs_order_total", &[("a", "1"), ("b", "2")]);
+        same.inc();
+        let swapped = counter_with("test_obs_order_total", &[("b", "2"), ("a", "1")]);
+        assert_eq!(swapped.get(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "registered as a counter")]
+    fn kind_mismatch_panics() {
+        counter("test_obs_kind_mismatch");
+        gauge("test_obs_kind_mismatch");
+    }
+
+    #[test]
+    fn histogram_count_sum_and_buckets() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile(0.5), 0.0, "empty histogram quantile is 0");
+        h.observe(1e-3);
+        h.observe(2e-3);
+        h.observe(4e-3);
+        assert_eq!(h.count(), 3);
+        assert!((h.sum() - 7e-3).abs() < 1e-12);
+        // All mass below 10ms, none below 0.9ms.
+        let q = h.quantile(1.0);
+        assert!(q > 1e-3 && q < 1e-2, "p100 {q} should sit near 4ms");
+    }
+
+    #[test]
+    fn histogram_edge_observations_do_not_lose_mass() {
+        let h = Histogram::new();
+        h.observe(0.0);
+        h.observe(-1.0);
+        h.observe(f64::NAN);
+        h.observe(1e12); // overflow bucket
+        assert_eq!(h.count(), 4);
+        // Overflow quantiles clamp to the top finite bound.
+        assert!(h.quantile(1.0) >= bound(N_BOUNDS - 1) * 0.99);
+    }
+
+    #[test]
+    fn bucket_index_is_monotonic_and_bounded() {
+        let mut last = 0;
+        let mut v = 1e-7;
+        while v < 1e5 {
+            let i = bucket_index(v);
+            assert!(i >= last, "bucket index regressed at {v}");
+            assert!(i <= N_BOUNDS);
+            last = i;
+            v *= 1.3;
+        }
+        assert_eq!(bucket_index(0.0), 0);
+        assert_eq!(bucket_index(f64::NAN), 0);
+        assert_eq!(bucket_index(1e12), N_BOUNDS);
+    }
+
+    /// Satellite: the three quantile implementations (nearest-rank ring
+    /// in `serve::batcher::percentile_ms`, linear-interpolated
+    /// `metrics::quantile_sorted`, and the bucketed `obs::Histogram`)
+    /// agree on reference samples to within the histogram's bucket
+    /// resolution.
+    #[test]
+    fn quantiles_agree_across_implementations() {
+        let samples: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let h = Histogram::new();
+        for &s in &samples {
+            h.observe(s);
+        }
+        for &(q, tol) in &[(0.50, 0.10), (0.99, 0.10)] {
+            let nearest = crate::serve::batcher::percentile_ms(&samples, q);
+            let interp = crate::metrics::quantile_sorted(&samples, q);
+            let bucketed = h.quantile(q);
+            let rel = |a: f64, b: f64| (a - b).abs() / b.max(1e-12);
+            assert!(
+                rel(nearest, interp) < tol,
+                "q={q}: nearest-rank {nearest} vs interpolated {interp}"
+            );
+            assert!(
+                rel(bucketed, nearest) < tol,
+                "q={q}: bucketed {bucketed} vs nearest-rank {nearest}"
+            );
+        }
+    }
+
+    #[test]
+    fn span_observes_into_registered_histogram() {
+        let name = "test_obs_span_seconds";
+        let before = histogram(name).count();
+        {
+            let _s = span(name);
+            std::hint::black_box(2 + 2);
+        }
+        assert_eq!(histogram(name).count(), before + 1);
+        assert!(histogram(name).sum() >= 0.0);
+    }
+
+    #[test]
+    fn snapshot_renders_json_and_prometheus() {
+        counter("test_obs_snap_total").add(7);
+        gauge_with("test_obs_snap_gauge", &[("kind", "x")]).set(1.25);
+        histogram("test_obs_snap_seconds").observe(0.01);
+
+        let snap = snapshot();
+        let json = snap.to_json();
+        let text = json.dump();
+        let parsed = Json::parse(&text).unwrap();
+        let counters = parsed.field("counters").unwrap();
+        assert_eq!(counters.field("test_obs_snap_total").unwrap().as_u64().unwrap(), 7);
+        let g = parsed.field("gauges").unwrap();
+        assert_eq!(g.field("test_obs_snap_gauge{kind=\"x\"}").unwrap().as_f64().unwrap(), 1.25);
+        let hist = parsed.field("histograms").unwrap().field("test_obs_snap_seconds").unwrap();
+        assert_eq!(hist.field("count").unwrap().as_u64().unwrap(), 1);
+        assert!(hist.field("p50").unwrap().as_f64().unwrap() > 0.0);
+
+        let prom = snap.to_prometheus();
+        assert!(prom.contains("# TYPE test_obs_snap_total counter"));
+        assert!(prom.contains("test_obs_snap_total 7"));
+        assert!(prom.contains("test_obs_snap_gauge{kind=\"x\"} 1.25"));
+        assert!(prom.contains("# TYPE test_obs_snap_seconds histogram"));
+        assert!(prom.contains("test_obs_snap_seconds_bucket{le=\"+Inf\"} 1"));
+        assert!(prom.contains("test_obs_snap_seconds_count 1"));
+        assert!(prom.contains("test_obs_snap_seconds_sum 0.01"));
+    }
+}

@@ -20,7 +20,7 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, OnceLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -29,6 +29,7 @@ use anyhow::{anyhow, Result};
 use super::engine::EngineSlot;
 use crate::device::exec::ForwardScratch;
 use crate::fleet::telemetry::{Event, Telemetry};
+use crate::obs;
 
 /// Micro-batch assembly knobs.
 #[derive(Debug, Clone, Copy)]
@@ -60,20 +61,46 @@ struct Job {
     enqueued: Instant,
 }
 
-/// Latency reservoir capacity: enough for stable p99 estimates, bounded
-/// so a serve-forever process cannot grow without limit (the ring
-/// overwrites oldest-first past the cap).
-const LATENCY_RING: usize = 8192;
-
-/// Shared serving counters + request-latency reservoir.
+/// Shared serving counters + request-latency histogram.
+///
+/// The latency quantiles ride the fixed-bucket [`obs::Histogram`] (the
+/// seed kept an 8192-sample nearest-rank ring): constant memory for a
+/// serve-forever process, lock-free recording, and the same p50/p99
+/// semantics as every other latency series in the registry.  The
+/// histogram here is deliberately *unregistered* — two servers in one
+/// process (tests, future multi-engine gateways) must not pollute each
+/// other's summaries — while [`ServeStats::record_batch`] feeds the
+/// registered `mgd_serve_*` series in parallel for the global view.
 #[derive(Default)]
 pub struct ServeStats {
     requests: AtomicU64,
     rows: AtomicU64,
     batches: AtomicU64,
-    /// Total latency samples ever written (ring-overwrite cursor).
-    lat_cursor: AtomicU64,
-    latencies_ms: Mutex<Vec<f64>>,
+    /// Per-instance enqueue→reply latency histogram, in seconds.
+    latency: obs::Histogram,
+}
+
+/// Registered (process-global) serving series, resolved once: updates
+/// on the batch path are plain atomic ops, never a registry lock.
+struct ServeMetrics {
+    requests: obs::Counter,
+    rows: obs::Counter,
+    batches: obs::Counter,
+    batch_fill: obs::Gauge,
+    latency: obs::Histogram,
+    infer: obs::Histogram,
+}
+
+fn serve_metrics() -> &'static ServeMetrics {
+    static M: OnceLock<ServeMetrics> = OnceLock::new();
+    M.get_or_init(|| ServeMetrics {
+        requests: obs::counter("mgd_serve_requests_total"),
+        rows: obs::counter("mgd_serve_rows_total"),
+        batches: obs::counter("mgd_serve_batches_total"),
+        batch_fill: obs::gauge("mgd_serve_batch_fill"),
+        latency: obs::histogram("mgd_serve_request_latency_seconds"),
+        infer: obs::histogram("mgd_serve_infer_seconds"),
+    })
 }
 
 /// Aggregate serving numbers (the `infer_summary` telemetry payload).
@@ -104,30 +131,32 @@ impl ServeStats {
         Arc::new(ServeStats::default())
     }
 
-    fn record_batch(&self, requests: usize, rows: usize, latencies: &[f64]) {
+    /// Record one answered batch.  `latencies_s` holds each rider's
+    /// enqueue→reply latency in seconds; both the per-instance histogram
+    /// and the registered `mgd_serve_*` series are fed.
+    fn record_batch(&self, requests: usize, rows: usize, latencies_s: &[f64]) {
         self.requests.fetch_add(requests as u64, Ordering::Relaxed);
         self.rows.fetch_add(rows as u64, Ordering::Relaxed);
         self.batches.fetch_add(1, Ordering::Relaxed);
-        let mut ring = self.latencies_ms.lock().unwrap();
-        for &l in latencies {
-            let i = self.lat_cursor.fetch_add(1, Ordering::Relaxed) as usize;
-            if ring.len() < LATENCY_RING {
-                ring.push(l);
-            } else {
-                ring[i % LATENCY_RING] = l;
-            }
+        let m = serve_metrics();
+        m.requests.add(requests as u64);
+        m.rows.add(rows as u64);
+        m.batches.inc();
+        for &l in latencies_s {
+            self.latency.observe(l);
+            m.latency.observe(l);
         }
     }
 
-    /// Current aggregate numbers (p50/p99 over the latency reservoir).
+    /// Current aggregate numbers (p50/p99 over this instance's latency
+    /// histogram, interpolated within log-scale buckets).
     pub fn summary(&self) -> ServeSummary {
-        let ring = self.latencies_ms.lock().unwrap();
         ServeSummary {
             requests: self.requests.load(Ordering::Relaxed),
             rows: self.rows.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
-            p50_ms: percentile_ms(&ring, 0.50),
-            p99_ms: percentile_ms(&ring, 0.99),
+            p50_ms: self.latency.quantile(0.50) * 1e3,
+            p99_ms: self.latency.quantile(0.99) * 1e3,
         }
     }
 }
@@ -243,7 +272,9 @@ fn batch_loop(
         }
         let t_infer = Instant::now();
         let result = engine.infer_into(&xbuf, rows_total, &mut scratch, &mut outbuf);
-        let infer_ms = t_infer.elapsed().as_secs_f64() * 1e3;
+        let infer_s = t_infer.elapsed().as_secs_f64();
+        serve_metrics().infer.observe(infer_s);
+        let infer_ms = infer_s * 1e3;
 
         latencies.clear();
         match result {
@@ -253,9 +284,8 @@ fn batch_loop(
                 for job in jobs {
                     let block = &outbuf[offset * k..(offset + job.n_rows) * k];
                     offset += job.n_rows;
-                    let out =
-                        InferOutput { logits: block.to_vec(), argmax: engine.argmax(block) };
-                    latencies.push(done.duration_since(job.enqueued).as_secs_f64() * 1e3);
+                    let out = InferOutput { logits: block.to_vec(), argmax: engine.argmax(block) };
+                    latencies.push(done.duration_since(job.enqueued).as_secs_f64());
                     // A client that gave up mid-wait is not an error.
                     let _ = job.reply.send(Ok(out));
                 }
@@ -267,13 +297,14 @@ fn batch_loop(
                 let done = Instant::now();
                 let msg = format!("{e:#}");
                 for job in jobs {
-                    latencies.push(done.duration_since(job.enqueued).as_secs_f64() * 1e3);
+                    latencies.push(done.duration_since(job.enqueued).as_secs_f64());
                     let _ = job.reply.send(Err(anyhow!("batched inference failed: {msg}")));
                 }
             }
         }
         let n_requests = latencies.len();
         stats.record_batch(n_requests, rows_total, &latencies);
+        serve_metrics().batch_fill.set(rows_total as f64 / max_rows as f64);
         telemetry.emit(Event::InferBatch {
             requests: n_requests,
             rows: rows_total,

@@ -288,11 +288,16 @@ fn handle_request(
             p::put_u32_array(&mut reply, &out.argmax);
             reply
         }
+        p::Op::Stats => {
+            // Live metrics snapshot (same reply as the training server):
+            // the process-global obs registry as one JSON document.
+            crate::obs::snapshot().to_json().dump().into_bytes()
+        }
         p::Op::Bye => return Ok(None),
         other => {
             bail!(
                 "opcode {other:?} is a training-protocol request; this endpoint is a \
-                 read-only inference server (Hello, ModelSpec, Ping, Infer, Bye)"
+                 read-only inference server (Hello, ModelSpec, Ping, Infer, Stats, Bye)"
             );
         }
     };
@@ -405,6 +410,29 @@ mod tests {
         assert!(format!("{err:#}").contains("read-only inference server"), "{err:#}");
         // The dispatcher still works after every rejection.
         assert!(handle_request(&slot, &client, p::Op::Hello, &[]).is_ok());
+        drop(client);
+        batcher.shutdown();
+    }
+
+    #[test]
+    fn dispatch_stats_returns_registry_snapshot() {
+        crate::obs::counter("test_serve_stats_total").inc();
+        let (slot, batcher) = test_parts();
+        let client = batcher.client();
+        // An Infer first, so serve-side series exist in the snapshot.
+        let mut req = Vec::new();
+        p::put_u32(&mut req, 1);
+        p::put_array(&mut req, &[0.5, -0.25, 1.0]);
+        handle_request(&slot, &client, p::Op::Infer, &req).unwrap();
+        let reply = handle_request(&slot, &client, p::Op::Stats, &[]).unwrap().unwrap();
+        let doc = crate::json::Json::parse(std::str::from_utf8(&reply).unwrap()).unwrap();
+        let counters = doc.field("counters").unwrap();
+        assert!(counters.field("test_serve_stats_total").unwrap().as_u64().unwrap() >= 1);
+        assert!(counters.field("mgd_serve_requests_total").unwrap().as_u64().unwrap() >= 1);
+        let hists = doc.field("histograms").unwrap();
+        let lat = hists.field("mgd_serve_request_latency_seconds").unwrap();
+        assert!(lat.field("count").unwrap().as_u64().unwrap() >= 1);
+        assert!(lat.field("p99").unwrap().as_f64().unwrap() >= 0.0);
         drop(client);
         batcher.shutdown();
     }

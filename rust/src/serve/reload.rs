@@ -97,6 +97,8 @@ pub fn spawn_watcher(
                         Ok((step, model))
                     }) {
                     Ok((step, model)) => {
+                        crate::obs::counter_with("mgd_serve_reloads_total", &[("outcome", "ok")])
+                            .inc();
                         eprintln!(
                             "[serve-infer] reloaded {} (step {step}, model {model})",
                             path.display()
@@ -108,6 +110,11 @@ pub fn spawn_watcher(
                         });
                     }
                     Err(e) => {
+                        crate::obs::counter_with(
+                            "mgd_serve_reloads_total",
+                            &[("outcome", "rejected")],
+                        )
+                        .inc();
                         eprintln!(
                             "[serve-infer] reload of {} rejected: {e:#} — previous engine \
                              keeps serving",
