@@ -1,7 +1,7 @@
 //! Inference serving throughput: requests/sec, inferences (rows)/sec and
 //! latency percentiles vs the rows-per-request batch size.
 //!
-//! Two sections:
+//! Three sections:
 //!
 //! 1. **engine-direct** — the forward executor alone, no wire: rows/sec
 //!    at batch 1/8/64 (the pure amortization of the per-forward fixed
@@ -12,6 +12,10 @@
 //!    subsystem is rows/sec at batch 64 ≥ 4× rows/sec at batch 1 on the
 //!    same engine — the same per-dispatch batching discipline that the
 //!    `CostMany` probe engine proved on the training side.
+//! 3. **sessions** — throughput vs concurrent sessions (1/8/64/256),
+//!    with the active set capped so the sweep grows the *idle* majority:
+//!    on the event-loop session layer an idle session is a slab slot,
+//!    not a thread, so the curve should stay flat.
 //!
 //! ```text
 //! cargo bench --bench infer_throughput
@@ -167,6 +171,96 @@ fn bench_served(quick: bool) -> anyhow::Result<(Vec<Json>, f64)> {
     Ok((rows_json, speedup))
 }
 
+/// Concurrent-session sweep for the event-loop session layer.
+const SESSION_COUNTS: &[usize] = &[1, 8, 64, 256];
+
+/// How many of the sweep's sessions actively send requests; the rest
+/// connect and park, costing the server a slab slot instead of a
+/// thread.  Throughput staying flat as the idle majority grows is the
+/// curve this section exists to record.
+const ACTIVE_CAP: usize = 8;
+
+fn bench_sessions(quick: bool) -> anyhow::Result<Vec<Json>> {
+    println!();
+    println!("sessions (loopback TCP, batch 8, active sessions capped at {ACTIVE_CAP}):");
+    println!(
+        "{:<10} {:>8} {:>8} {:>12} {:>14}",
+        "sessions", "active", "reqs", "req/s", "rows/sec"
+    );
+    let batch = 8usize;
+    let total_reqs: usize = if quick { 1_600 } else { 16_000 };
+    let mut rows_json = Vec::new();
+    for &n in SESSION_COUNTS {
+        let engine = bench_engine();
+        let d = engine.input_len();
+        let active = n.min(ACTIVE_CAP);
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?.to_string();
+        let server = std::thread::spawn(move || {
+            serve_infer(
+                engine,
+                listener,
+                ServeInferOptions {
+                    // Idle sessions never send a request frame, so only
+                    // the active ones consume the session budget.
+                    max_sessions: Some(active),
+                    policy: BatchPolicy {
+                        max_batch_rows: 64,
+                        max_delay: std::time::Duration::ZERO,
+                    },
+                    ..Default::default()
+                },
+            )
+            .unwrap()
+        });
+        // Park the idle majority first, so the active traffic below is
+        // measured with every one of the n sessions on the loop.
+        let parked: Vec<std::net::TcpStream> = (0..n - active)
+            .map(|_| std::net::TcpStream::connect(&addr))
+            .collect::<std::io::Result<_>>()?;
+        let reqs_per_client = (total_reqs / active).max(16);
+        let t0 = Instant::now();
+        let clients: Vec<_> = (0..active)
+            .map(|_| {
+                let addr = addr.clone();
+                std::thread::spawn(move || -> anyhow::Result<f32> {
+                    let mut client = InferenceClient::connect(&addr)?;
+                    let x = input_rows(batch, d);
+                    let mut sink = 0f32;
+                    for _ in 0..reqs_per_client {
+                        let (logits, _) = client.infer(&x, batch)?;
+                        sink += logits[0];
+                    }
+                    client.close();
+                    Ok(sink)
+                })
+            })
+            .collect();
+        let mut sink = 0f32;
+        for client in clients {
+            sink += client.join().expect("client thread")?;
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        server.join().expect("server thread");
+        drop(parked);
+        let reqs = active * reqs_per_client;
+        let req_per_sec = reqs as f64 / secs;
+        let rows_per_sec = (reqs * batch) as f64 / secs;
+        println!(
+            "{n:<10} {active:>8} {reqs:>8} {req_per_sec:>12.0} {rows_per_sec:>14.0}   \
+             (sink {sink:.3})"
+        );
+        rows_json.push(json_obj(vec![
+            ("sessions", Json::Num(n as f64)),
+            ("active", Json::Num(active as f64)),
+            ("requests", Json::Num(reqs as f64)),
+            ("req_per_sec", Json::Num(req_per_sec)),
+            ("rows_per_sec", Json::Num(rows_per_sec)),
+        ]));
+    }
+    Ok(rows_json)
+}
+
 fn main() -> anyhow::Result<()> {
     let quick = quick_mode();
     if quick {
@@ -174,11 +268,13 @@ fn main() -> anyhow::Result<()> {
     }
     let direct = bench_engine_direct(quick);
     let (served, speedup) = bench_served(quick)?;
+    let sessions = bench_sessions(quick)?;
     emit_bench_json(&json_obj(vec![
         ("bench", Json::Str("infer_throughput".into())),
         ("quick", Json::Bool(quick)),
         ("engine_direct", Json::Arr(direct)),
         ("served", Json::Arr(served)),
+        ("sessions", Json::Arr(sessions)),
         ("batch64_over_batch1_rows_per_sec", Json::Num(speedup)),
     ]));
     Ok(())

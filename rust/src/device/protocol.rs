@@ -369,6 +369,22 @@ pub fn write_err(w: &mut impl Write, msg: &str) -> Result<()> {
     Ok(())
 }
 
+/// [`write_ok`] rendered into an owned buffer — the event-loop servers
+/// queue whole frames into a session's write buffer instead of writing
+/// to the socket directly.
+pub fn ok_frame(payload: &[u8]) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(5 + payload.len());
+    write_ok(&mut buf, payload).expect("writing a frame into a Vec cannot fail");
+    buf
+}
+
+/// [`write_err`] rendered into an owned buffer.
+pub fn err_frame(msg: &str) -> Vec<u8> {
+    let mut buf = Vec::with_capacity(5 + msg.len());
+    write_err(&mut buf, msg).expect("writing a frame into a Vec cannot fail");
+    buf
+}
+
 /// Read a response; errors become `anyhow::Error`.
 pub fn read_response(r: &mut impl Read) -> Result<Vec<u8>> {
     let mut head = [0u8; 5];

@@ -2,34 +2,46 @@
 //! devices over TCP.
 //!
 //! The seed implementation handled one session at a time — one chip, one
-//! lab bench.  The fleet version serves a whole [`DevicePool`]: one accept
-//! loop, one thread per client session, and a pool lease held for the
-//! session's lifetime (the protocol is stateful — `LoadBatch` … `Cost`
-//! sequences must hit the same device).  A client that connects while
-//! every device is leased out waits inside the lease, bounded by
-//! [`ServeOptions::lease_timeout`]; on timeout its first request is
-//! answered with a clean protocol error instead of a hang.
+//! lab bench.  The fleet version serves a whole [`DevicePool`]: each
+//! client session holds a pool lease for its lifetime (the protocol is
+//! stateful — `LoadBatch` … `Cost` sequences must hit the same device).
+//! A client that connects while every device is leased out waits for
+//! one, bounded by [`ServeOptions::lease_timeout`]; on timeout its first
+//! request is answered with a clean protocol error instead of a hang.
 //!
-//! Plain `std::net` blocking I/O (this offline build has no async
-//! runtime; the protocol is strictly request/response so blocking I/O is
-//! exact).
+//! Transport is the shared [`crate::net`] event loop: this module keeps
+//! only protocol dispatch ([`handle_request`]) and session policy
+//! ([`DeviceSession`]).  Slow device work runs on the loop's bounded
+//! worker pool (one worker per pooled device by default), so thread
+//! count is O(devices), not O(sessions), and idle keep-alive sessions
+//! cost ~nothing.  Device leases are acquired *nonblockingly*
+//! ([`DevicePool::lease_poll`]) with a short retry timer — a session
+//! waiting for a device parks in the loop, never on a thread — and a
+//! closing session retriggers its waiting siblings immediately, so the
+//! condvar handoff of the blocking servers is preserved.
 //!
 //! `Stats = 0x0D` is the one stateless exception: it is answered from
 //! the process-global [`crate::obs`] registry *before* (and without)
 //! taking a device lease, so a metrics poller (`mgd top`) neither
-//! consumes hardware nor waits behind a training session.
+//! consumes hardware nor waits behind a training session.  Stats/Bye-
+//! only sessions do not consume the `--max-sessions` budget either: the
+//! budget counts device sessions, not pollers.
 
-use std::io::{BufReader, BufWriter};
-use std::net::{TcpListener, TcpStream};
+use std::net::TcpListener;
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use super::protocol as p;
 use super::HardwareDevice;
-use crate::fleet::pool::DevicePool;
+use crate::fleet::pool::{DeviceLease, DevicePool, LeasePoll};
 use crate::fleet::telemetry::{Event, Telemetry};
+use crate::net::{
+    Action, EventLoop, Frame, Framing, NetOptions, Service, SessionBudget, SessionCx,
+    SessionHandler, Timeouts,
+};
+use crate::obs::http::metrics_service;
 
 /// Pooled-server knobs.
 pub struct ServeOptions {
@@ -62,9 +74,30 @@ pub fn serve(
     addr: &str,
     max_sessions: Option<usize>,
 ) -> Result<()> {
-    let listener = TcpListener::bind(addr)?;
-    serve_on(device, listener, max_sessions)
+    serve_with(device, addr, max_sessions, NetOptions::default())
 }
+
+/// [`serve`] with explicit transport knobs (worker count, idle/write
+/// deadlines, a shared-loop metrics listener).
+pub fn serve_with(
+    device: Box<dyn HardwareDevice>,
+    addr: &str,
+    max_sessions: Option<usize>,
+    net: NetOptions,
+) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    let pool = DevicePool::new(vec![device]);
+    serve_pool_with(
+        pool,
+        listener,
+        ServeOptions { max_sessions, lease_timeout: EFFECTIVELY_FOREVER, ..Default::default() },
+        net,
+    )
+}
+
+/// ~10 years; `Duration::MAX` risks platform-specific saturation quirks
+/// in deadline arithmetic.
+const EFFECTIVELY_FOREVER: Duration = Duration::from_secs(315_360_000);
 
 /// Serve a single device on an already-bound listener (lets callers bind
 /// port 0 and learn the real address before serving).
@@ -78,178 +111,229 @@ pub fn serve_on(
     max_sessions: Option<usize>,
 ) -> Result<()> {
     let pool = DevicePool::new(vec![device]);
-    // ~10 years; Duration::MAX risks platform-specific saturation quirks
-    // inside Condvar::wait_timeout.
-    let effectively_forever = Duration::from_secs(315_360_000);
     serve_pool(
         pool,
         listener,
-        ServeOptions { max_sessions, lease_timeout: effectively_forever, ..Default::default() },
+        ServeOptions { max_sessions, lease_timeout: EFFECTIVELY_FOREVER, ..Default::default() },
     )
 }
 
 /// Serve a whole device pool: concurrent sessions, each holding one
 /// leased device for its lifetime.
-///
-/// Trust model: lab-bench instrument on a trusted network (same as the
-/// seed's serial server).  A connected-but-silent client parks its
-/// session thread in a blocking read, exactly as it parked the whole
-/// server before; threads are reaped as sessions end, but a hostile
-/// flood of idle connections is out of scope here — front with a real
-/// proxy if the listener ever faces one.
 pub fn serve_pool(
     pool: Arc<DevicePool>,
     listener: TcpListener,
     opts: ServeOptions,
+) -> Result<()> {
+    serve_pool_with(pool, listener, opts, NetOptions::default())
+}
+
+/// [`serve_pool`] with explicit transport knobs.  Sessions multiplex on
+/// one event loop; device work runs on `net.workers` worker threads
+/// (default: one per pooled device — more workers than devices cannot
+/// help, every request needs a lease).
+pub fn serve_pool_with(
+    pool: Arc<DevicePool>,
+    listener: TcpListener,
+    opts: ServeOptions,
+    net: NetOptions,
 ) -> Result<()> {
     eprintln!(
         "[device-server] pool of {} device(s) listening on {}",
         pool.size(),
         listener.local_addr()?
     );
-    let mut handles = Vec::new();
-    let mut accepted = 0usize;
-    // On an accept error, fall through to the join below before
-    // returning: callers sharing the pool must see every session lease
-    // released once serve_pool returns.
-    let mut accept_err: Option<anyhow::Error> = None;
-    for stream in listener.incoming() {
-        let stream = match stream {
-            Ok(stream) => stream,
-            Err(e) => {
-                accept_err = Some(e.into());
-                break;
-            }
-        };
-        accepted += 1;
-        let session = accepted as u64;
-        let peer = stream
-            .peer_addr()
-            .map(|a| a.to_string())
-            .unwrap_or_else(|_| "unknown".to_string());
+    let workers = if net.workers > 0 { net.workers } else { pool.size().max(1) };
+    let service = Arc::new(DeviceService {
+        pool,
+        budget: SessionBudget::new(opts.max_sessions),
+        telemetry: opts.telemetry.clone(),
+        lease_timeout: opts.lease_timeout,
+        timeouts: Timeouts { idle: net.idle_timeout, write: net.write_timeout },
+    });
+    let mut el = EventLoop::new(workers)?;
+    el.add_listener(listener, service, true)?;
+    if let Some(metrics) = net.metrics {
+        el.add_listener(metrics, metrics_service(), false)?;
+    }
+    el.run()
+}
+
+/// Poll cadence while a session waits for a device lease.  A closing
+/// sibling retriggers waiters immediately, so this only bounds how fast
+/// a session notices a device freed by *another pool user* (heartbeat
+/// monitors, co-located trainers).
+const LEASE_RETRY: Duration = Duration::from_millis(25);
+
+/// The pool server as an event-loop [`Service`].
+struct DeviceService {
+    pool: Arc<DevicePool>,
+    budget: Arc<SessionBudget>,
+    telemetry: Arc<Telemetry>,
+    lease_timeout: Duration,
+    timeouts: Timeouts,
+}
+
+impl Service for DeviceService {
+    fn framing(&self) -> Framing {
+        Framing::Binary
+    }
+
+    fn open(&self, session: u64, peer: &str) -> Box<dyn SessionHandler> {
         eprintln!("[device-server] session {session} from {peer}");
-        opts.telemetry.emit(Event::SessionOpened { session, peer });
-        let pool = pool.clone();
-        let telemetry = opts.telemetry.clone();
-        let lease_timeout = opts.lease_timeout;
-        let handle = std::thread::Builder::new()
-            .name(format!("mgd-session-{session}"))
-            .spawn(move || {
-                let mut requests = 0u64;
-                match handle_session(stream, &pool, lease_timeout, &mut requests) {
-                    Ok(()) => telemetry.emit(Event::SessionClosed {
-                        session,
-                        requests,
-                        ok: true,
-                        error: None,
-                    }),
-                    Err(e) => {
-                        eprintln!("[device-server] session {session} ended: {e:#}");
-                        telemetry.emit(Event::SessionClosed {
-                            session,
-                            requests,
-                            ok: false,
-                            error: Some(format!("{e:#}")),
-                        });
-                    }
-                }
-            })
-            .expect("spawning device-server session thread");
-        handles.push(handle);
-        // Reap finished sessions so a serve-forever server does not grow an
-        // unbounded handle list (dropping a finished handle just detaches).
-        handles.retain(|h| !h.is_finished());
-        if let Some(max) = opts.max_sessions {
-            if accepted >= max {
-                break;
-            }
-        }
+        self.telemetry.emit(Event::SessionOpened { session, peer: peer.to_string() });
+        Box::new(DeviceSession {
+            pool: self.pool.clone(),
+            budget: self.budget.clone(),
+            telemetry: self.telemetry.clone(),
+            session,
+            requests: 0,
+            counted: false,
+            lease: None,
+            pending: None,
+            lease_started: None,
+            lease_timeout: self.lease_timeout,
+            closed_error: None,
+        })
     }
-    for handle in handles {
-        let _ = handle.join();
+
+    fn timeouts(&self) -> Timeouts {
+        self.timeouts
     }
-    match accept_err {
-        Some(e) => Err(e),
-        None => Ok(()),
+
+    fn is_done(&self) -> bool {
+        self.budget.done()
     }
 }
 
-/// One client session over a pool lease.  Counts served requests into
-/// `requests` (kept accurate on the error path for telemetry).
-fn handle_session(
-    stream: TcpStream,
-    pool: &Arc<DevicePool>,
+/// One client session over a pool lease.
+///
+/// Request counting matches the blocking server exactly: every
+/// *processed* frame counts (lease-free Stats/Bye included), decode
+/// errors and a lease-failed first request do not.
+struct DeviceSession {
+    pool: Arc<DevicePool>,
+    budget: Arc<SessionBudget>,
+    telemetry: Arc<Telemetry>,
+    session: u64,
+    requests: u64,
+    /// Whether this session has consumed a `--max-sessions` slot.
+    counted: bool,
+    lease: Option<DeviceLease>,
+    /// The frame awaiting device work (set before `Blocking`/`Wait`).
+    pending: Option<(p::Op, Vec<u8>)>,
+    lease_started: Option<Instant>,
     lease_timeout: Duration,
-    requests: &mut u64,
-) -> Result<()> {
-    stream.set_nodelay(true).ok();
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut writer = BufWriter::new(stream);
-    // Stats (and a bare Bye) are answered before — and without — a
-    // device lease: a metrics poller must never consume hardware or wait
-    // behind a training session.  The first stateful request below
-    // triggers the lease for the rest of the session.
-    let (first_op, first_payload) = loop {
-        let (op, payload) = match p::read_request(&mut reader) {
-            Ok(req) => req,
-            Err(e) => {
-                // Hangup before any device work (a pure Stats poller
-                // closing without Bye lands here) — or a live connection
-                // that sent garbage; tell the latter why before closing.
-                let _ = p::write_err(&mut writer, &format!("{e:#}"));
-                return Ok(());
+    /// Set when the session ends in error (telemetry `ok:false`).
+    closed_error: Option<String>,
+}
+
+impl DeviceSession {
+    /// One nonblocking lease attempt; grants proceed to device work,
+    /// contention arms the retry timer, terminal failures answer the
+    /// pending request with the reason and close.
+    fn lease_step(&mut self) -> Action {
+        let started = *self.lease_started.get_or_insert_with(Instant::now);
+        let waited = started.elapsed();
+        let expired = waited >= self.lease_timeout;
+        match self.pool.lease_poll(waited, self.lease_timeout, expired) {
+            LeasePoll::Granted(lease) => {
+                self.lease = Some(lease);
+                Action::Blocking
             }
-        };
-        match op {
-            p::Op::Stats => {
-                *requests += 1;
-                p::write_ok(&mut writer, &stats_reply())?;
+            LeasePoll::Retry => {
+                let remaining = self.lease_timeout.saturating_sub(waited);
+                Action::Wait(LEASE_RETRY.min(remaining).max(Duration::from_millis(1)))
             }
-            p::Op::Bye => {
-                *requests += 1;
-                p::write_ok(&mut writer, &[])?;
-                return Ok(());
+            LeasePoll::Failed(e) => {
+                // Answer the client's pending first request (Hello, for
+                // RemoteDevice) with the reason before hanging up.
+                let msg = format!("{e:#}");
+                self.closed_error = Some(msg.clone());
+                Action::ReplyClose(p::err_frame(&msg))
             }
-            other => break (other, payload),
         }
-    };
-    // Lease for the rest of the session: the protocol is stateful, so
-    // every device request of a session must land on the same device.
-    let mut lease = match pool.lease(lease_timeout) {
-        Ok(lease) => lease,
-        Err(e) => {
-            // Answer the client's pending first request (Hello, for
-            // RemoteDevice) with the reason before hanging up.
-            let _ = p::write_err(&mut writer, &format!("{e:#}"));
-            return Err(e);
-        }
-    };
-    let mut next = Some((first_op, first_payload));
-    loop {
-        let (op, payload) = match next.take() {
-            Some(req) => req,
-            None => match p::read_request(&mut reader) {
-                Ok(req) => req,
-                Err(e) => {
-                    // Usually the client hung up without Bye — fine.  If
-                    // the connection is actually alive (e.g. an oversized
-                    // frame tripped MAX_FRAME_BYTES), tell it why before
-                    // closing instead of a silent EOF; a real hangup
-                    // ignores this.
-                    let _ = p::write_err(&mut writer, &format!("{e:#}"));
-                    return Ok(());
+    }
+}
+
+impl SessionHandler for DeviceSession {
+    fn on_frame(&mut self, frame: Frame, _cx: &SessionCx) -> Action {
+        let Frame::Binary { op, payload } = frame else { return Action::Close };
+        if self.lease.is_none() {
+            // Stats (and a bare Bye) are answered before — and without —
+            // a device lease: a metrics poller must never consume
+            // hardware, wait behind a training session, or use up the
+            // session budget.  The first stateful request below triggers
+            // the lease for the rest of the session.
+            match op {
+                p::Op::Stats => {
+                    self.requests += 1;
+                    return Action::Reply(p::ok_frame(&stats_reply()));
                 }
-            },
-        };
-        *requests += 1;
-        match handle_request(lease.device(), op, &payload) {
-            Ok(Some(reply)) => p::write_ok(&mut writer, &reply)?,
-            Ok(None) => {
-                p::write_ok(&mut writer, &[])?;
-                return Ok(()); // Bye
+                p::Op::Bye => {
+                    self.requests += 1;
+                    return Action::ReplyClose(p::ok_frame(&[]));
+                }
+                _ => {}
             }
-            Err(e) => p::write_err(&mut writer, &format!("{e:#}"))?,
+            if !self.counted {
+                self.counted = self.budget.try_start();
+                if !self.counted {
+                    return Action::ReplyClose(p::err_frame(
+                        "server is draining: session budget (--max-sessions) exhausted",
+                    ));
+                }
+            }
+            self.pending = Some((op, payload));
+            self.lease_started = Some(Instant::now());
+            return self.lease_step();
         }
+        self.pending = Some((op, payload));
+        Action::Blocking
+    }
+
+    fn on_decode_error(&mut self, msg: &str) -> Action {
+        // A malformed first frame is a (broken) device client, not a
+        // metrics poller: it consumes budget so a bounded server still
+        // drains.  The reply closes either way, so `try_start`'s verdict
+        // does not gate the answer.
+        if !self.counted {
+            self.counted = self.budget.try_start();
+        }
+        Action::ReplyClose(p::err_frame(msg))
+    }
+
+    fn blocking(&mut self) -> Action {
+        let Some((op, payload)) = self.pending.take() else { return Action::Close };
+        self.requests += 1;
+        let lease = self.lease.as_mut().expect("device work dispatched without a lease");
+        match handle_request(lease.device(), op, &payload) {
+            Ok(Some(reply)) => Action::Reply(p::ok_frame(&reply)),
+            Ok(None) => Action::ReplyClose(p::ok_frame(&[])), // Bye
+            Err(e) => Action::Reply(p::err_frame(&format!("{e:#}"))),
+        }
+    }
+
+    fn on_timer(&mut self) -> Action {
+        self.lease_step()
+    }
+
+    fn on_close(&mut self) {
+        if self.counted {
+            self.budget.finish();
+        }
+        if let Some(err) = &self.closed_error {
+            eprintln!("[device-server] session {} ended: {err}", self.session);
+        }
+        self.telemetry.emit(Event::SessionClosed {
+            session: self.session,
+            requests: self.requests,
+            ok: self.closed_error.is_none(),
+            error: self.closed_error.clone(),
+        });
+        // The lease itself (if any) releases when the handler drops,
+        // right after this hook — on the loop thread, so a waiting
+        // sibling's retry timer fires with the device already free.
     }
 }
 
@@ -385,6 +469,8 @@ fn handle_request(
 mod tests {
     use super::*;
     use crate::device::NativeDevice;
+    use std::io::{BufReader, BufWriter};
+    use std::net::TcpStream;
 
     #[test]
     fn hello_reports_io_shape() {
@@ -567,7 +653,10 @@ mod tests {
                     pool,
                     listener,
                     ServeOptions {
-                        max_sessions: Some(2),
+                        // One budgeted session: the training client.  The
+                        // Stats poller must ride for free, or this server
+                        // would never drain.
+                        max_sessions: Some(1),
                         // Short: if the Stats session wrongly tried to
                         // lease, it would fail here instead of hanging.
                         lease_timeout: Duration::from_millis(200),

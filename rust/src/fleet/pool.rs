@@ -427,6 +427,49 @@ impl DevicePool {
         }
     }
 
+    /// One nonblocking step of [`DevicePool::lease`] for event-loop
+    /// callers that must not park a thread in the pool's condvar: try
+    /// once, and either grant, report a terminal failure, or ask the
+    /// caller to poll again later.  `waited` is how long the caller has
+    /// been retrying and `timeout` the configured lease timeout (both
+    /// only shape the error reporting); `expired` is the caller's own
+    /// deadline verdict — only an expired retry counts as a lease
+    /// timeout, so poll-grants never skew the timeout counter.  Error
+    /// messages match the blocking path byte for byte.
+    pub fn lease_poll(&self, waited: Duration, timeout: Duration, expired: bool) -> LeasePoll {
+        let mut slots = self.shared.slots.lock().unwrap();
+        if let Some(idx) = slots
+            .iter()
+            .position(|s| s.device.is_some() && s.health != HealthState::Quarantined)
+        {
+            let lease = self.grant(&mut slots, idx, waited);
+            return LeasePoll::Granted(lease);
+        }
+        if slots.is_empty() {
+            return LeasePoll::Failed(anyhow::anyhow!("device pool is empty — nothing to lease"));
+        }
+        let eligible = slots.iter().filter(|s| s.health != HealthState::Quarantined).count();
+        if eligible == 0 {
+            let n = slots.len();
+            let quarantined = slots.iter().filter(|s| s.health == HealthState::Quarantined).count();
+            return LeasePoll::Failed(anyhow::anyhow!(
+                "no eligible device in rotation (pool of {n}: {quarantined} quarantined, \
+                 0 excluded)"
+            ));
+        }
+        if expired {
+            let n = slots.len();
+            drop(slots);
+            self.shared.stats.lock().unwrap().lease_timeouts += 1;
+            return LeasePoll::Failed(anyhow::anyhow!(
+                "device lease timed out after {:.1}s ({n} devices, all eligible ones \
+                 leased out)",
+                timeout.as_secs_f64()
+            ));
+        }
+        LeasePoll::Retry
+    }
+
     /// Lease `n` devices at once (the data-parallel entry point),
     /// skipping quarantined slots.  Waits up to `timeout` overall; on
     /// failure every already-acquired lease is released *before* the
@@ -630,6 +673,17 @@ impl DevicePool {
     }
 }
 
+/// Outcome of one [`DevicePool::lease_poll`] step.
+pub enum LeasePoll {
+    /// A device was free: here is the lease.
+    Granted(DeviceLease),
+    /// Everything eligible is leased out right now — poll again.
+    Retry,
+    /// Terminal: empty pool, nothing eligible, or the caller's deadline
+    /// expired.  Same error text the blocking lease path produces.
+    Failed(anyhow::Error),
+}
+
 /// Exclusive RAII access to one pooled device.
 pub struct DeviceLease {
     shared: Arc<PoolShared>,
@@ -736,6 +790,33 @@ mod tests {
         let c = lease.cost(None).unwrap();
         assert!(c.is_finite());
         assert_eq!(lease.device().get_params().unwrap().len(), 9);
+    }
+
+    #[test]
+    fn lease_poll_grants_retries_and_expires() {
+        let pool = pool_of(1);
+        let zero = Duration::ZERO;
+        let timeout = Duration::from_millis(300);
+        let held = match pool.lease_poll(zero, timeout, false) {
+            LeasePoll::Granted(lease) => lease,
+            _ => panic!("a free device must grant immediately"),
+        };
+        assert!(matches!(pool.lease_poll(zero, timeout, false), LeasePoll::Retry));
+        assert_eq!(pool.stats().lease_timeouts, 0, "retries must not count as timeouts");
+        match pool.lease_poll(timeout, timeout, true) {
+            LeasePoll::Failed(e) => {
+                assert!(e.to_string().contains("timed out after 0.3s"), "{e:#}")
+            }
+            _ => panic!("an expired retry must fail"),
+        }
+        assert_eq!(pool.stats().lease_timeouts, 1);
+        drop(held);
+        assert!(matches!(pool.lease_poll(zero, timeout, false), LeasePoll::Granted(_)));
+        let empty = DevicePool::new(Vec::new());
+        match empty.lease_poll(zero, timeout, false) {
+            LeasePoll::Failed(e) => assert!(e.to_string().contains("empty"), "{e:#}"),
+            _ => panic!("an empty pool must fail terminally"),
+        }
     }
 
     #[test]

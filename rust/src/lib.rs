@@ -40,6 +40,13 @@
 //!   micro-batching of concurrent requests, a multi-session TCP server
 //!   (`mgd serve-infer`, wire opcode `Infer = 0x0C`), and hot checkpoint
 //!   reload gated on the model's spec hash.
+//! - [`net`] — the unified nonblocking session layer: one epoll-backed
+//!   event loop (portable `poll(2)` fallback), a framed-session state
+//!   machine with idle/write deadlines and write backpressure, and a
+//!   [`net::Service`] dispatch trait.  The device server, the inference
+//!   server and the metrics exporter are all implementations riding the
+//!   same loop; blocking device work runs on a bounded worker pool, so
+//!   thread count is O(workers), not O(sessions).
 //! - [`obs`] — live observability: a process-global lock-free metrics
 //!   registry (counters, gauges, log-scale histograms, span timers)
 //!   instrumenting trainer, exec, fleet and serving layers, exposed via
@@ -60,6 +67,7 @@ pub mod filters;
 pub mod fleet;
 pub mod metrics;
 pub mod model;
+pub mod net;
 pub mod noise;
 pub mod obs;
 pub mod optim;

@@ -122,7 +122,13 @@ SERVE OPTIONS:
   --model M --device native|pjrt --addr HOST:PORT --max-sessions N
   --defects F       activation-defect strength (native device, Fig. 10)
   --metrics-addr A  also serve Prometheus-text /metrics + /healthz over
-                    HTTP at A (e.g. 127.0.0.1:9464)
+                    HTTP at A (e.g. 127.0.0.1:9464), on the same event
+                    loop — Stats/metrics probes never count toward
+                    --max-sessions
+  --idle-timeout-secs N   close sessions silent for N seconds (0 = never,
+                    the default)
+  --write-timeout-secs N  close sessions that stop reading their replies
+                    for N seconds (0 = never, the default)
 
 SERVE-INFER OPTIONS:
   --checkpoint-dir D  serve D/checkpoint.json and hot-reload it when the
@@ -136,7 +142,13 @@ SERVE-INFER OPTIONS:
   --max-sessions N  exit after N sessions          (default: serve forever)
   --telemetry T     JSONL events ('-' = stderr, else a file path)
   --metrics-addr A  also serve Prometheus-text /metrics + /healthz over
-                    HTTP at A (e.g. 127.0.0.1:9464)
+                    HTTP at A (e.g. 127.0.0.1:9464), on the same event
+                    loop — Stats/metrics probes never count toward
+                    --max-sessions
+  --idle-timeout-secs N   close sessions silent for N seconds (0 = never,
+                    the default)
+  --write-timeout-secs N  close sessions that stop reading their replies
+                    for N seconds (0 = never, the default)
 
 INFER OPTIONS:
   --addr A          endpoint                       (default 127.0.0.1:7272)
@@ -267,7 +279,10 @@ fn main() -> Result<()> {
         }
         "serve" => {
             let mut known = GLOBAL_OPTS.to_vec();
-            known.extend(["model", "device", "addr", "max-sessions", "defects", "metrics-addr"]);
+            known.extend([
+                "model", "device", "addr", "max-sessions", "defects", "metrics-addr",
+                "idle-timeout-secs", "write-timeout-secs",
+            ]);
             args.check_known(&known)?;
             let model = args.str_or("model", "xor221");
             let device = args.str_or("device", "native");
@@ -275,14 +290,15 @@ fn main() -> Result<()> {
             let dev = build_device(&ctx, rt.as_ref(), &model, &device)?;
             let max_sessions = args.usize_or("max-sessions", 0)?;
             let max = if max_sessions == 0 { None } else { Some(max_sessions) };
-            spawn_metrics_http(&args)?;
-            server::serve(dev, &args.str_or("addr", "127.0.0.1:7171"), max)
+            let net = net_options(&args)?;
+            server::serve_with(dev, &args.str_or("addr", "127.0.0.1:7171"), max, net)
         }
         "serve-infer" => {
             let mut known = GLOBAL_OPTS.to_vec();
             known.extend([
                 "checkpoint-dir", "checkpoint", "addr", "max-batch", "max-delay-ms",
                 "poll-ms", "max-sessions", "telemetry", "metrics-addr",
+                "idle-timeout-secs", "write-timeout-secs",
             ]);
             args.check_known(&known)?;
             serve_infer_cmd(&args)
@@ -730,7 +746,9 @@ fn fleet_cmd(ctx: &RunContext, args: &Args, cfg: MgdConfig) -> Result<()> {
 /// opcode, with dynamic micro-batching and (for `--checkpoint-dir`) hot
 /// reload of fresh snapshots.
 fn serve_infer_cmd(args: &Args) -> Result<()> {
-    use mgd::serve::{serve_infer, BatchPolicy, InferenceEngine, ReloadConfig, ServeInferOptions};
+    use mgd::serve::{
+        serve_infer_with, BatchPolicy, InferenceEngine, ReloadConfig, ServeInferOptions,
+    };
     let (engine, reload) = match (args.get("checkpoint-dir"), args.get("checkpoint")) {
         (Some(_), Some(_)) => bail!("--checkpoint-dir and --checkpoint are mutually exclusive"),
         (Some(dir), None) => {
@@ -757,9 +775,9 @@ fn serve_infer_cmd(args: &Args) -> Result<()> {
             (args.f64_or("max-delay-ms", 2.0)? / 1e3).max(0.0),
         ),
     };
-    spawn_metrics_http(args)?;
+    let net = net_options(args)?;
     let listener = std::net::TcpListener::bind(args.str_or("addr", "127.0.0.1:7272"))?;
-    let summary = serve_infer(
+    let summary = serve_infer_with(
         engine,
         listener,
         ServeInferOptions {
@@ -768,6 +786,7 @@ fn serve_infer_cmd(args: &Args) -> Result<()> {
             telemetry,
             reload,
         },
+        net,
     )?;
     println!(
         "served {} requests / {} inferences in {} batches (p50 {:.2} ms, p99 {:.2} ms)",
@@ -838,14 +857,29 @@ fn infer_cmd(ctx: &RunContext, args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Start the optional `--metrics-addr` HTTP listener (`/metrics` in
-/// Prometheus text format plus `/healthz`).  No-op without the flag.
-fn spawn_metrics_http(args: &Args) -> Result<()> {
+/// Build the event-loop transport options shared by `mgd serve` and
+/// `mgd serve-infer`: the optional `--metrics-addr` listener (mounted
+/// on the server's own loop — no extra thread) and the per-session
+/// `--idle-timeout-secs` / `--write-timeout-secs` deadlines (0 = never,
+/// the default).
+fn net_options(args: &Args) -> Result<mgd::net::NetOptions> {
+    let mut net = mgd::net::NetOptions::default();
     if let Some(addr) = args.get("metrics-addr") {
-        let bound = mgd::obs::http::spawn(addr)?;
+        let listener = std::net::TcpListener::bind(addr)
+            .with_context(|| format!("binding metrics listener on {addr}"))?;
+        let bound = listener.local_addr().context("resolving metrics listener address")?;
         println!("metrics: http://{bound}/metrics");
+        net.metrics = Some(listener);
     }
-    Ok(())
+    let idle = args.u64_or("idle-timeout-secs", 0)?;
+    if idle > 0 {
+        net.idle_timeout = Some(std::time::Duration::from_secs(idle));
+    }
+    let write = args.u64_or("write-timeout-secs", 0)?;
+    if write > 0 {
+        net.write_timeout = Some(std::time::Duration::from_secs(write));
+    }
+    Ok(net)
 }
 
 /// Fetch one registry snapshot from an mgd TCP endpoint via the `Stats`

@@ -1,0 +1,1358 @@
+//! The unified nonblocking session layer: one event loop under the
+//! training pool server, the inference server, and the metrics HTTP
+//! listener.
+//!
+//! Every server in the tree used to be a hand-rolled blocking loop
+//! burning one OS thread per connection — the scaling wall the
+//! follow-up literature (Oripov et al. 2025 on throughput-per-wall-
+//! clock; perturbation-efficient on-device serving) says a transport
+//! layer must not have.  This module replaces all three with a single
+//! readiness-driven core:
+//!
+//! - [`sys`] — the vendored epoll/poll shim (no third-party crates).
+//! - [`EventLoop`] — accept loop + framed-session state machine:
+//!   accumulating reader honoring the protocol frame cap, buffered
+//!   writer with backpressure (reads pause while a reply drains),
+//!   per-session idle and write deadlines.
+//! - [`Service`] / [`SessionHandler`] — the dispatch seam.  A service
+//!   opens one handler per accepted session; the handler answers each
+//!   decoded [`Frame`] with an [`Action`].  Protocol dispatch stays in
+//!   `device::server`, `serve`, and `obs::http`; *transport* lives here.
+//! - [`Action::Blocking`] — slow device work (leases, `cost_many`) hops
+//!   to a small bounded worker pool and the loop keeps accepting; the
+//!   handler travels to the worker and comes home with the reply, so
+//!   thread count is O(workers), never O(sessions).
+//! - [`Action::Pending`] + [`CompletionHandle`] — asynchronous replies
+//!   (the inference micro-batcher) complete from any thread via the
+//!   loop's waker.
+//! - [`SessionBudget`] — `--max-sessions` accounting: only sessions
+//!   that issue real work (anything beyond `Stats`/`Bye`) consume the
+//!   budget, so metrics pollers never starve a drain of its exit.
+//!
+//! Wire behavior is byte-identical to the blocking servers: binary
+//! framing reproduces `protocol::read_request`'s validation order and
+//! error strings, and the HTTP mode reproduces the `obs::http` response
+//! bytes.  The `mgd_net_*` series (open-sessions gauge, accepts,
+//! read/write stalls, session-duration histogram) report the transport
+//! itself.
+
+pub mod sys;
+
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::device::protocol as p;
+use crate::obs;
+
+/// Registered transport metrics, resolved once.
+struct NetMetrics {
+    open_sessions: obs::Gauge,
+    accepts: obs::Counter,
+    read_stalls: obs::Counter,
+    write_stalls: obs::Counter,
+    session_duration: obs::Histogram,
+}
+
+fn net_metrics() -> &'static NetMetrics {
+    static M: OnceLock<NetMetrics> = OnceLock::new();
+    M.get_or_init(|| NetMetrics {
+        open_sessions: obs::gauge("mgd_net_open_sessions"),
+        accepts: obs::counter("mgd_net_accepts_total"),
+        read_stalls: obs::counter("mgd_net_read_stalls_total"),
+        write_stalls: obs::counter("mgd_net_write_stalls_total"),
+        session_duration: obs::histogram("mgd_net_session_duration_seconds"),
+    })
+}
+
+/// Transport knobs shared by every event-loop server (`mgd serve`,
+/// `mgd serve-infer`).  Orthogonal to the per-server option structs so
+/// existing constructors stay source-compatible.
+#[derive(Default)]
+pub struct NetOptions {
+    /// Worker threads for [`Action::Blocking`] dispatch (`0` = the
+    /// server's own default, e.g. one per pooled device).
+    pub workers: usize,
+    /// Close a session idle (no request in flight, none arriving) for
+    /// this long.  `None` = never.
+    pub idle_timeout: Option<Duration>,
+    /// Close a session whose reply has been stalled in the write buffer
+    /// for this long (a reader that stopped reading).  `None` = never.
+    pub write_timeout: Option<Duration>,
+    /// Serve `/metrics` + `/healthz` on this listener from the *same*
+    /// event loop (the `--metrics-addr` wiring; no extra thread).
+    pub metrics: Option<TcpListener>,
+}
+
+/// How a session's byte stream is cut into [`Frame`]s.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Framing {
+    /// The binary device protocol: `opcode:u8 len:u32le payload`.
+    Binary,
+    /// HTTP/1.1 request heads (request line + headers, body ignored),
+    /// capped at `max_head` buffered bytes.
+    Http { max_head: usize },
+}
+
+/// One decoded request.
+#[derive(Debug)]
+pub enum Frame {
+    Binary { op: p::Op, payload: Vec<u8> },
+    Http { method: String, path: String },
+}
+
+/// Decoder outcome for the accumulated read buffer.
+enum Decoded {
+    /// Not enough bytes yet.
+    Incomplete,
+    Frame(Frame),
+    /// Unrecoverable framing violation; the message matches what the
+    /// blocking readers reported.
+    Error(String),
+}
+
+/// What a handler wants done after a frame (or completion, or timer).
+pub enum Action {
+    /// Queue these reply bytes (a full wire frame) and keep serving.
+    Reply(Vec<u8>),
+    /// Queue these reply bytes, then close once they have drained.
+    ReplyClose(Vec<u8>),
+    /// Close immediately (nothing more to say).
+    Close,
+    /// Hand the handler to the worker pool; its
+    /// [`SessionHandler::blocking`] runs off-loop and returns the next
+    /// action.  Reads stay paused meanwhile.
+    Blocking,
+    /// The reply will arrive later through a [`CompletionHandle`].
+    Pending,
+    /// Re-invoke [`SessionHandler::on_timer`] after this delay (lease
+    /// retry polling).  Reads stay paused meanwhile.
+    Wait(Duration),
+}
+
+/// Per-session protocol logic.  Exactly one of `on_frame` /
+/// `blocking` / `on_timer` runs at a time for a given session; the
+/// handler needs no internal locking.
+pub trait SessionHandler: Send {
+    /// A complete frame arrived.
+    fn on_frame(&mut self, frame: Frame, cx: &SessionCx) -> Action;
+    /// The byte stream violated the framing (unknown opcode, oversized
+    /// length, oversized HTTP head).  Almost always answered with
+    /// [`Action::ReplyClose`].
+    fn on_decode_error(&mut self, msg: &str) -> Action;
+    /// Runs on a worker thread after [`Action::Blocking`].
+    fn blocking(&mut self) -> Action {
+        Action::Close
+    }
+    /// Runs after [`Action::Wait`] elapses.
+    fn on_timer(&mut self) -> Action {
+        Action::Close
+    }
+    /// The session is being torn down (exactly once, loop thread).
+    fn on_close(&mut self) {}
+}
+
+/// Per-service transport deadlines (see [`NetOptions`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Timeouts {
+    pub idle: Option<Duration>,
+    pub write: Option<Duration>,
+}
+
+/// A server on the loop: one instance per listener, opening one
+/// [`SessionHandler`] per accepted connection.
+pub trait Service: Send + Sync {
+    fn framing(&self) -> Framing;
+    /// `session` is 1-based per listener; `peer` is the remote address.
+    fn open(&self, session: u64, peer: &str) -> Box<dyn SessionHandler>;
+    fn timeouts(&self) -> Timeouts {
+        Timeouts::default()
+    }
+    /// When every *primary* service reports done, the loop exits.
+    fn is_done(&self) -> bool {
+        false
+    }
+}
+
+/// `--max-sessions` accounting for the device and inference servers.
+///
+/// A session consumes the budget on its first frame of real work —
+/// anything other than `Stats`/`Bye` (malformed first frames count too:
+/// a garbage client is not a metrics poller).  Pure pollers and
+/// connect-probes are free, so a drain bounded by `--max-sessions N`
+/// means "N working sessions", not "N TCP connects".
+pub struct SessionBudget {
+    max: Option<usize>,
+    started: AtomicUsize,
+    open: AtomicUsize,
+}
+
+impl SessionBudget {
+    pub fn new(max: Option<usize>) -> Arc<SessionBudget> {
+        Arc::new(SessionBudget { max, started: AtomicUsize::new(0), open: AtomicUsize::new(0) })
+    }
+
+    /// Try to consume one budget slot.  `false` = budget exhausted (the
+    /// caller answers with a typed error and closes).
+    pub fn try_start(&self) -> bool {
+        match self.max {
+            None => {
+                self.started.fetch_add(1, Ordering::Relaxed);
+                self.open.fetch_add(1, Ordering::Relaxed);
+                true
+            }
+            Some(max) => {
+                let mut cur = self.started.load(Ordering::Relaxed);
+                loop {
+                    if cur >= max {
+                        return false;
+                    }
+                    match self.started.compare_exchange(
+                        cur,
+                        cur + 1,
+                        Ordering::Relaxed,
+                        Ordering::Relaxed,
+                    ) {
+                        Ok(_) => {
+                            self.open.fetch_add(1, Ordering::Relaxed);
+                            return true;
+                        }
+                        Err(now) => cur = now,
+                    }
+                }
+            }
+        }
+    }
+
+    /// A counted session closed.
+    pub fn finish(&self) {
+        self.open.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Budget exhausted *and* every counted session has closed.
+    pub fn done(&self) -> bool {
+        match self.max {
+            None => false,
+            Some(max) => {
+                self.started.load(Ordering::Relaxed) >= max
+                    && self.open.load(Ordering::Relaxed) == 0
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Completions: replies finished off-loop (workers, the batcher).
+
+enum DoneMsg {
+    Worker { token: u64, handler: Box<dyn SessionHandler>, action: Action },
+    External { token: u64, reply: Vec<u8> },
+}
+
+struct Shared {
+    queue: Mutex<Vec<DoneMsg>>,
+    /// Write half of the loop's self-pipe; one byte wakes the poller.
+    notify: UnixStream,
+}
+
+impl Shared {
+    fn push(&self, msg: DoneMsg) {
+        self.queue.lock().unwrap().push(msg);
+        // A full pipe means a wakeup is already pending — losing this
+        // byte is fine.
+        let _ = (&self.notify).write_all(&[1u8]);
+    }
+}
+
+/// Handed to handlers that answer [`Action::Pending`]; completing it
+/// from any thread queues the reply bytes and wakes the loop.  Stale
+/// completions (the session closed first) are dropped by token check.
+#[derive(Clone)]
+pub struct CompletionHandle {
+    token: u64,
+    shared: Arc<Shared>,
+}
+
+impl CompletionHandle {
+    pub fn complete(&self, reply: Vec<u8>) {
+        self.shared.push(DoneMsg::External { token: self.token, reply });
+    }
+}
+
+/// Per-dispatch context a handler sees (currently: minting completion
+/// handles for [`Action::Pending`] replies).
+pub struct SessionCx {
+    token: u64,
+    shared: Arc<Shared>,
+}
+
+impl SessionCx {
+    pub fn completion(&self) -> CompletionHandle {
+        CompletionHandle { token: self.token, shared: self.shared.clone() }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker pool: bounded, lazily spawned, fed by Action::Blocking.
+
+struct WorkerJob {
+    token: u64,
+    handler: Box<dyn SessionHandler>,
+}
+
+struct WorkState {
+    jobs: VecDeque<WorkerJob>,
+    idle: usize,
+    closed: bool,
+}
+
+struct WorkQueue {
+    state: Mutex<WorkState>,
+    cv: Condvar,
+}
+
+struct WorkerPool {
+    queue: Arc<WorkQueue>,
+    handles: Vec<JoinHandle<()>>,
+    max: usize,
+}
+
+impl WorkerPool {
+    fn new(max: usize) -> WorkerPool {
+        WorkerPool {
+            queue: Arc::new(WorkQueue {
+                state: Mutex::new(WorkState { jobs: VecDeque::new(), idle: 0, closed: false }),
+                cv: Condvar::new(),
+            }),
+            handles: Vec::new(),
+            max,
+        }
+    }
+
+    fn dispatch(&mut self, job: WorkerJob, shared: &Arc<Shared>) {
+        let spawn_one = {
+            let mut st = self.queue.state.lock().unwrap();
+            st.jobs.push_back(job);
+            st.idle == 0 && self.handles.len() < self.max
+        };
+        self.queue.cv.notify_one();
+        if spawn_one {
+            let queue = self.queue.clone();
+            let shared = shared.clone();
+            let n = self.handles.len();
+            let handle = std::thread::Builder::new()
+                .name(format!("mgd-net-worker-{n}"))
+                .spawn(move || worker_loop(queue, shared))
+                .expect("spawning net worker thread");
+            self.handles.push(handle);
+        }
+    }
+
+    fn shutdown(&mut self) {
+        self.queue.state.lock().unwrap().closed = true;
+        self.queue.cv.notify_all();
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+fn worker_loop(queue: Arc<WorkQueue>, shared: Arc<Shared>) {
+    loop {
+        let mut st = queue.state.lock().unwrap();
+        let job = loop {
+            if let Some(job) = st.jobs.pop_front() {
+                break Some(job);
+            }
+            if st.closed {
+                break None;
+            }
+            st.idle += 1;
+            st = queue.cv.wait(st).unwrap();
+            st.idle -= 1;
+        };
+        drop(st);
+        let Some(mut job) = job else { return };
+        let action = job.handler.blocking();
+        shared.push(DoneMsg::Worker { token: job.token, handler: job.handler, action });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Frame decoding.
+
+fn parse_http_head(head: &[u8]) -> Frame {
+    let text = String::from_utf8_lossy(head);
+    let request_line = text.lines().next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    Frame::Http { method, path }
+}
+
+/// Cut the next frame off the front of `buf`.  Mirrors the blocking
+/// readers exactly: binary mode validates the opcode *before* the
+/// length (so a both-bad header reports "unknown opcode", as
+/// `read_request` did), and HTTP mode parses whatever arrived when the
+/// peer half-closes (`eof`) without a header terminator.
+fn decode_frame(framing: Framing, buf: &mut Vec<u8>, eof: bool) -> Decoded {
+    match framing {
+        Framing::Binary => {
+            if buf.len() < 5 {
+                return Decoded::Incomplete;
+            }
+            let op = match p::Op::from_u8(buf[0]) {
+                Ok(op) => op,
+                Err(e) => return Decoded::Error(format!("{e:#}")),
+            };
+            let len = u32::from_le_bytes(buf[1..5].try_into().unwrap()) as usize;
+            if len > p::MAX_FRAME_BYTES {
+                return Decoded::Error(format!(
+                    "request frame of {len} bytes exceeds protocol maximum {}",
+                    p::MAX_FRAME_BYTES
+                ));
+            }
+            if buf.len() < 5 + len {
+                return Decoded::Incomplete;
+            }
+            let payload = buf[5..5 + len].to_vec();
+            buf.drain(..5 + len);
+            Decoded::Frame(Frame::Binary { op, payload })
+        }
+        Framing::Http { max_head } => {
+            match buf.windows(4).position(|w| w == b"\r\n\r\n") {
+                Some(i) => {
+                    let frame = parse_http_head(&buf[..i]);
+                    buf.drain(..i + 4);
+                    Decoded::Frame(frame)
+                }
+                None if buf.len() >= max_head => Decoded::Error("request too large".to_string()),
+                None if eof && !buf.is_empty() => {
+                    let frame = parse_http_head(buf);
+                    buf.clear();
+                    Decoded::Frame(frame)
+                }
+                None => Decoded::Incomplete,
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The loop.
+
+/// Listener keys occupy `0..KEY_BASE`; session slot `i` maps to key
+/// `(gen << 32) | (i + KEY_BASE)` so a recycled slot never aliases a
+/// stale completion token.
+const KEY_BASE: u64 = 8;
+const WAKER_KEY: u64 = u64::MAX;
+
+/// Per-pass read cap so one firehose session cannot starve the loop.
+const READ_BUDGET: usize = 1 << 20;
+
+#[derive(PartialEq, Eq, Clone, Copy)]
+enum Busy {
+    No,
+    Worker,
+    External,
+    Timer,
+}
+
+struct Session {
+    stream: TcpStream,
+    token: u64,
+    listener: usize,
+    framing: Framing,
+    handler: Option<Box<dyn SessionHandler>>,
+    rbuf: Vec<u8>,
+    wbuf: Vec<u8>,
+    wpos: usize,
+    busy: Busy,
+    timer_at: Option<Instant>,
+    eof: bool,
+    close_after_write: bool,
+    want_read: bool,
+    want_write: bool,
+    idle_deadline: Option<Instant>,
+    write_deadline: Option<Instant>,
+    stalled: bool,
+    timeouts: Timeouts,
+    opened: Instant,
+}
+
+struct Slot {
+    gen: u32,
+    session: Option<Session>,
+}
+
+struct ListenerEntry {
+    listener: TcpListener,
+    service: Arc<dyn Service>,
+    primary: bool,
+    accepted: u64,
+    framing: Framing,
+    timeouts: Timeouts,
+}
+
+pub struct EventLoop {
+    poller: sys::Poller,
+    waker_rx: UnixStream,
+    shared: Arc<Shared>,
+    listeners: Vec<ListenerEntry>,
+    slots: Vec<Slot>,
+    free: Vec<usize>,
+    workers: WorkerPool,
+}
+
+impl EventLoop {
+    /// `workers` bounds the [`Action::Blocking`] thread pool (0 is
+    /// legal for services that never block).
+    pub fn new(workers: usize) -> Result<EventLoop> {
+        let (waker_rx, notify) = UnixStream::pair().context("creating event-loop waker")?;
+        waker_rx.set_nonblocking(true).context("waker read half nonblocking")?;
+        notify.set_nonblocking(true).context("waker write half nonblocking")?;
+        let mut poller = sys::Poller::new().context("creating poller")?;
+        poller
+            .add(waker_rx.as_raw_fd(), WAKER_KEY, true, false)
+            .context("registering event-loop waker")?;
+        Ok(EventLoop {
+            poller,
+            waker_rx,
+            shared: Arc::new(Shared { queue: Mutex::new(Vec::new()), notify }),
+            listeners: Vec::new(),
+            slots: Vec::new(),
+            free: Vec::new(),
+            workers: WorkerPool::new(workers),
+        })
+    }
+
+    /// Register a listener.  The loop runs until every `primary`
+    /// service reports [`Service::is_done`] (secondary listeners — the
+    /// shared-loop metrics endpoint — never gate exit).  With no
+    /// primary listeners the loop serves forever.
+    pub fn add_listener(
+        &mut self,
+        listener: TcpListener,
+        service: Arc<dyn Service>,
+        primary: bool,
+    ) -> Result<()> {
+        let key = self.listeners.len() as u64;
+        anyhow::ensure!(key < KEY_BASE, "event loop supports at most {KEY_BASE} listeners");
+        listener.set_nonblocking(true).context("listener nonblocking")?;
+        self.poller
+            .add(listener.as_raw_fd(), key, true, false)
+            .context("registering listener")?;
+        let framing = service.framing();
+        let timeouts = service.timeouts();
+        self.listeners.push(ListenerEntry {
+            listener,
+            service,
+            primary,
+            accepted: 0,
+            framing,
+            timeouts,
+        });
+        Ok(())
+    }
+
+    fn primaries_done(&self) -> bool {
+        let mut any = false;
+        for entry in &self.listeners {
+            if entry.primary {
+                any = true;
+                if !entry.service.is_done() {
+                    return false;
+                }
+            }
+        }
+        any
+    }
+
+    /// Soonest deadline across every session (idle, write, timer).
+    fn next_timeout(&self) -> Option<Duration> {
+        let mut soonest: Option<Instant> = None;
+        for slot in &self.slots {
+            let Some(sess) = slot.session.as_ref() else { continue };
+            for t in [sess.idle_deadline, sess.write_deadline, sess.timer_at] {
+                if let Some(t) = t {
+                    soonest = Some(match soonest {
+                        Some(s) if s <= t => s,
+                        _ => t,
+                    });
+                }
+            }
+        }
+        soonest.map(|t| t.saturating_duration_since(Instant::now()))
+    }
+
+    /// Run until every primary service is done (or a fatal accept/poll
+    /// error).  In-flight sessions finish first; idle uncounted
+    /// sessions are hard-closed at exit.
+    pub fn run(&mut self) -> Result<()> {
+        let mut events: Vec<sys::Event> = Vec::new();
+        let mut fatal: Option<anyhow::Error> = None;
+        loop {
+            if fatal.is_some() || self.primaries_done() {
+                break;
+            }
+            let timeout = self.next_timeout();
+            self.poller.wait(&mut events, timeout).context("polling the event loop")?;
+            for &ev in events.iter() {
+                if ev.key == WAKER_KEY {
+                    self.drain_waker();
+                    continue;
+                }
+                let low = (ev.key & 0xFFFF_FFFF) as usize;
+                if (ev.key >> 32) == 0 && low < self.listeners.len() {
+                    if let Err(e) = self.accept_all(low) {
+                        fatal = Some(e);
+                        break;
+                    }
+                    continue;
+                }
+                let Some(idx) = self.idx_for(ev.key) else { continue };
+                if ev.writable {
+                    self.on_writable(idx);
+                }
+                if ev.readable {
+                    self.on_readable(idx);
+                }
+            }
+            self.drain_completions();
+            self.sweep_deadlines();
+        }
+        self.teardown();
+        match fatal {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    fn drain_waker(&mut self) {
+        let mut chunk = [0u8; 64];
+        loop {
+            match (&self.waker_rx).read(&mut chunk) {
+                Ok(0) => return,
+                Ok(_) => continue,
+                Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => return,
+            }
+        }
+    }
+
+    /// Map a token back to a live slot index (generation-checked).
+    fn idx_for(&self, token: u64) -> Option<usize> {
+        let low = (token & 0xFFFF_FFFF) as usize;
+        if (low as u64) < KEY_BASE {
+            return None;
+        }
+        let idx = low - KEY_BASE as usize;
+        let slot = self.slots.get(idx)?;
+        let sess = slot.session.as_ref()?;
+        if sess.token == token {
+            Some(idx)
+        } else {
+            None
+        }
+    }
+
+    fn accept_all(&mut self, li: usize) -> Result<()> {
+        loop {
+            match self.listeners[li].listener.accept() {
+                Ok((stream, peer)) => {
+                    let peer = peer.to_string();
+                    self.admit(li, stream, &peer)?;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Ok(()),
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::Interrupted
+                        || e.kind() == std::io::ErrorKind::ConnectionAborted =>
+                {
+                    continue
+                }
+                Err(e) => return Err(e).context("accepting a connection"),
+            }
+        }
+    }
+
+    fn admit(&mut self, li: usize, stream: TcpStream, peer: &str) -> Result<()> {
+        if stream.set_nonblocking(true).is_err() {
+            return Ok(()); // dead on arrival; drop it
+        }
+        stream.set_nodelay(true).ok();
+        let (handler, framing, timeouts) = {
+            let entry = &mut self.listeners[li];
+            entry.accepted += 1;
+            (entry.service.open(entry.accepted, peer), entry.framing, entry.timeouts)
+        };
+        let m = net_metrics();
+        m.accepts.inc();
+        m.open_sessions.add(1.0);
+        let idx = match self.free.pop() {
+            Some(idx) => idx,
+            None => {
+                self.slots.push(Slot { gen: 0, session: None });
+                self.slots.len() - 1
+            }
+        };
+        let token = ((self.slots[idx].gen as u64) << 32) | (idx as u64 + KEY_BASE);
+        if let Err(e) = self.poller.add(stream.as_raw_fd(), token, true, false) {
+            // Couldn't register: tear the session back down cleanly.
+            self.free.push(idx);
+            m.open_sessions.add(-1.0);
+            let mut handler = handler;
+            handler.on_close();
+            return Err(e).context("registering session fd");
+        }
+        let now = Instant::now();
+        self.slots[idx].session = Some(Session {
+            stream,
+            token,
+            listener: li,
+            framing,
+            handler: Some(handler),
+            rbuf: Vec::new(),
+            wbuf: Vec::new(),
+            wpos: 0,
+            busy: Busy::No,
+            timer_at: None,
+            eof: false,
+            close_after_write: false,
+            want_read: true,
+            want_write: false,
+            idle_deadline: timeouts.idle.map(|d| now + d),
+            write_deadline: None,
+            stalled: false,
+            timeouts,
+            opened: now,
+        });
+        Ok(())
+    }
+
+    fn on_readable(&mut self, idx: usize) {
+        {
+            let Some(sess) = self.slots[idx].session.as_mut() else { return };
+            if !sess.want_read {
+                return;
+            }
+            let mut chunk = [0u8; 16384];
+            let mut taken = 0usize;
+            loop {
+                match (&sess.stream).read(&mut chunk) {
+                    Ok(0) => {
+                        sess.eof = true;
+                        break;
+                    }
+                    Ok(n) => {
+                        sess.rbuf.extend_from_slice(&chunk[..n]);
+                        taken += n;
+                        if taken >= READ_BUDGET {
+                            break; // level-triggered: the rest re-reports
+                        }
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        // Reset mid-stream reads like a hangup.
+                        sess.eof = true;
+                        break;
+                    }
+                }
+            }
+        }
+        self.pump(idx);
+    }
+
+    fn on_writable(&mut self, idx: usize) {
+        let wants = match self.slots[idx].session.as_ref() {
+            Some(sess) => sess.want_write,
+            None => return,
+        };
+        if wants {
+            self.flush(idx);
+            self.pump(idx);
+        }
+    }
+
+    /// Decode-and-dispatch until the buffer runs dry, the session goes
+    /// busy, backpressure pauses it, or it closes.
+    fn pump(&mut self, idx: usize) {
+        loop {
+            let (frame_or_err, eof_empty) = {
+                let Some(sess) = self.slots[idx].session.as_mut() else { return };
+                if sess.busy != Busy::No || sess.close_after_write {
+                    self.update_interest(idx);
+                    return;
+                }
+                if sess.wpos < sess.wbuf.len() {
+                    // Backpressure: no new work while a reply drains.
+                    self.update_interest(idx);
+                    return;
+                }
+                let eof = sess.eof;
+                match decode_frame(sess.framing, &mut sess.rbuf, eof) {
+                    Decoded::Incomplete => {
+                        if eof {
+                            (None, true)
+                        } else {
+                            if sess.idle_deadline.is_none() {
+                                if let Some(d) = sess.timeouts.idle {
+                                    sess.idle_deadline = Some(Instant::now() + d);
+                                }
+                            }
+                            self.update_interest(idx);
+                            return;
+                        }
+                    }
+                    Decoded::Frame(frame) => {
+                        sess.idle_deadline = None;
+                        (Some(Ok(frame)), false)
+                    }
+                    Decoded::Error(msg) => {
+                        sess.idle_deadline = None;
+                        (Some(Err(msg)), false)
+                    }
+                }
+            };
+            if eof_empty {
+                // Peer hung up between frames (or mid-frame): the
+                // blocking servers treated both as a normal end.
+                self.close_session(idx);
+                return;
+            }
+            let token = self.slots[idx].session.as_ref().map(|s| s.token).unwrap_or(0);
+            let taken = self.slots[idx].session.as_mut().and_then(|s| s.handler.take());
+            let mut handler = match taken {
+                Some(h) => h,
+                None => return,
+            };
+            let action = match frame_or_err {
+                Some(Ok(frame)) => {
+                    let cx = SessionCx { token, shared: self.shared.clone() };
+                    handler.on_frame(frame, &cx)
+                }
+                Some(Err(msg)) => handler.on_decode_error(&msg),
+                None => unreachable!("pump yields a frame, an error, or eof"),
+            };
+            self.apply_action(idx, handler, action);
+            if self.slots[idx].session.is_none() {
+                return;
+            }
+        }
+    }
+
+    fn apply_action(&mut self, idx: usize, handler: Box<dyn SessionHandler>, action: Action) {
+        let Some(sess) = self.slots[idx].session.as_mut() else {
+            // Session died while the handler was away; run its teardown.
+            let mut handler = handler;
+            handler.on_close();
+            return;
+        };
+        match action {
+            Action::Reply(bytes) => {
+                sess.handler = Some(handler);
+                sess.busy = Busy::No;
+                sess.timer_at = None;
+                queue_reply(sess, bytes);
+                self.flush(idx);
+            }
+            Action::ReplyClose(bytes) => {
+                sess.handler = Some(handler);
+                sess.busy = Busy::No;
+                sess.timer_at = None;
+                sess.close_after_write = true;
+                queue_reply(sess, bytes);
+                self.flush(idx);
+            }
+            Action::Close => {
+                sess.handler = Some(handler);
+                self.close_session(idx);
+            }
+            Action::Blocking => {
+                sess.busy = Busy::Worker;
+                sess.timer_at = None;
+                let token = sess.token;
+                let shared = self.shared.clone();
+                self.workers.dispatch(WorkerJob { token, handler }, &shared);
+                self.update_interest(idx);
+            }
+            Action::Pending => {
+                sess.handler = Some(handler);
+                sess.busy = Busy::External;
+                sess.timer_at = None;
+                self.update_interest(idx);
+            }
+            Action::Wait(delay) => {
+                sess.handler = Some(handler);
+                sess.busy = Busy::Timer;
+                sess.timer_at = Some(Instant::now() + delay);
+                self.update_interest(idx);
+            }
+        }
+    }
+
+    fn flush(&mut self, idx: usize) {
+        enum Outcome {
+            Drained(bool), // close_after_write
+            Stalled,
+            Failed,
+        }
+        let outcome = {
+            let Some(sess) = self.slots[idx].session.as_mut() else { return };
+            loop {
+                if sess.wpos >= sess.wbuf.len() {
+                    sess.wbuf.clear();
+                    sess.wpos = 0;
+                    sess.stalled = false;
+                    sess.write_deadline = None;
+                    break Outcome::Drained(sess.close_after_write);
+                }
+                match (&sess.stream).write(&sess.wbuf[sess.wpos..]) {
+                    Ok(0) => break Outcome::Failed,
+                    Ok(n) => sess.wpos += n,
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        if !sess.stalled {
+                            sess.stalled = true;
+                            net_metrics().write_stalls.inc();
+                            if let Some(d) = sess.timeouts.write {
+                                sess.write_deadline = Some(Instant::now() + d);
+                            }
+                        }
+                        break Outcome::Stalled;
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(_) => break Outcome::Failed,
+                }
+            }
+        };
+        match outcome {
+            Outcome::Drained(true) | Outcome::Failed => self.close_session(idx),
+            Outcome::Drained(false) | Outcome::Stalled => self.update_interest(idx),
+        }
+    }
+
+    /// Reconcile epoll interest with session state: reads pause while
+    /// busy, closing, at EOF, or while a reply is draining
+    /// (backpressure); write interest follows the buffer.
+    fn update_interest(&mut self, idx: usize) {
+        let Some(sess) = self.slots[idx].session.as_mut() else { return };
+        let read = sess.busy == Busy::No
+            && !sess.close_after_write
+            && !sess.eof
+            && sess.wpos >= sess.wbuf.len();
+        let write = sess.wpos < sess.wbuf.len();
+        if read == sess.want_read && write == sess.want_write {
+            return;
+        }
+        if sess.want_read && !read && !sess.close_after_write && !sess.eof {
+            net_metrics().read_stalls.inc();
+        }
+        sess.want_read = read;
+        sess.want_write = write;
+        let fd = sess.stream.as_raw_fd();
+        let token = sess.token;
+        let _ = self.poller.modify(fd, token, read, write);
+    }
+
+    fn drain_completions(&mut self) {
+        let msgs = std::mem::take(&mut *self.shared.queue.lock().unwrap());
+        for msg in msgs {
+            match msg {
+                DoneMsg::Worker { token, handler, action } => {
+                    match self.idx_for(token) {
+                        Some(idx) => {
+                            if let Some(sess) = self.slots[idx].session.as_mut() {
+                                sess.busy = Busy::No;
+                            }
+                            self.apply_action(idx, handler, action);
+                            self.pump(idx);
+                        }
+                        None => {
+                            let mut handler = handler;
+                            handler.on_close();
+                        }
+                    }
+                }
+                DoneMsg::External { token, reply } => {
+                    let Some(idx) = self.idx_for(token) else { continue };
+                    let handler = {
+                        let Some(sess) = self.slots[idx].session.as_mut() else { continue };
+                        if sess.busy != Busy::External {
+                            continue; // stale or duplicate completion
+                        }
+                        sess.busy = Busy::No;
+                        match sess.handler.take() {
+                            Some(h) => h,
+                            None => continue,
+                        }
+                    };
+                    self.apply_action(idx, handler, Action::Reply(reply));
+                    self.pump(idx);
+                }
+            }
+        }
+    }
+
+    fn sweep_deadlines(&mut self) {
+        let now = Instant::now();
+        for idx in 0..self.slots.len() {
+            let expired = {
+                let Some(sess) = self.slots[idx].session.as_ref() else { continue };
+                sess.idle_deadline.is_some_and(|d| now >= d)
+                    || sess.write_deadline.is_some_and(|d| now >= d)
+            };
+            if expired {
+                self.close_session(idx);
+                continue;
+            }
+            let fire = {
+                let Some(sess) = self.slots[idx].session.as_ref() else { continue };
+                sess.busy == Busy::Timer && sess.timer_at.is_some_and(|t| now >= t)
+            };
+            if fire {
+                let handler = {
+                    let sess = self.slots[idx].session.as_mut().unwrap();
+                    sess.busy = Busy::No;
+                    sess.timer_at = None;
+                    match sess.handler.take() {
+                        Some(h) => h,
+                        None => continue,
+                    }
+                };
+                let mut handler = handler;
+                let action = handler.on_timer();
+                self.apply_action(idx, handler, action);
+                self.pump(idx);
+            }
+        }
+    }
+
+    fn close_session(&mut self, idx: usize) {
+        let Some(mut sess) = self.slots[idx].session.take() else { return };
+        self.slots[idx].gen = self.slots[idx].gen.wrapping_add(1);
+        self.free.push(idx);
+        let _ = self.poller.delete(sess.stream.as_raw_fd());
+        if let Some(mut handler) = sess.handler.take() {
+            handler.on_close();
+            drop(handler); // releases held resources (device leases) now
+        }
+        let m = net_metrics();
+        m.open_sessions.add(-1.0);
+        m.session_duration.observe(sess.opened.elapsed().as_secs_f64());
+        let li = sess.listener;
+        drop(sess);
+        // A closed session may have freed a resource (a device lease) a
+        // timer-waiting sibling is polling for: fire those timers now
+        // instead of letting them sleep out their retry interval.
+        for slot in &mut self.slots {
+            if let Some(other) = slot.session.as_mut() {
+                if other.listener == li && other.busy == Busy::Timer {
+                    other.timer_at = Some(now_instant());
+                }
+            }
+        }
+    }
+
+    fn teardown(&mut self) {
+        for idx in 0..self.slots.len() {
+            self.close_session(idx);
+        }
+        self.workers.shutdown();
+    }
+}
+
+/// `Instant::now` spelled as a free fn so the borrow in
+/// [`EventLoop::close_session`]'s retrigger loop stays obviously local.
+fn now_instant() -> Instant {
+    Instant::now()
+}
+
+fn queue_reply(sess: &mut Session, bytes: Vec<u8>) {
+    if sess.wbuf.is_empty() {
+        sess.wbuf = bytes;
+        sess.wpos = 0;
+    } else {
+        sess.wbuf.extend_from_slice(&bytes);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    /// Echo: replies each frame's payload back as an ok frame; Bye closes.
+    struct EchoService {
+        budget: Arc<SessionBudget>,
+        closes: Arc<AtomicU64>,
+    }
+
+    struct EchoSession {
+        budget: Arc<SessionBudget>,
+        counted: bool,
+        closes: Arc<AtomicU64>,
+    }
+
+    impl Service for EchoService {
+        fn framing(&self) -> Framing {
+            Framing::Binary
+        }
+        fn open(&self, _session: u64, _peer: &str) -> Box<dyn SessionHandler> {
+            Box::new(EchoSession {
+                budget: self.budget.clone(),
+                counted: false,
+                closes: self.closes.clone(),
+            })
+        }
+        fn is_done(&self) -> bool {
+            self.budget.done()
+        }
+    }
+
+    impl SessionHandler for EchoSession {
+        fn on_frame(&mut self, frame: Frame, _cx: &SessionCx) -> Action {
+            let Frame::Binary { op, payload } = frame else { return Action::Close };
+            match op {
+                p::Op::Bye => Action::ReplyClose(p::ok_frame(&[])),
+                p::Op::Stats => Action::Reply(p::ok_frame(b"stats")),
+                _ => {
+                    if !self.counted {
+                        self.counted = self.budget.try_start();
+                    }
+                    Action::Reply(p::ok_frame(&payload))
+                }
+            }
+        }
+        fn on_decode_error(&mut self, msg: &str) -> Action {
+            if !self.counted {
+                self.counted = self.budget.try_start();
+            }
+            Action::ReplyClose(p::err_frame(msg))
+        }
+        fn on_close(&mut self) {
+            if self.counted {
+                self.budget.finish();
+            }
+            self.closes.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn spawn_echo(
+        max: Option<usize>,
+    ) -> (std::net::SocketAddr, JoinHandle<Result<()>>, Arc<AtomicU64>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let closes = Arc::new(AtomicU64::new(0));
+        let service =
+            Arc::new(EchoService { budget: SessionBudget::new(max), closes: closes.clone() });
+        let handle = std::thread::spawn(move || {
+            let mut el = EventLoop::new(0)?;
+            el.add_listener(listener, service, true)?;
+            el.run()
+        });
+        (addr, handle, closes)
+    }
+
+    #[test]
+    fn echo_roundtrip_and_budget_exit() {
+        let (addr, handle, closes) = spawn_echo(Some(1));
+        let mut stream = TcpStream::connect(addr).unwrap();
+        p::write_request(&mut stream, p::Op::Ping, b"hello").unwrap();
+        let mut reader = std::io::BufReader::new(stream.try_clone().unwrap());
+        let reply = p::read_response(&mut reader).unwrap();
+        assert_eq!(reply, b"hello");
+        p::write_request(&mut stream, p::Op::Bye, &[]).unwrap();
+        assert!(p::read_response(&mut reader).unwrap().is_empty());
+        drop(stream);
+        handle.join().unwrap().unwrap();
+        assert_eq!(closes.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn stats_sessions_do_not_consume_the_budget() {
+        let (addr, handle, _closes) = spawn_echo(Some(1));
+        // Three free pollers: connect-probe, Stats-only, Stats+Bye.
+        drop(TcpStream::connect(addr).unwrap());
+        for with_bye in [false, true] {
+            let mut stream = TcpStream::connect(addr).unwrap();
+            p::write_request(&mut stream, p::Op::Stats, &[]).unwrap();
+            let mut reader = std::io::BufReader::new(stream.try_clone().unwrap());
+            assert_eq!(p::read_response(&mut reader).unwrap(), b"stats");
+            if with_bye {
+                p::write_request(&mut stream, p::Op::Bye, &[]).unwrap();
+                assert!(p::read_response(&mut reader).unwrap().is_empty());
+            }
+        }
+        // The one budgeted session drains the server.
+        let mut stream = TcpStream::connect(addr).unwrap();
+        p::write_request(&mut stream, p::Op::Ping, b"real").unwrap();
+        let mut reader = std::io::BufReader::new(stream.try_clone().unwrap());
+        assert_eq!(p::read_response(&mut reader).unwrap(), b"real");
+        drop(stream);
+        drop(reader);
+        handle.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn pipelined_frames_are_answered_in_order() {
+        let (addr, handle, _closes) = spawn_echo(Some(1));
+        let mut stream = TcpStream::connect(addr).unwrap();
+        // Three requests in one write, then Bye.
+        let mut wire = Vec::new();
+        p::write_request(&mut wire, p::Op::Ping, b"one").unwrap();
+        p::write_request(&mut wire, p::Op::Ping, b"two").unwrap();
+        p::write_request(&mut wire, p::Op::Ping, b"three").unwrap();
+        p::write_request(&mut wire, p::Op::Bye, &[]).unwrap();
+        stream.write_all(&wire).unwrap();
+        let mut reader = std::io::BufReader::new(stream);
+        assert_eq!(p::read_response(&mut reader).unwrap(), b"one");
+        assert_eq!(p::read_response(&mut reader).unwrap(), b"two");
+        assert_eq!(p::read_response(&mut reader).unwrap(), b"three");
+        assert!(p::read_response(&mut reader).unwrap().is_empty());
+        handle.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn unknown_opcode_is_refused_with_the_protocol_error() {
+        let (addr, handle, _closes) = spawn_echo(Some(1));
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.write_all(&[0x0Eu8, 0, 0, 0, 0]).unwrap();
+        let mut reader = std::io::BufReader::new(stream);
+        let err = p::read_response(&mut reader).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown opcode"), "{err:#}");
+        let mut rest = Vec::new();
+        reader.read_to_end(&mut rest).unwrap();
+        assert!(rest.is_empty(), "session must close after the error");
+        handle.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn oversized_length_header_is_refused_before_any_payload() {
+        let (addr, handle, _closes) = spawn_echo(Some(1));
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let mut head = vec![p::Op::Ping as u8];
+        head.extend_from_slice(&u32::MAX.to_le_bytes());
+        stream.write_all(&head).unwrap();
+        let mut reader = std::io::BufReader::new(stream);
+        let err = p::read_response(&mut reader).unwrap_err();
+        assert!(format!("{err:#}").contains("exceeds protocol maximum"), "{err:#}");
+        handle.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn idle_timeout_reaps_silent_sessions() {
+        struct TimeoutEcho(Arc<SessionBudget>);
+        impl Service for TimeoutEcho {
+            fn framing(&self) -> Framing {
+                Framing::Binary
+            }
+            fn open(&self, _s: u64, _p: &str) -> Box<dyn SessionHandler> {
+                Box::new(EchoSession {
+                    budget: self.0.clone(),
+                    counted: false,
+                    closes: Arc::new(AtomicU64::new(0)),
+                })
+            }
+            fn timeouts(&self) -> Timeouts {
+                Timeouts { idle: Some(Duration::from_millis(50)), write: None }
+            }
+            fn is_done(&self) -> bool {
+                self.0.done()
+            }
+        }
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let budget = SessionBudget::new(Some(1));
+        let service = Arc::new(TimeoutEcho(budget.clone()));
+        let handle = std::thread::spawn(move || {
+            let mut el = EventLoop::new(0)?;
+            el.add_listener(listener, service, true)?;
+            el.run()
+        });
+        // A silent connection is reaped by the idle deadline…
+        let silent = TcpStream::connect(addr).unwrap();
+        let mut probe = [0u8; 1];
+        let mut silent_reader = silent.try_clone().unwrap();
+        silent_reader.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let n = silent_reader
+            .read(&mut probe)
+            .expect("idle session must be closed, not left hanging");
+        assert_eq!(n, 0, "idle session must be closed by the server");
+        drop(silent);
+        // …while a live one still gets served.
+        let mut stream = TcpStream::connect(addr).unwrap();
+        p::write_request(&mut stream, p::Op::Ping, b"alive").unwrap();
+        let mut reader = std::io::BufReader::new(stream);
+        assert_eq!(p::read_response(&mut reader).unwrap(), b"alive");
+        drop(reader);
+        handle.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn http_framing_decodes_request_lines() {
+        let mut buf = b"GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n".to_vec();
+        let framing = Framing::Http { max_head: 8192 };
+        match decode_frame(framing, &mut buf, false) {
+            Decoded::Frame(Frame::Http { method, path }) => {
+                assert_eq!(method, "GET");
+                assert_eq!(path, "/metrics");
+            }
+            _ => panic!("expected a frame"),
+        }
+        assert!(buf.is_empty());
+        // Partial head: incomplete until EOF, then parsed as-is.
+        let mut buf = b"GET /healthz HTTP/1.1\r\n".to_vec();
+        assert!(matches!(decode_frame(framing, &mut buf, false), Decoded::Incomplete));
+        match decode_frame(framing, &mut buf, true) {
+            Decoded::Frame(Frame::Http { method, path }) => {
+                assert_eq!(method, "GET");
+                assert_eq!(path, "/healthz");
+            }
+            _ => panic!("expected a frame at EOF"),
+        }
+        // Oversized head without a terminator is a decode error.
+        let mut buf = vec![b'A'; 16];
+        match decode_frame(Framing::Http { max_head: 8 }, &mut buf, false) {
+            Decoded::Error(msg) => assert_eq!(msg, "request too large"),
+            _ => panic!("expected an error"),
+        }
+    }
+
+    #[test]
+    fn binary_framing_matches_read_request_validation_order() {
+        // Both opcode and length invalid → the opcode error wins,
+        // exactly as `read_request` reports it.
+        let mut buf = vec![0xEEu8];
+        buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        match decode_frame(Framing::Binary, &mut buf, false) {
+            Decoded::Error(msg) => assert!(msg.contains("unknown opcode"), "{msg}"),
+            _ => panic!("expected an error"),
+        }
+    }
+
+    #[test]
+    fn session_budget_counts_and_drains() {
+        let b = SessionBudget::new(Some(2));
+        assert!(!b.done());
+        assert!(b.try_start());
+        assert!(b.try_start());
+        assert!(!b.try_start(), "budget must cap at max");
+        assert!(!b.done(), "sessions still open");
+        b.finish();
+        b.finish();
+        assert!(b.done());
+        let unbounded = SessionBudget::new(None);
+        for _ in 0..10 {
+            assert!(unbounded.try_start());
+        }
+        assert!(!unbounded.done());
+    }
+}

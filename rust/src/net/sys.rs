@@ -1,0 +1,324 @@
+//! Readiness polling behind one tiny seam: `epoll(7)` on Linux,
+//! `poll(2)` everywhere else Unix.
+//!
+//! The repo builds offline with no third-party crates, so there is no
+//! `mio`/`libc` to lean on — instead the two syscall families are
+//! declared by hand (`extern "C"` against the libc every Rust binary
+//! already links) and wrapped in a [`Poller`] with exactly the surface
+//! the event loop needs: register, rearm, deregister, wait.  Keys are
+//! opaque `u64`s chosen by the caller; readiness comes back as
+//! [`Event`]s.
+//!
+//! Error and hangup conditions (`EPOLLERR`/`EPOLLHUP`, `POLLERR`/
+//! `POLLHUP`/`POLLNVAL`) are folded into `readable`: the subsequent
+//! `read` observes the failure (`Ok(0)` or an error) and the session
+//! tears down through the normal EOF path, so the loop has one close
+//! path instead of three.
+
+use std::io;
+use std::os::unix::io::RawFd;
+use std::time::Duration;
+
+/// One readiness report from [`Poller::wait`].
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    /// The caller-chosen registration key.
+    pub key: u64,
+    pub readable: bool,
+    pub writable: bool,
+}
+
+/// Milliseconds for the kernel timeout argument: `None` blocks forever,
+/// sub-millisecond remainders round *up* so a deadline 0.3 ms away does
+/// not busy-spin at timeout 0.
+fn timeout_ms(timeout: Option<Duration>) -> i32 {
+    match timeout {
+        None => -1,
+        Some(d) => {
+            let ms = d.as_nanos().div_ceil(1_000_000);
+            ms.min(i32::MAX as u128) as i32
+        }
+    }
+}
+
+#[cfg(target_os = "linux")]
+mod imp {
+    use super::{timeout_ms, Event};
+    use std::io;
+    use std::os::raw::c_int;
+    use std::os::unix::io::RawFd;
+    use std::time::Duration;
+
+    const EPOLL_CLOEXEC: c_int = 0x80000;
+    const EPOLL_CTL_ADD: c_int = 1;
+    const EPOLL_CTL_DEL: c_int = 2;
+    const EPOLL_CTL_MOD: c_int = 3;
+    const EPOLLIN: u32 = 0x001;
+    const EPOLLOUT: u32 = 0x004;
+    const EPOLLERR: u32 = 0x008;
+    const EPOLLHUP: u32 = 0x010;
+
+    /// `struct epoll_event` — packed on x86-64 (the one ABI quirk of the
+    /// interface; see `epoll_ctl(2)`).  Fields are only ever copied out
+    /// by value, never borrowed, so the packed layout is safe to touch.
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[derive(Clone, Copy)]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: c_int) -> c_int;
+        fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut EpollEvent) -> c_int;
+        fn epoll_wait(
+            epfd: c_int,
+            events: *mut EpollEvent,
+            maxevents: c_int,
+            timeout: c_int,
+        ) -> c_int;
+        fn close(fd: c_int) -> c_int;
+    }
+
+    const MAX_EVENTS: usize = 256;
+
+    pub struct Poller {
+        epfd: RawFd,
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            // SAFETY: plain syscall, no pointers.
+            let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+            if epfd < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(Poller { epfd })
+        }
+
+        fn ctl(
+            &mut self,
+            op: c_int,
+            fd: RawFd,
+            key: u64,
+            read: bool,
+            write: bool,
+        ) -> io::Result<()> {
+            let mut ev = EpollEvent {
+                events: if read { EPOLLIN } else { 0 } | if write { EPOLLOUT } else { 0 },
+                data: key,
+            };
+            // SAFETY: `ev` outlives the call; the kernel copies it.
+            let rc = unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) };
+            if rc < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(())
+        }
+
+        pub fn add(&mut self, fd: RawFd, key: u64, read: bool, write: bool) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_ADD, fd, key, read, write)
+        }
+
+        pub fn modify(&mut self, fd: RawFd, key: u64, read: bool, write: bool) -> io::Result<()> {
+            self.ctl(EPOLL_CTL_MOD, fd, key, read, write)
+        }
+
+        pub fn delete(&mut self, fd: RawFd) -> io::Result<()> {
+            // Pre-2.6.9 kernels require a non-null event even for DEL.
+            self.ctl(EPOLL_CTL_DEL, fd, 0, false, false)
+        }
+
+        /// Wait for readiness, appending into `out` (cleared first).  An
+        /// `EINTR` wakeup returns an empty set — the caller's loop
+        /// recomputes its deadlines and waits again.
+        pub fn wait(&mut self, out: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<()> {
+            out.clear();
+            let mut buf = [EpollEvent { events: 0, data: 0 }; MAX_EVENTS];
+            // SAFETY: `buf` is a valid writable array of MAX_EVENTS entries.
+            let n = unsafe {
+                epoll_wait(self.epfd, buf.as_mut_ptr(), MAX_EVENTS as c_int, timeout_ms(timeout))
+            };
+            if n < 0 {
+                let e = io::Error::last_os_error();
+                if e.kind() == io::ErrorKind::Interrupted {
+                    return Ok(());
+                }
+                return Err(e);
+            }
+            for ev in buf.iter().take(n as usize) {
+                // Copy fields out of the (possibly packed) struct by value.
+                let bits = ev.events;
+                let key = ev.data;
+                out.push(Event {
+                    key,
+                    readable: bits & (EPOLLIN | EPOLLERR | EPOLLHUP) != 0,
+                    writable: bits & EPOLLOUT != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+
+    impl Drop for Poller {
+        fn drop(&mut self) {
+            // SAFETY: closing the fd we own.
+            unsafe {
+                close(self.epfd);
+            }
+        }
+    }
+}
+
+#[cfg(all(unix, not(target_os = "linux")))]
+mod imp {
+    use super::{timeout_ms, Event};
+    use std::io;
+    use std::os::raw::{c_int, c_short, c_uint};
+    use std::os::unix::io::RawFd;
+    use std::time::Duration;
+
+    const POLLIN: c_short = 0x001;
+    const POLLOUT: c_short = 0x004;
+    const POLLERR: c_short = 0x008;
+    const POLLHUP: c_short = 0x010;
+    const POLLNVAL: c_short = 0x020;
+
+    #[repr(C)]
+    struct PollFd {
+        fd: c_int,
+        events: c_short,
+        revents: c_short,
+    }
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: c_uint, timeout: c_int) -> c_int;
+    }
+
+    /// Portable fallback: the registration table lives in userspace and
+    /// a `pollfd` array is rebuilt per wait.  O(fds) per call, which is
+    /// fine for the session counts a dev laptop sees; Linux servers get
+    /// the epoll implementation above.
+    pub struct Poller {
+        fds: Vec<(RawFd, u64, bool, bool)>,
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            Ok(Poller { fds: Vec::new() })
+        }
+
+        pub fn add(&mut self, fd: RawFd, key: u64, read: bool, write: bool) -> io::Result<()> {
+            self.fds.push((fd, key, read, write));
+            Ok(())
+        }
+
+        pub fn modify(&mut self, fd: RawFd, key: u64, read: bool, write: bool) -> io::Result<()> {
+            for entry in &mut self.fds {
+                if entry.0 == fd {
+                    *entry = (fd, key, read, write);
+                    return Ok(());
+                }
+            }
+            Err(io::Error::new(io::ErrorKind::NotFound, "fd not registered"))
+        }
+
+        pub fn delete(&mut self, fd: RawFd) -> io::Result<()> {
+            self.fds.retain(|entry| entry.0 != fd);
+            Ok(())
+        }
+
+        pub fn wait(&mut self, out: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<()> {
+            out.clear();
+            let mut pollfds: Vec<PollFd> = self
+                .fds
+                .iter()
+                .map(|&(fd, _, read, write)| PollFd {
+                    fd,
+                    events: if read { POLLIN } else { 0 } | if write { POLLOUT } else { 0 },
+                    revents: 0,
+                })
+                .collect();
+            // SAFETY: `pollfds` is a valid array for the duration of the call.
+            let n = unsafe {
+                poll(pollfds.as_mut_ptr(), pollfds.len() as c_uint, timeout_ms(timeout))
+            };
+            if n < 0 {
+                let e = io::Error::last_os_error();
+                if e.kind() == io::ErrorKind::Interrupted {
+                    return Ok(());
+                }
+                return Err(e);
+            }
+            for (pfd, &(_, key, _, _)) in pollfds.iter().zip(self.fds.iter()) {
+                let bits = pfd.revents;
+                if bits == 0 {
+                    continue;
+                }
+                out.push(Event {
+                    key,
+                    readable: bits & (POLLIN | POLLERR | POLLHUP | POLLNVAL) != 0,
+                    writable: bits & POLLOUT != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+}
+
+#[cfg(not(unix))]
+compile_error!("mgd::net requires a Unix platform (epoll or poll)");
+
+pub use imp::Poller;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::os::unix::io::AsRawFd;
+    use std::os::unix::net::UnixStream;
+
+    #[test]
+    fn pipe_readiness_roundtrip() {
+        let (mut a, b) = UnixStream::pair().unwrap();
+        b.set_nonblocking(true).unwrap();
+        let mut poller = Poller::new().unwrap();
+        poller.add(b.as_raw_fd(), 7, true, false).unwrap();
+        let mut events = Vec::new();
+        // Nothing written yet: a short wait times out empty.
+        poller.wait(&mut events, Some(Duration::from_millis(10))).unwrap();
+        assert!(events.iter().all(|e| e.key != 7 || !e.readable));
+        a.write_all(b"x").unwrap();
+        poller.wait(&mut events, Some(Duration::from_millis(1000))).unwrap();
+        assert!(events.iter().any(|e| e.key == 7 && e.readable), "{events:?}");
+        let mut byte = [0u8; 1];
+        let mut b_ref = &b;
+        b_ref.read_exact(&mut byte).unwrap();
+        assert_eq!(&byte, b"x");
+        poller.delete(b.as_raw_fd()).unwrap();
+    }
+
+    #[test]
+    fn write_interest_reports_writable() {
+        let (_a, b) = UnixStream::pair().unwrap();
+        b.set_nonblocking(true).unwrap();
+        let mut poller = Poller::new().unwrap();
+        poller.add(b.as_raw_fd(), 3, false, true).unwrap();
+        let mut events = Vec::new();
+        poller.wait(&mut events, Some(Duration::from_millis(1000))).unwrap();
+        assert!(events.iter().any(|e| e.key == 3 && e.writable), "{events:?}");
+        poller.modify(b.as_raw_fd(), 3, true, false).unwrap();
+        poller.wait(&mut events, Some(Duration::from_millis(10))).unwrap();
+        assert!(events.iter().all(|e| e.key != 3 || !e.writable));
+    }
+
+    #[test]
+    fn timeout_rounding_never_spins_at_zero() {
+        assert_eq!(timeout_ms(None), -1);
+        assert_eq!(timeout_ms(Some(Duration::ZERO)), 0);
+        assert_eq!(timeout_ms(Some(Duration::from_nanos(1))), 1);
+        assert_eq!(timeout_ms(Some(Duration::from_millis(25))), 25);
+        assert_eq!(timeout_ms(Some(Duration::from_secs(1 << 40))), i32::MAX);
+    }
+}

@@ -8,23 +8,30 @@
 //!   Prometheus text exposition format (version 0.0.4), and
 //! - `/healthz` — liveness (`200 ok`).
 //!
-//! The server is deliberately small: it parses only the request line,
-//! answers with `Connection: close`, and serves requests serially on one
-//! daemon thread — a scrape endpoint sees one poller every few seconds,
-//! not traffic.  Anything beyond `GET /metrics` and `GET /healthz` gets
-//! a 404/405; malformed or oversized requests get a 400.  This listener
-//! is also the seed of the planned HTTP gateway (ROADMAP direction 1).
+//! HTTP is just another framing mode of the shared [`crate::net`] event
+//! loop: [`MetricsService`] parses only the request line, answers with
+//! `Connection: close`, and can either run its own loop ([`spawn`] /
+//! [`serve`]) or ride a training/serving server's loop as a secondary
+//! listener ([`metrics_service`] + `--metrics-addr`) — zero extra
+//! threads, and a scrape stays responsive while every device is busy
+//! because it never waits behind a session.  Anything beyond
+//! `GET /metrics` and `GET /healthz` gets a 404/405; malformed or
+//! oversized requests get a 400.  This listener is also the seed of the
+//! planned HTTP gateway (ROADMAP direction 1).
 
-use std::io::{Read, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::net::{SocketAddr, TcpListener};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{Context, Result};
 
+use crate::net::{Action, EventLoop, Frame, Framing, Service, SessionCx, SessionHandler, Timeouts};
+
 /// Cap on request bytes read (request line + headers).
 const MAX_REQUEST_BYTES: usize = 8192;
 
-/// Per-connection socket timeout.
+/// Per-connection idle/write deadline.
 const IO_TIMEOUT: Duration = Duration::from_secs(5);
 
 /// Bind `addr` and serve `/metrics` + `/healthz` on a background daemon
@@ -42,90 +49,115 @@ pub fn spawn(addr: &str) -> Result<SocketAddr> {
 
 /// Accept-and-respond loop.  `max_requests` bounds the number of
 /// connections served (tests); `None` serves forever.  Per-connection
-/// errors are logged and never kill the loop.
+/// errors close that connection and never kill the loop.
 pub fn serve(listener: TcpListener, max_requests: Option<usize>) {
-    let mut served = 0usize;
-    for stream in listener.incoming() {
-        match stream {
-            Ok(stream) => {
-                if let Err(e) = handle(stream) {
-                    eprintln!("[metrics] request failed: {e:#}");
+    let result = (|| -> Result<()> {
+        let mut el = EventLoop::new(0)?;
+        el.add_listener(listener, Arc::new(MetricsService::new(max_requests)), true)?;
+        el.run()
+    })();
+    if let Err(e) = result {
+        eprintln!("[metrics] listener failed: {e:#}");
+    }
+}
+
+/// The exporter as an event-loop [`Service`], for mounting on a
+/// training or serving server's own loop (the `--metrics-addr` wiring).
+/// Serves forever; as a secondary listener it never gates loop exit.
+pub(crate) fn metrics_service() -> Arc<dyn Service> {
+    Arc::new(MetricsService::new(None))
+}
+
+/// `/metrics` + `/healthz` over [`Framing::Http`].  Every accepted
+/// connection counts toward `max` (scrapers don't pipeline; one request
+/// per connection is the exporter's contract via `Connection: close`).
+struct MetricsService {
+    max: Option<usize>,
+    started: AtomicUsize,
+    open: Arc<AtomicUsize>,
+}
+
+impl MetricsService {
+    fn new(max: Option<usize>) -> MetricsService {
+        MetricsService { max, started: AtomicUsize::new(0), open: Arc::new(AtomicUsize::new(0)) }
+    }
+}
+
+impl Service for MetricsService {
+    fn framing(&self) -> Framing {
+        Framing::Http { max_head: MAX_REQUEST_BYTES }
+    }
+
+    fn open(&self, _session: u64, _peer: &str) -> Box<dyn SessionHandler> {
+        self.started.fetch_add(1, Ordering::Relaxed);
+        self.open.fetch_add(1, Ordering::Relaxed);
+        Box::new(MetricsSession { open: self.open.clone() })
+    }
+
+    fn timeouts(&self) -> Timeouts {
+        Timeouts { idle: Some(IO_TIMEOUT), write: Some(IO_TIMEOUT) }
+    }
+
+    fn is_done(&self) -> bool {
+        self.max.is_some_and(|max| {
+            self.started.load(Ordering::Relaxed) >= max && self.open.load(Ordering::Relaxed) == 0
+        })
+    }
+}
+
+struct MetricsSession {
+    open: Arc<AtomicUsize>,
+}
+
+impl SessionHandler for MetricsSession {
+    fn on_frame(&mut self, frame: Frame, _cx: &SessionCx) -> Action {
+        let Frame::Http { method, path } = frame else { return Action::Close };
+        let reply = if method != "GET" {
+            response("405 Method Not Allowed", "only GET is supported\n")
+        } else {
+            match path.as_str() {
+                "/metrics" => {
+                    let body = crate::obs::snapshot().to_prometheus();
+                    response_typed("200 OK", "text/plain; version=0.0.4; charset=utf-8", &body)
+                }
+                "/healthz" => response("200 OK", "ok\n"),
+                "" => response("400 Bad Request", "malformed request line\n"),
+                other => {
+                    let body = format!("no route {other}; try /metrics or /healthz\n");
+                    response("404 Not Found", &body)
                 }
             }
-            Err(e) => eprintln!("[metrics] accept failed: {e}"),
-        }
-        served += 1;
-        if max_requests.is_some_and(|max| served >= max) {
-            return;
-        }
+        };
+        Action::ReplyClose(reply)
+    }
+
+    fn on_decode_error(&mut self, _msg: &str) -> Action {
+        Action::ReplyClose(response("400 Bad Request", "request too large\n"))
+    }
+
+    fn on_close(&mut self) {
+        self.open.fetch_sub(1, Ordering::Relaxed);
     }
 }
 
-fn handle(mut stream: TcpStream) -> Result<()> {
-    stream.set_read_timeout(Some(IO_TIMEOUT)).context("setting read timeout")?;
-    stream.set_write_timeout(Some(IO_TIMEOUT)).context("setting write timeout")?;
-
-    let mut buf = Vec::new();
-    let mut chunk = [0u8; 1024];
-    // Read until the header terminator; request bodies are ignored (no
-    // route takes one).
-    while !buf.windows(4).any(|w| w == b"\r\n\r\n") {
-        if buf.len() >= MAX_REQUEST_BYTES {
-            return respond(&mut stream, "400 Bad Request", "request too large\n");
-        }
-        let n = stream.read(&mut chunk).context("reading request")?;
-        if n == 0 {
-            break;
-        }
-        buf.extend_from_slice(&chunk[..n]);
-    }
-
-    let text = String::from_utf8_lossy(&buf);
-    let request_line = text.lines().next().unwrap_or("");
-    let mut parts = request_line.split_whitespace();
-    let (method, path) = (parts.next().unwrap_or(""), parts.next().unwrap_or(""));
-
-    if method != "GET" {
-        return respond(&mut stream, "405 Method Not Allowed", "only GET is supported\n");
-    }
-    match path {
-        "/metrics" => {
-            let body = crate::obs::snapshot().to_prometheus();
-            respond_typed(
-                &mut stream,
-                "200 OK",
-                "text/plain; version=0.0.4; charset=utf-8",
-                &body,
-            )
-        }
-        "/healthz" => respond(&mut stream, "200 OK", "ok\n"),
-        "" => respond(&mut stream, "400 Bad Request", "malformed request line\n"),
-        other => {
-            let body = format!("no route {other}; try /metrics or /healthz\n");
-            respond(&mut stream, "404 Not Found", &body)
-        }
-    }
+fn response(status: &str, body: &str) -> Vec<u8> {
+    response_typed(status, "text/plain; charset=utf-8", body)
 }
 
-fn respond(stream: &mut TcpStream, status: &str, body: &str) -> Result<()> {
-    respond_typed(stream, status, "text/plain; charset=utf-8", body)
-}
-
-fn respond_typed(stream: &mut TcpStream, status: &str, ctype: &str, body: &str) -> Result<()> {
-    write!(
-        stream,
+fn response_typed(status: &str, ctype: &str, body: &str) -> Vec<u8> {
+    format!(
         "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\n\
          Connection: close\r\n\r\n{body}",
         body.len()
     )
-    .context("writing response")?;
-    stream.flush().context("flushing response")?;
-    Ok(())
+    .into_bytes()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::io::{Read, Write};
+    use std::net::TcpStream;
 
     /// Serve `n` requests on an ephemeral port, on a scoped thread.
     fn with_server<R>(n: usize, f: impl FnOnce(SocketAddr) -> R) -> R {
@@ -166,6 +198,21 @@ mod tests {
             assert!(resp.starts_with("HTTP/1.1 404"), "{resp}");
             let resp = get(addr, "POST /metrics HTTP/1.1\r\nHost: x\r\n\r\n");
             assert!(resp.starts_with("HTTP/1.1 405"), "{resp}");
+        });
+    }
+
+    #[test]
+    fn half_closed_request_is_still_answered() {
+        // A client that sends the request line without the header
+        // terminator and half-closes: the loop parses what arrived at
+        // EOF, exactly like the blocking exporter did.
+        with_server(1, |addr| {
+            let mut stream = TcpStream::connect(addr).unwrap();
+            stream.write_all(b"GET /healthz HTTP/1.1\r\n").unwrap();
+            stream.shutdown(std::net::Shutdown::Write).unwrap();
+            let mut out = String::new();
+            stream.read_to_string(&mut out).unwrap();
+            assert!(out.starts_with("HTTP/1.1 200 OK"), "{out}");
         });
     }
 

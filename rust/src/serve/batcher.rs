@@ -54,10 +54,16 @@ pub struct InferOutput {
     pub argmax: Vec<u32>,
 }
 
+/// How a job's answer leaves the batcher.  A closure rather than a
+/// channel so the event-loop server can complete a waiting session
+/// directly (build the wire frame, wake the loop) without parking a
+/// thread per in-flight request.
+pub type ReplyFn = Box<dyn FnOnce(Result<InferOutput>) + Send>;
+
 struct Job {
     rows: Vec<f32>,
     n_rows: usize,
-    reply: mpsc::Sender<Result<InferOutput>>,
+    reply: ReplyFn,
     enqueued: Instant,
 }
 
@@ -173,12 +179,28 @@ impl BatcherClient {
     /// against the wire frame; the batcher trusts its sessions).
     pub fn submit(&self, rows: Vec<f32>, n_rows: usize) -> Result<InferOutput> {
         let (reply_tx, reply_rx) = mpsc::channel();
-        self.tx
-            .send(Job { rows, n_rows, reply: reply_tx, enqueued: Instant::now() })
-            .map_err(|_| anyhow!("inference batcher is gone (server shutting down)"))?;
+        self.submit_with(
+            rows,
+            n_rows,
+            Box::new(move |out| {
+                // A caller that gave up mid-wait is not an error.
+                let _ = reply_tx.send(out);
+            }),
+        )?;
         reply_rx
             .recv()
             .map_err(|_| anyhow!("inference batcher dropped the request (server shutting down)"))?
+    }
+
+    /// Submit without blocking: `reply` runs exactly once, on the
+    /// batcher thread, when the answer is ready (or when the batch
+    /// fails).  If the batcher is already gone the job is never
+    /// enqueued, `reply` is dropped unrun, and the error comes back to
+    /// the caller instead.
+    pub fn submit_with(&self, rows: Vec<f32>, n_rows: usize, reply: ReplyFn) -> Result<()> {
+        self.tx
+            .send(Job { rows, n_rows, reply, enqueued: Instant::now() })
+            .map_err(|_| anyhow!("inference batcher is gone (server shutting down)"))
     }
 }
 
@@ -286,8 +308,7 @@ fn batch_loop(
                     offset += job.n_rows;
                     let out = InferOutput { logits: block.to_vec(), argmax: engine.argmax(block) };
                     latencies.push(done.duration_since(job.enqueued).as_secs_f64());
-                    // A client that gave up mid-wait is not an error.
-                    let _ = job.reply.send(Ok(out));
+                    (job.reply)(Ok(out));
                 }
             }
             Err(e) => {
@@ -298,7 +319,7 @@ fn batch_loop(
                 let msg = format!("{e:#}");
                 for job in jobs {
                     latencies.push(done.duration_since(job.enqueued).as_secs_f64());
-                    let _ = job.reply.send(Err(anyhow!("batched inference failed: {msg}")));
+                    (job.reply)(Err(anyhow!("batched inference failed: {msg}")));
                 }
             }
         }

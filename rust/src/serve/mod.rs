@@ -21,9 +21,15 @@
 //!   which model the endpoint serves.
 //! - [`client`] — [`InferenceClient`], the query-side counterpart
 //!   (chunks big batches at the protocol frame cap).
-//! - [`serve_infer`] — the multi-session TCP server speaking
+//! - [`serve_infer`] — the TCP server speaking
 //!   [`crate::device::protocol::Op::Infer`] (`0x0C`), with fleet-style
 //!   JSONL telemetry (per-batch sizes, p50/p99 request latency).
+//!   Sessions multiplex on the shared [`crate::net`] event loop; an
+//!   `Infer` request validates inline, rides the [`batcher`]
+//!   asynchronously, and completes its session through the loop's waker
+//!   — no thread per session, no thread per in-flight request, so
+//!   hundreds of idle keep-alive sessions cost ~nothing and concurrent
+//!   requests coalesce into large batches regardless of worker count.
 //!
 //! Surfaced as `mgd serve-infer` (host a checkpoint) and `mgd infer`
 //! (query one); `benches/infer_throughput.rs` measures req/s and latency
@@ -39,8 +45,7 @@ pub use client::InferenceClient;
 pub use engine::{EngineSlot, InferenceEngine};
 pub use reload::ReloadConfig;
 
-use std::io::{BufReader, BufWriter};
-use std::net::{TcpListener, TcpStream};
+use std::net::TcpListener;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
@@ -48,8 +53,13 @@ use anyhow::{bail, Result};
 
 use crate::device::protocol as p;
 use crate::fleet::telemetry::{Event, Telemetry};
+use crate::net::{
+    Action, EventLoop, Frame, Framing, NetOptions, Service, SessionBudget, SessionCx,
+    SessionHandler, Timeouts,
+};
+use crate::obs::http::metrics_service;
 
-use batcher::BatcherClient;
+use batcher::{BatcherClient, InferOutput};
 
 /// Inference-server knobs.
 pub struct ServeInferOptions {
@@ -74,14 +84,28 @@ impl Default for ServeInferOptions {
     }
 }
 
-/// Serve `engine` on an already-bound listener: one accept loop, one
-/// thread per client session, every session submitting into one shared
-/// [`Batcher`].  Returns the aggregate [`ServeSummary`] once the session
-/// budget is exhausted (and emits it as an `infer_summary` event).
+/// Serve `engine` on an already-bound listener: every session
+/// multiplexed on one event loop, every `Infer` submitted into one
+/// shared [`Batcher`].  Returns the aggregate [`ServeSummary`] once the
+/// session budget is exhausted (and emits it as an `infer_summary`
+/// event).
 pub fn serve_infer(
     engine: InferenceEngine,
     listener: TcpListener,
     opts: ServeInferOptions,
+) -> Result<ServeSummary> {
+    serve_infer_with(engine, listener, opts, NetOptions::default())
+}
+
+/// [`serve_infer`] with explicit transport knobs (idle/write deadlines,
+/// a shared-loop metrics listener).  Worker threads are not needed here:
+/// non-`Infer` requests answer inline on the loop and `Infer` rides the
+/// batcher thread asynchronously.
+pub fn serve_infer_with(
+    engine: InferenceEngine,
+    listener: TcpListener,
+    opts: ServeInferOptions,
+    net: NetOptions,
 ) -> Result<ServeSummary> {
     let slot = EngineSlot::new(engine);
     let stats = ServeStats::new();
@@ -103,61 +127,25 @@ pub fn serve_infer(
         );
     }
 
-    let mut handles = Vec::new();
-    let mut accepted = 0usize;
-    let mut accept_err: Option<anyhow::Error> = None;
-    for stream in listener.incoming() {
-        let stream = match stream {
-            Ok(stream) => stream,
-            Err(e) => {
-                accept_err = Some(e.into());
-                break;
-            }
-        };
-        accepted += 1;
-        let session = accepted as u64;
-        let peer = stream
-            .peer_addr()
-            .map(|a| a.to_string())
-            .unwrap_or_else(|_| "unknown".to_string());
-        opts.telemetry.emit(Event::SessionOpened { session, peer });
-        let slot = slot.clone();
-        let client = batcher.client();
-        let telemetry = opts.telemetry.clone();
-        let handle = std::thread::Builder::new()
-            .name(format!("mgd-infer-session-{session}"))
-            .spawn(move || {
-                let mut requests = 0u64;
-                match handle_session(stream, &slot, &client, &mut requests) {
-                    Ok(()) => telemetry.emit(Event::SessionClosed {
-                        session,
-                        requests,
-                        ok: true,
-                        error: None,
-                    }),
-                    Err(e) => {
-                        eprintln!("[serve-infer] session {session} ended: {e:#}");
-                        telemetry.emit(Event::SessionClosed {
-                            session,
-                            requests,
-                            ok: false,
-                            error: Some(format!("{e:#}")),
-                        });
-                    }
-                }
-            })
-            .expect("spawning inference session thread");
-        handles.push(handle);
-        handles.retain(|h| !h.is_finished());
-        if let Some(max) = opts.max_sessions {
-            if accepted >= max {
-                break;
-            }
+    let service = Arc::new(InferService {
+        slot,
+        client: batcher.client(),
+        budget: SessionBudget::new(opts.max_sessions),
+        telemetry: opts.telemetry.clone(),
+        timeouts: Timeouts { idle: net.idle_timeout, write: net.write_timeout },
+    });
+    let run_result = (|| -> Result<()> {
+        let mut el = EventLoop::new(net.workers)?;
+        el.add_listener(listener, service, true)?;
+        if let Some(metrics) = net.metrics {
+            el.add_listener(metrics, metrics_service(), false)?;
         }
-    }
-    for handle in handles {
-        let _ = handle.join();
-    }
+        el.run()
+        // The loop (and with it every session's BatcherClient, plus the
+        // service's own) drops here — a must, or the batcher channel
+        // would never disconnect and shutdown below would hang.
+    })();
+
     // Sessions are gone; release the batcher and the watcher.
     batcher.shutdown();
     stop.store(true, Ordering::Relaxed);
@@ -176,42 +164,164 @@ pub fn serve_infer(
         "[serve-infer] served {} requests / {} rows in {} batches (p50 {:.2} ms, p99 {:.2} ms)",
         summary.requests, summary.rows, summary.batches, summary.p50_ms, summary.p99_ms
     );
-    match accept_err {
-        Some(e) => Err(e),
-        None => Ok(summary),
+    match run_result {
+        Err(e) => Err(e),
+        Ok(()) => Ok(summary),
     }
 }
 
-/// One client session.  Counts served requests into `requests`.
-fn handle_session(
-    stream: TcpStream,
-    slot: &Arc<EngineSlot>,
-    batcher: &BatcherClient,
-    requests: &mut u64,
-) -> Result<()> {
-    stream.set_nodelay(true).ok();
-    let mut reader = BufReader::new(stream.try_clone()?);
-    let mut writer = BufWriter::new(stream);
-    loop {
-        let (op, payload) = match p::read_request(&mut reader) {
-            Ok(req) => req,
-            Err(e) => {
-                // Client hung up without Bye (fine), or sent an
-                // oversized/garbage frame (tell it why, then close).
-                let _ = p::write_err(&mut writer, &format!("{e:#}"));
-                return Ok(());
+/// The inference server as an event-loop [`Service`].
+struct InferService {
+    slot: Arc<EngineSlot>,
+    client: BatcherClient,
+    budget: Arc<SessionBudget>,
+    telemetry: Arc<Telemetry>,
+    timeouts: Timeouts,
+}
+
+impl Service for InferService {
+    fn framing(&self) -> Framing {
+        Framing::Binary
+    }
+
+    fn open(&self, session: u64, peer: &str) -> Box<dyn SessionHandler> {
+        self.telemetry.emit(Event::SessionOpened { session, peer: peer.to_string() });
+        Box::new(InferSession {
+            slot: self.slot.clone(),
+            batcher: self.client.clone(),
+            budget: self.budget.clone(),
+            telemetry: self.telemetry.clone(),
+            session,
+            requests: 0,
+            counted: false,
+        })
+    }
+
+    fn timeouts(&self) -> Timeouts {
+        self.timeouts
+    }
+
+    fn is_done(&self) -> bool {
+        self.budget.done()
+    }
+}
+
+/// One inference session.  Every processed frame counts into `requests`
+/// (matching the blocking server); only sessions that issue real work —
+/// anything beyond `Stats`/`Bye` — consume the `--max-sessions` budget.
+struct InferSession {
+    slot: Arc<EngineSlot>,
+    batcher: BatcherClient,
+    budget: Arc<SessionBudget>,
+    telemetry: Arc<Telemetry>,
+    session: u64,
+    requests: u64,
+    counted: bool,
+}
+
+impl SessionHandler for InferSession {
+    fn on_frame(&mut self, frame: Frame, cx: &SessionCx) -> Action {
+        let Frame::Binary { op, payload } = frame else { return Action::Close };
+        if !self.counted && !matches!(op, p::Op::Stats | p::Op::Bye) {
+            self.counted = self.budget.try_start();
+            if !self.counted {
+                return Action::ReplyClose(p::err_frame(
+                    "server is draining: session budget (--max-sessions) exhausted",
+                ));
             }
-        };
-        *requests += 1;
-        match handle_request(slot, batcher, op, &payload) {
-            Ok(Some(reply)) => p::write_ok(&mut writer, &reply)?,
-            Ok(None) => {
-                p::write_ok(&mut writer, &[])?;
-                return Ok(()); // Bye
-            }
-            Err(e) => p::write_err(&mut writer, &format!("{e:#}"))?,
+        }
+        self.requests += 1;
+        if op == p::Op::Infer {
+            // Validate on the loop (cheap), batch off it: the reply
+            // frame is built on the batcher thread and completes this
+            // session through the loop's waker.
+            return match infer_validate(&self.slot, &payload) {
+                Err(e) => Action::Reply(p::err_frame(&format!("{e:#}"))),
+                Ok((rows, n_rows)) => {
+                    let done = cx.completion();
+                    let submitted = self.batcher.submit_with(
+                        rows,
+                        n_rows,
+                        Box::new(move |out| {
+                            let frame = match out {
+                                Ok(out) => p::ok_frame(&infer_reply(&out, n_rows)),
+                                Err(e) => p::err_frame(&format!("{e:#}")),
+                            };
+                            done.complete(frame);
+                        }),
+                    );
+                    match submitted {
+                        Ok(()) => Action::Pending,
+                        Err(e) => Action::Reply(p::err_frame(&format!("{e:#}"))),
+                    }
+                }
+            };
+        }
+        match handle_request(&self.slot, &self.batcher, op, &payload) {
+            Ok(Some(reply)) => Action::Reply(p::ok_frame(&reply)),
+            Ok(None) => Action::ReplyClose(p::ok_frame(&[])), // Bye
+            Err(e) => Action::Reply(p::err_frame(&format!("{e:#}"))),
         }
     }
+
+    fn on_decode_error(&mut self, msg: &str) -> Action {
+        // A garbage or oversized frame still marks a working client:
+        // consume budget (a bounded server must drain even on abuse),
+        // tell it why, close.
+        if !self.counted {
+            self.counted = self.budget.try_start();
+        }
+        Action::ReplyClose(p::err_frame(msg))
+    }
+
+    fn on_close(&mut self) {
+        if self.counted {
+            self.budget.finish();
+        }
+        self.telemetry.emit(Event::SessionClosed {
+            session: self.session,
+            requests: self.requests,
+            ok: true,
+            error: None,
+        });
+    }
+}
+
+/// Validate an `Infer` payload against the engine's shape and the reply
+/// frame cap; returns the rows and row count ready for the batcher.
+fn infer_validate(slot: &Arc<EngineSlot>, payload: &[u8]) -> Result<(Vec<f32>, usize)> {
+    let mut pos = 0usize;
+    let n_rows = p::get_u32(payload, &mut pos)? as usize;
+    let rows = p::get_array(payload, &mut pos)?;
+    let engine = slot.current();
+    let in_len = engine.input_len();
+    let k = engine.n_outputs();
+    let expect = n_rows
+        .checked_mul(in_len)
+        .ok_or_else(|| anyhow::anyhow!("Infer: row count {n_rows} overflows the input size"))?;
+    if rows.len() != expect {
+        bail!(
+            "Infer: {n_rows} rows of {in_len} features need {expect} floats, \
+             got {} — input width mismatch",
+            rows.len()
+        );
+    }
+    let max_rows = p::max_infer_rows_per_frame(in_len, k);
+    if n_rows > max_rows {
+        bail!(
+            "Infer: {n_rows} rows would overflow the reply frame \
+             ({k} logits + argmax per row); chunk requests at {max_rows} rows"
+        );
+    }
+    Ok((rows, n_rows))
+}
+
+/// Render a batcher answer as the `Infer` reply payload.
+fn infer_reply(out: &InferOutput, n_rows: usize) -> Vec<u8> {
+    let mut reply = Vec::with_capacity(p::INFER_OVERHEAD_BYTES + 4 * (out.logits.len() + n_rows));
+    p::put_array(&mut reply, &out.logits);
+    p::put_u32_array(&mut reply, &out.argmax);
+    reply
 }
 
 /// Dispatch one request. `Ok(None)` signals session end (Bye).
@@ -259,34 +369,12 @@ fn handle_request(
         }
         p::Op::Ping => payload.to_vec(),
         p::Op::Infer => {
-            let n_rows = p::get_u32(payload, &mut pos)? as usize;
-            let rows = p::get_array(payload, &mut pos)?;
-            let engine = slot.current();
-            let in_len = engine.input_len();
-            let k = engine.n_outputs();
-            let expect = n_rows.checked_mul(in_len).ok_or_else(|| {
-                anyhow::anyhow!("Infer: row count {n_rows} overflows the input size")
-            })?;
-            if rows.len() != expect {
-                bail!(
-                    "Infer: {n_rows} rows of {in_len} features need {expect} floats, \
-                     got {} — input width mismatch",
-                    rows.len()
-                );
-            }
-            let max_rows = p::max_infer_rows_per_frame(in_len, k);
-            if n_rows > max_rows {
-                bail!(
-                    "Infer: {n_rows} rows would overflow the reply frame \
-                     ({k} logits + argmax per row); chunk requests at {max_rows} rows"
-                );
-            }
+            // Blocking convenience path (unit tests, simple embedders);
+            // the event-loop session uses the same validate/reply
+            // helpers with an asynchronous submit.
+            let (rows, n_rows) = infer_validate(slot, payload)?;
             let out = batcher.submit(rows, n_rows)?;
-            let mut reply =
-                Vec::with_capacity(p::INFER_OVERHEAD_BYTES + 4 * (out.logits.len() + n_rows));
-            p::put_array(&mut reply, &out.logits);
-            p::put_u32_array(&mut reply, &out.argmax);
-            reply
+            infer_reply(&out, n_rows)
         }
         p::Op::Stats => {
             // Live metrics snapshot (same reply as the training server):
