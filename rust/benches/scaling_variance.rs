@@ -1,0 +1,305 @@
+//! Perturbation scaling engine bench: accuracy-vs-cost_evals curves for
+//! the dense and structured-sparse/antithetic families at P ∈ {10k, 100k},
+//! plus a gradient-estimator variance measurement under cost noise.
+//!
+//! Two measurements:
+//! 1. equal-eval-budget training curves — dense Rademacher, layer-sparse,
+//!    block-sparse, and antithetic trainers each get the same number of
+//!    device cost evaluations (the paper's hardware-time unit) and report
+//!    their (step, cost, accuracy) trajectories;
+//! 2. G variance under σ_cost = 1.0 — accumulate G without updates
+//!    (τθ = ∞) over equal eval budgets, repeat across seeds, and compare
+//!    the per-coordinate variance of the antithetic (central-difference)
+//!    estimator against dense forward-difference.
+//!
+//! The eval-budget arithmetic: at τx = τθ = 20 a forward-difference
+//! family spends 21 evals per 20 steps (20 probes + 1 baseline per
+//! sample window) while antithetic spends 20 (paired probes, no
+//! baseline), so a budget of 420·Q evals runs 400·Q forward-difference
+//! steps and 420·Q antithetic steps exactly.
+//!
+//! ```text
+//! cargo bench --bench scaling_variance
+//! ```
+//!
+//! Env toggles (the nightly CI bench job sets both):
+//! `MGD_BENCH_QUICK=1` shrinks the budgets; `MGD_BENCH_JSON=path`
+//! appends one JSONL record that the workflow merges into
+//! `BENCH_scaling.json`.  The nightly job hard-asserts, post-upload:
+//! equal `cost_evals` across families at P = 10k,
+//! `layer_sparse_over_dense_final_cost <= 1.05`, and
+//! `antithetic_over_dense_g_var <= 0.6`.
+
+use mgd::bench::{emit_bench_json, json_obj, quick_mode};
+use mgd::coordinator::{MgdConfig, MgdTrainer, ScheduleKind, TrainOptions};
+use mgd::datasets::Dataset;
+use mgd::device::{HardwareDevice, NativeDevice};
+use mgd::json::Json;
+use mgd::model::ModelSpec;
+use mgd::optim::init_params_uniform;
+use mgd::perturb::PerturbKind;
+use mgd::rng::Rng;
+
+/// Sample window / update window (even, as antithetic requires).
+const TAU: u64 = 20;
+/// Evals per 20 steps for a forward-difference family at τx = 20.
+const FD_EVALS_PER_TAU: u64 = TAU + 1;
+
+/// P = 100·90+90 + 90·10+10 = 10 000 exactly.
+const P10K_SPEC: &str = "100x90x10";
+/// P = 300·300+300 + 300·30+30 = 99 330.
+const P100K_SPEC: &str = "300x300x30";
+
+/// Argmax-of-a-prefix synthetic task: the label is the index of the
+/// largest of the first `n_out` inputs — linearly learnable at any input
+/// width, so curves measure the estimator, not the task.
+fn argmax_dataset(n_in: usize, n_out: usize, n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed ^ 0x5343_414c); // "SCAL"
+    let mut x = vec![0f32; n * n_in];
+    rng.fill_uniform(&mut x, 0.0, 1.0);
+    let mut y = vec![0f32; n * n_out];
+    for i in 0..n {
+        let row = &x[i * n_in..i * n_in + n_out];
+        let mut best = 0usize;
+        for (j, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = j;
+            }
+        }
+        y[i * n_out + best] = 1.0;
+    }
+    Dataset { x, y, n, input_shape: vec![n_in], n_outputs: n_out }
+}
+
+fn device_for(spec: &ModelSpec, seed: u64) -> NativeDevice {
+    let mut dev = NativeDevice::from_spec(spec.clone(), 1).unwrap();
+    let mut rng = Rng::new(seed ^ 0x494e_4954);
+    let mut theta = vec![0f32; dev.n_params()];
+    init_params_uniform(&mut rng, &mut theta, 1.0);
+    dev.set_params(&theta).unwrap();
+    dev
+}
+
+struct FamilyRun {
+    label: &'static str,
+    cost_evals: u64,
+    final_cost: f32,
+    final_acc: f32,
+    curve: Vec<(u64, f32, f32)>,
+}
+
+/// Train one family for `steps` timesteps and return its trajectory.
+fn run_family(
+    label: &'static str,
+    kind: PerturbKind,
+    spec: &ModelSpec,
+    train_set: &Dataset,
+    eval_set: &Dataset,
+    steps: u64,
+    seed: u64,
+) -> anyhow::Result<FamilyRun> {
+    let mut dev = device_for(spec, seed);
+    let cfg = MgdConfig {
+        tau_x: TAU,
+        tau_theta: TAU,
+        tau_p: 1,
+        eta: 0.5,
+        amplitude: 0.01,
+        kind,
+        seed,
+        ..Default::default()
+    };
+    let mut tr = MgdTrainer::try_new(&mut dev, train_set, cfg, ScheduleKind::Cyclic)?;
+    let opts = TrainOptions {
+        max_steps: steps,
+        eval_every: (steps / 8).max(1),
+        ..Default::default()
+    };
+    let res = tr.train(&opts, Some(eval_set))?;
+    let (_, final_cost, final_acc) = *res.eval_trace.last().expect("eval trace is non-empty");
+    Ok(FamilyRun {
+        label,
+        cost_evals: res.cost_evals,
+        final_cost,
+        final_acc,
+        curve: res.eval_trace,
+    })
+}
+
+/// Accumulate G for an equal eval budget with updates disabled and
+/// return the per-coordinate G variance across `repeats` seeds, averaged
+/// over coordinates.
+fn g_variance(
+    kind: PerturbKind,
+    spec: &ModelSpec,
+    train_set: &Dataset,
+    steps: u64,
+    repeats: u64,
+) -> anyhow::Result<(f64, u64)> {
+    let mut gs: Vec<Vec<f32>> = Vec::new();
+    let mut evals = 0u64;
+    for r in 0..repeats {
+        // Same θ across repeats: the variance measured is the gradient
+        // estimator's, not the landscape's.
+        let mut dev = device_for(spec, 7);
+        let cfg = MgdConfig {
+            tau_x: TAU,
+            tau_theta: u64::MAX, // never update: G integrates the whole run
+            tau_p: 1,
+            eta: 0.5,
+            amplitude: 0.01,
+            kind,
+            noise: mgd::noise::NoiseConfig { sigma_cost: 1.0, sigma_update: 0.0 },
+            seed: 0xA0 + r,
+            ..Default::default()
+        };
+        let mut tr = MgdTrainer::try_new(&mut dev, train_set, cfg, ScheduleKind::Cyclic)?;
+        for _ in 0..steps {
+            tr.step()?;
+        }
+        evals = tr.cost_evals();
+        gs.push(tr.checkpoint()?.g);
+    }
+    let p = gs[0].len();
+    let n = gs.len() as f64;
+    let mut var_sum = 0f64;
+    for i in 0..p {
+        let mean: f64 = gs.iter().map(|g| g[i] as f64).sum::<f64>() / n;
+        var_sum += gs.iter().map(|g| (g[i] as f64 - mean).powi(2)).sum::<f64>() / (n - 1.0);
+    }
+    Ok((var_sum / p as f64, evals))
+}
+
+fn curve_json(runs: &[FamilyRun]) -> Json {
+    Json::Arr(
+        runs.iter()
+            .map(|r| {
+                json_obj(vec![
+                    ("family", Json::Str(r.label.to_string())),
+                    ("cost_evals", Json::Num(r.cost_evals as f64)),
+                    ("final_cost", Json::Num(r.final_cost as f64)),
+                    ("final_accuracy", Json::Num(r.final_acc as f64)),
+                    (
+                        "curve",
+                        Json::Arr(
+                            r.curve
+                                .iter()
+                                .map(|&(s, c, a)| {
+                                    Json::Arr(vec![
+                                        Json::Num(s as f64),
+                                        Json::Num(c as f64),
+                                        Json::Num(a as f64),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect(),
+    )
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = quick_mode();
+    if quick {
+        println!("scaling_variance (quick mode)");
+    }
+    // Q scales the shared eval budget (420·Q evals per family).
+    let (q_10k, q_100k, seeds, var_repeats) =
+        if quick { (25u64, 5u64, 3u64, 4u64) } else { (250, 25, 3, 8) };
+
+    // -- Section 1: equal-eval-budget curves ------------------------------
+    let families: [(&str, PerturbKind); 4] = [
+        ("dense", PerturbKind::RademacherCode),
+        ("layer_sparse", PerturbKind::LayerSparse),
+        ("block_sparse:256", PerturbKind::BlockSparse { block: 256 }),
+        ("antithetic", PerturbKind::Antithetic),
+    ];
+    let mut sections: Vec<(String, Json)> = Vec::new();
+    let mut p10k_runs: Vec<FamilyRun> = Vec::new();
+    for (spec_str, qq, n_seeds) in [(P10K_SPEC, q_10k, seeds), (P100K_SPEC, q_100k, 1)] {
+        let spec: ModelSpec = spec_str.parse()?;
+        let p = spec.param_count();
+        let train_set = argmax_dataset(spec.n_inputs(), spec.n_outputs(), 256, 1);
+        let eval_set = argmax_dataset(spec.n_inputs(), spec.n_outputs(), 256, 2);
+        println!(
+            "== equal-budget curves: {spec_str} (P = {p}, {} evals/family) ==",
+            FD_EVALS_PER_TAU * TAU * qq
+        );
+        let mut seed_runs: Vec<FamilyRun> = Vec::new();
+        for seed in 0..n_seeds {
+            for &(label, kind) in &families {
+                // Forward-difference families: 400·Q steps = 420·Q evals.
+                // Antithetic: 420·Q steps = 420·Q evals (no baseline).
+                let steps = if kind == PerturbKind::Antithetic {
+                    FD_EVALS_PER_TAU * TAU * qq
+                } else {
+                    TAU * TAU * qq
+                };
+                let run =
+                    run_family(label, kind, &spec, &train_set, &eval_set, steps, 100 + seed)?;
+                println!(
+                    "  seed {seed} {label:<18} {:>8} evals  cost {:.5}  acc {:.2}%",
+                    run.cost_evals,
+                    run.final_cost,
+                    run.final_acc * 100.0
+                );
+                seed_runs.push(run);
+            }
+        }
+        sections.push((format!("p{p}"), curve_json(&seed_runs)));
+        if spec_str == P10K_SPEC {
+            p10k_runs = seed_runs;
+        }
+    }
+
+    // Mean final cost per family at P = 10k, across seeds.
+    let mean_cost = |label: &str| -> f64 {
+        let costs: Vec<f64> = p10k_runs
+            .iter()
+            .filter(|r| r.label == label)
+            .map(|r| r.final_cost as f64)
+            .collect();
+        costs.iter().sum::<f64>() / costs.len() as f64
+    };
+    let sparse_over_dense = mean_cost("layer_sparse") / mean_cost("dense");
+    let p10k_evals = |label: &str| -> u64 {
+        p10k_runs.iter().find(|r| r.label == label).map(|r| r.cost_evals).unwrap_or(0)
+    };
+    println!(
+        "layer_sparse over dense final cost at P=10k: {sparse_over_dense:.4} (bar: <= 1.05)"
+    );
+
+    // -- Section 2: G variance under cost noise ---------------------------
+    let spec: ModelSpec = P10K_SPEC.parse()?;
+    let train_set = argmax_dataset(spec.n_inputs(), spec.n_outputs(), 256, 1);
+    println!("== G variance under sigma_cost = 1.0 ({var_repeats} repeats) ==");
+    let (dense_var, dense_var_evals) =
+        g_variance(PerturbKind::RademacherCode, &spec, &train_set, TAU * TAU, var_repeats)?;
+    let anti_steps = FD_EVALS_PER_TAU * TAU;
+    let (anti_var, anti_var_evals) =
+        g_variance(PerturbKind::Antithetic, &spec, &train_set, anti_steps, var_repeats)?;
+    let var_ratio = anti_var / dense_var;
+    println!("  dense      var {dense_var:.4e} over {dense_var_evals} evals");
+    println!("  antithetic var {anti_var:.4e} over {anti_var_evals} evals");
+    println!("  antithetic over dense G variance: {var_ratio:.4} (bar: <= 0.6)");
+
+    let mut record = vec![
+        ("bench", Json::Str("scaling_variance".to_string())),
+        ("quick", Json::Bool(quick)),
+        ("p10k_cost_evals_dense", Json::Num(p10k_evals("dense") as f64)),
+        ("p10k_cost_evals_layer_sparse", Json::Num(p10k_evals("layer_sparse") as f64)),
+        ("p10k_cost_evals_antithetic", Json::Num(p10k_evals("antithetic") as f64)),
+        ("layer_sparse_over_dense_final_cost", Json::Num(sparse_over_dense)),
+        ("antithetic_over_dense_g_var", Json::Num(var_ratio)),
+        ("g_var_dense", Json::Num(dense_var)),
+        ("g_var_antithetic", Json::Num(anti_var)),
+        ("g_var_evals", Json::Num(dense_var_evals as f64)),
+    ];
+    for (name, curves) in &sections {
+        record.push((name.as_str(), curves.clone()));
+    }
+    emit_bench_json(&json_obj(record));
+    Ok(())
+}

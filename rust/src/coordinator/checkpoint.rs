@@ -111,6 +111,19 @@ pub struct TrainerSnapshot {
     /// Stable spec hash matching `model` — what restore validates
     /// against the live device's spec.
     pub spec_hash: Option<u64>,
+    /// Antithetic pairing state: the even step's measured `C⁺` when the
+    /// snapshot was taken mid-pair (`None` otherwise, and always for the
+    /// forward-difference families).  Absent in pre-engine v2 files —
+    /// read as `None`.
+    pub pending_c: Option<f32>,
+    /// Per-layer learning-rate multipliers of the installed
+    /// [`crate::perturb::PerLayerSchedule`] (empty = no schedule; absent
+    /// in pre-engine v2 files — read as empty).  Restore requires the
+    /// live trainer's schedule to match bit-exactly, like every other
+    /// config field.
+    pub layer_lr: Vec<f32>,
+    /// Per-layer amplitude multipliers (see `layer_lr`).
+    pub layer_amp: Vec<f32>,
 }
 
 // ---------------------------------------------------------------------------
@@ -214,7 +227,7 @@ fn config_to_json(cfg: &MgdConfig) -> Json {
     m.insert("tau_p".to_string(), ju64(cfg.tau_p));
     m.insert("eta".to_string(), jf32(cfg.eta));
     m.insert("amplitude".to_string(), jf32(cfg.amplitude));
-    m.insert("kind".to_string(), Json::Str(cfg.kind.as_str().to_string()));
+    m.insert("kind".to_string(), Json::Str(cfg.kind.token()));
     m.insert("sigma_cost".to_string(), jf32(cfg.noise.sigma_cost));
     m.insert("sigma_update".to_string(), jf32(cfg.noise.sigma_update));
     m.insert("seed".to_string(), ju64(cfg.seed));
@@ -292,7 +305,7 @@ pub fn ensure_config_matches(live: &MgdConfig, saved: &MgdConfig) -> Result<()> 
         return mismatch("amplitude", live.amplitude.to_string(), saved.amplitude.to_string());
     }
     if live.kind != saved.kind {
-        return mismatch("kind", live.kind.as_str().into(), saved.kind.as_str().into());
+        return mismatch("kind", live.kind.token(), saved.kind.token());
     }
     if live.noise.sigma_cost.to_bits() != saved.noise.sigma_cost.to_bits() {
         return mismatch(
@@ -345,6 +358,15 @@ impl TrainerSnapshot {
             },
         );
         m.insert("spec_hash".to_string(), jopt_u64(self.spec_hash));
+        m.insert(
+            "pending_c".to_string(),
+            match self.pending_c {
+                Some(c) => jf32(c),
+                None => Json::Null,
+            },
+        );
+        m.insert("layer_lr".to_string(), jf32_arr(&self.layer_lr));
+        m.insert("layer_amp".to_string(), jf32_arr(&self.layer_amp));
         Json::Obj(m)
     }
 
@@ -373,6 +395,22 @@ impl TrainerSnapshot {
         } else {
             (None, None)
         };
+        // Scaling-engine fields were added mid-v2; files written before
+        // them simply omit the keys, which reads as "no antithetic pair
+        // in flight, no per-layer schedule" — exactly the state those
+        // trainers were in.
+        let pending_c = match j.field("pending_c") {
+            Ok(Json::Null) | Err(_) => None,
+            Ok(other) => Some(pf32(other)?),
+        };
+        let layer_lr = match j.field("layer_lr") {
+            Ok(v) => pf32_arr(v)?,
+            Err(_) => Vec::new(),
+        };
+        let layer_amp = match j.field("layer_amp") {
+            Ok(v) => pf32_arr(v)?,
+            Err(_) => Vec::new(),
+        };
         let sched = j.field("schedule")?;
         Ok(TrainerSnapshot {
             config: config_from_json(j.field("config")?)?,
@@ -394,6 +432,9 @@ impl TrainerSnapshot {
             pert: pert_from_json(j.field("pert")?)?,
             model,
             spec_hash,
+            pending_c,
+            layer_lr,
+            layer_amp,
         })
     }
 }
@@ -716,6 +757,67 @@ mod tests {
         assert_eq!(back.model.as_deref(), Some("2x2x1:sigmoid,sigmoid"));
         let spec: crate::model::ModelSpec = "2x2x1".parse().unwrap();
         assert_eq!(back.spec_hash, Some(spec.spec_hash()));
+        // Scaling-engine fields: a forward-difference trainer with no
+        // schedule writes the empty defaults.
+        assert_eq!(back.pending_c.map(f32::to_bits), snap.pending_c.map(f32::to_bits));
+        assert_eq!(snap.pending_c, None);
+        assert!(back.layer_lr.is_empty() && back.layer_amp.is_empty());
+    }
+
+    #[test]
+    fn scaling_engine_fields_roundtrip_and_default_when_absent() {
+        let data = xor();
+        let cfg = MgdConfig {
+            tau_x: 2,
+            tau_theta: 4,
+            kind: PerturbKind::Antithetic,
+            seed: 13,
+            ..Default::default()
+        };
+        let mut dev = xor_device(13);
+        let mut tr = MgdTrainer::new(&mut dev, &data, cfg, ScheduleKind::Cyclic);
+        let sched = crate::perturb::PerLayerSchedule::new(vec![1.0, 0.5], vec![1.0, 0.25]).unwrap();
+        tr.set_layer_schedule(&sched).unwrap();
+        // Stop after an even step: the antithetic pair is half-open and
+        // pending_c holds the even step's C⁺.
+        for _ in 0..7 {
+            tr.step().unwrap();
+        }
+        let snap = tr.checkpoint().unwrap();
+        assert!(snap.pending_c.is_some(), "odd step count must leave a half-open pair");
+        assert_eq!(snap.layer_lr, vec![1.0, 0.5]);
+        assert_eq!(snap.layer_amp, vec![1.0, 0.25]);
+        let back =
+            TrainerSnapshot::from_json(&Json::parse(&snap.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(back.pending_c.map(f32::to_bits), snap.pending_c.map(f32::to_bits));
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&back.layer_lr), bits(&snap.layer_lr));
+        assert_eq!(bits(&back.layer_amp), bits(&snap.layer_amp));
+        // The config kind round-trips through its token form.
+        assert_eq!(back.config.kind, PerturbKind::Antithetic);
+        // A pre-engine v2 document omits all three keys; they read as
+        // "nothing in flight, no schedule".
+        let mut doc = match snap.to_json() {
+            Json::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        doc.remove("pending_c");
+        doc.remove("layer_lr");
+        doc.remove("layer_amp");
+        let old = TrainerSnapshot::from_json(&Json::Obj(doc)).unwrap();
+        assert_eq!(old.pending_c, None);
+        assert!(old.layer_lr.is_empty() && old.layer_amp.is_empty());
+    }
+
+    #[test]
+    fn block_sparse_kind_roundtrips_through_config_token() {
+        let cfg = MgdConfig { kind: PerturbKind::BlockSparse { block: 3 }, ..Default::default() };
+        let back = config_from_json(&config_to_json(&cfg)).unwrap();
+        assert_eq!(back.kind, PerturbKind::BlockSparse { block: 3 });
+        assert!(ensure_config_matches(&cfg, &back).is_ok());
+        let live = MgdConfig { kind: PerturbKind::BlockSparse { block: 4 }, ..Default::default() };
+        let err = ensure_config_matches(&live, &back).unwrap_err();
+        assert!(format!("{err:#}").contains("block_sparse:3"), "{err:#}");
     }
 
     #[test]

@@ -27,7 +27,7 @@ use super::{MgdConfig, TrainOptions, TrainResult};
 use crate::datasets::Dataset;
 use crate::device::HardwareDevice;
 use crate::obs;
-use crate::perturb::{self, Perturbation};
+use crate::perturb::{self, PerLayerSchedule, PerturbKind, Perturbation};
 use crate::rng::Rng;
 
 /// What one timestep observed (for trace harnesses).
@@ -37,7 +37,10 @@ pub struct StepOutput {
     pub step: u64,
     /// Perturbed cost C measured this step (noise included).
     pub cost: f32,
-    /// Cost modulation C̃ = C − C₀ used for the homodyne product.
+    /// Cost modulation used for the homodyne product: `C − C₀` for the
+    /// forward-difference families; for antithetic pairs, `0.0` on the
+    /// even (`+θ̃`) step and the central difference `(C⁻ − C⁺)/2` on the
+    /// odd (`−θ̃`) step that closes the pair.
     pub c_tilde: f32,
     /// Whether a parameter update fired at the end of this step.
     pub updated: bool,
@@ -77,6 +80,17 @@ fn record_g_norm(g: &[f32]) {
     }
 }
 
+/// Per-parameter expansion of a [`PerLayerSchedule`] — the hot-path
+/// form, tiled over `param_layout()` once at configuration time.
+struct LayerScales {
+    /// η multiplier per parameter.
+    lr: Vec<f32>,
+    /// Probe-amplitude multiplier per parameter.
+    amp: Vec<f32>,
+    /// `1/Δθ_i²` per parameter, with `Δθ_i = Δθ · amp_i`.
+    inv_a2: Vec<f32>,
+}
+
 /// The discrete MGD trainer (Algorithm 1) over a black-box device.
 pub struct MgdTrainer<'d> {
     dev: &'d mut dyn HardwareDevice,
@@ -110,22 +124,57 @@ pub struct MgdTrainer<'d> {
     step: u64,
     rng: Rng,
     cost_evals: u64,
+    /// Antithetic pairing: the even step's measured `C⁺`, waiting for the
+    /// odd step's `C⁻` to close the central difference.  `None` outside a
+    /// half-open pair.  Forward-difference families never set it.
+    pending_c: Option<f32>,
+    /// Per-parameter schedule expansions (`None` = scalar fast path,
+    /// bit-identical to the pre-schedule trainer).
+    scales: Option<LayerScales>,
+    /// The per-layer schedule as configured (checkpoint identity).
+    layer_schedule: Option<PerLayerSchedule>,
 }
 
 impl<'d> MgdTrainer<'d> {
-    /// Build a trainer.  The device's parameters must already be
-    /// initialized (see [`crate::optim::init_params`]).
-    pub fn new(
+    /// Build a trainer, validating the configuration against the device.
+    /// The device's parameters must already be initialized (see
+    /// [`crate::optim::init_params`]).
+    ///
+    /// Fails when [`PerturbKind::LayerSparse`] is requested on a device
+    /// with no [`ModelSpec`](crate::model::ModelSpec), or when
+    /// [`PerturbKind::Antithetic`] is paired with an odd `τx`/`τθ`
+    /// cadence (a ±pair must never straddle a sample change or a
+    /// parameter update — the two evals would measure different cost
+    /// surfaces).
+    pub fn try_new(
         dev: &'d mut dyn HardwareDevice,
         dataset: &'d Dataset,
         cfg: MgdConfig,
         schedule_kind: ScheduleKind,
-    ) -> Self {
+    ) -> Result<Self> {
+        if cfg.kind == PerturbKind::Antithetic {
+            let tau_x = cfg.tau_x.max(1);
+            if tau_x % 2 != 0 {
+                bail!("antithetic probes pair consecutive steps: τx must be even (got {tau_x})");
+            }
+            let tau_t = cfg.tau_theta;
+            if tau_t != u64::MAX && tau_t.max(1) % 2 != 0 {
+                bail!("antithetic pairing needs τθ even or ∞ (got {tau_t})");
+            }
+        }
         let p = dev.n_params();
         let batch = dev.batch_size();
+        let layout = dev.model_spec().map(|s| s.param_layout());
+        let pert = perturb::make_with_layout(
+            cfg.kind,
+            p,
+            cfg.amplitude,
+            cfg.tau_p,
+            cfg.seed,
+            layout.as_deref(),
+        )?;
         let schedule = SampleSchedule::new(dataset, batch, schedule_kind, cfg.seed);
-        let pert = perturb::make(cfg.kind, p, cfg.amplitude, cfg.tau_p, cfg.seed);
-        MgdTrainer {
+        Ok(MgdTrainer {
             dev,
             cfg,
             pert,
@@ -143,7 +192,59 @@ impl<'d> MgdTrainer<'d> {
             step: 0,
             rng: Rng::new(cfg.seed ^ 0x4d47_4431), // "MGD1"
             cost_evals: 0,
+            pending_c: None,
+            scales: None,
+            layer_schedule: None,
+        })
+    }
+
+    /// [`MgdTrainer::try_new`] for configurations that cannot fail (the
+    /// four dense families on any device; every family on a
+    /// spec-carrying device with a valid cadence).
+    ///
+    /// # Panics
+    ///
+    /// When `try_new` would return an error.
+    pub fn new(
+        dev: &'d mut dyn HardwareDevice,
+        dataset: &'d Dataset,
+        cfg: MgdConfig,
+        schedule_kind: ScheduleKind,
+    ) -> Self {
+        Self::try_new(dev, dataset, cfg, schedule_kind)
+            .expect("MgdTrainer construction failed; use try_new for fallible configurations")
+    }
+
+    /// Install a per-layer learning-rate/amplitude schedule
+    /// ([`PerLayerSchedule`]), expanded over the device spec's
+    /// `param_layout()`.  Must be called before any steps run (the
+    /// expansion scales probes and updates from step 0; installing it
+    /// mid-run would silently change the estimator).  An all-`1.0`
+    /// schedule trains bit-identically to no schedule.
+    pub fn set_layer_schedule(&mut self, sched: &PerLayerSchedule) -> Result<()> {
+        if self.step != 0 {
+            bail!("per-layer schedule must be installed before training starts");
         }
+        let Some(spec) = self.dev.model_spec() else {
+            bail!("per-layer schedules need a device that exposes a ModelSpec");
+        };
+        let p = self.g.len();
+        let (lr, amp) = sched.expand(&spec.param_layout(), p)?;
+        let inv_a2: Vec<f32> = amp
+            .iter()
+            .map(|&a| {
+                let da = self.cfg.amplitude * a;
+                1.0 / (da * da)
+            })
+            .collect();
+        self.scales = Some(LayerScales { lr, amp, inv_a2 });
+        self.layer_schedule = Some(sched.clone());
+        Ok(())
+    }
+
+    /// The per-layer schedule in force, if any.
+    pub fn layer_schedule(&self) -> Option<&PerLayerSchedule> {
+        self.layer_schedule.as_ref()
     }
 
     /// Current gradient integrator G (Fig. 5 reads this with τθ = ∞).
@@ -174,12 +275,14 @@ impl<'d> MgdTrainer<'d> {
 
     /// Overwrite the device's parameter memory mid-training — the fleet's
     /// data-parallel averaging entry point.  Clears the gradient
-    /// integrator G and invalidates the cached baseline cost C₀ (both are
-    /// functions of the old θ).
+    /// integrator G, invalidates the cached baseline cost C₀, and drops
+    /// any half-open antithetic pair (all are functions of the old θ; an
+    /// orphaned odd step then accumulates nothing, deterministically).
     pub fn sync_params(&mut self, theta: &[f32]) -> Result<()> {
         self.dev.set_params(theta)?;
         self.g.fill(0.0);
         self.c0_valid = false;
+        self.pending_c = None;
         Ok(())
     }
 
@@ -238,6 +341,9 @@ impl<'d> MgdTrainer<'d> {
             rng: self.rng.state(),
             schedule: self.schedule.export_state(),
             pert: self.pert.export_state(),
+            pending_c: self.pending_c,
+            layer_lr: self.layer_schedule.as_ref().map(|s| s.lr().to_vec()).unwrap_or_default(),
+            layer_amp: self.layer_schedule.as_ref().map(|s| s.amp().to_vec()).unwrap_or_default(),
         })
     }
 
@@ -247,6 +353,31 @@ impl<'d> MgdTrainer<'d> {
     /// rejected rather than silently diverging.
     pub fn restore(&mut self, snap: &TrainerSnapshot) -> Result<()> {
         ensure_config_matches(&self.cfg, &snap.config)?;
+        // The per-layer schedule is part of the training configuration:
+        // resuming under a different one would silently change the
+        // estimator.  Compared bit-exactly, like every other config field.
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+        let saved_none = snap.layer_lr.is_empty() && snap.layer_amp.is_empty();
+        match (&self.layer_schedule, saved_none) {
+            (None, true) => {}
+            (Some(live), false) => {
+                if bits(live.lr()) != bits(&snap.layer_lr)
+                    || bits(live.amp()) != bits(&snap.layer_amp)
+                {
+                    bail!(
+                        "checkpoint was taken under a different per-layer schedule — \
+                         pass the same --layer-lr/--layer-amp values to resume"
+                    );
+                }
+            }
+            (None, false) => bail!(
+                "checkpoint carries a per-layer schedule but the trainer has none — \
+                 pass the same --layer-lr/--layer-amp values to resume"
+            ),
+            (Some(_), true) => bail!(
+                "trainer has a per-layer schedule but the checkpoint was taken without one"
+            ),
+        }
         // Spec identity gate (checkpoint format v2): a snapshot taken on
         // one model must not restore into a different one, even when
         // their parameter counts collide.  v1 snapshots and spec-less
@@ -291,6 +422,7 @@ impl<'d> MgdTrainer<'d> {
         self.rng.set_state(snap.rng);
         self.schedule.import_state(&snap.schedule)?;
         self.pert.import_state(&snap.pert)?;
+        self.pending_c = snap.pending_c;
         Ok(())
     }
 
@@ -313,7 +445,100 @@ impl<'d> MgdTrainer<'d> {
         Ok(())
     }
 
+    /// Scale a freshly filled probe slice by the per-parameter amplitude
+    /// multipliers, when a per-layer schedule is installed.
+    fn scale_probe(scales: &Option<LayerScales>, tt: &mut [f32]) {
+        if let Some(s) = scales {
+            for (t, &a) in tt.iter_mut().zip(&s.amp) {
+                *t *= a;
+            }
+        }
+    }
+
+    /// The pairing rule shared by [`MgdTrainer::step`] and the
+    /// [`MgdTrainer::step_window`] replay: turn this step's measured cost
+    /// into `(c_tilde, accumulate)`.
+    ///
+    /// Forward-difference families modulate against the cached baseline
+    /// and always accumulate.  Antithetic pairs instead combine across
+    /// timesteps: the even step parks `C⁺` and accumulates nothing (an
+    /// explicit skip — accumulating a `0.0·θ̃` term could still flip G
+    /// sign bits through `−0.0`); the odd step closes the pair with the
+    /// central difference `(C⁻ − C⁺)/2`, which — applied to its own
+    /// negated probe — is algebraically `(C⁺ − C⁻)/2 · θ̃⁺`.  An odd step
+    /// with no parked `C⁺` (first step after a restore from a pre-pair
+    /// snapshot, or after [`MgdTrainer::sync_params`] dropped the pair)
+    /// accumulates nothing, deterministically on every path.
+    fn pair_cost(&mut self, n: u64, c: f32) -> (f32, bool) {
+        if self.cfg.kind == PerturbKind::Antithetic {
+            if n % 2 == 0 {
+                self.pending_c = Some(c);
+                (0.0, false)
+            } else {
+                match self.pending_c.take() {
+                    Some(c_plus) => ((c - c_plus) * 0.5, true),
+                    None => (0.0, false),
+                }
+            }
+        } else {
+            (c - self.c0, true)
+        }
+    }
+
+    /// Lines 13–14: the homodyne product, accumulated into G — scalar
+    /// `1/Δθ²` fast path, or per-parameter when a schedule is installed.
+    /// (Static over disjoint field borrows so both loops can call it
+    /// while `tt` points into the trainer's own probe stack.)
+    fn accumulate_g(
+        g: &mut [f32],
+        tt: &[f32],
+        c_tilde: f32,
+        scales: &Option<LayerScales>,
+        amplitude: f32,
+    ) {
+        match scales {
+            Some(s) => {
+                for ((g, &t), &ia) in g.iter_mut().zip(tt.iter()).zip(&s.inv_a2) {
+                    *g += c_tilde * t * ia;
+                }
+            }
+            None => {
+                let inv_a2 = 1.0 / (amplitude * amplitude);
+                for (g, &t) in g.iter_mut().zip(tt.iter()) {
+                    *g += c_tilde * t * inv_a2;
+                }
+            }
+        }
+    }
+
+    /// Lines 15–17: the τθ parameter update (Δθ = −ηG + noise).
+    fn apply_theta_update(&mut self) -> Result<()> {
+        record_g_norm(&self.g);
+        match &self.scales {
+            Some(s) => {
+                for ((d, &g), &lr) in self.delta.iter_mut().zip(self.g.iter()).zip(&s.lr) {
+                    *d = -self.cfg.eta * lr * g;
+                }
+            }
+            None => {
+                for (d, &g) in self.delta.iter_mut().zip(self.g.iter()) {
+                    *d = -self.cfg.eta * g;
+                }
+            }
+        }
+        // §3.5 test 2: stochastic parameter-update noise (Eq. 5).
+        self.cfg.noise.apply_update_noise(&mut self.rng, &mut self.delta);
+        self.dev.apply_update(&self.delta)?;
+        self.g.fill(0.0);
+        self.c0_valid = false;
+        Ok(())
+    }
+
     /// Execute one MGD timestep (Algorithm 1 loop body).
+    ///
+    /// For [`PerturbKind::Antithetic`] the baseline eval is skipped
+    /// entirely (the pair is its own reference) and the reported
+    /// `c_tilde` is `0.0` on even steps, the central difference on odd.
     pub fn step(&mut self) -> Result<StepOutput> {
         let n = self.step;
 
@@ -321,9 +546,11 @@ impl<'d> MgdTrainer<'d> {
         self.load_window_if_due(n)?;
 
         // Lines 5–7: re-measure the baseline cost C₀ (θ̃ = 0) when the
-        // sample window or the parameters changed.
+        // sample window or the parameters changed.  Antithetic pairs
+        // never measure a baseline: the ± pair is its own reference.
         let m = trainer_metrics();
-        if !self.c0_valid {
+        let antithetic = self.cfg.kind == PerturbKind::Antithetic;
+        if !antithetic && !self.c0_valid {
             self.c0 = self.dev.cost(None)? + self.cfg.noise.cost_noise(&mut self.rng);
             self.cost_evals += 1;
             m.cost_evals.inc();
@@ -333,33 +560,25 @@ impl<'d> MgdTrainer<'d> {
         // Lines 8–9: advance the perturbation pattern every τp (the
         // generator itself holds the pattern within a τp window).
         self.pert.fill(n, &mut self.tt);
+        Self::scale_probe(&self.scales, &mut self.tt);
 
         // Lines 10–12: perturbed inference, cost, modulation.
         let c = self.dev.cost(Some(&self.tt))? + self.cfg.noise.cost_noise(&mut self.rng);
         self.cost_evals += 1;
         m.cost_evals.inc();
         m.cost.set(c as f64);
-        let c_tilde = c - self.c0;
+        let (c_tilde, accumulate) = self.pair_cost(n, c);
 
         // Lines 13–14: homodyne error signal, accumulated into G.
-        let inv_a2 = 1.0 / (self.cfg.amplitude * self.cfg.amplitude);
-        for (g, &t) in self.g.iter_mut().zip(self.tt.iter()) {
-            *g += c_tilde * t * inv_a2;
+        if accumulate {
+            Self::accumulate_g(&mut self.g, &self.tt, c_tilde, &self.scales, self.cfg.amplitude);
         }
 
         // Lines 15–17: parameter update every τθ.
         let updated = self.cfg.tau_theta != u64::MAX
             && (n + 1) % self.cfg.tau_theta.max(1) == 0;
         if updated {
-            record_g_norm(&self.g);
-            for (d, &g) in self.delta.iter_mut().zip(self.g.iter()) {
-                *d = -self.cfg.eta * g;
-            }
-            // §3.5 test 2: stochastic parameter-update noise (Eq. 5).
-            self.cfg.noise.apply_update_noise(&mut self.rng, &mut self.delta);
-            self.dev.apply_update(&self.delta)?;
-            self.g.fill(0.0);
-            self.c0_valid = false;
+            self.apply_theta_update()?;
         }
 
         self.step += 1;
@@ -402,9 +621,11 @@ impl<'d> MgdTrainer<'d> {
         // clamp guarantees no τx boundary falls strictly inside).
         self.load_window_if_due(n)?;
 
-        // Lines 5–7: baseline C₀, at most once per window.
+        // Lines 5–7: baseline C₀, at most once per window.  Antithetic
+        // pairs never measure one (the ± pair is its own reference).
         let m = trainer_metrics();
-        if !self.c0_valid {
+        let antithetic = self.cfg.kind == PerturbKind::Antithetic;
+        if !antithetic && !self.c0_valid {
             self.c0 = self.dev.cost(None)? + self.cfg.noise.cost_noise(&mut self.rng);
             self.cost_evals += 1;
             m.cost_evals.inc();
@@ -425,6 +646,7 @@ impl<'d> MgdTrainer<'d> {
         }
         for i in 0..k_eff {
             self.pert.fill(n + i as u64, &mut self.probes[i * p..(i + 1) * p]);
+            Self::scale_probe(&self.scales, &mut self.probes[i * p..(i + 1) * p]);
         }
 
         // Lines 10–12, batched: K perturbed inferences, one device call.
@@ -452,28 +674,20 @@ impl<'d> MgdTrainer<'d> {
         m.probe_window.set(k_eff as f64);
 
         // Lines 13–17 replayed per step, in step order.
-        let inv_a2 = 1.0 / (self.cfg.amplitude * self.cfg.amplitude);
         let mut outs = Vec::with_capacity(k_eff);
         for (i, &raw) in costs.iter().enumerate().take(k_eff) {
             let step = n + i as u64;
             let c = raw + self.cfg.noise.cost_noise(&mut self.rng);
             m.cost.set(c as f64);
-            let c_tilde = c - self.c0;
-            let tt = &self.probes[i * p..(i + 1) * p];
-            for (g, &t) in self.g.iter_mut().zip(tt) {
-                *g += c_tilde * t * inv_a2;
+            let (c_tilde, accumulate) = self.pair_cost(step, c);
+            if accumulate {
+                let tt = &self.probes[i * p..(i + 1) * p];
+                Self::accumulate_g(&mut self.g, tt, c_tilde, &self.scales, self.cfg.amplitude);
             }
             let updated = self.cfg.tau_theta != u64::MAX
                 && (step + 1) % self.cfg.tau_theta.max(1) == 0;
             if updated {
-                record_g_norm(&self.g);
-                for (d, &g) in self.delta.iter_mut().zip(self.g.iter()) {
-                    *d = -self.cfg.eta * g;
-                }
-                self.cfg.noise.apply_update_noise(&mut self.rng, &mut self.delta);
-                self.dev.apply_update(&self.delta)?;
-                self.g.fill(0.0);
-                self.c0_valid = false;
+                self.apply_theta_update()?;
             }
             outs.push(StepOutput { step, cost: c, c_tilde, updated });
         }
@@ -822,6 +1036,167 @@ mod tests {
         }
         // 20 perturbed + 2 baselines (steps 0 and 10).
         assert_eq!(tr.cost_evals(), 22);
+    }
+
+    #[test]
+    fn antithetic_window_matches_serial_and_skips_baseline() {
+        let data = xor();
+        let cfg = MgdConfig {
+            eta: 1.5,
+            amplitude: 0.05,
+            tau_x: 6,
+            tau_theta: 6,
+            kind: PerturbKind::Antithetic,
+            noise: crate::noise::NoiseConfig { sigma_cost: 0.01, sigma_update: 0.002 },
+            seed: 17,
+            ..Default::default()
+        };
+        let mut dev_a = xor_device(17);
+        let mut dev_b = xor_device(17);
+        let mut serial = MgdTrainer::new(&mut dev_a, &data, cfg, ScheduleKind::Cyclic);
+        let mut windowed = MgdTrainer::new(&mut dev_b, &data, cfg, ScheduleKind::Cyclic);
+        let mut serial_outs = Vec::new();
+        for _ in 0..36 {
+            serial_outs.push(serial.step().unwrap());
+        }
+        let mut windowed_outs = Vec::new();
+        for k in [4usize, 1, 6, 3].iter().cycle() {
+            if windowed.steps() >= 36 {
+                break;
+            }
+            let k = (*k).min(36 - windowed.steps() as usize);
+            windowed_outs.extend(windowed.step_window(k).unwrap());
+        }
+        assert_eq!(serial_outs.len(), windowed_outs.len());
+        for (s, w) in serial_outs.iter().zip(&windowed_outs) {
+            assert_eq!(s.cost.to_bits(), w.cost.to_bits(), "step {}", s.step);
+            assert_eq!(s.c_tilde.to_bits(), w.c_tilde.to_bits(), "step {}", s.step);
+            assert_eq!(s.updated, w.updated, "step {}", s.step);
+        }
+        // No C₀ baseline anywhere: one eval per step exactly.
+        assert_eq!(serial.cost_evals(), 36);
+        assert_eq!(windowed.cost_evals(), 36);
+        // Even steps park the pair (c̃ = 0), odd steps close it.
+        assert!(serial_outs.iter().step_by(2).all(|o| o.c_tilde == 0.0));
+        assert!(serial_outs.iter().skip(1).step_by(2).any(|o| o.c_tilde != 0.0));
+        let ta: Vec<u32> =
+            serial.device_params().unwrap().iter().map(|t| t.to_bits()).collect();
+        let tb: Vec<u32> =
+            windowed.device_params().unwrap().iter().map(|t| t.to_bits()).collect();
+        assert_eq!(ta, tb, "antithetic parameter memories diverged");
+    }
+
+    #[test]
+    fn antithetic_rejects_pair_splitting_cadences() {
+        let data = xor();
+        for (tau_x, tau_theta) in [(3u64, 6u64), (6, 5)] {
+            let mut dev = xor_device(0);
+            let cfg = MgdConfig {
+                tau_x,
+                tau_theta,
+                kind: PerturbKind::Antithetic,
+                ..Default::default()
+            };
+            let err = MgdTrainer::try_new(&mut dev, &data, cfg, ScheduleKind::Cyclic);
+            assert!(err.is_err(), "τx={tau_x}, τθ={tau_theta} must be rejected");
+        }
+        // Even τx with τθ = ∞ is the integration configuration — fine.
+        let mut dev = xor_device(0);
+        let cfg = MgdConfig {
+            tau_x: 2,
+            tau_theta: u64::MAX,
+            kind: PerturbKind::Antithetic,
+            ..Default::default()
+        };
+        assert!(MgdTrainer::try_new(&mut dev, &data, cfg, ScheduleKind::Cyclic).is_ok());
+    }
+
+    #[test]
+    fn sparse_kinds_window_matches_serial_bitwise() {
+        let data = xor();
+        for kind in [PerturbKind::LayerSparse, PerturbKind::BlockSparse { block: 4 }] {
+            let cfg = MgdConfig {
+                eta: 1.5,
+                amplitude: 0.05,
+                tau_x: 3,
+                tau_theta: 4,
+                tau_p: 2,
+                kind,
+                seed: 23,
+                ..Default::default()
+            };
+            let mut dev_a = xor_device(23);
+            let mut dev_b = xor_device(23);
+            let mut serial = MgdTrainer::new(&mut dev_a, &data, cfg, ScheduleKind::Cyclic);
+            let mut windowed = MgdTrainer::new(&mut dev_b, &data, cfg, ScheduleKind::Cyclic);
+            for _ in 0..48 {
+                serial.step().unwrap();
+            }
+            while windowed.steps() < 48 {
+                windowed.step_window(5).unwrap();
+            }
+            assert_eq!(serial.cost_evals(), windowed.cost_evals(), "{kind:?}");
+            let gb = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+            assert_eq!(gb(serial.gradient()), gb(windowed.gradient()), "{kind:?} G diverged");
+            assert_eq!(
+                gb(&serial.device_params().unwrap()),
+                gb(&windowed.device_params().unwrap()),
+                "{kind:?} θ diverged"
+            );
+        }
+    }
+
+    #[test]
+    fn identity_layer_schedule_is_bit_identical_to_none() {
+        let data = xor();
+        let cfg =
+            MgdConfig { eta: 2.0, amplitude: 0.05, tau_theta: 4, seed: 31, ..Default::default() };
+        let mut dev_a = xor_device(31);
+        let mut dev_b = xor_device(31);
+        let mut plain = MgdTrainer::new(&mut dev_a, &data, cfg, ScheduleKind::Cyclic);
+        let mut scheduled = MgdTrainer::new(&mut dev_b, &data, cfg, ScheduleKind::Cyclic);
+        let sched = PerLayerSchedule::new(vec![1.0, 1.0], vec![1.0, 1.0]).unwrap();
+        scheduled.set_layer_schedule(&sched).unwrap();
+        for _ in 0..24 {
+            let a = plain.step().unwrap();
+            let b = scheduled.step().unwrap();
+            assert_eq!(a.cost.to_bits(), b.cost.to_bits(), "step {}", a.step);
+            assert_eq!(a.c_tilde.to_bits(), b.c_tilde.to_bits(), "step {}", a.step);
+        }
+        let gb = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(gb(plain.gradient()), gb(scheduled.gradient()));
+        assert_eq!(
+            gb(&plain.device_params().unwrap()),
+            gb(&scheduled.device_params().unwrap()),
+            "an all-1.0 schedule must be a bitwise no-op"
+        );
+    }
+
+    #[test]
+    fn real_layer_schedule_changes_the_trajectory() {
+        let data = xor();
+        let cfg =
+            MgdConfig { eta: 2.0, amplitude: 0.05, tau_theta: 4, seed: 32, ..Default::default() };
+        let mut dev_a = xor_device(32);
+        let mut dev_b = xor_device(32);
+        let mut plain = MgdTrainer::new(&mut dev_a, &data, cfg, ScheduleKind::Cyclic);
+        let mut scheduled = MgdTrainer::new(&mut dev_b, &data, cfg, ScheduleKind::Cyclic);
+        let sched = PerLayerSchedule::new(vec![1.0, 0.25], vec![1.0, 0.5]).unwrap();
+        scheduled.set_layer_schedule(&sched).unwrap();
+        assert_eq!(scheduled.layer_schedule(), Some(&sched));
+        for _ in 0..8 {
+            plain.step().unwrap();
+            scheduled.step().unwrap();
+        }
+        assert_ne!(
+            plain.device_params().unwrap(),
+            scheduled.device_params().unwrap(),
+            "a non-identity schedule must change the update"
+        );
+        // Wrong layer count is rejected; so is installing mid-run.
+        let bad = PerLayerSchedule::new(vec![1.0, 0.5, 0.25], vec![1.0]).unwrap();
+        assert!(scheduled.set_layer_schedule(&bad).is_err());
+        assert!(plain.set_layer_schedule(&sched).is_err(), "mid-run install must fail");
     }
 
     #[test]

@@ -45,6 +45,19 @@
 //! them, so splitting cannot change any cost).  This mirrors the
 //! client-side chunking that `Evaluate` would need past ~16M floats.
 //!
+//! **Sparse probes ship dense**: the structured-sparse families
+//! ([`crate::perturb::PerturbKind::LayerSparse`] /
+//! [`crate::perturb::PerturbKind::BlockSparse`]) emit probe vectors that
+//! are exact zeros outside one active block, but the wire format stays a
+//! dense `k·P` float array.  Deliberate: the device contract is "add θ̃
+//! to θ and run" with no notion of layout, a sparse encoding would make
+//! the frame size depend on the *perturbation* configuration (breaking
+//! the chunking arithmetic above and every capture/replay tool that
+//! assumes `8 + 4·k·P`), and the wire is not the bottleneck the sparse
+//! families attack — they exist to cut gradient-estimate *variance* at
+//! large `P`, not bytes.  A `+0.0` float compresses to nothing anyway
+//! wherever transport-level compression is in play.
+//!
 //! # Model-spec negotiation (`ModelSpec`)
 //!
 //! `Hello` reports only the I/O silhouette (P, B, input, outputs) — two

@@ -81,6 +81,12 @@ pub struct DataParallelConfig {
     /// garbage-collected by the barrier leader *after* each meta commit
     /// ([`prune_dp_rounds`] — crash-safe at every instant).
     pub checkpoint_keep: u64,
+    /// Per-layer lr/amplitude schedule installed on every replica before
+    /// its first step (`mgd fleet --layer-lr/--layer-amp`; `None` = flat
+    /// multipliers).  All replicas share one schedule — averaging θ
+    /// across replicas trained under different schedules would mix
+    /// trajectories with different effective step sizes.
+    pub layer_schedule: Option<crate::perturb::PerLayerSchedule>,
 }
 
 impl Default for DataParallelConfig {
@@ -93,6 +99,7 @@ impl Default for DataParallelConfig {
             checkpoint_dir: None,
             resume: false,
             checkpoint_keep: 1,
+            layer_schedule: None,
         }
     }
 }
@@ -330,6 +337,14 @@ pub fn train_data_parallel(
                         });
                         *thread_err = Some(err);
                     };
+                    if let Some(sched) = &dp.layer_schedule {
+                        if let Err(e) = trainer.set_layer_schedule(sched) {
+                            die(
+                                e.context(format!("installing layer schedule on replica {ri}")),
+                                &mut thread_err,
+                            );
+                        }
+                    }
                     if resuming {
                         let dir = dp.checkpoint_dir.as_ref().expect("resume implies dir");
                         let path = dp_replica_path(dir, ri, start_round);

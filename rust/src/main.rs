@@ -34,7 +34,7 @@ use mgd::fleet::{
 use mgd::model::ModelSpec;
 use mgd::noise::NeuronDefects;
 use mgd::optim::{init_params, init_params_uniform};
-use mgd::perturb::PerturbKind;
+use mgd::perturb::{PerLayerSchedule, PerturbKind};
 use mgd::rng::Rng;
 use mgd::runtime::Runtime;
 
@@ -80,7 +80,14 @@ TRAIN OPTIONS:
   --eta F           learning rate                  (default 1.0)
   --amplitude F     perturbation amplitude Δθ      (default 0.01)
   --tau-x N --tau-theta N --tau-p N                (defaults 1)
-  --perturb P       rademacher | walsh | sequential | sinusoidal
+  --perturb P       rademacher | walsh | sequential | sinusoidal |
+                    layer_sparse | block_sparse[:N] | antithetic
+                    (the scaling families need --mode loop; antithetic
+                    needs even --tau-x and even --tau-theta)
+  --layer-lr L,L,.. loop mode: per-layer learning-rate multipliers (one
+                    per layer, or one value broadcast to all layers)
+  --layer-amp L,L,..loop mode: per-layer amplitude multipliers (same
+                    grammar; all-1.0 is bit-identical to no schedule)
   --sigma-cost F --sigma-update F                  noise injection (§3.5)
   --eval-every N    evaluation cadence             (default 1000)
   --probes K        loop mode: perturbation probes per device call
@@ -116,6 +123,8 @@ FLEET OPTIONS:
                     (default 1; older rounds are GC'd after each commit)
   --resume          resume dp from the round meta / farm jobs from their
                     checkpoints
+  --layer-lr/--layer-amp  dp: per-layer multiplier schedule installed on
+                    every replica (see TRAIN OPTIONS)
   --eta F --amplitude F --tau-x N --tau-theta N --tau-p N --perturb P
 
 SERVE OPTIONS:
@@ -210,7 +219,8 @@ fn main() -> Result<()> {
             known.extend([
                 "model", "mode", "device", "steps", "eta", "amplitude", "tau-x", "tau-theta",
                 "tau-p", "perturb", "sigma-cost", "sigma-update", "eval-every", "probes",
-                "checkpoint-dir", "checkpoint-every", "resume", "samples",
+                "checkpoint-dir", "checkpoint-every", "resume", "samples", "layer-lr",
+                "layer-amp",
             ]);
             args.check_known(&known)?;
             let cfg = MgdConfig {
@@ -240,6 +250,8 @@ fn main() -> Result<()> {
                     None
                 }
             };
+            let layer_schedule =
+                PerLayerSchedule::from_cli(args.get("layer-lr"), args.get("layer-amp"))?;
             train(
                 &ctx,
                 &args.str_or("model", "xor221"),
@@ -254,6 +266,7 @@ fn main() -> Result<()> {
                     None => None,
                 },
                 checkpoint,
+                layer_schedule,
             )
         }
         "fleet" => {
@@ -262,7 +275,7 @@ fn main() -> Result<()> {
                 "devices", "model", "mode", "rounds", "steps-per-round", "jobs", "steps",
                 "defects", "batch", "samples", "telemetry", "probes", "eta", "amplitude",
                 "tau-x", "tau-theta", "tau-p", "perturb", "retries", "checkpoint-dir",
-                "checkpoint-every", "checkpoint-keep", "resume",
+                "checkpoint-every", "checkpoint-keep", "resume", "layer-lr", "layer-amp",
             ]);
             args.check_known(&known)?;
             let cfg = MgdConfig {
@@ -464,9 +477,23 @@ fn train(
     probes: usize,
     samples: Option<usize>,
     checkpoint: Option<mgd::coordinator::CheckpointConfig>,
+    layer_schedule: Option<PerLayerSchedule>,
 ) -> Result<()> {
     if checkpoint.is_some() && mode != "loop" {
         bail!("--checkpoint-dir supports --mode loop (the discrete trainer owns the state)");
+    }
+    if layer_schedule.is_some() && mode != "loop" {
+        bail!("--layer-lr/--layer-amp support --mode loop (the discrete trainer applies them)");
+    }
+    let scaling_family = matches!(
+        cfg.kind,
+        PerturbKind::LayerSparse | PerturbKind::BlockSparse { .. } | PerturbKind::Antithetic
+    );
+    if scaling_family && mode != "loop" {
+        bail!(
+            "--perturb {} needs --mode loop (onchip/analog drive the original four families)",
+            cfg.kind.token()
+        );
     }
     let (train_set, eval_set) = model_dataset(model, samples, ctx.seed)?;
     let opts = TrainOptions {
@@ -500,7 +527,11 @@ fn train(
                 "training {model} chip-in-the-loop on {} ({probes} probe(s)/device call)",
                 dev.describe()
             );
-            let mut tr = MgdTrainer::new(&mut *dev, &train_set, cfg, ScheduleKind::Cyclic);
+            let mut tr = MgdTrainer::try_new(&mut *dev, &train_set, cfg, ScheduleKind::Cyclic)?;
+            if let Some(sched) = &layer_schedule {
+                println!("per-layer schedule: lr {:?}, amp {:?}", sched.lr(), sched.amp());
+                tr.set_layer_schedule(sched)?;
+            }
             let res = match &checkpoint {
                 Some(ck) => {
                     println!(
@@ -604,6 +635,10 @@ fn fleet_cmd(ctx: &RunContext, args: &Args, cfg: MgdConfig) -> Result<()> {
          {probes} probe(s)/device call), model {model}"
     );
 
+    let layer_schedule = PerLayerSchedule::from_cli(args.get("layer-lr"), args.get("layer-amp"))?;
+    if layer_schedule.is_some() && mode != "dp" {
+        bail!("--layer-lr/--layer-amp support --mode dp (farm jobs run unscheduled trainers)");
+    }
     match mode.as_str() {
         "dp" => {
             let dp = DataParallelConfig {
@@ -613,6 +648,7 @@ fn fleet_cmd(ctx: &RunContext, args: &Args, cfg: MgdConfig) -> Result<()> {
                 checkpoint_dir: args.get("checkpoint-dir").map(PathBuf::from),
                 resume: args.has_flag("resume"),
                 checkpoint_keep: args.u64_or("checkpoint-keep", 1)?.max(1),
+                layer_schedule,
                 ..Default::default()
             };
             if dp.resume && dp.checkpoint_dir.is_none() {

@@ -1,0 +1,147 @@
+//! Antithetic (paired ±θ̃) Rademacher probes — central-difference MGD.
+//!
+//! Forward-difference MGD measures one baseline `C₀` per window and
+//! correlates `C(θ+θ̃) − C₀` against each probe; the truncation error of
+//! that estimate is first-order in `Δθ` and the baseline's measurement
+//! noise enters every probe in the window as common-mode error.  The
+//! antithetic family instead evaluates each Rademacher pattern twice
+//! with opposite signs — `+θ̃` on even timesteps, `−θ̃` on odd — and the
+//! trainer combines the pair by central difference,
+//! `(C⁺ − C⁻)/2 · θ̃ / Δθ²`.  Even-order terms of the cost expansion
+//! cancel exactly (the estimator bias drops from `O(Δθ)` to `O(Δθ²)`),
+//! no baseline eval is spent, and per-eval gradient noise is halved
+//! (each pair carries two independent cost measurements but no shared
+//! baseline).  See [`MgdTrainer`](crate::coordinator::MgdTrainer) for
+//! the pairing rule; this type only generates the signed patterns.
+//!
+//! Pairs must not straddle sample or update boundaries, so the trainer
+//! requires even `τx` and even (or never) `τθ` for this family.
+
+use anyhow::{bail, Result};
+
+use crate::perturb::{PerturbKind, PerturbState, Perturbation};
+use crate::rng::Rng;
+
+/// Paired ±Δθ Rademacher generator ([`PerturbKind::Antithetic`]).
+///
+/// The base pattern advances every `2·τp` timesteps (each τp "hold" is a
+/// *pair* of evals); within a pair window, even `t` yields `+θ̃` and odd
+/// `t` the exact IEEE negation `−θ̃`.  RNG draws happen only on pattern
+/// advance, so the stream is deterministic for non-decreasing `t` and
+/// checkpointable mid-pair.
+pub struct AntitheticCode {
+    amplitude: f32,
+    tau_p: u64,
+    rng: Rng,
+    /// The `+` phase of the current pair window's pattern.
+    current: Vec<f32>,
+    current_window: Option<u64>,
+}
+
+impl AntitheticCode {
+    /// Build a generator for `n_params` parameters.
+    pub fn new(n_params: usize, amplitude: f32, tau_p: u64, seed: u64) -> Self {
+        AntitheticCode {
+            amplitude,
+            tau_p: tau_p.max(1),
+            rng: Rng::new(seed ^ 0x616e_7469), // "anti"
+            current: vec![0.0; n_params],
+            current_window: None,
+        }
+    }
+}
+
+impl Perturbation for AntitheticCode {
+    fn fill(&mut self, t: u64, out: &mut [f32]) {
+        let window = t / (2 * self.tau_p);
+        if self.current_window != Some(window) {
+            let amp_bits = self.amplitude.to_bits();
+            for chunk in self.current.chunks_mut(64) {
+                let mut bits = self.rng.next_u64();
+                for v in chunk.iter_mut() {
+                    *v = f32::from_bits(amp_bits ^ ((bits as u32 & 1) << 31));
+                    bits >>= 1;
+                }
+            }
+            self.current_window = Some(window);
+        }
+        if t % 2 == 0 {
+            out.copy_from_slice(&self.current);
+        } else {
+            // IEEE negation is exact: the pair is bit-antisymmetric.
+            for (o, &v) in out.iter_mut().zip(&self.current) {
+                *o = -v;
+            }
+        }
+    }
+
+    fn amplitude(&self) -> f32 {
+        self.amplitude
+    }
+
+    fn kind(&self) -> PerturbKind {
+        PerturbKind::Antithetic
+    }
+
+    fn export_state(&self) -> PerturbState {
+        PerturbState {
+            rng: Some(self.rng.state()),
+            current: self.current.clone(),
+            current_window: self.current_window,
+            ..PerturbState::default()
+        }
+    }
+
+    fn import_state(&mut self, state: &PerturbState) -> Result<()> {
+        let Some(rng) = state.rng else {
+            bail!("antithetic state is missing the generator RNG");
+        };
+        if state.current.len() != self.current.len() {
+            bail!(
+                "antithetic state holds {} pattern values, generator has {} parameters",
+                state.current.len(),
+                self.current.len()
+            );
+        }
+        self.rng.set_state(rng);
+        self.current.copy_from_slice(&state.current);
+        self.current_window = state.current_window;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pairs_are_exactly_negated() {
+        let mut gen = AntitheticCode::new(9, 0.03, 1, 5);
+        let mut even = vec![0f32; 9];
+        let mut odd = vec![0f32; 9];
+        for pair in 0..8u64 {
+            gen.fill(2 * pair, &mut even);
+            gen.fill(2 * pair + 1, &mut odd);
+            for (e, o) in even.iter().zip(&odd) {
+                assert_eq!(e.to_bits() ^ 0x8000_0000, o.to_bits(), "pair {pair} not antisymmetric");
+                assert_eq!(e.abs(), 0.03);
+            }
+        }
+    }
+
+    #[test]
+    fn pattern_advances_every_two_tau_p_steps() {
+        let mut gen = AntitheticCode::new(32, 1.0, 3, 11);
+        let mut bufs: Vec<Vec<f32>> = Vec::new();
+        for t in 0..12u64 {
+            let mut b = vec![0f32; 32];
+            gen.fill(t, &mut b);
+            bufs.push(b);
+        }
+        // t = 0..5 share one base pattern (signs alternating), t = 6..11 the next.
+        assert_eq!(bufs[0], bufs[2]);
+        assert_eq!(bufs[0], bufs[4]);
+        assert_eq!(bufs[1], bufs[3]);
+        assert_ne!(bufs[0], bufs[6], "base pattern must advance at t = 2·τp");
+    }
+}

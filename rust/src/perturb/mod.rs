@@ -15,10 +15,37 @@
 //! All are mean-zero and amplitude `Δθ`.  `tau_p` controls how often the
 //! perturbation pattern advances (Algorithm 1 line 8: perturbations update
 //! only when `t % τp == 0`); between updates the vector is held.
+//!
+//! Beyond the paper's four dense families, the *scaling engine* adds
+//! structured probes for large `P`, where gradient-estimate variance —
+//! not evals/sec — dominates training cost (see the follow-up scaling
+//! papers, arXiv 2501.15403 / 2504.20314):
+//!
+//! | family                | structure                 | variance lever           |
+//! |-----------------------|---------------------------|--------------------------|
+//! | [`SparseRademacher`] (`layer_sparse`) | one model layer per τp window | cross-talk ∝ layer size, not P |
+//! | [`SparseRademacher`] (`block_sparse:N`) | one N-block per τp window | cross-talk ∝ N; layout-agnostic |
+//! | [`AntitheticCode`]    | paired ±θ̃, central diff  | cancels even-order terms; no C₀ baseline |
+//!
+//! [`schedule::PerLayerSchedule`] composes with any family, scaling
+//! learning rate and amplitude per model layer.
 
 use anyhow::{bail, Result};
 
+use crate::model::LayerLayout;
 use crate::rng::{Rng, RngState};
+
+pub mod antithetic;
+pub mod schedule;
+pub mod sparse;
+
+pub use antithetic::AntitheticCode;
+pub use schedule::PerLayerSchedule;
+pub use sparse::SparseRademacher;
+
+/// Block size [`PerturbKind::BlockSparse`] defaults to when the CLI token
+/// is given as bare `block_sparse` (no `:N` suffix).
+pub const DEFAULT_SPARSE_BLOCK: usize = 256;
 
 /// Which perturbation family to use (mirrors Fig. 1c / Fig. 7).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -32,17 +59,49 @@ pub enum PerturbKind {
     /// Locally-generated random ±Δθ codes, statistically orthogonal
     /// (SPSA-style; the paper's preferred hardware-friendly choice).
     RademacherCode,
+    /// Per-layer sparse Rademacher probes: each τp window perturbs one
+    /// model layer's slice (from
+    /// [`param_layout`](crate::model::ModelSpec::param_layout)), exact
+    /// zeros elsewhere.  Needs a device that exposes a
+    /// [`ModelSpec`](crate::model::ModelSpec).
+    LayerSparse,
+    /// Fixed-size contiguous-block sparse Rademacher probes — the
+    /// layout-agnostic twin of [`LayerSparse`](PerturbKind::LayerSparse)
+    /// for black-box devices with no `ModelSpec`.
+    BlockSparse {
+        /// Parameters per block (the last block may be short).
+        block: usize,
+    },
+    /// Paired `±θ̃` Rademacher probes: even timesteps apply `+θ̃`, odd
+    /// timesteps `−θ̃`, and the trainer combines each pair by central
+    /// difference — no `C₀` baseline eval, even-order error terms cancel.
+    Antithetic,
 }
 
 impl PerturbKind {
-    /// Canonical token (accepted by [`FromStr`](std::str::FromStr); used
-    /// by checkpoints and logs).
+    /// Family label (used by logs and the `--perturb` CLI grammar).
+    /// Structural parameters are *not* included — `block_sparse:128` and
+    /// `block_sparse:256` share the label; [`token`](Self::token) is the
+    /// round-trip form.
     pub fn as_str(&self) -> &'static str {
         match self {
             PerturbKind::Sinusoidal => "sinusoidal",
             PerturbKind::SequentialFd => "sequential_fd",
             PerturbKind::WalshCode => "walsh_code",
             PerturbKind::RademacherCode => "rademacher_code",
+            PerturbKind::LayerSparse => "layer_sparse",
+            PerturbKind::BlockSparse { .. } => "block_sparse",
+            PerturbKind::Antithetic => "antithetic",
+        }
+    }
+
+    /// Canonical round-trip token, including structural parameters
+    /// (`"block_sparse:128"`).  [`FromStr`](std::str::FromStr) accepts
+    /// exactly what this emits; checkpoints store it.
+    pub fn token(&self) -> String {
+        match self {
+            PerturbKind::BlockSparse { block } => format!("block_sparse:{block}"),
+            other => other.as_str().to_string(),
         }
     }
 }
@@ -56,7 +115,21 @@ impl std::str::FromStr for PerturbKind {
             "sequential_fd" | "sequential" => Ok(Self::SequentialFd),
             "walsh" | "walsh_code" => Ok(Self::WalshCode),
             "rademacher" | "rademacher_code" | "random_code" => Ok(Self::RademacherCode),
-            other => anyhow::bail!("unknown perturbation kind {other:?}"),
+            "layer_sparse" => Ok(Self::LayerSparse),
+            "antithetic" => Ok(Self::Antithetic),
+            "block_sparse" => Ok(Self::BlockSparse { block: DEFAULT_SPARSE_BLOCK }),
+            other => {
+                if let Some(n) = other.strip_prefix("block_sparse:") {
+                    let block: usize = n
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad block size in {other:?}"))?;
+                    if block == 0 {
+                        anyhow::bail!("block_sparse block size must be >= 1");
+                    }
+                    return Ok(Self::BlockSparse { block });
+                }
+                anyhow::bail!("unknown perturbation kind {other:?}")
+            }
         }
     }
 }
@@ -117,7 +190,50 @@ pub trait Perturbation: Send {
     }
 }
 
-/// Build a generator of the given family.
+/// Build a generator of the given family, passing the device's layer
+/// layout when one is available.
+///
+/// [`PerturbKind::LayerSparse`] requires the layout (a device
+/// [`ModelSpec`](crate::model::ModelSpec)'s
+/// [`param_layout`](crate::model::ModelSpec::param_layout)) and fails
+/// without one; every other family ignores it.
+pub fn make_with_layout(
+    kind: PerturbKind,
+    n_params: usize,
+    amplitude: f32,
+    tau_p: u64,
+    seed: u64,
+    layout: Option<&[LayerLayout]>,
+) -> Result<Box<dyn Perturbation>> {
+    Ok(match kind {
+        PerturbKind::Sinusoidal => Box::new(Sinusoidal::new(n_params, amplitude, tau_p)),
+        PerturbKind::SequentialFd => Box::new(SequentialFd::new(n_params, amplitude, tau_p)),
+        PerturbKind::WalshCode => Box::new(WalshCode::new(n_params, amplitude, tau_p)),
+        PerturbKind::RademacherCode => {
+            Box::new(RademacherCode::new(n_params, amplitude, tau_p, seed))
+        }
+        PerturbKind::LayerSparse => {
+            let Some(layout) = layout else {
+                bail!(
+                    "layer_sparse probes need the model's layer layout, but the device \
+                     exposes no ModelSpec — use block_sparse:N for black-box devices"
+                );
+            };
+            Box::new(SparseRademacher::layered(layout, n_params, amplitude, tau_p, seed)?)
+        }
+        PerturbKind::BlockSparse { block } => {
+            Box::new(SparseRademacher::blocked(block, n_params, amplitude, tau_p, seed)?)
+        }
+        PerturbKind::Antithetic => Box::new(AntitheticCode::new(n_params, amplitude, tau_p, seed)),
+    })
+}
+
+/// Build a generator of the given family (layout-free convenience).
+///
+/// # Panics
+///
+/// For [`PerturbKind::LayerSparse`], which cannot exist without a layer
+/// layout — construct that family through [`make_with_layout`].
 pub fn make(
     kind: PerturbKind,
     n_params: usize,
@@ -125,14 +241,8 @@ pub fn make(
     tau_p: u64,
     seed: u64,
 ) -> Box<dyn Perturbation> {
-    match kind {
-        PerturbKind::Sinusoidal => Box::new(Sinusoidal::new(n_params, amplitude, tau_p)),
-        PerturbKind::SequentialFd => Box::new(SequentialFd::new(n_params, amplitude, tau_p)),
-        PerturbKind::WalshCode => Box::new(WalshCode::new(n_params, amplitude, tau_p)),
-        PerturbKind::RademacherCode => {
-            Box::new(RademacherCode::new(n_params, amplitude, tau_p, seed))
-        }
-    }
+    make_with_layout(kind, n_params, amplitude, tau_p, seed, None)
+        .expect("perturbation construction failed (layer_sparse requires make_with_layout)")
 }
 
 // ---------------------------------------------------------------------------
@@ -433,6 +543,35 @@ impl Perturbation for RademacherCode {
 mod tests {
     use super::*;
 
+    /// Every family, including ones `make` cannot build layout-free:
+    /// LayerSparse gets a synthetic two-layer layout covering `p`.
+    fn make_any(
+        kind: PerturbKind,
+        p: usize,
+        amplitude: f32,
+        tau_p: u64,
+        seed: u64,
+    ) -> Box<dyn Perturbation> {
+        let half = p / 2;
+        let layout = [
+            LayerLayout { offset: 0, len: half, weight_len: half },
+            LayerLayout { offset: half, len: p - half, weight_len: p - half },
+        ];
+        make_with_layout(kind, p, amplitude, tau_p, seed, Some(&layout)).unwrap()
+    }
+
+    fn all_kinds() -> [PerturbKind; 7] {
+        [
+            PerturbKind::Sinusoidal,
+            PerturbKind::SequentialFd,
+            PerturbKind::WalshCode,
+            PerturbKind::RademacherCode,
+            PerturbKind::LayerSparse,
+            PerturbKind::BlockSparse { block: 3 },
+            PerturbKind::Antithetic,
+        ]
+    }
+
     fn correlation(kind: PerturbKind, p: usize, steps: u64) -> Vec<Vec<f64>> {
         let mut gen = make(kind, p, 1.0, 1, 42);
         let mut sums = vec![vec![0f64; p]; p];
@@ -516,10 +655,16 @@ mod tests {
 
     #[test]
     fn all_kinds_mean_zero_except_sequential() {
-        for kind in [PerturbKind::Sinusoidal, PerturbKind::WalshCode, PerturbKind::RademacherCode]
-        {
+        for kind in [
+            PerturbKind::Sinusoidal,
+            PerturbKind::WalshCode,
+            PerturbKind::RademacherCode,
+            PerturbKind::LayerSparse,
+            PerturbKind::BlockSparse { block: 2 },
+            PerturbKind::Antithetic,
+        ] {
             let p = 5;
-            let mut gen = make(kind, p, 0.7, 1, 9);
+            let mut gen = make_any(kind, p, 0.7, 1, 9);
             let mut buf = vec![0f32; p];
             let steps = 16_384;
             let mut mean = vec![0f64; p];
@@ -541,13 +686,8 @@ mod tests {
 
     #[test]
     fn amplitude_respected() {
-        for kind in [
-            PerturbKind::Sinusoidal,
-            PerturbKind::SequentialFd,
-            PerturbKind::WalshCode,
-            PerturbKind::RademacherCode,
-        ] {
-            let mut gen = make(kind, 8, 0.05, 2, 3);
+        for kind in all_kinds() {
+            let mut gen = make_any(kind, 8, 0.05, 2, 3);
             let mut buf = vec![0f32; 8];
             for t in 0..64 {
                 gen.fill(t, &mut buf);
@@ -560,14 +700,9 @@ mod tests {
 
     #[test]
     fn state_roundtrip_is_bit_identical_for_every_kind() {
-        for kind in [
-            PerturbKind::Sinusoidal,
-            PerturbKind::SequentialFd,
-            PerturbKind::WalshCode,
-            PerturbKind::RademacherCode,
-        ] {
+        for kind in all_kinds() {
             let p = 7;
-            let mut a = make(kind, p, 0.05, 3, 21);
+            let mut a = make_any(kind, p, 0.05, 3, 21);
             let mut buf = vec![0f32; p];
             // Advance mid-window (t = 10 with τp = 3) so held state and
             // phasor recurrences are genuinely mid-stream.
@@ -575,7 +710,7 @@ mod tests {
                 a.fill(t, &mut buf);
             }
             let state = a.export_state();
-            let mut b = make(kind, p, 0.05, 3, 21);
+            let mut b = make_any(kind, p, 0.05, 3, 21);
             b.import_state(&state).unwrap();
             let mut wa = vec![0f32; p];
             let mut wb = vec![0f32; p];
@@ -587,6 +722,19 @@ mod tests {
                 assert_eq!(bits_a, bits_b, "{kind:?} diverged at t={t}");
             }
         }
+    }
+
+    #[test]
+    fn kind_tokens_round_trip() {
+        for kind in all_kinds() {
+            let token = kind.token();
+            let parsed: PerturbKind = token.parse().unwrap();
+            assert_eq!(parsed, kind, "token {token:?} did not round-trip");
+        }
+        let k: PerturbKind = "block_sparse".parse().unwrap();
+        assert_eq!(k, PerturbKind::BlockSparse { block: DEFAULT_SPARSE_BLOCK });
+        assert!("block_sparse:0".parse::<PerturbKind>().is_err());
+        assert!("block_sparse:x".parse::<PerturbKind>().is_err());
     }
 
     #[test]

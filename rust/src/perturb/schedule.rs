@@ -1,0 +1,178 @@
+//! Per-layer learning-rate and amplitude schedules.
+//!
+//! Deep stacks trained by perturbative methods want different step sizes
+//! per layer — gradient magnitudes shrink toward the input, and hardware
+//! layers differ in noise floor — but `θ` is one flat vector.
+//! [`PerLayerSchedule`] maps small per-layer multiplier lists onto that
+//! vector using the spec's
+//! [`param_layout`](crate::model::ModelSpec::param_layout), so the
+//! trainer can scale probe amplitude (`Δθ_i = Δθ · amp_i`) and update
+//! step (`η_i = η · lr_i`) per coordinate without giving up the flat
+//! hot path.
+//!
+//! CLI grammar (`mgd train --layer-lr 1.0,0.5,0.25`): comma-separated
+//! multipliers, one per layer in order, or a single value broadcast to
+//! every layer.  A schedule of all `1.0` is bit-identical to running
+//! without one — multiplying by `1.0` is exact in IEEE arithmetic, and
+//! the trainer's scalar and scheduled paths compute the same products in
+//! the same order.
+
+use anyhow::{bail, Result};
+
+use crate::model::LayerLayout;
+
+/// Per-layer learning-rate / amplitude multipliers over the model's
+/// layer layout.
+///
+/// Holds the *per-layer* lists exactly as parsed (these are what
+/// checkpoints record and what config equality compares);
+/// [`expand`](Self::expand) tiles them into per-parameter vectors for
+/// the trainer's hot path.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PerLayerSchedule {
+    lr: Vec<f32>,
+    amp: Vec<f32>,
+}
+
+/// Parse a `--layer-lr`/`--layer-amp` multiplier list: comma-separated
+/// finite positive floats (`"1.0,0.5,0.25"`), or a single value that
+/// broadcasts to every layer.
+pub fn parse_multipliers(s: &str) -> Result<Vec<f32>> {
+    let vals: Vec<f32> = s
+        .split(',')
+        .map(|tok| {
+            let tok = tok.trim();
+            tok.parse::<f32>().map_err(|_| anyhow::anyhow!("bad multiplier {tok:?} in {s:?}"))
+        })
+        .collect::<Result<_>>()?;
+    if vals.is_empty() {
+        bail!("empty multiplier list");
+    }
+    for &v in &vals {
+        if !v.is_finite() || v <= 0.0 {
+            bail!("multipliers must be finite and > 0, got {v} in {s:?}");
+        }
+    }
+    Ok(vals)
+}
+
+impl PerLayerSchedule {
+    /// Build from per-layer multiplier lists.  Either list may hold a
+    /// single value (broadcast) or one entry per layer; a missing axis
+    /// is the identity (`[1.0]`).
+    pub fn new(lr: Vec<f32>, amp: Vec<f32>) -> Result<Self> {
+        for (name, list) in [("lr", &lr), ("amp", &amp)] {
+            if list.is_empty() {
+                bail!("per-layer {name} multiplier list is empty");
+            }
+            for &v in list {
+                if !v.is_finite() || v <= 0.0 {
+                    bail!("per-layer {name} multipliers must be finite and > 0, got {v}");
+                }
+            }
+        }
+        Ok(PerLayerSchedule { lr, amp })
+    }
+
+    /// Build from the CLI's optional `--layer-lr` / `--layer-amp`
+    /// strings.  `None` on both axes means "no schedule".
+    pub fn from_cli(lr: Option<&str>, amp: Option<&str>) -> Result<Option<Self>> {
+        if lr.is_none() && amp.is_none() {
+            return Ok(None);
+        }
+        let lr = lr.map(parse_multipliers).transpose()?.unwrap_or_else(|| vec![1.0]);
+        let amp = amp.map(parse_multipliers).transpose()?.unwrap_or_else(|| vec![1.0]);
+        Ok(Some(PerLayerSchedule::new(lr, amp)?))
+    }
+
+    /// Per-layer learning-rate multipliers as parsed (len 1 = broadcast).
+    pub fn lr(&self) -> &[f32] {
+        &self.lr
+    }
+
+    /// Per-layer amplitude multipliers as parsed (len 1 = broadcast).
+    pub fn amp(&self) -> &[f32] {
+        &self.amp
+    }
+
+    /// Tile the per-layer lists into per-parameter `(lr, amp)` vectors
+    /// over `layout`.  Each axis must hold one value (broadcast) or
+    /// exactly `layout.len()` entries; `layout` must tile
+    /// `0..n_params` contiguously.
+    pub fn expand(&self, layout: &[LayerLayout], n_params: usize) -> Result<(Vec<f32>, Vec<f32>)> {
+        if layout.is_empty() {
+            bail!("per-layer schedule needs a non-empty layer layout");
+        }
+        let tile = |list: &[f32], name: &str| -> Result<Vec<f32>> {
+            if list.len() != 1 && list.len() != layout.len() {
+                bail!(
+                    "per-layer {name} schedule has {} multipliers, model has {} layers",
+                    list.len(),
+                    layout.len()
+                );
+            }
+            let mut out = vec![0f32; n_params];
+            let mut expect = 0usize;
+            for (i, l) in layout.iter().enumerate() {
+                if l.offset != expect || l.offset + l.len > n_params {
+                    bail!("layer layout does not tile theta at layer {i} (offset {})", l.offset);
+                }
+                let m = if list.len() == 1 { list[0] } else { list[i] };
+                out[l.offset..l.offset + l.len].fill(m);
+                expect = l.offset + l.len;
+            }
+            if expect != n_params {
+                bail!("layer layout covers {expect} parameters, device has {n_params}");
+            }
+            Ok(out)
+        };
+        Ok((tile(&self.lr, "lr")?, tile(&self.amp, "amp")?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout() -> Vec<LayerLayout> {
+        vec![
+            LayerLayout { offset: 0, len: 3, weight_len: 2 },
+            LayerLayout { offset: 3, len: 2, weight_len: 1 },
+            LayerLayout { offset: 5, len: 4, weight_len: 3 },
+        ]
+    }
+
+    #[test]
+    fn parses_lists_and_rejects_junk() {
+        assert_eq!(parse_multipliers("1.0,0.5,0.25").unwrap(), vec![1.0, 0.5, 0.25]);
+        assert_eq!(parse_multipliers(" 2.0 ").unwrap(), vec![2.0]);
+        assert!(parse_multipliers("1.0,,0.5").is_err());
+        assert!(parse_multipliers("0.0").is_err());
+        assert!(parse_multipliers("-1.0").is_err());
+        assert!(parse_multipliers("nan").is_err());
+        assert!(parse_multipliers("inf").is_err());
+    }
+
+    #[test]
+    fn expands_per_layer_and_broadcasts() {
+        let s = PerLayerSchedule::new(vec![1.0, 0.5, 0.25], vec![2.0]).unwrap();
+        let (lr, amp) = s.expand(&layout(), 9).unwrap();
+        assert_eq!(lr, vec![1.0, 1.0, 1.0, 0.5, 0.5, 0.25, 0.25, 0.25, 0.25]);
+        assert_eq!(amp, vec![2.0; 9]);
+    }
+
+    #[test]
+    fn wrong_layer_count_is_rejected() {
+        let s = PerLayerSchedule::new(vec![1.0, 0.5], vec![1.0]).unwrap();
+        assert!(s.expand(&layout(), 9).is_err());
+    }
+
+    #[test]
+    fn cli_axes_compose() {
+        assert!(PerLayerSchedule::from_cli(None, None).unwrap().is_none());
+        let s = PerLayerSchedule::from_cli(Some("1.0,0.5,0.25"), None).unwrap().unwrap();
+        assert_eq!(s.lr(), &[1.0, 0.5, 0.25]);
+        assert_eq!(s.amp(), &[1.0]);
+        assert!(PerLayerSchedule::from_cli(Some("0"), None).is_err());
+    }
+}

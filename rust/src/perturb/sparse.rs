@@ -1,0 +1,234 @@
+//! Structured sparse Rademacher probes — the block-cycling half of the
+//! perturbation scaling engine.
+//!
+//! Dense code-multiplexed probes pay gradient-estimate variance that
+//! grows with `P`: every parameter's true cost contribution lands in
+//! every *other* parameter's correlator as cross-talk.  Sparse probes
+//! cap that sum at the block size — each τp window perturbs exactly one
+//! block of θ (a model layer, or a fixed-size chunk) and holds every
+//! other coordinate at exactly `0.0`, cycling round-robin so all of θ is
+//! covered every `blocks` pattern advances.  This is the structure the
+//! scaling follow-up papers (arXiv 2501.15403, 2504.20314) identify as
+//! the practical wall-breaker at large `P`.
+//!
+//! One generator serves both [`PerturbKind::LayerSparse`] (blocks from
+//! [`param_layout`](crate::model::ModelSpec::param_layout)) and
+//! [`PerturbKind::BlockSparse`] (fixed-size contiguous blocks); only the
+//! block table differs.
+
+use anyhow::{bail, Result};
+
+use crate::model::LayerLayout;
+use crate::perturb::{PerturbKind, PerturbState, Perturbation};
+use crate::rng::Rng;
+
+/// Block-cycling sparse Rademacher generator behind both
+/// [`PerturbKind::LayerSparse`] and [`PerturbKind::BlockSparse`].
+///
+/// τp window `w` perturbs block `w % blocks` with a fresh ±Δθ Rademacher
+/// draw over that block's slice and exact zeros elsewhere.  The RNG only
+/// advances when a window's pattern is drawn, so the stream — like
+/// [`RademacherCode`](crate::perturb::RademacherCode)'s — is
+/// deterministic for non-decreasing `t` and checkpointable mid-window.
+pub struct SparseRademacher {
+    kind: PerturbKind,
+    amplitude: f32,
+    tau_p: u64,
+    rng: Rng,
+    /// `(offset, len)` per block, covering `0..P` contiguously.
+    blocks: Vec<(usize, usize)>,
+    current: Vec<f32>,
+    current_window: Option<u64>,
+}
+
+impl SparseRademacher {
+    /// One block per model layer, from the spec's
+    /// [`param_layout`](crate::model::ModelSpec::param_layout).
+    pub fn layered(
+        layout: &[LayerLayout],
+        n_params: usize,
+        amplitude: f32,
+        tau_p: u64,
+        seed: u64,
+    ) -> Result<Self> {
+        let blocks: Vec<(usize, usize)> = layout.iter().map(|l| (l.offset, l.len)).collect();
+        Self::from_blocks(PerturbKind::LayerSparse, blocks, n_params, amplitude, tau_p, seed)
+    }
+
+    /// Fixed-size contiguous blocks of `block` parameters (the last may
+    /// be short) — for devices that expose no layer structure.
+    pub fn blocked(
+        block: usize,
+        n_params: usize,
+        amplitude: f32,
+        tau_p: u64,
+        seed: u64,
+    ) -> Result<Self> {
+        if block == 0 {
+            bail!("block_sparse block size must be >= 1");
+        }
+        let blocks: Vec<(usize, usize)> =
+            (0..n_params).step_by(block).map(|off| (off, block.min(n_params - off))).collect();
+        let kind = PerturbKind::BlockSparse { block };
+        Self::from_blocks(kind, blocks, n_params, amplitude, tau_p, seed)
+    }
+
+    fn from_blocks(
+        kind: PerturbKind,
+        blocks: Vec<(usize, usize)>,
+        n_params: usize,
+        amplitude: f32,
+        tau_p: u64,
+        seed: u64,
+    ) -> Result<Self> {
+        if blocks.is_empty() {
+            bail!("sparse perturbation needs at least one block (P = {n_params})");
+        }
+        let mut expect = 0usize;
+        for &(off, len) in &blocks {
+            if off != expect || len == 0 {
+                bail!(
+                    "sparse block table is not a contiguous tiling of theta: block at \
+                     offset {off} (len {len}), expected offset {expect}"
+                );
+            }
+            expect += len;
+        }
+        if expect != n_params {
+            bail!("sparse block table covers {expect} parameters, device has {n_params}");
+        }
+        Ok(SparseRademacher {
+            kind,
+            amplitude,
+            tau_p: tau_p.max(1),
+            rng: Rng::new(seed ^ 0x7370_6172), // "spar"
+            blocks,
+            current: vec![0.0; n_params],
+            current_window: None,
+        })
+    }
+
+    /// The block cycle length: every parameter is perturbed exactly once
+    /// per `cycle()` pattern advances.
+    pub fn cycle(&self) -> usize {
+        self.blocks.len()
+    }
+}
+
+impl Perturbation for SparseRademacher {
+    fn fill(&mut self, t: u64, out: &mut [f32]) {
+        let window = t / self.tau_p;
+        if self.current_window != Some(window) {
+            self.current.fill(0.0);
+            let (off, len) = self.blocks[(window % self.blocks.len() as u64) as usize];
+            let amp_bits = self.amplitude.to_bits();
+            for chunk in self.current[off..off + len].chunks_mut(64) {
+                let mut bits = self.rng.next_u64();
+                for v in chunk.iter_mut() {
+                    // Branchless sign-splat, same idiom as RademacherCode.
+                    *v = f32::from_bits(amp_bits ^ ((bits as u32 & 1) << 31));
+                    bits >>= 1;
+                }
+            }
+            self.current_window = Some(window);
+        }
+        out.copy_from_slice(&self.current);
+    }
+
+    fn amplitude(&self) -> f32 {
+        self.amplitude
+    }
+
+    fn kind(&self) -> PerturbKind {
+        self.kind
+    }
+
+    fn export_state(&self) -> PerturbState {
+        PerturbState {
+            rng: Some(self.rng.state()),
+            current: self.current.clone(),
+            current_window: self.current_window,
+            ..PerturbState::default()
+        }
+    }
+
+    fn import_state(&mut self, state: &PerturbState) -> Result<()> {
+        let Some(rng) = state.rng else {
+            bail!("sparse rademacher state is missing the generator RNG");
+        };
+        if state.current.len() != self.current.len() {
+            bail!(
+                "sparse rademacher state holds {} pattern values, generator has {} parameters",
+                state.current.len(),
+                self.current.len()
+            );
+        }
+        self.rng.set_state(rng);
+        self.current.copy_from_slice(&state.current);
+        self.current_window = state.current_window;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn layout3() -> Vec<LayerLayout> {
+        vec![
+            LayerLayout { offset: 0, len: 4, weight_len: 3 },
+            LayerLayout { offset: 4, len: 2, weight_len: 1 },
+            LayerLayout { offset: 6, len: 5, weight_len: 4 },
+        ]
+    }
+
+    #[test]
+    fn layer_sparse_perturbs_exactly_one_layer_per_window() {
+        let layout = layout3();
+        let mut gen = SparseRademacher::layered(&layout, 11, 0.25, 2, 7).unwrap();
+        let mut buf = vec![0f32; 11];
+        for t in 0..12u64 {
+            gen.fill(t, &mut buf);
+            let active = ((t / 2) % 3) as usize;
+            let (off, len) = (layout[active].offset, layout[active].len);
+            for (i, v) in buf.iter().enumerate() {
+                if i >= off && i < off + len {
+                    assert_eq!(v.abs(), 0.25, "active block must be ±Δθ at t={t}, i={i}");
+                } else {
+                    assert_eq!(v.to_bits(), 0.0f32.to_bits(), "off-block must be exactly +0.0");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn block_sparse_covers_every_parameter_in_one_cycle() {
+        let p = 10;
+        let mut gen = SparseRademacher::blocked(3, p, 1.0, 1, 3).unwrap();
+        assert_eq!(gen.cycle(), 4); // ⌈10/3⌉ blocks, last short
+        let mut buf = vec![0f32; p];
+        let mut touched = vec![false; p];
+        for t in 0..4u64 {
+            gen.fill(t, &mut buf);
+            for (touch, v) in touched.iter_mut().zip(&buf) {
+                *touch |= *v != 0.0;
+            }
+        }
+        assert!(touched.iter().all(|&b| b), "one cycle must perturb every parameter");
+    }
+
+    #[test]
+    fn bad_block_tables_are_rejected() {
+        assert!(SparseRademacher::blocked(0, 8, 1.0, 1, 0).is_err());
+        assert!(SparseRademacher::layered(&[], 8, 1.0, 1, 0).is_err());
+        // Layout covering fewer params than the device owns.
+        let short = vec![LayerLayout { offset: 0, len: 4, weight_len: 3 }];
+        assert!(SparseRademacher::layered(&short, 8, 1.0, 1, 0).is_err());
+        // Non-contiguous layout.
+        let gap = vec![
+            LayerLayout { offset: 0, len: 3, weight_len: 2 },
+            LayerLayout { offset: 4, len: 4, weight_len: 3 },
+        ];
+        assert!(SparseRademacher::layered(&gap, 8, 1.0, 1, 0).is_err());
+    }
+}

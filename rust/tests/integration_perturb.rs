@@ -1,0 +1,251 @@
+//! Integration: the perturbation scaling engine against pinned references.
+//!
+//! Two contracts are enforced here:
+//! 1. **Parity pin** — the four pre-engine families (sinusoidal,
+//!    sequential, Walsh, Rademacher) must train *byte-identically* to an
+//!    in-test transliteration of Algorithm 1 written directly against the
+//!    device API.  The engine refactor (antithetic pairing, per-layer
+//!    scales, the shared accumulate/update helpers) must be invisible to
+//!    every existing trajectory.
+//! 2. **Resume pin** — each new family (layer_sparse, block_sparse,
+//!    antithetic) must survive checkpoint → JSON → restore bit-identically
+//!    across τp ∈ {1, 3}, including snapshots taken mid-antithetic-pair.
+//!
+//! Everything runs on `NativeDevice` (no artifacts, no PJRT).
+
+use mgd::coordinator::checkpoint::TrainerSnapshot;
+use mgd::coordinator::{MgdConfig, MgdTrainer, SampleSchedule, ScheduleKind};
+use mgd::datasets::xor;
+use mgd::device::{HardwareDevice, NativeDevice};
+use mgd::json::Json;
+use mgd::noise::NoiseConfig;
+use mgd::optim::init_params_uniform;
+use mgd::perturb::{self, PerturbKind};
+use mgd::rng::Rng;
+
+fn xor_device(seed: u64) -> NativeDevice {
+    let mut dev = NativeDevice::new(&[2, 2, 1], 1);
+    let mut rng = Rng::new(seed);
+    let mut theta = vec![0f32; 9];
+    init_params_uniform(&mut rng, &mut theta, 1.0);
+    dev.set_params(&theta).unwrap();
+    dev
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Algorithm 1, transliterated: the pinned forward-difference reference
+/// the trainer must reproduce bit for bit.  Deliberately written against
+/// the raw device API — no trainer code paths — so a behavioral drift in
+/// `MgdTrainer` cannot hide by also changing the reference.
+fn reference_run(cfg: MgdConfig, steps: u64) -> (Vec<u32>, Vec<u32>, u64) {
+    let data = xor();
+    let mut dev = xor_device(cfg.seed);
+    let p = dev.n_params();
+    let mut pert = perturb::make(cfg.kind, p, cfg.amplitude, cfg.tau_p, cfg.seed);
+    let mut schedule = SampleSchedule::new(&data, 1, ScheduleKind::Cyclic, cfg.seed);
+    let mut rng = Rng::new(cfg.seed ^ 0x4d47_4431); // the trainer's noise RNG tag
+    let mut g = vec![0f32; p];
+    let mut tt = vec![0f32; p];
+    let (mut c0, mut c0_valid) = (0f32, false);
+    let mut next_load = 0u64;
+    let mut evals = 0u64;
+    for n in 0..steps {
+        // Lines 3–4: sample window every τx.
+        if n >= next_load {
+            let idx = schedule.next_window();
+            let (x, y) = data.gather(&idx);
+            next_load = n + cfg.tau_x.max(1);
+            c0_valid = false;
+            dev.load_batch(&x, &y).unwrap();
+        }
+        // Lines 5–7: baseline C₀ when samples or θ changed.
+        if !c0_valid {
+            c0 = dev.cost(None).unwrap() + cfg.noise.cost_noise(&mut rng);
+            evals += 1;
+            c0_valid = true;
+        }
+        // Lines 8–12: probe, perturbed cost, modulation.
+        pert.fill(n, &mut tt);
+        let c = dev.cost(Some(&tt)).unwrap() + cfg.noise.cost_noise(&mut rng);
+        evals += 1;
+        let c_tilde = c - c0;
+        // Lines 13–14: homodyne accumulation.
+        let inv_a2 = 1.0 / (cfg.amplitude * cfg.amplitude);
+        for (gi, &ti) in g.iter_mut().zip(&tt) {
+            *gi += c_tilde * ti * inv_a2;
+        }
+        // Lines 15–17: update every τθ.
+        if cfg.tau_theta != u64::MAX && (n + 1) % cfg.tau_theta.max(1) == 0 {
+            let mut delta: Vec<f32> = g.iter().map(|&gi| -cfg.eta * gi).collect();
+            cfg.noise.apply_update_noise(&mut rng, &mut delta);
+            dev.apply_update(&delta).unwrap();
+            g.fill(0.0);
+            c0_valid = false;
+        }
+    }
+    (bits(&dev.get_params().unwrap()), bits(&g), evals)
+}
+
+/// The four pre-engine families train byte-identically to the pinned
+/// Algorithm 1 reference — θ, the open G integrator, and the eval count —
+/// with cost and update noise active (RNG draw order is the contract).
+#[test]
+fn existing_families_match_pinned_algorithm1_reference() {
+    for kind in [
+        PerturbKind::Sinusoidal,
+        PerturbKind::SequentialFd,
+        PerturbKind::WalshCode,
+        PerturbKind::RademacherCode,
+    ] {
+        let cfg = MgdConfig {
+            tau_x: 3,
+            tau_theta: 4,
+            tau_p: 2,
+            eta: 0.9,
+            amplitude: 0.05,
+            kind,
+            noise: NoiseConfig { sigma_cost: 0.02, sigma_update: 0.003 },
+            seed: 77,
+        };
+        // 46 steps: ends mid-τx window, mid-τθ integration — G is open.
+        let steps = 46u64;
+        let (ref_theta, ref_g, ref_evals) = reference_run(cfg, steps);
+
+        let data = xor();
+        let mut dev = xor_device(cfg.seed);
+        let mut tr = MgdTrainer::new(&mut dev, &data, cfg, ScheduleKind::Cyclic);
+        for _ in 0..steps {
+            tr.step().unwrap();
+        }
+        assert_eq!(tr.cost_evals(), ref_evals, "{kind:?} eval count drifted");
+        assert_eq!(bits(tr.gradient()), ref_g, "{kind:?} G drifted from Algorithm 1");
+        assert_eq!(bits(&tr.device_params().unwrap()), ref_theta, "{kind:?} θ drifted");
+    }
+}
+
+/// Every new family resumes bit-identically from a JSON-round-tripped
+/// checkpoint taken mid-run, across τp ∈ {1, 3}.  The antithetic split
+/// point is odd, so the snapshot carries a half-open pair (`pending_c`).
+#[test]
+fn new_kinds_checkpoint_resume_is_bit_identical() {
+    let kinds = [
+        PerturbKind::LayerSparse,
+        PerturbKind::BlockSparse { block: 4 },
+        PerturbKind::Antithetic,
+    ];
+    for kind in kinds {
+        for tau_p in [1u64, 3] {
+            let antithetic = kind == PerturbKind::Antithetic;
+            let cfg = MgdConfig {
+                // Antithetic needs even cadences; the sparse families get
+                // boundaries that leave windows half-open at the split.
+                tau_x: if antithetic { 2 } else { 3 },
+                tau_theta: if antithetic { 6 } else { 5 },
+                tau_p,
+                eta: 0.8,
+                amplitude: 0.04,
+                kind,
+                noise: NoiseConfig { sigma_cost: 0.01, sigma_update: 0.002 },
+                seed: 5,
+            };
+            let data = xor();
+            let total = 30u64;
+            let split = 13u64; // odd: mid-pair for antithetic
+
+            // One-shot reference.
+            let mut dev_a = xor_device(5);
+            let mut tr_a = MgdTrainer::new(&mut dev_a, &data, cfg, ScheduleKind::Cyclic);
+            for _ in 0..total {
+                tr_a.step().unwrap();
+            }
+
+            // Checkpointed at `split`, serialized through JSON, restored
+            // into a trainer on a *fresh* device.
+            let mut dev_b = xor_device(5);
+            let mut tr_b = MgdTrainer::new(&mut dev_b, &data, cfg, ScheduleKind::Cyclic);
+            for _ in 0..split {
+                tr_b.step().unwrap();
+            }
+            let snap = tr_b.checkpoint().unwrap();
+            if antithetic {
+                assert!(snap.pending_c.is_some(), "odd split must park a half-open pair");
+            }
+            let doc = snap.to_json().dump();
+            let back = TrainerSnapshot::from_json(&Json::parse(&doc).unwrap()).unwrap();
+            let mut dev_c = xor_device(999); // different init: restore must overwrite
+            let mut tr_c = MgdTrainer::new(&mut dev_c, &data, cfg, ScheduleKind::Cyclic);
+            tr_c.restore(&back).unwrap();
+            for _ in 0..(total - split) {
+                tr_c.step().unwrap();
+            }
+
+            let tag = format!("{kind:?} τp={tau_p}");
+            assert_eq!(tr_c.steps(), tr_a.steps(), "{tag}: step count");
+            assert_eq!(tr_c.cost_evals(), tr_a.cost_evals(), "{tag}: eval count");
+            assert_eq!(bits(tr_c.gradient()), bits(tr_a.gradient()), "{tag}: G");
+            assert_eq!(
+                bits(&tr_c.device_params().unwrap()),
+                bits(&tr_a.device_params().unwrap()),
+                "{tag}: θ"
+            );
+        }
+    }
+}
+
+/// A per-layer schedule survives checkpoint → restore only into an
+/// identically-scheduled trainer: matching schedules restore bit-exactly,
+/// a missing or different schedule is rejected with a pointer to the
+/// `--layer-lr`/`--layer-amp` flags.
+#[test]
+fn layer_schedule_restore_requires_matching_multipliers() {
+    let data = xor();
+    let cfg = MgdConfig {
+        tau_x: 2,
+        tau_theta: 4,
+        eta: 0.6,
+        amplitude: 0.03,
+        kind: PerturbKind::LayerSparse,
+        seed: 21,
+        ..Default::default()
+    };
+    let sched = mgd::perturb::PerLayerSchedule::new(vec![1.0, 0.5], vec![1.0, 2.0]).unwrap();
+
+    let mut dev_a = xor_device(21);
+    let mut tr_a = MgdTrainer::new(&mut dev_a, &data, cfg, ScheduleKind::Cyclic);
+    tr_a.set_layer_schedule(&sched).unwrap();
+    for _ in 0..17 {
+        tr_a.step().unwrap();
+    }
+    let snap = tr_a.checkpoint().unwrap();
+    assert_eq!(snap.layer_lr, vec![1.0, 0.5]);
+
+    // Same schedule → restore succeeds and continues bit-identically.
+    let mut dev_b = xor_device(21);
+    let mut tr_b = MgdTrainer::new(&mut dev_b, &data, cfg, ScheduleKind::Cyclic);
+    tr_b.set_layer_schedule(&sched).unwrap();
+    tr_b.restore(&snap).unwrap();
+    for _ in 0..5 {
+        tr_a.step().unwrap();
+        tr_b.step().unwrap();
+    }
+    assert_eq!(
+        bits(&tr_a.device_params().unwrap()),
+        bits(&tr_b.device_params().unwrap())
+    );
+
+    // No schedule → rejected, with CLI guidance in the message.
+    let mut dev_c = xor_device(21);
+    let mut tr_c = MgdTrainer::new(&mut dev_c, &data, cfg, ScheduleKind::Cyclic);
+    let err = format!("{:#}", tr_c.restore(&snap).unwrap_err());
+    assert!(err.contains("--layer-lr"), "{err}");
+
+    // Different multipliers → rejected.
+    let other = mgd::perturb::PerLayerSchedule::new(vec![1.0, 0.25], vec![1.0, 2.0]).unwrap();
+    let mut dev_d = xor_device(21);
+    let mut tr_d = MgdTrainer::new(&mut dev_d, &data, cfg, ScheduleKind::Cyclic);
+    tr_d.set_layer_schedule(&other).unwrap();
+    assert!(tr_d.restore(&snap).is_err());
+}

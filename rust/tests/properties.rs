@@ -8,6 +8,7 @@ use mgd::datasets::{nist7x7, parity, synthetic_fmnist, Dataset};
 use mgd::device::{HardwareDevice, NativeDevice};
 use mgd::json::Json;
 use mgd::metrics::{angle_degrees, quantile_sorted, Quartiles};
+use mgd::model::LayerLayout;
 use mgd::perturb::{self, Perturbation, PerturbKind};
 use mgd::rng::Rng;
 
@@ -201,19 +202,28 @@ fn walsh_orthogonality_exact_for_non_power_of_two_p() {
     }
 }
 
-/// All discrete families replay deterministically for the same seed and
-/// monotone t sequence.
+/// All discrete families — the original four and the scaling-engine
+/// three — replay deterministically for the same seed and monotone t
+/// sequence.
 #[test]
 fn perturbations_replay_deterministically() {
+    let p = 33;
+    let layout = vec![
+        LayerLayout { offset: 0, len: 13, weight_len: 12 },
+        LayerLayout { offset: 13, len: 20, weight_len: 18 },
+    ];
     for kind in [
         PerturbKind::Sinusoidal,
         PerturbKind::SequentialFd,
         PerturbKind::WalshCode,
         PerturbKind::RademacherCode,
+        PerturbKind::LayerSparse,
+        PerturbKind::BlockSparse { block: 5 },
+        PerturbKind::Antithetic,
     ] {
-        let p = 33;
         let run = || {
-            let mut gen = perturb::make(kind, p, 0.02, 3, 77);
+            let mut gen =
+                perturb::make_with_layout(kind, p, 0.02, 3, 77, Some(&layout)).unwrap();
             let mut out = Vec::new();
             let mut buf = vec![0f32; p];
             for t in 0..200 {
@@ -223,6 +233,132 @@ fn perturbations_replay_deterministically() {
             out
         };
         assert_eq!(run(), run(), "{kind:?} not deterministic");
+    }
+}
+
+/// Builds a random contiguous layer table covering exactly `p` params —
+/// the shape `ModelSpec::param_layout` would hand a random network.
+fn random_layout(rng: &mut Rng, p: usize) -> Vec<LayerLayout> {
+    let mut layout = Vec::new();
+    let mut off = 0usize;
+    while off < p {
+        let len = 1 + rng.below((p - off).min(7) as u64) as usize;
+        layout.push(LayerLayout { offset: off, len, weight_len: len });
+        off += len;
+    }
+    layout
+}
+
+/// Sparse probes on random layouts and block sizes: the active block
+/// carries exactly ±Δθ (bit-exact magnitude), every other coordinate is
+/// exactly `+0.0`, blocks cycle round-robin so one cycle covers all of
+/// θ, and per-coordinate signs are mean-zero over many windows.
+#[test]
+fn sparse_probes_exact_amplitude_zeros_and_mean_zero_on_random_layouts() {
+    let mut meta_rng = Rng::new(0x5fa5);
+    for case in 0..12 {
+        let seed = meta_rng.next_u64();
+        let mut rng = Rng::new(seed);
+        let p = 5 + rng.below(60) as usize;
+        let tau_p = 1 + rng.below(3);
+        let amp = 0.05f32;
+        let layout = random_layout(&mut rng, p);
+        let block = 1 + rng.below(p as u64) as usize;
+        // Both sparse families, each with its own block table.
+        let cases: Vec<(PerturbKind, Vec<(usize, usize)>)> = vec![
+            (PerturbKind::LayerSparse, layout.iter().map(|l| (l.offset, l.len)).collect()),
+            (
+                PerturbKind::BlockSparse { block },
+                (0..p).step_by(block).map(|o| (o, block.min(p - o))).collect(),
+            ),
+        ];
+        for (kind, blocks) in cases {
+            let mut gen =
+                perturb::make_with_layout(kind, p, amp, tau_p, seed, Some(&layout)).unwrap();
+            let cycles = 200u64;
+            let windows = cycles * blocks.len() as u64;
+            let mut sum = vec![0f64; p];
+            let mut buf = vec![0f32; p];
+            for w in 0..windows {
+                gen.fill(w * tau_p, &mut buf); // first timestep of window w
+                let (off, len) = blocks[(w % blocks.len() as u64) as usize];
+                for (i, &v) in buf.iter().enumerate() {
+                    if i >= off && i < off + len {
+                        assert_eq!(
+                            v.abs().to_bits(),
+                            amp.to_bits(),
+                            "case {case} (seed {seed:#x}) {kind:?}: active block \
+                             coordinate {i} is {v}, not ±Δθ"
+                        );
+                    } else {
+                        assert_eq!(
+                            v.to_bits(),
+                            0.0f32.to_bits(),
+                            "case {case} (seed {seed:#x}) {kind:?}: off-block \
+                             coordinate {i} is {v}, not exactly +0.0"
+                        );
+                    }
+                    sum[i] += v as f64;
+                }
+            }
+            // Each coordinate saw `cycles` ±amp draws; Hoeffding puts the
+            // mean within amp/2 with overwhelming margin at 200 draws.
+            for (i, s) in sum.iter().enumerate() {
+                let mean = s / cycles as f64;
+                assert!(
+                    mean.abs() < 0.5 * amp as f64,
+                    "case {case} (seed {seed:#x}) {kind:?}: coordinate {i} \
+                     sign-mean {mean} is not ≈ 0"
+                );
+            }
+        }
+    }
+}
+
+/// Antithetic pairs are bit-antisymmetric for random P and τp: within a
+/// pair window, the odd timestep is the exact IEEE negation of the even
+/// one, every coordinate carries exactly ±Δθ, and the base pattern holds
+/// for the full `2·τp` span.
+#[test]
+fn antithetic_pairs_negate_bitwise_for_random_tau_p() {
+    let mut meta_rng = Rng::new(0xa171);
+    for case in 0..15 {
+        let seed = meta_rng.next_u64();
+        let mut rng = Rng::new(seed);
+        let p = 1 + rng.below(80) as usize;
+        let tau_p = 1 + rng.below(4);
+        let amp = 0.02f32;
+        let mut gen = perturb::make(PerturbKind::Antithetic, p, amp, tau_p, seed);
+        let mut even = vec![0f32; p];
+        let mut buf = vec![0f32; p];
+        let mut base_of_window = vec![0f32; p];
+        for t in 0..(16 * tau_p) {
+            gen.fill(t, &mut buf);
+            for (i, &v) in buf.iter().enumerate() {
+                assert_eq!(
+                    v.abs().to_bits(),
+                    amp.to_bits(),
+                    "case {case} (seed {seed:#x}) t={t}: coordinate {i} not ±Δθ"
+                );
+            }
+            if t % (2 * tau_p) == 0 {
+                base_of_window.copy_from_slice(&buf);
+            }
+            if t % 2 == 0 {
+                even.copy_from_slice(&buf);
+                // Every even timestep of the window replays the base `+θ̃`.
+                assert_eq!(buf, base_of_window, "case {case} t={t}: base pattern drifted");
+            } else {
+                for (i, (&e, &o)) in even.iter().zip(&buf).enumerate() {
+                    assert_eq!(
+                        e.to_bits() ^ 0x8000_0000,
+                        o.to_bits(),
+                        "case {case} (seed {seed:#x}) t={t}: coordinate {i} \
+                         is not the exact negation of its pair"
+                    );
+                }
+            }
+        }
     }
 }
 
