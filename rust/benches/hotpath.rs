@@ -16,13 +16,22 @@
 use mgd::bench::Bench;
 use mgd::coordinator::{MgdConfig, MgdTrainer, OnChipTrainer, ScheduleKind};
 use mgd::datasets::{nist7x7, parity};
+use mgd::device::exec::{self, KernelMode};
 use mgd::device::{HardwareDevice, NativeDevice, PjrtDevice};
+use mgd::json::Json;
 use mgd::optim::init_params_uniform;
 use mgd::perturb::{self, Perturbation, PerturbKind};
 use mgd::rng::Rng;
 use mgd::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
+    // Pin the probe sweep to one worker (cached on first read) so the
+    // kernel section below is a clean single-thread comparison.  The
+    // other sections are P = 220 workloads, under the parallel
+    // threshold either way.
+    if std::env::var_os("MGD_EXEC_WORKERS").is_none() {
+        std::env::set_var("MGD_EXEC_WORKERS", "1");
+    }
     let b = Bench::default();
     println!("== L3 substrates ==");
 
@@ -84,6 +93,63 @@ fn main() -> anyhow::Result<()> {
         let cfg = MgdConfig { eta: 0.5, amplitude: 0.01, seed: 2, ..Default::default() };
         let mut tr = MgdTrainer::new(&mut dev, &data, cfg, ScheduleKind::Cyclic);
         b.run("mgd_step/native/nist744", || tr.step().unwrap().cost);
+    }
+
+    println!("\n== exec kernels ==");
+    {
+        // Scalar vs blocked vs SIMD layer sweeps on one thread
+        // (`MGD_EXEC_WORKERS=1` above): probe evaluations per second
+        // and approximate GFLOP/s at P = 10k and P = 100k.  Each
+        // weight feeds a multiply-add on both the θ and θ̃ paths, so
+        // flops ≈ 4 · weights · n · K per `cost_many` call.
+        let saved = exec::kernel_mode();
+        let sizes: [(&str, &[usize], usize); 2] =
+            [("P=10k", &[100, 90, 10], 24), ("P=100k", &[292, 330, 10], 8)];
+        for (label, widths, k) in sizes {
+            let n = 8usize;
+            let mut dev = NativeDevice::new(widths, n);
+            let p = dev.n_params();
+            let weights: usize = widths.windows(2).map(|w| w[0] * w[1]).sum();
+            let mut rng = Rng::new(7);
+            let mut theta = vec![0f32; p];
+            init_params_uniform(&mut rng, &mut theta, 1.0);
+            dev.set_params(&theta)?;
+            let mut x = vec![0f32; n * widths[0]];
+            let mut y = vec![0f32; n * widths[widths.len() - 1]];
+            rng.fill_uniform(&mut x, 0.0, 1.0);
+            rng.fill_uniform(&mut y, 0.0, 1.0);
+            dev.load_batch(&x, &y)?;
+            let mut probes = vec![0f32; k * p];
+            rng.fill_uniform(&mut probes, -0.01, 0.01);
+            let flops = (4 * weights * n * k) as f64;
+            let mut medians = [0f64; 3];
+            let modes = [KernelMode::Scalar, KernelMode::Blocked, KernelMode::Simd];
+            for (mi, mode) in modes.into_iter().enumerate() {
+                exec::set_kernel_mode(mode);
+                let m = b.run(&format!("exec_sweep/{label}/{}", mode.as_str()), || {
+                    dev.cost_many(&probes, k).unwrap()[0]
+                });
+                medians[mi] = m.median;
+                let evs = k as f64 / m.median;
+                let gflops = flops / m.median / 1e9;
+                println!("  -> {label} {}: {evs:.0} ev/s, {gflops:.2} GFLOP/s", mode.as_str());
+                mgd::bench::emit_bench_json(&mgd::bench::json_obj(vec![
+                    ("bench", Json::Str("exec_kernels".into())),
+                    ("size", Json::Str(label.into())),
+                    ("p", Json::Num(p as f64)),
+                    ("mode", Json::Str(mode.as_str().into())),
+                    ("median_s", Json::Num(m.median)),
+                    ("ev_per_s", Json::Num(evs)),
+                    ("gflops", Json::Num(gflops)),
+                ]));
+            }
+            println!(
+                "  -> {label}: blocked {:.2}x, simd {:.2}x scalar (single thread)",
+                medians[0] / medians[1],
+                medians[0] / medians[2]
+            );
+        }
+        exec::set_kernel_mode(saved);
     }
 
     println!("\n== obs overhead ==");

@@ -1,18 +1,21 @@
 //! Inference serving throughput: requests/sec, inferences (rows)/sec and
 //! latency percentiles vs the rows-per-request batch size.
 //!
-//! Three sections:
+//! Four sections:
 //!
 //! 1. **engine-direct** — the forward executor alone, no wire: rows/sec
 //!    at batch 1/8/64 (the pure amortization of the per-forward fixed
 //!    cost over the rows of a batch).
-//! 2. **served (loopback TCP)** — a full `serve_infer` endpoint queried
+//! 2. **quantized** — the int8 `QuantizedEngine` vs the f32 engine at
+//!    batch 64 (the rows/sec ratio is the nightly >= 1.5x gate) plus
+//!    the seeded fidelity numbers: argmax agreement and mean |Δlogit|.
+//! 3. **served (loopback TCP)** — a full `serve_infer` endpoint queried
 //!    by an `InferenceClient` at batch 1/8/64, measuring req/s, rows/s
 //!    and p50/p99 request latency.  The acceptance bar for the serving
 //!    subsystem is rows/sec at batch 64 ≥ 4× rows/sec at batch 1 on the
 //!    same engine — the same per-dispatch batching discipline that the
 //!    `CostMany` probe engine proved on the training side.
-//! 3. **sessions** — throughput vs concurrent sessions (1/8/64/256),
+//! 4. **sessions** — throughput vs concurrent sessions (1/8/64/256),
 //!    with the active set capped so the sweep grows the *idle* majority:
 //!    on the event-loop session layer an idle session is a slab slot,
 //!    not a thread, so the curve should stay flat.
@@ -33,9 +36,10 @@ use mgd::device::exec::ForwardScratch;
 use mgd::json::Json;
 use mgd::model::ModelSpec;
 use mgd::rng::Rng;
+use mgd::serve::quant::{self, QuantScratch};
 use mgd::serve::{
     batcher::percentile_ms, serve_infer, BatchPolicy, InferenceClient, InferenceEngine,
-    ServeInferOptions,
+    QuantizedEngine, ServeInferOptions,
 };
 
 /// Rows-per-request sweep (the acceptance criterion compares the ends).
@@ -171,6 +175,59 @@ fn bench_served(quick: bool) -> anyhow::Result<(Vec<Json>, f64)> {
     Ok((rows_json, speedup))
 }
 
+/// Engine-direct int8 vs f32: rows/sec at batch 64 plus the fidelity
+/// numbers (`argmax agreement`, mean |Δlogit|) from the same seeded
+/// evaluation set the serve path reports at startup.  The nightly gate
+/// reads `int8_over_f32_rows_per_sec` from this record.
+fn bench_quantized(quick: bool) -> anyhow::Result<Json> {
+    let engine = bench_engine();
+    let quant = QuantizedEngine::from_engine(&engine)?;
+    let report = quant::fidelity_report(&engine, &quant, 512)?;
+    let d = engine.input_len();
+    let b = 64usize;
+    let total_rows: usize = if quick { 20_000 } else { 200_000 };
+    let passes = (total_rows / b).max(1);
+    let x = input_rows(b, d);
+
+    let mut scratch = ForwardScratch::new();
+    let mut out = Vec::new();
+    engine.infer_into(&x, b, &mut scratch, &mut out)?; // scratch warmup
+    let mut sink = 0f32;
+    let t0 = Instant::now();
+    for _ in 0..passes {
+        engine.infer_into(&x, b, &mut scratch, &mut out)?;
+        sink += out[0];
+    }
+    let f32_rows_per_sec = (passes * b) as f64 / t0.elapsed().as_secs_f64();
+
+    let mut qscratch = QuantScratch::new();
+    quant.infer_into(&x, b, &mut qscratch, &mut out)?;
+    let t0 = Instant::now();
+    for _ in 0..passes {
+        quant.infer_into(&x, b, &mut qscratch, &mut out)?;
+        sink += out[0];
+    }
+    let int8_rows_per_sec = (passes * b) as f64 / t0.elapsed().as_secs_f64();
+
+    let ratio = int8_rows_per_sec / f32_rows_per_sec;
+    println!();
+    println!("quantized (engine-direct, batch {b}): {}", engine.spec());
+    println!(
+        "f32 {f32_rows_per_sec:.0} rows/s, int8 {int8_rows_per_sec:.0} rows/s \
+         ({ratio:.2}x); agreement {:.4}, mean |dlogit| {:.6} over {} rows   (sink {sink:.3})",
+        report.agreement, report.mean_abs_delta, report.rows
+    );
+    Ok(json_obj(vec![
+        ("batch_rows", Json::Num(b as f64)),
+        ("f32_rows_per_sec", Json::Num(f32_rows_per_sec)),
+        ("int8_rows_per_sec", Json::Num(int8_rows_per_sec)),
+        ("int8_over_f32_rows_per_sec", Json::Num(ratio)),
+        ("eval_rows", Json::Num(report.rows as f64)),
+        ("argmax_agreement", Json::Num(report.agreement)),
+        ("mean_abs_logit_delta", Json::Num(report.mean_abs_delta)),
+    ]))
+}
+
 /// Concurrent-session sweep for the event-loop session layer.
 const SESSION_COUNTS: &[usize] = &[1, 8, 64, 256];
 
@@ -267,12 +324,14 @@ fn main() -> anyhow::Result<()> {
         println!("infer_throughput (quick mode)");
     }
     let direct = bench_engine_direct(quick);
+    let quantized = bench_quantized(quick)?;
     let (served, speedup) = bench_served(quick)?;
     let sessions = bench_sessions(quick)?;
     emit_bench_json(&json_obj(vec![
         ("bench", Json::Str("infer_throughput".into())),
         ("quick", Json::Bool(quick)),
         ("engine_direct", Json::Arr(direct)),
+        ("quantized", quantized),
         ("served", Json::Arr(served)),
         ("sessions", Json::Arr(sessions)),
         ("batch64_over_batch1_rows_per_sec", Json::Num(speedup)),

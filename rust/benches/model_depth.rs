@@ -12,6 +12,12 @@
 //! cargo bench --bench model_depth
 //! ```
 //!
+//! Each depth also re-runs the batched window under the blocked and
+//! SIMD kernel modes ([`mgd::device::exec::KernelMode`]) with the sweep
+//! pinned to one worker, publishing `simd_over_scalar` per row and the
+//! minimum across the sweep — the single-thread speedup bar the nightly
+//! workflow hard-asserts after upload.
+//!
 //! Env toggles (the nightly CI bench job sets both):
 //! `MGD_BENCH_QUICK=1` shrinks the sweep; `MGD_BENCH_JSON=path` appends
 //! one JSONL record that the workflow merges into `BENCH_model.json`.
@@ -19,6 +25,7 @@
 use std::time::Instant;
 
 use mgd::bench::{emit_bench_json, json_obj, quick_mode};
+use mgd::device::exec::{self, KernelMode};
 use mgd::device::{HardwareDevice, NativeDevice};
 use mgd::json::Json;
 use mgd::model::ModelSpec;
@@ -51,6 +58,14 @@ fn device_for(spec: &ModelSpec) -> NativeDevice {
 }
 
 fn main() -> anyhow::Result<()> {
+    // Single-thread comparison: pin the sweep worker count (cached on
+    // first read) and start from the scalar reference kernels so the
+    // baseline is the pre-library executor regardless of the caller's
+    // MGD_EXEC_KERNEL.
+    if std::env::var_os("MGD_EXEC_WORKERS").is_none() {
+        std::env::set_var("MGD_EXEC_WORKERS", "1");
+    }
+    exec::set_kernel_mode(KernelMode::Scalar);
     let quick = quick_mode();
     if quick {
         println!("model_depth (quick mode)");
@@ -62,6 +77,7 @@ fn main() -> anyhow::Result<()> {
     );
     let work_budget: usize = if quick { 4_000_000 } else { 20_000_000 };
     let mut rows = Vec::new();
+    let mut simd_min = f64::INFINITY;
     for s in SPECS {
         let spec: ModelSpec = s.parse().unwrap();
         let mut dev = device_for(&spec);
@@ -93,6 +109,26 @@ fn main() -> anyhow::Result<()> {
         }
         let batched_secs = t0.elapsed().as_secs_f64();
 
+        // The same batched window under the blocked and SIMD kernels
+        // (scalar restored after each): the single-thread speedup rows
+        // the nightly gate reads.
+        let mut mode_secs = [batched_secs; 3];
+        for (mi, mode) in [KernelMode::Blocked, KernelMode::Simd].into_iter().enumerate() {
+            exec::set_kernel_mode(mode);
+            let warm = dev.cost_many(&probes, K).unwrap(); // blocked-layout scratch growth
+            sink += warm[0];
+            let t0 = Instant::now();
+            for _ in 0..windows {
+                let costs = dev.cost_many(&probes, K).unwrap();
+                sink += costs[K - 1];
+            }
+            mode_secs[mi + 1] = t0.elapsed().as_secs_f64();
+            exec::set_kernel_mode(KernelMode::Scalar);
+        }
+        let blocked_over_scalar = mode_secs[0] / mode_secs[1];
+        let simd_over_scalar = mode_secs[0] / mode_secs[2];
+        simd_min = simd_min.min(simd_over_scalar);
+
         let evals = (windows * K) as f64;
         println!(
             "{:<42} {:>6} {:>7} {:>15.0} {:>15.0} {:>8.2}x   (sink {sink:.3})",
@@ -103,6 +139,11 @@ fn main() -> anyhow::Result<()> {
             evals / batched_secs,
             serial_secs / batched_secs,
         );
+        println!(
+            "{:<42} kernels: blocked {blocked_over_scalar:.2}x, simd {simd_over_scalar:.2}x \
+             scalar (1 thread)",
+            ""
+        );
         rows.push(json_obj(vec![
             ("spec", Json::Str((*s).into())),
             ("depth", Json::Num(spec.depth() as f64)),
@@ -111,12 +152,16 @@ fn main() -> anyhow::Result<()> {
             ("serial_evals_per_sec", Json::Num(evals / serial_secs)),
             ("batched_evals_per_sec", Json::Num(evals / batched_secs)),
             ("batched_over_serial", Json::Num(serial_secs / batched_secs)),
+            ("simd_evals_per_sec", Json::Num(evals / mode_secs[2])),
+            ("blocked_over_scalar", Json::Num(blocked_over_scalar)),
+            ("simd_over_scalar", Json::Num(simd_over_scalar)),
         ]));
     }
     emit_bench_json(&json_obj(vec![
         ("bench", Json::Str("model_depth".into())),
         ("quick", Json::Bool(quick)),
         ("probes_per_window", Json::Num(K as f64)),
+        ("simd_over_scalar_min", Json::Num(simd_min)),
         ("depths", Json::Arr(rows)),
     ]));
     Ok(())

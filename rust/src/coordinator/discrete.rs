@@ -704,7 +704,11 @@ impl<'d> MgdTrainer<'d> {
     /// [`MgdTrainer::train_batched`], to which this delegates (a width-1
     /// window is exactly one Algorithm 1 step, so there is only one loop
     /// to keep correct).
-    pub fn train(&mut self, opts: &TrainOptions, eval_set: Option<&Dataset>) -> Result<TrainResult> {
+    pub fn train(
+        &mut self,
+        opts: &TrainOptions,
+        eval_set: Option<&Dataset>,
+    ) -> Result<TrainResult> {
         self.train_batched(opts, eval_set, 1)
     }
 

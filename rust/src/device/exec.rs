@@ -26,6 +26,35 @@
 //! accuracy probe and the serving path must all agree on — including the
 //! tie-breaking of [`argmax_row`], which follows `Iterator::max_by`
 //! (last maximum wins on exact ties).
+//!
+//! # Kernel modes
+//!
+//! The module is a small GEMM-like kernel library with three
+//! interchangeable implementations, selected by [`KernelMode`]
+//! (`MGD_EXEC_KERNEL=scalar|blocked|simd`, or [`set_kernel_mode`]):
+//!
+//! - **Scalar** (default) — the loops above, byte-for-byte the
+//!   pre-library executor.  This is the bitwise-pinned reference every
+//!   determinism test is built on.
+//! - **Blocked** — cache-blocked/tiled sweeps ([`SAMPLE_BLOCK`] ×
+//!   [`COL_BLOCK`] accumulator panels, θ panels walked once per block)
+//!   over portable 8-lane f32 arrays, plus the batch-major probe layout
+//!   of [`sweep_probe_block`] (θ panels shared across [`PROBE_BLOCK`]
+//!   probes of a `CostMany` frame).
+//! - **Simd** — the Blocked loop structure with explicit x86-64
+//!   intrinsics (8-wide AVX when the CPU has it, 4-wide SSE2 otherwise;
+//!   the portable lanes off x86-64).
+//!
+//! All three are **bit-identical** by construction: the one inner
+//! operation is an axpy over the output-neuron axis (`z[j] += h·w[j]`)
+//! whose lanes are independent `mul`-then-`add` pairs (never an FMA,
+//! which rounds once instead of twice), the accumulation order over the
+//! input axis stays `i = 0..width` for every `(sample, j)` element in
+//! every mode, and activations (the only cross-lane arithmetic) run the
+//! identical scalar code everywhere.  The vectorized modes are pinned
+//! against the scalar reference in `rust/tests/integration_model.rs`.
+
+use std::sync::atomic::{AtomicU8, Ordering};
 
 use crate::model::{Activation, Dense};
 use crate::noise::NeuronDefects;
@@ -50,6 +79,397 @@ pub fn mse(y_pred: &[f32], y_true: &[f32]) -> f32 {
         })
         .sum();
     sum / y_pred.len() as f32
+}
+
+/// Which kernel implementation the executor's inner loops run.
+///
+/// Every mode computes bit-identical results (see the module docs for
+/// why); `Scalar` stays the pinned reference, the vectorized modes are
+/// opt-in so trainer determinism baselines never move by default.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum KernelMode {
+    /// The pre-kernel-library scalar loops (the default).
+    Scalar = 1,
+    /// Cache-blocked/tiled sweeps over portable 8-lane f32 arrays.
+    Blocked = 2,
+    /// [`KernelMode::Blocked`]'s loop structure with explicit x86-64
+    /// intrinsics (AVX when available, SSE2 otherwise).
+    Simd = 3,
+}
+
+impl KernelMode {
+    /// Parse an `MGD_EXEC_KERNEL` value.
+    pub fn parse(s: &str) -> Option<KernelMode> {
+        match s {
+            "scalar" => Some(KernelMode::Scalar),
+            "blocked" => Some(KernelMode::Blocked),
+            "simd" => Some(KernelMode::Simd),
+            _ => None,
+        }
+    }
+
+    /// The canonical spelling (`MGD_EXEC_KERNEL` values).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            KernelMode::Scalar => "scalar",
+            KernelMode::Blocked => "blocked",
+            KernelMode::Simd => "simd",
+        }
+    }
+}
+
+/// Process-wide kernel mode; 0 means "read `MGD_EXEC_KERNEL` on first
+/// use".  An atomic rather than a `OnceLock` so benches and tests can
+/// flip modes at runtime ([`set_kernel_mode`]).
+static KERNEL_MODE: AtomicU8 = AtomicU8::new(0);
+
+/// The kernel mode the executor currently runs (env-initialized,
+/// runtime-switchable).  Unknown `MGD_EXEC_KERNEL` values fall back to
+/// the scalar reference.
+pub fn kernel_mode() -> KernelMode {
+    match KERNEL_MODE.load(Ordering::Relaxed) {
+        1 => KernelMode::Scalar,
+        2 => KernelMode::Blocked,
+        3 => KernelMode::Simd,
+        _ => {
+            let mode = std::env::var("MGD_EXEC_KERNEL")
+                .ok()
+                .and_then(|v| KernelMode::parse(&v))
+                .unwrap_or(KernelMode::Scalar);
+            KERNEL_MODE.store(mode as u8, Ordering::Relaxed);
+            mode
+        }
+    }
+}
+
+/// Override the kernel mode for this process (benches, tests, CLI).
+pub fn set_kernel_mode(mode: KernelMode) {
+    KERNEL_MODE.store(mode as u8, Ordering::Relaxed);
+}
+
+/// Samples per block of the tiled layer sweep: weight panels are walked
+/// once per sample block instead of once per sample.
+pub const SAMPLE_BLOCK: usize = 8;
+
+/// Output-neuron columns per accumulator tile.  A `SAMPLE_BLOCK ×
+/// COL_BLOCK` f32 panel is 8 KiB — L1-resident while the input axis
+/// streams the weight panel through it.
+pub const COL_BLOCK: usize = 256;
+
+/// Probes of a `CostMany` sweep forwarded per θ-panel walk by
+/// [`sweep_probe_block`]: the batch-major layout treats the block's
+/// `PROBE_BLOCK · n` activation rows as one extended sample batch, so a
+/// θ panel is loaded once per block instead of once per probe.  Scratch
+/// scales with this constant, not with K.
+pub const PROBE_BLOCK: usize = 8;
+
+/// Lane width of the portable microkernel (mirrors one AVX register).
+const LANES: usize = 8;
+
+/// Portable 8-lane axpy: `acc[j] += h · row[j]`.  Fixed-size lane
+/// arrays give the compiler exact-width vectors; each lane is an
+/// independent `mul` + `add`, exactly the scalar loop's arithmetic.
+#[inline]
+fn axpy_lanes(acc: &mut [f32], row: &[f32], h: f32) {
+    let n = acc.len();
+    let mut j = 0usize;
+    while j + LANES <= n {
+        let a: &mut [f32; LANES] = (&mut acc[j..j + LANES]).try_into().unwrap();
+        let r: &[f32; LANES] = (&row[j..j + LANES]).try_into().unwrap();
+        for l in 0..LANES {
+            a[l] += h * r[l];
+        }
+        j += LANES;
+    }
+    while j < n {
+        acc[j] += h * row[j];
+        j += 1;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    //! x86-64 intrinsic axpy paths.  Strictly `mul` then `add` — never a
+    //! fused multiply-add, which would round once where the scalar
+    //! reference rounds twice — so every lane retires the scalar
+    //! arithmetic bit-for-bit.
+    use std::arch::x86_64::*;
+
+    /// Whether this CPU offers 8-wide AVX (detected once).
+    pub fn have_avx() -> bool {
+        static AVX: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+        *AVX.get_or_init(|| is_x86_feature_detected!("avx"))
+    }
+
+    /// 8-wide AVX axpy.
+    ///
+    /// # Safety
+    /// Requires AVX (callers gate on [`have_avx`]) and
+    /// `row.len() >= acc.len()`.
+    #[target_feature(enable = "avx")]
+    pub unsafe fn axpy_avx(acc: &mut [f32], row: &[f32], h: f32) {
+        debug_assert!(row.len() >= acc.len());
+        let n = acc.len();
+        let hv = _mm256_set1_ps(h);
+        let mut j = 0usize;
+        while j + 8 <= n {
+            let a = _mm256_loadu_ps(acc.as_ptr().add(j));
+            let r = _mm256_loadu_ps(row.as_ptr().add(j));
+            _mm256_storeu_ps(acc.as_mut_ptr().add(j), _mm256_add_ps(a, _mm256_mul_ps(r, hv)));
+            j += 8;
+        }
+        while j < n {
+            *acc.get_unchecked_mut(j) += h * *row.get_unchecked(j);
+            j += 1;
+        }
+    }
+
+    /// 4-wide SSE2 axpy (baseline x86-64 — always present).
+    ///
+    /// # Safety
+    /// Raw-pointer loads: requires `row.len() >= acc.len()`.
+    pub unsafe fn axpy_sse2(acc: &mut [f32], row: &[f32], h: f32) {
+        debug_assert!(row.len() >= acc.len());
+        let n = acc.len();
+        let hv = _mm_set1_ps(h);
+        let mut j = 0usize;
+        while j + 4 <= n {
+            let a = _mm_loadu_ps(acc.as_ptr().add(j));
+            let r = _mm_loadu_ps(row.as_ptr().add(j));
+            _mm_storeu_ps(acc.as_mut_ptr().add(j), _mm_add_ps(a, _mm_mul_ps(r, hv)));
+            j += 4;
+        }
+        while j < n {
+            *acc.get_unchecked_mut(j) += h * *row.get_unchecked(j);
+            j += 1;
+        }
+    }
+}
+
+/// `acc[j] += h · row[j]` over the output-neuron axis — the executor's
+/// one inner operation.  The mode picks how many lanes retire per
+/// instruction; it never changes a result bit (each element is the
+/// scalar `mul` then `add`, in the same order).
+#[inline]
+fn axpy(acc: &mut [f32], row: &[f32], h: f32, mode: KernelMode) {
+    #[cfg(target_arch = "x86_64")]
+    if mode == KernelMode::Simd {
+        // SAFETY: AVX is runtime-verified; SSE2 is baseline x86-64.
+        // Both slices come from the same layer, so row covers acc.
+        unsafe {
+            if x86::have_avx() {
+                x86::axpy_avx(acc, row, h);
+            } else {
+                x86::axpy_sse2(acc, row, h);
+            }
+        }
+        return;
+    }
+    let _ = mode;
+    axpy_lanes(acc, row, h);
+}
+
+/// One cache-blocked dense layer over `n` contiguous rows:
+/// `z[s][j] = bias[j] + Σᵢ h[s][i] · w[i][j]`.
+///
+/// The loop nest is tiled over samples × output columns with the input
+/// axis innermost-but-shared: each weight row slice is loaded once per
+/// tile and applied to the whole sample block, so weight panels stay
+/// cache-resident instead of being re-streamed per sample.  Per
+/// `(s, j)` element the accumulation order over `i` is `0..width`,
+/// identical to the scalar walk — the tiling moves loads, not rounding.
+fn dense_layer_blocked(
+    w: &[f32],
+    bias: &[f32],
+    h: &[f32],
+    width: usize,
+    n_out: usize,
+    n: usize,
+    z: &mut [f32],
+    mode: KernelMode,
+) {
+    for s0 in (0..n).step_by(SAMPLE_BLOCK) {
+        let sb = SAMPLE_BLOCK.min(n - s0);
+        for s in s0..s0 + sb {
+            z[s * n_out..(s + 1) * n_out].copy_from_slice(bias);
+        }
+        for j0 in (0..n_out).step_by(COL_BLOCK) {
+            let jb = COL_BLOCK.min(n_out - j0);
+            for i in 0..width {
+                let wrow = &w[i * n_out + j0..i * n_out + j0 + jb];
+                for s in s0..s0 + sb {
+                    let hv = h[s * width + i];
+                    let zrow = &mut z[s * n_out + j0..s * n_out + j0 + jb];
+                    axpy(zrow, wrow, hv, mode);
+                }
+            }
+        }
+    }
+}
+
+/// Batched unperturbed forward pass on the blocked/SIMD kernels — the
+/// fast-mode twin of [`compute_layer0_base`] + [`forward_one`] with
+/// `tilde = None`, bit-identical to that pair for any input (pinned in
+/// `rust/tests/integration_model.rs`).  `acts_a`/`acts_b` are ping-pong
+/// blocks of at least `widest · n` floats; `out` receives
+/// `n · layers.last().outputs` floats.
+#[allow(clippy::too_many_arguments)]
+pub fn forward_blocked(
+    layers: &[Dense],
+    theta: &[f32],
+    defects: &NeuronDefects,
+    x: &[f32],
+    n: usize,
+    acts_a: &mut [f32],
+    acts_b: &mut [f32],
+    out: &mut [f32],
+    mode: KernelMode,
+) {
+    let mut cur: &mut [f32] = acts_a;
+    let mut nxt: &mut [f32] = acts_b;
+    let mut offset = 0usize;
+    let mut neuron_base = 0usize;
+    for (li, layer) in layers.iter().enumerate() {
+        let width = layer.inputs;
+        let n_out = layer.outputs;
+        let wlen = width * n_out;
+        let h: &[f32] = if li == 0 { x } else { cur };
+        dense_layer_blocked(
+            &theta[offset..offset + wlen],
+            &theta[offset + wlen..offset + wlen + n_out],
+            h,
+            width,
+            n_out,
+            n,
+            &mut nxt[..n * n_out],
+            mode,
+        );
+        for s in 0..n {
+            activate_row(
+                layer.activation,
+                defects,
+                neuron_base,
+                &mut nxt[s * n_out..(s + 1) * n_out],
+            );
+        }
+        std::mem::swap(&mut cur, &mut nxt);
+        offset += wlen + n_out;
+        neuron_base += n_out;
+    }
+    let n_out = layers.last().unwrap().outputs;
+    out.copy_from_slice(&cur[..n * n_out]);
+}
+
+/// Batch-major multi-probe sweep: evaluate `costs.len()` probes (each
+/// `p` floats, stacked in `probes`) against the shared layer-0 `base`,
+/// streaming them through θ in blocks of [`PROBE_BLOCK`].
+///
+/// Within a block the θ panels of every deeper layer are walked **once**
+/// — each weight row is applied to all `PROBE_BLOCK · n` activation rows
+/// before the next is loaded — while each probe's θ̃ panel streams
+/// individually (probes share θ, never θ̃).  The perturbation term
+/// accumulates into its own row and is added afterwards, exactly as the
+/// scalar [`forward_one`] does, so per `(probe, sample, j)` element the
+/// arithmetic and its order are unchanged: the sweep is bit-identical to
+/// looping [`forward_one`] + [`mse`] probe by probe.
+///
+/// `acts_a`/`acts_b` are ping-pong blocks of `PROBE_BLOCK · widest · n`
+/// floats; `pert_row` holds `widest`.  Memory therefore scales with
+/// [`PROBE_BLOCK`], never with the probe count.
+#[allow(clippy::too_many_arguments)]
+pub fn sweep_probe_block(
+    layers: &[Dense],
+    theta: &[f32],
+    defects: &NeuronDefects,
+    x: &[f32],
+    n: usize,
+    base: &[f32],
+    probes: &[f32],
+    p: usize,
+    y: &[f32],
+    widest: usize,
+    acts_a: &mut [f32],
+    acts_b: &mut [f32],
+    pert_row: &mut [f32],
+    costs: &mut [f32],
+    mode: KernelMode,
+) {
+    let stride = widest * n;
+    let k_out = layers.last().unwrap().outputs;
+    for (bp, bc) in probes.chunks(PROBE_BLOCK * p).zip(costs.chunks_mut(PROBE_BLOCK)) {
+        let pb = bc.len();
+        let mut cur: &mut [f32] = &mut acts_a[..];
+        let mut nxt: &mut [f32] = &mut acts_b[..];
+        let mut offset = 0usize;
+        let mut neuron_base = 0usize;
+        for (li, layer) in layers.iter().enumerate() {
+            let width = layer.inputs;
+            let n_out = layer.outputs;
+            let wlen = width * n_out;
+            if li == 0 {
+                // The unperturbed θ part of layer 0 is the shared base.
+                for q in 0..pb {
+                    for s in 0..n {
+                        nxt[q * stride + s * n_out..q * stride + (s + 1) * n_out]
+                            .copy_from_slice(&base[s * n_out..(s + 1) * n_out]);
+                    }
+                }
+            } else {
+                let bias = &theta[offset + wlen..offset + wlen + n_out];
+                for q in 0..pb {
+                    for s in 0..n {
+                        nxt[q * stride + s * n_out..q * stride + (s + 1) * n_out]
+                            .copy_from_slice(bias);
+                    }
+                }
+                // Batch-major θ walk: one weight-row load serves every
+                // probe's rows in the block.
+                for j0 in (0..n_out).step_by(COL_BLOCK) {
+                    let jb = COL_BLOCK.min(n_out - j0);
+                    for i in 0..width {
+                        let w0 = offset + i * n_out + j0;
+                        let wrow = &theta[w0..w0 + jb];
+                        for q in 0..pb {
+                            for s in 0..n {
+                                let hv = cur[q * stride + s * width + i];
+                                let z0 = q * stride + s * n_out + j0;
+                                axpy(&mut nxt[z0..z0 + jb], wrow, hv, mode);
+                            }
+                        }
+                    }
+                }
+            }
+            // Per-probe θ̃ term + activation, in the scalar per-row order.
+            for q in 0..pb {
+                let tt = &bp[q * p..(q + 1) * p];
+                for s in 0..n {
+                    let h: &[f32] = if li == 0 {
+                        &x[s * width..(s + 1) * width]
+                    } else {
+                        &cur[q * stride + s * width..q * stride + (s + 1) * width]
+                    };
+                    let prow = &mut pert_row[..n_out];
+                    prow.copy_from_slice(&tt[offset + wlen..offset + wlen + n_out]);
+                    for (i, &hv) in h.iter().enumerate() {
+                        let trow = &tt[offset + i * n_out..offset + (i + 1) * n_out];
+                        axpy(prow, trow, hv, mode);
+                    }
+                    let zrow = &mut nxt[q * stride + s * n_out..q * stride + (s + 1) * n_out];
+                    for (z, &pv) in zrow.iter_mut().zip(prow.iter()) {
+                        *z += pv;
+                    }
+                    activate_row(layer.activation, defects, neuron_base, zrow);
+                }
+            }
+            std::mem::swap(&mut cur, &mut nxt);
+            offset += wlen + n_out;
+            neuron_base += n_out;
+        }
+        for (q, c) in bc.iter_mut().enumerate() {
+            *c = mse(&cur[q * stride..q * stride + n * k_out], y);
+        }
+    }
 }
 
 /// Apply one layer's activation to a sample's post-GEMM row, routing
@@ -313,6 +733,21 @@ impl ForwardScratch {
         let stride = widest * n;
         let k = layers.last().unwrap().outputs;
         out.resize(n * k, 0.0);
+        let mode = kernel_mode();
+        if mode != KernelMode::Scalar {
+            forward_blocked(
+                layers,
+                theta,
+                defects,
+                x,
+                n,
+                &mut self.a[..stride],
+                &mut self.b[..stride],
+                &mut out[..n * k],
+                mode,
+            );
+            return;
+        }
         let base_len = n * layers[0].outputs;
         compute_layer0_base(layers, theta, x, n, &mut self.base[..base_len]);
         forward_one(
@@ -396,5 +831,149 @@ mod tests {
         let mut out = vec![9.0f32; 4];
         scratch.forward(spec.layers(), spec.widest(), &theta, &defects, &[], 0, &mut out);
         assert!(out.is_empty(), "n = 0 must produce an empty output block");
+    }
+
+    #[test]
+    fn kernel_mode_parse_roundtrips() {
+        for mode in [KernelMode::Scalar, KernelMode::Blocked, KernelMode::Simd] {
+            assert_eq!(KernelMode::parse(mode.as_str()), Some(mode));
+        }
+        assert_eq!(KernelMode::parse("avx512-hopes-and-dreams"), None);
+    }
+
+    #[test]
+    fn axpy_matches_scalar_bitwise_at_awkward_lengths() {
+        // Lengths straddling every lane boundary (SSE 4, AVX/portable 8),
+        // with values whose products exercise real rounding.
+        for len in [1usize, 3, 4, 7, 8, 9, 15, 16, 17, 31, 33] {
+            let row: Vec<f32> = (0..len).map(|i| (i as f32 * 0.7 - 3.1) / 1.3).collect();
+            let init: Vec<f32> = (0..len).map(|i| (i as f32 * 1.9 + 0.2) / 0.7).collect();
+            let h = 0.123456f32;
+            let mut want = init.clone();
+            for (z, &wv) in want.iter_mut().zip(&row) {
+                *z += h * wv;
+            }
+            for mode in [KernelMode::Scalar, KernelMode::Blocked, KernelMode::Simd] {
+                let mut acc = init.clone();
+                axpy(&mut acc, &row, h, mode);
+                let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&acc), bits(&want), "mode {mode:?} len {len}");
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_forward_is_bit_identical_to_scalar_forward() {
+        use crate::model::ModelSpec;
+        use crate::rng::Rng;
+        // Wider than COL_BLOCK would matter only at huge layers; the
+        // point here is crossing SAMPLE_BLOCK and lane boundaries with a
+        // mixed-activation stack.
+        let spec: ModelSpec = "7x13x9x3:relu,tanh,softmax".parse().unwrap();
+        let mut rng = Rng::new(41);
+        let mut theta = vec![0f32; spec.param_count()];
+        rng.fill_uniform(&mut theta, -1.0, 1.0);
+        let defects = NeuronDefects::identity(spec.n_neurons());
+        let n = 11usize; // not a multiple of SAMPLE_BLOCK
+        let mut x = vec![0f32; n * 7];
+        rng.fill_uniform(&mut x, 0.0, 1.0);
+        let widest = spec.widest();
+        let stride = widest * n;
+        let (mut a, mut b) = (vec![0f32; stride], vec![0f32; stride]);
+        let mut base = vec![0f32; stride];
+        let mut pert = vec![0f32; widest];
+        let mut want = vec![0f32; n * 3];
+        let base_len = n * spec.layers()[0].outputs;
+        compute_layer0_base(spec.layers(), &theta, &x, n, &mut base[..base_len]);
+        forward_one(
+            spec.layers(),
+            &theta,
+            &defects,
+            &x,
+            n,
+            &base[..base_len],
+            None,
+            &mut a,
+            &mut b,
+            &mut pert,
+            &mut want,
+        );
+        for mode in [KernelMode::Blocked, KernelMode::Simd] {
+            let mut got = vec![0f32; n * 3];
+            forward_blocked(spec.layers(), &theta, &defects, &x, n, &mut a, &mut b, &mut got, mode);
+            let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&got), bits(&want), "mode {mode:?}");
+        }
+    }
+
+    #[test]
+    fn probe_block_sweep_is_bit_identical_to_serial_probes() {
+        use crate::model::ModelSpec;
+        use crate::rng::Rng;
+        let spec: ModelSpec = "5x9x6x2:relu,sigmoid,softmax".parse().unwrap();
+        let p = spec.param_count();
+        let mut rng = Rng::new(43);
+        let mut theta = vec![0f32; p];
+        rng.fill_uniform(&mut theta, -1.0, 1.0);
+        let defects = NeuronDefects::identity(spec.n_neurons());
+        let n = 3usize;
+        let mut x = vec![0f32; n * 5];
+        let mut y = vec![0f32; n * 2];
+        rng.fill_uniform(&mut x, 0.0, 1.0);
+        rng.fill_uniform(&mut y, 0.0, 1.0);
+        // k deliberately not a multiple of PROBE_BLOCK (tail block).
+        let k = PROBE_BLOCK + 3;
+        let mut probes = vec![0f32; k * p];
+        rng.fill_uniform(&mut probes, -0.05, 0.05);
+        let widest = spec.widest();
+        let stride = widest * n;
+        let mut base = vec![0f32; stride];
+        let base_len = n * spec.layers()[0].outputs;
+        compute_layer0_base(spec.layers(), &theta, &x, n, &mut base[..base_len]);
+        // Serial scalar reference.
+        let (mut a, mut b) = (vec![0f32; stride], vec![0f32; stride]);
+        let mut pert = vec![0f32; widest];
+        let mut out = vec![0f32; n * 2];
+        let mut want = vec![0f32; k];
+        for (tt, c) in probes.chunks(p).zip(want.iter_mut()) {
+            forward_one(
+                spec.layers(),
+                &theta,
+                &defects,
+                &x,
+                n,
+                &base[..base_len],
+                Some(tt),
+                &mut a,
+                &mut b,
+                &mut pert,
+                &mut out,
+            );
+            *c = mse(&out, &y);
+        }
+        for mode in [KernelMode::Blocked, KernelMode::Simd] {
+            let mut ba = vec![0f32; PROBE_BLOCK * stride];
+            let mut bb = vec![0f32; PROBE_BLOCK * stride];
+            let mut got = vec![0f32; k];
+            sweep_probe_block(
+                spec.layers(),
+                &theta,
+                &defects,
+                &x,
+                n,
+                &base[..base_len],
+                &probes,
+                p,
+                &y,
+                widest,
+                &mut ba,
+                &mut bb,
+                &mut pert,
+                &mut got,
+                mode,
+            );
+            let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+            assert_eq!(bits(&got), bits(&want), "mode {mode:?}");
+        }
     }
 }

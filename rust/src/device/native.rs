@@ -64,7 +64,7 @@ use std::sync::OnceLock;
 
 use anyhow::{bail, Result};
 
-use super::exec::{compute_layer0_base, forward_one, mse, score_batch};
+use super::exec::{self, compute_layer0_base, forward_one, mse, score_batch, KernelMode};
 use super::HardwareDevice;
 use crate::model::{Dense, ModelSpec};
 use crate::noise::NeuronDefects;
@@ -88,6 +88,17 @@ fn sweep_metrics() -> &'static SweepMetrics {
 /// Fan probes across threads only past this many multiply-accumulates
 /// (k · P); below it the thread-spawn overhead dominates.
 const PARALLEL_FLOP_THRESHOLD: usize = 1 << 18;
+
+/// `MGD_EXEC_WORKERS`: pin the probe sweep to an exact thread count
+/// (cached on first read).  The kernel benches use 1 so the
+/// scalar-vs-SIMD comparison is a single-thread measurement; unset means
+/// the size-based heuristic in [`NativeDevice::sweep_costs`] decides.
+fn worker_override() -> Option<usize> {
+    static V: OnceLock<Option<usize>> = OnceLock::new();
+    *V.get_or_init(|| {
+        std::env::var("MGD_EXEC_WORKERS").ok()?.parse::<usize>().ok().filter(|&w| w >= 1)
+    })
+}
 
 /// A [`ModelSpec`] executor with a defect table.
 #[derive(Debug, Clone)]
@@ -255,18 +266,36 @@ impl NativeDevice {
     }
 
     /// The batched sweep behind [`HardwareDevice::cost_many`]: layer-0
-    /// base once, then every probe through a per-worker scratch block
-    /// (serially within a worker), with each probe's cost written
-    /// straight into `costs` — so memory stays O(workers) regardless of
-    /// K, and the arithmetic per probe is exactly [`Self::run_single`]'s.
+    /// base once, then every probe through a per-worker scratch block,
+    /// with each probe's cost written straight into `costs` — so memory
+    /// stays O(workers) regardless of K, and the arithmetic per probe is
+    /// exactly [`Self::run_single`]'s.  The kernel mode picks the walk:
+    /// the scalar reference re-streams θ per probe; the blocked/SIMD
+    /// modes run the batch-major [`exec::sweep_probe_block`] layout
+    /// (bit-identical — pinned in `rust/tests/integration_model.rs`).
     fn sweep_costs(&mut self, probes: &[f32], k: usize, costs: &mut [f32]) {
         let p = self.theta.len();
-        let n = self.batch;
-        let workers = if k >= 4 && k.saturating_mul(p) >= PARALLEL_FLOP_THRESHOLD {
-            crate::par::default_workers(k)
-        } else {
-            1
+        let workers = match worker_override() {
+            Some(w) => w.min(k).max(1),
+            None => {
+                if k >= 4 && k.saturating_mul(p) >= PARALLEL_FLOP_THRESHOLD {
+                    crate::par::default_workers(k)
+                } else {
+                    1
+                }
+            }
         };
+        match exec::kernel_mode() {
+            KernelMode::Scalar => self.sweep_costs_scalar(probes, k, costs, workers),
+            mode => self.sweep_costs_blocked(probes, k, costs, workers, mode),
+        }
+    }
+
+    /// The pre-kernel-library sweep, byte-for-byte: the bitwise-pinned
+    /// reference path.
+    fn sweep_costs_scalar(&mut self, probes: &[f32], k: usize, costs: &mut [f32], workers: usize) {
+        let p = self.theta.len();
+        let n = self.batch;
         self.ensure_scratch(n, workers);
         let widest = self.widest();
         let stride = widest * n;
@@ -360,6 +389,100 @@ impl NativeDevice {
                         );
                         *c = mse(&o0[..], y);
                     }
+                });
+            }
+        });
+    }
+
+    /// The batch-major sweep (blocked/SIMD kernel modes): each worker
+    /// streams its probe range through θ in [`exec::PROBE_BLOCK`]-sized
+    /// blocks, so every weight panel is loaded once per block instead of
+    /// once per probe.  Scratch is O(workers · PROBE_BLOCK), preserving
+    /// the anti-DoS property of the scalar sweep — a legal max-size
+    /// `CostMany` frame still cannot balloon the server.
+    fn sweep_costs_blocked(
+        &mut self,
+        probes: &[f32],
+        k: usize,
+        costs: &mut [f32],
+        workers: usize,
+        mode: KernelMode,
+    ) {
+        let p = self.theta.len();
+        let n = self.batch;
+        self.ensure_scratch(n, workers * exec::PROBE_BLOCK);
+        let widest = self.widest();
+        let stride = widest * n;
+        let block = exec::PROBE_BLOCK * stride;
+        let NativeDevice {
+            spec,
+            theta,
+            defects,
+            x,
+            y,
+            scratch_a,
+            scratch_b,
+            scratch_base,
+            scratch_pert,
+            ..
+        } = self;
+        let layers: &[Dense] = spec.layers();
+        let theta: &[f32] = theta;
+        let defects: &NeuronDefects = defects;
+        let x: &[f32] = x;
+        let y: &[f32] = y;
+        let base_len = n * layers[0].outputs;
+        compute_layer0_base(layers, theta, x, n, &mut scratch_base[..base_len]);
+        let base: &[f32] = &scratch_base[..base_len];
+        if workers <= 1 {
+            exec::sweep_probe_block(
+                layers,
+                theta,
+                defects,
+                x,
+                n,
+                base,
+                &probes[..k * p],
+                p,
+                y,
+                widest,
+                &mut scratch_a[..block],
+                &mut scratch_b[..block],
+                &mut scratch_pert[..widest],
+                &mut costs[..k],
+                mode,
+            );
+            return;
+        }
+        // Contiguous probe ranges per worker, one block-sized scratch
+        // pair per worker; every probe writes only its own cost slot, so
+        // the result is bitwise independent of the thread schedule.
+        let per = k.div_ceil(workers);
+        let mut pp: &[f32] = &probes[..k * p];
+        let mut cc: &mut [f32] = costs;
+        let mut aa: &mut [f32] = &mut scratch_a[..workers * block];
+        let mut bb: &mut [f32] = &mut scratch_b[..workers * block];
+        let mut rr: &mut [f32] = &mut scratch_pert[..workers * widest];
+        std::thread::scope(|scope| {
+            let mut remaining = k;
+            while remaining > 0 {
+                let take = per.min(remaining);
+                remaining -= take;
+                let (p0, rest) = pp.split_at(take * p);
+                pp = rest;
+                let (c0, rest) = std::mem::take(&mut cc).split_at_mut(take);
+                cc = rest;
+                let (a0, rest) = std::mem::take(&mut aa).split_at_mut(block);
+                aa = rest;
+                let (b0, rest) = std::mem::take(&mut bb).split_at_mut(block);
+                bb = rest;
+                let (r0, rest) = std::mem::take(&mut rr).split_at_mut(widest);
+                rr = rest;
+                scope.spawn(move || {
+                    exec::sweep_probe_block(
+                        layers, theta, defects, x, n, base, p0, p, y, widest, a0, b0, r0, c0,
+                        mode,
+                    );
                 });
             }
         });
@@ -479,21 +602,36 @@ impl HardwareDevice for NativeDevice {
             ..
         } = self;
         let layers: &[Dense] = spec.layers();
-        let base_len = n * layers[0].outputs;
-        compute_layer0_base(layers, theta, x, n, &mut scratch_base[..base_len]);
-        forward_one(
-            layers,
-            theta,
-            defects,
-            x,
-            n,
-            &scratch_base[..base_len],
-            None,
-            &mut scratch_a[..widest * n],
-            &mut scratch_b[..widest * n],
-            &mut scratch_pert[..widest],
-            &mut scratch_out[..n * k],
-        );
+        match exec::kernel_mode() {
+            KernelMode::Scalar => {
+                let base_len = n * layers[0].outputs;
+                compute_layer0_base(layers, theta, x, n, &mut scratch_base[..base_len]);
+                forward_one(
+                    layers,
+                    theta,
+                    defects,
+                    x,
+                    n,
+                    &scratch_base[..base_len],
+                    None,
+                    &mut scratch_a[..widest * n],
+                    &mut scratch_b[..widest * n],
+                    &mut scratch_pert[..widest],
+                    &mut scratch_out[..n * k],
+                );
+            }
+            mode => exec::forward_blocked(
+                layers,
+                theta,
+                defects,
+                x,
+                n,
+                &mut scratch_a[..widest * n],
+                &mut scratch_b[..widest * n],
+                &mut scratch_out[..n * k],
+                mode,
+            ),
+        }
         // Shared cost/accuracy head: the same scoring the serving path
         // ([`crate::serve::InferenceEngine`]) applies to its outputs, so
         // train-time and serve-time accuracy use one prediction rule.
@@ -745,6 +883,40 @@ mod tests {
         for (i, &c) in batched.iter().enumerate() {
             let serial = dev.cost(Some(&probes[i * p..(i + 1) * p])).unwrap();
             assert_eq!(c.to_bits(), serial.to_bits(), "probe {i}");
+        }
+    }
+
+    #[test]
+    fn blocked_and_simd_sweeps_match_serial_costs_bitwise() {
+        // Device-level pin for the batch-major sweep, including the
+        // worker-split path (k·P crosses PARALLEL_FLOP_THRESHOLD) and a
+        // probe count that leaves a tail block.  `cost()` always runs
+        // the scalar reference, so agreement here is scalar-vs-kernel
+        // bit-identity end to end.
+        let layers = [64, 512, 8];
+        let mut dev = NativeDevice::new(&layers, 2);
+        let p = dev.n_params();
+        let mut rng = Rng::new(37);
+        let mut theta = vec![0f32; p];
+        rng.fill_uniform(&mut theta, -0.5, 0.5);
+        dev.set_params(&theta).unwrap();
+        let mut x = vec![0f32; 128];
+        rng.fill_uniform(&mut x, 0.0, 1.0);
+        let y = vec![0.5f32; 16];
+        dev.load_batch(&x, &y).unwrap();
+        let k = 11;
+        let mut probes = vec![0f32; k * p];
+        rng.fill_uniform(&mut probes, -0.01, 0.01);
+        let serial: Vec<u32> = (0..k)
+            .map(|i| dev.cost(Some(&probes[i * p..(i + 1) * p])).unwrap().to_bits())
+            .collect();
+        for mode in [KernelMode::Blocked, KernelMode::Simd] {
+            exec::set_kernel_mode(mode);
+            let batched = dev.cost_many(&probes, k).unwrap();
+            exec::set_kernel_mode(KernelMode::Scalar);
+            for (i, &c) in batched.iter().enumerate() {
+                assert_eq!(c.to_bits(), serial[i], "{mode:?} probe {i}");
+            }
         }
     }
 

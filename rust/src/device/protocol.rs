@@ -58,6 +58,14 @@
 //! large `P`, not bytes.  A `+0.0` float compresses to nothing anyway
 //! wherever transport-level compression is in play.
 //!
+//! **Executor layout is not wire layout**: the native executor may
+//! stream a `CostMany` batch probe-block-major and an `Infer` batch
+//! through cache-blocked kernels ([`crate::device::exec::KernelMode`]),
+//! and a quantized serving engine answers `Infer` from an int8 table —
+//! all device-internal concerns.  The framing above (and every other
+//! opcode's) is unchanged byte-for-byte regardless of kernel mode or
+//! quantization, which `tests/fuzz_frames.rs` pins across the corpus.
+//!
 //! # Model-spec negotiation (`ModelSpec`)
 //!
 //! `Hello` reports only the I/O silhouette (P, B, input, outputs) — two

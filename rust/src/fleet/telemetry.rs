@@ -77,6 +77,9 @@ pub enum Event {
     /// A candidate checkpoint failed the reload gate (unreadable, wrong
     /// spec hash, wrong parameter count); the old engine keeps serving.
     ReloadRejected { path: String, error: String },
+    /// A quantized serving engine came online, with its measured
+    /// fidelity vs the f32 engine over the seeded synthetic eval set.
+    QuantizedEngine { mode: &'static str, rows: usize, agreement: f64, mean_abs_delta: f64 },
 }
 
 impl Event {
@@ -99,6 +102,7 @@ impl Event {
             Event::InferSummary { .. } => "infer_summary",
             Event::EngineReloaded { .. } => "engine_reloaded",
             Event::ReloadRejected { .. } => "reload_rejected",
+            Event::QuantizedEngine { .. } => "quantized_engine",
         }
     }
 
@@ -201,6 +205,12 @@ impl Event {
             Event::ReloadRejected { path, error } => {
                 m.insert("path".into(), Json::Str(path.clone()));
                 m.insert("error".into(), Json::Str(error.clone()));
+            }
+            Event::QuantizedEngine { mode, rows, agreement, mean_abs_delta } => {
+                m.insert("mode".into(), Json::Str((*mode).into()));
+                m.insert("rows".into(), Json::Num(*rows as f64));
+                m.insert("agreement".into(), Json::Num(*agreement));
+                m.insert("mean_abs_delta".into(), Json::Num(*mean_abs_delta));
             }
         }
         Json::Obj(m)
@@ -407,6 +417,12 @@ mod tests {
                 model: "49x4x4:sigmoid,sigmoid".into(),
             },
             Event::ReloadRejected { path: "ck/checkpoint.json".into(), error: "hash".into() },
+            Event::QuantizedEngine {
+                mode: "int8",
+                rows: 512,
+                agreement: 0.998,
+                mean_abs_delta: 0.0013,
+            },
         ];
         for e in events {
             let line = e.to_json().dump();

@@ -150,6 +150,11 @@ SERVE-INFER OPTIONS:
   --poll-ms N       checkpoint-dir poll cadence    (default 500)
   --max-sessions N  exit after N sessions          (default: serve forever)
   --telemetry T     JSONL events ('-' = stderr, else a file path)
+  --quantize int8   serve batches on the int8 quantized engine (affine
+                    per-layer scale+zero-point, i32 accumulation); the
+                    measured argmax agreement vs f32 is emitted as a
+                    `quantized_engine` telemetry event at startup and the
+                    affine maps persist as D/quant-int8.json
   --metrics-addr A  also serve Prometheus-text /metrics + /healthz over
                     HTTP at A (e.g. 127.0.0.1:9464), on the same event
                     loop — Stats/metrics probes never count toward
@@ -310,7 +315,7 @@ fn main() -> Result<()> {
             let mut known = GLOBAL_OPTS.to_vec();
             known.extend([
                 "checkpoint-dir", "checkpoint", "addr", "max-batch", "max-delay-ms",
-                "poll-ms", "max-sessions", "telemetry", "metrics-addr",
+                "poll-ms", "max-sessions", "telemetry", "metrics-addr", "quantize",
                 "idle-timeout-secs", "write-timeout-secs",
             ]);
             args.check_known(&known)?;
@@ -783,7 +788,8 @@ fn fleet_cmd(ctx: &RunContext, args: &Args, cfg: MgdConfig) -> Result<()> {
 /// reload of fresh snapshots.
 fn serve_infer_cmd(args: &Args) -> Result<()> {
     use mgd::serve::{
-        serve_infer_with, BatchPolicy, InferenceEngine, ReloadConfig, ServeInferOptions,
+        serve_infer_with, BatchPolicy, InferenceEngine, QuantizeMode, ReloadConfig,
+        ServeInferOptions,
     };
     let (engine, reload) = match (args.get("checkpoint-dir"), args.get("checkpoint")) {
         (Some(_), Some(_)) => bail!("--checkpoint-dir and --checkpoint are mutually exclusive"),
@@ -811,6 +817,10 @@ fn serve_infer_cmd(args: &Args) -> Result<()> {
             (args.f64_or("max-delay-ms", 2.0)? / 1e3).max(0.0),
         ),
     };
+    let quantize = match args.get("quantize") {
+        Some(mode) => Some(QuantizeMode::parse(mode)?),
+        None => None,
+    };
     let net = net_options(args)?;
     let listener = std::net::TcpListener::bind(args.str_or("addr", "127.0.0.1:7272"))?;
     let summary = serve_infer_with(
@@ -821,6 +831,7 @@ fn serve_infer_cmd(args: &Args) -> Result<()> {
             policy,
             telemetry,
             reload,
+            quantize,
         },
         net,
     )?;

@@ -27,6 +27,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use super::engine::EngineSlot;
+use super::quant::QuantScratch;
 use crate::device::exec::ForwardScratch;
 use crate::fleet::telemetry::{Event, Telemetry};
 use crate::obs;
@@ -253,6 +254,7 @@ fn batch_loop(
 ) {
     let max_rows = policy.max_batch_rows.max(1);
     let mut scratch = ForwardScratch::new();
+    let mut qscratch = QuantScratch::new();
     let mut xbuf: Vec<f32> = Vec::new();
     let mut outbuf: Vec<f32> = Vec::new();
     let mut latencies: Vec<f64> = Vec::new();
@@ -285,15 +287,22 @@ fn batch_loop(
             }
         }
 
-        // One engine per batch: a reload lands between batches.
+        // One engine per batch: a reload lands between batches.  When
+        // int8 serving is on, the quantized twin answers the whole
+        // batch (same spec, same argmax rule — `engine` still supplies
+        // shape metadata and the argmax helper below).
         let engine = slot.current();
+        let quant = slot.quantized();
         let k = engine.n_outputs();
         xbuf.clear();
         for job in &jobs {
             xbuf.extend_from_slice(&job.rows);
         }
         let t_infer = Instant::now();
-        let result = engine.infer_into(&xbuf, rows_total, &mut scratch, &mut outbuf);
+        let result = match &quant {
+            Some(q) => q.infer_into(&xbuf, rows_total, &mut qscratch, &mut outbuf),
+            None => engine.infer_into(&xbuf, rows_total, &mut scratch, &mut outbuf),
+        };
         let infer_s = t_infer.elapsed().as_secs_f64();
         serve_metrics().infer.observe(infer_s);
         let infer_ms = infer_s * 1e3;
@@ -410,6 +419,29 @@ mod tests {
         assert_eq!(s.rows, 8);
         assert!(s.batches < 8, "requests never coalesced: {} batches", s.batches);
         assert!(s.p99_ms >= s.p50_ms);
+    }
+
+    #[test]
+    fn quantized_slot_answers_batches_with_the_int8_engine() {
+        let slot = test_slot();
+        let (q, _) = slot.enable_int8(None).unwrap();
+        let batcher = Batcher::spawn(
+            slot,
+            BatchPolicy { max_batch_rows: 8, max_delay: Duration::from_millis(1) },
+            Telemetry::null(),
+            ServeStats::new(),
+        );
+        let client = batcher.client();
+        let x = vec![0.25f32, -0.5, 1.0, 0.75];
+        let out = client.submit(x.clone(), 2).unwrap();
+        // The reply is the quantized engine's forward, bit for bit —
+        // proof the batch actually dispatched to the int8 path.
+        let direct = q.infer(&x, 2).unwrap();
+        let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&out.logits), bits(&direct));
+        assert_eq!(out.argmax, q.argmax(&direct));
+        drop(client);
+        batcher.shutdown();
     }
 
     #[test]

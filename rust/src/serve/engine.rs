@@ -29,6 +29,8 @@ use crate::device::exec;
 use crate::model::ModelSpec;
 use crate::noise::NeuronDefects;
 
+use super::quant::{self, QuantizedEngine};
+
 /// An immutable `(spec, θ)` forward-only executor.
 #[derive(Debug, Clone)]
 pub struct InferenceEngine {
@@ -219,6 +221,9 @@ impl InferenceEngine {
 /// serves it.
 pub struct EngineSlot {
     current: RwLock<Arc<InferenceEngine>>,
+    /// The int8 twin, present only when quantized serving is enabled.
+    /// Rebuilt from the fresh θ on every successful [`EngineSlot::swap`].
+    quant: RwLock<Option<Arc<QuantizedEngine>>>,
     spec_hash: u64,
     n_params: usize,
 }
@@ -227,7 +232,12 @@ impl EngineSlot {
     pub fn new(engine: InferenceEngine) -> Arc<EngineSlot> {
         let spec_hash = engine.spec_hash();
         let n_params = engine.n_params();
-        Arc::new(EngineSlot { current: RwLock::new(Arc::new(engine)), spec_hash, n_params })
+        Arc::new(EngineSlot {
+            current: RwLock::new(Arc::new(engine)),
+            quant: RwLock::new(None),
+            spec_hash,
+            n_params,
+        })
     }
 
     /// The engine to run the next batch on (cheap: one `Arc` clone under
@@ -239,6 +249,23 @@ impl EngineSlot {
     /// The spec hash this slot is pinned to.
     pub fn spec_hash(&self) -> u64 {
         self.spec_hash
+    }
+
+    /// Turn on int8 serving: quantize the current engine (preferring a
+    /// pinned affine map from the `dir` sidecar when one matches) and
+    /// publish it for batch dispatch.  Returns the quantized engine and
+    /// whether the sidecar supplied the map.
+    pub fn enable_int8(&self, dir: Option<&Path>) -> Result<(Arc<QuantizedEngine>, bool)> {
+        let engine = self.current();
+        let (q, pinned) = quant::engine_for(&engine, dir)?;
+        *self.quant.write().expect("quant slot lock poisoned") = Some(q.clone());
+        Ok((q, pinned))
+    }
+
+    /// The quantized engine to dispatch on, when int8 serving is on
+    /// (cheap: one `Arc` clone under a read lock).
+    pub fn quantized(&self) -> Option<Arc<QuantizedEngine>> {
+        self.quant.read().expect("quant slot lock poisoned").clone()
     }
 
     /// Atomically swap in a fresh engine.  Gated: the newcomer must run
@@ -262,7 +289,19 @@ impl EngineSlot {
                 engine.n_params()
             );
         }
+        // With int8 serving on, requantize the fresh θ *before* taking
+        // the write lock (the old pair keeps serving until both are
+        // published; a batch that reads across the two writes mixes
+        // valid engines of the same spec, which is harmless).
+        let new_quant = if self.quant.read().expect("quant slot lock poisoned").is_some() {
+            Some(Arc::new(QuantizedEngine::from_engine(&engine)?))
+        } else {
+            None
+        };
         *self.current.write().expect("engine slot lock poisoned") = Arc::new(engine);
+        if let Some(q) = new_quant {
+            *self.quant.write().expect("quant slot lock poisoned") = Some(q);
+        }
         Ok(())
     }
 }
@@ -351,6 +390,37 @@ mod tests {
         assert!(format!("{err:#}").contains("reload rejected"), "{err:#}");
         // The rejected swap left the good engine in place.
         assert_eq!(slot.current().spec().to_string(), "2x2x1:sigmoid,sigmoid");
+    }
+
+    #[test]
+    fn int8_slot_quantizes_and_requantizes_on_swap() {
+        let spec: ModelSpec = "3x4x2:relu,softmax".parse().unwrap();
+        let mut theta = vec![0f32; spec.param_count()];
+        let mut rng = crate::rng::Rng::new(21);
+        rng.fill_uniform(&mut theta, -1.0, 1.0);
+        let slot = EngineSlot::new(InferenceEngine::new(spec.clone(), theta).unwrap());
+        assert!(slot.quantized().is_none(), "int8 is opt-in");
+        let (q, pinned) = slot.enable_int8(None).unwrap();
+        assert!(!pinned, "no sidecar directory was offered");
+        let x = [0.25f32, -0.5, 0.75];
+        let before = q.infer(&x, 1).unwrap();
+        assert_eq!(before.len(), 2);
+        // A reload must requantize: new θ, new int8 table.
+        let mut theta2 = vec![0f32; spec.param_count()];
+        rng.fill_uniform(&mut theta2, -1.0, 1.0);
+        slot.swap(InferenceEngine::new(spec, theta2).unwrap()).unwrap();
+        let q2 = slot.quantized().expect("quant survives a swap");
+        let after = q2.infer(&x, 1).unwrap();
+        assert_ne!(
+            before[0].to_bits(),
+            after[0].to_bits(),
+            "requantized engine must serve the new parameters"
+        );
+        // Aggregate fidelity stays measurable after the swap (per-row
+        // argmax agreement is asserted statistically in quant.rs).
+        let report =
+            crate::serve::quant::fidelity_report(&slot.current(), &q2, 64).unwrap();
+        assert!(report.agreement >= 0.9, "agreement {}", report.agreement);
     }
 
     #[test]

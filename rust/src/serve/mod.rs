@@ -38,11 +38,13 @@
 pub mod batcher;
 pub mod client;
 pub mod engine;
+pub mod quant;
 pub mod reload;
 
 pub use batcher::{BatchPolicy, Batcher, ServeStats, ServeSummary};
 pub use client::InferenceClient;
 pub use engine::{EngineSlot, InferenceEngine};
+pub use quant::{QuantReport, QuantizeMode, QuantizedEngine};
 pub use reload::ReloadConfig;
 
 use std::net::TcpListener;
@@ -71,6 +73,9 @@ pub struct ServeInferOptions {
     pub telemetry: Arc<Telemetry>,
     /// Watch a checkpoint directory and hot-reload fresh snapshots.
     pub reload: Option<ReloadConfig>,
+    /// Serve batches on a quantized engine (`--quantize int8`); the
+    /// measured accuracy delta vs f32 lands in telemetry at startup.
+    pub quantize: Option<QuantizeMode>,
 }
 
 impl Default for ServeInferOptions {
@@ -80,9 +85,13 @@ impl Default for ServeInferOptions {
             policy: BatchPolicy::default(),
             telemetry: Telemetry::null(),
             reload: None,
+            quantize: None,
         }
     }
 }
+
+/// Rows in the seeded synthetic fidelity eval run at quantized startup.
+const QUANT_EVAL_ROWS: usize = 512;
 
 /// Serve `engine` on an already-bound listener: every session
 /// multiplexed on one event loop, every `Infer` submitted into one
@@ -108,6 +117,37 @@ pub fn serve_infer_with(
     net: NetOptions,
 ) -> Result<ServeSummary> {
     let slot = EngineSlot::new(engine);
+    if let Some(mode) = opts.quantize {
+        let dir = opts.reload.as_ref().map(|cfg| cfg.dir.as_path());
+        let (q, pinned) = slot.enable_int8(dir)?;
+        if !pinned {
+            // Freshly-chosen affine maps persist next to the checkpoint
+            // so a restart requantizes bit-identically.  Best-effort: a
+            // read-only checkpoint directory must not stop serving.
+            if let Some(dir) = dir {
+                if let Err(e) = q.save_sidecar(dir) {
+                    eprintln!("[serve-infer] quant sidecar not saved: {e:#}");
+                }
+            }
+        }
+        let report = quant::fidelity_report(&slot.current(), &q, QUANT_EVAL_ROWS)?;
+        crate::obs::gauge("mgd_serve_quant_agreement").set(report.agreement);
+        opts.telemetry.emit(Event::QuantizedEngine {
+            mode: mode.as_str(),
+            rows: report.rows,
+            agreement: report.agreement,
+            mean_abs_delta: report.mean_abs_delta,
+        });
+        eprintln!(
+            "[serve-infer] quantized engine ({}) online: argmax agreement {:.4}, \
+             mean |Δlogit| {:.6} over {} rows{}",
+            mode.as_str(),
+            report.agreement,
+            report.mean_abs_delta,
+            report.rows,
+            if pinned { " (sidecar affine maps)" } else { "" },
+        );
+    }
     let stats = ServeStats::new();
     let batcher = Batcher::spawn(slot.clone(), opts.policy, opts.telemetry.clone(), stats.clone());
     let stop = Arc::new(AtomicBool::new(false));

@@ -24,7 +24,9 @@ use std::io::Cursor;
 
 use mgd::device::protocol as p;
 use mgd::model::ModelSpec;
+use mgd::optim::init_params_uniform;
 use mgd::rng::Rng;
+use mgd::serve::{serve_infer, InferenceEngine, QuantizeMode, QuantizedEngine, ServeInferOptions};
 
 /// One representative well-formed payload per opcode.  `structured` is
 /// true when the payload has internal length-prefixed structure, i.e.
@@ -250,6 +252,79 @@ fn length_field_extremes_are_rejected_before_any_allocation() {
     wire.extend_from_slice(&u32::MAX.to_le_bytes());
     let err = decode(&wire).unwrap_err();
     assert!(format!("{err:#}").contains("unknown opcode"), "{err:#}");
+}
+
+/// The corpus doubles as a live dispatch target for the quantized serve
+/// path: every well-formed frame is fired at a `serve_infer` endpoint
+/// running with `--quantize int8` over one raw TCP session.  Read-only
+/// opcodes answer, training opcodes come back as typed errors *without*
+/// ending the session, and the `Infer` reply is bit-identical to a twin
+/// [`QuantizedEngine`] built from the same θ (a single-request batch is
+/// its own activation cohort, so the comparison is exact).
+#[test]
+fn corpus_against_a_live_quantized_serve_endpoint() {
+    let spec: ModelSpec = "4x6x5x3:relu,tanh,softmax".parse().unwrap();
+    let mut theta = vec![0f32; spec.param_count()];
+    init_params_uniform(&mut Rng::new(97), &mut theta, 1.0);
+    let engine = InferenceEngine::new(spec, theta).unwrap();
+    let twin = QuantizedEngine::from_engine(&engine).unwrap();
+
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let server = std::thread::spawn(move || {
+        serve_infer(
+            engine,
+            listener,
+            ServeInferOptions {
+                max_sessions: Some(1),
+                quantize: Some(QuantizeMode::Int8),
+                ..Default::default()
+            },
+        )
+        .unwrap()
+    });
+
+    let raw = std::net::TcpStream::connect(&addr).unwrap();
+    let mut writer = raw.try_clone().unwrap();
+    let mut reader = std::io::BufReader::new(raw);
+    let mut saw_infer = false;
+    for case in corpus() {
+        if case.op == p::Op::Bye {
+            continue; // Bye ends the session — sent once, at the end.
+        }
+        p::write_request(&mut writer, case.op, &case.payload).unwrap();
+        let reply = p::read_response(&mut reader);
+        match case.op {
+            p::Op::Hello | p::Op::ModelSpec | p::Op::Ping | p::Op::Stats => {
+                reply.unwrap_or_else(|e| panic!("{:?} must answer: {e:#}", case.op));
+            }
+            p::Op::Infer => {
+                // The corpus Infer frame is 2 rows of [0.5; 4]: decode
+                // the reply and pin it to the int8 twin bitwise.
+                let reply = reply.unwrap_or_else(|e| panic!("Infer must answer: {e:#}"));
+                let mut pos = 0;
+                let logits = p::get_array(&reply, &mut pos).unwrap();
+                let argmax = p::get_u32_array(&reply, &mut pos).unwrap();
+                let want = twin.infer(&[0.5; 8], 2).unwrap();
+                let bits = |v: &[f32]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&logits), bits(&want), "serve reply diverged from the int8 twin");
+                assert_eq!(argmax, twin.argmax(&want));
+                saw_infer = true;
+            }
+            op => {
+                // Training-protocol opcode: a typed rejection, and the
+                // session must keep serving (the loop continues).
+                let err = reply.expect_err("training opcode must be rejected by serve-infer");
+                assert!(
+                    format!("{err:#}").contains("read-only inference server"),
+                    "{op:?} rejection must name the endpoint contract: {err:#}"
+                );
+            }
+        }
+    }
+    assert!(saw_infer, "corpus must exercise the Infer dispatch path");
+    p::write_request(&mut writer, p::Op::Bye, &[]).unwrap();
+    server.join().unwrap();
 }
 
 #[test]

@@ -375,6 +375,121 @@ fn depth4_checkpoint_roundtrips_with_spec_identity() {
 }
 
 #[test]
+fn kernel_modes_are_bit_identical_across_cost_cost_many_and_score() {
+    // PR 9 contract: the blocked and SIMD kernels reorder *memory*, not
+    // *arithmetic* — per-(sample, neuron) accumulation order is
+    // unchanged, so every mode is bit-identical to the pinned scalar
+    // reference (the issue's 1-ULP budget is met with 0 ULPs).  The
+    // kernel switch is process-global; every mode being bit-identical is
+    // exactly what makes flipping it mid-suite safe.
+    use mgd::device::exec::{self, KernelMode};
+    let specs = ["49x12x8x4:relu,tanh,softmax", "16x10x7x5x3:relu,sigmoid,tanh,softmax"];
+    for (si, spec_text) in specs.iter().enumerate() {
+        let spec: ModelSpec = spec_text.parse().unwrap();
+        let n = 6usize;
+        let p = spec.param_count();
+        let mut rng = Rng::new(300 + si as u64);
+        let mut theta = vec![0f32; p];
+        rng.fill_uniform(&mut theta, -1.0, 1.0);
+        let mut x = vec![0f32; n * spec.n_inputs()];
+        let mut y = vec![0f32; n * spec.n_outputs()];
+        rng.fill_uniform(&mut x, 0.0, 1.0);
+        rng.fill_uniform(&mut y, 0.0, 1.0);
+        // An awkward probe count: one full PROBE_BLOCK plus a tail.
+        let k = 9usize;
+        let mut probes = vec![0f32; k * p];
+        rng.fill_uniform(&mut probes, -0.02, 0.02);
+
+        let mut dev = NativeDevice::from_spec(spec.clone(), n).unwrap();
+        dev.set_params(&theta).unwrap();
+        dev.load_batch(&x, &y).unwrap();
+
+        exec::set_kernel_mode(KernelMode::Scalar);
+        let base_cost = dev.cost(None).unwrap();
+        let base_many = dev.cost_many(&probes, k).unwrap();
+        let (base_score, base_correct) = dev.evaluate(&x, &y, n).unwrap();
+        // The scalar path is the pinned reference: bitwise stable.
+        assert_eq!(dev.cost(None).unwrap().to_bits(), base_cost.to_bits());
+
+        for mode in [KernelMode::Blocked, KernelMode::Simd] {
+            exec::set_kernel_mode(mode);
+            let cost = dev.cost(None).unwrap();
+            let many = dev.cost_many(&probes, k).unwrap();
+            let (score, correct) = dev.evaluate(&x, &y, n).unwrap();
+            exec::set_kernel_mode(KernelMode::Scalar);
+            assert_eq!(cost.to_bits(), base_cost.to_bits(), "{spec_text} {mode:?} cost");
+            for (i, (a, b)) in many.iter().zip(&base_many).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{spec_text} {mode:?} cost_many[{i}]");
+            }
+            assert_eq!(score.to_bits(), base_score.to_bits(), "{spec_text} {mode:?} score");
+            assert_eq!(correct, base_correct, "{spec_text} {mode:?} #correct");
+        }
+    }
+}
+
+#[test]
+fn quantized_engine_roundtrip_bound_and_argmax_agreement() {
+    use mgd::serve::{InferenceEngine, QuantizedEngine};
+    // (a) Provable dequantize error bound on one linear layer: with
+    // inputs and weights in [-1, 1], both affine steps are ≤ 2/255, so
+    // |Δz| ≤ width · (|x|·Δw + |ŵ|·Δx) ≲ 4 · 0.008 — well under 0.05.
+    let lin: ModelSpec = "4x3:identity".parse().unwrap();
+    let mut rng = Rng::new(401);
+    let mut theta = vec![0f32; lin.param_count()];
+    rng.fill_uniform(&mut theta, -1.0, 1.0);
+    let engine = InferenceEngine::new(lin, theta).unwrap();
+    let quant = QuantizedEngine::from_engine(&engine).unwrap();
+    let mut x = vec![0f32; 8 * 4];
+    rng.fill_uniform(&mut x, -1.0, 1.0);
+    let f = engine.infer(&x, 8).unwrap();
+    let q = quant.infer(&x, 8).unwrap();
+    for (i, (a, b)) in f.iter().zip(&q).enumerate() {
+        assert!((a - b).abs() <= 0.05, "output {i}: f32 {a} vs int8 {b}");
+    }
+
+    // (b) Fixed synthetic eval set on the depth-4 mixed stack: among
+    // rows the f32 engine is confident about (top-two softmax gap
+    // > 0.1, i.e. margins an int8 logit delta cannot realistically
+    // cross), argmax agreement must be ≥ 99%.
+    let spec: ModelSpec = "49x12x8x4:relu,tanh,softmax".parse().unwrap();
+    let mut theta = vec![0f32; spec.param_count()];
+    let mut rng = Rng::new(402);
+    rng.fill_uniform(&mut theta, -1.0, 1.0);
+    let engine = InferenceEngine::new(spec, theta).unwrap();
+    let quant = QuantizedEngine::from_engine(&engine).unwrap();
+    let rows = 1024usize;
+    let mut x = vec![0f32; rows * engine.input_len()];
+    rng.fill_uniform(&mut x, -1.0, 1.0);
+    let f = engine.infer(&x, rows).unwrap();
+    let q = quant.infer(&x, rows).unwrap();
+    let k = engine.n_outputs();
+    let (mut confident, mut agree) = (0usize, 0usize);
+    for s in 0..rows {
+        let fr = &f[s * k..(s + 1) * k];
+        let qr = &q[s * k..(s + 1) * k];
+        let mut sorted: Vec<f32> = fr.to_vec();
+        sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        if sorted[0] - sorted[1] <= 0.1 {
+            continue;
+        }
+        confident += 1;
+        let top = |row: &[f32]| {
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap()
+        };
+        if top(fr) == top(qr) {
+            agree += 1;
+        }
+    }
+    assert!(confident >= 128, "eval set degenerated: only {confident} confident rows");
+    let rate = agree as f64 / confident as f64;
+    assert!(rate >= 0.99, "argmax agreement {rate:.4} over {confident} confident rows");
+}
+
+#[test]
 fn spec_parse_reaches_the_device_with_the_right_layout() {
     // End-to-end through the public grammar: parse → device → train a
     // few windows — the wiring the CLI uses, minus argv.
