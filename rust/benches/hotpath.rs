@@ -8,6 +8,10 @@
 //!   vs on — asserts the always-on instrumentation costs at most 2% of
 //!   step throughput (the `mgd::obs` contract), and publishes the ratio
 //!   on the bench JSONL stream (`MGD_BENCH_JSON`);
+//! - tracing overhead: the same step loop with the span tracer off,
+//!   head-sampled at 1/16, and tracing every step — asserts the sampled
+//!   setting keeps >= 98% of untraced throughput (the
+//!   `mgd::obs::trace` contract) and publishes all three medians;
 //! - PJRT boundary: single `cost` artifact call (chip-in-the-loop step
 //!   cost), fused `mgd_scan` window (per-step amortized cost), dataset
 //!   upload vs resident reuse.  Skipped gracefully when no artifacts are
@@ -187,6 +191,55 @@ fn main() -> anyhow::Result<()> {
             "metrics overhead exceeds the 2% budget: instrumented throughput is only \
              {:.1}% of uninstrumented",
             ratio * 100.0
+        );
+    }
+
+    println!("\n== tracing overhead ==");
+    {
+        // The same loop three more times under the span tracer: off
+        // (the production default), head-sampled at 1/16 (the
+        // recommended always-on setting), and every-step.  Off must be
+        // a branch on one relaxed atomic; sampled must keep >= 98% of
+        // untraced step throughput — the `mgd::obs::trace` contract
+        // that makes leaving tracing on in production defensible.
+        let run_steps = |label: &str| -> anyhow::Result<f64> {
+            let data = nist7x7(256, 8);
+            let mut dev = NativeDevice::new(&[49, 4, 4], 1);
+            let mut rng = Rng::new(8);
+            let mut theta = vec![0f32; 220];
+            init_params_uniform(&mut rng, &mut theta, 1.0);
+            dev.set_params(&theta)?;
+            let cfg = MgdConfig { eta: 0.5, amplitude: 0.01, seed: 8, ..Default::default() };
+            let mut tr = MgdTrainer::new(&mut dev, &data, cfg, ScheduleKind::Cyclic);
+            Ok(b.run(label, || tr.step().unwrap().cost).median)
+        };
+        mgd::obs::trace::set_sample(0);
+        let off = run_steps("mgd_step/trace_off")?;
+        mgd::obs::trace::set_sample(16);
+        let sampled = run_steps("mgd_step/trace_sampled_16")?;
+        mgd::obs::trace::set_sample(1);
+        let always = run_steps("mgd_step/trace_always")?;
+        mgd::obs::trace::set_sample(0);
+        let sampled_ratio = off / sampled;
+        let always_ratio = off / always;
+        println!(
+            "  -> traced throughput: {:.1}% (1/16 sampled), {:.1}% (every step) of untraced",
+            sampled_ratio * 100.0,
+            always_ratio * 100.0
+        );
+        mgd::bench::emit_bench_json(&mgd::bench::json_obj(vec![
+            ("bench", Json::Str("tracing_overhead".into())),
+            ("trace_off_median_s", Json::Num(off)),
+            ("trace_sampled_median_s", Json::Num(sampled)),
+            ("trace_always_median_s", Json::Num(always)),
+            ("sampled_throughput_ratio", Json::Num(sampled_ratio)),
+            ("always_throughput_ratio", Json::Num(always_ratio)),
+        ]));
+        anyhow::ensure!(
+            sampled_ratio >= 0.98,
+            "tracing overhead exceeds the 2% budget: 1/16-sampled throughput is only \
+             {:.1}% of untraced",
+            sampled_ratio * 100.0
         );
     }
 

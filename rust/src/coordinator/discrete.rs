@@ -540,6 +540,15 @@ impl<'d> MgdTrainer<'d> {
     /// entirely (the pair is its own reference) and the reported
     /// `c_tilde` is `0.0` on even steps, the central difference on odd.
     pub fn step(&mut self) -> Result<StepOutput> {
+        // Observe-only: the guard never touches θ, the RNGs, or the
+        // device-call order, so traced and untraced runs are
+        // bit-identical.  A bare trainer starts its own trace (subject
+        // to head sampling); under a traced fleet job it nests instead.
+        let _span = if obs::trace::current().is_some() {
+            obs::trace::child(obs::trace::name::MGD_STEP)
+        } else {
+            obs::trace::root(obs::trace::name::MGD_STEP)
+        };
         let n = self.step;
 
         // Lines 3–4: new training sample window every τx.
@@ -608,6 +617,15 @@ impl<'d> MgdTrainer<'d> {
         if k == 0 {
             return Ok(Vec::new());
         }
+        // Observe-only (see `step`): the canonical trainer-side root —
+        // the window's `cost_many_rpc` child ships this span's context
+        // over the wire, linking the server's lease/dispatch/exec spans
+        // into one cross-process timeline.
+        let _span = if obs::trace::current().is_some() {
+            obs::trace::child(obs::trace::name::STEP_WINDOW)
+        } else {
+            obs::trace::root(obs::trace::name::STEP_WINDOW)
+        };
         let n = self.step;
         let tau_x = self.cfg.tau_x.max(1);
         let mut k_eff = (k as u64).min(tau_x - (n % tau_x));

@@ -577,6 +577,9 @@ impl HardwareDevice for NativeDevice {
         let m = sweep_metrics();
         m.probes.add(k as u64);
         let _sweep = m.sweep.start_timer();
+        // Parents under the server's dispatch span (worker-thread TLS)
+        // or the trainer's window span when running in-process.
+        let _sweep_span = crate::obs::trace::child(crate::obs::trace::name::EXEC_SWEEP);
         let mut costs = vec![0f32; k];
         self.sweep_costs(probes, k, &mut costs);
         Ok(costs)

@@ -124,8 +124,42 @@
 //! **without leasing a device**, so a dashboard polling `Stats` (`mgd
 //! top`) never starves trainers of hardware.  The reply is bounded by
 //! the registry size (a few KiB), far under [`MAX_FRAME_BYTES`].
+//!
+//! # Trace-context rider (`TRACE_FLAG`) and `TraceDump`
+//!
+//! A request may carry 16 bytes of distributed-tracing context
+//! ([`crate::obs::trace::TraceCtx`]) so a server can parent its spans
+//! under the client's trace.  The rider is signalled by the high bit of
+//! the opcode byte ([`TRACE_FLAG`]) and sits at the *front* of the
+//! payload:
+//!
+//! ```text
+//! flagged request := (opcode|0x80):u8  payload_len:u32
+//!                    trace_id:u64  parent_span:u64  payload
+//! ```
+//!
+//! `payload_len` covers the rider; the rider does **not** count against
+//! [`MAX_FRAME_BYTES`], so a maximal `CostMany` chunk can still carry
+//! context.  A flagged frame whose payload cannot hold the 16 rider
+//! bytes is a framing error.  **Compat rule**: an unflagged frame is
+//! byte-identical to the pre-tracing wire format, and an *old* server
+//! answers a flagged frame with its ordinary `unknown opcode` error —
+//! so clients only set the flag when tracing is actually sampling
+//! (tracing off ⇒ frames indistinguishable from old clients), and a
+//! tracing-enabled server interoperates with old clients unchanged.
+//! Riders are honoured on the request-bearing opcodes (`Cost`,
+//! `CostMany`, `Evaluate`, `Infer`) and tolerated (stripped) on the
+//! rest.  Responses never carry a rider.
+//!
+//! [`Op::TraceDump`] exports the span ring: empty request payload, reply
+//! is the Chrome trace-event JSON document
+//! ([`crate::obs::trace::dump`]).  Like `Stats` it is answered
+//! lease-free by the training pool server and by `mgd serve-infer`;
+//! `mgd trace` captures it to a file.
 
 use std::io::{Read, Write};
+
+pub use crate::obs::trace::TraceCtx;
 
 use anyhow::{bail, Result};
 
@@ -184,6 +218,11 @@ pub enum Op {
     /// Served by both the training pool server (lease-free) and
     /// `mgd serve-infer`; polled by `mgd top`.
     Stats = 0x0D,
+    /// Span-ring export; payload: empty (ignored).  Reply: the
+    /// [`crate::obs::trace`] ring as a Chrome trace-event JSON document
+    /// (see the module docs).  Served lease-free by both servers;
+    /// captured by `mgd trace`.
+    TraceDump = 0x0E,
 }
 
 impl Op {
@@ -202,9 +241,64 @@ impl Op {
             0x0B => Op::ModelSpec,
             0x0C => Op::Infer,
             0x0D => Op::Stats,
+            0x0E => Op::TraceDump,
             other => bail!("unknown opcode {other:#x}"),
         })
     }
+}
+
+// ---------------------------------------------------------------------------
+// Trace-context rider
+// ---------------------------------------------------------------------------
+
+/// High bit of the opcode byte: set when the frame's payload starts with
+/// a [`TRACE_CTX_BYTES`]-byte trace-context rider (see the module docs).
+pub const TRACE_FLAG: u8 = 0x80;
+
+/// Size of the trace-context rider: `trace_id:u64` + `parent_span:u64`,
+/// both little-endian.
+pub const TRACE_CTX_BYTES: usize = 16;
+
+/// Encode a trace context as its 16 wire bytes.
+pub fn encode_trace_ctx(ctx: TraceCtx) -> [u8; TRACE_CTX_BYTES] {
+    let mut out = [0u8; TRACE_CTX_BYTES];
+    out[..8].copy_from_slice(&ctx.trace_id.to_le_bytes());
+    out[8..].copy_from_slice(&ctx.parent_span.to_le_bytes());
+    out
+}
+
+/// Decode a trace context from the front of a flagged payload.
+pub fn decode_trace_ctx(bytes: &[u8]) -> Result<TraceCtx> {
+    if bytes.len() < TRACE_CTX_BYTES {
+        bail!("payload truncated: trace context");
+    }
+    Ok(TraceCtx {
+        trace_id: u64::from_le_bytes(bytes[..8].try_into().unwrap()),
+        parent_span: u64::from_le_bytes(bytes[8..16].try_into().unwrap()),
+    })
+}
+
+/// Validate a request header: opcode (with optional [`TRACE_FLAG`])
+/// **before** length, exactly as both the blocking reader and the
+/// event-loop decoder must — a frame that is wrong in both fields
+/// reports the unknown opcode.  Returns `(op, flagged)`.  The length
+/// cap applies to the payload *past* the rider, so flagged frames keep
+/// the full [`MAX_FRAME_BYTES`] budget; a flagged frame too short to
+/// hold the rider is rejected here, before any payload byte is read.
+pub fn check_request_header(byte: u8, len: usize) -> Result<(Op, bool)> {
+    let flagged = byte & TRACE_FLAG != 0;
+    let op = Op::from_u8(byte & !TRACE_FLAG)?;
+    let body = if flagged { len.saturating_sub(TRACE_CTX_BYTES) } else { len };
+    if body > MAX_FRAME_BYTES {
+        bail!("request frame of {len} bytes exceeds protocol maximum {MAX_FRAME_BYTES}");
+    }
+    if flagged && len < TRACE_CTX_BYTES {
+        bail!(
+            "flagged frame of {len} payload bytes cannot hold the \
+             {TRACE_CTX_BYTES}-byte trace context"
+        );
+    }
+    Ok((op, flagged))
 }
 
 /// Fixed bytes of a `CostMany` payload besides the probe floats:
@@ -350,25 +444,61 @@ pub fn get_opt_spec(
 
 /// Write one framed request.
 pub fn write_request(w: &mut impl Write, op: Op, payload: &[u8]) -> Result<()> {
-    w.write_all(&[op as u8])?;
-    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    write_request_ctx(w, op, None, payload)
+}
+
+/// Write one framed request, prefixing the payload with a trace-context
+/// rider (and setting [`TRACE_FLAG`] on the opcode byte) when `ctx` is
+/// `Some`.  With `ctx == None` the frame is byte-identical to the
+/// pre-tracing wire format.
+pub fn write_request_ctx(
+    w: &mut impl Write,
+    op: Op,
+    ctx: Option<TraceCtx>,
+    payload: &[u8],
+) -> Result<()> {
+    match ctx {
+        None => {
+            w.write_all(&[op as u8])?;
+            w.write_all(&(payload.len() as u32).to_le_bytes())?;
+        }
+        Some(ctx) => {
+            w.write_all(&[op as u8 | TRACE_FLAG])?;
+            w.write_all(&((payload.len() + TRACE_CTX_BYTES) as u32).to_le_bytes())?;
+            w.write_all(&encode_trace_ctx(ctx))?;
+        }
+    }
     w.write_all(payload)?;
     w.flush()?;
     Ok(())
 }
 
-/// Read one framed request; returns `(op, payload)`.
+/// Read one framed request; returns `(op, payload)`.  A trace-context
+/// rider, if present, is validated and discarded — use
+/// [`read_request_ctx`] to observe it.
 pub fn read_request(r: &mut impl Read) -> Result<(Op, Vec<u8>)> {
+    let (op, _ctx, payload) = read_request_ctx(r)?;
+    Ok((op, payload))
+}
+
+/// Read one framed request, surfacing the optional trace-context rider;
+/// returns `(op, ctx, payload)` with the rider stripped from the
+/// payload.
+pub fn read_request_ctx(r: &mut impl Read) -> Result<(Op, Option<TraceCtx>, Vec<u8>)> {
     let mut head = [0u8; 5];
     r.read_exact(&mut head)?;
-    let op = Op::from_u8(head[0])?;
     let len = u32::from_le_bytes(head[1..5].try_into().unwrap()) as usize;
-    if len > MAX_FRAME_BYTES {
-        bail!("request frame of {len} bytes exceeds protocol maximum {MAX_FRAME_BYTES}");
-    }
+    let (op, flagged) = check_request_header(head[0], len)?;
     let mut payload = vec![0u8; len];
     r.read_exact(&mut payload)?;
-    Ok((op, payload))
+    let ctx = if flagged {
+        let ctx = decode_trace_ctx(&payload)?;
+        payload.drain(..TRACE_CTX_BYTES);
+        Some(ctx)
+    } else {
+        None
+    };
+    Ok((op, ctx, payload))
 }
 
 /// Write an ok response.
@@ -541,8 +671,118 @@ mod tests {
         assert_eq!(Op::from_u8(0x0B).unwrap(), Op::ModelSpec);
         assert_eq!(Op::from_u8(0x0C).unwrap(), Op::Infer);
         assert_eq!(Op::from_u8(0x0D).unwrap(), Op::Stats);
-        assert!(Op::from_u8(0x0E).is_err());
+        assert_eq!(Op::from_u8(0x0E).unwrap(), Op::TraceDump);
+        assert!(Op::from_u8(0x0F).is_err());
         assert!(Op::from_u8(0x00).is_err());
+    }
+
+    // ---- Trace-context rider ----------------------------------------------
+
+    #[test]
+    fn trace_ctx_rider_roundtrip() {
+        let ctx = TraceCtx { trace_id: 0xDEAD_BEEF_F00D_CAFE, parent_span: 42 };
+        let mut payload = Vec::new();
+        put_u32(&mut payload, 3);
+        put_array(&mut payload, &[1.0, 2.0, 3.0]);
+        let mut wire = Vec::new();
+        write_request_ctx(&mut wire, Op::CostMany, Some(ctx), &payload).unwrap();
+        assert_eq!(wire[0], Op::CostMany as u8 | TRACE_FLAG);
+        let mut cursor = std::io::Cursor::new(&wire);
+        let (op, got_ctx, got) = read_request_ctx(&mut cursor).unwrap();
+        assert_eq!(op, Op::CostMany);
+        assert_eq!(got_ctx, Some(ctx));
+        assert_eq!(got, payload, "rider must strip cleanly off the payload front");
+        // The plain reader accepts the same frame and discards the rider.
+        let mut cursor = std::io::Cursor::new(&wire);
+        let (op, got) = read_request(&mut cursor).unwrap();
+        assert_eq!(op, Op::CostMany);
+        assert_eq!(got, payload);
+    }
+
+    #[test]
+    fn unflagged_frames_are_bytewise_identical_to_the_old_format() {
+        let mut payload = Vec::new();
+        put_array(&mut payload, &[7.0; 3]);
+        let mut old = vec![Op::SetParams as u8];
+        old.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        old.extend_from_slice(&payload);
+        let mut new = Vec::new();
+        write_request_ctx(&mut new, Op::SetParams, None, &payload).unwrap();
+        assert_eq!(new, old);
+        let mut cursor = std::io::Cursor::new(&new);
+        let (op, ctx, got) = read_request_ctx(&mut cursor).unwrap();
+        assert_eq!(op, Op::SetParams);
+        assert_eq!(ctx, None);
+        assert_eq!(got, payload);
+    }
+
+    #[test]
+    fn flagged_frame_truncated_rider_is_an_error() {
+        // A flagged header whose payload length cannot hold the 16-byte
+        // rider dies on the header check at every truncation offset.
+        for len in 0..TRACE_CTX_BYTES {
+            let mut wire = vec![Op::Cost as u8 | TRACE_FLAG];
+            wire.extend_from_slice(&(len as u32).to_le_bytes());
+            wire.extend_from_slice(&vec![0u8; len]);
+            let mut cursor = std::io::Cursor::new(&wire);
+            let err = read_request(&mut cursor).unwrap_err();
+            assert!(err.to_string().contains("trace context"), "len {len}: {err:#}");
+        }
+    }
+
+    #[test]
+    fn flagged_unknown_opcode_reports_the_base_opcode() {
+        // Opcode validation still precedes everything: flag bit stripped,
+        // the unknown base opcode is the error even with a hostile length.
+        let mut wire = vec![0xEFu8]; // 0xEF & 0x7F = 0x6F, unknown
+        wire.extend_from_slice(&u32::MAX.to_le_bytes());
+        let mut cursor = std::io::Cursor::new(&wire);
+        let err = read_request(&mut cursor).unwrap_err();
+        assert!(err.to_string().contains("unknown opcode 0x6f"), "{err:#}");
+    }
+
+    #[test]
+    fn flagged_frame_keeps_the_full_payload_budget() {
+        // The rider must not shrink MAX_FRAME_BYTES: a flagged header
+        // declaring cap + rider passes the length check (and then fails
+        // only on the short read, as the body is absent).
+        let mut wire = vec![Op::SetParams as u8 | TRACE_FLAG];
+        wire.extend_from_slice(&((MAX_FRAME_BYTES + TRACE_CTX_BYTES) as u32).to_le_bytes());
+        let mut cursor = std::io::Cursor::new(&wire);
+        let err = read_request(&mut cursor).unwrap_err();
+        assert!(
+            !err.to_string().contains("exceeds protocol maximum"),
+            "flagged cap must allow MAX + rider: {err:#}"
+        );
+        // One byte past that is rejected on the cap.
+        let mut wire = vec![Op::SetParams as u8 | TRACE_FLAG];
+        wire.extend_from_slice(
+            &((MAX_FRAME_BYTES + TRACE_CTX_BYTES + 1) as u32).to_le_bytes(),
+        );
+        let mut cursor = std::io::Cursor::new(&wire);
+        let err = read_request(&mut cursor).unwrap_err();
+        assert!(err.to_string().contains("exceeds protocol maximum"), "{err:#}");
+    }
+
+    // ---- TraceDump frames -------------------------------------------------
+
+    #[test]
+    fn trace_dump_request_roundtrip_is_empty_payload() {
+        let mut wire = Vec::new();
+        write_request(&mut wire, Op::TraceDump, &[]).unwrap();
+        let mut cursor = std::io::Cursor::new(wire);
+        let (op, got) = read_request(&mut cursor).unwrap();
+        assert_eq!(op, Op::TraceDump);
+        assert!(got.is_empty());
+    }
+
+    #[test]
+    fn trace_dump_oversized_header_is_rejected_before_allocation() {
+        let mut wire = vec![Op::TraceDump as u8];
+        wire.extend_from_slice(&u32::MAX.to_le_bytes());
+        let mut cursor = std::io::Cursor::new(wire);
+        let err = read_request(&mut cursor).unwrap_err();
+        assert!(err.to_string().contains("exceeds protocol maximum"), "{err:#}");
     }
 
     #[test]

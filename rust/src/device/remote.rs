@@ -22,6 +22,7 @@ use anyhow::{bail, Context, Result};
 use super::protocol as p;
 use super::HardwareDevice;
 use crate::model::ModelSpec;
+use crate::obs::trace;
 
 /// TCP proxy to a remote device served by [`super::server::serve`].
 pub struct RemoteDevice {
@@ -110,6 +111,18 @@ impl RemoteDevice {
         p::read_response(&mut self.reader)
     }
 
+    /// Round trip under a client-side RPC span, shipping that span's
+    /// context as the frame's trace rider so the server can parent its
+    /// own lease-wait / dispatch / exec spans under it.  When tracing
+    /// is off (or this path was not sampled) the span is inert, the
+    /// rider is omitted, and the frame is byte-identical to
+    /// [`RemoteDevice::roundtrip`]'s.
+    fn roundtrip_traced(&mut self, op: p::Op, name: u16, payload: &[u8]) -> Result<Vec<u8>> {
+        let span = trace::child(name);
+        p::write_request_ctx(&mut self.writer, op, span.ctx(), payload)?;
+        p::read_response(&mut self.reader)
+    }
+
     /// Politely close the session.
     pub fn close(mut self) {
         let _ = self.roundtrip(p::Op::Bye, &[]);
@@ -141,6 +154,14 @@ impl RemoteDevice {
             bail!("ping echo mismatch: sent nonce {nonce}, got {echoed}");
         }
         Ok(())
+    }
+
+    /// Fetch the server process's recorded spans as a Chrome
+    /// trace-event JSON document (one `TraceDump` round trip; answered
+    /// lease-free, so it works even while another trainer holds the
+    /// device).
+    pub fn trace_dump(&mut self) -> Result<Vec<u8>> {
+        self.roundtrip(p::Op::TraceDump, &[])
     }
 
     /// [`HardwareDevice::cost_many`] with an explicit per-frame probe
@@ -176,7 +197,8 @@ impl RemoteDevice {
                 Vec::with_capacity(p::COST_MANY_OVERHEAD_BYTES + 4 * chunk.len());
             p::put_u32(&mut payload, chunk_k as u32);
             p::put_array(&mut payload, chunk);
-            let reply = self.roundtrip(p::Op::CostMany, &payload)?;
+            let reply =
+                self.roundtrip_traced(p::Op::CostMany, trace::name::COST_MANY_RPC, &payload)?;
             let mut pos = 0;
             let got = p::get_array(&reply, &mut pos)?;
             if got.len() != chunk_k {
@@ -247,7 +269,7 @@ impl HardwareDevice for RemoteDevice {
             }
             None => payload.push(0u8),
         }
-        let reply = self.roundtrip(p::Op::Cost, &payload)?;
+        let reply = self.roundtrip_traced(p::Op::Cost, trace::name::COST_RPC, &payload)?;
         let mut pos = 0;
         p::get_f32(&reply, &mut pos)
     }
@@ -264,7 +286,8 @@ impl HardwareDevice for RemoteDevice {
         p::put_u32(&mut payload, n as u32);
         p::put_array(&mut payload, x);
         p::put_array(&mut payload, y);
-        let reply = self.roundtrip(p::Op::Evaluate, &payload)?;
+        let reply =
+            self.roundtrip_traced(p::Op::Evaluate, trace::name::EVALUATE_RPC, &payload)?;
         let mut pos = 0;
         let cost = p::get_f32(&reply, &mut pos)?;
         let correct = p::get_f32(&reply, &mut pos)?;

@@ -20,12 +20,21 @@
 //! closing session retriggers its waiting siblings immediately, so the
 //! condvar handoff of the blocking servers is preserved.
 //!
-//! `Stats = 0x0D` is the one stateless exception: it is answered from
-//! the process-global [`crate::obs`] registry *before* (and without)
-//! taking a device lease, so a metrics poller (`mgd top`) neither
-//! consumes hardware nor waits behind a training session.  Stats/Bye-
+//! `Stats = 0x0D` and `TraceDump = 0x0E` are the stateless exceptions:
+//! they are answered from the process-global [`crate::obs`] registry /
+//! span ring *before* (and without) taking a device lease, so a metrics
+//! poller (`mgd top`) or a trace capture (`mgd trace`) neither consumes
+//! hardware nor waits behind a training session.  Stats/TraceDump/Bye-
 //! only sessions do not consume the `--max-sessions` budget either: the
 //! budget counts device sessions, not pollers.
+//!
+//! Tracing: a frame that arrived with a trace-context rider (see the
+//! protocol module) parents this server's spans under the *client's*
+//! span — the lease wait is recorded via
+//! [`crate::obs::trace::record_complete`] once granted, and the worker-
+//! thread dispatch runs under a `dispatch` span whose children (e.g. the
+//! exec sweep inside `cost_many`) nest via the worker's thread-local
+//! context.
 
 use std::net::TcpListener;
 use std::sync::Arc;
@@ -42,6 +51,7 @@ use crate::net::{
     SessionHandler, Timeouts,
 };
 use crate::obs::http::metrics_service;
+use crate::obs::trace;
 
 /// Pooled-server knobs.
 pub struct ServeOptions {
@@ -220,8 +230,9 @@ struct DeviceSession {
     /// Whether this session has consumed a `--max-sessions` slot.
     counted: bool,
     lease: Option<DeviceLease>,
-    /// The frame awaiting device work (set before `Blocking`/`Wait`).
-    pending: Option<(p::Op, Vec<u8>)>,
+    /// The frame awaiting device work (set before `Blocking`/`Wait`),
+    /// with the trace context it rode in with (if any).
+    pending: Option<(p::Op, Option<p::TraceCtx>, Vec<u8>)>,
     lease_started: Option<Instant>,
     lease_timeout: Duration,
     /// Set when the session ends in error (telemetry `ok:false`).
@@ -238,6 +249,18 @@ impl DeviceSession {
         let expired = waited >= self.lease_timeout;
         match self.pool.lease_poll(waited, self.lease_timeout, expired) {
             LeasePoll::Granted(lease) => {
+                // Link the wait into the client's trace (explicit ctx
+                // only: this runs on the loop thread, whose TLS context
+                // belongs to the pump span, not this session).
+                if let Some((_, Some(ctx), _)) = &self.pending {
+                    let waited_ns = waited.as_nanos() as u64;
+                    trace::record_complete(
+                        trace::name::LEASE_WAIT,
+                        Some(*ctx),
+                        trace::now_ns().saturating_sub(waited_ns),
+                        waited_ns,
+                    );
+                }
                 self.lease = Some(lease);
                 Action::Blocking
             }
@@ -258,17 +281,22 @@ impl DeviceSession {
 
 impl SessionHandler for DeviceSession {
     fn on_frame(&mut self, frame: Frame, _cx: &SessionCx) -> Action {
-        let Frame::Binary { op, payload } = frame else { return Action::Close };
+        let Frame::Binary { op, ctx, payload } = frame else { return Action::Close };
         if self.lease.is_none() {
-            // Stats (and a bare Bye) are answered before — and without —
-            // a device lease: a metrics poller must never consume
-            // hardware, wait behind a training session, or use up the
-            // session budget.  The first stateful request below triggers
-            // the lease for the rest of the session.
+            // Stats, TraceDump (and a bare Bye) are answered before —
+            // and without — a device lease: a metrics poller or trace
+            // capture must never consume hardware, wait behind a
+            // training session, or use up the session budget.  The
+            // first stateful request below triggers the lease for the
+            // rest of the session.
             match op {
                 p::Op::Stats => {
                     self.requests += 1;
                     return Action::Reply(p::ok_frame(&stats_reply()));
+                }
+                p::Op::TraceDump => {
+                    self.requests += 1;
+                    return Action::Reply(p::ok_frame(&trace_reply()));
                 }
                 p::Op::Bye => {
                     self.requests += 1;
@@ -284,11 +312,11 @@ impl SessionHandler for DeviceSession {
                     ));
                 }
             }
-            self.pending = Some((op, payload));
+            self.pending = Some((op, ctx, payload));
             self.lease_started = Some(Instant::now());
             return self.lease_step();
         }
-        self.pending = Some((op, payload));
+        self.pending = Some((op, ctx, payload));
         Action::Blocking
     }
 
@@ -304,9 +332,13 @@ impl SessionHandler for DeviceSession {
     }
 
     fn blocking(&mut self) -> Action {
-        let Some((op, payload)) = self.pending.take() else { return Action::Close };
+        let Some((op, ctx, payload)) = self.pending.take() else { return Action::Close };
         self.requests += 1;
         let lease = self.lease.as_mut().expect("device work dispatched without a lease");
+        // Worker-thread TLS is clean (no pump span), so this guard makes
+        // every span the device opens (e.g. exec_sweep) a descendant of
+        // the client's wire context.
+        let _dispatch = trace::child_of(trace::name::DISPATCH, ctx);
         match handle_request(lease.device(), op, &payload) {
             Ok(Some(reply)) => Action::Reply(p::ok_frame(&reply)),
             Ok(None) => Action::ReplyClose(p::ok_frame(&[])), // Bye
@@ -341,6 +373,12 @@ impl SessionHandler for DeviceSession {
 /// registry as one JSON document.
 fn stats_reply() -> Vec<u8> {
     crate::obs::snapshot().to_json().dump().into_bytes()
+}
+
+/// Render the `TraceDump` reply payload: the process-global span ring as
+/// one Chrome trace-event JSON document.
+fn trace_reply() -> Vec<u8> {
+    trace::dump().into_bytes()
 }
 
 /// Dispatch one request. `Ok(None)` signals session end (Bye).
@@ -459,6 +497,11 @@ fn handle_request(
             // Live metrics snapshot; answered lease-free in
             // handle_session, but a leased session may poll it too.
             stats_reply()
+        }
+        p::Op::TraceDump => {
+            // Span-ring export; answered lease-free like Stats, but a
+            // leased session may capture it too.
+            trace_reply()
         }
         p::Op::Bye => return Ok(None),
     };
@@ -642,6 +685,16 @@ mod tests {
     }
 
     #[test]
+    fn dispatch_trace_dump_returns_trace_event_json() {
+        let mut dev: Box<dyn HardwareDevice> = Box::new(NativeDevice::new(&[2, 2, 1], 1));
+        let reply = handle_request(&mut *dev, p::Op::TraceDump, &[]).unwrap().unwrap();
+        let doc = crate::json::Json::parse(std::str::from_utf8(&reply).unwrap()).unwrap();
+        assert!(doc.field("traceEvents").unwrap().as_arr().is_ok());
+        // The session survives a trace capture.
+        assert!(handle_request(&mut *dev, p::Op::Hello, &[]).is_ok());
+    }
+
+    #[test]
     fn stats_is_answered_lease_free_while_the_only_device_is_busy() {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap().to_string();
@@ -694,9 +747,10 @@ mod tests {
             serve_on(dev, listener, Some(1)).unwrap();
         });
         let mut stream = TcpStream::connect(&addr).unwrap();
-        // Opcode 0x0E is one past Stats: the server must answer a typed
-        // error (same as the serve-infer endpoint) and close, not hang.
-        stream.write_all(&[0x0Eu8, 0, 0, 0, 0]).unwrap();
+        // Opcode 0x0F is one past TraceDump: the server must answer a
+        // typed error (same as the serve-infer endpoint) and close, not
+        // hang.
+        stream.write_all(&[0x0Fu8, 0, 0, 0, 0]).unwrap();
         stream.flush().unwrap();
         let mut reader = BufReader::new(stream);
         let err = p::read_response(&mut reader).unwrap_err();

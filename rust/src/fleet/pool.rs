@@ -381,6 +381,10 @@ impl DevicePool {
     /// just failed it).  Fails fast — without consuming the timeout —
     /// when no eligible slot exists at all.
     pub fn lease_excluding(&self, excluded: &[usize], timeout: Duration) -> Result<DeviceLease> {
+        // Trainer-side callers run on their own threads, so the
+        // thread-local context (e.g. the enclosing step_window span) is
+        // the right parent; inert when tracing is off or unsampled.
+        let _lease_span = crate::obs::trace::child(crate::obs::trace::name::POOL_LEASE);
         let start = Instant::now();
         let mut slots = self.shared.slots.lock().unwrap();
         loop {

@@ -244,6 +244,11 @@ pub(crate) struct QueuedJob {
     pub(crate) attempt: u32,
     /// Slots this job failed on (skipped by retry leases).
     pub(crate) excluded: Vec<usize>,
+    /// Submitter's trace context: the worker parents its `queue_wait` /
+    /// `job_run` spans under it.
+    pub(crate) ctx: Option<obs::trace::TraceCtx>,
+    /// When the job (re-)entered the queue, per [`obs::trace::now_ns`].
+    pub(crate) enqueued_ns: u64,
 }
 
 /// Everything known about a finished job.
@@ -381,7 +386,16 @@ impl Scheduler {
         let priority = spec.priority;
         self.queue.push(
             priority,
-            QueuedJob { id, spec, run, done, attempt: 0, excluded: Vec::new() },
+            QueuedJob {
+                id,
+                spec,
+                run,
+                done,
+                attempt: 0,
+                excluded: Vec::new(),
+                ctx: obs::trace::current(),
+                enqueued_ns: obs::trace::now_ns(),
+            },
         )?;
         // Emitted only after the push lands: a failed or blocked push must
         // not leave a phantom job in the telemetry stream.

@@ -25,6 +25,7 @@ use anyhow::anyhow;
 use crate::fleet::pool::DevicePool;
 use crate::fleet::scheduler::{JobOutcome, JobQueue, QueuedJob};
 use crate::fleet::telemetry::{Event, Telemetry};
+use crate::obs::trace;
 
 /// Worker body.  Runs until the queue is closed and drained.
 pub(crate) fn run_worker(
@@ -36,6 +37,17 @@ pub(crate) fn run_worker(
 ) {
     'jobs: while let Some(job) = queue.pop() {
         let mut pending = job;
+        // Link the queue wait into the submitter's trace (explicit ctx:
+        // the pop runs on the worker thread, whose TLS has no span yet).
+        if let Some(ctx) = pending.ctx {
+            let now = trace::now_ns();
+            trace::record_complete(
+                trace::name::QUEUE_WAIT,
+                Some(ctx),
+                pending.enqueued_ns,
+                now.saturating_sub(pending.enqueued_ns),
+            );
+        }
         // A job may run several times on this worker: retries whose
         // requeue fails (queue closed or full — a worker must never
         // block on its own queue) are executed in place.
@@ -62,10 +74,13 @@ pub(crate) fn run_worker(
                 }
                 match pool.lease_excluding(&pending.excluded, lease_timeout) {
                     Ok(lease) => break lease,
-                    Err(_timeout) => match queue.try_push(pending.spec.priority, pending) {
-                        Ok(_) => continue 'jobs,
-                        Err(job_back) => pending = job_back,
-                    },
+                    Err(_timeout) => {
+                        pending.enqueued_ns = trace::now_ns();
+                        match queue.try_push(pending.spec.priority, pending) {
+                            Ok(_) => continue 'jobs,
+                            Err(job_back) => pending = job_back,
+                        }
+                    }
                 }
             };
             telemetry.emit(Event::JobStarted {
@@ -80,10 +95,16 @@ pub(crate) fn run_worker(
             // becomes this attempt's Err; the lease drop still returns
             // the device (whatever mid-training state the panic left it
             // in — jobs own re-initialization via set_params anyway).
-            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                (pending.run)(lease.device())
-            }))
-            .unwrap_or_else(|panic| Err(anyhow!("job panicked: {}", panic_message(&panic))));
+            let result = {
+                // Parent the run (and any spans the job body opens via
+                // the worker's thread-local context) under the
+                // submitter's span.
+                let _run_span = trace::child_of(trace::name::JOB_RUN, pending.ctx);
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    (pending.run)(lease.device())
+                }))
+                .unwrap_or_else(|panic| Err(anyhow!("job panicked: {}", panic_message(&panic))))
+            };
             drop(lease);
             pending.attempt += 1;
             let wall = start.elapsed();
@@ -104,6 +125,7 @@ pub(crate) fn run_worker(
                             attempt: pending.attempt,
                             excluded_slot: slot,
                         });
+                        pending.enqueued_ns = trace::now_ns();
                         match queue.try_push(pending.spec.priority, pending) {
                             Ok(_) => continue 'jobs,
                             Err(job_back) => {
@@ -141,7 +163,7 @@ fn finish_job(
     result: anyhow::Result<crate::coordinator::TrainResult>,
     telemetry: &Telemetry,
 ) {
-    let QueuedJob { id, spec, run: _, done, attempt, excluded: _ } = job;
+    let QueuedJob { id, spec, run: _, done, attempt, excluded: _, ctx: _, enqueued_ns: _ } = job;
     telemetry.emit(Event::JobFinished {
         job: id,
         name: spec.name.clone(),

@@ -51,6 +51,7 @@ USAGE:
   mgd serve-infer [opts] serve a trained checkpoint for inference
   mgd infer [opts]       query an inference endpoint
   mgd top [opts]         live metrics dashboard for a running endpoint
+  mgd trace [opts]       capture a span timeline from a running endpoint
   mgd info               list models and artifacts
 
 GLOBAL OPTIONS:
@@ -180,6 +181,14 @@ TOP OPTIONS:
   --interval-ms N   refresh cadence                (default 1000)
   --iterations N    frames to render, 0 = forever  (default 0; with 1 the
                     screen is not cleared — useful for scripts/CI)
+
+TRACE OPTIONS:
+  --addr A          endpoint to capture from (any mgd TCP server; it
+                    answers the TraceDump opcode)  (default 127.0.0.1:7272)
+  --out FILE        write the Chrome trace-event JSON here instead of
+                    stdout (load it in Perfetto or chrome://tracing);
+                    the endpoint must run with MGD_TRACE_SAMPLE set or
+                    the capture is empty
 ";
 
 const GLOBAL_OPTS: &[&str] = &["artifacts", "results", "configs", "scale", "seed", "help"];
@@ -326,6 +335,12 @@ fn main() -> Result<()> {
             known.extend(["addr", "interval-ms", "iterations"]);
             args.check_known(&known)?;
             top_cmd(&args)
+        }
+        "trace" => {
+            let mut known = GLOBAL_OPTS.to_vec();
+            known.extend(["addr", "out"]);
+            args.check_known(&known)?;
+            trace_cmd(&args)
         }
         "infer" => {
             let mut known = GLOBAL_OPTS.to_vec();
@@ -950,6 +965,52 @@ fn fetch_stats(addr: &str) -> Result<mgd::json::Json> {
     mgd::json::Json::parse(text).context("parsing stats reply")
 }
 
+/// `mgd trace`: pull the endpoint's span ring via the `TraceDump` wire
+/// opcode and emit Chrome trace-event JSON to `--out` (or stdout).  The
+/// dump is a snapshot — spans recorded after the request land in the
+/// next capture.
+fn trace_cmd(args: &Args) -> Result<()> {
+    use mgd::device::protocol as p;
+    use std::io::{BufReader, BufWriter};
+    let addr = args.str_or("addr", "127.0.0.1:7272");
+    let stream = std::net::TcpStream::connect(&addr)
+        .with_context(|| format!("connecting to {addr}"))?;
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(5)))?;
+    stream.set_write_timeout(Some(std::time::Duration::from_secs(5)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    p::write_request(&mut writer, p::Op::TraceDump, &[])?;
+    let reply = p::read_response(&mut reader)?;
+    if p::write_request(&mut writer, p::Op::Bye, &[]).is_ok() {
+        let _ = p::read_response(&mut reader);
+    }
+    let text = std::str::from_utf8(&reply).context("trace reply is not UTF-8")?;
+    let doc = mgd::json::Json::parse(text).context("parsing trace reply")?;
+    let n_events = doc
+        .field("traceEvents")
+        .context("trace reply has no traceEvents array")?
+        .as_arr()
+        .map(|a| a.len())
+        .unwrap_or(0);
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, text).with_context(|| format!("writing {path}"))?;
+            eprintln!(
+                "captured {n_events} span event(s) from {addr} -> {path} \
+                 (load in Perfetto or chrome://tracing)"
+            );
+            if n_events == 0 {
+                eprintln!(
+                    "hint: empty capture — run the endpoint with MGD_TRACE_SAMPLE=1 \
+                     and send it some traffic first"
+                );
+            }
+        }
+        None => println!("{text}"),
+    }
+    Ok(())
+}
+
 /// Flatten a JSON object of numbers into a name → value map.
 fn num_map(j: &mgd::json::Json) -> Result<std::collections::BTreeMap<String, f64>> {
     j.as_obj()?.iter().map(|(k, v)| Ok((k.clone(), v.as_f64()?))).collect()
@@ -1114,6 +1175,16 @@ fn top_cmd(args: &Args) -> Result<()> {
                 "CKPT     saves {}   save {}\n",
                 fmt_count(saves),
                 hist_summary(hists, "mgd_checkpoint_save_seconds"),
+            ));
+        }
+        if let Some(recorded) = c("mgd_trace_spans_recorded_total") {
+            out.push_str(&format!(
+                "TRACE    spans {}{}   dropped {}   ring {}   sample 1/{}\n",
+                fmt_count(recorded),
+                fmt_rate(r("mgd_trace_spans_recorded_total")),
+                fmt_gauge(c("mgd_trace_spans_dropped_total").or(Some(0.0)), 0),
+                fmt_gauge(g("mgd_trace_ring_occupancy"), 0),
+                fmt_gauge(g("mgd_trace_sample_every"), 0),
             ));
         }
         if out.ends_with("\n\n") {

@@ -105,8 +105,17 @@ pub enum Framing {
 /// One decoded request.
 #[derive(Debug)]
 pub enum Frame {
-    Binary { op: p::Op, payload: Vec<u8> },
-    Http { method: String, path: String },
+    Binary {
+        op: p::Op,
+        /// Trace-context rider, when the frame carried one (already
+        /// stripped from `payload`).
+        ctx: Option<p::TraceCtx>,
+        payload: Vec<u8>,
+    },
+    Http {
+        method: String,
+        path: String,
+    },
 }
 
 /// Decoder outcome for the accumulated read buffer.
@@ -409,23 +418,31 @@ fn decode_frame(framing: Framing, buf: &mut Vec<u8>, eof: bool) -> Decoded {
             if buf.len() < 5 {
                 return Decoded::Incomplete;
             }
-            let op = match p::Op::from_u8(buf[0]) {
-                Ok(op) => op,
+            let len = u32::from_le_bytes(buf[1..5].try_into().unwrap()) as usize;
+            // One shared validator with the blocking reader: opcode
+            // (trace flag stripped) before length, identical error
+            // strings, rider-minimum check before any payload use.
+            let (op, flagged) = match p::check_request_header(buf[0], len) {
+                Ok(v) => v,
                 Err(e) => return Decoded::Error(format!("{e:#}")),
             };
-            let len = u32::from_le_bytes(buf[1..5].try_into().unwrap()) as usize;
-            if len > p::MAX_FRAME_BYTES {
-                return Decoded::Error(format!(
-                    "request frame of {len} bytes exceeds protocol maximum {}",
-                    p::MAX_FRAME_BYTES
-                ));
-            }
             if buf.len() < 5 + len {
                 return Decoded::Incomplete;
             }
-            let payload = buf[5..5 + len].to_vec();
+            let mut payload = buf[5..5 + len].to_vec();
             buf.drain(..5 + len);
-            Decoded::Frame(Frame::Binary { op, payload })
+            let ctx = if flagged {
+                match p::decode_trace_ctx(&payload) {
+                    Ok(ctx) => {
+                        payload.drain(..p::TRACE_CTX_BYTES);
+                        Some(ctx)
+                    }
+                    Err(e) => return Decoded::Error(format!("{e:#}")),
+                }
+            } else {
+                None
+            };
+            Decoded::Frame(Frame::Binary { op, ctx, payload })
         }
         Framing::Http { max_head } => {
             match buf.windows(4).position(|w| w == b"\r\n\r\n") {
@@ -785,6 +802,10 @@ impl EventLoop {
     /// Decode-and-dispatch until the buffer runs dry, the session goes
     /// busy, backpressure pauses it, or it closes.
     fn pump(&mut self, idx: usize) {
+        // A sampled root per pump pass: how long decode + dispatch of
+        // this readiness batch took (handlers parent their server-side
+        // spans under the frame's own wire context, not this one).
+        let _pump_span = crate::obs::trace::root(crate::obs::trace::name::NET_PUMP);
         loop {
             let (frame_or_err, eof_empty) = {
                 let Some(sess) = self.slots[idx].session.as_mut() else { return };
@@ -900,6 +921,9 @@ impl EventLoop {
     }
 
     fn flush(&mut self, idx: usize) {
+        // Child of the pump span when flushing inside a pump pass;
+        // inert otherwise (on_writable flushes have no ambient trace).
+        let _flush_span = crate::obs::trace::child(crate::obs::trace::name::NET_FLUSH);
         enum Outcome {
             Drained(bool), // close_after_write
             Stalled,
@@ -1119,7 +1143,7 @@ mod tests {
 
     impl SessionHandler for EchoSession {
         fn on_frame(&mut self, frame: Frame, _cx: &SessionCx) -> Action {
-            let Frame::Binary { op, payload } = frame else { return Action::Close };
+            let Frame::Binary { op, payload, .. } = frame else { return Action::Close };
             match op {
                 p::Op::Bye => Action::ReplyClose(p::ok_frame(&[])),
                 p::Op::Stats => Action::Reply(p::ok_frame(b"stats")),
@@ -1224,7 +1248,7 @@ mod tests {
     fn unknown_opcode_is_refused_with_the_protocol_error() {
         let (addr, handle, _closes) = spawn_echo(Some(1));
         let mut stream = TcpStream::connect(addr).unwrap();
-        stream.write_all(&[0x0Eu8, 0, 0, 0, 0]).unwrap();
+        stream.write_all(&[0x0Fu8, 0, 0, 0, 0]).unwrap();
         let mut reader = std::io::BufReader::new(stream);
         let err = p::read_response(&mut reader).unwrap_err();
         assert!(format!("{err:#}").contains("unknown opcode"), "{err:#}");
@@ -1329,13 +1353,75 @@ mod tests {
     #[test]
     fn binary_framing_matches_read_request_validation_order() {
         // Both opcode and length invalid → the opcode error wins,
-        // exactly as `read_request` reports it.
+        // exactly as `read_request` reports it.  0xEE carries the trace
+        // flag; the flag is stripped first, so the unknown *base*
+        // opcode (0x6E) is what the error names.
         let mut buf = vec![0xEEu8];
         buf.extend_from_slice(&u32::MAX.to_le_bytes());
         match decode_frame(Framing::Binary, &mut buf, false) {
-            Decoded::Error(msg) => assert!(msg.contains("unknown opcode"), "{msg}"),
+            Decoded::Error(msg) => assert!(msg.contains("unknown opcode 0x6e"), "{msg}"),
             _ => panic!("expected an error"),
         }
+    }
+
+    #[test]
+    fn binary_framing_strips_the_trace_rider() {
+        let ctx = p::TraceCtx { trace_id: 0x1122_3344_5566_7788, parent_span: 0x99 };
+        let mut wire = Vec::new();
+        p::write_request_ctx(&mut wire, p::Op::Ping, Some(ctx), b"nonce").unwrap();
+        let mut buf = wire.clone();
+        match decode_frame(Framing::Binary, &mut buf, false) {
+            Decoded::Frame(Frame::Binary { op, ctx: got, payload }) => {
+                assert_eq!(op, p::Op::Ping);
+                assert_eq!(got, Some(ctx));
+                assert_eq!(payload, b"nonce");
+            }
+            _ => panic!("expected a frame"),
+        }
+        assert!(buf.is_empty());
+        // Byte-by-byte arrival: incomplete until the last rider/payload
+        // byte lands, never a partial decode.
+        for cut in 0..wire.len() {
+            let mut buf = wire[..cut].to_vec();
+            assert!(
+                matches!(decode_frame(Framing::Binary, &mut buf, false), Decoded::Incomplete),
+                "cut {cut}"
+            );
+        }
+    }
+
+    #[test]
+    fn binary_framing_rejects_truncated_riders() {
+        // A flagged header whose length cannot hold the 16 context
+        // bytes is a framing error at every truncation offset, same
+        // message as the blocking reader.
+        for len in 0..p::TRACE_CTX_BYTES {
+            let mut buf = vec![p::Op::Cost as u8 | p::TRACE_FLAG];
+            buf.extend_from_slice(&(len as u32).to_le_bytes());
+            buf.extend_from_slice(&vec![0u8; len]);
+            match decode_frame(Framing::Binary, &mut buf, false) {
+                Decoded::Error(msg) => {
+                    assert!(msg.contains("trace context"), "len {len}: {msg}")
+                }
+                _ => panic!("len {len}: expected an error"),
+            }
+        }
+    }
+
+    #[test]
+    fn flagged_frames_echo_without_the_rider_over_tcp() {
+        // A tracing client against the live loop: the rider is stripped
+        // before dispatch, so the echoed payload is rider-free and the
+        // session keeps serving.
+        let (addr, handle, _closes) = spawn_echo(Some(1));
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let ctx = p::TraceCtx { trace_id: 7, parent_span: 8 };
+        p::write_request_ctx(&mut stream, p::Op::Ping, Some(ctx), b"traced").unwrap();
+        let mut reader = std::io::BufReader::new(stream.try_clone().unwrap());
+        assert_eq!(p::read_response(&mut reader).unwrap(), b"traced");
+        p::write_request(&mut stream, p::Op::Bye, &[]).unwrap();
+        assert!(p::read_response(&mut reader).unwrap().is_empty());
+        handle.join().unwrap().unwrap();
     }
 
     #[test]

@@ -2,10 +2,12 @@
 //! in-repo substrate replacing hyper/axum (offline build; see
 //! Cargo.toml).
 //!
-//! Two routes, both `GET`:
+//! Three routes, all `GET`:
 //!
 //! - `/metrics` — the global [`crate::obs`] registry rendered in the
-//!   Prometheus text exposition format (version 0.0.4), and
+//!   Prometheus text exposition format (version 0.0.4),
+//! - `/trace` — the [`crate::obs::trace`] span ring as Chrome
+//!   trace-event JSON (loads in Perfetto / `chrome://tracing`), and
 //! - `/healthz` — liveness (`200 ok`).
 //!
 //! HTTP is just another framing mode of the shared [`crate::net`] event
@@ -15,8 +17,8 @@
 //! listener ([`metrics_service`] + `--metrics-addr`) — zero extra
 //! threads, and a scrape stays responsive while every device is busy
 //! because it never waits behind a session.  Anything beyond
-//! `GET /metrics` and `GET /healthz` gets a 404/405; malformed or
-//! oversized requests get a 400.  This listener is also the seed of the
+//! `GET /metrics`, `GET /trace` and `GET /healthz` gets a 404/405;
+//! malformed or oversized requests get a 400.  This listener is also the seed of the
 //! planned HTTP gateway (ROADMAP direction 1).
 
 use std::net::{SocketAddr, TcpListener};
@@ -120,10 +122,14 @@ impl SessionHandler for MetricsSession {
                     let body = crate::obs::snapshot().to_prometheus();
                     response_typed("200 OK", "text/plain; version=0.0.4; charset=utf-8", &body)
                 }
+                "/trace" => {
+                    let body = crate::obs::trace::dump();
+                    response_typed("200 OK", "application/json", &body)
+                }
                 "/healthz" => response("200 OK", "ok\n"),
                 "" => response("400 Bad Request", "malformed request line\n"),
                 other => {
-                    let body = format!("no route {other}; try /metrics or /healthz\n");
+                    let body = format!("no route {other}; try /metrics, /trace or /healthz\n");
                     response("404 Not Found", &body)
                 }
             }
@@ -188,6 +194,18 @@ mod tests {
             let metrics = get(addr, "GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n");
             assert!(metrics.starts_with("HTTP/1.1 200 OK"), "{metrics}");
             assert!(metrics.contains("# TYPE test_obs_http_total counter"), "{metrics}");
+        });
+    }
+
+    #[test]
+    fn trace_route_serves_chrome_trace_json() {
+        with_server(1, |addr| {
+            let resp = get(addr, "GET /trace HTTP/1.1\r\nHost: x\r\n\r\n");
+            assert!(resp.starts_with("HTTP/1.1 200 OK"), "{resp}");
+            assert!(resp.contains("Content-Type: application/json"), "{resp}");
+            let body = resp.split("\r\n\r\n").nth(1).unwrap();
+            let doc = crate::json::Json::parse(body).unwrap();
+            assert!(doc.field("traceEvents").unwrap().as_arr().is_ok());
         });
     }
 

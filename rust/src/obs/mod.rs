@@ -53,8 +53,16 @@
 //! series follow Prometheus conventions (`mgd_<layer>_<what>[_total]`,
 //! base units: seconds).  The full catalogue lives in the README's
 //! "Observability" section.
+//!
+//! # Tracing
+//!
+//! Aggregates answer *how much*; the [`trace`] submodule answers *where
+//! one request's* time went — sampled span timelines with wire-propagated
+//! trace context, exported as Chrome trace-event JSON via the
+//! `TraceDump = 0x0E` opcode, the HTTP `/trace` route, and `mgd trace`.
 
 pub mod http;
+pub mod trace;
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};

@@ -1,0 +1,787 @@
+//! Distributed tracing: process-local span records with wire-propagated
+//! trace context and Chrome trace-event export.
+//!
+//! The metrics registry ([`crate::obs`]) answers *how much* time a layer
+//! spent; this module answers *where one request's* time went.  A span
+//! is a named interval with a `trace_id` (shared by every span of one
+//! logical request, across processes), a `span_id`, and a `parent_id`
+//! linking it into a timeline.  Spans land in a bounded lock-free ring
+//! buffer and are exported on demand — nothing is written to disk and
+//! nothing blocks the hot path.
+//!
+//! # Span model
+//!
+//! - [`root`] starts a new trace (fresh `trace_id`, no parent) if the
+//!   head-based sampler admits it; e.g. the coordinator's `step_window`.
+//! - [`child`] parents a span under the thread's current span (set by
+//!   the enclosing guard), e.g. `exec_sweep` under `dispatch`.
+//! - [`child_of`] parents under an explicit [`TraceCtx`] — the receive
+//!   side of wire propagation: a device server parents its `lease_wait`
+//!   / `dispatch` spans under the *trainer's* span carried by the frame
+//!   rider (see `device::protocol`), so one `trace_id` spans both
+//!   processes.
+//! - [`record_complete`] records an already-measured interval (e.g. a
+//!   lease wait whose duration the pool already computed).
+//!
+//! Guards restore the previous thread-local context on drop, so nesting
+//! is natural and instrumentation can never corrupt a caller's context.
+//!
+//! # Sampling and overhead
+//!
+//! Tracing is **off by default**.  `MGD_TRACE_SAMPLE=N` (or
+//! [`set_sample`]) turns it on: `1` records every trace, `N` records one
+//! in `N` roots (head-based — the decision is made once at the root and
+//! children follow implicitly via context).  When off, every entry point
+//! is a single relaxed atomic load and a branch, exactly like the
+//! metrics enable switch; `benches/hotpath.rs` asserts the sampled mode
+//! costs ≤ 2% of step throughput.
+//!
+//! # Ring buffer
+//!
+//! Completed spans go into a fixed-capacity ring (`MGD_TRACE_RING`
+//! slots, default 16384, rounded up to a power of two) of per-slot
+//! seqlocks: a writer claims a slot with one `fetch_add`, flips the
+//! slot's sequence odd, stores seven words, and flips it back even.  A
+//! writer that collides with a slot mid-write *drops its record* instead
+//! of waiting (counted in `mgd_trace_spans_dropped_total`); a reader
+//! that observes a torn slot skips it.  No locks, no allocation, no
+//! unbounded growth.
+//!
+//! # Export
+//!
+//! [`dump`] renders the ring as Chrome trace-event JSON (an object with
+//! a `traceEvents` array of `ph:"X"` complete events), which loads
+//! directly in Perfetto or `chrome://tracing`.  The wire opcode
+//! `TraceDump = 0x0E` and the HTTP exporter's `/trace` route both serve
+//! this document; `mgd trace --addr … --out …` captures it to a file.
+//!
+//! # Metrics
+//!
+//! The subsystem reports on itself through the metrics registry:
+//! `mgd_trace_spans_recorded_total`, `mgd_trace_spans_dropped_total`,
+//! `mgd_trace_ring_occupancy`, and `mgd_trace_sample_every` (0 = off) —
+//! rendered as the TRACE row of `mgd top`.
+
+use std::cell::Cell;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use crate::json::Json;
+use crate::obs::{counter, gauge, Counter, Gauge};
+
+// ---------------------------------------------------------------------------
+// Span names
+// ---------------------------------------------------------------------------
+
+/// Fixed span-name table.  Records store an index into this table so
+/// ring slots stay plain `u64` atomics — no pointers, no interning on
+/// the hot path.  Keep in sync with [`name`].
+pub const NAMES: &[&str] = &[
+    "step_window",
+    "mgd_step",
+    "cost_rpc",
+    "cost_many_rpc",
+    "evaluate_rpc",
+    "infer_rpc",
+    "lease_wait",
+    "dispatch",
+    "exec_sweep",
+    "pool_lease",
+    "queue_wait",
+    "job_run",
+    "net_pump",
+    "net_flush",
+    "batch_wait",
+    "batch_flush",
+    "batch_reply",
+    "infer_handle",
+];
+
+/// Indices into [`NAMES`] — the vocabulary of instrumented seams.
+pub mod name {
+    /// Coordinator probe window (`MgdTrainer::step_window`) — the
+    /// canonical trainer-side root span.
+    pub const STEP_WINDOW: u16 = 0;
+    /// One discrete MGD step (`MgdTrainer::step`).
+    pub const MGD_STEP: u16 = 1;
+    /// Client side of a `Cost` round trip.
+    pub const COST_RPC: u16 = 2;
+    /// Client side of a `CostMany` round trip.
+    pub const COST_MANY_RPC: u16 = 3;
+    /// Client side of an `Evaluate` round trip.
+    pub const EVALUATE_RPC: u16 = 4;
+    /// Client side of an `Infer` round trip.
+    pub const INFER_RPC: u16 = 5;
+    /// Server-side wait for a pool lease (device server sessions).
+    pub const LEASE_WAIT: u16 = 6;
+    /// Server-side worker-thread dispatch of one leased request.
+    pub const DISPATCH: u16 = 7;
+    /// Probe sweep inside `cost_many` (the exec kernels).
+    pub const EXEC_SWEEP: u16 = 8;
+    /// Blocking `DevicePool::lease` wait (local fleet callers).
+    pub const POOL_LEASE: u16 = 9;
+    /// Scheduler queue wait (push → pop of one job).
+    pub const QUEUE_WAIT: u16 = 10;
+    /// Scheduler worker running one job.
+    pub const JOB_RUN: u16 = 11;
+    /// One event-loop pump iteration (poll + dispatch).
+    pub const NET_PUMP: u16 = 12;
+    /// One event-loop flush pass over writable sessions.
+    pub const NET_FLUSH: u16 = 13;
+    /// Batcher queue wait (submit → batch assembly) of one Infer job.
+    pub const BATCH_WAIT: u16 = 14;
+    /// Batcher assembling + executing one micro-batch.
+    pub const BATCH_FLUSH: u16 = 15;
+    /// Batcher delivering one job's reply.
+    pub const BATCH_REPLY: u16 = 16;
+    /// Server side of one `Infer` request (validate + submit).
+    pub const INFER_HANDLE: u16 = 17;
+}
+
+/// Human-readable name for a table index (`"?"` if out of range).
+pub fn name_str(id: u16) -> &'static str {
+    NAMES.get(id as usize).copied().unwrap_or("?")
+}
+
+// ---------------------------------------------------------------------------
+// Trace context
+// ---------------------------------------------------------------------------
+
+/// The 16 bytes of trace context that ride a wire frame: which trace
+/// the request belongs to and which span to parent server-side work
+/// under.  Encoded little-endian (`trace_id` then `parent_span`) by
+/// `device::protocol`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceCtx {
+    /// Identifier shared by every span of one logical request.
+    pub trace_id: u64,
+    /// Span to parent the receiver's work under.
+    pub parent_span: u64,
+}
+
+// ---------------------------------------------------------------------------
+// Enable switch + sampling
+// ---------------------------------------------------------------------------
+
+/// Fast-path gate: true iff the sample rate is nonzero.  One relaxed
+/// load + branch when tracing is off.
+static TRACE_ON: AtomicBool = AtomicBool::new(false);
+
+/// Record one in `SAMPLE` root spans (0 = off, 1 = always).
+static SAMPLE: AtomicU32 = AtomicU32::new(0);
+
+/// Roots attempted, for the head-based 1-in-N decision.
+static ROOTS: AtomicU64 = AtomicU64::new(0);
+
+static ENV_INIT: OnceLock<()> = OnceLock::new();
+
+fn init_from_env() {
+    ENV_INIT.get_or_init(|| {
+        if let Ok(v) = std::env::var("MGD_TRACE_SAMPLE") {
+            if let Ok(n) = v.trim().parse::<u32>() {
+                set_sample(n);
+            }
+        }
+    });
+}
+
+/// Set the head sampling rate: `0` disables tracing, `1` records every
+/// trace, `n` records one in `n` roots.  Overrides `MGD_TRACE_SAMPLE`.
+pub fn set_sample(n: u32) {
+    SAMPLE.store(n, Ordering::Relaxed);
+    TRACE_ON.store(n > 0, Ordering::Relaxed);
+    if crate::obs::enabled() {
+        trace_metrics().sample_every.set(n as f64);
+    }
+}
+
+/// Current sampling rate (`0` = tracing off), after applying
+/// `MGD_TRACE_SAMPLE` on first call.
+pub fn sample_every() -> u32 {
+    init_from_env();
+    SAMPLE.load(Ordering::Relaxed)
+}
+
+/// Whether tracing is currently on (sample rate nonzero).
+pub fn enabled() -> bool {
+    init_from_env();
+    TRACE_ON.load(Ordering::Relaxed)
+}
+
+// ---------------------------------------------------------------------------
+// Clock, ids, metrics
+// ---------------------------------------------------------------------------
+
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// Monotonic nanoseconds since the process's tracing epoch (first use).
+pub fn now_ns() -> u64 {
+    EPOCH.get_or_init(Instant::now).elapsed().as_nanos() as u64
+}
+
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    x ^ (x >> 31)
+}
+
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+fn process_seed() -> u64 {
+    static SEED: OnceLock<u64> = OnceLock::new();
+    *SEED.get_or_init(|| {
+        let nanos = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0);
+        splitmix64((std::process::id() as u64) << 32 ^ nanos)
+    })
+}
+
+/// Fresh nonzero id, unique within the process and collision-resistant
+/// across processes (the counter is mixed with a per-process seed).
+fn next_id() -> u64 {
+    let id = splitmix64(process_seed() ^ NEXT_ID.fetch_add(1, Ordering::Relaxed));
+    if id == 0 {
+        1
+    } else {
+        id
+    }
+}
+
+struct TraceMetrics {
+    recorded: Counter,
+    dropped: Counter,
+    occupancy: Gauge,
+    sample_every: Gauge,
+}
+
+fn trace_metrics() -> &'static TraceMetrics {
+    static M: OnceLock<TraceMetrics> = OnceLock::new();
+    M.get_or_init(|| TraceMetrics {
+        recorded: counter("mgd_trace_spans_recorded_total"),
+        dropped: counter("mgd_trace_spans_dropped_total"),
+        occupancy: gauge("mgd_trace_ring_occupancy"),
+        sample_every: gauge("mgd_trace_sample_every"),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Ring buffer
+// ---------------------------------------------------------------------------
+
+/// One completed span as read back from the ring.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpanRecord {
+    /// Trace the span belongs to.
+    pub trace_id: u64,
+    /// This span's id.
+    pub span_id: u64,
+    /// Parent span id (`0` for a root).
+    pub parent_id: u64,
+    /// Index into [`NAMES`].
+    pub name: u16,
+    /// Start, nanoseconds since the process tracing epoch.
+    pub start_ns: u64,
+    /// Duration in nanoseconds.
+    pub dur_ns: u64,
+    /// Process-local numeric thread id.
+    pub tid: u64,
+}
+
+/// Per-slot seqlock: `seq` odd while a writer owns the slot, even when
+/// the payload words are stable.  `seq == 0` means never written.
+struct Slot {
+    seq: AtomicU64,
+    trace_id: AtomicU64,
+    span_id: AtomicU64,
+    parent_id: AtomicU64,
+    name: AtomicU64,
+    start_ns: AtomicU64,
+    dur_ns: AtomicU64,
+    tid: AtomicU64,
+}
+
+struct Ring {
+    head: AtomicU64,
+    slots: Box<[Slot]>,
+}
+
+const DEFAULT_RING: usize = 16_384;
+
+fn ring() -> &'static Ring {
+    static RING: OnceLock<Ring> = OnceLock::new();
+    RING.get_or_init(|| {
+        let cap = std::env::var("MGD_TRACE_RING")
+            .ok()
+            .and_then(|v| v.trim().parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .unwrap_or(DEFAULT_RING)
+            .next_power_of_two();
+        let slots = (0..cap)
+            .map(|_| Slot {
+                seq: AtomicU64::new(0),
+                trace_id: AtomicU64::new(0),
+                span_id: AtomicU64::new(0),
+                parent_id: AtomicU64::new(0),
+                name: AtomicU64::new(0),
+                start_ns: AtomicU64::new(0),
+                dur_ns: AtomicU64::new(0),
+                tid: AtomicU64::new(0),
+            })
+            .collect::<Vec<_>>()
+            .into_boxed_slice();
+        Ring { head: AtomicU64::new(0), slots }
+    })
+}
+
+fn push_record(rec: SpanRecord) {
+    let r = ring();
+    let total = r.head.fetch_add(1, Ordering::Relaxed);
+    let idx = total as usize & (r.slots.len() - 1);
+    let slot = &r.slots[idx];
+    let seq = slot.seq.load(Ordering::Relaxed);
+    // A writer already owns this slot, or claims it between our load and
+    // CAS: drop the record rather than spin — tracing must never stall
+    // the path it observes.
+    if seq & 1 == 1
+        || slot
+            .seq
+            .compare_exchange(seq, seq + 1, Ordering::Acquire, Ordering::Relaxed)
+            .is_err()
+    {
+        trace_metrics().dropped.inc();
+        return;
+    }
+    slot.trace_id.store(rec.trace_id, Ordering::Relaxed);
+    slot.span_id.store(rec.span_id, Ordering::Relaxed);
+    slot.parent_id.store(rec.parent_id, Ordering::Relaxed);
+    slot.name.store(rec.name as u64, Ordering::Relaxed);
+    slot.start_ns.store(rec.start_ns, Ordering::Relaxed);
+    slot.dur_ns.store(rec.dur_ns, Ordering::Relaxed);
+    slot.tid.store(rec.tid, Ordering::Relaxed);
+    slot.seq.store(seq + 2, Ordering::Release);
+    let m = trace_metrics();
+    m.recorded.inc();
+    m.occupancy.set((total + 1).min(r.slots.len() as u64) as f64);
+}
+
+/// Stable point-in-time copy of the ring (torn slots skipped), oldest
+/// first by start time.
+pub fn snapshot() -> Vec<SpanRecord> {
+    let r = ring();
+    let mut out = Vec::new();
+    for slot in r.slots.iter() {
+        let s1 = slot.seq.load(Ordering::Acquire);
+        if s1 == 0 || s1 & 1 == 1 {
+            continue;
+        }
+        let rec = SpanRecord {
+            trace_id: slot.trace_id.load(Ordering::Relaxed),
+            span_id: slot.span_id.load(Ordering::Relaxed),
+            parent_id: slot.parent_id.load(Ordering::Relaxed),
+            name: slot.name.load(Ordering::Relaxed) as u16,
+            start_ns: slot.start_ns.load(Ordering::Relaxed),
+            dur_ns: slot.dur_ns.load(Ordering::Relaxed),
+            tid: slot.tid.load(Ordering::Relaxed),
+        };
+        let s2 = slot.seq.load(Ordering::Acquire);
+        if s1 == s2 {
+            out.push(rec);
+        }
+    }
+    out.sort_by_key(|rec| (rec.start_ns, rec.span_id));
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Thread-local current span + guards
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    /// `(trace_id, span_id)` of the innermost live guard on this thread
+    /// (`(0, 0)` = none).
+    static CURRENT: Cell<(u64, u64)> = const { Cell::new((0, 0)) };
+    static TID: Cell<u64> = const { Cell::new(0) };
+}
+
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+fn tid() -> u64 {
+    TID.with(|t| {
+        let v = t.get();
+        if v != 0 {
+            return v;
+        }
+        let v = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+        t.set(v);
+        v
+    })
+}
+
+/// The current thread's trace context, for injecting into an outgoing
+/// frame: `Some` iff a sampled span is live on this thread.
+pub fn current() -> Option<TraceCtx> {
+    if !enabled() {
+        return None;
+    }
+    let (trace_id, span_id) = CURRENT.with(|c| c.get());
+    if trace_id == 0 {
+        return None;
+    }
+    Some(TraceCtx { trace_id, parent_span: span_id })
+}
+
+/// RAII span: records itself into the ring and restores the previous
+/// thread-local context when dropped.  Inert (a single branch was paid
+/// at creation) when tracing is off or the trace was not sampled.
+pub struct SpanGuard {
+    active: Option<ActiveSpan>,
+}
+
+struct ActiveSpan {
+    trace_id: u64,
+    span_id: u64,
+    parent_id: u64,
+    name: u16,
+    start_ns: u64,
+    prev: (u64, u64),
+}
+
+impl SpanGuard {
+    fn start(name: u16, trace_id: u64, parent_id: u64) -> SpanGuard {
+        let span_id = next_id();
+        let prev = CURRENT.with(|c| c.replace((trace_id, span_id)));
+        SpanGuard {
+            active: Some(ActiveSpan {
+                trace_id,
+                span_id,
+                parent_id,
+                name,
+                start_ns: now_ns(),
+                prev,
+            }),
+        }
+    }
+
+    /// A guard that records nothing and leaves the thread-local context
+    /// untouched — for call sites that must *not* fall back to the
+    /// thread's current span (e.g. loop-thread handlers, whose context
+    /// belongs to the pump span, not the request being handled).
+    pub const INERT: SpanGuard = SpanGuard { active: None };
+
+    /// This guard's context (for parenting work on another thread or
+    /// process); `None` when the guard is inert.
+    pub fn ctx(&self) -> Option<TraceCtx> {
+        self.active
+            .as_ref()
+            .map(|a| TraceCtx { trace_id: a.trace_id, parent_span: a.span_id })
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if let Some(a) = self.active.take() {
+            CURRENT.with(|c| c.set(a.prev));
+            let end = now_ns();
+            push_record(SpanRecord {
+                trace_id: a.trace_id,
+                span_id: a.span_id,
+                parent_id: a.parent_id,
+                name: a.name,
+                start_ns: a.start_ns,
+                dur_ns: end.saturating_sub(a.start_ns),
+                tid: tid(),
+            });
+        }
+    }
+}
+
+/// Start a new trace at this span if the head sampler admits it (one in
+/// [`sample_every`] roots).  The returned guard is the parent of every
+/// [`child`] span on this thread and of remote spans via [`current`].
+pub fn root(name: u16) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard::INERT;
+    }
+    let n = SAMPLE.load(Ordering::Relaxed) as u64;
+    if n == 0 || ROOTS.fetch_add(1, Ordering::Relaxed) % n != 0 {
+        return SpanGuard::INERT;
+    }
+    SpanGuard::start(name, next_id(), 0)
+}
+
+/// Span parented under the thread's current span; inert when tracing is
+/// off or no sampled span is live on this thread.
+pub fn child(name: u16) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard::INERT;
+    }
+    let (trace_id, parent) = CURRENT.with(|c| c.get());
+    if trace_id == 0 {
+        return SpanGuard::INERT;
+    }
+    SpanGuard::start(name, trace_id, parent)
+}
+
+/// Span parented under an explicit wire context (falls back to the
+/// thread-local context when `ctx` is `None`).  This is how a server
+/// links its work to the client's trace.
+pub fn child_of(name: u16, ctx: Option<TraceCtx>) -> SpanGuard {
+    match ctx {
+        Some(c) if enabled() => SpanGuard::start(name, c.trace_id, c.parent_span),
+        Some(_) => SpanGuard::INERT,
+        None => child(name),
+    }
+}
+
+/// Record an interval that was measured externally (e.g. a lease wait
+/// the pool timed): `start_ns`/`dur_ns` per [`now_ns`], parented under
+/// `ctx` or, when `None`, the thread-local context.
+pub fn record_complete(name: u16, ctx: Option<TraceCtx>, start_ns: u64, dur_ns: u64) {
+    if !enabled() {
+        return;
+    }
+    let (trace_id, parent_id) = match ctx {
+        Some(c) => (c.trace_id, c.parent_span),
+        None => {
+            let (t, s) = CURRENT.with(|c| c.get());
+            if t == 0 {
+                return;
+            }
+            (t, s)
+        }
+    };
+    push_record(SpanRecord {
+        trace_id,
+        span_id: next_id(),
+        parent_id,
+        name,
+        start_ns,
+        dur_ns,
+        tid: tid(),
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Export
+// ---------------------------------------------------------------------------
+
+fn hex(v: u64) -> Json {
+    Json::Str(format!("{v:016x}"))
+}
+
+/// Render the ring as a Chrome trace-event document: an object with a
+/// `traceEvents` array of complete (`ph:"X"`) events, timestamps in
+/// microseconds.  Loads directly in Perfetto / `chrome://tracing`;
+/// span linkage travels in `args` (`trace_id`, `span_id`, `parent_id`
+/// as zero-padded hex strings, exact under JSON's f64 numbers).
+pub fn dump_json() -> Json {
+    let pid = std::process::id() as f64;
+    let events: Vec<Json> = snapshot()
+        .into_iter()
+        .map(|rec| {
+            let mut args = BTreeMap::new();
+            args.insert("trace_id".to_string(), hex(rec.trace_id));
+            args.insert("span_id".to_string(), hex(rec.span_id));
+            args.insert("parent_id".to_string(), hex(rec.parent_id));
+            let mut ev = BTreeMap::new();
+            ev.insert("name".to_string(), Json::Str(name_str(rec.name).to_string()));
+            ev.insert("ph".to_string(), Json::Str("X".to_string()));
+            ev.insert("ts".to_string(), Json::Num(rec.start_ns as f64 / 1e3));
+            ev.insert("dur".to_string(), Json::Num(rec.dur_ns as f64 / 1e3));
+            ev.insert("pid".to_string(), Json::Num(pid));
+            ev.insert("tid".to_string(), Json::Num(rec.tid as f64));
+            ev.insert("args".to_string(), Json::Obj(args));
+            Json::Obj(ev)
+        })
+        .collect();
+    let mut top = BTreeMap::new();
+    top.insert("traceEvents".to_string(), Json::Arr(events));
+    top.insert("displayTimeUnit".to_string(), Json::Str("ms".to_string()));
+    Json::Obj(top)
+}
+
+/// [`dump_json`] serialized to a compact JSON string (the `TraceDump`
+/// reply payload and the `/trace` HTTP body).
+pub fn dump() -> String {
+    dump_json().dump()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    /// The sample rate is process-global; serialize the tests that
+    /// change it so the harness's default parallelism cannot interleave
+    /// two tests' configuration choices.
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    fn locked() -> std::sync::MutexGuard<'static, ()> {
+        TEST_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    #[test]
+    fn guards_record_linked_spans() {
+        let _l = locked();
+        let saved = sample_every();
+        set_sample(1);
+        let (root_ctx, child_ctx);
+        {
+            let r = root(name::STEP_WINDOW);
+            root_ctx = r.ctx().expect("sampled root has a context");
+            assert_eq!(current().unwrap().trace_id, root_ctx.trace_id);
+            {
+                let c = child(name::EXEC_SWEEP);
+                child_ctx = c.ctx().unwrap();
+                assert_eq!(child_ctx.trace_id, root_ctx.trace_id);
+                assert_ne!(child_ctx.parent_span, root_ctx.parent_span);
+            }
+            // Inner guard dropped: context restored to the root.
+            assert_eq!(current().unwrap().parent_span, root_ctx.parent_span);
+        }
+        set_sample(saved);
+
+        let recs = snapshot();
+        let child_rec = recs
+            .iter()
+            .find(|r| r.span_id == child_ctx.parent_span)
+            .expect("child span in ring");
+        assert_eq!(child_rec.parent_id, root_ctx.parent_span);
+        assert_eq!(child_rec.trace_id, root_ctx.trace_id);
+        assert_eq!(child_rec.name, name::EXEC_SWEEP);
+        let root_rec = recs
+            .iter()
+            .find(|r| r.span_id == root_ctx.parent_span)
+            .expect("root span in ring");
+        assert_eq!(root_rec.parent_id, 0);
+        assert!(root_rec.start_ns <= child_rec.start_ns);
+    }
+
+    #[test]
+    fn disabled_paths_are_inert() {
+        let _l = locked();
+        let saved = sample_every();
+        set_sample(0);
+        assert!(root(name::MGD_STEP).ctx().is_none());
+        assert!(child(name::MGD_STEP).ctx().is_none());
+        assert!(current().is_none());
+        // An explicit wire ctx is also ignored while tracing is off.
+        let ctx = TraceCtx { trace_id: 7, parent_span: 9 };
+        assert!(child_of(name::DISPATCH, Some(ctx)).ctx().is_none());
+        set_sample(saved);
+    }
+
+    #[test]
+    fn child_of_adopts_the_wire_context() {
+        let _l = locked();
+        let saved = sample_every();
+        set_sample(1);
+        let ctx = TraceCtx { trace_id: next_id(), parent_span: next_id() };
+        let id;
+        {
+            let g = child_of(name::DISPATCH, Some(ctx));
+            let c = g.ctx().unwrap();
+            assert_eq!(c.trace_id, ctx.trace_id);
+            id = c.parent_span;
+        }
+        set_sample(saved);
+        let rec = snapshot().into_iter().find(|r| r.span_id == id).unwrap();
+        assert_eq!(rec.trace_id, ctx.trace_id);
+        assert_eq!(rec.parent_id, ctx.parent_span);
+    }
+
+    #[test]
+    fn record_complete_uses_explicit_interval() {
+        let _l = locked();
+        let saved = sample_every();
+        set_sample(1);
+        let ctx = TraceCtx { trace_id: next_id(), parent_span: next_id() };
+        record_complete(name::LEASE_WAIT, Some(ctx), 1_000, 2_000);
+        set_sample(saved);
+        let rec = snapshot()
+            .into_iter()
+            .find(|r| r.trace_id == ctx.trace_id && r.name == name::LEASE_WAIT)
+            .expect("completed interval in ring");
+        assert_eq!(rec.start_ns, 1_000);
+        assert_eq!(rec.dur_ns, 2_000);
+        assert_eq!(rec.parent_id, ctx.parent_span);
+    }
+
+    #[test]
+    fn sampling_admits_one_in_n_roots() {
+        let _l = locked();
+        let saved = sample_every();
+        set_sample(4);
+        let sampled = (0..64).filter(|_| root(name::MGD_STEP).ctx().is_some()).count();
+        set_sample(saved);
+        // Instrumented code under other concurrently running tests may
+        // interleave root() calls while the rate is 4, shifting which
+        // iterations are admitted — so the bounds are generous: a rate
+        // of 4 over 64 draws is ~16 hits, never 0 and never most.
+        assert!(sampled <= 32, "sample=4 admitted {sampled}/64 roots");
+        assert!(sampled >= 1, "sample=4 admitted only {sampled}/64 roots");
+    }
+
+    #[test]
+    fn dump_is_valid_trace_event_json() {
+        let _l = locked();
+        let saved = sample_every();
+        set_sample(1);
+        let marker;
+        {
+            let g = root(name::STEP_WINDOW);
+            marker = g.ctx().unwrap().trace_id;
+        }
+        set_sample(saved);
+        let text = dump();
+        let doc = Json::parse(&text).expect("trace dump parses");
+        let events = doc.field("traceEvents").unwrap().as_arr().unwrap();
+        assert!(!events.is_empty());
+        let want = format!("{marker:016x}");
+        let ev = events
+            .iter()
+            .find(|e| {
+                e.field("args")
+                    .and_then(|a| a.field("trace_id"))
+                    .and_then(|t| t.as_str())
+                    .map(|s| s == want)
+                    .unwrap_or(false)
+            })
+            .expect("marker trace in dump");
+        assert_eq!(ev.field("ph").unwrap().as_str().unwrap(), "X");
+        assert!(ev.field("ts").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(ev.field("dur").unwrap().as_f64().unwrap() >= 0.0);
+        assert_eq!(ev.field("name").unwrap().as_str().unwrap(), "step_window");
+    }
+
+    #[test]
+    fn ring_stays_bounded_under_pressure() {
+        let _l = locked();
+        let saved = sample_every();
+        set_sample(1);
+        let cap = ring().slots.len();
+        for _ in 0..cap + 64 {
+            record_complete(
+                name::NET_PUMP,
+                Some(TraceCtx { trace_id: 1, parent_span: 1 }),
+                0,
+                1,
+            );
+        }
+        set_sample(saved);
+        assert!(snapshot().len() <= cap);
+    }
+
+    #[test]
+    fn name_table_matches_constants() {
+        assert_eq!(name_str(name::STEP_WINDOW), "step_window");
+        assert_eq!(name_str(name::INFER_HANDLE), "infer_handle");
+        assert_eq!(NAMES.len(), name::INFER_HANDLE as usize + 1);
+        assert_eq!(name_str(u16::MAX), "?");
+    }
+}

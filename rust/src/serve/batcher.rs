@@ -31,6 +31,8 @@ use super::quant::QuantScratch;
 use crate::device::exec::ForwardScratch;
 use crate::fleet::telemetry::{Event, Telemetry};
 use crate::obs;
+use crate::obs::trace;
+use crate::obs::trace::TraceCtx;
 
 /// Micro-batch assembly knobs.
 #[derive(Debug, Clone, Copy)]
@@ -66,6 +68,9 @@ struct Job {
     n_rows: usize,
     reply: ReplyFn,
     enqueued: Instant,
+    /// Trace context the request rode in with (if any): the batcher's
+    /// wait/flush/reply spans are parented under it.
+    ctx: Option<TraceCtx>,
 }
 
 /// Shared serving counters + request-latency histogram.
@@ -199,8 +204,21 @@ impl BatcherClient {
     /// enqueued, `reply` is dropped unrun, and the error comes back to
     /// the caller instead.
     pub fn submit_with(&self, rows: Vec<f32>, n_rows: usize, reply: ReplyFn) -> Result<()> {
+        self.submit_traced(rows, n_rows, None, reply)
+    }
+
+    /// [`BatcherClient::submit_with`] carrying a trace context: the
+    /// batcher's `batch_wait` / `batch_flush` / `batch_reply` spans for
+    /// this job are parented under `ctx` (the requester's `Infer` span).
+    pub fn submit_traced(
+        &self,
+        rows: Vec<f32>,
+        n_rows: usize,
+        ctx: Option<TraceCtx>,
+        reply: ReplyFn,
+    ) -> Result<()> {
         self.tx
-            .send(Job { rows, n_rows, reply, enqueued: Instant::now() })
+            .send(Job { rows, n_rows, reply, enqueued: Instant::now(), ctx })
             .map_err(|_| anyhow!("inference batcher is gone (server shutting down)"))
     }
 }
@@ -298,6 +316,7 @@ fn batch_loop(
         for job in &jobs {
             xbuf.extend_from_slice(&job.rows);
         }
+        let flush_start = trace::now_ns();
         let t_infer = Instant::now();
         let result = match &quant {
             Some(q) => q.infer_into(&xbuf, rows_total, &mut qscratch, &mut outbuf),
@@ -306,6 +325,30 @@ fn batch_loop(
         let infer_s = t_infer.elapsed().as_secs_f64();
         serve_metrics().infer.observe(infer_s);
         let infer_ms = infer_s * 1e3;
+
+        // Link each traced rider's timeline: how long its job waited for
+        // batch assembly, and the shared forward pass that answered it
+        // (one record per rider — a batch can span many traces).
+        if trace::enabled() {
+            let flush_ns = (infer_s * 1e9) as u64;
+            for job in &jobs {
+                if let Some(ctx) = job.ctx {
+                    let wait_ns = t_infer.duration_since(job.enqueued).as_nanos() as u64;
+                    trace::record_complete(
+                        trace::name::BATCH_WAIT,
+                        Some(ctx),
+                        flush_start.saturating_sub(wait_ns),
+                        wait_ns,
+                    );
+                    trace::record_complete(
+                        trace::name::BATCH_FLUSH,
+                        Some(ctx),
+                        flush_start,
+                        flush_ns,
+                    );
+                }
+            }
+        }
 
         latencies.clear();
         match result {
@@ -317,6 +360,7 @@ fn batch_loop(
                     offset += job.n_rows;
                     let out = InferOutput { logits: block.to_vec(), argmax: engine.argmax(block) };
                     latencies.push(done.duration_since(job.enqueued).as_secs_f64());
+                    let _reply_span = trace::child_of(trace::name::BATCH_REPLY, job.ctx);
                     (job.reply)(Ok(out));
                 }
             }
@@ -328,6 +372,7 @@ fn batch_loop(
                 let msg = format!("{e:#}");
                 for job in jobs {
                     latencies.push(done.duration_since(job.enqueued).as_secs_f64());
+                    let _reply_span = trace::child_of(trace::name::BATCH_REPLY, job.ctx);
                     (job.reply)(Err(anyhow!("batched inference failed: {msg}")));
                 }
             }

@@ -18,6 +18,7 @@ use anyhow::{bail, Context, Result};
 use crate::device::exec;
 use crate::device::protocol as p;
 use crate::model::ModelSpec;
+use crate::obs::trace;
 
 /// TCP client for an inference-serving endpoint.
 pub struct InferenceClient {
@@ -145,7 +146,19 @@ impl InferenceClient {
                 Vec::with_capacity(p::INFER_OVERHEAD_BYTES + 4 * chunk.len());
             p::put_u32(&mut payload, chunk_rows as u32);
             p::put_array(&mut payload, chunk);
-            let reply = self.roundtrip(p::Op::Infer, &payload)?;
+            // One `infer_rpc` span per frame, shipped as the frame's
+            // rider so the server's handle/batcher spans link under it.
+            // A bare client (no enclosing span) starts its own trace,
+            // subject to head sampling.
+            let reply = {
+                let span = if trace::current().is_some() {
+                    trace::child(trace::name::INFER_RPC)
+                } else {
+                    trace::root(trace::name::INFER_RPC)
+                };
+                p::write_request_ctx(&mut self.writer, p::Op::Infer, span.ctx(), &payload)?;
+                p::read_response(&mut self.reader)?
+            };
             let mut pos = 0;
             let got_logits = p::get_array(&reply, &mut pos)?;
             let got_argmax = p::get_u32_array(&reply, &mut pos)?;

@@ -60,6 +60,7 @@ use crate::net::{
     SessionHandler, Timeouts,
 };
 use crate::obs::http::metrics_service;
+use crate::obs::trace;
 
 use batcher::{BatcherClient, InferOutput};
 
@@ -261,8 +262,8 @@ struct InferSession {
 
 impl SessionHandler for InferSession {
     fn on_frame(&mut self, frame: Frame, cx: &SessionCx) -> Action {
-        let Frame::Binary { op, payload } = frame else { return Action::Close };
-        if !self.counted && !matches!(op, p::Op::Stats | p::Op::Bye) {
+        let Frame::Binary { op, ctx, payload } = frame else { return Action::Close };
+        if !self.counted && !matches!(op, p::Op::Stats | p::Op::TraceDump | p::Op::Bye) {
             self.counted = self.budget.try_start();
             if !self.counted {
                 return Action::ReplyClose(p::err_frame(
@@ -274,14 +275,24 @@ impl SessionHandler for InferSession {
         if op == p::Op::Infer {
             // Validate on the loop (cheap), batch off it: the reply
             // frame is built on the batcher thread and completes this
-            // session through the loop's waker.
+            // session through the loop's waker.  A frame that rode in
+            // with a trace context gets an `infer_handle` span parented
+            // under the *client's* span (explicit ctx only — this runs
+            // on the loop thread, whose thread-local context belongs to
+            // the pump span) and the context follows the job through
+            // the batcher.
+            let _handle = match ctx {
+                Some(c) => trace::child_of(trace::name::INFER_HANDLE, Some(c)),
+                None => trace::SpanGuard::INERT,
+            };
             return match infer_validate(&self.slot, &payload) {
                 Err(e) => Action::Reply(p::err_frame(&format!("{e:#}"))),
                 Ok((rows, n_rows)) => {
                     let done = cx.completion();
-                    let submitted = self.batcher.submit_with(
+                    let submitted = self.batcher.submit_traced(
                         rows,
                         n_rows,
+                        ctx,
                         Box::new(move |out| {
                             let frame = match out {
                                 Ok(out) => p::ok_frame(&infer_reply(&out, n_rows)),
@@ -421,11 +432,17 @@ fn handle_request(
             // the process-global obs registry as one JSON document.
             crate::obs::snapshot().to_json().dump().into_bytes()
         }
+        p::Op::TraceDump => {
+            // Span-ring export (same reply as the training server): the
+            // process-global trace ring as Chrome trace-event JSON.
+            trace::dump().into_bytes()
+        }
         p::Op::Bye => return Ok(None),
         other => {
             bail!(
                 "opcode {other:?} is a training-protocol request; this endpoint is a \
-                 read-only inference server (Hello, ModelSpec, Ping, Infer, Stats, Bye)"
+                 read-only inference server (Hello, ModelSpec, Ping, Infer, Stats, \
+                 TraceDump, Bye)"
             );
         }
     };

@@ -14,7 +14,13 @@
 //!   `u32::MAX`, with the opcode checked *before* the length so garbage
 //!   frames fail with the most informative error;
 //! - **array-count extremes** — a hostile `count:u32` is rejected by
-//!   bounds-checking against the buffer, never allocated.
+//!   bounds-checking against the buffer, never allocated;
+//! - **trace-context riders** — every corpus frame with the
+//!   [`p::TRACE_FLAG`] opcode bit and a 16-byte context rider decodes
+//!   back to the identical payload, truncating the rider at any offset
+//!   is a header error, a hostile flag bit on any opcode never panics,
+//!   and old-format (unflagged) frames parse identically whether or not
+//!   tracing is sampling.
 //!
 //! Everything is seeded through [`mgd::rng::Rng`] (xoshiro256++), so a
 //! failure reproduces exactly — this runs in normal `cargo test`, no
@@ -76,6 +82,7 @@ fn corpus() -> Vec<Case> {
     p::put_array(&mut infer, &[0.5; 8]);
     cases.push(case(p::Op::Infer, infer, true));
     cases.push(case(p::Op::Stats, Vec::new(), false));
+    cases.push(case(p::Op::TraceDump, Vec::new(), false));
     cases
 }
 
@@ -87,7 +94,12 @@ fn parse_payload(op: p::Op, payload: &[u8]) -> anyhow::Result<()> {
     let mut pos = 0;
     match op {
         // Empty or verbatim payloads: nothing to parse.
-        p::Op::Hello | p::Op::GetParams | p::Op::Bye | p::Op::Ping | p::Op::Stats => {}
+        p::Op::Hello
+        | p::Op::GetParams
+        | p::Op::Bye
+        | p::Op::Ping
+        | p::Op::Stats
+        | p::Op::TraceDump => {}
         p::Op::SetParams | p::Op::ApplyUpdate => {
             p::get_array(payload, &mut pos)?;
         }
@@ -137,17 +149,21 @@ fn decode(wire: &[u8]) -> anyhow::Result<(p::Op, Vec<u8>)> {
     p::read_request(&mut Cursor::new(wire))
 }
 
+fn decode_ctx(wire: &[u8]) -> anyhow::Result<(p::Op, Option<p::TraceCtx>, Vec<u8>)> {
+    p::read_request_ctx(&mut Cursor::new(wire))
+}
+
 #[test]
 fn corpus_covers_every_opcode_and_roundtrips() {
     let cases = corpus();
-    for code in 0x01u8..=0x0D {
+    for code in 0x01u8..=0x0E {
         let op = p::Op::from_u8(code).unwrap();
         assert!(
             cases.iter().any(|c| c.op == op),
             "corpus is missing opcode {op:?} — a new opcode needs a fuzz case"
         );
     }
-    assert!(p::Op::from_u8(0x0E).is_err(), "0x0E is allocated; extend the corpus loop");
+    assert!(p::Op::from_u8(0x0F).is_err(), "0x0F is allocated; extend the corpus loop");
     for case in &cases {
         let (op, payload) = decode(&frame(case.op as u8, &case.payload)).unwrap();
         assert_eq!(op, case.op);
@@ -208,9 +224,13 @@ fn seeded_bit_flips_never_panic_and_never_misframe() {
             // The whole decode chain must hold under mutation: frame
             // decode may fail (bad opcode, bad length) and payload
             // parse may fail, but nothing panics and a frame that
-            // survives still carries exactly its declared payload.
-            if let Ok((op, payload)) = decode(&mutant) {
-                assert_eq!(payload.len() + 5, mutant.len(), "misframed {op:?}");
+            // survives still carries exactly its declared payload.  A
+            // flip that lands on the opcode's high bit turns the frame
+            // into a flagged one — then 16 payload bytes are consumed
+            // as the trace-context rider.
+            if let Ok((op, ctx, payload)) = decode_ctx(&mutant) {
+                let rider = if ctx.is_some() { p::TRACE_CTX_BYTES } else { 0 };
+                assert_eq!(payload.len() + 5 + rider, mutant.len(), "misframed {op:?}");
                 let _ = parse_payload(op, &payload);
             }
         }
@@ -248,10 +268,99 @@ fn length_field_extremes_are_rejected_before_any_allocation() {
 
     // The opcode is validated before the length: pure garbage fails
     // with the more informative error even when the length is absurd.
+    // (0xEE carries the trace flag, so the *base* opcode 0x6E is what
+    // the error names — the flag bit is stripped before validation.)
     let mut wire = vec![0xEEu8];
     wire.extend_from_slice(&u32::MAX.to_le_bytes());
     let err = decode(&wire).unwrap_err();
-    assert!(format!("{err:#}").contains("unknown opcode"), "{err:#}");
+    assert!(format!("{err:#}").contains("unknown opcode 0x6e"), "{err:#}");
+}
+
+#[test]
+fn flagged_corpus_frames_roundtrip_and_reject_every_rider_truncation() {
+    let ctx = p::TraceCtx { trace_id: 0x0123_4567_89AB_CDEF, parent_span: 0xFEDC_BA98 };
+    for case in corpus() {
+        // A flagged frame decodes back to the identical opcode, context,
+        // and payload — the rider strips cleanly off the front.
+        let mut wire = Vec::new();
+        p::write_request_ctx(&mut wire, case.op, Some(ctx), &case.payload).unwrap();
+        assert_eq!(wire[0], case.op as u8 | p::TRACE_FLAG);
+        let (op, got_ctx, payload) = decode_ctx(&wire).unwrap();
+        assert_eq!((op, got_ctx), (case.op, Some(ctx)));
+        assert_eq!(payload, case.payload);
+
+        // Every strict prefix of the flagged frame is a decode error —
+        // in particular each cut *inside* the 16 rider bytes (offsets
+        // 5..5+16) must fail, never misread rider bytes as payload.
+        for cut in 0..wire.len() {
+            assert!(
+                decode_ctx(&wire[..cut]).is_err(),
+                "flagged {:?} frame cut at {cut}/{} must not decode",
+                case.op,
+                wire.len()
+            );
+        }
+
+        // A flagged header whose declared length cannot hold the rider
+        // dies on the header check, for every short length.
+        for len in 0..p::TRACE_CTX_BYTES {
+            let mut short = vec![case.op as u8 | p::TRACE_FLAG];
+            short.extend_from_slice(&(len as u32).to_le_bytes());
+            short.extend_from_slice(&vec![0u8; len]);
+            let err = decode_ctx(&short).unwrap_err();
+            assert!(
+                format!("{err:#}").contains("trace context"),
+                "{:?} flagged len {len}: {err:#}",
+                case.op
+            );
+        }
+    }
+}
+
+#[test]
+fn hostile_flag_bits_on_every_opcode_never_panic() {
+    // An adversary setting TRACE_FLAG on an old-format frame (no rider
+    // prepended): with fewer than 16 payload bytes the header check
+    // refuses it; with 16 or more, the payload's own first 16 bytes are
+    // consumed as the (garbage) context and the rest survives as the
+    // body.  Either way: typed error or clean decode, never a panic.
+    for case in corpus() {
+        let wire = frame(case.op as u8 | p::TRACE_FLAG, &case.payload);
+        match decode_ctx(&wire) {
+            Err(err) => {
+                assert!(
+                    case.payload.len() < p::TRACE_CTX_BYTES,
+                    "{:?}: payload holds a rider, must decode: {err:#}",
+                    case.op
+                );
+                assert!(format!("{err:#}").contains("trace context"), "{err:#}");
+            }
+            Ok((op, ctx, payload)) => {
+                assert!(case.payload.len() >= p::TRACE_CTX_BYTES);
+                assert_eq!(op, case.op);
+                let want = p::decode_trace_ctx(&case.payload).unwrap();
+                assert_eq!(ctx, Some(want), "rider bytes must decode little-endian");
+                assert_eq!(payload, &case.payload[p::TRACE_CTX_BYTES..]);
+            }
+        }
+    }
+}
+
+#[test]
+fn old_format_frames_parse_identically_while_tracing_samples() {
+    // The compat rule's server half: a tracing-enabled process decodes
+    // unflagged (pre-tracing) frames to the exact same (op, payload) —
+    // sampling state is invisible to the wire decoder.
+    let baseline: Vec<_> =
+        corpus().iter().map(|c| decode_ctx(&frame(c.op as u8, &c.payload)).unwrap()).collect();
+    mgd::obs::trace::set_sample(1);
+    for (case, (op, ctx, payload)) in corpus().iter().zip(&baseline) {
+        let (op2, ctx2, payload2) = decode_ctx(&frame(case.op as u8, &case.payload)).unwrap();
+        assert_eq!((op2, ctx2), (*op, *ctx));
+        assert_eq!(&payload2, payload);
+        assert_eq!(ctx2, None, "an unflagged frame never grows a context");
+    }
+    mgd::obs::trace::set_sample(0);
 }
 
 /// The corpus doubles as a live dispatch target for the quantized serve
@@ -295,7 +404,7 @@ fn corpus_against_a_live_quantized_serve_endpoint() {
         p::write_request(&mut writer, case.op, &case.payload).unwrap();
         let reply = p::read_response(&mut reader);
         match case.op {
-            p::Op::Hello | p::Op::ModelSpec | p::Op::Ping | p::Op::Stats => {
+            p::Op::Hello | p::Op::ModelSpec | p::Op::Ping | p::Op::Stats | p::Op::TraceDump => {
                 reply.unwrap_or_else(|e| panic!("{:?} must answer: {e:#}", case.op));
             }
             p::Op::Infer => {
@@ -324,6 +433,77 @@ fn corpus_against_a_live_quantized_serve_endpoint() {
     }
     assert!(saw_infer, "corpus must exercise the Infer dispatch path");
     p::write_request(&mut writer, p::Op::Bye, &[]).unwrap();
+    server.join().unwrap();
+}
+
+/// `TraceDump` sits at the edge of the opcode space: 0x0E must be known
+/// — and 0x0F unknown — *symmetrically* at the protocol layer, the
+/// dispatch layer, and over a live TCP session, so a version-skewed
+/// client gets the same verdict no matter how deep its frame travels.
+#[test]
+fn trace_dump_known_and_next_opcode_unknown_at_every_layer() {
+    use std::io::Read as _;
+
+    // Protocol layer: enum validation and frame decode agree.
+    assert_eq!(p::Op::from_u8(0x0E).unwrap(), p::Op::TraceDump);
+    assert!(p::Op::from_u8(0x0F).is_err());
+    let (op, payload) = decode(&frame(0x0E, &[])).unwrap();
+    assert_eq!((op, payload.len()), (p::Op::TraceDump, 0));
+    let err = decode(&frame(0x0F, &[])).unwrap_err();
+    assert!(format!("{err:#}").contains("unknown opcode 0xf"), "{err:#}");
+    // …including under the trace flag: 0x8F strips to the same unknown.
+    let err = decode(&frame(0x8F, &[0u8; 16])).unwrap_err();
+    assert!(format!("{err:#}").contains("unknown opcode 0xf"), "{err:#}");
+
+    // Dispatch + live-TCP layers, against a real serve-infer endpoint.
+    let spec: ModelSpec = "4x6x5x3:relu,tanh,softmax".parse().unwrap();
+    let mut theta = vec![0f32; spec.param_count()];
+    init_params_uniform(&mut Rng::new(31), &mut theta, 1.0);
+    let engine = InferenceEngine::new(spec, theta).unwrap();
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let server = std::thread::spawn(move || {
+        serve_infer(
+            engine,
+            listener,
+            ServeInferOptions { max_sessions: Some(2), ..Default::default() },
+        )
+        .unwrap()
+    });
+
+    // Session 1: 0x0F is a framing violation — the server answers a
+    // typed error naming the opcode, then closes (resync after a
+    // garbage header is impossible, so reply-and-close is the layer's
+    // decode-error contract).
+    {
+        let raw = std::net::TcpStream::connect(&addr).unwrap();
+        let mut writer = raw.try_clone().unwrap();
+        let mut reader = std::io::BufReader::new(raw);
+        use std::io::Write as _;
+        writer.write_all(&frame(0x0F, &[])).unwrap();
+        writer.flush().unwrap();
+        let err = p::read_response(&mut reader).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown opcode"), "{err:#}");
+        let mut rest = Vec::new();
+        reader.read_to_end(&mut rest).unwrap();
+        assert!(rest.is_empty(), "session must close after a framing violation");
+    }
+
+    // Session 2: TraceDump dispatches to a well-formed Chrome
+    // trace-event document, and the session keeps serving after it.
+    {
+        let raw = std::net::TcpStream::connect(&addr).unwrap();
+        let mut writer = raw.try_clone().unwrap();
+        let mut reader = std::io::BufReader::new(raw);
+        p::write_request(&mut writer, p::Op::TraceDump, &[]).unwrap();
+        let reply = p::read_response(&mut reader).unwrap();
+        let text = std::str::from_utf8(&reply).unwrap();
+        let doc = mgd::json::Json::parse(text).unwrap();
+        assert!(doc.field("traceEvents").unwrap().as_arr().is_ok(), "{text}");
+        p::write_request(&mut writer, p::Op::Ping, b"still-alive").unwrap();
+        assert_eq!(p::read_response(&mut reader).unwrap(), b"still-alive");
+        p::write_request(&mut writer, p::Op::Bye, &[]).unwrap();
+    }
     server.join().unwrap();
 }
 

@@ -1,0 +1,189 @@
+//! End-to-end distributed-tracing tests: one traced `CostMany` window
+//! driven through a real TCP device server must come back as a *linked*
+//! span tree — the client's window span parents its `cost_many_rpc`
+//! span, whose context rides the wire and parents the server's
+//! `lease_wait` / `dispatch` / `exec_sweep` spans.  The server-side
+//! parentage can only have come from the 16-byte trace rider (the
+//! server never sees the client's thread-locals), so these assertions
+//! pin the whole propagation chain: TLS → wire → TLS.
+//!
+//! The suite also pins the capture path (`TraceDump` over the same
+//! session, the same bytes `mgd trace` writes) and the Chrome
+//! trace-event shape of the export.
+//!
+//! Tracing state is process-global (one ring, one sampling knob), so
+//! the tests here serialize on a shared lock and leave sampling off
+//! when they finish.
+
+use std::sync::Mutex;
+
+use mgd::device::{server, HardwareDevice, NativeDevice, RemoteDevice};
+use mgd::json::Json;
+use mgd::model::ModelSpec;
+use mgd::obs::trace::{self, name, SpanRecord};
+use mgd::optim::init_params_uniform;
+use mgd::rng::Rng;
+
+/// Serializes the tests in this file: they all mutate the global
+/// sampling knob and read the global ring.
+static TRACE_TEST_LOCK: Mutex<()> = Mutex::new(());
+
+/// A random 4-in / 3-out native device with θ programmed.
+fn device(batch: usize, seed: u64) -> NativeDevice {
+    let spec: ModelSpec = "4x6x5x3:relu,tanh,softmax".parse().unwrap();
+    let mut dev = NativeDevice::from_spec(spec, batch).unwrap();
+    let mut rng = Rng::new(seed);
+    let mut theta = vec![0f32; dev.n_params()];
+    init_params_uniform(&mut rng, &mut theta, 1.0);
+    dev.set_params(&theta).unwrap();
+    dev
+}
+
+/// Spans of `trace_id` with name `name`, oldest first.
+fn spans_named(all: &[SpanRecord], trace_id: u64, name: u16) -> Vec<SpanRecord> {
+    all.iter().copied().filter(|s| s.trace_id == trace_id && s.name == name).collect()
+}
+
+#[test]
+fn cost_many_window_links_client_and_server_spans_across_the_wire() {
+    let _guard = TRACE_TEST_LOCK.lock().unwrap();
+    trace::set_sample(1);
+
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let dev = device(2, 7);
+    let server =
+        std::thread::spawn(move || server::serve_on(Box::new(dev), listener, Some(1)).unwrap());
+
+    let mut remote = RemoteDevice::connect(&addr).unwrap();
+    let p = remote.n_params();
+    remote.load_batch(&[0.25; 8], &[0.0, 1.0, 0.0, 1.0, 0.0, 0.0]).unwrap();
+
+    // One probe window under a client-side root span — the shape
+    // `MgdTrainer::step_window` produces, reduced to its wire footprint.
+    let window_ctx;
+    {
+        let window = trace::root(name::STEP_WINDOW);
+        window_ctx = window.ctx().expect("1/1 sampling must start a trace");
+        let costs = remote.cost_many(&vec![0.01f32; 2 * p], 2).unwrap();
+        assert_eq!(costs.len(), 2);
+    }
+
+    // Capture over the same session — the exact bytes `mgd trace` and
+    // the `/trace` route serve — then shut down cleanly.
+    let dump = remote.trace_dump().unwrap();
+    remote.close();
+    server.join().unwrap();
+    trace::set_sample(0);
+
+    let trace_id = window_ctx.trace_id;
+    let window_span = window_ctx.parent_span;
+    let all = trace::snapshot();
+
+    // Client side: the RPC span is a child of the window span.
+    let rpcs = spans_named(&all, trace_id, name::COST_MANY_RPC);
+    assert_eq!(rpcs.len(), 1, "one chunk ⇒ one cost_many_rpc span");
+    let rpc = rpcs[0];
+    assert_eq!(rpc.parent_id, window_span, "rpc must parent under the window");
+
+    // Server side: dispatch parents under the rpc span — provable wire
+    // propagation, since the rider is the only channel between the
+    // client thread and the server's worker thread.
+    let dispatches = spans_named(&all, trace_id, name::DISPATCH);
+    assert!(!dispatches.is_empty(), "no dispatch span joined trace {trace_id:#x}");
+    assert!(
+        dispatches.iter().any(|d| d.parent_id == rpc.span_id),
+        "dispatch must parent under cost_many_rpc {:#x}: {dispatches:?}",
+        rpc.span_id
+    );
+    let dispatch = *dispatches.iter().find(|d| d.parent_id == rpc.span_id).unwrap();
+
+    // The executor sweep nests under that dispatch, one level deeper.
+    let sweeps = spans_named(&all, trace_id, name::EXEC_SWEEP);
+    assert!(
+        sweeps.iter().any(|s| s.parent_id == dispatch.span_id),
+        "exec_sweep must nest under dispatch {:#x}: {sweeps:?}",
+        dispatch.span_id
+    );
+
+    // Lease accounting joins the same trace (parented on the rider ctx).
+    for lease in spans_named(&all, trace_id, name::LEASE_WAIT) {
+        assert_eq!(lease.parent_id, rpc.span_id);
+    }
+
+    // And every one of those linked spans is present in the TraceDump
+    // capture with its ids intact (zero-padded hex in `args`).
+    let doc = Json::parse(std::str::from_utf8(&dump).unwrap()).unwrap();
+    let events = doc.field("traceEvents").unwrap().as_arr().unwrap();
+    let has = |span: &SpanRecord| {
+        events.iter().any(|ev| {
+            let arg = |k: &str| {
+                ev.get("args").and_then(|a| a.get(k)).and_then(|v| v.as_str().ok()).unwrap_or("")
+            };
+            arg("trace_id") == format!("{:016x}", span.trace_id)
+                && arg("span_id") == format!("{:016x}", span.span_id)
+                && arg("parent_id") == format!("{:016x}", span.parent_id)
+        })
+    };
+    for span in [&rpc, &dispatch] {
+        assert!(has(span), "span {span:?} missing from the TraceDump capture");
+    }
+}
+
+#[test]
+fn trace_dump_capture_is_well_formed_chrome_trace_json() {
+    let _guard = TRACE_TEST_LOCK.lock().unwrap();
+    trace::set_sample(1);
+    {
+        let _root = trace::root(name::MGD_STEP);
+        let _child = trace::child(name::EXEC_SWEEP);
+    }
+    trace::set_sample(0);
+
+    let doc = trace::dump_json();
+    let events = doc.field("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty(), "the two spans above must be exported");
+    assert_eq!(doc.field("displayTimeUnit").unwrap().as_str().unwrap(), "ms");
+    for ev in events {
+        assert_eq!(ev.field("ph").unwrap().as_str().unwrap(), "X");
+        assert!(ev.field("name").unwrap().as_str().is_ok());
+        assert!(ev.field("ts").unwrap().as_f64().is_ok());
+        assert!(ev.field("dur").unwrap().as_f64().is_ok());
+        assert!(ev.field("pid").unwrap().as_f64().is_ok());
+        assert!(ev.field("tid").unwrap().as_f64().is_ok());
+        let args = ev.get("args").expect("every event carries linkage args");
+        for k in ["trace_id", "span_id", "parent_id"] {
+            let v = args.field(k).unwrap().as_str().unwrap();
+            assert_eq!(v.len(), 16, "{k} must be zero-padded 64-bit hex: {v:?}");
+            assert!(v.chars().all(|c| c.is_ascii_hexdigit()), "{k}: {v:?}");
+        }
+    }
+
+    // The serialized form is what goes over the wire — it must reparse.
+    let reparsed = Json::parse(&trace::dump()).unwrap();
+    assert!(reparsed.field("traceEvents").unwrap().as_arr().is_ok());
+}
+
+#[test]
+fn untraced_windows_leave_the_wire_and_the_ring_alone() {
+    let _guard = TRACE_TEST_LOCK.lock().unwrap();
+    trace::set_sample(0);
+
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let dev = device(2, 13);
+    let server =
+        std::thread::spawn(move || server::serve_on(Box::new(dev), listener, Some(1)).unwrap());
+
+    let before = trace::snapshot().len();
+    let mut remote = RemoteDevice::connect(&addr).unwrap();
+    let p = remote.n_params();
+    remote.load_batch(&[0.25; 8], &[0.0, 1.0, 0.0, 1.0, 0.0, 0.0]).unwrap();
+    let costs = remote.cost_many(&vec![0.01f32; 2 * p], 2).unwrap();
+    assert_eq!(costs.len(), 2);
+    remote.close();
+    server.join().unwrap();
+
+    // Tracing off ⇒ nothing recorded on either side of the wire.
+    assert_eq!(trace::snapshot().len(), before, "sampling off must record no spans");
+}
